@@ -1,0 +1,122 @@
+//! Decision trees with cross-validated depth — Table 1's second block on
+//! one dataset: greedy CART, the ODTLearn-style exact tree, and the
+//! backbone (CART subproblems → exact tree on the backbone features).
+//!
+//! Run: `cargo run --release --example decision_tree_cv`
+
+use backbone_learn::backbone::decision_tree::BackboneDecisionTree;
+use backbone_learn::data::classification::{generate, ClassificationConfig};
+use backbone_learn::data::{binarize, train_test_split};
+use backbone_learn::metrics::auc;
+use backbone_learn::rng::Rng;
+use backbone_learn::solvers::cart::{cart_fit, CartConfig};
+use backbone_learn::solvers::exact_tree::{exact_tree_solve, BinNode, ExactTreeConfig};
+use backbone_learn::util::{Budget, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::seed_from_u64(3);
+    let data = generate(
+        &ClassificationConfig {
+            n: 450,
+            p: 40,
+            k: 5,
+            n_redundant: 4,
+            n_clusters: 4,
+            class_sep: 1.5,
+            flip_y: 0.05,
+        },
+        &mut rng,
+    );
+    let split = train_test_split(&data.x, &data.y, 1.0 / 3.0, &mut rng);
+    println!(
+        "decision trees: n_train={} n_test={} p={} informative={:?}\n",
+        split.x_train.rows(),
+        split.x_test.rows(),
+        data.x.cols(),
+        data.informative
+    );
+
+    // --- CART with depth selected on a validation split. -----------------
+    let watch = Stopwatch::start();
+    let inner = train_test_split(&split.x_train, &split.y_train, 0.25, &mut rng);
+    let mut best = (f64::NEG_INFINITY, 2usize);
+    for depth in [1, 2, 3, 4, 5, 6] {
+        let m = cart_fit(
+            &inner.x_train,
+            &inner.y_train,
+            &CartConfig { max_depth: depth, ..Default::default() },
+        );
+        let a = auc(&inner.y_test, &m.predict_proba(&inner.x_test));
+        println!("  CART depth {depth}: validation AUC {a:.4}");
+        if a > best.0 {
+            best = (a, depth);
+        }
+    }
+    let cart = cart_fit(
+        &split.x_train,
+        &split.y_train,
+        &CartConfig { max_depth: best.1, ..Default::default() },
+    );
+    let cart_auc = auc(&split.y_test, &cart.predict_proba(&split.x_test));
+    println!(
+        "CART (cv depth {}): test AUC {:.4} [{:.2}s]\n",
+        best.1,
+        cart_auc,
+        watch.elapsed_secs()
+    );
+
+    // --- Exact tree over all binarized features (time-budgeted). ---------
+    let watch = Stopwatch::start();
+    let bz = binarize(&split.x_train, 2);
+    let exact = exact_tree_solve(
+        &bz.x_bin,
+        &split.y_train,
+        &ExactTreeConfig { depth: 2, min_leaf: 1, feature_subset: None },
+        &Budget::seconds(60.0),
+    );
+    let proba: Vec<f64> = (0..split.x_test.rows())
+        .map(|i| {
+            let row = split.x_test.row(i);
+            let mut node = &exact.root;
+            loop {
+                match node {
+                    BinNode::Leaf { prob, .. } => return *prob,
+                    BinNode::Split { feature, left, right } => {
+                        node = if row[bz.feature_of[*feature]] <= bz.thresholds[*feature] {
+                            right
+                        } else {
+                            left
+                        };
+                    }
+                }
+            }
+        })
+        .collect();
+    println!(
+        "Exact tree (depth 2, all {} binary features): test AUC {:.4}, {} errors, {:?} [{:.2}s]",
+        bz.x_bin.cols(),
+        auc(&split.y_test, &proba),
+        exact.errors,
+        exact.status,
+        watch.elapsed_secs()
+    );
+
+    // --- Backbone: CART subproblems → exact tree on backbone features. ---
+    let watch = Stopwatch::start();
+    let mut bb = BackboneDecisionTree::new(0.5, 0.5, 5, 2);
+    bb.fit_with_budget(&split.x_train, &split.y_train, &Budget::seconds(60.0))?;
+    let bb_auc = auc(&split.y_test, &bb.predict_proba(&split.x_test));
+    let d = bb.last_diagnostics.as_ref().unwrap();
+    let model = bb.model().unwrap();
+    println!(
+        "BbLearn (backbone {} of {} features): test AUC {:.4}, {} errors, {:?} [{:.2}s]",
+        d.backbone_size,
+        data.x.cols(),
+        bb_auc,
+        model.errors,
+        model.status,
+        watch.elapsed_secs()
+    );
+    println!("  final tree splits on original features {:?}", model.features_used());
+    Ok(())
+}

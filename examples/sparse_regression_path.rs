@@ -1,0 +1,103 @@
+//! Sparse regression shoot-out — the workload behind Table 1's first
+//! block, on one dataset: GLMNet (lasso path), exact L0BnB, and the
+//! backbone, with timing and support recovery.
+//!
+//! Run: `cargo run --release --example sparse_regression_path [-- n p k]`
+
+use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
+use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
+use backbone_learn::metrics::{r2_score, support_recovery};
+use backbone_learn::rng::Rng;
+use backbone_learn::solvers::cd::{elastic_net_path, ElasticNetConfig};
+use backbone_learn::solvers::l0bnb::{l0bnb_solve, L0BnbConfig};
+use backbone_learn::util::{Budget, Stopwatch};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<usize> =
+        std::env::args().skip(1).filter_map(|a| a.parse().ok()).collect();
+    let (n, p, k) = match args.as_slice() {
+        [n, p, k, ..] => (*n, *p, *k),
+        _ => (200, 1000, 5),
+    };
+    println!("sparse regression shoot-out: n={n} p={p} k={k}\n");
+
+    let mut rng = Rng::seed_from_u64(1);
+    let data = generate(
+        &SparseRegressionConfig { n, p, k, rho: 0.1, snr: 5.0 },
+        &mut rng,
+    );
+    // Fresh test set from the same ground truth.
+    let test = {
+        let mut d2 = generate(
+            &SparseRegressionConfig { n, p, k, rho: 0.1, snr: 5.0 },
+            &mut rng,
+        );
+        let signal = d2.x.matvec(&data.beta_true);
+        for (yi, s) in d2.y.iter_mut().zip(&signal) {
+            *yi = s + data.sigma * rng.normal();
+        }
+        d2
+    };
+
+    println!(
+        "{:<22} {:>9} {:>9} {:>10} {:>8}",
+        "method", "train R²", "test R²", "support F1", "time"
+    );
+
+    // --- GLMNet: full lasso path, best model by training R². ------------
+    let watch = Stopwatch::start();
+    let path = elastic_net_path(&data.x, &data.y, &ElasticNetConfig::default());
+    let best = path.select_best(&data.x, &data.y);
+    let t = watch.elapsed_secs();
+    report("GLMNet (lasso path)", best.predict(&data.x), best.predict(&test.x),
+           &best.support(), &data, &test, t);
+
+    // --- Exact L0BnB at the true k. --------------------------------------
+    let watch = Stopwatch::start();
+    let exact = l0bnb_solve(
+        &data.x,
+        &data.y,
+        &L0BnbConfig { k, lambda2: 1e-3, gap_tol: 0.01, max_nodes: 0 },
+        &Budget::seconds(600.0),
+    );
+    let t = watch.elapsed_secs();
+    report("L0BnB (exact)", exact.predict(&data.x), exact.predict(&test.x),
+           &exact.support, &data, &test, t);
+
+    // --- Backbone. --------------------------------------------------------
+    let watch = Stopwatch::start();
+    let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, k);
+    bb.backend = backbone_learn::runtime::Backend::pjrt_from_dir("artifacts")
+        .unwrap_or(backbone_learn::runtime::Backend::Native);
+    let model = bb.fit(&data.x, &data.y)?.clone();
+    let t = watch.elapsed_secs();
+    report("BbLearn (backbone)", model.predict(&data.x), model.predict(&test.x),
+           &model.support, &data, &test, t);
+    let d = bb.last_diagnostics.as_ref().unwrap();
+    println!(
+        "\nbackbone: screened {} → |B| = {} → exact solve over {} features (vs {} originally)",
+        d.screened_universe, d.backbone_size, d.backbone_size, p
+    );
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn report(
+    name: &str,
+    train_pred: Vec<f64>,
+    test_pred: Vec<f64>,
+    support: &[usize],
+    data: &backbone_learn::data::sparse_regression::SparseRegressionData,
+    test: &backbone_learn::data::sparse_regression::SparseRegressionData,
+    secs: f64,
+) {
+    let rec = support_recovery(support, &data.support_true);
+    println!(
+        "{:<22} {:>9.4} {:>9.4} {:>10.3} {:>7.2}s",
+        name,
+        r2_score(&data.y, &train_pred),
+        r2_score(&test.y, &test_pred),
+        rec.f1,
+        secs
+    );
+}

@@ -1,0 +1,161 @@
+"""AOT lowering: JAX entry points → HLO *text* artifacts + manifest.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+≥ 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts [--quick-only]
+
+Each artifact is shape-specialized; ``manifest.json`` records, per entry:
+kind, file, shapes, and static hyperparameters. The Rust runtime
+(rust/src/runtime/) selects entries by kind + shape bucket and pads
+inputs (zero columns are inert — proven in python/tests/test_model.py and
+rust integration tests).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape buckets. Feature counts are multiples of the kernel block (256);
+# row counts must match the data exactly (padding rows would corrupt the
+# column means used by screening), so we emit one bucket per experiment n.
+SCREEN_SHAPES = [
+    # (n, p_padded)  — paper scale and quick scale
+    (500, 5120),
+    (500, 2560),
+    (200, 1024),
+    (150, 1024),
+]
+IHT_SHAPES = [
+    # (n, p_padded, k, iters)
+    (500, 2560, 10, 100),
+    (500, 1280, 10, 100),
+    (200, 512, 5, 100),
+    (150, 512, 5, 100),
+]
+LLOYD_SHAPES = [
+    # (n_padded, d, k) — n may be padded: the Rust driver masks labels of
+    # padded rows and feeds the previous centroids back in, so inert rows
+    # only shift counts it corrects for. Simpler: exact n buckets.
+    (200, 2, 5),
+    (128, 2, 4),
+    (16, 2, 4),
+]
+
+QUICK = {"screen": [(200, 1024)], "iht": [(200, 512, 5, 100)], "lloyd": [(16, 2, 4)]}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir, name, lowered, meta):
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    meta = dict(meta)
+    meta["file"] = fname
+    print(f"  wrote {fname} ({len(text) / 1024:.0f} KiB)")
+    return meta
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--quick-only",
+        action="store_true",
+        help="emit only the quick-scale buckets (fast CI artifact build)",
+    )
+    # Back-compat with the scaffold Makefile (`--out file` emits everything
+    # into the file's directory).
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    os.makedirs(out_dir, exist_ok=True)
+
+    screen_shapes = QUICK["screen"] if args.quick_only else SCREEN_SHAPES
+    iht_shapes = QUICK["iht"] if args.quick_only else IHT_SHAPES
+    lloyd_shapes = QUICK["lloyd"] if args.quick_only else LLOYD_SHAPES
+
+    entries = []
+
+    print("lowering screen_utilities:")
+    for n, p in screen_shapes:
+        spec_x = jax.ShapeDtypeStruct((n, p), jnp.float32)
+        spec_y = jax.ShapeDtypeStruct((n,), jnp.float32)
+        lowered = jax.jit(model.screen_utilities).lower(spec_x, spec_y)
+        entries.append(
+            emit(
+                out_dir,
+                f"screen__n{n}_p{p}",
+                lowered,
+                {"kind": "screen", "n": n, "p": p, "outputs": 1},
+            )
+        )
+
+    print("lowering iht_solve:")
+    for n, p, k, iters in iht_shapes:
+        spec_x = jax.ShapeDtypeStruct((n, p), jnp.float32)
+        spec_y = jax.ShapeDtypeStruct((n,), jnp.float32)
+        fn = lambda x, y, k=k, iters=iters: model.iht_solve(
+            x, y, k=k, iters=iters, lambda2=1e-3
+        )
+        lowered = jax.jit(fn).lower(spec_x, spec_y)
+        entries.append(
+            emit(
+                out_dir,
+                f"iht__n{n}_p{p}_k{k}_t{iters}",
+                lowered,
+                {
+                    "kind": "iht",
+                    "n": n,
+                    "p": p,
+                    "k": k,
+                    "iters": iters,
+                    "lambda2": 1e-3,
+                    "outputs": 1,
+                },
+            )
+        )
+
+    print("lowering lloyd_step:")
+    for n, d, k in lloyd_shapes:
+        spec_p = jax.ShapeDtypeStruct((n, d), jnp.float32)
+        spec_c = jax.ShapeDtypeStruct((k, d), jnp.float32)
+        lowered = jax.jit(model.lloyd_step).lower(spec_p, spec_c)
+        entries.append(
+            emit(
+                out_dir,
+                f"lloyd__n{n}_d{d}_k{k}",
+                lowered,
+                {"kind": "lloyd", "n": n, "d": d, "k": k, "outputs": 3},
+            )
+        )
+
+    manifest = {"version": 1, "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest: {len(entries)} entries → {out_dir}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

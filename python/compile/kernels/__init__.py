@@ -1,0 +1,23 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into HLO by aot.py).
+
+All kernels run with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO ops
+that the Rust runtime's CPU client executes directly. The TPU mapping
+(BlockSpec tiling for VMEM, MXU-shaped matmuls) is preserved structurally;
+see DESIGN.md §Hardware-Adaptation and §Perf.
+"""
+
+from .corr import corr_stats, CORR_BLOCK_P
+from .distance import pairwise_sqdist, DIST_BLOCK_N
+from .matvec import matvec, matvec_t, MATVEC_BLOCK_N, MATVEC_BLOCK_P
+
+__all__ = [
+    "corr_stats",
+    "pairwise_sqdist",
+    "matvec",
+    "matvec_t",
+    "CORR_BLOCK_P",
+    "DIST_BLOCK_N",
+    "MATVEC_BLOCK_N",
+    "MATVEC_BLOCK_P",
+]

@@ -1,0 +1,67 @@
+"""Correlation-screening kernel (L1).
+
+Computes, for *centered* design ``xc`` (n × p) and *centered* response
+``yc`` (n,), the per-feature statistics the screener needs:
+
+    dots[j] = Σ_i xc[i, j] · yc[i]        (numerator of the correlation)
+    sq[j]   = Σ_i xc[i, j]²               (column squared norm)
+
+The grid tiles the feature axis in blocks of ``CORR_BLOCK_P``; each
+program loads an (n × BP) slab of X plus the full response into
+VMEM-equivalent scratch and issues one (BP × n) @ (n × 1) matmul — the
+MXU-shaped inner op — plus an elementwise square-reduce for the norms.
+
+VMEM accounting (f32, n = 500, BP = 256): slab 500·256·4 ≈ 0.5 MiB,
+response 2 KiB, outputs 2 KiB — comfortably under a ~16 MiB VMEM budget,
+leaving room for double-buffering the HBM→VMEM stream.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Feature-axis block size. 256 keeps the slab ≤ ~0.5 MiB at n = 500 and is
+# a multiple of the 128-lane MXU tile.
+CORR_BLOCK_P = 256
+
+
+def _corr_kernel(x_ref, y_ref, dots_ref, sq_ref):
+    """One feature block: dots = X_blockᵀ y;  sq = Σ X_block²."""
+    x = x_ref[...]  # (n, BP)
+    y = y_ref[...]  # (n, 1)
+    # MXU-shaped contraction: (BP, n) @ (n, 1) → (BP, 1).
+    dots_ref[...] = jnp.dot(x.T, y, preferred_element_type=jnp.float32)[:, 0]
+    sq_ref[...] = jnp.sum(x * x, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def corr_stats(xc, yc, block_p: int = CORR_BLOCK_P):
+    """Per-column (dots, sq) statistics of a centered design.
+
+    ``xc.shape[1]`` must be a multiple of ``block_p`` (the L2 wrapper pads
+    with zero columns, which produce dots = sq = 0 and are screened out).
+    """
+    n, p = xc.shape
+    assert p % block_p == 0, f"p={p} not a multiple of block_p={block_p}"
+    grid = (p // block_p,)
+    y2 = yc.reshape(n, 1)
+    dots, sq = pl.pallas_call(
+        _corr_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block_p), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_p,), lambda j: (j,)),
+            pl.BlockSpec((block_p,), lambda j: (j,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+        ],
+        interpret=True,
+    )(xc.astype(jnp.float32), y2.astype(jnp.float32))
+    return dots, sq

@@ -1,0 +1,76 @@
+"""Tiled matrix–vector kernels (L1) — the IHT inner ops.
+
+Iterative hard thresholding alternates two contractions:
+
+    forward:  r = y − X β      → needs  X @ β        (matvec, row-tiled)
+    gradient: g = Xᵀ r          → needs  Xᵀ @ r       (matvec_t, col-tiled)
+
+Each is a Pallas kernel tiled so one slab of X fits in VMEM-equivalent
+scratch; the contraction is a matmul against a (len × 1) operand, which
+is the MXU-friendly formulation (vector ops would waste the systolic
+array).
+
+VMEM accounting (f32): matvec slab BN×p = 128·2560·4 ≈ 1.25 MiB;
+matvec_t slab n×BP = 500·256·4 ≈ 0.5 MiB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MATVEC_BLOCK_N = 128  # row-block for X @ v
+MATVEC_BLOCK_P = 256  # column-block for Xᵀ @ r
+
+
+def _matvec_kernel(x_ref, v_ref, o_ref):
+    """One row block: o = X_block @ v."""
+    x = x_ref[...]  # (BN, p)
+    v = v_ref[...]  # (p, 1)
+    o_ref[...] = jnp.dot(x, v, preferred_element_type=jnp.float32)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def matvec(x, v, block_n: int = MATVEC_BLOCK_N):
+    """``X @ v`` with the row axis tiled. Requires n % block_n == 0."""
+    n, p = x.shape
+    assert n % block_n == 0, f"n={n} not a multiple of block_n={block_n}"
+    out = pl.pallas_call(
+        _matvec_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((p, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), v.reshape(p, 1).astype(jnp.float32))
+    return out
+
+
+def _matvec_t_kernel(x_ref, r_ref, o_ref):
+    """One column block: o = X_blockᵀ @ r."""
+    x = x_ref[...]  # (n, BP)
+    r = r_ref[...]  # (n, 1)
+    o_ref[...] = jnp.dot(x.T, r, preferred_element_type=jnp.float32)[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_p",))
+def matvec_t(x, r, block_p: int = MATVEC_BLOCK_P):
+    """``Xᵀ @ r`` with the feature axis tiled. Requires p % block_p == 0."""
+    n, p = x.shape
+    assert p % block_p == 0, f"p={p} not a multiple of block_p={block_p}"
+    out = pl.pallas_call(
+        _matvec_t_kernel,
+        grid=(p // block_p,),
+        in_specs=[
+            pl.BlockSpec((n, block_p), lambda j: (0, j)),
+            pl.BlockSpec((n, 1), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_p,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), r.reshape(n, 1).astype(jnp.float32))
+    return out

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every L1 kernel and L2 entry point.
+
+pytest asserts ``assert_allclose(kernel(...), ref(...))`` across a
+hypothesis-driven sweep of shapes/dtypes — this file is the correctness
+contract of the compile path.
+"""
+
+import jax.numpy as jnp
+
+
+def corr_stats_ref(xc, yc):
+    """(dots, sq) per column of a centered design."""
+    dots = xc.T @ yc
+    sq = jnp.sum(xc * xc, axis=0)
+    return dots.astype(jnp.float32), sq.astype(jnp.float32)
+
+
+def matvec_ref(x, v):
+    return (x @ v).astype(jnp.float32)
+
+
+def matvec_t_ref(x, r):
+    return (x.T @ r).astype(jnp.float32)
+
+
+def pairwise_sqdist_ref(points, centroids):
+    diff = points[:, None, :] - centroids[None, :, :]
+    return jnp.sum(diff * diff, axis=-1).astype(jnp.float32)
+
+
+def screen_utilities_ref(x, y):
+    """|Pearson correlation| per column (the L2 wrapper's contract)."""
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    yc = y - jnp.mean(y)
+    dots = xc.T @ yc
+    sq = jnp.sum(xc * xc, axis=0)
+    ynorm2 = jnp.sum(yc * yc)
+    denom = jnp.sqrt(sq * ynorm2)
+    return jnp.where(denom > 1e-12, jnp.abs(dots) / denom, 0.0).astype(jnp.float32)
+
+
+def iht_solve_ref(x, y, k, iters, lambda2):
+    """Reference IHT: projected gradient on the k-sparse ball."""
+    n, p = x.shape
+    # Power iteration for the Lipschitz constant (matches model.py).
+    v = jnp.ones((p,), jnp.float32) / jnp.sqrt(p)
+    for _ in range(12):
+        w = x.T @ (x @ v)
+        norm = jnp.linalg.norm(w)
+        v = w / jnp.maximum(norm, 1e-12)
+    lip = jnp.maximum(norm, 1e-6) + lambda2
+    step = 1.0 / lip
+    beta = jnp.zeros((p,), jnp.float32)
+    for _ in range(iters):
+        r = y - x @ beta
+        g = x.T @ r - lambda2 * beta
+        z = beta + step * g
+        thr = -jnp.sort(-jnp.abs(z))[k - 1]
+        beta = jnp.where(jnp.abs(z) >= thr, z, 0.0)
+    return beta
+
+
+def lloyd_step_ref(points, centroids):
+    """One Lloyd iteration: (new_centroids, labels, inertia)."""
+    d2 = pairwise_sqdist_ref(points, centroids)
+    labels = jnp.argmin(d2, axis=1)
+    k = centroids.shape[0]
+    one_hot = (labels[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    counts = jnp.sum(one_hot, axis=0)
+    sums = one_hot.T @ points
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids)
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return new_c.astype(jnp.float32), labels.astype(jnp.int32), inertia.astype(jnp.float32)

@@ -1,0 +1,115 @@
+"""Layer-2 JAX entry points (compute graphs lowered to HLO by aot.py).
+
+Three entry points back the Rust coordinator's hot paths:
+
+- :func:`screen_utilities` — |Pearson correlation| screening utilities
+  (sparse-regression `screen` of Algorithm 1);
+- :func:`iht_solve` — a full iterative-hard-thresholding subproblem fit
+  (`fit_subproblem`) as a `lax.scan`, returning the final coefficient
+  vector whose support the coordinator extracts;
+- :func:`lloyd_step` — one k-means Lloyd iteration (`fit_subproblem` for
+  clustering); the coordinator drives the convergence loop.
+
+All three call the L1 Pallas kernels so the kernels lower into the same
+HLO module. Shapes are static per artifact; padding conventions are part
+of the contract (zero columns are inert for screening/IHT — the Rust side
+relies on this, and python/tests/test_model.py proves it).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (
+    corr_stats,
+    matvec,
+    matvec_t,
+    pairwise_sqdist,
+    CORR_BLOCK_P,
+    DIST_BLOCK_N,
+    MATVEC_BLOCK_N,
+    MATVEC_BLOCK_P,
+)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest power-of-two divisor of `dim` not exceeding `preferred`.
+
+    The AOT shape buckets are multiples of the preferred block, so
+    artifacts always get the full tile; tests and odd shapes degrade
+    gracefully instead of asserting.
+    """
+    b = preferred
+    while b > 1 and dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def screen_utilities(x, y):
+    """|corr(x_j, y)| per column; 0 for zero-variance (incl. padded) cols."""
+    xc = x - jnp.mean(x, axis=0, keepdims=True)
+    yc = y - jnp.mean(y)
+    dots, sq = corr_stats(xc, yc, block_p=_pick_block(x.shape[1], CORR_BLOCK_P))
+    ynorm2 = jnp.sum(yc * yc)
+    denom = jnp.sqrt(sq * ynorm2)
+    return jnp.where(denom > 1e-12, jnp.abs(dots) / denom, 0.0)
+
+
+def _lipschitz(x, iters: int = 12):
+    """Power-iteration bound on λ_max(XᵀX) using the L1 kernels."""
+    p = x.shape[1]
+    v = jnp.ones((p,), jnp.float32) / jnp.sqrt(p)
+
+    bn = _pick_block(x.shape[0], MATVEC_BLOCK_N)
+    bp = _pick_block(x.shape[1], MATVEC_BLOCK_P)
+
+    def body(v, _):
+        w = matvec_t(x, matvec(x, v, block_n=bn), block_p=bp)
+        norm = jnp.linalg.norm(w)
+        return w / jnp.maximum(norm, 1e-12), norm
+
+    _, norms = jax.lax.scan(body, v, None, length=iters)
+    return jnp.maximum(norms[-1], 1e-6)
+
+
+def iht_solve(x, y, *, k: int, iters: int, lambda2: float):
+    """IHT for `min ‖y − Xβ‖² + λ₂‖β‖²  s.t. ‖β‖₀ ≤ k` (static k, iters).
+
+    Returns the final β (length p, exactly ≤ k nonzeros). The coordinator
+    polishes the support with an exact ridge refit in Rust, so β's values
+    only need to identify the support reliably.
+    """
+    p = x.shape[1]
+    step = 1.0 / (_lipschitz(x) + lambda2)
+    bn = _pick_block(x.shape[0], MATVEC_BLOCK_N)
+    bp = _pick_block(x.shape[1], MATVEC_BLOCK_P)
+
+    def body(beta, _):
+        r = y - matvec(x, beta, block_n=bn)
+        g = matvec_t(x, r, block_p=bp) - lambda2 * beta
+        z = beta + step * g
+        # Hard-threshold to the k largest magnitudes. NOTE: jnp.sort, not
+        # jax.lax.top_k — the modern `topk(..., largest=true)` HLO op is
+        # rejected by the xla_extension 0.5.1 text parser the Rust runtime
+        # uses; `sort` round-trips cleanly.
+        thr = jnp.sort(jnp.abs(z))[p - k]  # kth largest |z|
+        beta_next = jnp.where(jnp.abs(z) >= thr, z, 0.0)
+        return beta_next, None
+
+    beta0 = jnp.zeros((p,), jnp.float32)
+    beta, _ = jax.lax.scan(body, beta0, None, length=iters)
+    return beta
+
+
+def lloyd_step(points, centroids):
+    """One Lloyd iteration → (new_centroids, labels:int32, inertia)."""
+    d2 = pairwise_sqdist(points, centroids, block_n=_pick_block(points.shape[0], DIST_BLOCK_N))
+    labels = jnp.argmin(d2, axis=1)
+    k = centroids.shape[0]
+    one_hot = (labels[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    counts = jnp.sum(one_hot, axis=0)
+    sums = one_hot.T @ points
+    new_c = jnp.where(
+        counts[:, None] > 0, sums / jnp.maximum(counts[:, None], 1.0), centroids
+    )
+    inertia = jnp.sum(jnp.min(d2, axis=1))
+    return new_c.astype(jnp.float32), labels.astype(jnp.int32), inertia.astype(jnp.float32)

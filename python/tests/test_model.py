@@ -1,0 +1,110 @@
+"""L2 model correctness: entry points vs oracles + padding contracts.
+
+These are the invariants the Rust runtime depends on:
+- screen_utilities equals the pure-jnp Pearson |corr| and gives padded
+  (zero) columns utility 0;
+- iht_solve recovers a planted sparse support and never selects padded
+  columns;
+- lloyd_step equals the reference Lloyd iteration.
+"""
+
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(1)
+
+
+def _sparse_problem(n, p, k, noise=0.05):
+    x = RNG.standard_normal((n, p)).astype(np.float32)
+    beta = np.zeros(p, np.float32)
+    support = RNG.choice(p, size=k, replace=False)
+    beta[support] = np.where(RNG.random(k) > 0.5, 1.0, -1.0)
+    y = (x @ beta + noise * RNG.standard_normal(n)).astype(np.float32)
+    return x, y, np.sort(support)
+
+
+def test_screen_utilities_matches_ref():
+    x = RNG.standard_normal((64, 256)).astype(np.float32)
+    y = RNG.standard_normal(64).astype(np.float32)
+    got = np.asarray(model.screen_utilities(x, y))
+    want = np.asarray(ref.screen_utilities_ref(x, y))
+    assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+    assert got.min() >= 0.0 and got.max() <= 1.0 + 1e-5
+
+
+def test_screen_utilities_padded_columns_zero():
+    x = np.zeros((64, 256), np.float32)
+    x[:, :100] = RNG.standard_normal((64, 100))
+    y = RNG.standard_normal(64).astype(np.float32)
+    u = np.asarray(model.screen_utilities(x, y))
+    assert np.all(u[100:] == 0.0), "padded columns must screen to zero"
+
+
+def test_screen_utilities_ranks_true_features():
+    x, y, support = _sparse_problem(128, 256, 4)
+    u = np.asarray(model.screen_utilities(x, y))
+    top = np.argsort(-u)[:4]
+    assert len(set(top) & set(support)) >= 3
+
+
+def test_iht_solve_recovers_support_clean():
+    x, y, support = _sparse_problem(128, 256, 4, noise=0.0)
+    beta = np.asarray(model.iht_solve(x, y, k=4, iters=100, lambda2=1e-3))
+    got = np.sort(np.nonzero(beta)[0])
+    assert list(got) == list(support), f"{got} vs {support}"
+    assert_allclose(np.abs(beta[support]), 1.0, atol=0.05)
+
+
+def test_iht_solve_matches_reference_iteration():
+    x, y, _ = _sparse_problem(64, 128, 3, noise=0.1)
+    got = np.asarray(model.iht_solve(x, y, k=3, iters=50, lambda2=1e-3))
+    want = np.asarray(ref.iht_solve_ref(x, y, k=3, iters=50, lambda2=1e-3))
+    assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_iht_solve_never_selects_padded_columns():
+    x, y, _ = _sparse_problem(64, 100, 3, noise=0.0)
+    xpad = np.zeros((64, 128), np.float32)
+    xpad[:, :100] = x
+    beta = np.asarray(model.iht_solve(xpad, y, k=3, iters=60, lambda2=1e-3))
+    assert np.all(beta[100:] == 0.0)
+    # And the unpadded solve agrees on the real columns.
+    beta0 = np.asarray(model.iht_solve(x, y, k=3, iters=60, lambda2=1e-3))
+    assert_allclose(beta[:100], beta0, rtol=1e-3, atol=1e-3)
+
+
+def test_iht_sparsity_never_exceeds_k():
+    x, y, _ = _sparse_problem(64, 128, 5, noise=0.3)
+    for k in (1, 3, 5):
+        beta = np.asarray(model.iht_solve(x, y, k=k, iters=40, lambda2=1e-3))
+        assert np.count_nonzero(beta) <= k
+
+
+def test_lloyd_step_matches_ref():
+    pts = RNG.standard_normal((128, 2)).astype(np.float32) * 3
+    cts = RNG.standard_normal((4, 2)).astype(np.float32)
+    nc, labels, inertia = model.lloyd_step(pts, cts)
+    rnc, rlabels, rinertia = ref.lloyd_step_ref(pts, cts)
+    assert_allclose(np.asarray(nc), np.asarray(rnc), rtol=1e-4, atol=1e-4)
+    assert np.array_equal(np.asarray(labels), np.asarray(rlabels))
+    assert_allclose(float(inertia), float(rinertia), rtol=1e-4)
+
+
+def test_lloyd_step_converges_on_separated_blobs():
+    c_true = np.array([[0.0, 0.0], [10.0, 10.0]], np.float32)
+    pts = np.concatenate(
+        [
+            c_true[0] + 0.2 * RNG.standard_normal((64, 2)),
+            c_true[1] + 0.2 * RNG.standard_normal((64, 2)),
+        ]
+    ).astype(np.float32)
+    cts = np.array([[1.0, 1.0], [9.0, 9.0]], np.float32)
+    for _ in range(5):
+        cts, labels, inertia = model.lloyd_step(pts, cts)
+        cts = np.asarray(cts)
+    assert_allclose(cts, c_true, atol=0.2)
+    labels = np.asarray(labels)
+    assert set(labels[:64]) == {0} and set(labels[64:]) == {1}

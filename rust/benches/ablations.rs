@@ -1,0 +1,76 @@
+//! Ablation benches (experiments A-αβ, A-M, A-SCREEN in DESIGN.md) — the
+//! hyperparameter-sensitivity claims the paper makes in prose:
+//!
+//! - sparse regression runs best with *larger* (α, β) — "when possible,
+//!   it is preferred to solve larger subproblems that include more signal";
+//! - decision trees benefit from *smaller* subproblems ("feature sampling
+//!   as in random forests");
+//! - clustering is insensitive to its hyperparameters.
+//!
+//! Select with BENCH_ABLATION=alpha-beta|num-subproblems|screen (default:
+//! all three, quick scale).
+
+mod common;
+
+use backbone_learn::bench_support::{render_table, run_block};
+use backbone_learn::config::{BackboneCell, Problem};
+
+fn grid_alpha_beta() -> Vec<BackboneCell> {
+    let mut g = Vec::new();
+    for &alpha in &[0.1, 0.5, 0.9] {
+        for &beta in &[0.3, 0.5, 0.9] {
+            g.push(BackboneCell { m: 5, alpha, beta });
+        }
+    }
+    g
+}
+
+fn grid_m() -> Vec<BackboneCell> {
+    [1usize, 2, 5, 10, 20]
+        .iter()
+        .map(|&m| BackboneCell { m, alpha: 0.5, beta: 0.5 })
+        .collect()
+}
+
+fn grid_screen() -> Vec<BackboneCell> {
+    [1.0, 0.5, 0.25, 0.1]
+        .iter()
+        .map(|&alpha| BackboneCell { m: 5, alpha, beta: 0.5 })
+        .collect()
+}
+
+fn run(problem: Problem, name: &str, grid: Vec<BackboneCell>) {
+    let mut cfg = common::configure(problem);
+    cfg.grid = grid;
+    let rows = run_block(&cfg).expect("ablation failed");
+    println!(
+        "{}",
+        render_table(&format!("Ablation `{name}` — {}", problem.name()), &rows)
+    );
+}
+
+fn main() {
+    let which = std::env::var("BENCH_ABLATION").unwrap_or_else(|_| "all".into());
+    if which == "alpha-beta" || which == "all" {
+        run(Problem::SparseRegression, "alpha-beta", grid_alpha_beta());
+        run(Problem::DecisionTrees, "alpha-beta", grid_alpha_beta());
+    }
+    if which == "num-subproblems" || which == "all" {
+        run(Problem::SparseRegression, "num-subproblems", grid_m());
+        run(
+            Problem::Clustering,
+            "num-subproblems",
+            grid_m()
+                .into_iter()
+                .map(|mut c| {
+                    c.alpha = 1.0;
+                    c.beta = 1.0;
+                    c
+                })
+                .collect(),
+        );
+    }
+    if which == "screen" || which == "all" {
+        run(Problem::SparseRegression, "screen", grid_screen());
+    }
+}

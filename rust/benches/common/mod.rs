@@ -1,0 +1,46 @@
+//! Shared bench plumbing (criterion is not in the offline vendor set, so
+//! benches are `harness = false` binaries using this module).
+//!
+//! Environment knobs:
+//! - `BENCH_FULL=1`   — run at the paper's Table-1 scale (hours!) instead
+//!   of the quick scale that finishes in minutes on one core.
+//! - `BENCH_REPS=N`   — override the repetition count.
+//! - `BENCH_BUDGET=S` — override the per-method budget (seconds).
+
+use backbone_learn::config::{ExperimentConfig, Problem};
+
+pub fn configure(problem: Problem) -> ExperimentConfig {
+    let full = std::env::var("BENCH_FULL").map(|v| v == "1").unwrap_or(false);
+    let mut cfg = if full {
+        ExperimentConfig::paper_defaults(problem)
+    } else {
+        ExperimentConfig::quick_defaults(problem)
+    };
+    if let Ok(r) = std::env::var("BENCH_REPS") {
+        if let Ok(r) = r.parse() {
+            cfg.repetitions = r;
+        }
+    }
+    if let Ok(b) = std::env::var("BENCH_BUDGET") {
+        if let Ok(b) = b.parse() {
+            cfg.budget_secs = b;
+        }
+    }
+    eprintln!(
+        "[bench] {} scale: n={} p={} k={} reps={} budget={}s",
+        if full { "PAPER" } else { "quick" },
+        cfg.n,
+        cfg.p,
+        cfg.k,
+        cfg.repetitions,
+        cfg.budget_secs
+    );
+    cfg
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let start = std::time::Instant::now();
+    let out = f();
+    (out, start.elapsed().as_secs_f64())
+}

@@ -1,0 +1,139 @@
+//! Micro-benchmarks of the hot paths — the instrument for the perf pass
+//! (EXPERIMENTS.md §Perf). Each primitive is timed native vs PJRT (when
+//! artifacts exist) at the shapes the Table-1 workloads actually hit.
+//!
+//! Run: `cargo bench --bench microbench` (or the compiled binary directly).
+
+mod common;
+
+use backbone_learn::backbone::screen::correlation_utilities;
+use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
+use backbone_learn::linalg::Matrix;
+use backbone_learn::rng::Rng;
+use backbone_learn::runtime::Engine;
+use backbone_learn::solvers::cd::{elastic_net_path, l0_fit, ElasticNetConfig, L0Config};
+use backbone_learn::solvers::kmeans::{kmeans_fit, KMeansConfig};
+use backbone_learn::solvers::l0bnb::{l0bnb_solve, L0BnbConfig};
+use backbone_learn::util::Budget;
+use common::timed;
+
+fn bench_n(label: &str, iters: usize, mut f: impl FnMut()) -> f64 {
+    // Warm-up once (PJRT compilation, caches), then time the mean.
+    f();
+    let (_, secs) = timed(|| {
+        for _ in 0..iters {
+            f();
+        }
+    });
+    let per = secs / iters as f64;
+    println!("{label:<44} {:>10.3} ms/iter ({iters} iters)", per * 1e3);
+    per
+}
+
+fn main() {
+    println!("== microbench: hot-path primitives ==\n");
+    let engine = Engine::load("artifacts").ok();
+    if engine.is_none() {
+        println!("(no artifacts — PJRT rows skipped; run `make artifacts`)\n");
+    }
+
+    // --- Screening: n=200, p=1000 (quick SR shape). ----------------------
+    let data = generate(
+        &SparseRegressionConfig { n: 200, p: 1000, k: 5, rho: 0.1, snr: 5.0 },
+        &mut Rng::seed_from_u64(1),
+    );
+    let t_native = bench_n("screen corr (native, 200×1000)", 20, || {
+        let u = correlation_utilities(&data.x, &data.y);
+        std::hint::black_box(u);
+    });
+    if let Some(engine) = &engine {
+        let t_pjrt = bench_n("screen corr (PJRT,   200×1000)", 20, || {
+            let u = engine.screen_utilities(&data.x, &data.y).unwrap().unwrap();
+            std::hint::black_box(u);
+        });
+        println!("  → PJRT/native ratio: {:.2}×\n", t_pjrt / t_native);
+    }
+
+    // --- Screening at paper scale: n=500, p=5000. -------------------------
+    let big = generate(
+        &SparseRegressionConfig { n: 500, p: 5000, k: 10, rho: 0.1, snr: 5.0 },
+        &mut Rng::seed_from_u64(2),
+    );
+    let t_native = bench_n("screen corr (native, 500×5000)", 5, || {
+        std::hint::black_box(correlation_utilities(&big.x, &big.y));
+    });
+    if let Some(engine) = &engine {
+        let t_pjrt = bench_n("screen corr (PJRT,   500×5000)", 5, || {
+            std::hint::black_box(engine.screen_utilities(&big.x, &big.y).unwrap().unwrap());
+        });
+        println!("  → PJRT/native ratio: {:.2}×\n", t_pjrt / t_native);
+    }
+
+    // --- IHT subproblem fit: n=200, p_sub=400, k=5. -----------------------
+    let sub = data.x.select_columns(&(0..400).collect::<Vec<_>>());
+    let t_native = bench_n("L0 subproblem (native IHT+swaps, 200×400)", 10, || {
+        std::hint::black_box(l0_fit(&sub, &data.y, &L0Config { k: 5, ..Default::default() }));
+    });
+    if let Some(engine) = &engine {
+        let t_pjrt = bench_n("L0 subproblem (PJRT IHT,        200×400)", 10, || {
+            std::hint::black_box(engine.iht_support(&sub, &data.y, 5).unwrap().unwrap());
+        });
+        println!("  → PJRT/native ratio: {:.2}×\n", t_pjrt / t_native);
+    }
+
+    // --- GLMNet path (the heuristic baseline's cost). ----------------------
+    bench_n("elastic-net path (50 λ, 200×1000)", 3, || {
+        std::hint::black_box(elastic_net_path(
+            &data.x,
+            &data.y,
+            &ElasticNetConfig { n_lambda: 50, ..Default::default() },
+        ));
+    });
+
+    // --- L0BnB on a reduced (backbone-sized) problem. ----------------------
+    let reduced = data.x.select_columns(&(0..60).collect::<Vec<_>>());
+    bench_n("L0BnB exact (200×60, k=5)", 3, || {
+        std::hint::black_box(l0bnb_solve(
+            &reduced,
+            &data.y,
+            &L0BnbConfig { k: 5, ..Default::default() },
+            &Budget::seconds(60.0),
+        ));
+    });
+
+    // --- k-means: n=200, d=2, k=5 (clustering shape). ----------------------
+    let blob = backbone_learn::data::blobs::generate(
+        &backbone_learn::data::blobs::BlobsConfig::default(),
+        &mut Rng::seed_from_u64(3),
+    );
+    let mut rng = Rng::seed_from_u64(4);
+    let t_native = bench_n("kmeans (native, 200×2, k=5, 10 init)", 10, || {
+        std::hint::black_box(kmeans_fit(
+            &blob.x,
+            &KMeansConfig { k: 5, ..Default::default() },
+            &mut rng,
+        ));
+    });
+    if let Some(engine) = &engine {
+        let mut rng = Rng::seed_from_u64(4);
+        let t_pjrt = bench_n("kmeans (PJRT Lloyd, 200×2, k=5, 10 init)", 10, || {
+            std::hint::black_box(
+                engine
+                    .kmeans_via_lloyd(&blob.x, &KMeansConfig { k: 5, ..Default::default() }, &mut rng)
+                    .unwrap()
+                    .unwrap(),
+            );
+        });
+        println!("  → PJRT/native ratio: {:.2}×\n", t_pjrt / t_native);
+    }
+
+    // --- Matmul roofline reference. -----------------------------------------
+    let a = Matrix::from_vec(256, 256, (0..256 * 256).map(|i| (i % 7) as f64).collect());
+    let t = bench_n("matmul 256×256×256 (native)", 10, || {
+        std::hint::black_box(a.matmul(&a));
+    });
+    let flops = 2.0 * 256f64.powi(3);
+    println!("  → {:.2} GFLOP/s native matmul\n", flops / t / 1e9);
+
+    println!("done.");
+}

@@ -1,0 +1,20 @@
+//! Regenerates Table 1, clustering block (experiment T1-CL in DESIGN.md).
+//! Quick scale by default; BENCH_FULL=1 for (200, 2, 5) — where, exactly
+//! as in the paper, the Exact row burns the whole budget.
+
+mod common;
+
+use backbone_learn::bench_support::{render_table, run_clustering_block};
+use backbone_learn::config::Problem;
+
+fn main() {
+    let cfg = common::configure(Problem::Clustering);
+    let rows = run_clustering_block(&cfg).expect("block failed");
+    println!(
+        "{}",
+        render_table(
+            &format!("Table 1 — Clustering (n,p,k)=({},{},{})", cfg.n, cfg.p, cfg.k),
+            &rows
+        )
+    );
+}

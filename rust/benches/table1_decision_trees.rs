@@ -1,0 +1,19 @@
+//! Regenerates Table 1, decision-tree block (experiment T1-DT in
+//! DESIGN.md). Quick scale by default; BENCH_FULL=1 for (500, 100, 10).
+
+mod common;
+
+use backbone_learn::bench_support::{render_table, run_decision_tree_block};
+use backbone_learn::config::Problem;
+
+fn main() {
+    let cfg = common::configure(Problem::DecisionTrees);
+    let rows = run_decision_tree_block(&cfg).expect("block failed");
+    println!(
+        "{}",
+        render_table(
+            &format!("Table 1 — Decision Trees (n,p,k)=({},{},{})", cfg.n, cfg.p, cfg.k),
+            &rows
+        )
+    );
+}

@@ -1,0 +1,19 @@
+//! Regenerates Table 1, sparse-regression block (experiment T1-SR in
+//! DESIGN.md). Quick scale by default; BENCH_FULL=1 for (500, 5000, 10).
+
+mod common;
+
+use backbone_learn::bench_support::{render_table, run_sparse_regression_block};
+use backbone_learn::config::Problem;
+
+fn main() {
+    let cfg = common::configure(Problem::SparseRegression);
+    let rows = run_sparse_regression_block(&cfg).expect("block failed");
+    println!(
+        "{}",
+        render_table(
+            &format!("Table 1 — Sparse Regression (n,p,k)=({},{},{})", cfg.n, cfg.p, cfg.k),
+            &rows
+        )
+    );
+}

@@ -1,0 +1,326 @@
+//! `BackboneDecisionTree` — backbone for optimal classification trees.
+//!
+//! Indicators are (original) features. Subproblems fit greedy CART on a
+//! feature subset and report the features actually used in splits (the
+//! paper: features "selected in any split node … or [with] small
+//! importance" are kept/discarded); the reduced problem binarizes the
+//! backbone features and solves an ODTLearn-style *optimal* shallow tree
+//! ([`crate::solvers::exact_tree`]).
+
+use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
+use crate::data::binarize;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::solvers::cart::{cart_fit, CartConfig};
+use crate::solvers::exact_tree::{exact_tree_solve, BinNode, ExactTreeConfig};
+use crate::solvers::SolveStatus;
+use crate::util::Budget;
+use anyhow::Result;
+
+pub use super::sparse_regression::SupervisedData;
+
+/// Final model: an optimal tree over binarized backbone features, plus the
+/// binarization map so prediction works on raw continuous inputs.
+#[derive(Debug, Clone)]
+pub struct BackboneTreeModel {
+    /// Tree over binary columns.
+    pub root: BinNode,
+    /// For each binary column: (global feature index, threshold).
+    pub bin_map: Vec<(usize, f64)>,
+    /// Training misclassification count of the exact solve.
+    pub errors: usize,
+    pub status: SolveStatus,
+    /// Global features available to the exact solve (the backbone).
+    pub backbone_features: Vec<usize>,
+}
+
+impl BackboneTreeModel {
+    /// P(y = 1) for each row of a *continuous* feature matrix.
+    pub fn predict_proba(&self, x: &Matrix) -> Vec<f64> {
+        (0..x.rows()).map(|i| self.proba_row(x.row(i))).collect()
+    }
+
+    pub fn predict(&self, x: &Matrix) -> Vec<f64> {
+        self.predict_proba(x)
+            .into_iter()
+            .map(|p| if p >= 0.5 { 1.0 } else { 0.0 })
+            .collect()
+    }
+
+    fn proba_row(&self, row: &[f64]) -> f64 {
+        let mut node = &self.root;
+        loop {
+            match node {
+                BinNode::Leaf { prob, .. } => return *prob,
+                BinNode::Split { feature, left, right } => {
+                    let (src, thr) = self.bin_map[*feature];
+                    // binarize() encodes `x ≤ thr` as 1, and BinNode sends
+                    // value 1 right — so the continuous walk mirrors that.
+                    node = if row[src] <= thr { right } else { left };
+                }
+            }
+        }
+    }
+
+    /// Global features used in at least one split of the final tree.
+    pub fn features_used(&self) -> Vec<usize> {
+        fn rec(node: &BinNode, map: &[(usize, f64)], out: &mut Vec<usize>) {
+            if let BinNode::Split { feature, left, right } = node {
+                out.push(map[*feature].0);
+                rec(left, map, out);
+                rec(right, map, out);
+            }
+        }
+        let mut out = Vec::new();
+        rec(&self.root, &self.bin_map, &mut out);
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// Backbone learner for decision trees.
+#[derive(Debug, Clone)]
+pub struct BackboneDecisionTree {
+    pub params: BackboneParams,
+    /// Depth of both the CART subproblem fits and the exact final tree.
+    pub depth: usize,
+    /// Quantile thresholds per feature for the exact phase.
+    pub bins: usize,
+    /// Minimum leaf size (both phases).
+    pub min_leaf: usize,
+    /// Keep subproblem features only if normalized CART importance exceeds
+    /// this threshold (the paper's "small importance" filter; 0 keeps any
+    /// feature used in a split).
+    pub importance_threshold: f64,
+    pub last_diagnostics: Option<BackboneDiagnostics>,
+    fitted: Option<BackboneTreeModel>,
+}
+
+impl BackboneDecisionTree {
+    /// Paper-style constructor: `(alpha, beta, num_subproblems, depth)`.
+    pub fn new(alpha: f64, beta: f64, num_subproblems: usize, depth: usize) -> Self {
+        Self {
+            params: BackboneParams {
+                alpha,
+                beta,
+                num_subproblems,
+                b_max: 0, // trees rarely need multi-round shrinking
+                ..Default::default()
+            },
+            depth,
+            bins: 2,
+            min_leaf: 1,
+            importance_threshold: 0.0,
+            last_diagnostics: None,
+            fitted: None,
+        }
+    }
+
+    pub fn fit(&mut self, x: &Matrix, y: &[f64]) -> Result<&BackboneTreeModel> {
+        self.fit_with_budget(x, y, &Budget::unlimited())
+    }
+
+    pub fn fit_with_budget(
+        &mut self,
+        x: &Matrix,
+        y: &[f64],
+        budget: &Budget,
+    ) -> Result<&BackboneTreeModel> {
+        let data = SupervisedData { x: x.clone(), y: y.to_vec() };
+        let mut inner = Inner {
+            depth: self.depth,
+            bins: self.bins,
+            min_leaf: self.min_leaf,
+            importance_threshold: self.importance_threshold,
+        };
+        let fit = run_backbone(&mut inner, &data, &self.params, budget)?;
+        self.last_diagnostics = Some(fit.diagnostics);
+        self.fitted = Some(fit.model);
+        Ok(self.fitted.as_ref().unwrap())
+    }
+
+    pub fn predict_proba(&self, x: &Matrix) -> Vec<f64> {
+        self.fitted.as_ref().expect("call fit() first").predict_proba(x)
+    }
+
+    pub fn predict(&self, x: &Matrix) -> Vec<f64> {
+        self.fitted.as_ref().expect("call fit() first").predict(x)
+    }
+
+    pub fn model(&self) -> Option<&BackboneTreeModel> {
+        self.fitted.as_ref()
+    }
+}
+
+struct Inner {
+    depth: usize,
+    bins: usize,
+    min_leaf: usize,
+    importance_threshold: f64,
+}
+
+impl BackboneLearner for Inner {
+    type Data = SupervisedData;
+    type Indicator = usize;
+    type Model = BackboneTreeModel;
+
+    fn num_entities(&self, data: &SupervisedData) -> usize {
+        data.x.cols()
+    }
+
+    fn utilities(&mut self, data: &SupervisedData) -> Vec<f64> {
+        super::screen::gini_gain_utilities(&data.x, &data.y)
+    }
+
+    fn fit_subproblem(
+        &mut self,
+        data: &SupervisedData,
+        entities: &[usize],
+        _rng: &mut Rng,
+    ) -> Result<Vec<usize>> {
+        let cfg = CartConfig {
+            max_depth: self.depth,
+            min_samples_split: 2 * self.min_leaf.max(1),
+            min_samples_leaf: self.min_leaf,
+            feature_subset: Some(entities.to_vec()),
+        };
+        let model = cart_fit(&data.x, &data.y, &cfg);
+        let mut relevant: Vec<usize> = model
+            .features_used()
+            .into_iter()
+            .filter(|&f| model.importances[f] > self.importance_threshold)
+            .collect();
+        relevant.sort_unstable();
+        Ok(relevant)
+    }
+
+    fn indicator_entities(&self, indicator: &usize) -> Vec<usize> {
+        vec![*indicator]
+    }
+
+    fn fit_reduced(
+        &mut self,
+        data: &SupervisedData,
+        backbone: &[usize],
+        budget: &Budget,
+    ) -> Result<BackboneTreeModel> {
+        // Degenerate backbone: majority-vote leaf.
+        if backbone.is_empty() {
+            let pos: f64 = data.y.iter().sum();
+            let n = data.y.len();
+            let prob = pos / n as f64;
+            let errors = if prob >= 0.5 { n - pos as usize } else { pos as usize };
+            return Ok(BackboneTreeModel {
+                root: BinNode::Leaf { prob, n },
+                bin_map: vec![],
+                errors,
+                status: SolveStatus::Optimal,
+                backbone_features: vec![],
+            });
+        }
+        // Binarize only the backbone features.
+        let xb = data.x.select_columns(backbone);
+        let bz = binarize(&xb, self.bins);
+        let cfg = ExactTreeConfig {
+            depth: self.depth,
+            min_leaf: self.min_leaf,
+            feature_subset: None,
+        };
+        let res = exact_tree_solve(&bz.x_bin, &data.y, &cfg, budget);
+        let bin_map: Vec<(usize, f64)> = bz
+            .feature_of
+            .iter()
+            .zip(&bz.thresholds)
+            .map(|(&local, &thr)| (backbone[local], thr))
+            .collect();
+        Ok(BackboneTreeModel {
+            root: res.root,
+            bin_map,
+            errors: res.errors,
+            status: res.status,
+            backbone_features: backbone.to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::classification::{generate, ClassificationConfig};
+
+    fn gen(n: usize, p: usize, k: usize, seed: u64) -> crate::data::classification::ClassificationData {
+        generate(
+            &ClassificationConfig {
+                n,
+                p,
+                k,
+                n_redundant: 0,
+                n_clusters: 4,
+                class_sep: 2.0,
+                flip_y: 0.02,
+            },
+            &mut Rng::seed_from_u64(seed),
+        )
+    }
+
+    #[test]
+    fn beats_chance_and_uses_backbone_features_only() {
+        let data = gen(300, 30, 4, 1);
+        let mut bb = BackboneDecisionTree::new(0.5, 0.5, 4, 2);
+        let model = bb.fit(&data.x, &data.y).unwrap().clone();
+        let auc = crate::metrics::auc(&data.y, &model.predict_proba(&data.x));
+        assert!(auc > 0.7, "auc={auc}");
+        let used = model.features_used();
+        for f in &used {
+            assert!(model.backbone_features.contains(f));
+        }
+    }
+
+    #[test]
+    fn backbone_much_smaller_than_p() {
+        let data = gen(250, 60, 3, 2);
+        let mut bb = BackboneDecisionTree::new(0.5, 0.3, 5, 2);
+        bb.fit(&data.x, &data.y).unwrap();
+        let d = bb.last_diagnostics.as_ref().unwrap();
+        assert!(
+            d.backbone_size < 30,
+            "backbone too large: {}",
+            d.backbone_size
+        );
+        assert!(d.backbone_size >= 1);
+    }
+
+    #[test]
+    fn exact_phase_reports_errors_consistent_with_predictions() {
+        let data = gen(150, 20, 3, 3);
+        let mut bb = BackboneDecisionTree::new(0.6, 0.5, 3, 2);
+        let model = bb.fit(&data.x, &data.y).unwrap().clone();
+        let pred = model.predict(&data.x);
+        let errs = pred.iter().zip(&data.y).filter(|(p, y)| p != y).count();
+        assert_eq!(errs, model.errors);
+    }
+
+    #[test]
+    fn empty_backbone_falls_back_to_majority_leaf() {
+        // Constant labels → CART finds no splits → empty backbone.
+        let x = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let y = vec![1.0, 1.0, 1.0];
+        let mut bb = BackboneDecisionTree::new(1.0, 1.0, 2, 2);
+        let model = bb.fit(&x, &y).unwrap();
+        assert_eq!(model.errors, 0);
+        assert!(matches!(model.root, BinNode::Leaf { .. }));
+        assert_eq!(bb.predict(&x), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn deeper_exact_tree_is_at_least_as_accurate_in_sample() {
+        let data = gen(200, 15, 3, 4);
+        let mut shallow = BackboneDecisionTree::new(1.0, 1.0, 2, 1);
+        let m1 = shallow.fit(&data.x, &data.y).unwrap().clone();
+        let mut deep = BackboneDecisionTree::new(1.0, 1.0, 2, 2);
+        deep.bins = 3;
+        let m2 = deep.fit(&data.x, &data.y).unwrap().clone();
+        assert!(m2.errors <= m1.errors, "depth2 {} vs depth1 {}", m2.errors, m1.errors);
+    }
+}

@@ -1,0 +1,444 @@
+//! The backbone framework — Algorithm 1 of the paper, as a generic,
+//! trait-driven coordinator.
+//!
+//! A [`BackboneLearner`] supplies the application-specific functions of
+//! Algorithm 1 (`screen` via [`BackboneLearner::utilities`],
+//! `fit_subproblem` + `extract_relevant` fused into
+//! [`BackboneLearner::fit_subproblem`], and `fit` as
+//! [`BackboneLearner::fit_reduced`]); [`run_backbone`] owns the loop:
+//!
+//! ```text
+//! U₀, s ← screen(D, α)
+//! repeat
+//!   B ← ∅
+//!   (P_m) ← construct_subproblems(U_t, s, ⌈M/2ᵗ⌉, β)
+//!   for m: B ← B ∪ extract_relevant(fit_subproblem(D, P_m))
+//!   t ← t+1; U_t ← entities(B)
+//! until |B| ≤ B_max  (or stall / iteration cap)
+//! model ← fit(D, B)
+//! ```
+//!
+//! Two entity/indicator regimes mirror the package's `BackboneSupervised`
+//! and `BackboneUnsupervised` classes: in supervised problems entities and
+//! indicators are both *features*; in clustering entities are *points*
+//! while indicators are co-clustered *pairs* — hence the separate
+//! [`BackboneLearner::Indicator`] type and the
+//! [`BackboneLearner::indicator_entities`] projection used to build the
+//! next iteration's universe.
+
+pub mod clustering;
+pub mod decision_tree;
+pub mod screen;
+pub mod sparse_logistic;
+pub mod sparse_regression;
+pub mod subproblems;
+
+use crate::rng::Rng;
+use crate::util::Budget;
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::fmt::Debug;
+
+pub use subproblems::SubproblemStrategy;
+
+/// Hyperparameters of Algorithm 1 (the paper's `(M, β, α, B_max)`).
+#[derive(Debug, Clone)]
+pub struct BackboneParams {
+    /// Number of subproblems M in the first iteration.
+    pub num_subproblems: usize,
+    /// Subproblem size as a fraction β of the current universe.
+    pub beta: f64,
+    /// Screening keep-fraction α (1.0 disables screening).
+    pub alpha: f64,
+    /// Maximum allowed backbone size B_max (0 = no cap: single iteration).
+    pub b_max: usize,
+    /// Hard cap on backbone iterations.
+    pub max_iterations: usize,
+    /// Subproblem construction strategy.
+    pub strategy: SubproblemStrategy,
+    /// RNG seed (subproblem sampling, heuristic restarts).
+    pub seed: u64,
+}
+
+impl Default for BackboneParams {
+    fn default() -> Self {
+        Self {
+            num_subproblems: 5,
+            beta: 0.5,
+            alpha: 0.5,
+            b_max: 0,
+            max_iterations: 4,
+            strategy: SubproblemStrategy::UniformCoverage,
+            seed: 0,
+        }
+    }
+}
+
+/// Application-specific pieces of Algorithm 1.
+pub trait BackboneLearner {
+    /// Training data (e.g. `(X, y)` for supervised, `X` for clustering).
+    type Data: ?Sized;
+    /// Indicator unioned into the backbone set (feature index, pair, …).
+    type Indicator: Clone + Ord + Debug;
+    /// Final fitted model.
+    type Model;
+
+    /// Number of sampling entities (features / points).
+    fn num_entities(&self, data: &Self::Data) -> usize;
+
+    /// Screening utilities, one per entity (higher = keep). Called once.
+    fn utilities(&mut self, data: &Self::Data) -> Vec<f64>;
+
+    /// Solve one subproblem restricted to `entities`; return the relevant
+    /// indicators (`extract_relevant ∘ fit_subproblem` in paper terms).
+    fn fit_subproblem(
+        &mut self,
+        data: &Self::Data,
+        entities: &[usize],
+        rng: &mut Rng,
+    ) -> Result<Vec<Self::Indicator>>;
+
+    /// Entities an indicator spans (identity for features; both endpoints
+    /// for pairs).
+    fn indicator_entities(&self, indicator: &Self::Indicator) -> Vec<usize>;
+
+    /// Solve the reduced problem on the final backbone set.
+    fn fit_reduced(
+        &mut self,
+        data: &Self::Data,
+        backbone: &[Self::Indicator],
+        budget: &Budget,
+    ) -> Result<Self::Model>;
+}
+
+/// Per-iteration statistics (logged into [`BackboneDiagnostics`]).
+#[derive(Debug, Clone)]
+pub struct IterationStats {
+    pub iteration: usize,
+    pub universe_size: usize,
+    pub num_subproblems: usize,
+    pub subproblem_size: usize,
+    pub backbone_size: usize,
+    pub elapsed_secs: f64,
+}
+
+/// Run-level diagnostics.
+#[derive(Debug, Clone, Default)]
+pub struct BackboneDiagnostics {
+    /// Entities surviving the screen (|U₀|).
+    pub screened_universe: usize,
+    pub iterations: Vec<IterationStats>,
+    /// Final backbone size |B|.
+    pub backbone_size: usize,
+    /// Wall-clock seconds in phase 1 (screen + subproblems).
+    pub phase1_secs: f64,
+    /// Wall-clock seconds in phase 2 (reduced exact solve).
+    pub phase2_secs: f64,
+    /// Whether the loop exited via the |B| ≤ B_max criterion (vs stall /
+    /// iteration cap).
+    pub converged: bool,
+    /// True if the backbone was force-truncated to B_max by vote count.
+    pub truncated: bool,
+}
+
+/// Result of a backbone run.
+pub struct BackboneFit<L: BackboneLearner> {
+    pub model: L::Model,
+    /// Final backbone set (sorted).
+    pub backbone: Vec<L::Indicator>,
+    pub diagnostics: BackboneDiagnostics,
+}
+
+/// Execute Algorithm 1.
+pub fn run_backbone<L: BackboneLearner>(
+    learner: &mut L,
+    data: &L::Data,
+    params: &BackboneParams,
+    budget: &Budget,
+) -> Result<BackboneFit<L>> {
+    assert!(params.num_subproblems >= 1, "need at least one subproblem");
+    assert!(params.beta > 0.0 && params.beta <= 1.0, "beta must be in (0,1]");
+    assert!(params.alpha > 0.0 && params.alpha <= 1.0, "alpha must be in (0,1]");
+    let mut rng = Rng::seed_from_u64(params.seed);
+    let phase1_watch = crate::util::Stopwatch::start();
+
+    // --- Screen -----------------------------------------------------------
+    let n_entities = learner.num_entities(data);
+    let utilities = learner.utilities(data);
+    assert_eq!(utilities.len(), n_entities, "utilities length mismatch");
+    let keep = ((params.alpha * n_entities as f64).ceil() as usize).clamp(1, n_entities);
+    let mut by_utility: Vec<usize> = (0..n_entities).collect();
+    by_utility.sort_by(|&a, &b| {
+        utilities[b].partial_cmp(&utilities[a]).unwrap().then(a.cmp(&b))
+    });
+    let mut universe: Vec<usize> = by_utility.into_iter().take(keep).collect();
+    universe.sort_unstable();
+    let screened_universe = universe.len();
+
+    // --- Iterate ----------------------------------------------------------
+    let mut diagnostics =
+        BackboneDiagnostics { screened_universe, ..Default::default() };
+    let mut votes: BTreeMap<L::Indicator, usize> = BTreeMap::new();
+    let mut converged = false;
+
+    let mut t = 0usize;
+    loop {
+        let iter_watch = crate::util::Stopwatch::start();
+        // ⌈M / 2ᵗ⌉ subproblems this iteration.
+        let m_t = ((params.num_subproblems as f64) / 2f64.powi(t as i32)).ceil() as usize;
+        let m_t = m_t.max(1);
+        let sub_size =
+            ((params.beta * universe.len() as f64).ceil() as usize).clamp(1, universe.len());
+
+        let subproblems = subproblems::construct_subproblems(
+            &universe,
+            &utilities,
+            m_t,
+            sub_size,
+            params.strategy,
+            &mut rng,
+        );
+
+        votes.clear();
+        for sp in &subproblems {
+            let relevant = learner.fit_subproblem(data, sp, &mut rng)?;
+            for ind in relevant {
+                *votes.entry(ind).or_insert(0) += 1;
+            }
+        }
+        // Next universe: entities spanned by the backbone.
+        let mut next_universe: Vec<usize> = votes
+            .keys()
+            .flat_map(|ind| learner.indicator_entities(ind))
+            .collect();
+        next_universe.sort_unstable();
+        next_universe.dedup();
+
+        diagnostics.iterations.push(IterationStats {
+            iteration: t,
+            universe_size: universe.len(),
+            num_subproblems: m_t,
+            subproblem_size: sub_size,
+            backbone_size: votes.len(),
+            elapsed_secs: iter_watch.elapsed_secs(),
+        });
+
+        t += 1;
+        let b_size = votes.len();
+        // Termination checks (paper: |B| ≤ B_max, or other criterion).
+        if params.b_max == 0 || b_size <= params.b_max {
+            converged = true;
+            break;
+        }
+        if t >= params.max_iterations {
+            break;
+        }
+        if next_universe.len() >= universe.len() {
+            break; // stall: universe no longer shrinking
+        }
+        if budget.expired() {
+            break;
+        }
+        universe = next_universe;
+    }
+
+    // Assemble backbone; force-truncate to B_max by vote count on
+    // non-converged exits so phase 2 stays tractable (deterministic:
+    // vote count desc, then indicator order).
+    let mut backbone: Vec<L::Indicator> = votes.keys().cloned().collect();
+    let mut truncated = false;
+    if params.b_max > 0 && backbone.len() > params.b_max {
+        let mut ranked: Vec<(usize, L::Indicator)> =
+            votes.iter().map(|(k, &v)| (v, k.clone())).collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        backbone = ranked.into_iter().take(params.b_max).map(|(_, k)| k).collect();
+        backbone.sort();
+        truncated = true;
+    }
+    diagnostics.backbone_size = backbone.len();
+    diagnostics.converged = converged;
+    diagnostics.truncated = truncated;
+    diagnostics.phase1_secs = phase1_watch.elapsed_secs();
+
+    // --- Reduced fit -------------------------------------------------------
+    let phase2_watch = crate::util::Stopwatch::start();
+    let model = learner.fit_reduced(data, &backbone, budget)?;
+    diagnostics.phase2_secs = phase2_watch.elapsed_secs();
+
+    Ok(BackboneFit { model, backbone, diagnostics })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic learner over abstract "entities": entity j is relevant
+    /// iff j < n_relevant; subproblem fits report the relevant entities
+    /// they saw. Lets us test the Algorithm-1 loop in isolation.
+    struct ToyLearner {
+        n_entities: usize,
+        n_relevant: usize,
+        subproblem_calls: usize,
+        reduced_called_with: Vec<usize>,
+    }
+
+    impl BackboneLearner for ToyLearner {
+        type Data = ();
+        type Indicator = usize;
+        type Model = Vec<usize>;
+
+        fn num_entities(&self, _data: &()) -> usize {
+            self.n_entities
+        }
+
+        fn utilities(&mut self, _data: &()) -> Vec<f64> {
+            // Relevant entities have higher utility, imperfectly ordered.
+            (0..self.n_entities)
+                .map(|j| if j < self.n_relevant { 10.0 - j as f64 * 0.01 } else { 1.0 })
+                .collect()
+        }
+
+        fn fit_subproblem(
+            &mut self,
+            _data: &(),
+            entities: &[usize],
+            _rng: &mut Rng,
+        ) -> Result<Vec<usize>> {
+            self.subproblem_calls += 1;
+            Ok(entities.iter().copied().filter(|&j| j < self.n_relevant).collect())
+        }
+
+        fn indicator_entities(&self, ind: &usize) -> Vec<usize> {
+            vec![*ind]
+        }
+
+        fn fit_reduced(
+            &mut self,
+            _data: &(),
+            backbone: &[usize],
+            _budget: &Budget,
+        ) -> Result<Vec<usize>> {
+            self.reduced_called_with = backbone.to_vec();
+            Ok(backbone.to_vec())
+        }
+    }
+
+    fn toy(n: usize, rel: usize) -> ToyLearner {
+        ToyLearner {
+            n_entities: n,
+            n_relevant: rel,
+            subproblem_calls: 0,
+            reduced_called_with: vec![],
+        }
+    }
+
+    #[test]
+    fn backbone_contains_exactly_relevant_entities_with_full_coverage() {
+        let mut learner = toy(100, 8);
+        let params = BackboneParams {
+            num_subproblems: 4,
+            beta: 0.5,
+            alpha: 1.0,
+            b_max: 0,
+            ..Default::default()
+        };
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+        // Coverage sampling guarantees every entity is visited, so the
+        // backbone equals the true relevant set.
+        assert_eq!(fit.backbone, (0..8).collect::<Vec<_>>());
+        assert_eq!(fit.model, fit.backbone);
+        assert!(fit.diagnostics.converged);
+    }
+
+    #[test]
+    fn screening_removes_low_utility_entities() {
+        let mut learner = toy(100, 8);
+        let params = BackboneParams { alpha: 0.1, beta: 1.0, ..Default::default() };
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+        assert_eq!(fit.diagnostics.screened_universe, 10);
+        // The 8 relevant entities have top utility, so they survive.
+        assert_eq!(fit.backbone, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn subproblem_count_decays_as_m_over_2t() {
+        let mut learner = toy(60, 50); // backbone stays large → iterates
+        let params = BackboneParams {
+            num_subproblems: 8,
+            beta: 0.4,
+            alpha: 1.0,
+            b_max: 5, // unreachable → runs until stall/cap
+            max_iterations: 4,
+            ..Default::default()
+        };
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+        let counts: Vec<usize> =
+            fit.diagnostics.iterations.iter().map(|s| s.num_subproblems).collect();
+        for (i, &c) in counts.iter().enumerate() {
+            let expected = ((8.0 / 2f64.powi(i as i32)).ceil() as usize).max(1);
+            assert_eq!(c, expected, "iteration {i}");
+        }
+    }
+
+    #[test]
+    fn b_max_truncates_by_votes() {
+        let mut learner = toy(40, 30);
+        let params = BackboneParams {
+            num_subproblems: 2,
+            beta: 1.0,
+            alpha: 1.0,
+            b_max: 5,
+            max_iterations: 2,
+            ..Default::default()
+        };
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+        assert_eq!(fit.backbone.len(), 5);
+        assert!(fit.diagnostics.truncated);
+        // Truncation keeps relevant entities (all have equal votes here,
+        // tie-broken by index).
+        assert!(fit.backbone.iter().all(|&j| j < 30));
+    }
+
+    #[test]
+    fn backbone_is_subset_of_screened_universe() {
+        let mut learner = toy(50, 20);
+        let params = BackboneParams { alpha: 0.5, beta: 0.5, ..Default::default() };
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+        // Screened universe = top-25 by utility ⊇ relevant (20).
+        for &j in &fit.backbone {
+            assert!(j < 25, "indicator {j} not in screened universe");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let params = BackboneParams { seed: 42, ..Default::default() };
+        let mut l1 = toy(80, 10);
+        let f1 = run_backbone(&mut l1, &(), &params, &Budget::unlimited()).unwrap();
+        let mut l2 = toy(80, 10);
+        let f2 = run_backbone(&mut l2, &(), &params, &Budget::unlimited()).unwrap();
+        assert_eq!(f1.backbone, f2.backbone);
+    }
+
+    #[test]
+    fn reduced_fit_sees_final_backbone() {
+        let mut learner = toy(30, 6);
+        let params = BackboneParams::default();
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+        assert_eq!(learner.reduced_called_with, fit.backbone);
+    }
+
+    #[test]
+    fn single_subproblem_beta_one_is_plain_two_phase() {
+        let mut learner = toy(20, 4);
+        let params = BackboneParams {
+            num_subproblems: 1,
+            beta: 1.0,
+            alpha: 1.0,
+            ..Default::default()
+        };
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+        assert_eq!(learner.subproblem_calls, 1);
+        assert_eq!(fit.backbone, vec![0, 1, 2, 3]);
+    }
+}

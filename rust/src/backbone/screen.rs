@@ -1,0 +1,170 @@
+//! Screening utilities (`screen` in Algorithm 1).
+//!
+//! Screeners compute a per-entity utility `s`; the coordinator keeps the
+//! top `⌈α·p⌉`. These are the hot dense-numeric paths that route through
+//! the PJRT engine when an AOT artifact of matching shape is available
+//! (see `runtime`); the pure-Rust versions here are the fallback and the
+//! cross-check oracle used in tests.
+
+use crate::linalg::{dot, variance, Matrix};
+
+/// |Pearson correlation| of each column of `x` with `y` — the sparse
+/// regression screener (marginal utility `s_j = |corr(x_j, y)|`).
+/// Zero-variance columns get utility 0.
+pub fn correlation_utilities(x: &Matrix, y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.rows(), y.len());
+    let n = x.rows();
+    if n == 0 {
+        return vec![0.0; x.cols()];
+    }
+    let y_mean = crate::linalg::mean(y);
+    let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+    let y_norm = dot(&yc, &yc).sqrt();
+    let means = x.col_means();
+    let mut num = vec![0.0; x.cols()]; // Σ (x_ij - mean_j) yc_i
+    let mut den = vec![0.0; x.cols()]; // Σ (x_ij - mean_j)²
+    for i in 0..n {
+        let row = x.row(i);
+        let w = yc[i];
+        for (j, (&v, &m)) in row.iter().zip(&means).enumerate() {
+            let c = v - m;
+            num[j] += c * w;
+            den[j] += c * c;
+        }
+    }
+    num.iter()
+        .zip(&den)
+        .map(|(&nu, &de)| {
+            if de > 1e-24 && y_norm > 1e-12 {
+                (nu / (de.sqrt() * y_norm)).abs()
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+/// Univariate best-split Gini gain of each feature — the decision-tree
+/// screener. For feature j: max over thresholds of the impurity decrease
+/// of the single split `x_j ≤ t`.
+pub fn gini_gain_utilities(x: &Matrix, y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.rows(), y.len());
+    let n = x.rows();
+    let total_pos: f64 = y.iter().sum();
+    let root_gini = {
+        let p = total_pos / n as f64;
+        2.0 * p * (1.0 - p)
+    };
+    (0..x.cols())
+        .map(|j| {
+            let mut vals: Vec<(f64, f64)> = (0..n).map(|i| (x.get(i, j), y[i])).collect();
+            vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let mut best_gain = 0.0f64;
+            let mut left_pos = 0.0;
+            for i in 0..n - 1 {
+                left_pos += vals[i].1;
+                if vals[i].0 == vals[i + 1].0 {
+                    continue;
+                }
+                let nl = (i + 1) as f64;
+                let nr = (n - i - 1) as f64;
+                let pl = left_pos / nl;
+                let pr = (total_pos - left_pos) / nr;
+                let child =
+                    (nl * 2.0 * pl * (1.0 - pl) + nr * 2.0 * pr * (1.0 - pr)) / n as f64;
+                best_gain = best_gain.max(root_gini - child);
+            }
+            best_gain
+        })
+        .collect()
+}
+
+/// Variance utility (generic unsupervised screener; clustering in the
+/// paper uses no screen, i.e. uniform utilities — see
+/// [`uniform_utilities`]).
+pub fn variance_utilities(x: &Matrix) -> Vec<f64> {
+    (0..x.cols()).map(|j| variance(&x.col(j))).collect()
+}
+
+/// Uniform utilities (screening disabled; α = 1 recommended).
+pub fn uniform_utilities(n: usize) -> Vec<f64> {
+    vec![1.0; n]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse_regression::{generate, SparseRegressionConfig};
+    use crate::rng::Rng;
+
+    #[test]
+    fn correlation_ranks_true_features_highest() {
+        let cfg = SparseRegressionConfig { n: 300, p: 60, k: 5, rho: 0.0, snr: 10.0 };
+        let data = generate(&cfg, &mut Rng::seed_from_u64(1));
+        let u = correlation_utilities(&data.x, &data.y);
+        let mut ranked: Vec<usize> = (0..60).collect();
+        ranked.sort_by(|&a, &b| u[b].partial_cmp(&u[a]).unwrap());
+        let top5: std::collections::BTreeSet<usize> = ranked[..5].iter().copied().collect();
+        let truth: std::collections::BTreeSet<usize> =
+            data.support_true.iter().copied().collect();
+        let overlap = top5.intersection(&truth).count();
+        assert!(overlap >= 4, "overlap={overlap}");
+    }
+
+    #[test]
+    fn correlation_matches_naive_definition() {
+        let x = Matrix::from_rows(&[
+            vec![1.0, 4.0],
+            vec![2.0, 1.0],
+            vec![3.0, 3.0],
+            vec![4.0, 2.0],
+        ]);
+        let y = vec![1.1, 2.0, 3.2, 3.9];
+        let u = correlation_utilities(&x, &y);
+        // Naive Pearson for column 0.
+        let naive = |col: Vec<f64>, y: &[f64]| {
+            let mx = crate::linalg::mean(&col);
+            let my = crate::linalg::mean(y);
+            let num: f64 =
+                col.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+            let dx: f64 = col.iter().map(|a| (a - mx) * (a - mx)).sum();
+            let dy: f64 = y.iter().map(|b| (b - my) * (b - my)).sum();
+            (num / (dx.sqrt() * dy.sqrt())).abs()
+        };
+        assert!((u[0] - naive(x.col(0), &y)).abs() < 1e-12);
+        assert!((u[1] - naive(x.col(1), &y)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_column_gets_zero_utility() {
+        let x = Matrix::from_rows(&[vec![1.0, 5.0], vec![2.0, 5.0], vec![3.0, 5.0]]);
+        let y = vec![1.0, 2.0, 3.0];
+        let u = correlation_utilities(&x, &y);
+        assert!(u[0] > 0.99);
+        assert_eq!(u[1], 0.0);
+    }
+
+    #[test]
+    fn gini_gain_prefers_separating_feature() {
+        // Column 0 separates classes perfectly; column 1 is useless.
+        let x = Matrix::from_rows(&[
+            vec![0.0, 1.0],
+            vec![0.1, 0.0],
+            vec![0.9, 1.0],
+            vec![1.0, 0.0],
+        ]);
+        let y = vec![0.0, 0.0, 1.0, 1.0];
+        let u = gini_gain_utilities(&x, &y);
+        assert!(u[0] > 0.4, "u0={}", u[0]);
+        assert!(u[1] < 1e-9, "u1={}", u[1]);
+    }
+
+    #[test]
+    fn variance_and_uniform() {
+        let x = Matrix::from_rows(&[vec![0.0, 1.0], vec![2.0, 1.0]]);
+        let v = variance_utilities(&x);
+        assert!(v[0] > 0.0);
+        assert_eq!(v[1], 0.0);
+        assert_eq!(uniform_utilities(3), vec![1.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,331 @@
+//! `BackboneSparseRegression` — the paper's flagship instantiation.
+//!
+//! Indicators are features. Subproblems are fit with the L0Learn-style
+//! heuristic ([`crate::solvers::cd::l0_fit`]); the reduced problem is
+//! solved exactly with the L0BnB-style branch-and-bound
+//! ([`crate::solvers::l0bnb`]). Mirrors the package's usage:
+//!
+//! ```no_run
+//! # use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
+//! # use backbone_learn::linalg::Matrix;
+//! # let (x, y) = (Matrix::zeros(10, 20), vec![0.0; 10]);
+//! let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, 10); // α, β, M, max_nonzeros
+//! bb.lambda2 = 0.001;
+//! let model = bb.fit(&x, &y).unwrap();
+//! let y_pred = model.predict(&x);
+//! ```
+
+use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::runtime::Backend;
+use crate::solvers::cd::{l0_fit, L0Config};
+use crate::solvers::l0bnb::{l0bnb_solve, L0BnbConfig};
+use crate::solvers::SolveStatus;
+use crate::util::Budget;
+use anyhow::Result;
+
+/// Owned supervised dataset handed to the backbone loop.
+#[derive(Debug, Clone)]
+pub struct SupervisedData {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+}
+
+/// Final model of a backbone sparse-regression run.
+#[derive(Debug, Clone)]
+pub struct SparseRegressionModel {
+    /// Full-length coefficient vector (nonzero only on `support`).
+    pub beta: Vec<f64>,
+    pub intercept: f64,
+    /// Global indices of selected features (sorted).
+    pub support: Vec<usize>,
+    /// Reduced-problem objective.
+    pub objective: f64,
+    /// Reduced-problem optimality gap.
+    pub gap: f64,
+    pub status: SolveStatus,
+}
+
+impl SparseRegressionModel {
+    pub fn predict(&self, x: &Matrix) -> Vec<f64> {
+        x.matvec(&self.beta).iter().map(|v| v + self.intercept).collect()
+    }
+}
+
+/// Backbone learner for sparse linear regression.
+#[derive(Debug, Clone)]
+pub struct BackboneSparseRegression {
+    /// Algorithm-1 hyperparameters (α, β, M, B_max, …).
+    pub params: BackboneParams,
+    /// Cardinality bound k of the final model.
+    pub max_nonzeros: usize,
+    /// Ridge penalty λ₂ (shared by heuristic and exact phases).
+    pub lambda2: f64,
+    /// Sparsity budget of each subproblem fit (defaults to `max_nonzeros`).
+    pub subproblem_nonzeros: usize,
+    /// Optimality-gap tolerance of the exact reduced solve.
+    pub gap_tol: f64,
+    /// Compute backend for the dense screening/IHT hot paths.
+    pub backend: Backend,
+    /// Diagnostics of the last `fit` call.
+    pub last_diagnostics: Option<BackboneDiagnostics>,
+    fitted: Option<SparseRegressionModel>,
+}
+
+impl BackboneSparseRegression {
+    /// Paper-style constructor: `(alpha, beta, num_subproblems, max_nonzeros)`.
+    pub fn new(alpha: f64, beta: f64, num_subproblems: usize, max_nonzeros: usize) -> Self {
+        Self {
+            params: BackboneParams {
+                alpha,
+                beta,
+                num_subproblems,
+                // Paper default: keep iterating until the backbone is a
+                // small multiple of the target sparsity.
+                b_max: 10 * max_nonzeros,
+                ..Default::default()
+            },
+            max_nonzeros,
+            lambda2: 1e-3,
+            subproblem_nonzeros: max_nonzeros,
+            gap_tol: 0.01,
+            backend: Backend::default(),
+            last_diagnostics: None,
+            fitted: None,
+        }
+    }
+
+    /// Run the backbone and fit the final model.
+    pub fn fit(&mut self, x: &Matrix, y: &[f64]) -> Result<&SparseRegressionModel> {
+        self.fit_with_budget(x, y, &Budget::unlimited())
+    }
+
+    /// Run the backbone under a wall-clock budget (exact phase honours it).
+    pub fn fit_with_budget(
+        &mut self,
+        x: &Matrix,
+        y: &[f64],
+        budget: &Budget,
+    ) -> Result<&SparseRegressionModel> {
+        let data = SupervisedData { x: x.clone(), y: y.to_vec() };
+        let mut inner = Inner { cfg: self.clone_config() };
+        let fit = run_backbone(&mut inner, &data, &self.params, budget)?;
+        self.last_diagnostics = Some(fit.diagnostics);
+        self.fitted = Some(fit.model);
+        Ok(self.fitted.as_ref().unwrap())
+    }
+
+    /// Predictions from the last fitted model.
+    pub fn predict(&self, x: &Matrix) -> Vec<f64> {
+        self.fitted.as_ref().expect("call fit() first").predict(x)
+    }
+
+    /// The fitted model, if any.
+    pub fn model(&self) -> Option<&SparseRegressionModel> {
+        self.fitted.as_ref()
+    }
+
+    fn clone_config(&self) -> InnerConfig {
+        InnerConfig {
+            max_nonzeros: self.max_nonzeros,
+            subproblem_nonzeros: self.subproblem_nonzeros,
+            lambda2: self.lambda2,
+            gap_tol: self.gap_tol,
+            backend: self.backend.clone(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct InnerConfig {
+    max_nonzeros: usize,
+    subproblem_nonzeros: usize,
+    lambda2: f64,
+    gap_tol: f64,
+    backend: Backend,
+}
+
+/// The [`BackboneLearner`] implementation (kept separate from the public
+/// struct so `fit` can hold `&mut self` while the loop borrows the data).
+struct Inner {
+    cfg: InnerConfig,
+}
+
+impl BackboneLearner for Inner {
+    type Data = SupervisedData;
+    type Indicator = usize;
+    type Model = SparseRegressionModel;
+
+    fn num_entities(&self, data: &SupervisedData) -> usize {
+        data.x.cols()
+    }
+
+    fn utilities(&mut self, data: &SupervisedData) -> Vec<f64> {
+        self.cfg.backend.correlation_utilities(&data.x, &data.y)
+    }
+
+    fn fit_subproblem(
+        &mut self,
+        data: &SupervisedData,
+        entities: &[usize],
+        _rng: &mut Rng,
+    ) -> Result<Vec<usize>> {
+        let xs = data.x.select_columns(entities);
+        let k = self.cfg.subproblem_nonzeros.min(entities.len());
+        let model = self.cfg.backend.l0_subproblem_fit(
+            &xs,
+            &data.y,
+            &L0Config { k, lambda2: self.cfg.lambda2, ..Default::default() },
+        );
+        Ok(model.support.iter().map(|&local| entities[local]).collect())
+    }
+
+    fn indicator_entities(&self, indicator: &usize) -> Vec<usize> {
+        vec![*indicator]
+    }
+
+    fn fit_reduced(
+        &mut self,
+        data: &SupervisedData,
+        backbone: &[usize],
+        budget: &Budget,
+    ) -> Result<SparseRegressionModel> {
+        if backbone.is_empty() {
+            let intercept = crate::linalg::mean(&data.y);
+            let obj: f64 =
+                data.y.iter().map(|v| (v - intercept) * (v - intercept)).sum();
+            return Ok(SparseRegressionModel {
+                beta: vec![0.0; data.x.cols()],
+                intercept,
+                support: vec![],
+                objective: obj,
+                gap: 0.0,
+                status: SolveStatus::Optimal,
+            });
+        }
+        let xb = data.x.select_columns(backbone);
+        let cfg = L0BnbConfig {
+            k: self.cfg.max_nonzeros.min(backbone.len()),
+            lambda2: self.cfg.lambda2,
+            gap_tol: self.cfg.gap_tol,
+            max_nodes: 0,
+        };
+        let res = l0bnb_solve(&xb, &data.y, &cfg, budget);
+        // Map local coefficients back to global feature space.
+        let mut beta = vec![0.0; data.x.cols()];
+        for (local, &global) in backbone.iter().enumerate() {
+            beta[global] = res.beta[local];
+        }
+        let support: Vec<usize> = res.support.iter().map(|&l| backbone[l]).collect();
+        Ok(SparseRegressionModel {
+            beta,
+            intercept: res.intercept,
+            support,
+            objective: res.objective,
+            gap: res.gap,
+            status: res.status,
+        })
+    }
+}
+
+/// Convenience free function mirroring the heuristic-only path (used by
+/// benches to build the GLMNet/L0 baselines through the same plumbing).
+pub fn l0_heuristic_baseline(
+    x: &Matrix,
+    y: &[f64],
+    k: usize,
+    lambda2: f64,
+) -> SparseRegressionModel {
+    let m = l0_fit(x, y, &L0Config { k, lambda2, ..Default::default() });
+    SparseRegressionModel {
+        beta: m.beta,
+        intercept: m.intercept,
+        support: m.support,
+        objective: m.objective,
+        gap: f64::NAN,
+        status: SolveStatus::Optimal,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse_regression::{generate, SparseRegressionConfig};
+
+    fn gen(n: usize, p: usize, k: usize, seed: u64) -> crate::data::sparse_regression::SparseRegressionData {
+        generate(
+            &SparseRegressionConfig { n, p, k, rho: 0.1, snr: 5.0 },
+            &mut Rng::seed_from_u64(seed),
+        )
+    }
+
+    #[test]
+    fn recovers_support_on_moderate_problem() {
+        let data = gen(200, 400, 5, 1);
+        let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, 5);
+        let model = bb.fit(&data.x, &data.y).unwrap().clone();
+        let rec = crate::metrics::support_recovery(&model.support, &data.support_true);
+        assert!(rec.f1 >= 0.8, "f1={} support={:?}", rec.f1, model.support);
+        let r2 = crate::metrics::r2_score(&data.y, &model.predict(&data.x));
+        assert!(r2 > 0.7, "r2={r2}");
+    }
+
+    #[test]
+    fn support_never_exceeds_max_nonzeros() {
+        let data = gen(100, 150, 4, 2);
+        let mut bb = BackboneSparseRegression::new(0.6, 0.5, 4, 3);
+        let model = bb.fit(&data.x, &data.y).unwrap();
+        assert!(model.support.len() <= 3);
+        let nnz = model.beta.iter().filter(|&&b| b != 0.0).count();
+        assert_eq!(nnz, model.support.len());
+    }
+
+    #[test]
+    fn backbone_diagnostics_populated() {
+        let data = gen(80, 120, 3, 3);
+        let mut bb = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
+        bb.fit(&data.x, &data.y).unwrap();
+        let d = bb.last_diagnostics.as_ref().unwrap();
+        assert_eq!(d.screened_universe, 60); // α = 0.5 of 120
+        assert!(!d.iterations.is_empty());
+        assert!(d.backbone_size > 0);
+        assert!(d.phase1_secs >= 0.0 && d.phase2_secs >= 0.0);
+    }
+
+    #[test]
+    fn model_beta_zero_outside_backbone() {
+        let data = gen(60, 90, 3, 4);
+        let mut bb = BackboneSparseRegression::new(0.4, 0.5, 3, 3);
+        let model = bb.fit(&data.x, &data.y).unwrap();
+        for &j in &model.support {
+            assert!(model.beta[j] != 0.0);
+        }
+        let sup: std::collections::BTreeSet<usize> = model.support.iter().copied().collect();
+        for (j, &b) in model.beta.iter().enumerate() {
+            if !sup.contains(&j) {
+                assert_eq!(b, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = gen(60, 80, 3, 5);
+        let mut bb1 = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
+        bb1.params.seed = 9;
+        let m1 = bb1.fit(&data.x, &data.y).unwrap().clone();
+        let mut bb2 = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
+        bb2.params.seed = 9;
+        let m2 = bb2.fit(&data.x, &data.y).unwrap().clone();
+        assert_eq!(m1.support, m2.support);
+        assert_eq!(m1.beta, m2.beta);
+    }
+
+    #[test]
+    #[should_panic(expected = "call fit() first")]
+    fn predict_before_fit_panics() {
+        let bb = BackboneSparseRegression::new(0.5, 0.5, 5, 10);
+        let _ = bb.predict(&Matrix::zeros(2, 2));
+    }
+}

@@ -1,0 +1,169 @@
+//! Subproblem construction (`construct_subproblems` in Algorithm 1).
+//!
+//! Two strategies:
+//!
+//! - [`SubproblemStrategy::UniformCoverage`] — shuffle the universe and
+//!   deal it round-robin into the M subproblems, refilling (reshuffled)
+//!   whenever the pool runs dry. Guarantees every entity appears in at
+//!   least one subproblem whenever `M · size ≥ |U|` — the coverage
+//!   property Bertsimas & Digalakis Jr's analysis relies on for the
+//!   backbone to contain all relevant indicators w.h.p.
+//! - [`SubproblemStrategy::UtilityWeighted`] — each subproblem samples
+//!   entities without replacement with probability ∝ screening utility
+//!   (Efraimidis–Spirakis keys), biasing subproblems toward "more signal"
+//!   (the regime the paper finds best for sparse regression).
+
+use crate::rng::Rng;
+
+/// Strategy for assembling subproblems from the current universe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubproblemStrategy {
+    UniformCoverage,
+    UtilityWeighted,
+}
+
+/// Build `m` subproblems of `size` entities each from `universe`.
+///
+/// `utilities` is indexed by *entity id* (not universe position).
+/// Returned subproblems are sorted and duplicate-free.
+pub fn construct_subproblems(
+    universe: &[usize],
+    utilities: &[f64],
+    m: usize,
+    size: usize,
+    strategy: SubproblemStrategy,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    assert!(m >= 1);
+    assert!(size >= 1 && size <= universe.len());
+    match strategy {
+        SubproblemStrategy::UniformCoverage => {
+            let mut pool: Vec<usize> = Vec::new();
+            let mut out = Vec::with_capacity(m);
+            for _ in 0..m {
+                let mut sp = Vec::with_capacity(size);
+                while sp.len() < size {
+                    if pool.is_empty() {
+                        pool = universe.to_vec();
+                        rng.shuffle(&mut pool);
+                    }
+                    let cand = pool.pop().unwrap();
+                    if !sp.contains(&cand) {
+                        sp.push(cand);
+                    }
+                }
+                sp.sort_unstable();
+                out.push(sp);
+            }
+            out
+        }
+        SubproblemStrategy::UtilityWeighted => {
+            // Shift weights to be strictly positive (utilities may be 0).
+            let max_u = universe
+                .iter()
+                .map(|&e| utilities[e])
+                .fold(f64::NEG_INFINITY, f64::max);
+            let weights: Vec<f64> = universe
+                .iter()
+                .map(|&e| {
+                    let u = utilities[e];
+                    (u / max_u.max(1e-12)).max(0.0) + 1e-6
+                })
+                .collect();
+            (0..m)
+                .map(|_| {
+                    let picks = rng.weighted_sample_without_replacement(&weights, size);
+                    let mut sp: Vec<usize> = picks.into_iter().map(|i| universe[i]).collect();
+                    sp.sort_unstable();
+                    sp
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn coverage_visits_every_entity_when_capacity_allows() {
+        let mut rng = Rng::seed_from_u64(1);
+        let universe: Vec<usize> = (0..50).step_by(2).collect(); // 25 entities
+        let utilities = vec![1.0; 50];
+        let sps = construct_subproblems(
+            &universe,
+            &utilities,
+            5,
+            6, // 5*6 = 30 ≥ 25
+            SubproblemStrategy::UniformCoverage,
+            &mut rng,
+        );
+        let mut seen: Vec<usize> = sps.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen, universe, "coverage violated");
+    }
+
+    #[test]
+    fn subproblems_have_exact_size_and_no_duplicates() {
+        let mut rng = Rng::seed_from_u64(2);
+        let universe: Vec<usize> = (10..40).collect();
+        let utilities = vec![1.0; 40];
+        for strategy in [SubproblemStrategy::UniformCoverage, SubproblemStrategy::UtilityWeighted]
+        {
+            let sps =
+                construct_subproblems(&universe, &utilities, 7, 9, strategy, &mut rng);
+            assert_eq!(sps.len(), 7);
+            for sp in &sps {
+                assert_eq!(sp.len(), 9, "{strategy:?}");
+                for w in sp.windows(2) {
+                    assert!(w[0] < w[1], "unsorted or duplicate in {strategy:?}");
+                }
+                assert!(sp.iter().all(|e| universe.contains(e)));
+            }
+        }
+    }
+
+    #[test]
+    fn utility_weighted_prefers_high_utility_entities() {
+        let mut rng = Rng::seed_from_u64(3);
+        let universe: Vec<usize> = (0..20).collect();
+        let mut utilities = vec![0.01; 20];
+        utilities[3] = 100.0;
+        utilities[7] = 100.0;
+        let mut hits = 0;
+        let reps = 200;
+        for _ in 0..reps {
+            let sps = construct_subproblems(
+                &universe,
+                &utilities,
+                1,
+                4,
+                SubproblemStrategy::UtilityWeighted,
+                &mut rng,
+            );
+            if sps[0].contains(&3) && sps[0].contains(&7) {
+                hits += 1;
+            }
+        }
+        assert!(hits as f64 / reps as f64 > 0.9, "hits={hits}");
+    }
+
+    #[test]
+    fn size_equal_to_universe_returns_whole_universe() {
+        let mut rng = Rng::seed_from_u64(4);
+        let universe: Vec<usize> = vec![2, 5, 9];
+        let sps = construct_subproblems(
+            &universe,
+            &[0.0; 10],
+            3,
+            3,
+            SubproblemStrategy::UniformCoverage,
+            &mut rng,
+        );
+        for sp in sps {
+            assert_eq!(sp, universe);
+        }
+    }
+}

@@ -1,0 +1,68 @@
+//! `ablate` subcommand: the hyperparameter-sensitivity sweeps behind the
+//! paper's prose claims (§3): sparse regression prefers large (α, β);
+//! decision trees prefer small subproblems; clustering is insensitive.
+
+use super::Args;
+use crate::bench_support::{render_table, run_block};
+use crate::config::{BackboneCell, ExperimentConfig, Problem};
+use anyhow::Result;
+
+pub fn run(args: &Args) -> Result<i32> {
+    let sweep = args.get("sweep").unwrap_or_else(|| "alpha-beta".into());
+    let block = args.get("block").unwrap_or_else(|| "sr".into());
+    let problem = Problem::parse(&block)?;
+    let mut cfg = if args.flag("full") {
+        ExperimentConfig::paper_defaults(problem)
+    } else {
+        ExperimentConfig::quick_defaults(problem)
+    };
+    cfg.n = args.get_usize("n", cfg.n)?;
+    cfg.p = args.get_usize("p", cfg.p)?;
+    cfg.k = args.get_usize("k", cfg.k)?;
+    cfg.repetitions = args.get_usize("reps", cfg.repetitions)?;
+    cfg.budget_secs = args.get_f64("budget", cfg.budget_secs)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+
+    cfg.grid = match sweep.as_str() {
+        "alpha-beta" => {
+            // α × β product grid at fixed M.
+            let mut grid = Vec::new();
+            for &alpha in &[0.1, 0.3, 0.5, 0.9] {
+                for &beta in &[0.3, 0.5, 0.9] {
+                    grid.push(BackboneCell { m: 5, alpha, beta });
+                }
+            }
+            grid
+        }
+        "num-subproblems" => [1usize, 2, 5, 10, 20]
+            .iter()
+            .map(|&m| BackboneCell { m, alpha: 0.5, beta: 0.5 })
+            .collect(),
+        "screen" => [1.0, 0.5, 0.25, 0.1]
+            .iter()
+            .map(|&alpha| BackboneCell { m: 5, alpha, beta: 0.5 })
+            .collect(),
+        other => anyhow::bail!("unknown sweep `{other}`"),
+    };
+    if problem == Problem::Clustering {
+        // Clustering has no screen; sweep β/M only.
+        for cell in cfg.grid.iter_mut() {
+            cell.alpha = 1.0;
+        }
+        cfg.grid.dedup_by(|a, b| a.m == b.m && a.beta == b.beta);
+    }
+
+    eprintln!(
+        "ablation `{sweep}` on {}: n={} p={} k={} reps={} ({} cells)",
+        problem.name(),
+        cfg.n,
+        cfg.p,
+        cfg.k,
+        cfg.repetitions,
+        cfg.grid.len()
+    );
+    let rows = run_block(&cfg)?;
+    let title = format!("ablation `{}` — {}", sweep, problem.name());
+    print!("{}", render_table(&title, &rows));
+    Ok(0)
+}

@@ -1,0 +1,102 @@
+//! Tiny `--key value` / `--flag` argument parser.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: `--key value` pairs and bare `--flag`s.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+/// Option keys that are boolean flags (never consume a value).
+const FLAG_KEYS: &[&str] = &["full", "help", "quiet", "native-only"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument `{tok}`");
+            };
+            if let Some((k, v)) = key.split_once('=') {
+                out.values.insert(k.to_string(), v.to_string());
+            } else if FLAG_KEYS.contains(&key) {
+                out.flags.push(key.to_string());
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .with_context(|| format!("missing value for --{key}"))?;
+                out.values.insert(key.to_string(), v.clone());
+                i += 1;
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.values.get(key).cloned()
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.values.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.values.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.values.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_pairs_flags_and_equals() {
+        let a = Args::parse(&sv(&["--block", "sr", "--full", "--n=50"])).unwrap();
+        assert_eq!(a.get("block").as_deref(), Some("sr"));
+        assert!(a.flag("full"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 50);
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = Args::parse(&sv(&["--alpha", "0.25"])).unwrap();
+        assert_eq!(a.get_f64("alpha", 1.0).unwrap(), 0.25);
+        assert_eq!(a.get_f64("beta", 0.5).unwrap(), 0.5);
+        assert_eq!(a.get_u64("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn rejects_positional_and_dangling() {
+        assert!(Args::parse(&sv(&["oops"])).is_err());
+        assert!(Args::parse(&sv(&["--n"])).is_err());
+        let bad = Args::parse(&sv(&["--n", "x"])).unwrap();
+        assert!(bad.get_usize("n", 0).is_err());
+    }
+}

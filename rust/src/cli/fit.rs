@@ -1,0 +1,123 @@
+//! `fit` subcommand: single backbone fit with diagnostics, on generated
+//! data (the quickest way to watch the two-phase algorithm work).
+
+use super::Args;
+use crate::backbone::clustering::BackboneClustering;
+use crate::backbone::decision_tree::BackboneDecisionTree;
+use crate::backbone::sparse_regression::BackboneSparseRegression;
+use crate::config::Problem;
+use crate::data::{blobs, classification, sparse_regression};
+use crate::metrics::{adjusted_rand_index, auc, r2_score, silhouette_score, support_recovery};
+use crate::rng::Rng;
+use crate::util::Budget;
+use anyhow::{Context, Result};
+
+pub fn run(args: &Args) -> Result<i32> {
+    let problem =
+        Problem::parse(&args.get("problem").context("--problem is required")?)?;
+    let seed = args.get_u64("seed", 0)?;
+    let alpha = args.get_f64("alpha", 0.5)?;
+    let beta = args.get_f64("beta", 0.5)?;
+    let m = args.get_usize("m", 5)?;
+    let budget = Budget::seconds(args.get_f64("budget", 60.0)?);
+    let mut rng = Rng::seed_from_u64(seed);
+
+    match problem {
+        Problem::SparseRegression => {
+            let n = args.get_usize("n", 200)?;
+            let p = args.get_usize("p", 1000)?;
+            let k = args.get_usize("k", 5)?;
+            let data = sparse_regression::generate(
+                &sparse_regression::SparseRegressionConfig { n, p, k, rho: 0.1, snr: 5.0 },
+                &mut rng,
+            );
+            let mut bb = BackboneSparseRegression::new(alpha, beta, m, k);
+            bb.params.seed = seed;
+            let model = bb.fit_with_budget(&data.x, &data.y, &budget)?.clone();
+            let r2 = r2_score(&data.y, &model.predict(&data.x));
+            let rec = support_recovery(&model.support, &data.support_true);
+            print_diag(&bb.last_diagnostics);
+            println!("support   : {:?}", model.support);
+            println!("true supp : {:?}", data.support_true);
+            println!("R²        : {r2:.4}");
+            println!("support F1: {:.3}", rec.f1);
+            println!("exact gap : {:.4} ({:?})", model.gap, model.status);
+        }
+        Problem::DecisionTrees => {
+            let n = args.get_usize("n", 300)?;
+            let p = args.get_usize("p", 40)?;
+            let k = args.get_usize("k", 5)?;
+            let data = classification::generate(
+                &classification::ClassificationConfig {
+                    n,
+                    p,
+                    k,
+                    n_redundant: (p / 10).min(k),
+                    n_clusters: 4,
+                    class_sep: 1.5,
+                    flip_y: 0.05,
+                },
+                &mut rng,
+            );
+            let depth = args.get_usize("depth", 2)?;
+            let mut bb = BackboneDecisionTree::new(alpha, beta, m, depth);
+            bb.params.seed = seed;
+            bb.fit_with_budget(&data.x, &data.y, &budget)?;
+            let a = auc(&data.y, &bb.predict_proba(&data.x));
+            print_diag(&bb.last_diagnostics);
+            let model = bb.model().unwrap();
+            println!("features  : {:?}", model.features_used());
+            println!("informative: {:?}", data.informative);
+            println!("AUC       : {a:.4}");
+            println!("errors    : {} ({:?})", model.errors, model.status);
+        }
+        Problem::Clustering => {
+            let n = args.get_usize("n", 16)?;
+            let p = args.get_usize("p", 2)?;
+            let k = args.get_usize("k", 4)?;
+            let true_k = (k.saturating_sub(2)).max(2);
+            let data = blobs::generate(
+                &blobs::BlobsConfig {
+                    n,
+                    p,
+                    true_clusters: true_k,
+                    cluster_std: 1.0,
+                    center_box: 10.0,
+                    min_center_dist: 4.0,
+                },
+                &mut rng,
+            );
+            let mut bb = BackboneClustering::new(beta, m, k);
+            bb.params.seed = seed;
+            let model = bb.fit_with_budget(&data.x, &budget)?.clone();
+            print_diag(&bb.last_diagnostics);
+            println!("silhouette: {:.4}", silhouette_score(&data.x, &model.labels));
+            println!(
+                "ARI vs truth: {:.4}",
+                adjusted_rand_index(&model.labels, &data.labels_true)
+            );
+            println!("objective : {:.3} gap {:.4} ({:?})", model.objective, model.gap, model.status);
+        }
+    }
+    Ok(0)
+}
+
+fn print_diag(diag: &Option<crate::backbone::BackboneDiagnostics>) {
+    let Some(d) = diag else { return };
+    println!("screened universe: {}", d.screened_universe);
+    for it in &d.iterations {
+        println!(
+            "  iter {}: |U|={} M={} |P_m|={} → |B|={} ({:.2}s)",
+            it.iteration,
+            it.universe_size,
+            it.num_subproblems,
+            it.subproblem_size,
+            it.backbone_size,
+            it.elapsed_secs
+        );
+    }
+    println!(
+        "backbone: {} (converged={}, truncated={}) phase1 {:.2}s phase2 {:.2}s",
+        d.backbone_size, d.converged, d.truncated, d.phase1_secs, d.phase2_secs
+    );
+}

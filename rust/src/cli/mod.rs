@@ -1,0 +1,95 @@
+//! Command-line launcher.
+//!
+//! ```text
+//! backbone-learn table1 [--block sr|dt|cl|all] [--full] [--config FILE] [--out FILE]
+//! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S]
+//! backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
+//! backbone-learn dump-config --problem sr|dt|cl [--full]
+//! backbone-learn artifacts [--dir artifacts]
+//! ```
+//!
+//! (The vendored offline crate set has no `clap`; this is a small
+//! hand-rolled parser with the same ergonomics for our needs.)
+
+mod ablate;
+mod args;
+mod fit;
+mod table1;
+
+pub use args::Args;
+
+use anyhow::Result;
+
+const USAGE: &str = "\
+backbone-learn — BackboneLearn reproduction (Rust + JAX/Pallas AOT)
+
+USAGE:
+  backbone-learn table1 [--block sr|dt|cl|all] [--full] [--config FILE] [--out FILE]
+  backbone-learn fit    --problem sr|dt|cl [--n N] [--p P] [--k K]
+                        [--alpha A] [--beta B] [--m M] [--seed S] [--budget SECS]
+  backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
+  backbone-learn dump-config --problem sr|dt|cl [--full]
+  backbone-learn artifacts [--dir DIR]
+
+Run with quick (CI-scale) sizes by default; pass --full for Table-1 scale.
+";
+
+/// CLI entry point (called from `main.rs`).
+pub fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Dispatch on the subcommand; returns the process exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    let Some(cmd) = argv.first() else {
+        print!("{USAGE}");
+        return Ok(2);
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "table1" => table1::run(&args),
+        "fit" => fit::run(&args),
+        "ablate" => ablate::run(&args),
+        "dump-config" => {
+            let problem = crate::config::Problem::parse(
+                &args.get("problem").unwrap_or_else(|| "sr".into()),
+            )?;
+            let cfg = if args.flag("full") {
+                crate::config::ExperimentConfig::paper_defaults(problem)
+            } else {
+                crate::config::ExperimentConfig::quick_defaults(problem)
+            };
+            print!("{}", cfg.to_json().to_string_pretty());
+            Ok(0)
+        }
+        "artifacts" => {
+            let dir = args.get("dir").unwrap_or_else(|| "artifacts".into());
+            match crate::runtime::describe_artifacts(&dir) {
+                Ok(desc) => {
+                    print!("{desc}");
+                    Ok(0)
+                }
+                Err(e) => {
+                    println!("no usable artifacts in `{dir}`: {e}");
+                    println!("run `make artifacts` to build them");
+                    Ok(0)
+                }
+            }
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown subcommand `{other}`\n{USAGE}");
+            Ok(2)
+        }
+    }
+}

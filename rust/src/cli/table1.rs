@@ -1,0 +1,65 @@
+//! `table1` subcommand: regenerate Table 1 (one block or all).
+
+use super::Args;
+use crate::bench_support::{render_table, run_block};
+use crate::config::{ExperimentConfig, Problem};
+use anyhow::{Context, Result};
+
+pub fn run(args: &Args) -> Result<i32> {
+    let block = args.get("block").unwrap_or_else(|| "all".into());
+    let problems: Vec<Problem> = match block.as_str() {
+        "all" => vec![Problem::SparseRegression, Problem::DecisionTrees, Problem::Clustering],
+        other => vec![Problem::parse(other)?],
+    };
+
+    let mut output = String::new();
+    for problem in problems {
+        let mut cfg = match args.get("config") {
+            Some(path) => {
+                let text = std::fs::read_to_string(&path)
+                    .with_context(|| format!("reading config `{path}`"))?;
+                ExperimentConfig::from_json(&text)?
+            }
+            None if args.flag("full") => ExperimentConfig::paper_defaults(problem),
+            None => ExperimentConfig::quick_defaults(problem),
+        };
+        // CLI overrides.
+        cfg.n = args.get_usize("n", cfg.n)?;
+        cfg.p = args.get_usize("p", cfg.p)?;
+        cfg.k = args.get_usize("k", cfg.k)?;
+        cfg.repetitions = args.get_usize("reps", cfg.repetitions)?;
+        cfg.budget_secs = args.get_f64("budget", cfg.budget_secs)?;
+        cfg.seed = args.get_u64("seed", cfg.seed)?;
+
+        if !args.flag("quiet") {
+            eprintln!(
+                "running {} block: n={} p={} k={} reps={} budget={}s ...",
+                problem.name(),
+                cfg.n,
+                cfg.p,
+                cfg.k,
+                cfg.repetitions,
+                cfg.budget_secs
+            );
+        }
+        let rows = run_block(&cfg)?;
+        let title = format!(
+            "{} (n, p, k) = ({}, {}, {})",
+            problem.name(),
+            cfg.n,
+            cfg.p,
+            cfg.k
+        );
+        output.push_str(&render_table(&title, &rows));
+        output.push('\n');
+    }
+
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(&path, &output).with_context(|| format!("writing `{path}`"))?;
+            eprintln!("wrote {path}");
+        }
+        None => print!("{output}"),
+    }
+    Ok(0)
+}

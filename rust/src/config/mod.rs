@@ -1,0 +1,250 @@
+//! Experiment configuration: JSON-backed configs for the CLI/launcher.
+//!
+//! A config file describes one experiment block (problem, data sizes,
+//! method grid, repetitions, budget), mirroring the knobs of Table 1.
+//! Everything has CLI-overridable defaults, so configs are optional.
+
+use crate::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Which Table-1 block to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Problem {
+    SparseRegression,
+    DecisionTrees,
+    Clustering,
+}
+
+impl Problem {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "sr" | "sparse-regression" | "sparse_regression" => Ok(Self::SparseRegression),
+            "dt" | "decision-trees" | "decision_trees" => Ok(Self::DecisionTrees),
+            "cl" | "clustering" => Ok(Self::Clustering),
+            other => bail!("unknown problem `{other}` (expected sr|dt|cl)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::SparseRegression => "sparse_regression",
+            Self::DecisionTrees => "decision_trees",
+            Self::Clustering => "clustering",
+        }
+    }
+}
+
+/// One (α, β, M) hyperparameter cell of the BbLearn grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BackboneCell {
+    pub m: usize,
+    pub alpha: f64,
+    pub beta: f64,
+}
+
+/// Experiment configuration (one block).
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub problem: Problem,
+    /// Data sizes (n, p, k) — for clustering p is the dimension and k the
+    /// target cluster count.
+    pub n: usize,
+    pub p: usize,
+    pub k: usize,
+    /// Monte-Carlo repetitions (Table 1 averages 10).
+    pub repetitions: usize,
+    /// Per-method wall-clock budget in seconds (paper: 3600).
+    pub budget_secs: f64,
+    /// BbLearn hyperparameter grid (Table 1 rows).
+    pub grid: Vec<BackboneCell>,
+    /// Base RNG seed.
+    pub seed: u64,
+}
+
+impl ExperimentConfig {
+    /// Paper-scale defaults for each block (Table 1 sizes).
+    pub fn paper_defaults(problem: Problem) -> Self {
+        match problem {
+            Problem::SparseRegression => Self {
+                problem,
+                n: 500,
+                p: 5000,
+                k: 10,
+                repetitions: 10,
+                budget_secs: 3600.0,
+                grid: vec![
+                    BackboneCell { m: 5, alpha: 0.1, beta: 0.5 },
+                    BackboneCell { m: 5, alpha: 0.5, beta: 0.9 },
+                    BackboneCell { m: 10, alpha: 0.1, beta: 0.5 },
+                    BackboneCell { m: 10, alpha: 0.5, beta: 0.9 },
+                ],
+                seed: 0,
+            },
+            Problem::DecisionTrees => Self {
+                problem,
+                n: 500,
+                p: 100,
+                k: 10,
+                repetitions: 10,
+                budget_secs: 3600.0,
+                grid: vec![
+                    BackboneCell { m: 5, alpha: 0.1, beta: 0.5 },
+                    BackboneCell { m: 5, alpha: 0.5, beta: 0.9 },
+                    BackboneCell { m: 10, alpha: 0.1, beta: 0.5 },
+                    BackboneCell { m: 10, alpha: 0.5, beta: 0.9 },
+                ],
+                seed: 0,
+            },
+            Problem::Clustering => Self {
+                problem,
+                n: 200,
+                p: 2,
+                k: 5,
+                repetitions: 10,
+                budget_secs: 3600.0,
+                grid: vec![
+                    BackboneCell { m: 5, alpha: 1.0, beta: 1.0 },
+                    BackboneCell { m: 10, alpha: 1.0, beta: 1.0 },
+                ],
+                seed: 0,
+            },
+        }
+    }
+
+    /// Quick-scale defaults that finish in seconds on one core (used by
+    /// the examples and CI; the bench harness picks paper scale with
+    /// `--full`).
+    pub fn quick_defaults(problem: Problem) -> Self {
+        let mut cfg = Self::paper_defaults(problem);
+        match problem {
+            Problem::SparseRegression => {
+                cfg.n = 200;
+                cfg.p = 1000;
+                cfg.k = 5;
+                cfg.repetitions = 3;
+                cfg.budget_secs = 30.0;
+            }
+            Problem::DecisionTrees => {
+                cfg.n = 300;
+                cfg.p = 40;
+                cfg.k = 5;
+                cfg.repetitions = 3;
+                cfg.budget_secs = 30.0;
+            }
+            Problem::Clustering => {
+                cfg.n = 16;
+                cfg.p = 2;
+                cfg.k = 4;
+                cfg.repetitions = 3;
+                cfg.budget_secs = 30.0;
+            }
+        }
+        cfg
+    }
+
+    /// Parse from JSON text.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text).context("parsing experiment config")?;
+        let problem = Problem::parse(
+            doc.require("problem")?.as_str().context("`problem` must be a string")?,
+        )?;
+        let mut cfg = Self::paper_defaults(problem);
+        let geti = |key: &str, default: usize| -> Result<usize> {
+            match doc.get(key) {
+                Some(v) => v.as_usize().with_context(|| format!("`{key}` must be a non-negative integer")),
+                None => Ok(default),
+            }
+        };
+        cfg.n = geti("n", cfg.n)?;
+        cfg.p = geti("p", cfg.p)?;
+        cfg.k = geti("k", cfg.k)?;
+        cfg.repetitions = geti("repetitions", cfg.repetitions)?;
+        cfg.seed = geti("seed", cfg.seed as usize)? as u64;
+        if let Some(v) = doc.get("budget_secs") {
+            cfg.budget_secs = v.as_f64().context("`budget_secs` must be a number")?;
+        }
+        if let Some(grid) = doc.get("grid") {
+            let arr = grid.as_array().context("`grid` must be an array")?;
+            cfg.grid = arr
+                .iter()
+                .map(|cell| -> Result<BackboneCell> {
+                    Ok(BackboneCell {
+                        m: cell.require("m")?.as_usize().context("`m`")?,
+                        alpha: cell.require("alpha")?.as_f64().context("`alpha`")?,
+                        beta: cell.require("beta")?.as_f64().context("`beta`")?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize to JSON (for `--dump-config`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("problem".into(), Json::String(self.problem.name().into()));
+        m.insert("n".into(), Json::Number(self.n as f64));
+        m.insert("p".into(), Json::Number(self.p as f64));
+        m.insert("k".into(), Json::Number(self.k as f64));
+        m.insert("repetitions".into(), Json::Number(self.repetitions as f64));
+        m.insert("budget_secs".into(), Json::Number(self.budget_secs));
+        m.insert("seed".into(), Json::Number(self.seed as f64));
+        let grid: Vec<Json> = self
+            .grid
+            .iter()
+            .map(|c| {
+                let mut g = BTreeMap::new();
+                g.insert("m".into(), Json::Number(c.m as f64));
+                g.insert("alpha".into(), Json::Number(c.alpha));
+                g.insert("beta".into(), Json::Number(c.beta));
+                Json::Object(g)
+            })
+            .collect();
+        m.insert("grid".into(), Json::Array(grid));
+        Json::Object(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_table1() {
+        let sr = ExperimentConfig::paper_defaults(Problem::SparseRegression);
+        assert_eq!((sr.n, sr.p, sr.k), (500, 5000, 10));
+        assert_eq!(sr.grid.len(), 4);
+        let cl = ExperimentConfig::paper_defaults(Problem::Clustering);
+        assert_eq!((cl.n, cl.p, cl.k), (200, 2, 5));
+        assert_eq!(cl.budget_secs, 3600.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = ExperimentConfig::paper_defaults(Problem::DecisionTrees);
+        let text = cfg.to_json().to_string_pretty();
+        let back = ExperimentConfig::from_json(&text).unwrap();
+        assert_eq!(back.problem, cfg.problem);
+        assert_eq!((back.n, back.p, back.k), (cfg.n, cfg.p, cfg.k));
+        assert_eq!(back.grid, cfg.grid);
+    }
+
+    #[test]
+    fn json_overrides_defaults() {
+        let text = r#"{"problem": "sr", "n": 50, "budget_secs": 1.5,
+                       "grid": [{"m": 2, "alpha": 0.3, "beta": 0.7}]}"#;
+        let cfg = ExperimentConfig::from_json(text).unwrap();
+        assert_eq!(cfg.n, 50);
+        assert_eq!(cfg.p, 5000); // default preserved
+        assert_eq!(cfg.budget_secs, 1.5);
+        assert_eq!(cfg.grid, vec![BackboneCell { m: 2, alpha: 0.3, beta: 0.7 }]);
+    }
+
+    #[test]
+    fn rejects_bad_problem_and_types() {
+        assert!(ExperimentConfig::from_json(r#"{"problem": "nope"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"problem": "sr", "n": -3}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"n": 5}"#).is_err()); // missing problem
+    }
+}

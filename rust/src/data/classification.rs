@@ -1,0 +1,247 @@
+//! Binary-classification generator for the decision-tree experiments.
+//!
+//! Mirrors the paper's description: "binary classification data by evenly
+//! distributing a set of normally distributed clusters among classes and
+//! adding noise and feature interdependence" — i.e. a
+//! `sklearn.make_classification`-style process:
+//!
+//! 1. `k` *informative* dimensions; `n_clusters` Gaussian clusters placed
+//!    at distinct hypercube vertices (scaled by `class_sep`), clusters
+//!    assigned round-robin to the two classes;
+//! 2. *redundant* features = random linear combinations of informative
+//!    ones (feature interdependence);
+//! 3. remaining features are pure noise; a fraction `flip_y` of labels is
+//!    flipped (label noise).
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Configuration for the classification generator.
+#[derive(Debug, Clone)]
+pub struct ClassificationConfig {
+    /// Number of samples.
+    pub n: usize,
+    /// Total number of features.
+    pub p: usize,
+    /// Number of informative features (the "true relevant" count k).
+    pub k: usize,
+    /// Number of redundant (linearly dependent) features.
+    pub n_redundant: usize,
+    /// Number of Gaussian clusters distributed among the 2 classes.
+    pub n_clusters: usize,
+    /// Separation between cluster centers.
+    pub class_sep: f64,
+    /// Fraction of labels flipped at random.
+    pub flip_y: f64,
+}
+
+impl Default for ClassificationConfig {
+    fn default() -> Self {
+        // Table 1 decision-tree block: (n, p, k) = (500, 100, 10).
+        Self {
+            n: 500,
+            p: 100,
+            k: 10,
+            n_redundant: 10,
+            n_clusters: 4,
+            class_sep: 1.5,
+            flip_y: 0.05,
+        }
+    }
+}
+
+/// A generated classification instance with ground truth.
+#[derive(Debug, Clone)]
+pub struct ClassificationData {
+    pub x: Matrix,
+    /// Labels in {0.0, 1.0}.
+    pub y: Vec<f64>,
+    /// Indices of informative features (sorted).
+    pub informative: Vec<usize>,
+    /// Indices of redundant features (sorted; linear combos of informative).
+    pub redundant: Vec<usize>,
+}
+
+/// Generate an instance. Informative/redundant/noise feature positions are
+/// randomly permuted so feature index carries no information.
+pub fn generate(cfg: &ClassificationConfig, rng: &mut Rng) -> ClassificationData {
+    assert!(cfg.k >= 1, "need at least one informative feature");
+    assert!(cfg.k + cfg.n_redundant <= cfg.p, "k + n_redundant must be <= p");
+    assert!(cfg.n_clusters >= 2, "need at least 2 clusters");
+    let (n, p, k) = (cfg.n, cfg.p, cfg.k);
+
+    // Cluster centers: distinct random ±class_sep hypercube vertices
+    // (random signs; distinctness enforced by rejection on a sign-pattern
+    // key for up to 2^min(k,60) clusters).
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(cfg.n_clusters);
+    let mut seen_keys: Vec<u64> = Vec::new();
+    while centers.len() < cfg.n_clusters {
+        let mut c = vec![0.0; k];
+        let mut key: u64 = 0;
+        for (d, cd) in c.iter_mut().enumerate() {
+            let sign = if rng.bernoulli(0.5) { 1.0 } else { -1.0 };
+            *cd = sign * cfg.class_sep;
+            if d < 60 && sign > 0.0 {
+                key |= 1 << d;
+            }
+        }
+        if k >= 2 && seen_keys.contains(&key) && seen_keys.len() < (1 << k.min(20)) {
+            continue;
+        }
+        seen_keys.push(key);
+        centers.push(c);
+    }
+
+    // Assign clusters round-robin to classes (even distribution).
+    let cluster_class: Vec<usize> = (0..cfg.n_clusters).map(|c| c % 2).collect();
+
+    // Samples: cluster chosen uniformly; informative block = center + N(0,1).
+    let mut informative_block = Matrix::zeros(n, k);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let c = rng.usize_below(cfg.n_clusters);
+        y[i] = cluster_class[c] as f64;
+        let row = informative_block.row_mut(i);
+        for d in 0..k {
+            row[d] = centers[c][d] + rng.normal();
+        }
+    }
+
+    // Redundant block: informative × random mixing matrix (k × n_redundant).
+    let mut mix = Matrix::zeros(k, cfg.n_redundant);
+    for i in 0..k {
+        for j in 0..cfg.n_redundant {
+            mix.set(i, j, rng.normal());
+        }
+    }
+    let redundant_block = informative_block.matmul(&mix);
+
+    // Assemble with a random column permutation.
+    let mut perm: Vec<usize> = (0..p).collect();
+    rng.shuffle(&mut perm);
+    let mut x = Matrix::zeros(n, p);
+    let mut informative_pos: Vec<usize> = perm[..k].to_vec();
+    let mut redundant_pos: Vec<usize> = perm[k..k + cfg.n_redundant].to_vec();
+    for i in 0..n {
+        for (d, &col) in perm[..k].iter().enumerate() {
+            x.set(i, col, informative_block.get(i, d));
+        }
+        for (d, &col) in perm[k..k + cfg.n_redundant].iter().enumerate() {
+            x.set(i, col, redundant_block.get(i, d));
+        }
+        for &col in &perm[k + cfg.n_redundant..] {
+            x.set(i, col, rng.normal());
+        }
+    }
+
+    // Label noise.
+    for yi in y.iter_mut() {
+        if rng.bernoulli(cfg.flip_y) {
+            *yi = 1.0 - *yi;
+        }
+    }
+
+    informative_pos.sort_unstable();
+    redundant_pos.sort_unstable();
+    ClassificationData { x, y, informative: informative_pos, redundant: redundant_pos }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ClassificationConfig {
+        ClassificationConfig {
+            n: 400,
+            p: 20,
+            k: 4,
+            n_redundant: 3,
+            n_clusters: 4,
+            class_sep: 2.0,
+            flip_y: 0.0,
+        }
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let mut rng = Rng::seed_from_u64(1);
+        let d = generate(&small_cfg(), &mut rng);
+        assert_eq!(d.x.rows(), 400);
+        assert_eq!(d.x.cols(), 20);
+        assert!(d.y.iter().all(|&y| y == 0.0 || y == 1.0));
+        assert_eq!(d.informative.len(), 4);
+        assert_eq!(d.redundant.len(), 3);
+        // Both classes present and roughly balanced.
+        let ones = d.y.iter().filter(|&&y| y == 1.0).count();
+        assert!(ones > 100 && ones < 300, "ones={ones}");
+    }
+
+    #[test]
+    fn informative_features_separate_classes() {
+        // With large separation and no label noise, a simple per-feature
+        // class-mean gap should be much larger on informative features
+        // than on noise features.
+        let mut rng = Rng::seed_from_u64(2);
+        let d = generate(&small_cfg(), &mut rng);
+        let gap = |col: usize| {
+            let (mut s0, mut n0, mut s1, mut n1) = (0.0, 0, 0.0, 0);
+            for i in 0..d.x.rows() {
+                if d.y[i] == 0.0 {
+                    s0 += d.x.get(i, col);
+                    n0 += 1;
+                } else {
+                    s1 += d.x.get(i, col);
+                    n1 += 1;
+                }
+            }
+            (s0 / n0 as f64 - s1 / n1 as f64).abs()
+        };
+        let noise_cols: Vec<usize> = (0..20)
+            .filter(|c| !d.informative.contains(c) && !d.redundant.contains(c))
+            .collect();
+        let max_noise_gap = noise_cols.iter().map(|&c| gap(c)).fold(0.0, f64::max);
+        let max_info_gap = d.informative.iter().map(|&c| gap(c)).fold(0.0, f64::max);
+        assert!(
+            max_info_gap > max_noise_gap,
+            "info gap {max_info_gap} vs noise gap {max_noise_gap}"
+        );
+    }
+
+    #[test]
+    fn redundant_features_are_linear_combinations() {
+        let mut rng = Rng::seed_from_u64(3);
+        let d = generate(&small_cfg(), &mut rng);
+        // Regress a redundant column on the informative block: residual ≈ 0.
+        let xi = d.x.select_columns(&d.informative);
+        let target = d.x.col(d.redundant[0]);
+        let beta = crate::linalg::least_squares(&xi, &target, 0.0).unwrap();
+        let pred = xi.matvec(&beta);
+        let resid: f64 = pred
+            .iter()
+            .zip(&target)
+            .map(|(p, t)| (p - t) * (p - t))
+            .sum::<f64>()
+            / target.len() as f64;
+        assert!(resid < 1e-10, "residual {resid}");
+    }
+
+    #[test]
+    fn flip_y_adds_label_noise() {
+        let mut cfg = small_cfg();
+        cfg.flip_y = 0.5;
+        // With 50% flips the best achievable accuracy is ~0.5; check flips
+        // happened by comparing against the same seed with no flips.
+        let d_clean = generate(&small_cfg(), &mut Rng::seed_from_u64(5));
+        let d_noisy = generate(&cfg, &mut Rng::seed_from_u64(5));
+        let diffs = d_clean.y.iter().zip(&d_noisy.y).filter(|(a, b)| a != b).count();
+        assert!(diffs > 100, "diffs={diffs}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let d1 = generate(&small_cfg(), &mut Rng::seed_from_u64(11));
+        let d2 = generate(&small_cfg(), &mut Rng::seed_from_u64(11));
+        assert_eq!(d1.x, d2.x);
+        assert_eq!(d1.y, d2.y);
+    }
+}

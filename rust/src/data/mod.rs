@@ -1,0 +1,160 @@
+//! Synthetic data generators matching the paper's experimental setups
+//! (§3 "Experiments"), plus splitting/binarization helpers.
+//!
+//! - [`sparse_regression`] — fixed-design sparse linear model following
+//!   Hazimeh et al. (2022): exponentially-correlated Gaussian design,
+//!   equispaced ±1 signal, SNR-controlled noise.
+//! - [`classification`] — binary classification from normally-distributed
+//!   clusters evenly assigned to classes, with noise features and feature
+//!   interdependence (the paper's decision-tree workload).
+//! - [`blobs`] — noisy isotropic Gaussian blobs for clustering, with the
+//!   "ambiguity" knob: target cluster count exceeding the true count.
+
+pub mod blobs;
+pub mod classification;
+pub mod sparse_regression;
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// A train/test split of a supervised dataset.
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub x_train: Matrix,
+    pub y_train: Vec<f64>,
+    pub x_test: Matrix,
+    pub y_test: Vec<f64>,
+}
+
+/// Random train/test split with the given test fraction.
+pub fn train_test_split(
+    x: &Matrix,
+    y: &[f64],
+    test_fraction: f64,
+    rng: &mut Rng,
+) -> Split {
+    assert_eq!(x.rows(), y.len());
+    assert!((0.0..1.0).contains(&test_fraction));
+    let n = x.rows();
+    let mut idx: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut idx);
+    let n_test = ((n as f64) * test_fraction).round() as usize;
+    let (test_idx, train_idx) = idx.split_at(n_test);
+    let mut train_idx = train_idx.to_vec();
+    let mut test_idx = test_idx.to_vec();
+    train_idx.sort_unstable();
+    test_idx.sort_unstable();
+    Split {
+        x_train: x.select_rows(&train_idx),
+        y_train: train_idx.iter().map(|&i| y[i]).collect(),
+        x_test: x.select_rows(&test_idx),
+        y_test: test_idx.iter().map(|&i| y[i]).collect(),
+    }
+}
+
+/// Quantile-threshold binarization of a continuous feature matrix.
+///
+/// The exact decision-tree solver (ODTLearn-style) operates on binary
+/// features; each continuous column is expanded into `bins` indicator
+/// columns `1[x_j <= q_b]` at equispaced quantiles. `feature_of[c]` maps
+/// each binary column back to its source feature, which is what the
+/// backbone needs to union *original* feature indicators.
+#[derive(Debug, Clone)]
+pub struct Binarized {
+    pub x_bin: Matrix,
+    /// Source (original) feature index of each binary column.
+    pub feature_of: Vec<usize>,
+    /// Threshold value of each binary column.
+    pub thresholds: Vec<f64>,
+}
+
+/// Binarize `x` at `bins` per-feature quantile thresholds.
+pub fn binarize(x: &Matrix, bins: usize) -> Binarized {
+    assert!(bins >= 1);
+    let (n, p) = (x.rows(), x.cols());
+    let mut cols: Vec<(usize, f64, Vec<f64>)> = Vec::new();
+    for j in 0..p {
+        let mut vals = x.col(j);
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut last_thr = f64::NAN;
+        for b in 1..=bins {
+            let q = b as f64 / (bins + 1) as f64;
+            let pos = ((n as f64 - 1.0) * q).round() as usize;
+            let thr = vals[pos];
+            if thr == last_thr {
+                continue; // skip duplicate thresholds (low-cardinality cols)
+            }
+            last_thr = thr;
+            let col: Vec<f64> = (0..n)
+                .map(|i| if x.get(i, j) <= thr { 1.0 } else { 0.0 })
+                .collect();
+            cols.push((j, thr, col));
+        }
+    }
+    let mut x_bin = Matrix::zeros(n, cols.len());
+    let mut feature_of = Vec::with_capacity(cols.len());
+    let mut thresholds = Vec::with_capacity(cols.len());
+    for (c, (j, thr, col)) in cols.into_iter().enumerate() {
+        for (i, v) in col.into_iter().enumerate() {
+            x_bin.set(i, c, v);
+        }
+        feature_of.push(j);
+        thresholds.push(thr);
+    }
+    Binarized { x_bin, feature_of, thresholds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_partitions_rows() {
+        let x = Matrix::from_rows(&(0..10).map(|i| vec![i as f64]).collect::<Vec<_>>());
+        let y: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let mut rng = Rng::seed_from_u64(1);
+        let s = train_test_split(&x, &y, 0.3, &mut rng);
+        assert_eq!(s.x_train.rows(), 7);
+        assert_eq!(s.x_test.rows(), 3);
+        // x and y stay aligned
+        for i in 0..7 {
+            assert_eq!(s.x_train.get(i, 0), s.y_train[i]);
+        }
+        // partition: every original row appears exactly once
+        let mut all: Vec<f64> = s.y_train.iter().chain(&s.y_test).copied().collect();
+        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(all, y);
+    }
+
+    #[test]
+    fn binarize_indicator_semantics() {
+        let x = Matrix::from_rows(&[
+            vec![1.0],
+            vec![2.0],
+            vec![3.0],
+            vec![4.0],
+            vec![5.0],
+        ]);
+        let b = binarize(&x, 2);
+        assert!(b.x_bin.cols() >= 1);
+        for c in 0..b.x_bin.cols() {
+            assert_eq!(b.feature_of[c], 0);
+            for i in 0..5 {
+                let expected = if x.get(i, 0) <= b.thresholds[c] { 1.0 } else { 0.0 };
+                assert_eq!(b.x_bin.get(i, c), expected);
+            }
+        }
+        // thresholds strictly increasing per feature
+        for w in b.thresholds.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn binarize_dedups_constant_column() {
+        let x = Matrix::from_rows(&[vec![7.0], vec![7.0], vec![7.0], vec![7.0]]);
+        let b = binarize(&x, 3);
+        // all thresholds identical → collapses to a single (constant) column
+        assert_eq!(b.x_bin.cols(), 1);
+    }
+}

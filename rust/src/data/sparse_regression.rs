@@ -1,0 +1,157 @@
+//! Fixed-design sparse linear regression generator (Hazimeh et al., 2022).
+//!
+//! `X`'s rows are iid from `N(0, Σ)` with `Σ_ij = ρ^{|i−j|}` (exponential
+//! correlation, sampled via the AR(1) recursion so generation is `O(np)`),
+//! the true coefficient vector has `k` nonzeros of magnitude 1 at
+//! equispaced positions, and noise variance is set from the target
+//! signal-to-noise ratio: `σ² = Var(Xβ†) / SNR`.
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// Configuration for the sparse-regression generator.
+#[derive(Debug, Clone)]
+pub struct SparseRegressionConfig {
+    /// Number of samples.
+    pub n: usize,
+    /// Number of features.
+    pub p: usize,
+    /// Number of truly-relevant features.
+    pub k: usize,
+    /// AR(1) feature correlation ρ ∈ [0, 1).
+    pub rho: f64,
+    /// Signal-to-noise ratio.
+    pub snr: f64,
+}
+
+impl Default for SparseRegressionConfig {
+    fn default() -> Self {
+        // Table 1 uses (n, p, k) = (500, 5000, 10); ρ and SNR follow the
+        // L0BnB experimental setup (ρ = 0.1, SNR = 5).
+        Self { n: 500, p: 5000, k: 10, rho: 0.1, snr: 5.0 }
+    }
+}
+
+/// A generated sparse-regression instance with ground truth.
+#[derive(Debug, Clone)]
+pub struct SparseRegressionData {
+    pub x: Matrix,
+    pub y: Vec<f64>,
+    /// True coefficient vector (length p, k nonzeros).
+    pub beta_true: Vec<f64>,
+    /// Indices of the truly-relevant features (sorted).
+    pub support_true: Vec<usize>,
+    /// Noise standard deviation used.
+    pub sigma: f64,
+}
+
+/// Generate an instance per the fixed-design setting.
+pub fn generate(cfg: &SparseRegressionConfig, rng: &mut Rng) -> SparseRegressionData {
+    assert!(cfg.k <= cfg.p, "k must be <= p");
+    assert!((0.0..1.0).contains(&cfg.rho), "rho must be in [0,1)");
+    let (n, p, k) = (cfg.n, cfg.p, cfg.k);
+
+    // AR(1) rows: x_0 ~ N(0,1); x_j = ρ x_{j-1} + sqrt(1-ρ²) ε_j gives
+    // exactly Cov(x_i, x_j) = ρ^{|i-j|}.
+    let mut x = Matrix::zeros(n, p);
+    let scale = (1.0 - cfg.rho * cfg.rho).sqrt();
+    for i in 0..n {
+        let row = x.row_mut(i);
+        let mut prev = rng.normal();
+        row[0] = prev;
+        for j in 1..p {
+            prev = cfg.rho * prev + scale * rng.normal();
+            row[j] = prev;
+        }
+    }
+
+    // Equispaced ±1 support (alternating signs, as in the L0BnB setup).
+    let mut beta_true = vec![0.0; p];
+    let mut support_true = Vec::with_capacity(k);
+    if k > 0 {
+        let gap = p / k;
+        for t in 0..k {
+            let j = t * gap;
+            beta_true[j] = if t % 2 == 0 { 1.0 } else { -1.0 };
+            support_true.push(j);
+        }
+    }
+
+    // Noise scaled to the target SNR.
+    let signal = x.matvec(&beta_true);
+    let signal_var = crate::linalg::variance(&signal);
+    let sigma = if cfg.snr > 0.0 { (signal_var / cfg.snr).sqrt() } else { 0.0 };
+    let y: Vec<f64> = signal.iter().map(|&s| s + sigma * rng.normal()).collect();
+
+    SparseRegressionData { x, y, beta_true, support_true, sigma }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dot, variance};
+
+    #[test]
+    fn shapes_and_support() {
+        let cfg = SparseRegressionConfig { n: 50, p: 200, k: 5, rho: 0.3, snr: 5.0 };
+        let mut rng = Rng::seed_from_u64(1);
+        let d = generate(&cfg, &mut rng);
+        assert_eq!(d.x.rows(), 50);
+        assert_eq!(d.x.cols(), 200);
+        assert_eq!(d.y.len(), 50);
+        assert_eq!(d.support_true.len(), 5);
+        let nnz = d.beta_true.iter().filter(|&&b| b != 0.0).count();
+        assert_eq!(nnz, 5);
+        for &j in &d.support_true {
+            assert!(d.beta_true[j].abs() == 1.0);
+        }
+    }
+
+    #[test]
+    fn ar1_correlation_structure() {
+        let cfg = SparseRegressionConfig { n: 4000, p: 4, k: 1, rho: 0.6, snr: 5.0 };
+        let mut rng = Rng::seed_from_u64(2);
+        let d = generate(&cfg, &mut rng);
+        // Empirical corr(x_0, x_1) ≈ 0.6; corr(x_0, x_2) ≈ 0.36.
+        let c0 = d.x.col(0);
+        let c1 = d.x.col(1);
+        let c2 = d.x.col(2);
+        let corr = |a: &[f64], b: &[f64]| {
+            dot(a, b) / (dot(a, a).sqrt() * dot(b, b).sqrt())
+        };
+        assert!((corr(&c0, &c1) - 0.6).abs() < 0.05, "corr01={}", corr(&c0, &c1));
+        assert!((corr(&c0, &c2) - 0.36).abs() < 0.05, "corr02={}", corr(&c0, &c2));
+        // Unit marginal variance.
+        assert!((variance(&c2) - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn snr_controls_noise() {
+        let cfg = SparseRegressionConfig { n: 5000, p: 20, k: 4, rho: 0.0, snr: 5.0 };
+        let mut rng = Rng::seed_from_u64(3);
+        let d = generate(&cfg, &mut rng);
+        let signal = d.x.matvec(&d.beta_true);
+        let noise: Vec<f64> = d.y.iter().zip(&signal).map(|(y, s)| y - s).collect();
+        let snr_emp = variance(&signal) / variance(&noise);
+        assert!((snr_emp - 5.0).abs() < 0.5, "snr={snr_emp}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = SparseRegressionConfig { n: 10, p: 30, k: 3, rho: 0.1, snr: 5.0 };
+        let d1 = generate(&cfg, &mut Rng::seed_from_u64(9));
+        let d2 = generate(&cfg, &mut Rng::seed_from_u64(9));
+        assert_eq!(d1.x, d2.x);
+        assert_eq!(d1.y, d2.y);
+    }
+
+    #[test]
+    fn zero_snr_means_pure_signal() {
+        let cfg = SparseRegressionConfig { n: 20, p: 10, k: 2, rho: 0.0, snr: 0.0 };
+        let d = generate(&cfg, &mut Rng::seed_from_u64(4));
+        let signal = d.x.matvec(&d.beta_true);
+        for (y, s) in d.y.iter().zip(&signal) {
+            assert_eq!(y, s);
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! # backbone_learn
+//!
+//! A from-scratch reproduction of **BackboneLearn** (Digalakis Jr & Ziakas,
+//! 2023): a framework for scaling mixed-integer-optimization (MIO) problems
+//! with indicator variables to high dimensions via the two-phase *backbone*
+//! heuristic, plus every substrate the paper depends on (LP/MILP solvers,
+//! an L0L2 sparse-regression branch-and-bound, coordinate-descent elastic
+//! net, CART, optimal shallow decision trees, k-means, clique-partitioning
+//! clustering, synthetic data generators, and evaluation metrics).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer stack:
+//!
+//! - **L3 (this crate)** — the backbone orchestration (Algorithm 1 of the
+//!   paper), all exact MIO solvers, the CLI, config system, and benchmark
+//!   harness. Pure Rust; Python never runs at serve/bench time.
+//! - **L2 (JAX, build-time)** — dense numeric hot paths (screening
+//!   utilities, IHT sparse-regression subproblem fits, Lloyd iterations)
+//!   authored in JAX, AOT-lowered to HLO text under `artifacts/`.
+//! - **L1 (Pallas, build-time)** — the innermost tiled kernels called by
+//!   L2, verified against pure-jnp oracles by pytest.
+//!
+//! At runtime, [`runtime::Engine`] loads the HLO artifacts through the PJRT
+//! CPU client (`xla` crate) and serves them to the backbone hot path; every
+//! PJRT-backed routine has a bit-compatible pure-Rust fallback.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
+//! use backbone_learn::data::sparse_regression::{SparseRegressionConfig, generate};
+//! use backbone_learn::rng::Rng;
+//!
+//! let mut rng = Rng::seed_from_u64(7);
+//! let data = generate(&SparseRegressionConfig { n: 200, p: 1000, k: 5, ..Default::default() }, &mut rng);
+//! let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, 10);
+//! let model = bb.fit(&data.x, &data.y).unwrap();
+//! let y_pred = model.predict(&data.x);
+//! ```
+
+pub mod backbone;
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod data;
+pub mod json;
+pub mod linalg;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod solvers;
+pub mod util;

@@ -1,0 +1,175 @@
+//! Cholesky factorization and least-squares solves.
+//!
+//! The reduced problems the backbone produces are small (`|B| ≤ ~100`
+//! features), so normal-equations + Cholesky with a ridge jitter is both
+//! fast and accurate enough; solvers that need more stability (the LP
+//! simplex) maintain their own factorizations.
+
+use super::{dot, Matrix};
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor of a symmetric positive-definite
+/// matrix. Fails if the matrix is not (numerically) positive definite.
+pub fn cholesky(a: &Matrix) -> Result<Matrix> {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "cholesky: matrix must be square");
+    let mut l = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let s = dot(&l.row(i)[..j], &l.row(j)[..j]);
+            if i == j {
+                let d = a.get(i, i) - s;
+                if d <= 0.0 {
+                    bail!("cholesky: matrix not positive definite at pivot {i} (d={d})");
+                }
+                l.set(i, j, d.sqrt());
+            } else {
+                l.set(i, j, (a.get(i, j) - s) / l.get(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` (forward substitution) for lower-triangular `L`.
+pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let s = dot(&l.row(i)[..i], &y[..i]);
+        y[i] = (b[i] - s) / l.get(i, i);
+    }
+    y
+}
+
+/// Solve `Lᵀ x = y` (back substitution) for lower-triangular `L`.
+pub fn solve_lower_transpose(l: &Matrix, y: &[f64]) -> Vec<f64> {
+    let n = l.rows();
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = 0.0;
+        for k in (i + 1)..n {
+            s += l.get(k, i) * x[k];
+        }
+        x[i] = (y[i] - s) / l.get(i, i);
+    }
+    x
+}
+
+/// Solve the SPD system `A x = b` via Cholesky.
+pub fn solve_spd(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, b);
+    Ok(solve_lower_transpose(&l, &y))
+}
+
+/// Ordinary / ridge least squares: minimize `‖y − Xβ‖² + λ‖β‖²` via the
+/// normal equations `(XᵀX + λI) β = Xᵀy`. With `λ = 0` a tiny jitter is
+/// added automatically if the Gram matrix is singular.
+pub fn least_squares(x: &Matrix, y: &[f64], lambda: f64) -> Result<Vec<f64>> {
+    assert_eq!(x.rows(), y.len(), "least_squares: dimension mismatch");
+    let p = x.cols();
+    if p == 0 {
+        return Ok(Vec::new());
+    }
+    let mut g = x.gram();
+    let xty = x.matvec_t(y);
+    for i in 0..p {
+        g.set(i, i, g.get(i, i) + lambda);
+    }
+    match solve_spd(&g, &xty) {
+        Ok(beta) => Ok(beta),
+        Err(_) => {
+            // Singular gram (collinear columns): retry with jitter scaled
+            // to the matrix magnitude.
+            let jitter = 1e-8 * (g.frobenius_norm() / p as f64).max(1e-8);
+            for i in 0..p {
+                g.set(i, i, g.get(i, i) + jitter);
+            }
+            solve_spd(&g, &xty)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx_vec(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn cholesky_of_known_matrix() {
+        // A = [[4,2],[2,3]] → L = [[2,0],[1,sqrt(2)]]
+        let a = Matrix::from_rows(&[vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let l = cholesky(&a).unwrap();
+        assert!((l.get(0, 0) - 2.0).abs() < 1e-12);
+        assert!((l.get(1, 0) - 1.0).abs() < 1e-12);
+        assert!((l.get(1, 1) - 2f64.sqrt()).abs() < 1e-12);
+        // L Lᵀ = A
+        let recon = l.matmul(&l.transpose());
+        for i in 0..2 {
+            for j in 0..2 {
+                assert!((recon.get(i, j) - a.get(i, j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_solve_roundtrip() {
+        let a = Matrix::from_rows(&[
+            vec![6.0, 2.0, 1.0],
+            vec![2.0, 5.0, 2.0],
+            vec![1.0, 2.0, 4.0],
+        ]);
+        let x_true = vec![1.0, -2.0, 3.0];
+        let b = a.matvec(&x_true);
+        let x = solve_spd(&a, &b).unwrap();
+        approx_vec(&x, &x_true, 1e-10);
+    }
+
+    #[test]
+    fn least_squares_exact_recovery() {
+        // Overdetermined, exactly consistent system.
+        let x = Matrix::from_rows(&[
+            vec![1.0, 0.0],
+            vec![0.0, 1.0],
+            vec![1.0, 1.0],
+            vec![2.0, -1.0],
+        ]);
+        let beta_true = vec![2.5, -1.5];
+        let y = x.matvec(&beta_true);
+        let beta = least_squares(&x, &y, 0.0).unwrap();
+        approx_vec(&beta, &beta_true, 1e-10);
+    }
+
+    #[test]
+    fn ridge_shrinks_towards_zero() {
+        let x = Matrix::from_rows(&[vec![1.0], vec![1.0]]);
+        let y = vec![2.0, 2.0];
+        let b0 = least_squares(&x, &y, 0.0).unwrap()[0];
+        let b1 = least_squares(&x, &y, 10.0).unwrap()[0];
+        assert!((b0 - 2.0).abs() < 1e-10);
+        assert!(b1 < b0 && b1 > 0.0);
+    }
+
+    #[test]
+    fn least_squares_handles_collinear_columns() {
+        // Two identical columns: singular gram; jitter path must succeed.
+        let x = Matrix::from_rows(&[vec![1.0, 1.0], vec![2.0, 2.0], vec![3.0, 3.0]]);
+        let y = vec![2.0, 4.0, 6.0];
+        let beta = least_squares(&x, &y, 0.0).unwrap();
+        let pred = x.matvec(&beta);
+        approx_vec(&pred, &y, 1e-4);
+    }
+}

@@ -1,0 +1,297 @@
+//! Row-major dense matrix.
+
+use std::fmt;
+
+/// Dense row-major `f64` matrix.
+///
+/// Row-major layout is chosen because the dominant access patterns in this
+/// crate are (i) per-sample row scans (tree solvers, k-means) and (ii)
+/// column gathers into contiguous sub-matrices (subproblem construction),
+/// which we materialize explicitly via [`Matrix::select_columns`].
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows <= 8 && self.cols <= 8 {
+            writeln!(f)?;
+            for i in 0..self.rows {
+                writeln!(f, "  {:?}", self.row(i))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_vec: buffer size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Build from nested rows.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "from_rows: ragged rows");
+            data.extend_from_slice(row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1.0);
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Contiguous view of row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable view of row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self.get(i, j)).collect()
+    }
+
+    /// Flat row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Flat mutable row-major data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.set(j, i, self.get(i, j));
+            }
+        }
+        t
+    }
+
+    /// New matrix containing the given columns (in the given order).
+    /// This is the subproblem-construction primitive: restrict the design
+    /// matrix to a feature subset.
+    pub fn select_columns(&self, cols: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, cols.len());
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = out.row_mut(i);
+            for (jj, &j) in cols.iter().enumerate() {
+                dst[jj] = src[j];
+            }
+        }
+        out
+    }
+
+    /// New matrix containing the given rows (in the given order).
+    pub fn select_rows(&self, rows: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(rows.len(), self.cols);
+        for (ii, &i) in rows.iter().enumerate() {
+            out.row_mut(ii).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Pad with zero columns on the right up to `target_cols` (used to fit
+    /// shape-bucketed PJRT executables; zero columns are inert for the
+    /// correlation/IHT kernels — see runtime tests).
+    pub fn pad_columns(&self, target_cols: usize) -> Matrix {
+        assert!(target_cols >= self.cols);
+        if target_cols == self.cols {
+            return self.clone();
+        }
+        let mut out = Matrix::zeros(self.rows, target_cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Pad with zero rows at the bottom up to `target_rows`.
+    pub fn pad_rows(&self, target_rows: usize) -> Matrix {
+        assert!(target_rows >= self.rows);
+        if target_rows == self.rows {
+            return self.clone();
+        }
+        let mut out = Matrix::zeros(target_rows, self.cols);
+        out.data[..self.rows * self.cols].copy_from_slice(&self.data);
+        out
+    }
+
+    /// Convert to `f32` row-major (PJRT artifacts are compiled in f32).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Frobenius norm.
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Column means.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut means = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for (m, &v) in means.iter_mut().zip(self.row(i)) {
+                *m += v;
+            }
+        }
+        let n = self.rows.max(1) as f64;
+        means.iter_mut().for_each(|m| *m /= n);
+        means
+    }
+
+    /// Column standard deviations (population, i.e. divide by n).
+    pub fn col_stds(&self) -> Vec<f64> {
+        let means = self.col_means();
+        let mut vars = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            for ((v, &m), &x) in vars.iter_mut().zip(&means).zip(self.row(i)) {
+                let d = x - m;
+                *v += d * d;
+            }
+        }
+        let n = self.rows.max(1) as f64;
+        vars.iter_mut().for_each(|v| *v = (*v / n).sqrt());
+        vars
+    }
+
+    /// Standardize columns to zero mean / unit std in place; returns the
+    /// (mean, std) pairs used so predictions can be mapped back. Columns
+    /// with zero variance are left centered with std recorded as 1.
+    pub fn standardize_columns(&mut self) -> Vec<(f64, f64)> {
+        let means = self.col_means();
+        let stds = self.col_stds();
+        let scale: Vec<f64> =
+            stds.iter().map(|&s| if s > 1e-12 { s } else { 1.0 }).collect();
+        for i in 0..self.rows {
+            let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
+            for j in 0..row.len() {
+                row[j] = (row[j] - means[j]) / scale[j];
+            }
+        }
+        means.into_iter().zip(scale).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.get(1, 0), 3.0);
+        assert_eq!(m.row(0), &[1.0, 2.0]);
+        assert_eq!(m.col(1), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn select_columns_order_preserved() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        let s = m.select_columns(&[2, 0]);
+        assert_eq!(s.row(0), &[3.0, 1.0]);
+        assert_eq!(s.row(1), &[6.0, 4.0]);
+    }
+
+    #[test]
+    fn select_rows_subset() {
+        let m = Matrix::from_rows(&[vec![1.0], vec![2.0], vec![3.0]]);
+        let s = m.select_rows(&[2, 0]);
+        assert_eq!(s.col(0), vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn padding() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0]]);
+        let pc = m.pad_columns(4);
+        assert_eq!(pc.row(0), &[1.0, 2.0, 0.0, 0.0]);
+        let pr = m.pad_rows(3);
+        assert_eq!(pr.rows(), 3);
+        assert_eq!(pr.row(2), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn standardize() {
+        let mut m = Matrix::from_rows(&[vec![1.0, 5.0], vec![3.0, 5.0], vec![5.0, 5.0]]);
+        let params = m.standardize_columns();
+        let means = m.col_means();
+        assert!(means.iter().all(|m| m.abs() < 1e-12));
+        // First column had std sqrt(8/3); second is constant → scale 1.
+        assert!((params[0].0 - 3.0).abs() < 1e-12);
+        assert!((params[1].1 - 1.0).abs() < 1e-12);
+        assert_eq!(m.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn eye_and_frobenius() {
+        let i3 = Matrix::eye(3);
+        assert!((i3.frobenius_norm() - 3f64.sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense linear algebra substrate.
+//!
+//! All solvers operate on small-to-medium dense problems (the paper's exact
+//! methods cap out around `n=500`, `p=5000`), so a straightforward row-major
+//! `f64` matrix with cache-blocked matmul, Cholesky, and least-squares is
+//! the right substrate — no sparse structures or external BLAS.
+
+mod cholesky;
+mod matrix;
+mod ops;
+
+pub use cholesky::*;
+pub use matrix::*;
+pub use ops::*;

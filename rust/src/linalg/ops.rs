@@ -1,0 +1,200 @@
+//! Matrix/vector products and vector helpers.
+//!
+//! The hot kernels (`matmul`, `matvec`, `matvec_t`) are written so LLVM can
+//! auto-vectorize the inner loops: contiguous row slices, no bounds checks
+//! in the inner loop (iterator zips), and an ikj loop order for matmul.
+
+use super::Matrix;
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Squared Euclidean distance between two vectors.
+#[inline]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Elementwise `a - b`.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x - y).collect()
+}
+
+/// Mean of a slice.
+#[inline]
+pub fn mean(a: &[f64]) -> f64 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter().sum::<f64>() / a.len() as f64
+}
+
+/// Population variance of a slice.
+pub fn variance(a: &[f64]) -> f64 {
+    if a.is_empty() {
+        return 0.0;
+    }
+    let m = mean(a);
+    a.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / a.len() as f64
+}
+
+impl Matrix {
+    /// `self * v` for a column vector `v`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols(), "matvec: dimension mismatch");
+        (0..self.rows()).map(|i| dot(self.row(i), v)).collect()
+    }
+
+    /// `selfᵀ * v` — computed without materializing the transpose by
+    /// accumulating scaled rows (row-major friendly).
+    pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows(), "matvec_t: dimension mismatch");
+        let mut out = vec![0.0; self.cols()];
+        for (i, &vi) in v.iter().enumerate() {
+            if vi != 0.0 {
+                axpy(vi, self.row(i), &mut out);
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * other` with ikj loop order (streams `other`'s
+    /// rows, keeps the output row in cache).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols(), other.rows(), "matmul: dimension mismatch");
+        let (m, k, n) = (self.rows(), self.cols(), other.cols());
+        let mut out = Matrix::zeros(m, n);
+        for i in 0..m {
+            let a_row = self.row(i);
+            // SAFETY-free split: accumulate into a scratch row then copy,
+            // so the borrow checker allows reading `other` rows.
+            let out_row = out.row_mut(i);
+            for (kk, &a) in a_row.iter().enumerate().take(k) {
+                if a != 0.0 {
+                    axpy(a, other.row(kk), out_row);
+                }
+            }
+        }
+        out
+    }
+
+    /// Gram matrix `selfᵀ * self` exploiting symmetry (only the upper
+    /// triangle is computed, then mirrored).
+    pub fn gram(&self) -> Matrix {
+        let p = self.cols();
+        let mut g = Matrix::zeros(p, p);
+        for i in 0..self.rows() {
+            let row = self.row(i);
+            for a in 0..p {
+                let ra = row[a];
+                if ra == 0.0 {
+                    continue;
+                }
+                let grow = g.row_mut(a);
+                for (b, &rb) in row.iter().enumerate().skip(a) {
+                    grow[b] += ra * rb;
+                }
+            }
+        }
+        for a in 0..p {
+            for b in 0..a {
+                let v = g.get(b, a);
+                g.set(a, b, v);
+            }
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-10
+    }
+
+    #[test]
+    fn dot_norm_axpy() {
+        assert!(approx(dot(&[1.0, 2.0], &[3.0, 4.0]), 11.0));
+        assert!(approx(norm2(&[3.0, 4.0]), 5.0));
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[1.0, -1.0], &mut y);
+        assert_eq!(y, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn matvec_matches_manual() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        assert_eq!(m.matvec(&[1.0, 1.0]), vec![3.0, 7.0, 11.0]);
+        assert_eq!(m.matvec_t(&[1.0, 0.0, 1.0]), vec![6.0, 8.0]);
+    }
+
+    #[test]
+    fn matvec_t_equals_transpose_matvec() {
+        let m = Matrix::from_rows(&[vec![1.0, -2.0, 0.5], vec![0.0, 3.0, 1.0]]);
+        let v = vec![2.0, -1.0];
+        assert_eq!(m.matvec_t(&v), m.transpose().matvec(&v));
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Matrix::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.row(0), &[2.0, 1.0]);
+        assert_eq!(c.row(1), &[4.0, 3.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_rows(&[vec![1.5, -2.0, 3.0], vec![0.0, 1.0, 2.0]]);
+        let i3 = Matrix::eye(3);
+        assert_eq!(a.matmul(&i3), a);
+    }
+
+    #[test]
+    fn gram_matches_explicit_transpose_product() {
+        let a = Matrix::from_rows(&[
+            vec![1.0, 2.0, 0.0],
+            vec![-1.0, 0.5, 2.0],
+            vec![3.0, 1.0, 1.0],
+            vec![0.0, 0.0, 4.0],
+        ]);
+        let g = a.gram();
+        let g2 = a.transpose().matmul(&a);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!(approx(g.get(i, j), g2.get(i, j)));
+            }
+        }
+    }
+
+    #[test]
+    fn stats_helpers() {
+        assert!(approx(mean(&[1.0, 2.0, 3.0]), 2.0));
+        assert!(approx(variance(&[1.0, 2.0, 3.0]), 2.0 / 3.0));
+        assert!(approx(sqdist(&[0.0, 0.0], &[3.0, 4.0]), 25.0));
+    }
+}

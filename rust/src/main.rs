@@ -1,0 +1,4 @@
+//! CLI launcher (placeholder; replaced by cli module wiring).
+fn main() {
+    backbone_learn::cli::main();
+}

@@ -1,0 +1,322 @@
+//! Evaluation metrics used by Table 1 and the ablations.
+//!
+//! - Regression: `R²`, MSE (Table 1's sparse-regression accuracy column).
+//! - Classification: accuracy, `AUC` (Table 1's decision-tree column).
+//! - Clustering: mean `silhouette` score (Table 1's clustering column),
+//!   adjusted Rand index (ground-truth recovery, used in ablations).
+//! - Support recovery: precision/recall/F1 of a selected feature set
+//!   against the true support (validates the paper's claim that the
+//!   backbone set captures the truly-relevant indicators).
+
+use crate::linalg::{sqdist, Matrix};
+
+/// Coefficient of determination R² = 1 − SS_res / SS_tot.
+pub fn r2_score(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert!(!y_true.is_empty());
+    let mean = crate::linalg::mean(y_true);
+    let ss_tot: f64 = y_true.iter().map(|y| (y - mean) * (y - mean)).sum();
+    let ss_res: f64 =
+        y_true.iter().zip(y_pred).map(|(y, p)| (y - p) * (y - p)).sum();
+    if ss_tot == 0.0 {
+        return if ss_res == 0.0 { 1.0 } else { 0.0 };
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Mean squared error.
+pub fn mse(y_true: &[f64], y_pred: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), y_pred.len());
+    assert!(!y_true.is_empty());
+    y_true.iter().zip(y_pred).map(|(y, p)| (y - p) * (y - p)).sum::<f64>()
+        / y_true.len() as f64
+}
+
+/// Classification accuracy for labels in {0, 1} given scores thresholded
+/// at 0.5.
+pub fn accuracy(y_true: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), scores.len());
+    assert!(!y_true.is_empty());
+    let correct = y_true
+        .iter()
+        .zip(scores)
+        .filter(|(y, s)| (**s >= 0.5) == (**y >= 0.5))
+        .count();
+    correct as f64 / y_true.len() as f64
+}
+
+/// Area under the ROC curve via the Mann–Whitney U statistic (ties get
+/// half credit). Returns 0.5 when one class is absent.
+pub fn auc(y_true: &[f64], scores: &[f64]) -> f64 {
+    assert_eq!(y_true.len(), scores.len());
+    let pos: Vec<f64> = y_true
+        .iter()
+        .zip(scores)
+        .filter(|(y, _)| **y >= 0.5)
+        .map(|(_, s)| *s)
+        .collect();
+    let neg: Vec<f64> = y_true
+        .iter()
+        .zip(scores)
+        .filter(|(y, _)| **y < 0.5)
+        .map(|(_, s)| *s)
+        .collect();
+    if pos.is_empty() || neg.is_empty() {
+        return 0.5;
+    }
+    // Rank-based O((n)log n) computation.
+    let mut all: Vec<(f64, bool)> = pos
+        .iter()
+        .map(|&s| (s, true))
+        .chain(neg.iter().map(|&s| (s, false)))
+        .collect();
+    all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // Assign average ranks over tie groups.
+    let n = all.len();
+    let mut rank_sum_pos = 0.0;
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j < n && all[j].0 == all[i].0 {
+            j += 1;
+        }
+        let avg_rank = ((i + 1 + j) as f64) / 2.0; // ranks are 1-based
+        for item in &all[i..j] {
+            if item.1 {
+                rank_sum_pos += avg_rank;
+            }
+        }
+        i = j;
+    }
+    let n_pos = pos.len() as f64;
+    let n_neg = neg.len() as f64;
+    (rank_sum_pos - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+/// Mean silhouette coefficient over all points.
+///
+/// `s(i) = (b(i) − a(i)) / max(a(i), b(i))` with `a` the mean distance to
+/// the own cluster and `b` the smallest mean distance to another cluster.
+/// Single-member clusters get `s(i) = 0` (scikit-learn convention).
+/// Returns 0 if fewer than 2 clusters are present.
+pub fn silhouette_score(x: &Matrix, labels: &[usize]) -> f64 {
+    assert_eq!(x.rows(), labels.len());
+    let n = x.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    let k = labels.iter().copied().max().map_or(0, |m| m + 1);
+    let mut sizes = vec![0usize; k];
+    for &l in labels {
+        sizes[l] += 1;
+    }
+    let n_clusters = sizes.iter().filter(|&&s| s > 0).count();
+    if n_clusters < 2 {
+        return 0.0;
+    }
+    // Per-point mean distance to each cluster, accumulated in one O(n²)
+    // pass over pairs (Euclidean distance, as in sklearn's default).
+    let mut dist_sum = vec![vec![0.0f64; k]; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = sqdist(x.row(i), x.row(j)).sqrt();
+            dist_sum[i][labels[j]] += d;
+            dist_sum[j][labels[i]] += d;
+        }
+    }
+    let mut total = 0.0;
+    for i in 0..n {
+        let own = labels[i];
+        if sizes[own] <= 1 {
+            continue; // s(i) = 0
+        }
+        let a = dist_sum[i][own] / (sizes[own] - 1) as f64;
+        let mut b = f64::INFINITY;
+        for (c, &sz) in sizes.iter().enumerate() {
+            if c != own && sz > 0 {
+                b = b.min(dist_sum[i][c] / sz as f64);
+            }
+        }
+        let denom = a.max(b);
+        if denom > 0.0 {
+            total += (b - a) / denom;
+        }
+    }
+    total / n as f64
+}
+
+/// Adjusted Rand index between two labelings.
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let ka = a.iter().max().unwrap() + 1;
+    let kb = b.iter().max().unwrap() + 1;
+    let mut table = vec![vec![0usize; kb]; ka];
+    for (&x, &y) in a.iter().zip(b) {
+        table[x][y] += 1;
+    }
+    let comb2 = |x: usize| (x * x.saturating_sub(1)) as f64 / 2.0;
+    let sum_ij: f64 = table.iter().flatten().map(|&c| comb2(c)).sum();
+    let sum_a: f64 = table.iter().map(|row| comb2(row.iter().sum())).sum();
+    let sum_b: f64 = (0..kb)
+        .map(|j| comb2(table.iter().map(|row| row[j]).sum()))
+        .sum();
+    let total = comb2(n);
+    let expected = sum_a * sum_b / total;
+    let max_index = (sum_a + sum_b) / 2.0;
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0; // degenerate: all points in one cluster in both
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Precision/recall/F1 of a selected index set vs the true support.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SupportRecovery {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+/// Compute support-recovery metrics. Both inputs may be unsorted.
+pub fn support_recovery(selected: &[usize], truth: &[usize]) -> SupportRecovery {
+    let sel: std::collections::BTreeSet<_> = selected.iter().collect();
+    let tru: std::collections::BTreeSet<_> = truth.iter().collect();
+    let tp = sel.intersection(&tru).count() as f64;
+    let precision = if sel.is_empty() { 0.0 } else { tp / sel.len() as f64 };
+    let recall = if tru.is_empty() { 1.0 } else { tp / tru.len() as f64 };
+    let f1 = if precision + recall == 0.0 {
+        0.0
+    } else {
+        2.0 * precision * recall / (precision + recall)
+    };
+    SupportRecovery { precision, recall, f1 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn r2_perfect_and_mean_predictor() {
+        let y = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(r2_score(&y, &y), 1.0);
+        let mean_pred = [2.5; 4];
+        assert!(r2_score(&y, &mean_pred).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mse_basic() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+    }
+
+    #[test]
+    fn accuracy_basic() {
+        let y = [0.0, 0.0, 1.0, 1.0];
+        let s = [0.1, 0.9, 0.8, 0.3];
+        assert_eq!(accuracy(&y, &s), 0.5);
+    }
+
+    #[test]
+    fn auc_perfect_random_inverted() {
+        let y = [0.0, 0.0, 1.0, 1.0];
+        assert_eq!(auc(&y, &[0.1, 0.2, 0.8, 0.9]), 1.0);
+        assert_eq!(auc(&y, &[0.9, 0.8, 0.2, 0.1]), 0.0);
+        // All-equal scores → 0.5 via tie handling.
+        assert_eq!(auc(&y, &[0.5, 0.5, 0.5, 0.5]), 0.5);
+    }
+
+    #[test]
+    fn auc_matches_pair_counting() {
+        // Cross-check the rank formula against O(n²) pair counting.
+        let y = [1.0, 0.0, 1.0, 0.0, 1.0, 0.0, 0.0];
+        let s = [0.9, 0.8, 0.7, 0.7, 0.4, 0.2, 0.7];
+        let mut wins = 0.0;
+        let mut pairs = 0.0;
+        for i in 0..y.len() {
+            for j in 0..y.len() {
+                if y[i] >= 0.5 && y[j] < 0.5 {
+                    pairs += 1.0;
+                    if s[i] > s[j] {
+                        wins += 1.0;
+                    } else if s[i] == s[j] {
+                        wins += 0.5;
+                    }
+                }
+            }
+        }
+        assert!((auc(&y, &s) - wins / pairs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_single_class() {
+        assert_eq!(auc(&[1.0, 1.0], &[0.3, 0.7]), 0.5);
+    }
+
+    #[test]
+    fn silhouette_well_separated() {
+        // Two tight, far-apart clusters → silhouette near 1.
+        let x = Matrix::from_rows(&[
+            vec![0.0, 0.0],
+            vec![0.1, 0.0],
+            vec![10.0, 10.0],
+            vec![10.1, 10.0],
+        ]);
+        let s = silhouette_score(&x, &[0, 0, 1, 1]);
+        assert!(s > 0.95, "s={s}");
+        // Mislabeled → negative.
+        let bad = silhouette_score(&x, &[0, 1, 0, 1]);
+        assert!(bad < 0.0, "bad={bad}");
+    }
+
+    #[test]
+    fn silhouette_single_cluster_is_zero() {
+        let x = Matrix::from_rows(&[vec![0.0], vec![1.0], vec![2.0]]);
+        assert_eq!(silhouette_score(&x, &[0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn silhouette_singleton_cluster_contributes_zero() {
+        let x = Matrix::from_rows(&[vec![0.0], vec![0.1], vec![5.0]]);
+        let s = silhouette_score(&x, &[0, 0, 1]);
+        // Points 0,1: a small, b large → ≈1 each; singleton: 0.
+        assert!(s > 0.6 && s < 1.0, "s={s}");
+    }
+
+    #[test]
+    fn ari_identical_and_permuted() {
+        let a = [0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        // Same partition with renamed labels.
+        let b = [2, 2, 0, 0, 1, 1];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_random_near_zero() {
+        // Independent labelings should give ARI ≈ 0 on average.
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from_u64(5);
+        let n = 2000;
+        let a: Vec<usize> = (0..n).map(|_| rng.usize_below(3)).collect();
+        let b: Vec<usize> = (0..n).map(|_| rng.usize_below(3)).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.05, "ari={ari}");
+    }
+
+    #[test]
+    fn support_recovery_cases() {
+        let r = support_recovery(&[1, 2, 3], &[2, 3, 4]);
+        assert!((r.precision - 2.0 / 3.0).abs() < 1e-12);
+        assert!((r.recall - 2.0 / 3.0).abs() < 1e-12);
+        let perfect = support_recovery(&[5, 6], &[6, 5]);
+        assert_eq!(perfect.f1, 1.0);
+        let none = support_recovery(&[], &[1]);
+        assert_eq!(none.precision, 0.0);
+        assert_eq!(none.f1, 0.0);
+    }
+}

@@ -1,0 +1,136 @@
+//! Continuous/discrete distributions on top of [`Rng`](super::Rng).
+
+use super::Rng;
+
+impl Rng {
+    /// Standard normal draw via the Marsaglia polar method.
+    ///
+    /// We deliberately do not cache the second variate: caching makes the
+    /// consumed-stream length depend on call parity, which breaks the
+    /// reproducibility contract when generators are forked mid-sequence.
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Normal draw with the given mean and standard deviation.
+    #[inline]
+    pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Fill `buf` with iid standard normals.
+    pub fn fill_normal(&mut self, buf: &mut [f64]) {
+        for x in buf.iter_mut() {
+            *x = self.normal();
+        }
+    }
+
+    /// Exponential draw with rate `lambda` (inverse-CDF method).
+    pub fn exponential(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        // 1 - U avoids ln(0).
+        -(1.0 - self.next_f64()).ln() / lambda
+    }
+
+    /// Draw from a categorical distribution given (unnormalized,
+    /// non-negative) weights. Returns the selected index.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && total.is_finite(),
+            "categorical: weights must have positive finite sum"
+        );
+        let mut target = self.next_f64() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            debug_assert!(w >= 0.0);
+            target -= w;
+            if target < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1 // floating-point slack: land on the last bucket
+    }
+
+    /// Rademacher draw (±1 with equal probability).
+    #[inline]
+    pub fn rademacher(&mut self) -> f64 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rng::Rng;
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seed_from_u64(17);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.02, "var={var}");
+    }
+
+    #[test]
+    fn normal_with_shift_scale() {
+        let mut rng = Rng::seed_from_u64(19);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal_with(3.0, 2.0)).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!((mean - 3.0).abs() < 0.03, "mean={mean}");
+        assert!((var - 4.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::seed_from_u64(23);
+        let n = 100_000;
+        let mean = (0..n).map(|_| rng.exponential(2.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn categorical_frequencies() {
+        let mut rng = Rng::seed_from_u64(29);
+        let weights = [1.0, 2.0, 7.0];
+        let mut counts = [0usize; 3];
+        let n = 100_000;
+        for _ in 0..n {
+            counts[rng.categorical(&weights)] += 1;
+        }
+        let freqs: Vec<f64> = counts.iter().map(|&c| c as f64 / n as f64).collect();
+        assert!((freqs[0] - 0.1).abs() < 0.01);
+        assert!((freqs[1] - 0.2).abs() < 0.01);
+        assert!((freqs[2] - 0.7).abs() < 0.01);
+    }
+
+    #[test]
+    fn categorical_handles_zero_weights() {
+        let mut rng = Rng::seed_from_u64(31);
+        for _ in 0..1000 {
+            let idx = rng.categorical(&[0.0, 1.0, 0.0]);
+            assert_eq!(idx, 1);
+        }
+    }
+
+    #[test]
+    fn rademacher_balanced() {
+        let mut rng = Rng::seed_from_u64(37);
+        let sum: f64 = (0..100_000).map(|_| rng.rademacher()).sum();
+        assert!(sum.abs() < 2_000.0);
+    }
+}

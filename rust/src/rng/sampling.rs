@@ -1,0 +1,169 @@
+//! Shuffling and sampling utilities used by subproblem construction.
+
+use super::Rng;
+
+impl Rng {
+    /// In-place Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` uniformly at random.
+    ///
+    /// Uses Floyd's algorithm for small `k` relative to `n` (no O(n)
+    /// allocation), falling back to a partial shuffle otherwise.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        if k == 0 {
+            return Vec::new();
+        }
+        if k * 4 <= n {
+            // Floyd's: for j in n-k..n, pick t in [0, j]; insert t or j.
+            let mut chosen: Vec<usize> = Vec::with_capacity(k);
+            for j in (n - k)..n {
+                let t = self.usize_below(j + 1);
+                if chosen.contains(&t) {
+                    chosen.push(j);
+                } else {
+                    chosen.push(t);
+                }
+            }
+            chosen.sort_unstable();
+            chosen
+        } else {
+            let mut idx: Vec<usize> = (0..n).collect();
+            // Partial Fisher–Yates: fix positions 0..k.
+            for i in 0..k {
+                let j = i + self.usize_below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx.sort_unstable();
+            idx
+        }
+    }
+
+    /// Sample `k` distinct elements from `pool` uniformly (returned in
+    /// pool order).
+    pub fn sample_from<T: Copy>(&mut self, pool: &[T], k: usize) -> Vec<T> {
+        self.sample_indices(pool.len(), k)
+            .into_iter()
+            .map(|i| pool[i])
+            .collect()
+    }
+
+    /// Weighted sampling *without* replacement via the Efraimidis–Spirakis
+    /// exponential-keys method: each item gets key `u^(1/w)`; take the `k`
+    /// largest. Items with zero weight are never selected unless fewer than
+    /// `k` positive-weight items exist.
+    pub fn weighted_sample_without_replacement(
+        &mut self,
+        weights: &[f64],
+        k: usize,
+    ) -> Vec<usize> {
+        let n = weights.len();
+        assert!(k <= n);
+        let mut keyed: Vec<(f64, usize)> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| {
+                debug_assert!(w >= 0.0, "negative weight");
+                let key = if w > 0.0 {
+                    // log-key for numerical stability: ln(u)/w
+                    (self.next_f64().max(1e-300)).ln() / w
+                } else {
+                    f64::NEG_INFINITY
+                };
+                (key, i)
+            })
+            .collect();
+        keyed.sort_unstable_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut out: Vec<usize> = keyed.into_iter().take(k).map(|(_, i)| i).collect();
+        out.sort_unstable();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::rng::Rng;
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Rng::seed_from_u64(41);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+        assert_ne!(xs, (0..50).collect::<Vec<_>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Rng::seed_from_u64(43);
+        for (n, k) in [(10, 3), (100, 90), (5, 5), (1000, 10), (7, 0)] {
+            let s = rng.sample_indices(n, k);
+            assert_eq!(s.len(), k);
+            for w in s.windows(2) {
+                assert!(w[0] < w[1], "not strictly sorted/distinct: {s:?}");
+            }
+            assert!(s.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn sample_indices_uniformity() {
+        // Each of 10 items should appear in a k=3 sample with prob 0.3.
+        let mut rng = Rng::seed_from_u64(47);
+        let mut counts = [0usize; 10];
+        let reps = 30_000;
+        for _ in 0..reps {
+            for i in rng.sample_indices(10, 3) {
+                counts[i] += 1;
+            }
+        }
+        for &c in &counts {
+            let f = c as f64 / reps as f64;
+            assert!((f - 0.3).abs() < 0.02, "freq={f}");
+        }
+    }
+
+    #[test]
+    fn weighted_sample_prefers_heavy_items() {
+        let mut rng = Rng::seed_from_u64(53);
+        let weights = [0.01, 0.01, 10.0, 10.0, 0.01];
+        let mut hit2 = 0;
+        let reps = 2000;
+        for _ in 0..reps {
+            let s = rng.weighted_sample_without_replacement(&weights, 2);
+            assert_eq!(s.len(), 2);
+            if s.contains(&2) && s.contains(&3) {
+                hit2 += 1;
+            }
+        }
+        assert!(hit2 as f64 / reps as f64 > 0.95, "hit2={hit2}");
+    }
+
+    #[test]
+    fn weighted_sample_zero_weight_excluded() {
+        let mut rng = Rng::seed_from_u64(59);
+        let weights = [0.0, 1.0, 1.0, 0.0];
+        for _ in 0..500 {
+            let s = rng.weighted_sample_without_replacement(&weights, 2);
+            assert_eq!(s, vec![1, 2]);
+        }
+    }
+
+    #[test]
+    fn sample_from_preserves_pool_values() {
+        let mut rng = Rng::seed_from_u64(61);
+        let pool = [10usize, 20, 30, 40, 50];
+        let s = rng.sample_from(&pool, 3);
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|v| pool.contains(v)));
+    }
+}

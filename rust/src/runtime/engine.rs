@@ -1,0 +1,310 @@
+//! The PJRT engine: manifest parsing, lazy compilation, shape-bucket
+//! selection, padding, and execution of the AOT artifacts.
+
+use crate::json::Json;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::solvers::kmeans::{KMeansConfig, KMeansModel};
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+/// One shape-specialized artifact from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub file: String,
+    pub n: usize,
+    /// Feature count (screen/iht) — 0 for lloyd entries.
+    pub p: usize,
+    /// Sparsity k (iht) / cluster count (lloyd) — 0 elsewhere.
+    pub k: usize,
+    /// Dimension d (lloyd only).
+    pub d: usize,
+    /// IHT iterations (iht only).
+    pub iters: usize,
+}
+
+/// Loads artifacts and executes them on the PJRT CPU client.
+pub struct Engine {
+    dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+    client: xla::PjRtClient,
+    // File name → compiled executable (lazy, memoized). Single-threaded
+    // interior mutability: the coordinator drives PJRT from one thread.
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Engine({} entries from {:?})", self.entries.len(), self.dir)
+    }
+}
+
+impl Engine {
+    /// Parse `dir/manifest.json` and start the PJRT CPU client.
+    pub fn load(dir: &str) -> Result<Engine> {
+        let dir = PathBuf::from(dir);
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}"))?;
+        let doc = Json::parse(&text).context("parsing manifest.json")?;
+        let entries_json = doc
+            .require("entries")?
+            .as_array()
+            .ok_or_else(|| anyhow!("manifest `entries` must be an array"))?;
+        let geti = |e: &Json, key: &str| -> usize {
+            e.get(key).and_then(Json::as_usize).unwrap_or(0)
+        };
+        let mut entries = Vec::new();
+        for e in entries_json {
+            entries.push(ManifestEntry {
+                kind: e
+                    .require("kind")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("entry `kind` must be a string"))?
+                    .to_string(),
+                file: e
+                    .require("file")?
+                    .as_str()
+                    .ok_or_else(|| anyhow!("entry `file` must be a string"))?
+                    .to_string(),
+                n: geti(e, "n"),
+                p: geti(e, "p"),
+                k: geti(e, "k"),
+                d: geti(e, "d"),
+                iters: geti(e, "iters"),
+            });
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(Engine { dir, entries, client, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// All manifest entries.
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+
+    /// Table of entries for `backbone-learn artifacts`.
+    pub fn describe(&self) -> String {
+        let mut out = format!(
+            "{} artifacts on platform `{}`:\n",
+            self.entries.len(),
+            self.client.platform_name()
+        );
+        for e in &self.entries {
+            out.push_str(&format!(
+                "  {:<8} n={:<5} p={:<5} k={:<3} d={:<2} iters={:<4} {}\n",
+                e.kind, e.n, e.p, e.k, e.d, e.iters, e.file
+            ));
+        }
+        out
+    }
+
+    fn compile(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {file}: {e}"))?,
+        );
+        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    fn literal_matrix_f32(m: &Matrix) -> Result<xla::Literal> {
+        let flat = m.to_f32();
+        xla::Literal::vec1(&flat)
+            .reshape(&[m.rows() as i64, m.cols() as i64])
+            .map_err(|e| anyhow!("reshape literal: {e}"))
+    }
+
+    fn literal_vec_f32(v: &[f64]) -> xla::Literal {
+        let flat: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        xla::Literal::vec1(&flat)
+    }
+
+    fn run(&self, file: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let exe = self.compile(file)?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {file}: {e}"))?;
+        result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {file}: {e}"))
+    }
+
+    // --- Entry selection ---------------------------------------------------
+
+    fn find_screen(&self, n: usize, p: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "screen" && e.n == n && e.p >= p)
+            .min_by_key(|e| e.p)
+    }
+
+    fn find_iht(&self, n: usize, p: usize, k: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.kind == "iht" && e.n == n && e.k == k && e.p >= p)
+            .min_by_key(|e| e.p)
+    }
+
+    fn find_lloyd(&self, n: usize, d: usize, k: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == "lloyd" && e.n == n && e.d == d && e.k == k)
+    }
+
+    /// Whether a Lloyd artifact exists for this exact shape.
+    pub fn has_lloyd(&self, n: usize, d: usize, k: usize) -> bool {
+        self.find_lloyd(n, d, k).is_some()
+    }
+
+    // --- Hot-path entry points ----------------------------------------------
+    //
+    // All return Ok(None) when no shape bucket matches (caller falls back
+    // to the native implementation) and Err only on real failures.
+
+    /// |corr(x_j, y)| screening utilities via the AOT artifact.
+    pub fn screen_utilities(&self, x: &Matrix, y: &[f64]) -> Result<Option<Vec<f64>>> {
+        let Some(entry) = self.find_screen(x.rows(), x.cols()) else {
+            return Ok(None);
+        };
+        let xp = x.pad_columns(entry.p);
+        let x_lit = Self::literal_matrix_f32(&xp)?;
+        let y_lit = Self::literal_vec_f32(y);
+        let out = self.run(&entry.file, &[x_lit, y_lit])?;
+        let u = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling screen output: {e}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("reading screen output: {e}"))?;
+        if u.len() != entry.p {
+            bail!("screen output length {} != bucket p {}", u.len(), entry.p);
+        }
+        Ok(Some(u[..x.cols()].iter().map(|&v| v as f64).collect()))
+    }
+
+    /// IHT support via the AOT artifact: indices of nonzero coefficients
+    /// of the k-sparse solve (padded columns can never enter — they have
+    /// zero gradient).
+    pub fn iht_support(&self, x: &Matrix, y: &[f64], k: usize) -> Result<Option<Vec<usize>>> {
+        let Some(entry) = self.find_iht(x.rows(), x.cols(), k) else {
+            return Ok(None);
+        };
+        let xp = x.pad_columns(entry.p);
+        let x_lit = Self::literal_matrix_f32(&xp)?;
+        let y_lit = Self::literal_vec_f32(y);
+        let out = self.run(&entry.file, &[x_lit, y_lit])?;
+        let beta = out
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling iht output: {e}"))?
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("reading iht output: {e}"))?;
+        let mut support: Vec<usize> = beta
+            .iter()
+            .take(x.cols())
+            .enumerate()
+            .filter(|(_, &b)| b != 0.0)
+            .map(|(j, _)| j)
+            .collect();
+        // The artifact thresholds with `|z| >= kth-largest`, so magnitude
+        // ties can momentarily admit > k entries: keep the k largest.
+        if support.len() > k {
+            support.sort_by(|&a, &b| {
+                beta[b].abs().partial_cmp(&beta[a].abs()).unwrap()
+            });
+            support.truncate(k);
+            support.sort_unstable();
+        }
+        Ok(Some(support))
+    }
+
+    /// One Lloyd step via the AOT artifact → (centroids, labels, inertia).
+    pub fn lloyd_step(
+        &self,
+        points: &Matrix,
+        centroids: &Matrix,
+    ) -> Result<Option<(Matrix, Vec<usize>, f64)>> {
+        let (n, d) = (points.rows(), points.cols());
+        let k = centroids.rows();
+        let Some(entry) = self.find_lloyd(n, d, k) else {
+            return Ok(None);
+        };
+        let p_lit = Self::literal_matrix_f32(points)?;
+        let c_lit = Self::literal_matrix_f32(centroids)?;
+        let out = self.run(&entry.file, &[p_lit, c_lit])?;
+        let (c_out, l_out, i_out) = out
+            .to_tuple3()
+            .map_err(|e| anyhow!("untupling lloyd output: {e}"))?;
+        let c_flat = c_out.to_vec::<f32>().map_err(|e| anyhow!("centroids: {e}"))?;
+        let labels_raw = l_out.to_vec::<i32>().map_err(|e| anyhow!("labels: {e}"))?;
+        let inertia = i_out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("inertia: {e}"))?
+            .first()
+            .copied()
+            .unwrap_or(f32::NAN) as f64;
+        let centroids_new =
+            Matrix::from_vec(k, d, c_flat.iter().map(|&v| v as f64).collect());
+        let labels: Vec<usize> = labels_raw.iter().map(|&l| l.max(0) as usize).collect();
+        Ok(Some((centroids_new, labels, inertia)))
+    }
+
+    /// Full k-means via AOT Lloyd steps (native kmeans++ seeding, native
+    /// convergence control). Returns None if no artifact matches.
+    pub fn kmeans_via_lloyd(
+        &self,
+        x: &Matrix,
+        cfg: &KMeansConfig,
+        rng: &mut Rng,
+    ) -> Result<Option<KMeansModel>> {
+        if self.find_lloyd(x.rows(), x.cols(), cfg.k).is_none() {
+            return Ok(None);
+        }
+        let mut best: Option<KMeansModel> = None;
+        for _ in 0..cfg.n_init.max(1) {
+            // Native kmeans++ seeding (branchy / RNG-driven).
+            let seeds = crate::solvers::kmeans::kmeans_fit(
+                x,
+                &KMeansConfig { k: cfg.k, n_init: 1, max_iter: 0, tol: cfg.tol },
+                rng,
+            );
+            let mut centroids = seeds.centroids;
+            let mut labels = vec![0usize; x.rows()];
+            let mut inertia = f64::INFINITY;
+            let mut iterations = 0;
+            for it in 0..cfg.max_iter {
+                iterations = it + 1;
+                let Some((c_new, l_new, i_new)) = self.lloyd_step(x, &centroids)? else {
+                    return Ok(None);
+                };
+                let movement: f64 = (0..cfg.k)
+                    .map(|c| crate::linalg::sqdist(centroids.row(c), c_new.row(c)))
+                    .sum();
+                centroids = c_new;
+                labels = l_new;
+                inertia = i_new;
+                if movement < cfg.tol {
+                    break;
+                }
+            }
+            let model = KMeansModel { labels, centroids, inertia, iterations };
+            if best.as_ref().map_or(true, |b| model.inertia < b.inertia) {
+                best = Some(model);
+            }
+        }
+        Ok(best)
+    }
+}

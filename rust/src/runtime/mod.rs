@@ -1,0 +1,94 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and serves
+//! them to the backbone hot paths.
+//!
+//! `make artifacts` (Python, build-time only) lowers the L2 entry points
+//! to HLO **text** under `artifacts/` plus a `manifest.json` describing
+//! each shape-specialized entry. At run time, [`Engine`] parses the
+//! manifest, compiles executables lazily through the PJRT CPU client
+//! (`xla` crate), and memoizes them. Python never runs on this path.
+//!
+//! Shape policy:
+//! - **rows (n) must match exactly** — padding rows would corrupt the
+//!   column means inside `screen_utilities` and the residuals inside
+//!   `iht_solve`;
+//! - **feature counts are bucketed**: inputs are zero-padded on the right
+//!   up to the artifact's `p`. Zero columns produce zero utilities and are
+//!   never selected by IHT's top-k (proven in `python/tests/test_model.py`
+//!   and re-checked in `rust/tests/integration_runtime.rs`).
+//!
+//! Every consumer has a pure-Rust fallback ([`Backend`] decides), so the
+//! system works without artifacts — just without the AOT fast path.
+
+mod engine;
+
+pub use engine::{Engine, ManifestEntry};
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::solvers::cd::{l0_fit, polish_to_model, L0Config, L0Model};
+use crate::solvers::kmeans::{kmeans_fit, KMeansConfig, KMeansModel};
+use std::sync::Arc;
+
+/// Which engine executes dense numeric hot paths.
+#[derive(Debug, Clone, Default)]
+pub enum Backend {
+    /// Pure-Rust implementations.
+    #[default]
+    Native,
+    /// AOT JAX/Pallas artifacts via PJRT, with native fallback when no
+    /// shape bucket matches.
+    Pjrt(Arc<Engine>),
+}
+
+impl Backend {
+    /// Load the PJRT backend from an artifacts directory.
+    pub fn pjrt_from_dir(dir: &str) -> anyhow::Result<Backend> {
+        Ok(Backend::Pjrt(Arc::new(Engine::load(dir)?)))
+    }
+
+    /// True if this backend has a live PJRT engine.
+    pub fn is_pjrt(&self) -> bool {
+        matches!(self, Backend::Pjrt(_))
+    }
+
+    /// Screening utilities |corr(x_j, y)|.
+    pub fn correlation_utilities(&self, x: &Matrix, y: &[f64]) -> Vec<f64> {
+        if let Backend::Pjrt(engine) = self {
+            if let Ok(Some(u)) = engine.screen_utilities(x, y) {
+                return u;
+            }
+        }
+        crate::backbone::screen::correlation_utilities(x, y)
+    }
+
+    /// L0 heuristic subproblem fit (IHT support + ridge polish on the PJRT
+    /// path; full native CD/IHT/swap heuristic otherwise).
+    pub fn l0_subproblem_fit(&self, x: &Matrix, y: &[f64], cfg: &L0Config) -> L0Model {
+        if let Backend::Pjrt(engine) = self {
+            if let Ok(Some(support)) = engine.iht_support(x, y, cfg.k) {
+                return polish_to_model(x, y, &support, cfg.lambda2);
+            }
+        }
+        l0_fit(x, y, cfg)
+    }
+
+    /// k-means fit: kmeans++ seeding is always native (cheap, branchy);
+    /// the Lloyd iterations run through the AOT `lloyd_step` artifact when
+    /// a shape bucket matches.
+    pub fn kmeans(&self, x: &Matrix, cfg: &KMeansConfig, rng: &mut Rng) -> KMeansModel {
+        if let Backend::Pjrt(engine) = self {
+            if engine.has_lloyd(x.rows(), x.cols(), cfg.k) {
+                if let Ok(Some(model)) = engine.kmeans_via_lloyd(x, cfg, rng) {
+                    return model;
+                }
+            }
+        }
+        kmeans_fit(x, cfg, rng)
+    }
+}
+
+/// Human-readable summary of the artifacts directory.
+pub fn describe_artifacts(dir: &str) -> anyhow::Result<String> {
+    let engine = Engine::load(dir)?;
+    Ok(engine.describe())
+}

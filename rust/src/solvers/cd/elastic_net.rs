@@ -1,0 +1,379 @@
+//! GLMNet-style elastic-net coordinate descent.
+//!
+//! Minimizes (with standardized columns handled internally)
+//!
+//! ```text
+//! (1/2n) ‖y − β₀ − Xβ‖² + λ [ α‖β‖₁ + (1−α)/2 ‖β‖₂² ]
+//! ```
+//!
+//! via cyclic coordinate descent with covariance-free residual updates, an
+//! active-set outer loop (iterate over nonzeros until stable, then one
+//! full sweep to admit violators), and a warm-started geometric λ path
+//! from `λ_max` (smallest λ with an all-zero solution) down — the same
+//! scheme as Friedman et al.'s `glmnet`.
+
+use crate::linalg::{dot, Matrix};
+use super::soft_threshold;
+
+/// Elastic-net hyperparameters.
+#[derive(Debug, Clone)]
+pub struct ElasticNetConfig {
+    /// L1 ratio α ∈ (0, 1]; α = 1 is the lasso.
+    pub alpha: f64,
+    /// Number of λ values on the path.
+    pub n_lambda: usize,
+    /// `λ_min = lambda_min_ratio · λ_max`.
+    pub lambda_min_ratio: f64,
+    /// Convergence tolerance on the max coefficient change per sweep.
+    pub tol: f64,
+    /// Max coordinate-descent sweeps per λ.
+    pub max_iter: usize,
+}
+
+impl Default for ElasticNetConfig {
+    fn default() -> Self {
+        Self { alpha: 1.0, n_lambda: 50, lambda_min_ratio: 1e-3, tol: 1e-7, max_iter: 1000 }
+    }
+}
+
+/// A fitted elastic-net model (coefficients on the *original* scale).
+#[derive(Debug, Clone)]
+pub struct ElasticNetModel {
+    pub beta: Vec<f64>,
+    pub intercept: f64,
+    pub lambda: f64,
+}
+
+impl ElasticNetModel {
+    pub fn predict(&self, x: &Matrix) -> Vec<f64> {
+        x.matvec(&self.beta).iter().map(|v| v + self.intercept).collect()
+    }
+
+    /// Indices of nonzero coefficients.
+    pub fn support(&self) -> Vec<usize> {
+        self.beta
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b != 0.0)
+            .map(|(j, _)| j)
+            .collect()
+    }
+}
+
+/// A full regularization path (λ descending).
+#[derive(Debug, Clone)]
+pub struct ElasticNetPath {
+    pub models: Vec<ElasticNetModel>,
+}
+
+impl ElasticNetPath {
+    /// Model with the best R² on a validation set.
+    pub fn select_best(&self, x_val: &Matrix, y_val: &[f64]) -> &ElasticNetModel {
+        self.models
+            .iter()
+            .max_by(|a, b| {
+                let ra = crate::metrics::r2_score(y_val, &a.predict(x_val));
+                let rb = crate::metrics::r2_score(y_val, &b.predict(x_val));
+                ra.partial_cmp(&rb).unwrap()
+            })
+            .expect("empty path")
+    }
+
+    /// Union of supports along the path (what the backbone unions into B
+    /// when GLMNet is the subproblem fitter).
+    pub fn support_union(&self) -> Vec<usize> {
+        let mut s: Vec<usize> = self.models.iter().flat_map(|m| m.support()).collect();
+        s.sort_unstable();
+        s.dedup();
+        s
+    }
+}
+
+/// Internal standardized problem state shared by single fits and paths.
+///
+/// The design is stored **transposed** (`xt`, p × n) so each coordinate's
+/// column is a contiguous slice — the CD inner loop is a dot + axpy over
+/// `x_j`, and column gathers through a row-major matrix were the dominant
+/// cache-miss source (§Perf: ~1.9 s → ~0.35 s for a 50-λ path at
+/// 200 × 1000).
+struct Workspace {
+    xt: Matrix,               // standardized design, transposed (p × n)
+    ys: Vec<f64>,             // centered response
+    x_scale: Vec<(f64, f64)>, // per-column (mean, scale)
+    y_mean: f64,
+}
+
+impl Workspace {
+    fn new(x: &Matrix, y: &[f64]) -> Self {
+        let mut xs = x.clone();
+        let x_scale = xs.standardize_columns();
+        let y_mean = crate::linalg::mean(y);
+        let ys: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+        Self { xt: xs.transpose(), ys, x_scale, y_mean }
+    }
+
+    /// Map standardized-scale coefficients back to the original scale.
+    fn denormalize(&self, beta_std: &[f64], lambda: f64) -> ElasticNetModel {
+        let mut beta = vec![0.0; beta_std.len()];
+        let mut intercept = self.y_mean;
+        for (j, &bs) in beta_std.iter().enumerate() {
+            if bs != 0.0 {
+                let (mean, scale) = self.x_scale[j];
+                beta[j] = bs / scale;
+                intercept -= beta[j] * mean;
+            }
+        }
+        ElasticNetModel { beta, intercept, lambda }
+    }
+
+    /// λ_max: the smallest λ for which β = 0 is optimal.
+    fn lambda_max(&self, alpha: f64) -> f64 {
+        let n = self.xt.cols() as f64;
+        let grad = self.xt.matvec(&self.ys);
+        let max_abs = grad.iter().fold(0.0f64, |m, g| m.max(g.abs()));
+        max_abs / (n * alpha.max(1e-3))
+    }
+
+    /// Cyclic CD at a fixed λ, warm-started from `beta`; `residual` must
+    /// equal `ys − Xs·beta` on entry and is maintained on exit.
+    fn descend(
+        &self,
+        beta: &mut [f64],
+        residual: &mut [f64],
+        lambda: f64,
+        cfg: &ElasticNetConfig,
+    ) {
+        let n = self.xt.cols() as f64;
+        let p = self.xt.rows();
+        let l1 = lambda * cfg.alpha;
+        let l2 = lambda * (1.0 - cfg.alpha);
+        // Standardized columns have ‖x_j‖²/n = 1, so the coordinate update
+        // denominator is 1 + l2.
+        let denom = 1.0 + l2;
+
+        let sweep = |beta: &mut [f64], residual: &mut [f64], active_only: bool| -> f64 {
+            let mut max_delta = 0.0f64;
+            for j in 0..p {
+                let old = beta[j];
+                if active_only && old == 0.0 {
+                    continue;
+                }
+                let col = self.xt.row(j); // contiguous x_j
+                // ρ_j = (1/n) x_jᵀ r + old (covariance-free partial residual)
+                let xj_r = dot(col, residual);
+                let rho = xj_r / n + old;
+                let new = soft_threshold(rho, l1) / denom;
+                if new != old {
+                    let delta = new - old;
+                    crate::linalg::axpy(-delta, col, residual);
+                    beta[j] = new;
+                    max_delta = max_delta.max(delta.abs());
+                }
+            }
+            max_delta
+        };
+
+        let mut iter = 0;
+        loop {
+            // Full sweep to admit new actives.
+            let delta_full = sweep(beta, residual, false);
+            iter += 1;
+            if delta_full < cfg.tol || iter >= cfg.max_iter {
+                break;
+            }
+            // Inner active-set sweeps until stable.
+            loop {
+                let delta = sweep(beta, residual, true);
+                iter += 1;
+                if delta < cfg.tol || iter >= cfg.max_iter {
+                    break;
+                }
+            }
+            if iter >= cfg.max_iter {
+                break;
+            }
+        }
+    }
+}
+
+/// Fit a single elastic-net model at the given λ.
+pub fn elastic_net_fit(
+    x: &Matrix,
+    y: &[f64],
+    lambda: f64,
+    cfg: &ElasticNetConfig,
+) -> ElasticNetModel {
+    assert_eq!(x.rows(), y.len());
+    let ws = Workspace::new(x, y);
+    let mut beta = vec![0.0; x.cols()];
+    let mut residual = ws.ys.clone();
+    ws.descend(&mut beta, &mut residual, lambda, cfg);
+    ws.denormalize(&beta, lambda)
+}
+
+/// Compute the warm-started regularization path (λ descending from λ_max).
+pub fn elastic_net_path(x: &Matrix, y: &[f64], cfg: &ElasticNetConfig) -> ElasticNetPath {
+    assert_eq!(x.rows(), y.len());
+    assert!(cfg.n_lambda >= 1);
+    let ws = Workspace::new(x, y);
+    let lam_max = ws.lambda_max(cfg.alpha).max(1e-12);
+    let lam_min = lam_max * cfg.lambda_min_ratio;
+    let ratio = if cfg.n_lambda == 1 {
+        1.0
+    } else {
+        (lam_min / lam_max).powf(1.0 / (cfg.n_lambda - 1) as f64)
+    };
+
+    let mut beta = vec![0.0; x.cols()];
+    let mut residual = ws.ys.clone();
+    let mut models = Vec::with_capacity(cfg.n_lambda);
+    let mut lambda = lam_max;
+    for _ in 0..cfg.n_lambda {
+        ws.descend(&mut beta, &mut residual, lambda, cfg);
+        models.push(ws.denormalize(&beta, lambda));
+        lambda *= ratio;
+    }
+    ElasticNetPath { models }
+}
+
+/// In-sample R² of a model (convenience used by benches).
+pub fn r2_in_sample(model: &ElasticNetModel, x: &Matrix, y: &[f64]) -> f64 {
+    crate::metrics::r2_score(y, &model.predict(x))
+}
+
+#[allow(dead_code)]
+fn residual_check(ws: &Workspace, beta: &[f64], residual: &[f64]) -> f64 {
+    // Debug helper: ‖(ys − Xs β) − residual‖∞.
+    let pred = ws.xt.matvec_t(beta);
+    ws.ys
+        .iter()
+        .zip(&pred)
+        .zip(residual)
+        .map(|((y, p), r)| ((y - p) - r).abs())
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse_regression::{generate, SparseRegressionConfig};
+    use crate::rng::Rng;
+
+    fn toy_data() -> (Matrix, Vec<f64>) {
+        // y = 2·x0 − 3·x2 + noise-free, x1 pure noise.
+        let mut rng = Rng::seed_from_u64(1);
+        let n = 60;
+        let mut x = Matrix::zeros(n, 3);
+        for i in 0..n {
+            for j in 0..3 {
+                x.set(i, j, rng.normal());
+            }
+        }
+        let y: Vec<f64> = (0..n).map(|i| 2.0 * x.get(i, 0) - 3.0 * x.get(i, 2)).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn lasso_recovers_sparse_signal() {
+        let (x, y) = toy_data();
+        let cfg = ElasticNetConfig::default();
+        let m = elastic_net_fit(&x, &y, 0.01, &cfg);
+        assert!((m.beta[0] - 2.0).abs() < 0.1, "beta={:?}", m.beta);
+        assert!((m.beta[2] + 3.0).abs() < 0.1);
+        assert!(m.beta[1].abs() < 0.05);
+    }
+
+    #[test]
+    fn heavy_lambda_kills_all_coefficients() {
+        let (x, y) = toy_data();
+        let cfg = ElasticNetConfig::default();
+        let ws_lambda = {
+            let ws = super::Workspace::new(&x, &y);
+            ws.lambda_max(1.0)
+        };
+        let m = elastic_net_fit(&x, &y, ws_lambda * 1.01, &cfg);
+        assert!(m.beta.iter().all(|&b| b == 0.0), "beta={:?}", m.beta);
+    }
+
+    #[test]
+    fn path_is_monotone_in_sparsity_head() {
+        let (x, y) = toy_data();
+        let cfg = ElasticNetConfig { n_lambda: 20, ..Default::default() };
+        let path = elastic_net_path(&x, &y, &cfg);
+        assert_eq!(path.models.len(), 20);
+        // First model (λ_max) is all-zero; last is dense(ish).
+        assert_eq!(path.models[0].support().len(), 0);
+        assert!(path.models.last().unwrap().support().len() >= 2);
+        // λ strictly decreasing.
+        for w in path.models.windows(2) {
+            assert!(w[1].lambda < w[0].lambda);
+        }
+    }
+
+    #[test]
+    fn path_end_matches_cold_fit() {
+        let (x, y) = toy_data();
+        let cfg = ElasticNetConfig { n_lambda: 30, ..Default::default() };
+        let path = elastic_net_path(&x, &y, &cfg);
+        let last = path.models.last().unwrap();
+        let cold = elastic_net_fit(&x, &y, last.lambda, &cfg);
+        for (a, b) in last.beta.iter().zip(&cold.beta) {
+            assert!((a - b).abs() < 1e-5, "warm {a} vs cold {b}");
+        }
+    }
+
+    #[test]
+    fn ridge_component_keeps_correlated_pair() {
+        // Two highly correlated informative columns: lasso picks one,
+        // elastic net (α = 0.3) keeps both.
+        let mut rng = Rng::seed_from_u64(2);
+        let n = 100;
+        let mut x = Matrix::zeros(n, 2);
+        for i in 0..n {
+            let z = rng.normal();
+            x.set(i, 0, z + 0.01 * rng.normal());
+            x.set(i, 1, z + 0.01 * rng.normal());
+        }
+        let y: Vec<f64> = (0..n).map(|i| x.get(i, 0) + x.get(i, 1)).collect();
+        let enet = elastic_net_fit(
+            &x,
+            &y,
+            0.1,
+            &ElasticNetConfig { alpha: 0.3, ..Default::default() },
+        );
+        assert!(enet.beta[0] != 0.0 && enet.beta[1] != 0.0, "beta={:?}", enet.beta);
+        let ratio = enet.beta[0] / enet.beta[1];
+        assert!(ratio > 0.5 && ratio < 2.0, "ratio={ratio}");
+    }
+
+    #[test]
+    fn intercept_handling() {
+        // y = 10 + x0 → intercept must absorb the offset.
+        let mut rng = Rng::seed_from_u64(3);
+        let n = 50;
+        let mut x = Matrix::zeros(n, 1);
+        for i in 0..n {
+            x.set(i, 0, rng.normal());
+        }
+        let y: Vec<f64> = (0..n).map(|i| 10.0 + x.get(i, 0)).collect();
+        let m = elastic_net_fit(&x, &y, 0.001, &ElasticNetConfig::default());
+        assert!((m.intercept - 10.0).abs() < 0.1, "intercept={}", m.intercept);
+        let r2 = crate::metrics::r2_score(&y, &m.predict(&x));
+        assert!(r2 > 0.99);
+    }
+
+    #[test]
+    fn path_on_generated_data_reaches_high_r2() {
+        let cfg_data = SparseRegressionConfig { n: 100, p: 50, k: 5, rho: 0.1, snr: 5.0 };
+        let data = generate(&cfg_data, &mut Rng::seed_from_u64(4));
+        let path = elastic_net_path(&data.x, &data.y, &ElasticNetConfig::default());
+        let best = path.select_best(&data.x, &data.y);
+        let r2 = crate::metrics::r2_score(&data.y, &best.predict(&data.x));
+        assert!(r2 > 0.75, "r2={r2}");
+        // Union of supports along the path contains the true support.
+        let union = path.support_union();
+        for j in &data.support_true {
+            assert!(union.contains(j), "missing true feature {j}");
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! Coordinate-descent solvers for sparse regression heuristics.
+//!
+//! - [`elastic_net`] — GLMNet-style cyclic coordinate descent with an
+//!   active-set strategy and a warm-started regularization path.
+//! - [`l0`] — L0Learn-style heuristic for L0L2-regularized regression:
+//!   iterative hard thresholding (IHT) with ridge polishing plus local
+//!   swap search.
+//!
+//! Both serve two roles in the paper's experiments: standalone heuristic
+//! *baselines* (the GLMNet row of Table 1) and the backbone's
+//! `fit_subproblem` workhorse.
+
+pub mod elastic_net;
+pub mod l0;
+
+pub use elastic_net::{
+    elastic_net_fit, elastic_net_path, ElasticNetConfig, ElasticNetModel, ElasticNetPath,
+};
+pub use l0::{l0_fit, polish_to_model, L0Config, L0Model};
+
+/// Soft-thresholding operator `S(z, γ) = sign(z) · max(|z| − γ, 0)`.
+#[inline]
+pub fn soft_threshold(z: f64, gamma: f64) -> f64 {
+    if z > gamma {
+        z - gamma
+    } else if z < -gamma {
+        z + gamma
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::soft_threshold;
+
+    #[test]
+    fn soft_threshold_cases() {
+        assert_eq!(soft_threshold(3.0, 1.0), 2.0);
+        assert_eq!(soft_threshold(-3.0, 1.0), -2.0);
+        assert_eq!(soft_threshold(0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(-0.5, 1.0), 0.0);
+        assert_eq!(soft_threshold(1.0, 1.0), 0.0);
+    }
+}

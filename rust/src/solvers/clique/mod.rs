@@ -1,0 +1,638 @@
+//! Exact clustering via clique partitioning (Grötschel & Wakabayashi,
+//! 1989) — the "Exact" method of Table 1's clustering block and the
+//! backbone's reduced-problem solver.
+//!
+//! Pair formulation: binary `x_{ij}` (i < j) indicates that points i and j
+//! share a cluster; the objective minimizes `Σ d_{ij} x_{ij}` with
+//! `d_{ij} = ‖x_i − x_j‖²` (the paper's `f(ζ; X)` after summing the
+//! per-cluster ζ's into a single co-clustering indicator). Constraints:
+//!
+//! - **transitivity** triangles `x_{ij} + x_{jk} − x_{ik} ≤ 1` (all three
+//!   rotations) — generated lazily, the GW cutting-plane scheme;
+//! - **min cluster size** `b`: degree rows `Σ_j x_{ij} ≥ b − 1`;
+//! - **at most k clusters**: pigeonhole cuts `Σ_{(i,j)⊆S} x_{ij} ≥ 1` for
+//!   any (k+1)-subset `S` of pairwise-separated points — also lazy;
+//! - **backbone restriction**: pairs outside the allowed set are fixed to
+//!   0 (the paper's `z_{it} + z_{jt} ≤ 1 ∀(i,j) ∉ B` after aggregation).
+//!
+//! Upper bounds `x ≤ 1` are *dropped* from the LP (a valid relaxation)
+//! and enforced lazily, which keeps the dense tableau narrow enough that
+//! honest work happens before the budget expires even at Table 1's
+//! (n = 200) scale — where, like the paper's Exact row, the solver times
+//! out and returns its incumbent.
+
+use crate::linalg::{sqdist, Matrix};
+use crate::solvers::kmeans::{kmeans_fit, KMeansConfig};
+use crate::solvers::lp::{Constraint, LinearProgram, Sense};
+use crate::solvers::mip::{mip_solve, Callbacks, Mip, MipConfig};
+use crate::solvers::SolveStatus;
+use crate::util::Budget;
+use anyhow::Result;
+
+/// Exact-clustering configuration.
+#[derive(Debug, Clone)]
+pub struct CliqueConfig {
+    /// Maximum number of clusters (the paper's target k).
+    pub k: usize,
+    /// Minimum cluster size b.
+    pub min_cluster_size: usize,
+    /// Restrict co-clustering to these pairs (the backbone set B); `None`
+    /// allows all pairs.
+    pub allowed_pairs: Option<Vec<(usize, usize)>>,
+    /// Max lazy cuts added per separation round.
+    pub max_cuts_per_round: usize,
+}
+
+impl Default for CliqueConfig {
+    fn default() -> Self {
+        Self { k: 5, min_cluster_size: 1, allowed_pairs: None, max_cuts_per_round: 200 }
+    }
+}
+
+/// Result of an exact clustering solve.
+#[derive(Debug, Clone)]
+pub struct CliqueResult {
+    /// Cluster label per point.
+    pub labels: Vec<usize>,
+    /// Within-cluster pair cost Σ d_ij over co-clustered pairs.
+    pub objective: f64,
+    pub lower_bound: f64,
+    pub gap: f64,
+    pub status: SolveStatus,
+    pub nodes_explored: usize,
+    pub cuts_added: usize,
+    pub elapsed_secs: f64,
+}
+
+/// Pair index helper: linear index of pair (i, j), i < j, among C(n, 2).
+#[inline]
+pub fn pair_index(n: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i < j && j < n);
+    i * n - i * (i + 1) / 2 + (j - i - 1)
+}
+
+/// Pairwise squared-distance objective weights.
+fn pair_costs(x: &Matrix) -> Vec<f64> {
+    let n = x.rows();
+    let mut d = vec![0.0; n * (n - 1) / 2];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            d[pair_index(n, i, j)] = sqdist(x.row(i), x.row(j));
+        }
+    }
+    d
+}
+
+/// Labels → pair vector (1.0 where co-clustered).
+pub fn labels_to_pairs(n: usize, labels: &[usize]) -> Vec<f64> {
+    let mut x = vec![0.0; n * (n - 1) / 2];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if labels[i] == labels[j] {
+                x[pair_index(n, i, j)] = 1.0;
+            }
+        }
+    }
+    x
+}
+
+/// Pair vector (integral, transitive) → labels via connected components.
+pub fn pairs_to_labels(n: usize, x: &[f64]) -> Vec<usize> {
+    let mut labels = vec![usize::MAX; n];
+    let mut next = 0;
+    for i in 0..n {
+        if labels[i] != usize::MAX {
+            continue;
+        }
+        // BFS over co-clustering edges.
+        let mut queue = vec![i];
+        labels[i] = next;
+        while let Some(u) = queue.pop() {
+            for v in 0..n {
+                if v == u || labels[v] != usize::MAX {
+                    continue;
+                }
+                let (a, b) = if u < v { (u, v) } else { (v, u) };
+                if x[pair_index(n, a, b)] > 0.5 {
+                    labels[v] = next;
+                    queue.push(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    labels
+}
+
+/// Objective of a labeling under the pair costs.
+pub fn labels_objective(x: &Matrix, labels: &[usize]) -> f64 {
+    let n = x.rows();
+    let mut obj = 0.0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if labels[i] == labels[j] {
+                obj += sqdist(x.row(i), x.row(j));
+            }
+        }
+    }
+    obj
+}
+
+/// Make a labeling feasible for (k, b): at most k clusters, each of size
+/// ≥ b. Merges undersized clusters into their nearest (centroid) neighbour
+/// and splits nothing (k-means with k clusters already respects ≤ k).
+fn repair_labels(x: &Matrix, labels: &[usize], k: usize, b: usize) -> Vec<usize> {
+    let n = x.rows();
+    let mut labels = labels.to_vec();
+    loop {
+        // Compact label space.
+        let mut map = std::collections::BTreeMap::new();
+        for &l in &labels {
+            let next = map.len();
+            map.entry(l).or_insert(next);
+        }
+        for l in labels.iter_mut() {
+            *l = map[l];
+        }
+        let kk = map.len();
+        let mut sizes = vec![0usize; kk];
+        for &l in &labels {
+            sizes[l] += 1;
+        }
+        // Centroids.
+        let p = x.cols();
+        let mut cent = Matrix::zeros(kk, p);
+        for i in 0..n {
+            let row = x.row(i);
+            let c = cent.row_mut(labels[i]);
+            for (cv, &v) in c.iter_mut().zip(row) {
+                *cv += v;
+            }
+        }
+        for c in 0..kk {
+            let inv = 1.0 / sizes[c].max(1) as f64;
+            for v in cent.row_mut(c) {
+                *v *= inv;
+            }
+        }
+        // Find a violating cluster: undersized, or too many clusters.
+        let offender = if kk > k {
+            // Merge the smallest cluster.
+            (0..kk).min_by_key(|&c| sizes[c])
+        } else {
+            (0..kk).find(|&c| sizes[c] < b)
+        };
+        let Some(off) = offender else {
+            return labels;
+        };
+        if kk == 1 {
+            return labels; // nothing to merge into
+        }
+        // Merge offender into nearest other centroid.
+        let target = (0..kk)
+            .filter(|&c| c != off)
+            .min_by(|&a, &bb| {
+                sqdist(cent.row(a), cent.row(off))
+                    .partial_cmp(&sqdist(cent.row(bb), cent.row(off)))
+                    .unwrap()
+            })
+            .unwrap();
+        for l in labels.iter_mut() {
+            if *l == off {
+                *l = target;
+            }
+        }
+    }
+}
+
+/// Solve the exact clique-partitioning clustering problem.
+pub fn clique_solve(
+    x: &Matrix,
+    cfg: &CliqueConfig,
+    budget: &Budget,
+) -> Result<CliqueResult> {
+    let n = x.rows();
+    assert!(n >= 2, "need at least two points");
+    assert!(cfg.k >= 1);
+    let n_pairs = n * (n - 1) / 2;
+    let costs = pair_costs(x);
+
+    // --- Base LP ----------------------------------------------------------
+    let mut lp = LinearProgram::new(n_pairs);
+    lp.objective = costs.clone();
+    // Bounds: [0, ∞) — x ≤ 1 enforced lazily; forbidden pairs fixed to 0.
+    lp.bounds = vec![(0.0, f64::INFINITY); n_pairs];
+    if let Some(allowed) = &cfg.allowed_pairs {
+        let mut ok = vec![false; n_pairs];
+        for &(i, j) in allowed {
+            let (a, b) = if i < j { (i, j) } else { (j, i) };
+            ok[pair_index(n, a, b)] = true;
+        }
+        for (idx, &is_ok) in ok.iter().enumerate() {
+            if !is_ok {
+                lp.bounds[idx] = (0.0, 0.0);
+            }
+        }
+    }
+    // Min-size degree rows: Σ_j x_ij ≥ b − 1.
+    if cfg.min_cluster_size > 1 {
+        for i in 0..n {
+            let coeffs: Vec<(usize, f64)> = (0..n)
+                .filter(|&j| j != i)
+                .map(|j| {
+                    let (a, b) = if i < j { (i, j) } else { (j, i) };
+                    (pair_index(n, a, b), 1.0)
+                })
+                .collect();
+            lp.add_constraint(coeffs, Sense::Ge, (cfg.min_cluster_size - 1) as f64);
+        }
+    }
+    // Pigeonhole base row guaranteeing ≤ k clusters in aggregate: with n
+    // points in ≤ k clusters, the number of co-clustered pairs is at least
+    // k·C(n/k, 2) in the balanced case — but that is not a valid
+    // inequality in general; the valid ≥-row is Σ x_ij ≥ n − k (spanning
+    // forest argument: a partition into ≤ k parts has ≥ n − k co-clustered
+    // pairs because each part of size s contributes C(s,2) ≥ s − 1).
+    lp.add_constraint(
+        (0..n_pairs).map(|idx| (idx, 1.0)).collect(),
+        Sense::Ge,
+        (n as isize - cfg.k as isize).max(0) as f64,
+    );
+
+    let mip = Mip { lp, binaries: (0..n_pairs).collect() };
+
+    // --- Lazy separation ---------------------------------------------------
+    let max_cuts = cfg.max_cuts_per_round;
+    let k = cfg.k;
+    let cut_fn = move |xv: &[f64]| -> Vec<Constraint> {
+        let mut cuts = Vec::new();
+        // 1. Upper bounds x ≤ 1.
+        for (idx, &v) in xv.iter().enumerate() {
+            if v > 1.0 + 1e-6 {
+                cuts.push(Constraint { coeffs: vec![(idx, 1.0)], sense: Sense::Le, rhs: 1.0 });
+                if cuts.len() >= max_cuts {
+                    return cuts;
+                }
+            }
+        }
+        // 2. Triangle (transitivity) violations, most-violated first.
+        let mut tri: Vec<(f64, usize, usize, usize)> = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let xij = xv[pair_index(n, i, j)];
+                for l in (j + 1)..n {
+                    let xjl = xv[pair_index(n, j, l)];
+                    let xil = xv[pair_index(n, i, l)];
+                    // Three rotations.
+                    let v1 = xij + xjl - xil; // (i,j) & (j,l) ⇒ (i,l)
+                    let v2 = xij + xil - xjl;
+                    let v3 = xjl + xil - xij;
+                    if v1 > 1.0 + 1e-6 {
+                        tri.push((v1, pair_index(n, i, j), pair_index(n, j, l), pair_index(n, i, l)));
+                    }
+                    if v2 > 1.0 + 1e-6 {
+                        tri.push((v2, pair_index(n, i, j), pair_index(n, i, l), pair_index(n, j, l)));
+                    }
+                    if v3 > 1.0 + 1e-6 {
+                        tri.push((v3, pair_index(n, j, l), pair_index(n, i, l), pair_index(n, i, j)));
+                    }
+                }
+            }
+        }
+        tri.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for (_, p1, p2, p3) in tri.into_iter().take(max_cuts.saturating_sub(cuts.len())) {
+            cuts.push(Constraint {
+                coeffs: vec![(p1, 1.0), (p2, 1.0), (p3, -1.0)],
+                sense: Sense::Le,
+                rhs: 1.0,
+            });
+        }
+        if !cuts.is_empty() {
+            return cuts;
+        }
+        // 3. Pigeonhole: greedily build an anti-clique (pairwise x < ε) of
+        // size k+1; its pair sum must be ≥ 1.
+        let mut anti: Vec<usize> = Vec::new();
+        for cand in 0..n {
+            if anti.iter().all(|&a| {
+                let (lo, hi) = if a < cand { (a, cand) } else { (cand, a) };
+                xv[pair_index(n, lo, hi)] < 1e-6
+            }) {
+                anti.push(cand);
+                if anti.len() == k + 1 {
+                    break;
+                }
+            }
+        }
+        if anti.len() == k + 1 {
+            let mut coeffs = Vec::new();
+            for a in 0..anti.len() {
+                for b in (a + 1)..anti.len() {
+                    let (lo, hi) =
+                        if anti[a] < anti[b] { (anti[a], anti[b]) } else { (anti[b], anti[a]) };
+                    coeffs.push((pair_index(n, lo, hi), 1.0));
+                }
+            }
+            cuts.push(Constraint { coeffs, sense: Sense::Ge, rhs: 1.0 });
+        }
+        cuts
+    };
+
+    // --- Rounding heuristic -------------------------------------------------
+    let xm = x.clone();
+    let kk = cfg.k;
+    let bb = cfg.min_cluster_size;
+    let heur_fn = move |xv: &[f64]| -> Option<Vec<f64>> {
+        // Threshold graph at 0.5 → components → repair to (k, b).
+        let labels = pairs_to_labels(n, xv);
+        let repaired = repair_labels(&xm, &labels, kk, bb);
+        Some(labels_to_pairs(n, &repaired))
+    };
+
+    let callbacks = Callbacks { cuts: Some(&cut_fn), heuristic: Some(&heur_fn) };
+    let mip_cfg = MipConfig { gap_tol: 1e-6, max_nodes: 0, max_cut_rounds: 50, int_tol: 1e-6 };
+
+    // Seed incumbent via k-means (repaired): guarantees a solution at
+    // timeout even if no node completes. Only usable when it respects the
+    // backbone's allowed-pair restriction — k-means knows nothing about B.
+    let mut rng = crate::rng::Rng::seed_from_u64(0x5EED);
+    let km = kmeans_fit(x, &KMeansConfig { k: cfg.k, n_init: 5, ..Default::default() }, &mut rng);
+    let seed_labels = repair_labels(x, &km.labels, cfg.k, cfg.min_cluster_size);
+    let seed_feasible = match &cfg.allowed_pairs {
+        None => true,
+        Some(allowed) => {
+            let ok: std::collections::BTreeSet<(usize, usize)> = allowed
+                .iter()
+                .map(|&(i, j)| if i < j { (i, j) } else { (j, i) })
+                .collect();
+            (0..n).all(|i| {
+                ((i + 1)..n).all(|j| seed_labels[i] != seed_labels[j] || ok.contains(&(i, j)))
+            })
+        }
+    };
+    let seed_obj = if seed_feasible {
+        labels_objective(x, &seed_labels)
+    } else {
+        f64::INFINITY
+    };
+
+    let res = mip_solve(&mip, &mip_cfg, budget, &callbacks)?;
+
+    let (labels, objective, status) = if res.status.has_solution() && !res.x.is_empty() {
+        let labels = pairs_to_labels(n, &res.x);
+        let obj = res.objective;
+        if seed_obj < obj - 1e-9 {
+            (seed_labels, seed_obj, res.status)
+        } else {
+            (labels, obj, res.status)
+        }
+    } else if res.status == SolveStatus::Infeasible {
+        return Ok(CliqueResult {
+            labels: vec![],
+            objective: f64::INFINITY,
+            lower_bound: f64::INFINITY,
+            gap: 0.0,
+            status: SolveStatus::Infeasible,
+            nodes_explored: res.nodes_explored,
+            cuts_added: res.cuts_added,
+            elapsed_secs: res.elapsed_secs,
+        });
+    } else if seed_feasible {
+        (seed_labels, seed_obj, SolveStatus::TimedOut)
+    } else {
+        // No incumbent and the k-means seed violates the allowed-pair
+        // restriction: fall back to singletons (trivially respects B;
+        // cluster-count feasibility is best-effort at timeout).
+        let singles: Vec<usize> = (0..n).collect();
+        let obj = labels_objective(x, &singles);
+        (singles, obj, SolveStatus::TimedOut)
+    };
+
+    let lower = res.lower_bound.min(objective);
+    let gap = if objective.abs() > 1e-12 {
+        ((objective - lower) / objective.abs()).max(0.0)
+    } else {
+        0.0
+    };
+    Ok(CliqueResult {
+        labels,
+        objective,
+        lower_bound: lower,
+        gap,
+        status,
+        nodes_explored: res.nodes_explored,
+        cuts_added: res.cuts_added,
+        elapsed_secs: res.elapsed_secs,
+    })
+}
+
+/// Brute-force optimal partition for tests: enumerate all partitions of n
+/// points into ≤ k clusters with min size b (n ≤ 10).
+pub fn brute_force_clustering(x: &Matrix, k: usize, b: usize) -> (Vec<usize>, f64) {
+    let n = x.rows();
+    assert!(n <= 10, "brute force is Bell-number exponential");
+    let mut best: Option<(Vec<usize>, f64)> = None;
+    // Enumerate assignments in restricted-growth form (canonical set
+    // partitions) to avoid label permutations.
+    fn rec(
+        i: usize,
+        n: usize,
+        max_used: usize,
+        labels: &mut Vec<usize>,
+        k: usize,
+        b: usize,
+        x: &Matrix,
+        best: &mut Option<(Vec<usize>, f64)>,
+    ) {
+        if i == n {
+            let kk = max_used + 1;
+            let mut sizes = vec![0usize; kk];
+            for &l in labels.iter() {
+                sizes[l] += 1;
+            }
+            if sizes.iter().any(|&s| s < b) {
+                return;
+            }
+            let obj = labels_objective(x, labels);
+            if best.as_ref().map_or(true, |(_, o)| obj < *o) {
+                *best = Some((labels.clone(), obj));
+            }
+            return;
+        }
+        let limit = (max_used + 1).min(k - 1);
+        for c in 0..=limit {
+            labels.push(c);
+            rec(i + 1, n, max_used.max(c), labels, k, b, x, best);
+            labels.pop();
+        }
+    }
+    let mut labels = Vec::with_capacity(n);
+    labels.push(0);
+    rec(1, n, 0, &mut labels, k, b, x, &mut best);
+    best.expect("at least the all-one-cluster partition is feasible when b <= n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{generate, BlobsConfig};
+    use crate::rng::Rng;
+
+    fn tiny_blobs(n: usize, k: usize, seed: u64) -> crate::data::blobs::BlobsData {
+        generate(
+            &BlobsConfig {
+                n,
+                p: 2,
+                true_clusters: k,
+                cluster_std: 0.3,
+                center_box: 8.0,
+                min_center_dist: 5.0,
+            },
+            &mut Rng::seed_from_u64(seed),
+        )
+    }
+
+    #[test]
+    fn pair_index_bijection() {
+        let n = 7;
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let idx = pair_index(n, i, j);
+                assert!(idx < n * (n - 1) / 2);
+                assert!(seen.insert(idx), "duplicate index for ({i},{j})");
+            }
+        }
+        assert_eq!(seen.len(), n * (n - 1) / 2);
+    }
+
+    #[test]
+    fn labels_pairs_roundtrip() {
+        let labels = vec![0, 1, 0, 2, 1, 0];
+        let x = labels_to_pairs(6, &labels);
+        let back = pairs_to_labels(6, &x);
+        assert_eq!(crate::metrics::adjusted_rand_index(&labels, &back), 1.0);
+    }
+
+    #[test]
+    fn matches_brute_force_tiny() {
+        for seed in [1, 2, 3] {
+            let data = tiny_blobs(7, 2, seed);
+            let cfg = CliqueConfig { k: 2, min_cluster_size: 1, ..Default::default() };
+            let res = clique_solve(&data.x, &cfg, &Budget::seconds(60.0)).unwrap();
+            let (bf_labels, bf_obj) = brute_force_clustering(&data.x, 2, 1);
+            assert_eq!(res.status, SolveStatus::Optimal, "seed {seed}");
+            assert!(
+                (res.objective - bf_obj).abs() < 1e-6,
+                "seed {seed}: {} vs {bf_obj}",
+                res.objective
+            );
+            assert_eq!(
+                crate::metrics::adjusted_rand_index(&res.labels, &bf_labels),
+                1.0,
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let data = tiny_blobs(12, 3, 5);
+        let cfg = CliqueConfig { k: 3, min_cluster_size: 2, ..Default::default() };
+        let res = clique_solve(&data.x, &cfg, &Budget::seconds(120.0)).unwrap();
+        assert!(res.status.has_solution());
+        let ari = crate::metrics::adjusted_rand_index(&res.labels, &data.labels_true);
+        assert!(ari > 0.9, "ari={ari}, status={:?}", res.status);
+    }
+
+    #[test]
+    fn min_cluster_size_respected() {
+        let data = tiny_blobs(9, 3, 7);
+        let cfg = CliqueConfig { k: 3, min_cluster_size: 3, ..Default::default() };
+        let res = clique_solve(&data.x, &cfg, &Budget::seconds(120.0)).unwrap();
+        assert!(res.status.has_solution());
+        let kk = res.labels.iter().max().unwrap() + 1;
+        let mut sizes = vec![0usize; kk];
+        for &l in &res.labels {
+            sizes[l] += 1;
+        }
+        for (c, &s) in sizes.iter().enumerate() {
+            assert!(s == 0 || s >= 3, "cluster {c} has size {s} < 3");
+        }
+    }
+
+    #[test]
+    fn cluster_count_capped_at_k() {
+        let data = tiny_blobs(8, 4, 9);
+        let cfg = CliqueConfig { k: 2, min_cluster_size: 1, ..Default::default() };
+        let res = clique_solve(&data.x, &cfg, &Budget::seconds(120.0)).unwrap();
+        assert!(res.status.has_solution());
+        let kk = res
+            .labels
+            .iter()
+            .collect::<std::collections::BTreeSet<_>>()
+            .len();
+        assert!(kk <= 2, "got {kk} clusters with k=2");
+    }
+
+    #[test]
+    fn timeout_returns_feasible_incumbent() {
+        let data = tiny_blobs(30, 3, 11);
+        let cfg = CliqueConfig { k: 3, min_cluster_size: 2, ..Default::default() };
+        let res = clique_solve(&data.x, &cfg, &Budget::seconds(0.0)).unwrap();
+        assert_eq!(res.status, SolveStatus::TimedOut);
+        assert_eq!(res.labels.len(), 30);
+        let kk = res.labels.iter().max().unwrap() + 1;
+        assert!(kk <= 3);
+        assert!(res.objective.is_finite());
+    }
+
+    #[test]
+    fn forbidden_pairs_never_coclustered() {
+        let data = tiny_blobs(6, 2, 13);
+        // Allow only pairs within {0,1,2} and within {3,4,5}.
+        let mut allowed = Vec::new();
+        for group in [[0usize, 1, 2], [3, 4, 5]] {
+            for a in 0..3 {
+                for b in (a + 1)..3 {
+                    allowed.push((group[a], group[b]));
+                }
+            }
+        }
+        let cfg = CliqueConfig {
+            k: 2,
+            min_cluster_size: 1,
+            allowed_pairs: Some(allowed.clone()),
+            ..Default::default()
+        };
+        let res = clique_solve(&data.x, &cfg, &Budget::seconds(60.0)).unwrap();
+        assert!(res.status.has_solution());
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                if res.labels[i] == res.labels[j] {
+                    assert!(
+                        allowed.contains(&(i, j)) || allowed.contains(&(j, i)),
+                        "forbidden pair ({i},{j}) co-clustered"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn repair_labels_enforces_constraints() {
+        let data = tiny_blobs(12, 4, 17);
+        // Start from singletons: 12 clusters, all undersized for b=3.
+        let singletons: Vec<usize> = (0..12).collect();
+        let repaired = repair_labels(&data.x, &singletons, 3, 3);
+        let kk = repaired.iter().collect::<std::collections::BTreeSet<_>>().len();
+        assert!(kk <= 3);
+        let mut sizes = std::collections::BTreeMap::new();
+        for &l in &repaired {
+            *sizes.entry(l).or_insert(0usize) += 1;
+        }
+        for (&l, &s) in &sizes {
+            assert!(s >= 3, "cluster {l} size {s}");
+        }
+    }
+}

@@ -1,0 +1,261 @@
+//! k-means clustering (k-means++ initialization + Lloyd iterations).
+//!
+//! Plays scikit-learn's `KMeans` role: the heuristic baseline of Table 1's
+//! clustering block and the backbone's `fit_subproblem` for clustering.
+//! `n_init` restarts keep the best inertia, matching sklearn defaults.
+//!
+//! The Lloyd assignment step (pairwise point↔centroid distances) is the
+//! clustering hot spot; when a PJRT artifact of matching shape is loaded,
+//! the backbone routes it through the AOT-compiled Pallas
+//! `pairwise_sqdist` kernel (see `runtime`), with this implementation as
+//! the fallback/oracle.
+
+use crate::linalg::{sqdist, Matrix};
+use crate::rng::Rng;
+
+/// k-means hyperparameters.
+#[derive(Debug, Clone)]
+pub struct KMeansConfig {
+    /// Number of clusters.
+    pub k: usize,
+    /// Independent restarts (best inertia kept).
+    pub n_init: usize,
+    /// Max Lloyd iterations per restart.
+    pub max_iter: usize,
+    /// Convergence tolerance on centroid movement (squared L2).
+    pub tol: f64,
+}
+
+impl Default for KMeansConfig {
+    fn default() -> Self {
+        Self { k: 5, n_init: 10, max_iter: 300, tol: 1e-8 }
+    }
+}
+
+/// A fitted k-means model.
+#[derive(Debug, Clone)]
+pub struct KMeansModel {
+    /// Cluster index per point.
+    pub labels: Vec<usize>,
+    /// k × p centroid matrix.
+    pub centroids: Matrix,
+    /// Sum of squared distances to assigned centroids.
+    pub inertia: f64,
+    /// Lloyd iterations used by the winning restart.
+    pub iterations: usize,
+}
+
+impl KMeansModel {
+    /// Assign new points to the nearest centroid.
+    pub fn predict(&self, x: &Matrix) -> Vec<usize> {
+        (0..x.rows())
+            .map(|i| nearest_centroid(x.row(i), &self.centroids).0)
+            .collect()
+    }
+}
+
+fn nearest_centroid(point: &[f64], centroids: &Matrix) -> (usize, f64) {
+    let mut best = (0, f64::INFINITY);
+    for c in 0..centroids.rows() {
+        let d = sqdist(point, centroids.row(c));
+        if d < best.1 {
+            best = (c, d);
+        }
+    }
+    best
+}
+
+/// k-means++ seeding: first center uniform, subsequent centers sampled
+/// with probability proportional to the squared distance to the nearest
+/// chosen center.
+fn kmeanspp_init(x: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+    let n = x.rows();
+    let mut centers: Vec<usize> = vec![rng.usize_below(n)];
+    let mut d2: Vec<f64> = (0..n).map(|i| sqdist(x.row(i), x.row(centers[0]))).collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 1e-300 {
+            // All points coincide with chosen centers; pick uniformly.
+            rng.usize_below(n)
+        } else {
+            rng.categorical(&d2)
+        };
+        centers.push(next);
+        for i in 0..n {
+            d2[i] = d2[i].min(sqdist(x.row(i), x.row(next)));
+        }
+    }
+    let mut c = Matrix::zeros(k, x.cols());
+    for (ci, &i) in centers.iter().enumerate() {
+        c.row_mut(ci).copy_from_slice(x.row(i));
+    }
+    c
+}
+
+/// One restart of Lloyd's algorithm from the given initial centroids.
+fn lloyd(x: &Matrix, mut centroids: Matrix, cfg: &KMeansConfig) -> KMeansModel {
+    let (n, p) = (x.rows(), x.cols());
+    let k = centroids.rows();
+    let mut labels = vec![0usize; n];
+    let mut iterations = 0;
+    for it in 0..cfg.max_iter {
+        iterations = it + 1;
+        // Assignment step.
+        for i in 0..n {
+            labels[i] = nearest_centroid(x.row(i), &centroids).0;
+        }
+        // Update step.
+        let mut sums = Matrix::zeros(k, p);
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            counts[labels[i]] += 1;
+            let row = x.row(i);
+            let srow = sums.row_mut(labels[i]);
+            for (s, &v) in srow.iter_mut().zip(row) {
+                *s += v;
+            }
+        }
+        let mut movement = 0.0f64;
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Empty cluster: re-seed at the point farthest from its
+                // centroid (standard fix; keeps k clusters alive).
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = sqdist(x.row(a), centroids.row(labels[a]));
+                        let db = sqdist(x.row(b), centroids.row(labels[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                let target: Vec<f64> = x.row(far).to_vec();
+                movement += sqdist(centroids.row(c), &target);
+                centroids.row_mut(c).copy_from_slice(&target);
+                continue;
+            }
+            let inv = 1.0 / counts[c] as f64;
+            let new: Vec<f64> = sums.row(c).iter().map(|s| s * inv).collect();
+            movement += sqdist(centroids.row(c), &new);
+            centroids.row_mut(c).copy_from_slice(&new);
+        }
+        if movement < cfg.tol {
+            break;
+        }
+    }
+    // Final assignment + inertia.
+    let mut inertia = 0.0;
+    for i in 0..n {
+        let (c, d) = nearest_centroid(x.row(i), &centroids);
+        labels[i] = c;
+        inertia += d;
+    }
+    KMeansModel { labels, centroids, inertia, iterations }
+}
+
+/// Fit k-means with `cfg.n_init` k-means++ restarts.
+pub fn kmeans_fit(x: &Matrix, cfg: &KMeansConfig, rng: &mut Rng) -> KMeansModel {
+    assert!(cfg.k >= 1 && x.rows() >= cfg.k, "need at least k points");
+    let mut best: Option<KMeansModel> = None;
+    for _ in 0..cfg.n_init.max(1) {
+        let init = kmeanspp_init(x, cfg.k, rng);
+        let model = lloyd(x, init, cfg);
+        if best.as_ref().map_or(true, |b| model.inertia < b.inertia) {
+            best = Some(model);
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::blobs::{generate, BlobsConfig};
+    use crate::metrics::adjusted_rand_index;
+
+    fn blob_data(k: usize) -> crate::data::blobs::BlobsData {
+        let cfg = BlobsConfig {
+            n: 150,
+            p: 2,
+            true_clusters: k,
+            cluster_std: 0.4,
+            center_box: 10.0,
+            min_center_dist: 6.0,
+        };
+        generate(&cfg, &mut Rng::seed_from_u64(3))
+    }
+
+    #[test]
+    fn recovers_well_separated_blobs() {
+        let data = blob_data(3);
+        let m = kmeans_fit(
+            &data.x,
+            &KMeansConfig { k: 3, ..Default::default() },
+            &mut Rng::seed_from_u64(1),
+        );
+        let ari = adjusted_rand_index(&m.labels, &data.labels_true);
+        assert!(ari > 0.95, "ari={ari}");
+    }
+
+    #[test]
+    fn inertia_decreases_with_more_clusters() {
+        let data = blob_data(3);
+        let mut prev = f64::INFINITY;
+        for k in [1, 2, 3, 5] {
+            let m = kmeans_fit(
+                &data.x,
+                &KMeansConfig { k, ..Default::default() },
+                &mut Rng::seed_from_u64(2),
+            );
+            assert!(m.inertia <= prev + 1e-9, "k={k}: {} > {prev}", m.inertia);
+            prev = m.inertia;
+        }
+    }
+
+    #[test]
+    fn all_clusters_nonempty() {
+        let data = blob_data(3);
+        let m = kmeans_fit(
+            &data.x,
+            &KMeansConfig { k: 5, ..Default::default() },
+            &mut Rng::seed_from_u64(4),
+        );
+        for c in 0..5 {
+            assert!(m.labels.iter().any(|&l| l == c), "cluster {c} empty");
+        }
+    }
+
+    #[test]
+    fn predict_consistent_with_training_labels() {
+        let data = blob_data(3);
+        let m = kmeans_fit(
+            &data.x,
+            &KMeansConfig { k: 3, ..Default::default() },
+            &mut Rng::seed_from_u64(5),
+        );
+        let again = m.predict(&data.x);
+        assert_eq!(m.labels, again);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let data = blob_data(3);
+        let cfg = KMeansConfig { k: 3, ..Default::default() };
+        let a = kmeans_fit(&data.x, &cfg, &mut Rng::seed_from_u64(6));
+        let b = kmeans_fit(&data.x, &cfg, &mut Rng::seed_from_u64(6));
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.inertia, b.inertia);
+    }
+
+    #[test]
+    fn single_cluster_centroid_is_mean() {
+        let data = blob_data(2);
+        let m = kmeans_fit(
+            &data.x,
+            &KMeansConfig { k: 1, n_init: 1, ..Default::default() },
+            &mut Rng::seed_from_u64(7),
+        );
+        let means = data.x.col_means();
+        for (c, m_val) in m.centroids.row(0).iter().enumerate() {
+            assert!((m_val - means[c]).abs() < 1e-9);
+        }
+    }
+}

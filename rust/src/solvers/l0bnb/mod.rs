@@ -1,0 +1,478 @@
+//! Exact cardinality-constrained (L0L2) sparse regression via
+//! branch-and-bound — the role L0BnB (Hazimeh, Mazumder & Saab, 2022)
+//! plays in the paper.
+//!
+//! Problem:
+//!
+//! ```text
+//! min_β ‖y − Xβ‖² + λ₂‖β‖²   s.t.  ‖β‖₀ ≤ k        (centered X, y)
+//! ```
+//!
+//! Branch-and-bound over feature-inclusion indicators. A node fixes some
+//! features *in* (I) and some *out* (O); the remaining features are free
+//! (F). The node lower bound is the ridge relaxation that allows **all**
+//! of I ∪ F (dropping the cardinality constraint on F), which is valid
+//! because every feasible completion of the node uses a subset of I ∪ F.
+//! Leaves occur when |I| = k (support fully decided) or |I| + |F| ≤ k
+//! (constraint slack — relaxation is exact). Branching follows the
+//! most-fractional-analogue rule: the free feature with the largest
+//! relaxation coefficient. The incumbent starts from the L0Learn-style
+//! heuristic ([`crate::solvers::cd::l0_fit`]) so time-outs still return a
+//! high-quality solution, mirroring how the paper reports L0BnB rows at
+//! its one-hour cap.
+
+use crate::linalg::{dot, least_squares, Matrix};
+use crate::solvers::cd::{l0_fit, L0Config};
+use crate::solvers::SolveStatus;
+use crate::util::Budget;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Solver hyperparameters.
+#[derive(Debug, Clone)]
+pub struct L0BnbConfig {
+    /// Cardinality bound k.
+    pub k: usize,
+    /// Ridge penalty λ₂.
+    pub lambda2: f64,
+    /// Relative optimality-gap tolerance (the paper reports < 1% gaps).
+    pub gap_tol: f64,
+    /// Node cap (safety valve; 0 = unlimited).
+    pub max_nodes: usize,
+}
+
+impl Default for L0BnbConfig {
+    fn default() -> Self {
+        Self { k: 10, lambda2: 1e-3, gap_tol: 0.01, max_nodes: 0 }
+    }
+}
+
+/// Result of a branch-and-bound solve.
+#[derive(Debug, Clone)]
+pub struct L0BnbResult {
+    pub beta: Vec<f64>,
+    pub intercept: f64,
+    /// Sorted optimal (or incumbent) support.
+    pub support: Vec<usize>,
+    /// Incumbent objective (centered form).
+    pub objective: f64,
+    /// Best lower bound at termination.
+    pub lower_bound: f64,
+    /// Relative gap `(obj − bound) / max(|obj|, ε)`.
+    pub gap: f64,
+    pub status: SolveStatus,
+    pub nodes_explored: usize,
+    pub elapsed_secs: f64,
+}
+
+impl L0BnbResult {
+    pub fn predict(&self, x: &Matrix) -> Vec<f64> {
+        x.matvec(&self.beta).iter().map(|v| v + self.intercept).collect()
+    }
+}
+
+/// One open node of the search tree.
+struct Node {
+    bound: f64,
+    fixed_in: Vec<usize>,
+    fixed_out: Vec<usize>,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; we want the smallest bound on top
+        // (best-first), so reverse.
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Precomputed sufficient statistics of the centered problem: the Gram
+/// matrix `G = XᵀX`, the correlation vector `c = Xᵀy`, and `yᵀy`.
+///
+/// Every node's ridge relaxation reduces to a solve over a *subset* of
+/// G's rows/columns — O(s²) extraction + O(s³) Cholesky instead of the
+/// O(n·s²) Gram rebuild a naive per-node `least_squares` would pay. For
+/// the backbone's reduced problems (n = 500, s ≤ ~100) this is the
+/// difference between ~1.4 s and ~0.1 s per exact solve (§Perf).
+struct GramCache {
+    g: Matrix,
+    xty: Vec<f64>,
+    yty: f64,
+}
+
+impl GramCache {
+    fn new(xc: &Matrix, yc: &[f64]) -> Self {
+        Self { g: xc.gram(), xty: xc.matvec_t(yc), yty: dot(yc, yc) }
+    }
+
+    /// Ridge objective on a subset: solve (G_SS + λ₂I) β = c_S and use
+    /// RSS = yᵀy − 2βᵀc_S + βᵀG_SSβ (all from cached statistics).
+    fn ridge_objective(&self, subset: &[usize], lambda2: f64) -> (Vec<f64>, f64) {
+        if subset.is_empty() {
+            return (Vec::new(), self.yty);
+        }
+        let s = subset.len();
+        let mut gss = Matrix::zeros(s, s);
+        for (a, &ja) in subset.iter().enumerate() {
+            let grow = self.g.row(ja);
+            let dst = gss.row_mut(a);
+            for (b, &jb) in subset.iter().enumerate() {
+                dst[b] = grow[jb];
+            }
+        }
+        let cs: Vec<f64> = subset.iter().map(|&j| self.xty[j]).collect();
+        let mut greg = gss.clone();
+        for i in 0..s {
+            greg.set(i, i, greg.get(i, i) + lambda2);
+        }
+        let beta = match crate::linalg::solve_spd(&greg, &cs) {
+            Ok(b) => b,
+            Err(_) => {
+                // Singular (collinear subset): jitter retry.
+                let jitter = 1e-8 * (greg.frobenius_norm() / s as f64).max(1e-8);
+                for i in 0..s {
+                    greg.set(i, i, greg.get(i, i) + jitter);
+                }
+                crate::linalg::solve_spd(&greg, &cs).unwrap_or_else(|_| vec![0.0; s])
+            }
+        };
+        // RSS = yᵀy − 2 βᵀc + βᵀ G β ; obj = RSS + λ₂‖β‖².
+        let gb = gss.matvec(&beta);
+        let obj = self.yty - 2.0 * dot(&beta, &cs) + dot(&beta, &gb) + lambda2 * dot(&beta, &beta);
+        (beta, obj.max(0.0))
+    }
+}
+
+/// Centered ridge fit on a feature subset (uncached reference; used by
+/// `brute_force` and tests).
+fn ridge_objective(
+    xc: &Matrix,
+    yc: &[f64],
+    subset: &[usize],
+    lambda2: f64,
+) -> (Vec<f64>, f64) {
+    if subset.is_empty() {
+        return (Vec::new(), dot(yc, yc));
+    }
+    let xs = xc.select_columns(subset);
+    let beta = least_squares(&xs, yc, lambda2).unwrap_or_else(|_| vec![0.0; subset.len()]);
+    let pred = xs.matvec(&beta);
+    let rss: f64 = yc.iter().zip(&pred).map(|(y, p)| (y - p) * (y - p)).sum();
+    let obj = rss + lambda2 * dot(&beta, &beta);
+    (beta, obj)
+}
+
+/// Solve the cardinality-constrained problem exactly (up to `gap_tol`)
+/// within the given wall-clock budget.
+pub fn l0bnb_solve(x: &Matrix, y: &[f64], cfg: &L0BnbConfig, budget: &Budget) -> L0BnbResult {
+    assert_eq!(x.rows(), y.len());
+    let p = x.cols();
+    let k = cfg.k.min(p);
+    let start = Budget::unlimited(); // local stopwatch
+
+    // Center once; intercept recovered at the end.
+    let y_mean = crate::linalg::mean(y);
+    let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+    let col_means = x.col_means();
+    let mut xc = x.clone();
+    for i in 0..xc.rows() {
+        let row = xc.row_mut(i);
+        for (j, m) in col_means.iter().enumerate() {
+            row[j] -= m;
+        }
+    }
+
+    // Sufficient statistics shared by every node (§Perf: Gram caching).
+    let cache = GramCache::new(&xc, &yc);
+
+    // Incumbent from the heuristic (warm start).
+    let heur = l0_fit(x, y, &L0Config { k, lambda2: cfg.lambda2, ..Default::default() });
+    let (mut inc_support, mut inc_obj) = {
+        let (_, obj) = cache.ridge_objective(&heur.support, cfg.lambda2);
+        (heur.support.clone(), obj)
+    };
+
+    let finish = |support: Vec<usize>,
+                  objective: f64,
+                  lower_bound: f64,
+                  status: SolveStatus,
+                  nodes: usize| {
+        let (beta_s, _) = cache.ridge_objective(&support, cfg.lambda2);
+        let mut beta = vec![0.0; p];
+        let mut intercept = y_mean;
+        for (jj, &j) in support.iter().enumerate() {
+            beta[j] = beta_s[jj];
+            intercept -= beta_s[jj] * col_means[j];
+        }
+        let gap = if objective.abs() > 1e-12 {
+            ((objective - lower_bound) / objective.abs()).max(0.0)
+        } else {
+            0.0
+        };
+        L0BnbResult {
+            beta,
+            intercept,
+            support,
+            objective,
+            lower_bound,
+            gap,
+            status,
+            nodes_explored: nodes,
+            elapsed_secs: start.elapsed_secs(),
+        }
+    };
+
+    if k == 0 || p == 0 {
+        let obj = dot(&yc, &yc);
+        return finish(vec![], obj, obj, SolveStatus::Optimal, 0);
+    }
+
+    // Root node.
+    let mut heap: BinaryHeap<Node> = BinaryHeap::new();
+    let (_, root_bound) = cache.ridge_objective(&(0..p).collect::<Vec<_>>(), cfg.lambda2);
+    heap.push(Node { bound: root_bound, fixed_in: vec![], fixed_out: vec![] });
+
+    let mut nodes = 0usize;
+    let mut best_open_bound;
+    let _ = root_bound;
+
+    while let Some(node) = heap.pop() {
+        best_open_bound = node.bound;
+        // Global optimality test: the best open node can no longer improve
+        // the incumbent beyond the gap tolerance.
+        if inc_obj - best_open_bound <= cfg.gap_tol * inc_obj.abs().max(1e-12) {
+            return finish(inc_support, inc_obj, best_open_bound, SolveStatus::Optimal, nodes);
+        }
+        if budget.expired() {
+            return finish(inc_support, inc_obj, best_open_bound, SolveStatus::TimedOut, nodes);
+        }
+        if cfg.max_nodes > 0 && nodes >= cfg.max_nodes {
+            return finish(inc_support, inc_obj, best_open_bound, SolveStatus::NodeLimit, nodes);
+        }
+        nodes += 1;
+
+        let free: Vec<usize> = (0..p)
+            .filter(|j| !node.fixed_in.contains(j) && !node.fixed_out.contains(j))
+            .collect();
+
+        // Leaf cases.
+        if node.fixed_in.len() == k || free.is_empty() {
+            let (_, obj) = cache.ridge_objective(&node.fixed_in, cfg.lambda2);
+            if obj < inc_obj {
+                inc_obj = obj;
+                inc_support = node.fixed_in.clone();
+            }
+            continue;
+        }
+        if node.fixed_in.len() + free.len() <= k {
+            // Cardinality slack: the relaxation (all allowed features) is
+            // feasible and therefore optimal for this subtree.
+            let mut allowed = node.fixed_in.clone();
+            allowed.extend_from_slice(&free);
+            allowed.sort_unstable();
+            let (_, obj) = cache.ridge_objective(&allowed, cfg.lambda2);
+            if obj < inc_obj {
+                inc_obj = obj;
+                inc_support = allowed;
+            }
+            continue;
+        }
+
+        // Relaxation on I ∪ F for bounding + branching signal.
+        let mut allowed = node.fixed_in.clone();
+        allowed.extend_from_slice(&free);
+        allowed.sort_unstable();
+        let (beta_relax, bound) = cache.ridge_objective(&allowed, cfg.lambda2);
+        if bound >= inc_obj {
+            continue; // pruned
+        }
+
+        // Secondary incumbent: polish the top-k of the relaxation.
+        let mut mag: Vec<(f64, usize)> = allowed
+            .iter()
+            .enumerate()
+            .map(|(pos, &j)| (beta_relax[pos].abs(), j))
+            .collect();
+        mag.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        let mut cand: Vec<usize> = mag.iter().take(k).map(|&(_, j)| j).collect();
+        // Fixed-in features must stay; replace the tail if any were dropped.
+        for &j in &node.fixed_in {
+            if !cand.contains(&j) {
+                cand.pop();
+                cand.push(j);
+            }
+        }
+        cand.sort_unstable();
+        cand.dedup();
+        let (_, cand_obj) = cache.ridge_objective(&cand, cfg.lambda2);
+        if cand_obj < inc_obj {
+            inc_obj = cand_obj;
+            inc_support = cand;
+        }
+
+        // Branch on the free feature with the largest relaxation weight.
+        let branch = free
+            .iter()
+            .copied()
+            .max_by(|&a, &b| {
+                let wa = beta_relax[allowed.binary_search(&a).unwrap()].abs();
+                let wb = beta_relax[allowed.binary_search(&b).unwrap()].abs();
+                wa.partial_cmp(&wb).unwrap()
+            })
+            .unwrap();
+
+        // Child 1: include `branch` (same relaxation bound still valid).
+        let mut in1 = node.fixed_in.clone();
+        in1.push(branch);
+        in1.sort_unstable();
+        heap.push(Node { bound, fixed_in: in1, fixed_out: node.fixed_out.clone() });
+
+        // Child 2: exclude `branch` — recompute the (tighter) bound.
+        let mut out2 = node.fixed_out.clone();
+        out2.push(branch);
+        out2.sort_unstable();
+        let allowed2: Vec<usize> =
+            allowed.iter().copied().filter(|&j| j != branch).collect();
+        let (_, bound2) = cache.ridge_objective(&allowed2, cfg.lambda2);
+        if bound2 < inc_obj {
+            heap.push(Node { bound: bound2, fixed_in: node.fixed_in, fixed_out: out2 });
+        }
+    }
+
+    // Heap exhausted: incumbent is optimal.
+    finish(inc_support, inc_obj, inc_obj, SolveStatus::Optimal, nodes)
+}
+
+/// Exhaustive reference solver (for tests): enumerate all supports of size
+/// ≤ k. Exponential — only call with tiny p.
+pub fn brute_force(x: &Matrix, y: &[f64], cfg: &L0BnbConfig) -> (Vec<usize>, f64) {
+    let p = x.cols();
+    assert!(p <= 20, "brute_force is exponential; p too large");
+    let y_mean = crate::linalg::mean(y);
+    let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
+    let col_means = x.col_means();
+    let mut xc = x.clone();
+    for i in 0..xc.rows() {
+        let row = xc.row_mut(i);
+        for (j, m) in col_means.iter().enumerate() {
+            row[j] -= m;
+        }
+    }
+    let mut best = (vec![], dot(&yc, &yc));
+    for mask in 0u32..(1 << p) {
+        if (mask.count_ones() as usize) > cfg.k {
+            continue;
+        }
+        let subset: Vec<usize> = (0..p).filter(|j| mask & (1 << j) != 0).collect();
+        let (_, obj) = ridge_objective(&xc, &yc, &subset, cfg.lambda2);
+        if obj < best.1 {
+            best = (subset, obj);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::sparse_regression::{generate, SparseRegressionConfig};
+    use crate::rng::Rng;
+
+    #[test]
+    fn matches_brute_force_on_small_problems() {
+        for seed in 0..5 {
+            let cfg_data = SparseRegressionConfig { n: 40, p: 10, k: 3, rho: 0.4, snr: 3.0 };
+            let data = generate(&cfg_data, &mut Rng::seed_from_u64(seed));
+            let cfg = L0BnbConfig { k: 3, lambda2: 0.01, gap_tol: 1e-9, max_nodes: 0 };
+            let bnb = l0bnb_solve(&data.x, &data.y, &cfg, &Budget::unlimited());
+            let (bf_support, bf_obj) = brute_force(&data.x, &data.y, &cfg);
+            assert_eq!(bnb.status, SolveStatus::Optimal, "seed {seed}");
+            assert!(
+                (bnb.objective - bf_obj).abs() <= 1e-6 * bf_obj.max(1e-9),
+                "seed {seed}: bnb {} vs brute {}",
+                bnb.objective,
+                bf_obj
+            );
+            assert_eq!(bnb.support, bf_support, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn recovers_true_support_clean_signal() {
+        let cfg_data = SparseRegressionConfig { n: 100, p: 30, k: 4, rho: 0.2, snr: 50.0 };
+        let data = generate(&cfg_data, &mut Rng::seed_from_u64(7));
+        let cfg = L0BnbConfig { k: 4, lambda2: 1e-4, gap_tol: 1e-6, max_nodes: 0 };
+        let res = l0bnb_solve(&data.x, &data.y, &cfg, &Budget::unlimited());
+        assert_eq!(res.support, data.support_true);
+        assert_eq!(res.status, SolveStatus::Optimal);
+        let r2 = crate::metrics::r2_score(&data.y, &res.predict(&data.x));
+        assert!(r2 > 0.95, "r2={r2}");
+    }
+
+    #[test]
+    fn timeout_returns_incumbent() {
+        let cfg_data = SparseRegressionConfig { n: 100, p: 60, k: 8, rho: 0.5, snr: 2.0 };
+        let data = generate(&cfg_data, &mut Rng::seed_from_u64(8));
+        let cfg = L0BnbConfig { k: 8, lambda2: 1e-3, gap_tol: 1e-12, max_nodes: 0 };
+        let res = l0bnb_solve(&data.x, &data.y, &cfg, &Budget::seconds(0.0));
+        assert_eq!(res.status, SolveStatus::TimedOut);
+        assert_eq!(res.support.len(), 8);
+        assert!(res.objective.is_finite());
+        assert!(res.gap >= 0.0);
+    }
+
+    #[test]
+    fn node_limit_respected() {
+        let cfg_data = SparseRegressionConfig { n: 80, p: 40, k: 5, rho: 0.6, snr: 1.0 };
+        let data = generate(&cfg_data, &mut Rng::seed_from_u64(9));
+        let cfg = L0BnbConfig { k: 5, lambda2: 1e-3, gap_tol: 1e-12, max_nodes: 3 };
+        let res = l0bnb_solve(&data.x, &data.y, &cfg, &Budget::unlimited());
+        assert!(matches!(res.status, SolveStatus::NodeLimit | SolveStatus::Optimal));
+        assert!(res.nodes_explored <= 4);
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_objective() {
+        let cfg_data = SparseRegressionConfig { n: 60, p: 25, k: 4, rho: 0.3, snr: 3.0 };
+        let data = generate(&cfg_data, &mut Rng::seed_from_u64(10));
+        let cfg = L0BnbConfig { k: 4, lambda2: 0.01, gap_tol: 0.01, max_nodes: 0 };
+        let res = l0bnb_solve(&data.x, &data.y, &cfg, &Budget::unlimited());
+        assert!(res.lower_bound <= res.objective + 1e-9);
+        assert!(res.gap <= 0.01 + 1e-9);
+    }
+
+    #[test]
+    fn k_zero_intercept_only() {
+        let cfg_data = SparseRegressionConfig { n: 30, p: 10, k: 2, rho: 0.0, snr: 5.0 };
+        let data = generate(&cfg_data, &mut Rng::seed_from_u64(11));
+        let cfg = L0BnbConfig { k: 0, ..Default::default() };
+        let res = l0bnb_solve(&data.x, &data.y, &cfg, &Budget::unlimited());
+        assert!(res.support.is_empty());
+        assert_eq!(res.status, SolveStatus::Optimal);
+        assert!((res.intercept - crate::linalg::mean(&data.y)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn beta_is_zero_outside_support() {
+        let cfg_data = SparseRegressionConfig { n: 50, p: 20, k: 3, rho: 0.2, snr: 5.0 };
+        let data = generate(&cfg_data, &mut Rng::seed_from_u64(12));
+        let cfg = L0BnbConfig { k: 3, ..Default::default() };
+        let res = l0bnb_solve(&data.x, &data.y, &cfg, &Budget::unlimited());
+        for (j, &b) in res.beta.iter().enumerate() {
+            if !res.support.contains(&j) {
+                assert_eq!(b, 0.0, "beta[{j}] nonzero outside support");
+            }
+        }
+    }
+}

@@ -1,0 +1,536 @@
+//! Dense two-phase primal simplex for linear programs.
+//!
+//! Plays Cbc's LP role: the relaxation engine under the binary MILP
+//! branch-and-bound ([`crate::solvers::mip`]) used by the exact
+//! clique-partitioning clustering solver. The problems it sees are small
+//! and dense (hundreds of variables/rows), so a tableau implementation
+//! with Dantzig pricing (Bland's rule engaged on stall, guaranteeing
+//! termination) is appropriate.
+//!
+//! Model form: `min cᵀx` subject to per-row `aᵀx {≤,=,≥} b` and variable
+//! bounds `l ≤ x ≤ u` (finite lower bounds required; `u = +∞` allowed).
+//! Lower bounds are shifted out; finite upper bounds become explicit ≤
+//! rows (simple, and fine at these sizes).
+
+use crate::solvers::SolveStatus;
+use anyhow::{bail, Result};
+
+/// Constraint sense.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sense {
+    Le,
+    Eq,
+    Ge,
+}
+
+/// One linear constraint: sparse coefficients, sense, right-hand side.
+#[derive(Debug, Clone)]
+pub struct Constraint {
+    pub coeffs: Vec<(usize, f64)>,
+    pub sense: Sense,
+    pub rhs: f64,
+}
+
+/// A linear program (minimization).
+#[derive(Debug, Clone)]
+pub struct LinearProgram {
+    pub n_vars: usize,
+    /// Objective coefficients (length `n_vars`).
+    pub objective: Vec<f64>,
+    pub constraints: Vec<Constraint>,
+    /// Per-variable `(lower, upper)`; upper may be `f64::INFINITY`.
+    pub bounds: Vec<(f64, f64)>,
+}
+
+impl LinearProgram {
+    /// New LP with all variables in `[0, ∞)` and zero objective.
+    pub fn new(n_vars: usize) -> Self {
+        Self {
+            n_vars,
+            objective: vec![0.0; n_vars],
+            constraints: Vec::new(),
+            bounds: vec![(0.0, f64::INFINITY); n_vars],
+        }
+    }
+
+    pub fn add_constraint(&mut self, coeffs: Vec<(usize, f64)>, sense: Sense, rhs: f64) {
+        self.constraints.push(Constraint { coeffs, sense, rhs });
+    }
+}
+
+/// LP solution.
+#[derive(Debug, Clone)]
+pub struct LpSolution {
+    pub status: SolveStatus,
+    /// Primal values in the original variable space (empty unless status
+    /// is `Optimal`).
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub iterations: usize,
+}
+
+const EPS: f64 = 1e-9;
+
+/// Solve the LP. Returns `Optimal`, `Infeasible`, or `Unbounded`.
+pub fn solve(lp: &LinearProgram) -> Result<LpSolution> {
+    if lp.objective.len() != lp.n_vars || lp.bounds.len() != lp.n_vars {
+        bail!("LP dimension mismatch");
+    }
+    for (l, u) in &lp.bounds {
+        if !l.is_finite() {
+            bail!("lower bounds must be finite");
+        }
+        if u < l {
+            return Ok(LpSolution {
+                status: SolveStatus::Infeasible,
+                x: vec![],
+                objective: f64::INFINITY,
+                iterations: 0,
+            });
+        }
+    }
+
+    // --- Shift lower bounds: x = l + x̃, x̃ ≥ 0. -------------------------
+    let shift: Vec<f64> = lp.bounds.iter().map(|b| b.0).collect();
+    let mut rows: Vec<(Vec<(usize, f64)>, Sense, f64)> = Vec::new();
+    for c in &lp.constraints {
+        let mut rhs = c.rhs;
+        for &(j, a) in &c.coeffs {
+            rhs -= a * shift[j];
+        }
+        rows.push((c.coeffs.clone(), c.sense, rhs));
+    }
+    // Finite upper bounds → x̃_j ≤ u − l rows.
+    for (j, (l, u)) in lp.bounds.iter().enumerate() {
+        if u.is_finite() {
+            rows.push((vec![(j, 1.0)], Sense::Le, u - l));
+        }
+    }
+
+    // --- Build standard-form tableau with slacks + artificials. ----------
+    let m = rows.len();
+    let n = lp.n_vars;
+    // Count columns: n structural + one slack/surplus per Le/Ge + one
+    // artificial per Eq/Ge (and per Le with negative rhs after flip —
+    // handled by flipping rows to rhs ≥ 0 first).
+    // Normalize rhs ≥ 0.
+    let mut norm_rows: Vec<(Vec<(usize, f64)>, Sense, f64)> = Vec::with_capacity(m);
+    for (coeffs, sense, rhs) in rows {
+        if rhs < 0.0 {
+            let flipped: Vec<(usize, f64)> =
+                coeffs.iter().map(|&(j, a)| (j, -a)).collect();
+            let s = match sense {
+                Sense::Le => Sense::Ge,
+                Sense::Ge => Sense::Le,
+                Sense::Eq => Sense::Eq,
+            };
+            norm_rows.push((flipped, s, -rhs));
+        } else {
+            norm_rows.push((coeffs, sense, rhs));
+        }
+    }
+
+    let n_slack = norm_rows
+        .iter()
+        .filter(|(_, s, _)| matches!(s, Sense::Le | Sense::Ge))
+        .count();
+    let n_art = norm_rows
+        .iter()
+        .filter(|(_, s, _)| matches!(s, Sense::Eq | Sense::Ge))
+        .count();
+    let total = n + n_slack + n_art;
+
+    // Tableau: m rows × (total + 1) columns (last = rhs).
+    let width = total + 1;
+    let mut t = vec![0.0f64; m * width];
+    let mut basis = vec![usize::MAX; m];
+    let mut slack_idx = n;
+    let mut art_idx = n + n_slack;
+    let mut artificials: Vec<usize> = Vec::new();
+
+    for (i, (coeffs, sense, rhs)) in norm_rows.iter().enumerate() {
+        let row = &mut t[i * width..(i + 1) * width];
+        for &(j, a) in coeffs {
+            row[j] += a;
+        }
+        row[total] = *rhs;
+        match sense {
+            Sense::Le => {
+                row[slack_idx] = 1.0;
+                basis[i] = slack_idx;
+                slack_idx += 1;
+            }
+            Sense::Ge => {
+                row[slack_idx] = -1.0;
+                slack_idx += 1;
+                row[art_idx] = 1.0;
+                basis[i] = art_idx;
+                artificials.push(art_idx);
+                art_idx += 1;
+            }
+            Sense::Eq => {
+                row[art_idx] = 1.0;
+                basis[i] = art_idx;
+                artificials.push(art_idx);
+                art_idx += 1;
+            }
+        }
+    }
+
+    let mut iterations = 0usize;
+
+    // --- Phase 1: minimize sum of artificials. ----------------------------
+    if !artificials.is_empty() {
+        let mut cost1 = vec![0.0f64; total];
+        for &a in &artificials {
+            cost1[a] = 1.0;
+        }
+        let status = simplex_core(&mut t, &mut basis, &cost1, m, total, &mut iterations)?;
+        if status == SolveStatus::Unbounded {
+            bail!("phase-1 LP unbounded (internal error)");
+        }
+        // Infeasible if any artificial remains positive.
+        let phase1_obj: f64 = (0..m)
+            .filter(|&i| artificials.contains(&basis[i]))
+            .map(|i| t[i * width + total])
+            .sum();
+        if phase1_obj > 1e-7 {
+            return Ok(LpSolution {
+                status: SolveStatus::Infeasible,
+                x: vec![],
+                objective: f64::INFINITY,
+                iterations,
+            });
+        }
+        // Drive any residual (zero-valued) artificials out of the basis.
+        for i in 0..m {
+            if artificials.contains(&basis[i]) {
+                let row_start = i * width;
+                let pivot_col = (0..n + n_slack)
+                    .find(|&j| t[row_start + j].abs() > EPS);
+                if let Some(j) = pivot_col {
+                    pivot(&mut t, &mut basis, m, width, i, j);
+                }
+                // If no pivot column exists the row is all-zero — redundant
+                // constraint; the artificial stays basic at value 0, which
+                // is harmless as long as its column is never re-entered
+                // (phase 2 cost treats artificials as +∞ via exclusion).
+            }
+        }
+    }
+
+    // --- Phase 2: original objective over structural + slack columns. ----
+    let mut cost2 = vec![0.0f64; total];
+    cost2[..n].copy_from_slice(&lp.objective);
+    // Exclude artificial columns from entering (cost ignored; entering set
+    // excludes them inside simplex_core via the `allowed` width).
+    let status = simplex_core_restricted(
+        &mut t,
+        &mut basis,
+        &cost2,
+        m,
+        total,
+        n + n_slack,
+        &mut iterations,
+    )?;
+    if status == SolveStatus::Unbounded {
+        return Ok(LpSolution {
+            status: SolveStatus::Unbounded,
+            x: vec![],
+            objective: f64::NEG_INFINITY,
+            iterations,
+        });
+    }
+
+    // Extract solution.
+    let mut x = shift.clone();
+    for i in 0..m {
+        if basis[i] < n {
+            x[basis[i]] += t[i * width + total];
+        }
+    }
+    let objective: f64 = lp.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+    Ok(LpSolution { status: SolveStatus::Optimal, x, objective, iterations })
+}
+
+/// Primal simplex over all columns.
+fn simplex_core(
+    t: &mut [f64],
+    basis: &mut [usize],
+    cost: &[f64],
+    m: usize,
+    total: usize,
+    iterations: &mut usize,
+) -> Result<SolveStatus> {
+    simplex_core_restricted(t, basis, cost, m, total, total, iterations)
+}
+
+/// Primal simplex allowing only columns `< allowed` to enter the basis.
+///
+/// Maintains an explicit reduced-cost row `z` updated incrementally at
+/// each pivot (`z ← z − z_e · t_pivot`), so pricing is O(total) per
+/// iteration rather than O(m · total) — the difference between seconds
+/// and hours inside the clique-partitioning branch-and-bound.
+fn simplex_core_restricted(
+    t: &mut [f64],
+    basis: &mut [usize],
+    cost: &[f64],
+    m: usize,
+    total: usize,
+    allowed: usize,
+    iterations: &mut usize,
+) -> Result<SolveStatus> {
+    let width = total + 1;
+    let max_iter = 50_000 + 200 * (m + total);
+
+    // Initial reduced costs z_j = c_j − c_Bᵀ (B⁻¹ A)_j.
+    let mut z = vec![0.0f64; width];
+    z[..total].copy_from_slice(&cost[..total]);
+    for i in 0..m {
+        let cb = cost[basis[i]];
+        if cb != 0.0 {
+            let row = &t[i * width..(i + 1) * width];
+            for (zj, &tij) in z.iter_mut().zip(row) {
+                *zj -= cb * tij;
+            }
+        }
+    }
+
+    let mut in_basis = vec![false; total];
+    for &b in basis.iter() {
+        in_basis[b] = true;
+    }
+
+    let mut stall = 0usize;
+    loop {
+        *iterations += 1;
+        if *iterations > max_iter {
+            bail!("simplex iteration limit exceeded ({max_iter})");
+        }
+        let use_bland = stall > 4 * (m + total);
+        let mut entering: Option<usize> = None;
+        let mut best_rc = -EPS;
+        for (j, &rc) in z.iter().enumerate().take(allowed) {
+            if rc < -EPS && !in_basis[j] {
+                if use_bland {
+                    entering = Some(j);
+                    break;
+                }
+                if rc < best_rc {
+                    best_rc = rc;
+                    entering = Some(j);
+                }
+            }
+        }
+        let Some(e) = entering else {
+            return Ok(SolveStatus::Optimal);
+        };
+
+        // Ratio test (Bland-style tie-break on basis index).
+        let mut leave: Option<usize> = None;
+        let mut best_ratio = f64::INFINITY;
+        for i in 0..m {
+            let a = t[i * width + e];
+            if a > EPS {
+                let ratio = t[i * width + total] / a;
+                if ratio < best_ratio - EPS
+                    || (ratio < best_ratio + EPS && leave.map_or(true, |l| basis[i] < basis[l]))
+                {
+                    best_ratio = ratio;
+                    leave = Some(i);
+                }
+            }
+        }
+        let Some(l) = leave else {
+            return Ok(SolveStatus::Unbounded);
+        };
+        if best_ratio < EPS {
+            stall += 1;
+        } else {
+            stall = 0;
+        }
+        in_basis[basis[l]] = false;
+        in_basis[e] = true;
+        pivot(t, basis, m, width, l, e);
+        // Update the cost row against the (now normalized) pivot row.
+        let ze = z[e];
+        if ze.abs() > 0.0 {
+            let prow = &t[l * width..(l + 1) * width];
+            for (zj, &pj) in z.iter_mut().zip(prow) {
+                *zj -= ze * pj;
+            }
+            z[e] = 0.0; // exact, avoids drift on the entering column
+        }
+    }
+}
+
+/// Gauss-Jordan pivot on (row, col).
+fn pivot(t: &mut [f64], basis: &mut [usize], m: usize, width: usize, row: usize, col: usize) {
+    let p = t[row * width + col];
+    debug_assert!(p.abs() > EPS, "pivot on ~zero element");
+    let inv = 1.0 / p;
+    for v in t[row * width..(row + 1) * width].iter_mut() {
+        *v *= inv;
+    }
+    for i in 0..m {
+        if i == row {
+            continue;
+        }
+        let factor = t[i * width + col];
+        if factor.abs() > EPS {
+            // row_i -= factor * row_pivot  (split borrows via split_at_mut)
+            let (lo, hi) = t.split_at_mut(std::cmp::max(i, row) * width);
+            let (src, dst) = if row < i {
+                (&lo[row * width..row * width + width], &mut hi[..width])
+            } else {
+                (&hi[..width], &mut lo[i * width..i * width + width])
+            };
+            // When row > i, hi starts at row*width: src = hi, dst in lo.
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d -= factor * s;
+            }
+        } else {
+            t[i * width + col] = 0.0;
+        }
+    }
+    basis[row] = col;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_opt(sol: &LpSolution, obj: f64, x: &[f64]) {
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert!((sol.objective - obj).abs() < 1e-6, "obj {} vs {obj}", sol.objective);
+        for (i, (&got, &want)) in sol.x.iter().zip(x).enumerate() {
+            assert!((got - want).abs() < 1e-6, "x[{i}] {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn textbook_maximization() {
+        // max 3a + 5b s.t. a ≤ 4, 2b ≤ 12, 3a + 2b ≤ 18 → a=2, b=6, obj 36.
+        let mut lp = LinearProgram::new(2);
+        lp.objective = vec![-3.0, -5.0]; // minimize the negative
+        lp.add_constraint(vec![(0, 1.0)], Sense::Le, 4.0);
+        lp.add_constraint(vec![(1, 2.0)], Sense::Le, 12.0);
+        lp.add_constraint(vec![(0, 3.0), (1, 2.0)], Sense::Le, 18.0);
+        let sol = solve(&lp).unwrap();
+        assert_opt(&sol, -36.0, &[2.0, 6.0]);
+    }
+
+    #[test]
+    fn equality_and_ge_constraints() {
+        // min x + y s.t. x + y = 10, x ≥ 3, y ≥ 2 → any feasible has obj 10.
+        let mut lp = LinearProgram::new(2);
+        lp.objective = vec![1.0, 1.0];
+        lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Sense::Eq, 10.0);
+        lp.bounds = vec![(3.0, f64::INFINITY), (2.0, f64::INFINITY)];
+        let sol = solve(&lp).unwrap();
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert!((sol.objective - 10.0).abs() < 1e-6);
+        assert!((sol.x[0] + sol.x[1] - 10.0).abs() < 1e-6);
+        assert!(sol.x[0] >= 3.0 - 1e-9 && sol.x[1] >= 2.0 - 1e-9);
+    }
+
+    #[test]
+    fn detects_infeasible() {
+        // x ≤ 1 and x ≥ 2.
+        let mut lp = LinearProgram::new(1);
+        lp.add_constraint(vec![(0, 1.0)], Sense::Le, 1.0);
+        lp.add_constraint(vec![(0, 1.0)], Sense::Ge, 2.0);
+        let sol = solve(&lp).unwrap();
+        assert_eq!(sol.status, SolveStatus::Infeasible);
+    }
+
+    #[test]
+    fn detects_unbounded() {
+        // min −x, x ≥ 0 unconstrained above.
+        let mut lp = LinearProgram::new(1);
+        lp.objective = vec![-1.0];
+        let sol = solve(&lp).unwrap();
+        assert_eq!(sol.status, SolveStatus::Unbounded);
+    }
+
+    #[test]
+    fn respects_upper_bounds() {
+        // min −x − y with x ≤ 2.5, y ≤ 1.5 (via bounds).
+        let mut lp = LinearProgram::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.bounds = vec![(0.0, 2.5), (0.0, 1.5)];
+        let sol = solve(&lp).unwrap();
+        assert_opt(&sol, -4.0, &[2.5, 1.5]);
+    }
+
+    #[test]
+    fn shifted_lower_bounds() {
+        // min x with x ∈ [−5, −1] → x = −5.
+        let mut lp = LinearProgram::new(1);
+        lp.objective = vec![1.0];
+        lp.bounds = vec![(-5.0, -1.0)];
+        let sol = solve(&lp).unwrap();
+        assert_opt(&sol, -5.0, &[-5.0]);
+    }
+
+    #[test]
+    fn degenerate_lp_terminates() {
+        // Multiple redundant constraints through the same vertex.
+        let mut lp = LinearProgram::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Sense::Le, 1.0);
+        lp.add_constraint(vec![(0, 2.0), (1, 2.0)], Sense::Le, 2.0);
+        lp.add_constraint(vec![(0, 1.0)], Sense::Le, 1.0);
+        lp.add_constraint(vec![(1, 1.0)], Sense::Le, 1.0);
+        let sol = solve(&lp).unwrap();
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        assert!((sol.objective + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matches_vertex_enumeration_on_random_lps() {
+        // Small random LPs over the unit box: compare the simplex optimum
+        // to brute-force over box corners ∩ feasibility (valid because
+        // with only box bounds + ≤ rows, an optimal extreme point of the
+        // polytope need not be a box corner — so instead compare lower
+        // bound: simplex obj ≤ every feasible corner's obj).
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from_u64(9);
+        for _ in 0..20 {
+            let nv = 4;
+            let mut lp = LinearProgram::new(nv);
+            for j in 0..nv {
+                lp.objective[j] = rng.uniform(-1.0, 1.0);
+                lp.bounds[j] = (0.0, 1.0);
+            }
+            for _ in 0..3 {
+                let coeffs: Vec<(usize, f64)> =
+                    (0..nv).map(|j| (j, rng.uniform(-1.0, 1.0))).collect();
+                lp.add_constraint(coeffs, Sense::Le, rng.uniform(0.5, 2.0));
+            }
+            let sol = solve(&lp).unwrap();
+            assert_eq!(sol.status, SolveStatus::Optimal);
+            // Check feasibility of the returned point.
+            for c in &lp.constraints {
+                let lhs: f64 = c.coeffs.iter().map(|&(j, a)| a * sol.x[j]).sum();
+                assert!(lhs <= c.rhs + 1e-6);
+            }
+            for (j, &(l, u)) in lp.bounds.iter().enumerate() {
+                assert!(sol.x[j] >= l - 1e-7 && sol.x[j] <= u + 1e-7);
+            }
+            // Simplex optimum must not exceed any feasible corner value.
+            for mask in 0u32..(1 << nv) {
+                let corner: Vec<f64> =
+                    (0..nv).map(|j| if mask & (1 << j) != 0 { 1.0 } else { 0.0 }).collect();
+                let feasible = lp.constraints.iter().all(|c| {
+                    c.coeffs.iter().map(|&(j, a)| a * corner[j]).sum::<f64>() <= c.rhs + 1e-9
+                });
+                if feasible {
+                    let obj: f64 =
+                        lp.objective.iter().zip(&corner).map(|(c, v)| c * v).sum();
+                    assert!(sol.objective <= obj + 1e-6);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,527 @@
+//! Binary MILP branch-and-bound with lazy cutting planes.
+//!
+//! Plays Cbc's MILP role for the exact clique-partitioning clustering
+//! solver. Best-first search over LP relaxations ([`crate::solvers::lp`]),
+//! branching on the most fractional binary variable, with:
+//!
+//! - a **lazy-cut callback**: after each relaxation solve the callback may
+//!   return violated valid inequalities (e.g. triangle inequalities for
+//!   clique partitioning), which join a global cut pool shared by all
+//!   nodes — the Grötschel–Wakabayashi cutting-plane scheme the paper's
+//!   clustering formulation cites;
+//! - a **rounding-heuristic callback** giving incumbents from fractional
+//!   solutions, so time-outs still return a feasible solution;
+//! - a wall-clock [`Budget`] honoured at node granularity.
+
+use crate::solvers::lp::{self, Constraint, LinearProgram};
+use crate::solvers::SolveStatus;
+use crate::util::Budget;
+use anyhow::Result;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// MILP model: an LP plus the set of variables restricted to {0, 1}.
+#[derive(Debug, Clone)]
+pub struct Mip {
+    pub lp: LinearProgram,
+    /// Indices of binary variables (bounds must be within [0, 1]).
+    pub binaries: Vec<usize>,
+}
+
+/// Solver knobs.
+#[derive(Debug, Clone)]
+pub struct MipConfig {
+    /// Relative optimality-gap tolerance.
+    pub gap_tol: f64,
+    /// Node cap (0 = unlimited).
+    pub max_nodes: usize,
+    /// Max cut-generation rounds per node.
+    pub max_cut_rounds: usize,
+    /// Integrality tolerance.
+    pub int_tol: f64,
+}
+
+impl Default for MipConfig {
+    fn default() -> Self {
+        Self { gap_tol: 1e-6, max_nodes: 0, max_cut_rounds: 25, int_tol: 1e-6 }
+    }
+}
+
+/// Callbacks customizing the search (both optional).
+pub struct Callbacks<'a> {
+    /// Given a fractional LP solution, return violated valid inequalities.
+    pub cuts: Option<&'a dyn Fn(&[f64]) -> Vec<Constraint>>,
+    /// Given a fractional LP solution, return a feasible integral solution
+    /// (used to update the incumbent).
+    pub heuristic: Option<&'a dyn Fn(&[f64]) -> Option<Vec<f64>>>,
+}
+
+impl<'a> Default for Callbacks<'a> {
+    fn default() -> Self {
+        Self { cuts: None, heuristic: None }
+    }
+}
+
+/// Result of a MILP solve.
+#[derive(Debug, Clone)]
+pub struct MipResult {
+    pub status: SolveStatus,
+    /// Incumbent solution (empty if none found).
+    pub x: Vec<f64>,
+    pub objective: f64,
+    pub lower_bound: f64,
+    pub gap: f64,
+    pub nodes_explored: usize,
+    pub cuts_added: usize,
+    pub elapsed_secs: f64,
+}
+
+struct Node {
+    bound: f64,
+    /// (variable, lower, upper) overrides relative to the root LP.
+    fixings: Vec<(usize, f64, f64)>,
+}
+
+impl PartialEq for Node {
+    fn eq(&self, other: &Self) -> bool {
+        self.bound == other.bound
+    }
+}
+impl Eq for Node {}
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.bound.partial_cmp(&self.bound).unwrap_or(Ordering::Equal)
+    }
+}
+
+/// Check integrality of the binary variables.
+fn fractional_var(x: &[f64], binaries: &[usize], tol: f64) -> Option<usize> {
+    let mut worst: Option<(usize, f64)> = None;
+    for &j in binaries {
+        let frac = (x[j] - x[j].round()).abs();
+        if frac > tol && worst.map_or(true, |(_, w)| (0.5 - frac).abs() < (0.5 - w).abs()) {
+            worst = Some((j, frac));
+        }
+    }
+    worst.map(|(j, _)| j)
+}
+
+/// Objective value of a point under the MIP objective.
+fn obj_value(lp: &LinearProgram, x: &[f64]) -> f64 {
+    lp.objective.iter().zip(x).map(|(c, v)| c * v).sum()
+}
+
+/// Feasibility check of an integral candidate against all constraints.
+fn is_feasible(lp: &LinearProgram, cuts: &[Constraint], x: &[f64], tol: f64) -> bool {
+    let check = |c: &Constraint| {
+        let lhs: f64 = c.coeffs.iter().map(|&(j, a)| a * x[j]).sum();
+        match c.sense {
+            lp::Sense::Le => lhs <= c.rhs + tol,
+            lp::Sense::Ge => lhs >= c.rhs - tol,
+            lp::Sense::Eq => (lhs - c.rhs).abs() <= tol,
+        }
+    };
+    lp.constraints.iter().all(check)
+        && cuts.iter().all(check)
+        && lp
+            .bounds
+            .iter()
+            .enumerate()
+            .all(|(j, &(l, u))| x[j] >= l - tol && x[j] <= u + tol)
+}
+
+/// Solve the MILP (minimization).
+pub fn mip_solve(
+    mip: &Mip,
+    cfg: &MipConfig,
+    budget: &Budget,
+    callbacks: &Callbacks,
+) -> Result<MipResult> {
+    let watch = crate::util::Stopwatch::start();
+    let mut cut_pool: Vec<Constraint> = Vec::new();
+    let mut incumbent: Option<(Vec<f64>, f64)> = None;
+    let mut nodes = 0usize;
+    let mut cuts_added = 0usize;
+
+    let mut heap: BinaryHeap<Node> = BinaryHeap::new();
+    heap.push(Node { bound: f64::NEG_INFINITY, fixings: vec![] });
+    let mut best_open;
+
+    let result = |incumbent: &Option<(Vec<f64>, f64)>,
+                  lower: f64,
+                  status: SolveStatus,
+                  nodes: usize,
+                  cuts_added: usize,
+                  watch: &crate::util::Stopwatch| {
+        let (x, objective) = match incumbent {
+            Some((x, o)) => (x.clone(), *o),
+            None => (vec![], f64::INFINITY),
+        };
+        // The incumbent is attained, so the global lower bound can never
+        // exceed it even when every open node's bound does.
+        let lower = if objective.is_finite() { lower.min(objective) } else { lower };
+        let gap = if objective.is_finite() && objective.abs() > 1e-12 {
+            ((objective - lower) / objective.abs()).max(0.0)
+        } else if objective.is_finite() {
+            0.0
+        } else {
+            f64::INFINITY
+        };
+        MipResult {
+            status,
+            x,
+            objective,
+            lower_bound: lower,
+            gap,
+            nodes_explored: nodes,
+            cuts_added,
+            elapsed_secs: watch.elapsed_secs(),
+        }
+    };
+
+    while let Some(node) = heap.pop() {
+        best_open = node.bound;
+        if let Some((_, inc_obj)) = &incumbent {
+            if node.bound.is_finite()
+                && inc_obj - node.bound <= cfg.gap_tol * inc_obj.abs().max(1e-12)
+            {
+                return Ok(result(
+                    &incumbent,
+                    node.bound,
+                    SolveStatus::Optimal,
+                    nodes,
+                    cuts_added,
+                    &watch,
+                ));
+            }
+        }
+        if budget.expired() {
+            let status = if incumbent.is_some() {
+                SolveStatus::TimedOut
+            } else {
+                SolveStatus::TimedOut
+            };
+            return Ok(result(&incumbent, best_open, status, nodes, cuts_added, &watch));
+        }
+        if cfg.max_nodes > 0 && nodes >= cfg.max_nodes {
+            return Ok(result(
+                &incumbent,
+                best_open,
+                SolveStatus::NodeLimit,
+                nodes,
+                cuts_added,
+                &watch,
+            ));
+        }
+        nodes += 1;
+
+        // Build the node LP: root LP + cut pool + bound fixings.
+        let mut node_lp = mip.lp.clone();
+        node_lp.constraints.extend(cut_pool.iter().cloned());
+        for &(j, l, u) in &node.fixings {
+            node_lp.bounds[j] = (l, u);
+        }
+
+        // Cut loop: solve, ask for violated cuts, repeat. An LP failure
+        // (iteration limit on a degenerate relaxation) is treated like
+        // budget exhaustion: return the incumbent honestly as TimedOut
+        // rather than crashing the whole experiment.
+        let mut sol = match lp::solve(&node_lp) {
+            Ok(s) => s,
+            Err(_) => {
+                return Ok(result(
+                    &incumbent,
+                    best_open,
+                    SolveStatus::TimedOut,
+                    nodes,
+                    cuts_added,
+                    &watch,
+                ));
+            }
+        };
+        let mut rounds = 0;
+        while sol.status == SolveStatus::Optimal && rounds < cfg.max_cut_rounds {
+            if budget.expired() {
+                break;
+            }
+            let Some(cut_fn) = callbacks.cuts else { break };
+            let new_cuts = cut_fn(&sol.x);
+            if new_cuts.is_empty() {
+                break;
+            }
+            rounds += 1;
+            cuts_added += new_cuts.len();
+            for c in new_cuts {
+                node_lp.constraints.push(c.clone());
+                cut_pool.push(c);
+            }
+            sol = match lp::solve(&node_lp) {
+                Ok(s) => s,
+                Err(_) => {
+                    return Ok(result(
+                        &incumbent,
+                        best_open,
+                        SolveStatus::TimedOut,
+                        nodes,
+                        cuts_added,
+                        &watch,
+                    ));
+                }
+            };
+        }
+
+        match sol.status {
+            SolveStatus::Infeasible => continue, // prune
+            SolveStatus::Unbounded => {
+                // Binary MIPs over bounded boxes cannot be unbounded unless
+                // continuous vars are; surface as unbounded.
+                return Ok(result(
+                    &incumbent,
+                    f64::NEG_INFINITY,
+                    SolveStatus::Unbounded,
+                    nodes,
+                    cuts_added,
+                    &watch,
+                ));
+            }
+            _ => {}
+        }
+        let bound = sol.objective;
+        if let Some((_, inc_obj)) = &incumbent {
+            if bound >= inc_obj - cfg.gap_tol * inc_obj.abs().max(1e-12) {
+                continue; // prune by bound
+            }
+        }
+
+        // Heuristic incumbent from the fractional solution.
+        if let Some(heur_fn) = callbacks.heuristic {
+            if let Some(cand) = heur_fn(&sol.x) {
+                if is_feasible(&mip.lp, &cut_pool, &cand, 1e-6)
+                    && fractional_var(&cand, &mip.binaries, cfg.int_tol).is_none()
+                {
+                    let obj = obj_value(&mip.lp, &cand);
+                    if incumbent.as_ref().map_or(true, |(_, o)| obj < *o) {
+                        incumbent = Some((cand, obj));
+                    }
+                }
+            }
+        }
+
+        match fractional_var(&sol.x, &mip.binaries, cfg.int_tol) {
+            None => {
+                // Integral: before accepting, give the lazy-cut callback a
+                // final veto — the cut-round cap above may have left valid
+                // inequalities ungenerated (e.g. transitivity triangles),
+                // in which case the point is NOT feasible for the true
+                // model and the node must be re-queued with the new cuts.
+                if let Some(cut_fn) = callbacks.cuts {
+                    let veto = cut_fn(&sol.x);
+                    if !veto.is_empty() {
+                        cuts_added += veto.len();
+                        cut_pool.extend(veto);
+                        heap.push(Node { bound, fixings: node.fixings });
+                        continue;
+                    }
+                }
+                let obj = sol.objective;
+                if incumbent.as_ref().map_or(true, |(_, o)| obj < *o) {
+                    // Round binaries exactly.
+                    let mut x = sol.x.clone();
+                    for &j in &mip.binaries {
+                        x[j] = x[j].round();
+                    }
+                    incumbent = Some((x, obj));
+                }
+            }
+            Some(j) => {
+                // Branch.
+                let mut fix0 = node.fixings.clone();
+                fix0.push((j, 0.0, 0.0));
+                heap.push(Node { bound, fixings: fix0 });
+                let mut fix1 = node.fixings;
+                fix1.push((j, 1.0, 1.0));
+                heap.push(Node { bound, fixings: fix1 });
+            }
+        }
+    }
+
+    // Tree exhausted.
+    let status = if incumbent.is_some() { SolveStatus::Optimal } else { SolveStatus::Infeasible };
+    let lower = incumbent.as_ref().map_or(f64::INFINITY, |(_, o)| *o);
+    Ok(result(&incumbent, lower, status, nodes, cuts_added, &watch))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::lp::Sense;
+
+    /// Brute-force binary optimum for cross-checking (all vars binary).
+    fn brute(mip: &Mip) -> Option<(Vec<f64>, f64)> {
+        let n = mip.lp.n_vars;
+        assert!(n <= 20);
+        let mut best: Option<(Vec<f64>, f64)> = None;
+        for mask in 0u32..(1 << n) {
+            let x: Vec<f64> =
+                (0..n).map(|j| if mask & (1 << j) != 0 { 1.0 } else { 0.0 }).collect();
+            if is_feasible(&mip.lp, &[], &x, 1e-9) {
+                let obj = obj_value(&mip.lp, &x);
+                if best.as_ref().map_or(true, |(_, o)| obj < *o) {
+                    best = Some((x, obj));
+                }
+            }
+        }
+        best
+    }
+
+    fn knapsack(values: &[f64], weights: &[f64], cap: f64) -> Mip {
+        let n = values.len();
+        let mut lp = LinearProgram::new(n);
+        lp.objective = values.iter().map(|v| -v).collect(); // maximize value
+        lp.bounds = vec![(0.0, 1.0); n];
+        lp.add_constraint(
+            weights.iter().enumerate().map(|(j, &w)| (j, w)).collect(),
+            Sense::Le,
+            cap,
+        );
+        Mip { lp, binaries: (0..n).collect() }
+    }
+
+    #[test]
+    fn solves_knapsack_exactly() {
+        let mip = knapsack(&[10.0, 13.0, 7.0, 8.0], &[3.0, 4.0, 2.0, 3.0], 7.0);
+        let res =
+            mip_solve(&mip, &MipConfig::default(), &Budget::unlimited(), &Callbacks::default())
+                .unwrap();
+        assert_eq!(res.status, SolveStatus::Optimal);
+        let (bx, bobj) = brute(&mip).unwrap();
+        assert!((res.objective - bobj).abs() < 1e-6, "{} vs {bobj}", res.objective);
+        assert_eq!(res.x, bx);
+    }
+
+    #[test]
+    fn random_binary_mips_match_brute_force() {
+        use crate::rng::Rng;
+        let mut rng = Rng::seed_from_u64(21);
+        for trial in 0..10 {
+            let n = 8;
+            let mut lp = LinearProgram::new(n);
+            lp.bounds = vec![(0.0, 1.0); n];
+            for j in 0..n {
+                lp.objective[j] = rng.uniform(-1.0, 1.0);
+            }
+            for _ in 0..3 {
+                let coeffs: Vec<(usize, f64)> =
+                    (0..n).map(|j| (j, rng.uniform(-1.0, 1.0))).collect();
+                lp.add_constraint(coeffs, Sense::Le, rng.uniform(0.0, 2.0));
+            }
+            let mip = Mip { lp, binaries: (0..n).collect() };
+            let res = mip_solve(
+                &mip,
+                &MipConfig::default(),
+                &Budget::unlimited(),
+                &Callbacks::default(),
+            )
+            .unwrap();
+            match brute(&mip) {
+                Some((_, bobj)) => {
+                    assert_eq!(res.status, SolveStatus::Optimal, "trial {trial}");
+                    assert!(
+                        (res.objective - bobj).abs() < 1e-6,
+                        "trial {trial}: {} vs {bobj}",
+                        res.objective
+                    );
+                }
+                None => {
+                    assert_eq!(res.status, SolveStatus::Infeasible, "trial {trial}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_mip_detected() {
+        let mut lp = LinearProgram::new(2);
+        lp.bounds = vec![(0.0, 1.0); 2];
+        lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Sense::Ge, 3.0);
+        let mip = Mip { lp, binaries: vec![0, 1] };
+        let res =
+            mip_solve(&mip, &MipConfig::default(), &Budget::unlimited(), &Callbacks::default())
+                .unwrap();
+        assert_eq!(res.status, SolveStatus::Infeasible);
+    }
+
+    #[test]
+    fn timeout_returns_heuristic_incumbent() {
+        let mip = knapsack(
+            &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0],
+            &[1.0; 8],
+            4.0,
+        );
+        let heuristic = |x: &[f64]| -> Option<Vec<f64>> {
+            // Greedy rounding: take the 4 largest fractional values.
+            let mut idx: Vec<usize> = (0..x.len()).collect();
+            idx.sort_by(|&a, &b| x[b].partial_cmp(&x[a]).unwrap());
+            let mut out = vec![0.0; x.len()];
+            for &j in idx.iter().take(4) {
+                out[j] = 1.0;
+            }
+            Some(out)
+        };
+        let callbacks = Callbacks { cuts: None, heuristic: Some(&heuristic) };
+        // Budget expires after the first node (enough to run the heuristic once).
+        let res = mip_solve(
+            &mip,
+            &MipConfig { max_nodes: 1, ..Default::default() },
+            &Budget::unlimited(),
+            &callbacks,
+        )
+        .unwrap();
+        // Either finished optimally in one node or returned the rounded incumbent.
+        assert!(res.status.has_solution());
+        assert!(!res.x.is_empty());
+    }
+
+    #[test]
+    fn cut_callback_tightens_relaxation() {
+        // min -(x+y) s.t. x + y ≤ 1.5 → LP gives 1.5; cut x + y ≤ 1 forces
+        // the integral optimum in fewer nodes.
+        let mut lp = LinearProgram::new(2);
+        lp.objective = vec![-1.0, -1.0];
+        lp.bounds = vec![(0.0, 1.0); 2];
+        lp.add_constraint(vec![(0, 1.0), (1, 1.0)], Sense::Le, 1.5);
+        let mip = Mip { lp, binaries: vec![0, 1] };
+        let cuts = |x: &[f64]| -> Vec<Constraint> {
+            if x[0] + x[1] > 1.0 + 1e-6 {
+                vec![Constraint { coeffs: vec![(0, 1.0), (1, 1.0)], sense: Sense::Le, rhs: 1.0 }]
+            } else {
+                vec![]
+            }
+        };
+        let callbacks = Callbacks { cuts: Some(&cuts), heuristic: None };
+        let res =
+            mip_solve(&mip, &MipConfig::default(), &Budget::unlimited(), &callbacks).unwrap();
+        assert_eq!(res.status, SolveStatus::Optimal);
+        assert!((res.objective + 1.0).abs() < 1e-6);
+        assert!(res.cuts_added >= 1);
+        assert_eq!(res.nodes_explored, 1, "cut should close the root node");
+    }
+
+    #[test]
+    fn respects_node_limit() {
+        let mip = knapsack(&[5.0, 4.0, 3.0, 2.0, 1.0, 6.0], &[2.0, 3.0, 1.0, 4.0, 2.0, 3.0], 6.0);
+        let res = mip_solve(
+            &mip,
+            &MipConfig { max_nodes: 2, ..Default::default() },
+            &Budget::unlimited(),
+            &Callbacks::default(),
+        )
+        .unwrap();
+        assert!(res.nodes_explored <= 2);
+    }
+}

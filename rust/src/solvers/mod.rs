@@ -1,0 +1,48 @@
+//! Solver substrates.
+//!
+//! The paper composes off-the-shelf solvers (GLMNet, L0Learn, L0BnB,
+//! scikit-learn, ODTLearn, Cbc); this crate rebuilds each one:
+//!
+//! | paper dependency | module | role in the backbone |
+//! |---|---|---|
+//! | GLMNet            | [`cd`]         | heuristic baseline + subproblem fitter |
+//! | L0Learn           | [`cd`] (`l0`)  | heuristic subproblem fitter |
+//! | L0BnB             | [`l0bnb`]      | exact reduced-problem solver (sparse regression) |
+//! | scikit-learn CART | [`cart`]       | heuristic baseline + subproblem fitter (trees) |
+//! | ODTLearn          | [`exact_tree`] | exact reduced-problem solver (trees) |
+//! | scikit-learn KMeans | [`kmeans`]   | heuristic baseline + subproblem fitter (clustering) |
+//! | Cbc (LP)          | [`lp`]         | LP relaxations for the MILP branch-and-bound |
+//! | Cbc (MILP)        | [`mip`]        | generic binary MILP branch-and-bound |
+//! | PuLP + Cbc        | [`clique`]     | exact clique-partitioning clustering |
+
+pub mod cart;
+pub mod cd;
+pub mod clique;
+pub mod exact_tree;
+pub mod kmeans;
+pub mod l0bnb;
+pub mod logistic;
+pub mod lp;
+pub mod mip;
+
+/// Termination status shared by the exact solvers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolveStatus {
+    /// Proven optimal (gap below tolerance).
+    Optimal,
+    /// Stopped at the time budget; best incumbent returned.
+    TimedOut,
+    /// Stopped at a node/iteration cap; best incumbent returned.
+    NodeLimit,
+    /// Problem proven infeasible.
+    Infeasible,
+    /// Objective unbounded below.
+    Unbounded,
+}
+
+impl SolveStatus {
+    /// Whether an incumbent solution accompanies this status.
+    pub fn has_solution(self) -> bool {
+        matches!(self, SolveStatus::Optimal | SolveStatus::TimedOut | SolveStatus::NodeLimit)
+    }
+}

@@ -1,0 +1,222 @@
+//! Small shared utilities: wall-clock budgets, timing, and index sets.
+
+use std::time::{Duration, Instant};
+
+/// A wall-clock budget shared by long-running solvers.
+///
+/// Exact MIO solvers (L0BnB, MILP branch-and-bound, exact trees) honour the
+/// paper's one-hour cap through this type: they poll `expired()` at node
+/// boundaries and return their incumbent with a `TimedOut` status, exactly
+/// like the `ODTLearn`/`Exact` rows of Table 1 that report 3600 s.
+#[derive(Debug, Clone)]
+pub struct Budget {
+    start: Instant,
+    limit: Option<Duration>,
+}
+
+impl Budget {
+    /// Unlimited budget.
+    pub fn unlimited() -> Self {
+        Self { start: Instant::now(), limit: None }
+    }
+
+    /// Budget of `secs` seconds starting now.
+    pub fn seconds(secs: f64) -> Self {
+        Self { start: Instant::now(), limit: Some(Duration::from_secs_f64(secs)) }
+    }
+
+    /// True once the budget is exhausted.
+    #[inline]
+    pub fn expired(&self) -> bool {
+        match self.limit {
+            Some(l) => self.start.elapsed() >= l,
+            None => false,
+        }
+    }
+
+    /// Elapsed wall-clock seconds since creation.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Remaining seconds (`f64::INFINITY` if unlimited).
+    pub fn remaining_secs(&self) -> f64 {
+        match self.limit {
+            Some(l) => (l.saturating_sub(self.start.elapsed())).as_secs_f64(),
+            None => f64::INFINITY,
+        }
+    }
+
+    /// A child budget capped at `secs` but never exceeding the parent.
+    pub fn child(&self, secs: f64) -> Budget {
+        Budget::seconds(secs.min(self.remaining_secs()))
+    }
+}
+
+/// Simple stopwatch for benchmark rows.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Sorted, deduplicated index set (the representation of backbone sets and
+/// indicator universes). Thin wrapper over `Vec<usize>` with set algebra.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct IndexSet {
+    items: Vec<usize>,
+}
+
+impl IndexSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn from_vec(mut v: Vec<usize>) -> Self {
+        v.sort_unstable();
+        v.dedup();
+        Self { items: v }
+    }
+
+    pub fn from_range(n: usize) -> Self {
+        Self { items: (0..n).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn contains(&self, x: usize) -> bool {
+        self.items.binary_search(&x).is_ok()
+    }
+
+    pub fn insert(&mut self, x: usize) {
+        if let Err(pos) = self.items.binary_search(&x) {
+            self.items.insert(pos, x);
+        }
+    }
+
+    pub fn as_slice(&self) -> &[usize] {
+        &self.items
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.items.iter().copied()
+    }
+
+    pub fn union(&self, other: &IndexSet) -> IndexSet {
+        let mut v = self.items.clone();
+        v.extend_from_slice(&other.items);
+        IndexSet::from_vec(v)
+    }
+
+    pub fn union_with(&mut self, xs: &[usize]) {
+        self.items.extend_from_slice(xs);
+        self.items.sort_unstable();
+        self.items.dedup();
+    }
+
+    pub fn intersect(&self, other: &IndexSet) -> IndexSet {
+        IndexSet {
+            items: self.items.iter().copied().filter(|&x| other.contains(x)).collect(),
+        }
+    }
+
+    pub fn is_subset_of(&self, other: &IndexSet) -> bool {
+        self.items.iter().all(|&x| other.contains(x))
+    }
+
+    pub fn into_vec(self) -> Vec<usize> {
+        self.items
+    }
+}
+
+impl FromIterator<usize> for IndexSet {
+    fn from_iter<T: IntoIterator<Item = usize>>(iter: T) -> Self {
+        IndexSet::from_vec(iter.into_iter().collect())
+    }
+}
+
+/// Format seconds the way Table 1 does (integer seconds, `3600` for a
+/// timeout at the one-hour cap).
+pub fn format_secs(secs: f64) -> String {
+    if secs >= 100.0 {
+        format!("{:.0}", secs)
+    } else if secs >= 1.0 {
+        format!("{:.1}", secs)
+    } else {
+        format!("{:.3}", secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_unlimited_never_expires() {
+        let b = Budget::unlimited();
+        assert!(!b.expired());
+        assert_eq!(b.remaining_secs(), f64::INFINITY);
+    }
+
+    #[test]
+    fn budget_zero_expires_immediately() {
+        let b = Budget::seconds(0.0);
+        assert!(b.expired());
+    }
+
+    #[test]
+    fn budget_child_capped_by_parent() {
+        let parent = Budget::seconds(0.05);
+        let child = parent.child(100.0);
+        assert!(child.remaining_secs() <= 0.05 + 1e-6);
+    }
+
+    #[test]
+    fn index_set_algebra() {
+        let a = IndexSet::from_vec(vec![3, 1, 2, 3]);
+        assert_eq!(a.as_slice(), &[1, 2, 3]);
+        let b = IndexSet::from_vec(vec![2, 4]);
+        assert_eq!(a.union(&b).as_slice(), &[1, 2, 3, 4]);
+        assert_eq!(a.intersect(&b).as_slice(), &[2]);
+        assert!(IndexSet::from_vec(vec![1, 3]).is_subset_of(&a));
+        assert!(!IndexSet::from_vec(vec![1, 5]).is_subset_of(&a));
+    }
+
+    #[test]
+    fn index_set_insert_keeps_sorted_unique() {
+        let mut s = IndexSet::new();
+        for x in [5, 1, 3, 1, 5] {
+            s.insert(x);
+        }
+        assert_eq!(s.as_slice(), &[1, 3, 5]);
+        assert!(s.contains(3));
+        assert!(!s.contains(2));
+    }
+
+    #[test]
+    fn format_secs_bands() {
+        assert_eq!(format_secs(3600.0), "3600");
+        assert_eq!(format_secs(34.26), "34.3");
+        assert_eq!(format_secs(0.1234), "0.123");
+    }
+}

@@ -1,0 +1,190 @@
+//! Cross-module integration: full backbone runs on generated data, with
+//! the paper's qualitative claims asserted end to end (phase-1 speedup
+//! structure, exact-phase optimality, heuristic-vs-backbone ordering).
+
+use backbone_learn::backbone::clustering::BackboneClustering;
+use backbone_learn::backbone::decision_tree::BackboneDecisionTree;
+use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
+use backbone_learn::data::blobs;
+use backbone_learn::data::classification;
+use backbone_learn::data::sparse_regression;
+use backbone_learn::metrics::{auc, r2_score, silhouette_score, support_recovery};
+use backbone_learn::rng::Rng;
+use backbone_learn::solvers::cd::{elastic_net_path, ElasticNetConfig};
+use backbone_learn::solvers::kmeans::{kmeans_fit, KMeansConfig};
+use backbone_learn::solvers::SolveStatus;
+use backbone_learn::util::Budget;
+
+#[test]
+fn sparse_regression_backbone_beats_lasso_on_support_recovery() {
+    let data = sparse_regression::generate(
+        &sparse_regression::SparseRegressionConfig {
+            n: 150,
+            p: 600,
+            k: 5,
+            rho: 0.3,
+            snr: 5.0,
+        },
+        &mut Rng::seed_from_u64(42),
+    );
+
+    // Lasso baseline (full path, best in-sample).
+    let path = elastic_net_path(&data.x, &data.y, &ElasticNetConfig::default());
+    let lasso = path.select_best(&data.x, &data.y);
+    let lasso_rec = support_recovery(&lasso.support(), &data.support_true);
+
+    // Backbone.
+    let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, 5);
+    let model = bb.fit(&data.x, &data.y).unwrap().clone();
+    let bb_rec = support_recovery(&model.support, &data.support_true);
+
+    assert!(
+        bb_rec.f1 >= lasso_rec.f1,
+        "backbone F1 {} < lasso F1 {}",
+        bb_rec.f1,
+        lasso_rec.f1
+    );
+    assert!(bb_rec.f1 >= 0.8, "backbone F1 too low: {}", bb_rec.f1);
+    // Exact phase solved a ≤ 50-feature problem, not 600.
+    let d = bb.last_diagnostics.as_ref().unwrap();
+    assert!(d.backbone_size <= 50);
+    assert_eq!(model.status, SolveStatus::Optimal);
+}
+
+#[test]
+fn decision_tree_backbone_competitive_with_cart_on_test_set() {
+    let mut rng = Rng::seed_from_u64(7);
+    let data = classification::generate(
+        &classification::ClassificationConfig {
+            n: 450,
+            p: 30,
+            k: 4,
+            n_redundant: 3,
+            n_clusters: 4,
+            class_sep: 1.8,
+            flip_y: 0.03,
+        },
+        &mut rng,
+    );
+    let split = backbone_learn::data::train_test_split(&data.x, &data.y, 1.0 / 3.0, &mut rng);
+
+    let cart = backbone_learn::solvers::cart::cart_fit(
+        &split.x_train,
+        &split.y_train,
+        &backbone_learn::solvers::cart::CartConfig { max_depth: 2, ..Default::default() },
+    );
+    let cart_auc = auc(&split.y_test, &cart.predict_proba(&split.x_test));
+
+    let mut bb = BackboneDecisionTree::new(0.5, 0.5, 5, 2);
+    bb.bins = 3; // finer thresholds: CART picks optimal cut points, the
+                 // exact tree only sees the quantile grid
+    bb.fit(&split.x_train, &split.y_train).unwrap();
+    let bb_auc = auc(&split.y_test, &bb.predict_proba(&split.x_test));
+
+    assert!(
+        bb_auc >= cart_auc - 0.05,
+        "backbone AUC {bb_auc:.3} much worse than CART {cart_auc:.3}"
+    );
+    assert!(bb_auc > 0.6, "bb_auc={bb_auc}");
+}
+
+#[test]
+fn clustering_backbone_at_least_as_good_as_kmeans_silhouette() {
+    let data = blobs::generate(
+        &blobs::BlobsConfig {
+            n: 14,
+            p: 2,
+            true_clusters: 2,
+            cluster_std: 0.9,
+            center_box: 8.0,
+            min_center_dist: 6.0,
+        },
+        &mut Rng::seed_from_u64(3),
+    );
+    let target_k = 4; // ambiguity: more than the true 2
+
+    let km = kmeans_fit(
+        &data.x,
+        &KMeansConfig { k: target_k, ..Default::default() },
+        &mut Rng::seed_from_u64(5),
+    );
+    let km_sil = silhouette_score(&data.x, &km.labels);
+
+    let mut bb = BackboneClustering::new(1.0, 3, target_k);
+    let model = bb.fit_with_budget(&data.x, &Budget::seconds(60.0)).unwrap().clone();
+    let bb_sil = silhouette_score(&data.x, &model.labels);
+
+    assert!(
+        bb_sil >= km_sil - 1e-9,
+        "backbone silhouette {bb_sil:.4} < kmeans {km_sil:.4}"
+    );
+}
+
+#[test]
+fn backbone_phase_timings_are_recorded_and_positive() {
+    let data = sparse_regression::generate(
+        &sparse_regression::SparseRegressionConfig { n: 80, p: 200, k: 3, rho: 0.1, snr: 5.0 },
+        &mut Rng::seed_from_u64(9),
+    );
+    let mut bb = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
+    bb.fit(&data.x, &data.y).unwrap();
+    let d = bb.last_diagnostics.as_ref().unwrap();
+    assert!(d.phase1_secs >= 0.0);
+    assert!(d.phase2_secs >= 0.0);
+    assert!(!d.iterations.is_empty());
+    assert_eq!(
+        d.iterations.first().unwrap().universe_size,
+        d.screened_universe
+    );
+}
+
+#[test]
+fn budget_propagates_to_exact_phase() {
+    // Zero budget: the exact phase must still return (TimedOut incumbent).
+    let data = sparse_regression::generate(
+        &sparse_regression::SparseRegressionConfig { n: 100, p: 300, k: 5, rho: 0.4, snr: 2.0 },
+        &mut Rng::seed_from_u64(10),
+    );
+    let mut bb = BackboneSparseRegression::new(0.5, 0.5, 3, 5);
+    let model = bb.fit_with_budget(&data.x, &data.y, &Budget::seconds(0.0)).unwrap();
+    assert!(matches!(model.status, SolveStatus::TimedOut | SolveStatus::Optimal));
+    assert!(model.support.len() <= 5);
+    let r2 = r2_score(&data.y, &model.predict(&data.x));
+    assert!(r2.is_finite());
+}
+
+#[test]
+fn grid_cells_match_table1_row_shape() {
+    // Tiny end-to-end run of the harness itself (1 rep): row structure,
+    // method names, and the qualitative ordering BbLearn ≥ GLMNet.
+    use backbone_learn::bench_support::run_sparse_regression_block;
+    use backbone_learn::config::{ExperimentConfig, Problem};
+    let mut cfg = ExperimentConfig::quick_defaults(Problem::SparseRegression);
+    cfg.n = 100;
+    cfg.p = 200;
+    cfg.k = 3;
+    cfg.repetitions = 1;
+    cfg.budget_secs = 20.0;
+    cfg.grid.truncate(2);
+    let rows = run_sparse_regression_block(&cfg).unwrap();
+    assert_eq!(rows.len(), 4);
+    let glmnet = rows.iter().find(|r| r.method == "GLMNet").unwrap();
+    let best_bb = rows
+        .iter()
+        .filter(|r| r.method == "BbLearn")
+        .max_by(|a, b| a.accuracy.partial_cmp(&b.accuracy).unwrap())
+        .unwrap();
+    assert!(
+        best_bb.accuracy >= glmnet.accuracy - 0.05,
+        "BbLearn {:.3} ≪ GLMNet {:.3}",
+        best_bb.accuracy,
+        glmnet.accuracy
+    );
+    for r in &rows {
+        assert!(r.time_secs >= 0.0);
+        if r.method == "BbLearn" {
+            assert!(r.backbone_size.is_some());
+            assert!(r.m.is_some() && r.alpha.is_some() && r.beta.is_some());
+        }
+    }
+}

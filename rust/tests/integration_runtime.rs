@@ -1,0 +1,175 @@
+//! Integration tests of the PJRT runtime against the pure-Rust oracles.
+//!
+//! These tests require `make artifacts` to have produced `artifacts/`;
+//! they are skipped (with a loud message) otherwise, so `cargo test`
+//! stays green on a fresh checkout.
+
+use backbone_learn::backbone::screen::correlation_utilities;
+use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
+use backbone_learn::linalg::Matrix;
+use backbone_learn::rng::Rng;
+use backbone_learn::runtime::{Backend, Engine};
+use backbone_learn::solvers::cd::{l0_fit, L0Config};
+use backbone_learn::solvers::kmeans::KMeansConfig;
+
+fn engine() -> Option<Engine> {
+    match Engine::load("artifacts") {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP: no artifacts ({err}); run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn pjrt_screen_matches_native_within_f32_tolerance() {
+    let Some(engine) = engine() else { return };
+    let cfg = SparseRegressionConfig { n: 200, p: 1000, k: 5, rho: 0.2, snr: 5.0 };
+    let data = generate(&cfg, &mut Rng::seed_from_u64(1));
+    let pjrt = engine
+        .screen_utilities(&data.x, &data.y)
+        .expect("pjrt screen failed")
+        .expect("no bucket for (200, 1000) — rebuild artifacts");
+    let native = correlation_utilities(&data.x, &data.y);
+    assert_eq!(pjrt.len(), native.len());
+    for (j, (a, b)) in pjrt.iter().zip(&native).enumerate() {
+        assert!((a - b).abs() < 5e-4, "feature {j}: pjrt {a} vs native {b}");
+    }
+}
+
+#[test]
+fn pjrt_screen_ranks_true_support_first() {
+    let Some(engine) = engine() else { return };
+    let cfg = SparseRegressionConfig { n: 200, p: 1000, k: 5, rho: 0.0, snr: 20.0 };
+    let data = generate(&cfg, &mut Rng::seed_from_u64(2));
+    let u = engine.screen_utilities(&data.x, &data.y).unwrap().unwrap();
+    let mut ranked: Vec<usize> = (0..1000).collect();
+    ranked.sort_by(|&a, &b| u[b].partial_cmp(&u[a]).unwrap());
+    let top: std::collections::BTreeSet<usize> = ranked[..5].iter().copied().collect();
+    for j in &data.support_true {
+        assert!(top.contains(j), "true feature {j} not in top-5 by PJRT screen");
+    }
+}
+
+#[test]
+fn pjrt_iht_support_matches_native_heuristic_quality() {
+    let Some(engine) = engine() else { return };
+    // Shape chosen to hit the (n=200, p≤512, k=5) bucket.
+    let cfg = SparseRegressionConfig { n: 200, p: 400, k: 5, rho: 0.1, snr: 10.0 };
+    let data = generate(&cfg, &mut Rng::seed_from_u64(3));
+    let support = engine
+        .iht_support(&data.x, &data.y, 5)
+        .expect("pjrt iht failed")
+        .expect("no bucket for (200, 400, k=5)");
+    assert!(support.len() <= 5);
+    assert!(support.iter().all(|&j| j < 400), "padded column selected: {support:?}");
+    let rec = backbone_learn::metrics::support_recovery(&support, &data.support_true);
+    assert!(rec.f1 >= 0.8, "f1={} (support {support:?})", rec.f1);
+    // Native heuristic on the same data for comparison: PJRT support must
+    // be comparable to native.
+    let native = l0_fit(&data.x, &data.y, &L0Config { k: 5, ..Default::default() });
+    let native_rec =
+        backbone_learn::metrics::support_recovery(&native.support, &data.support_true);
+    assert!(rec.f1 >= native_rec.f1 - 0.4, "pjrt {} vs native {}", rec.f1, native_rec.f1);
+}
+
+#[test]
+fn pjrt_backend_equals_native_backend_on_subproblem_fit() {
+    let Some(engine) = engine() else { return };
+    let backend = Backend::Pjrt(std::sync::Arc::new(engine));
+    let cfg = SparseRegressionConfig { n: 200, p: 300, k: 4, rho: 0.0, snr: 50.0 };
+    let data = generate(&cfg, &mut Rng::seed_from_u64(4));
+    let l0cfg = L0Config { k: 4, ..Default::default() };
+    let via_pjrt = backend.l0_subproblem_fit(&data.x, &data.y, &l0cfg);
+    let via_native = Backend::Native.l0_subproblem_fit(&data.x, &data.y, &l0cfg);
+    // Clean signal: both must find the exact true support, and the
+    // polished coefficients then agree to f32 precision.
+    assert_eq!(via_pjrt.support, data.support_true);
+    assert_eq!(via_native.support, data.support_true);
+    for (a, b) in via_pjrt.beta.iter().zip(&via_native.beta) {
+        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pjrt_lloyd_step_matches_native_assignment() {
+    let Some(engine) = engine() else { return };
+    // Bucket (n=16, d=2, k=4).
+    let mut rng = Rng::seed_from_u64(5);
+    let mut pts = Matrix::zeros(16, 2);
+    for i in 0..16 {
+        let cx = if i < 8 { 0.0 } else { 10.0 };
+        pts.set(i, 0, cx + rng.normal() * 0.3);
+        pts.set(i, 1, cx + rng.normal() * 0.3);
+    }
+    let mut cents = Matrix::zeros(4, 2);
+    cents.row_mut(0).copy_from_slice(&[0.0, 0.0]);
+    cents.row_mut(1).copy_from_slice(&[10.0, 10.0]);
+    cents.row_mut(2).copy_from_slice(&[5.0, 5.0]);
+    cents.row_mut(3).copy_from_slice(&[-5.0, -5.0]);
+    let (new_c, labels, inertia) = engine
+        .lloyd_step(&pts, &cents)
+        .expect("pjrt lloyd failed")
+        .expect("no bucket for (16, 2, 4)");
+    // Points near (0,0) label 0, near (10,10) label 1.
+    for (i, &l) in labels.iter().enumerate().take(8) {
+        assert_eq!(l, 0, "point {i}");
+    }
+    for (i, &l) in labels.iter().enumerate().skip(8) {
+        assert_eq!(l, 1, "point {i}");
+    }
+    assert!(inertia > 0.0 && inertia < 50.0, "inertia={inertia}");
+    // Updated centroids moved towards the blob means.
+    assert!((new_c.get(0, 0) - 0.0).abs() < 0.5);
+    assert!((new_c.get(1, 0) - 10.0).abs() < 0.5);
+}
+
+#[test]
+fn pjrt_kmeans_equals_native_quality() {
+    let Some(engine) = engine() else { return };
+    let data = backbone_learn::data::blobs::generate(
+        &backbone_learn::data::blobs::BlobsConfig {
+            n: 16,
+            p: 2,
+            true_clusters: 4,
+            cluster_std: 0.3,
+            center_box: 8.0,
+            min_center_dist: 5.0,
+        },
+        &mut Rng::seed_from_u64(6),
+    );
+    let backend = Backend::Pjrt(std::sync::Arc::new(engine));
+    let cfg = KMeansConfig { k: 4, n_init: 5, ..Default::default() };
+    let pjrt = backend.kmeans(&data.x, &cfg, &mut Rng::seed_from_u64(7));
+    let native = Backend::Native.kmeans(&data.x, &cfg, &mut Rng::seed_from_u64(7));
+    let ari_pjrt =
+        backbone_learn::metrics::adjusted_rand_index(&pjrt.labels, &data.labels_true);
+    let ari_native =
+        backbone_learn::metrics::adjusted_rand_index(&native.labels, &data.labels_true);
+    assert!(ari_pjrt > 0.9, "pjrt ari={ari_pjrt}");
+    assert!(ari_native > 0.9, "native ari={ari_native}");
+    // Same inertia up to f32 noise (same blobs, both converged).
+    assert!((pjrt.inertia - native.inertia).abs() < 0.05 * native.inertia.max(1e-9));
+}
+
+#[test]
+fn backend_falls_back_when_no_bucket_matches() {
+    let Some(engine) = engine() else { return };
+    let backend = Backend::Pjrt(std::sync::Arc::new(engine));
+    // n = 73 matches no bucket → must silently fall back to native.
+    let cfg = SparseRegressionConfig { n: 73, p: 50, k: 3, rho: 0.0, snr: 5.0 };
+    let data = generate(&cfg, &mut Rng::seed_from_u64(8));
+    let u = backend.correlation_utilities(&data.x, &data.y);
+    let native = correlation_utilities(&data.x, &data.y);
+    assert_eq!(u, native, "fallback must be bit-identical to native");
+}
+
+#[test]
+fn describe_artifacts_lists_entries() {
+    let Some(engine) = engine() else { return };
+    let desc = engine.describe();
+    assert!(desc.contains("screen"));
+    assert!(desc.contains("iht"));
+    assert!(desc.contains("lloyd"));
+}

@@ -1,0 +1,278 @@
+//! Cross-solver integration: the exact solvers agree with each other and
+//! with the heuristics they bound, on shared synthetic workloads.
+
+use backbone_learn::data::blobs;
+use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
+use backbone_learn::linalg::Matrix;
+use backbone_learn::metrics::adjusted_rand_index;
+use backbone_learn::rng::Rng;
+use backbone_learn::solvers::cd::{l0_fit, L0Config};
+use backbone_learn::solvers::clique::{
+    brute_force_clustering, clique_solve, labels_objective, CliqueConfig,
+};
+use backbone_learn::solvers::kmeans::{kmeans_fit, KMeansConfig};
+use backbone_learn::solvers::l0bnb::{l0bnb_solve, L0BnbConfig};
+use backbone_learn::solvers::lp::{self, LinearProgram, Sense};
+use backbone_learn::solvers::mip::{mip_solve, Callbacks, Mip, MipConfig};
+use backbone_learn::solvers::SolveStatus;
+use backbone_learn::util::Budget;
+
+#[test]
+fn exact_l0bnb_objective_never_worse_than_heuristic() {
+    for seed in 0..5 {
+        let data = generate(
+            &SparseRegressionConfig { n: 60, p: 40, k: 5, rho: 0.5, snr: 2.0 },
+            &mut Rng::seed_from_u64(seed),
+        );
+        let heur = l0_fit(&data.x, &data.y, &L0Config { k: 5, lambda2: 1e-3, ..Default::default() });
+        let exact = l0bnb_solve(
+            &data.x,
+            &data.y,
+            &L0BnbConfig { k: 5, lambda2: 1e-3, gap_tol: 1e-9, max_nodes: 0 },
+            &Budget::seconds(120.0),
+        );
+        assert!(
+            exact.objective <= heur.objective + 1e-6,
+            "seed {seed}: exact {} > heuristic {}",
+            exact.objective,
+            heur.objective
+        );
+    }
+}
+
+#[test]
+fn exact_clustering_objective_never_worse_than_kmeans() {
+    for seed in 0..3 {
+        let data = blobs::generate(
+            &blobs::BlobsConfig {
+                n: 10,
+                p: 2,
+                true_clusters: 3,
+                cluster_std: 0.8,
+                center_box: 6.0,
+                min_center_dist: 3.0,
+            },
+            &mut Rng::seed_from_u64(seed),
+        );
+        let km = kmeans_fit(
+            &data.x,
+            &KMeansConfig { k: 3, ..Default::default() },
+            &mut Rng::seed_from_u64(seed + 100),
+        );
+        let km_obj = labels_objective(&data.x, &km.labels);
+        let exact = clique_solve(
+            &data.x,
+            &CliqueConfig { k: 3, min_cluster_size: 1, ..Default::default() },
+            &Budget::seconds(120.0),
+        )
+        .unwrap();
+        assert_eq!(exact.status, SolveStatus::Optimal, "seed {seed}");
+        assert!(
+            exact.objective <= km_obj + 1e-6,
+            "seed {seed}: exact {} > kmeans {}",
+            exact.objective,
+            km_obj
+        );
+        // And equals brute force.
+        let (_, bf_obj) = brute_force_clustering(&data.x, 3, 1);
+        assert!((exact.objective - bf_obj).abs() < 1e-6, "seed {seed}");
+    }
+}
+
+#[test]
+fn milp_assignment_formulation_agrees_with_clique_solver() {
+    // Model a tiny clustering instance directly as a MILP over pair
+    // variables with explicit (non-lazy) triangle constraints, solve with
+    // the generic mip solver, and cross-check the clique solver.
+    let data = blobs::generate(
+        &blobs::BlobsConfig {
+            n: 6,
+            p: 2,
+            true_clusters: 2,
+            cluster_std: 0.4,
+            center_box: 6.0,
+            min_center_dist: 4.0,
+        },
+        &mut Rng::seed_from_u64(17),
+    );
+    let n = 6;
+    let n_pairs = n * (n - 1) / 2;
+    let pidx = |i: usize, j: usize| backbone_learn::solvers::clique::pair_index(n, i, j);
+
+    let mut lpm = LinearProgram::new(n_pairs);
+    lpm.bounds = vec![(0.0, 1.0); n_pairs];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            lpm.objective[pidx(i, j)] =
+                backbone_learn::linalg::sqdist(data.x.row(i), data.x.row(j));
+        }
+    }
+    // All triangle inequalities, explicitly.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            for l in (j + 1)..n {
+                for (a, b, c) in [
+                    (pidx(i, j), pidx(j, l), pidx(i, l)),
+                    (pidx(i, j), pidx(i, l), pidx(j, l)),
+                    (pidx(j, l), pidx(i, l), pidx(i, j)),
+                ] {
+                    lpm.add_constraint(
+                        vec![(a, 1.0), (b, 1.0), (c, -1.0)],
+                        Sense::Le,
+                        1.0,
+                    );
+                }
+            }
+        }
+    }
+    // ≤ 2 clusters ⇒ ≥ n − 2 co-clustered pairs (spanning-forest bound)…
+    lpm.add_constraint(
+        (0..n_pairs).map(|idx| (idx, 1.0)).collect(),
+        Sense::Ge,
+        (n - 2) as f64,
+    );
+    // …plus the exact pigeonhole constraints: every 3-subset of points
+    // must contain at least one co-clustered pair (the clique solver
+    // generates these lazily; here we enumerate them all).
+    for a in 0..n {
+        for b in (a + 1)..n {
+            for c in (b + 1)..n {
+                lpm.add_constraint(
+                    vec![(pidx(a, b), 1.0), (pidx(a, c), 1.0), (pidx(b, c), 1.0)],
+                    Sense::Ge,
+                    1.0,
+                );
+            }
+        }
+    }
+    let mip = Mip { lp: lpm, binaries: (0..n_pairs).collect() };
+    let res = mip_solve(&mip, &MipConfig::default(), &Budget::seconds(120.0), &Callbacks::default())
+        .unwrap();
+    assert_eq!(res.status, SolveStatus::Optimal);
+
+    let clique = clique_solve(
+        &data.x,
+        &CliqueConfig { k: 2, min_cluster_size: 1, ..Default::default() },
+        &Budget::seconds(120.0),
+    )
+    .unwrap();
+    assert_eq!(clique.status, SolveStatus::Optimal);
+    assert!(
+        (res.objective - clique.objective).abs() < 1e-6,
+        "explicit MILP {} vs lazy clique {}",
+        res.objective,
+        clique.objective
+    );
+}
+
+#[test]
+fn lp_duality_gap_zero_on_random_feasible_lps() {
+    // Weak-duality sanity: for max-form LPs converted to min form, the
+    // simplex optimum equals the optimum of the equivalent re-solve after
+    // perturbation-free round trip (determinism), and is stable across
+    // constraint reordering.
+    let mut rng = Rng::seed_from_u64(23);
+    for _ in 0..10 {
+        let nv = 5;
+        let mut lpm = LinearProgram::new(nv);
+        lpm.bounds = vec![(0.0, 2.0); nv];
+        for j in 0..nv {
+            lpm.objective[j] = rng.uniform(-1.0, 1.0);
+        }
+        let mut rows = Vec::new();
+        for _ in 0..4 {
+            let coeffs: Vec<(usize, f64)> =
+                (0..nv).map(|j| (j, rng.uniform(-1.0, 1.0))).collect();
+            rows.push((coeffs, rng.uniform(0.5, 2.0)));
+        }
+        for (coeffs, rhs) in &rows {
+            lpm.add_constraint(coeffs.clone(), Sense::Le, *rhs);
+        }
+        let a = lp::solve(&lpm).unwrap();
+        // Reorder constraints; optimum must be identical.
+        let mut lpm2 = LinearProgram::new(nv);
+        lpm2.bounds = lpm.bounds.clone();
+        lpm2.objective = lpm.objective.clone();
+        for (coeffs, rhs) in rows.iter().rev() {
+            lpm2.add_constraint(coeffs.clone(), Sense::Le, *rhs);
+        }
+        let b = lp::solve(&lpm2).unwrap();
+        assert_eq!(a.status, SolveStatus::Optimal);
+        assert!((a.objective - b.objective).abs() < 1e-7);
+    }
+}
+
+#[test]
+fn kmeans_and_exact_agree_on_well_separated_data() {
+    let data = blobs::generate(
+        &blobs::BlobsConfig {
+            n: 9,
+            p: 2,
+            true_clusters: 3,
+            cluster_std: 0.15,
+            center_box: 10.0,
+            min_center_dist: 8.0,
+        },
+        &mut Rng::seed_from_u64(31),
+    );
+    let km = kmeans_fit(
+        &data.x,
+        &KMeansConfig { k: 3, ..Default::default() },
+        &mut Rng::seed_from_u64(32),
+    );
+    let exact = clique_solve(
+        &data.x,
+        &CliqueConfig { k: 3, min_cluster_size: 1, ..Default::default() },
+        &Budget::seconds(120.0),
+    )
+    .unwrap();
+    // On trivially-separable data both must recover the ground truth.
+    assert_eq!(adjusted_rand_index(&km.labels, &data.labels_true), 1.0);
+    assert_eq!(adjusted_rand_index(&exact.labels, &data.labels_true), 1.0);
+}
+
+#[test]
+fn binarized_exact_tree_consistent_with_continuous_cart_on_axis_aligned_truth() {
+    // Ground truth is an axis-aligned depth-1 rule; both solvers must
+    // reach zero training error.
+    let mut rng = Rng::seed_from_u64(37);
+    let n = 120;
+    let mut x = Matrix::zeros(n, 3);
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        for j in 0..3 {
+            x.set(i, j, rng.uniform(0.0, 1.0));
+        }
+        y[i] = if x.get(i, 1) <= 0.5 { 1.0 } else { 0.0 };
+    }
+    let cart = backbone_learn::solvers::cart::cart_fit(
+        &x,
+        &y,
+        &backbone_learn::solvers::cart::CartConfig { max_depth: 1, ..Default::default() },
+    );
+    let cart_err = cart
+        .predict(&x)
+        .iter()
+        .zip(&y)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert_eq!(cart_err, 0);
+
+    let bz = backbone_learn::data::binarize(&x, 7);
+    let exact = backbone_learn::solvers::exact_tree::exact_tree_solve(
+        &bz.x_bin,
+        &y,
+        &backbone_learn::solvers::exact_tree::ExactTreeConfig {
+            depth: 1,
+            min_leaf: 1,
+            feature_subset: None,
+        },
+        &Budget::seconds(60.0),
+    );
+    // Quantile thresholds may not hit exactly 0.5; allow a small slack.
+    assert!(
+        exact.errors <= n / 10,
+        "exact binarized tree errors too high: {}",
+        exact.errors
+    );
+}

@@ -1,0 +1,279 @@
+//! Property tests on coordinator invariants (DESIGN.md §6): the
+//! Algorithm-1 loop's contracts hold for arbitrary learners, data sizes
+//! and hyperparameters.
+
+use backbone_learn::backbone::{
+    run_backbone, subproblems::construct_subproblems, BackboneLearner, BackboneParams,
+    SubproblemStrategy,
+};
+use backbone_learn::prop::{property, Gen};
+use backbone_learn::rng::Rng;
+use backbone_learn::util::Budget;
+
+/// Learner with a random relevant set; subproblems report the relevant
+/// entities they see (the idealized-oracle model of the paper's analysis).
+struct OracleLearner {
+    n_entities: usize,
+    relevant: Vec<usize>,
+    subproblem_sizes: Vec<usize>,
+    reduced_backbone: Vec<usize>,
+}
+
+impl BackboneLearner for OracleLearner {
+    type Data = ();
+    type Indicator = usize;
+    type Model = usize; // backbone length
+
+    fn num_entities(&self, _d: &()) -> usize {
+        self.n_entities
+    }
+
+    fn utilities(&mut self, _d: &()) -> Vec<f64> {
+        // Utilities loosely correlated with relevance (relevant get 2x).
+        (0..self.n_entities)
+            .map(|j| if self.relevant.contains(&j) { 2.0 } else { 1.0 })
+            .collect()
+    }
+
+    fn fit_subproblem(
+        &mut self,
+        _d: &(),
+        entities: &[usize],
+        _rng: &mut Rng,
+    ) -> anyhow::Result<Vec<usize>> {
+        self.subproblem_sizes.push(entities.len());
+        // Invariant: entities are sorted, unique.
+        assert!(entities.windows(2).all(|w| w[0] < w[1]), "unsorted subproblem");
+        Ok(entities.iter().copied().filter(|j| self.relevant.contains(j)).collect())
+    }
+
+    fn indicator_entities(&self, i: &usize) -> Vec<usize> {
+        vec![*i]
+    }
+
+    fn fit_reduced(&mut self, _d: &(), backbone: &[usize], _b: &Budget) -> anyhow::Result<usize> {
+        self.reduced_backbone = backbone.to_vec();
+        Ok(backbone.len())
+    }
+}
+
+fn random_params(g: &mut Gen) -> BackboneParams {
+    BackboneParams {
+        num_subproblems: g.usize_in(1..12),
+        beta: g.f64_in(0.1..1.0),
+        alpha: g.f64_in(0.1..1.0),
+        b_max: if g.bool_with(0.5) { g.usize_in(1..30) } else { 0 },
+        max_iterations: g.usize_in(1..5),
+        strategy: if g.bool_with(0.5) {
+            SubproblemStrategy::UniformCoverage
+        } else {
+            SubproblemStrategy::UtilityWeighted
+        },
+        seed: g.usize_in(0..1_000_000) as u64,
+    }
+}
+
+#[test]
+fn prop_backbone_subset_of_universe_and_bmax_respected() {
+    property("backbone ⊆ relevant, |B| ≤ B_max", 150, |g| {
+        let n = g.usize_in(5..120);
+        let n_rel = g.usize_in(1..n.max(2)).min(n);
+        let relevant = g.subset(n, n_rel);
+        let params = random_params(g);
+        let mut learner = OracleLearner {
+            n_entities: n,
+            relevant: relevant.clone(),
+            subproblem_sizes: vec![],
+            reduced_backbone: vec![],
+        };
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+
+        // 1. Backbone is sorted & unique.
+        assert!(fit.backbone.windows(2).all(|w| w[0] < w[1]));
+        // 2. Backbone only contains relevant entities (oracle learner).
+        for &b in &fit.backbone {
+            assert!(relevant.contains(&b), "non-relevant {b} in backbone");
+        }
+        // 3. B_max honoured.
+        if params.b_max > 0 {
+            assert!(fit.backbone.len() <= params.b_max);
+        }
+        // 4. Diagnostics consistent.
+        let d = &fit.diagnostics;
+        assert_eq!(d.backbone_size, fit.backbone.len());
+        assert!(d.screened_universe <= n);
+        assert!(d.screened_universe >= 1);
+        assert!(!d.iterations.is_empty());
+        assert!(d.iterations.len() <= params.max_iterations);
+        // 5. Reduced fit saw exactly the final backbone.
+        assert_eq!(learner.reduced_backbone, fit.backbone);
+        // 6. Model = |B| (oracle learner contract).
+        assert_eq!(fit.model, fit.backbone.len());
+    });
+}
+
+#[test]
+fn prop_subproblem_counts_follow_m_over_2t() {
+    property("⌈M/2^t⌉ schedule", 100, |g| {
+        let n = g.usize_in(10..80);
+        let params = BackboneParams {
+            num_subproblems: g.usize_in(1..16),
+            beta: g.f64_in(0.2..1.0),
+            alpha: 1.0,
+            b_max: 1, // unreachable → runs to the iteration cap
+            max_iterations: g.usize_in(1..5),
+            strategy: SubproblemStrategy::UniformCoverage,
+            seed: 7,
+        };
+        let mut learner = OracleLearner {
+            n_entities: n,
+            relevant: (0..n).collect(), // everything relevant → never shrinks
+            subproblem_sizes: vec![],
+            reduced_backbone: vec![],
+        };
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+        for (t, it) in fit.diagnostics.iterations.iter().enumerate() {
+            let expected = (((params.num_subproblems as f64) / 2f64.powi(t as i32)).ceil()
+                as usize)
+                .max(1);
+            assert_eq!(it.num_subproblems, expected, "iteration {t}");
+            // Subproblem size = ⌈β · |U_t|⌉ clamped.
+            let expect_size = (((params.beta * it.universe_size as f64).ceil()) as usize)
+                .clamp(1, it.universe_size);
+            assert_eq!(it.subproblem_size, expect_size, "iteration {t}");
+        }
+    });
+}
+
+#[test]
+fn prop_determinism_same_seed_same_backbone() {
+    property("determinism", 60, |g| {
+        let n = g.usize_in(5..60);
+        let n_rel = g.usize_in(1..n.max(2)).min(n);
+        let relevant = g.subset(n, n_rel);
+        let params = random_params(g);
+        let run = |relevant: Vec<usize>| {
+            let mut l = OracleLearner {
+                n_entities: n,
+                relevant,
+                subproblem_sizes: vec![],
+                reduced_backbone: vec![],
+            };
+            run_backbone(&mut l, &(), &params, &Budget::unlimited()).unwrap().backbone
+        };
+        assert_eq!(run(relevant.clone()), run(relevant));
+    });
+}
+
+#[test]
+fn prop_construct_subproblems_invariants() {
+    property("construct_subproblems invariants", 200, |g| {
+        let pool = g.usize_in(1..100) + 50;
+        let universe_n = g.usize_in(1..50);
+        let universe = g.subset(pool, universe_n);
+        let utilities: Vec<f64> = (0..pool).map(|_| g.f64_in(0.0..1.0)).collect();
+        let m = g.usize_in(1..10);
+        let size = g.usize_in(1..universe.len() + 1);
+        let strategy = if g.bool_with(0.5) {
+            SubproblemStrategy::UniformCoverage
+        } else {
+            SubproblemStrategy::UtilityWeighted
+        };
+        let sps = construct_subproblems(&universe, &utilities, m, size, strategy, g.rng());
+        assert_eq!(sps.len(), m);
+        for sp in &sps {
+            assert_eq!(sp.len(), size);
+            assert!(sp.windows(2).all(|w| w[0] < w[1]), "unsorted/dup");
+            for e in sp {
+                assert!(universe.contains(e), "entity outside universe");
+            }
+        }
+        // Coverage property for the coverage strategy.
+        if strategy == SubproblemStrategy::UniformCoverage && m * size >= universe.len() {
+            let mut seen: Vec<usize> = sps.iter().flatten().copied().collect();
+            seen.sort_unstable();
+            seen.dedup();
+            assert_eq!(seen, universe, "coverage violated");
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_regression_model_consistency() {
+    use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
+    use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
+
+    property("sparse-regression model invariants", 15, |g| {
+        let n = g.usize_in(30..80);
+        let p = g.usize_in(20..120);
+        let k = g.usize_in(1..6).min(p);
+        let data = generate(
+            &SparseRegressionConfig {
+                n,
+                p,
+                k,
+                rho: g.f64_in(0.0..0.6),
+                snr: g.f64_in(1.0..10.0),
+            },
+            g.rng(),
+        );
+        let mut bb = BackboneSparseRegression::new(
+            g.f64_in(0.2..1.0),
+            g.f64_in(0.2..1.0),
+            g.usize_in(1..6),
+            k,
+        );
+        bb.params.seed = g.usize_in(0..1000) as u64;
+        let model = bb.fit(&data.x, &data.y).unwrap().clone();
+        // Support ≤ k, beta zero off-support.
+        assert!(model.support.len() <= k);
+        for (j, &b) in model.beta.iter().enumerate() {
+            if model.support.contains(&j) {
+                assert!(b != 0.0);
+            } else {
+                assert_eq!(b, 0.0, "beta[{j}] nonzero outside support");
+            }
+        }
+        // Gap within the solver tolerance when optimal.
+        if model.status == backbone_learn::solvers::SolveStatus::Optimal {
+            assert!(model.gap <= bb.gap_tol + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_clustering_labels_valid_and_pairs_respected() {
+    use backbone_learn::backbone::clustering::BackboneClustering;
+    use backbone_learn::data::blobs::{generate, BlobsConfig};
+
+    property("clustering label invariants", 8, |g| {
+        let n = g.usize_in(8..14);
+        let k = g.usize_in(2..4);
+        let data = generate(
+            &BlobsConfig {
+                n,
+                p: 2,
+                true_clusters: k,
+                cluster_std: g.f64_in(0.2..0.8),
+                center_box: 8.0,
+                min_center_dist: 5.0,
+            },
+            g.rng(),
+        );
+        let mut bb = BackboneClustering::new(g.f64_in(0.6..1.0), g.usize_in(1..4), k);
+        bb.params.seed = g.usize_in(0..1000) as u64;
+        let model = bb.fit_with_budget(&data.x, &Budget::seconds(30.0)).unwrap().clone();
+        assert_eq!(model.labels.len(), n);
+        let kk = model.labels.iter().max().unwrap() + 1;
+        assert!(kk <= n);
+        if model.status == backbone_learn::solvers::SolveStatus::Optimal {
+            let clusters = model
+                .labels
+                .iter()
+                .collect::<std::collections::BTreeSet<_>>()
+                .len();
+            assert!(clusters <= k, "{clusters} clusters with k={k}");
+        }
+        assert!(model.objective.is_finite());
+    });
+}

@@ -1,0 +1,244 @@
+//! Property tests on solver invariants (DESIGN.md §6): LP optimality
+//! conditions, MILP bound sandwiching, L0BnB vs brute force, exact-tree
+//! optimality vs CART, k-means inertia monotonicity.
+
+use backbone_learn::linalg::Matrix;
+use backbone_learn::prop::property;
+use backbone_learn::rng::Rng;
+use backbone_learn::solvers::cart::{cart_fit, CartConfig};
+use backbone_learn::solvers::exact_tree::{exact_tree_solve, ExactTreeConfig};
+use backbone_learn::solvers::kmeans::{kmeans_fit, KMeansConfig};
+use backbone_learn::solvers::l0bnb::{brute_force, l0bnb_solve, L0BnbConfig};
+use backbone_learn::solvers::lp::{self, LinearProgram, Sense};
+use backbone_learn::solvers::mip::{mip_solve, Callbacks, Mip, MipConfig};
+use backbone_learn::solvers::SolveStatus;
+use backbone_learn::util::Budget;
+
+#[test]
+fn prop_lp_solution_feasible_and_beats_feasible_corners() {
+    property("LP optimality vs box corners", 60, |g| {
+        let nv = g.usize_in(2..6);
+        let mut lp = LinearProgram::new(nv);
+        for j in 0..nv {
+            lp.objective[j] = g.f64_in(-1.0..1.0);
+            lp.bounds[j] = (0.0, 1.0);
+        }
+        for _ in 0..g.usize_in(1..4) {
+            let coeffs: Vec<(usize, f64)> =
+                (0..nv).map(|j| (j, g.f64_in(-1.0..1.0))).collect();
+            lp.add_constraint(coeffs, Sense::Le, g.f64_in(0.3..2.0));
+        }
+        let sol = lp::solve(&lp).unwrap();
+        // x = 0 is always feasible here (rhs > 0), so LP must be Optimal.
+        assert_eq!(sol.status, SolveStatus::Optimal);
+        // Feasibility of the solution.
+        for c in &lp.constraints {
+            let lhs: f64 = c.coeffs.iter().map(|&(j, a)| a * sol.x[j]).sum();
+            assert!(lhs <= c.rhs + 1e-6);
+        }
+        for (j, &(l, u)) in lp.bounds.iter().enumerate() {
+            assert!(sol.x[j] >= l - 1e-7 && sol.x[j] <= u + 1e-7);
+        }
+        // Optimality: no feasible box corner does better.
+        for mask in 0u32..(1 << nv) {
+            let corner: Vec<f64> =
+                (0..nv).map(|j| if mask & (1 << j) != 0 { 1.0 } else { 0.0 }).collect();
+            let feasible = lp.constraints.iter().all(|c| {
+                c.coeffs.iter().map(|&(j, a)| a * corner[j]).sum::<f64>() <= c.rhs + 1e-9
+            });
+            if feasible {
+                let obj: f64 = lp.objective.iter().zip(&corner).map(|(c, v)| c * v).sum();
+                assert!(sol.objective <= obj + 1e-6);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mip_matches_brute_force_and_bounds_sandwich() {
+    property("MILP = brute force", 40, |g| {
+        let nv = g.usize_in(2..8);
+        let mut lpm = LinearProgram::new(nv);
+        lpm.bounds = vec![(0.0, 1.0); nv];
+        for j in 0..nv {
+            lpm.objective[j] = g.f64_in(-1.0..1.0);
+        }
+        for _ in 0..g.usize_in(1..4) {
+            let coeffs: Vec<(usize, f64)> =
+                (0..nv).map(|j| (j, g.f64_in(-1.0..1.0))).collect();
+            lpm.add_constraint(coeffs, Sense::Le, g.f64_in(-0.5..1.5));
+        }
+        let mip = Mip { lp: lpm.clone(), binaries: (0..nv).collect() };
+        let res =
+            mip_solve(&mip, &MipConfig::default(), &Budget::unlimited(), &Callbacks::default())
+                .unwrap();
+
+        // Brute force over all binary points.
+        let mut best: Option<f64> = None;
+        for mask in 0u32..(1 << nv) {
+            let x: Vec<f64> =
+                (0..nv).map(|j| if mask & (1 << j) != 0 { 1.0 } else { 0.0 }).collect();
+            let feasible = lpm.constraints.iter().all(|c| {
+                c.coeffs.iter().map(|&(j, a)| a * x[j]).sum::<f64>() <= c.rhs + 1e-9
+            });
+            if feasible {
+                let obj: f64 = lpm.objective.iter().zip(&x).map(|(c, v)| c * v).sum();
+                best = Some(best.map_or(obj, |b: f64| b.min(obj)));
+            }
+        }
+        match best {
+            Some(bobj) => {
+                assert_eq!(res.status, SolveStatus::Optimal);
+                assert!(
+                    (res.objective - bobj).abs() < 1e-6,
+                    "mip {} vs brute {bobj}",
+                    res.objective
+                );
+                // Bound sandwich: lower ≤ objective.
+                assert!(res.lower_bound <= res.objective + 1e-6);
+            }
+            None => assert_eq!(res.status, SolveStatus::Infeasible),
+        }
+    });
+}
+
+#[test]
+fn prop_l0bnb_matches_brute_force_small() {
+    property("L0BnB = brute force", 15, |g| {
+        let n = g.usize_in(15..40);
+        let p = g.usize_in(4..10);
+        let k = g.usize_in(1..4).min(p);
+        let mut x = Matrix::zeros(n, p);
+        for i in 0..n {
+            for j in 0..p {
+                x.set(i, j, g.normal());
+            }
+        }
+        let y: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let cfg = L0BnbConfig { k, lambda2: 0.01, gap_tol: 1e-9, max_nodes: 0 };
+        let res = l0bnb_solve(&x, &y, &cfg, &Budget::unlimited());
+        let (_, bf_obj) = brute_force(&x, &y, &cfg);
+        assert_eq!(res.status, SolveStatus::Optimal);
+        assert!(
+            res.objective <= bf_obj * (1.0 + 1e-6) + 1e-9,
+            "bnb {} worse than brute {bf_obj}",
+            res.objective
+        );
+        assert!(res.lower_bound <= res.objective + 1e-9);
+    });
+}
+
+#[test]
+fn prop_exact_tree_never_worse_than_cart() {
+    property("exact tree ≤ CART errors", 25, |g| {
+        let n = g.usize_in(20..80);
+        let p = g.usize_in(2..7);
+        let mut x = Matrix::zeros(n, p);
+        for i in 0..n {
+            for j in 0..p {
+                x.set(i, j, if g.bool_with(0.5) { 1.0 } else { 0.0 });
+            }
+        }
+        let y: Vec<f64> = (0..n).map(|_| if g.bool_with(0.5) { 1.0 } else { 0.0 }).collect();
+        let depth = g.usize_in(1..3);
+        let exact = exact_tree_solve(
+            &x,
+            &y,
+            &ExactTreeConfig { depth, min_leaf: 1, feature_subset: None },
+            &Budget::unlimited(),
+        );
+        let cart = cart_fit(
+            &x,
+            &y,
+            &CartConfig { max_depth: depth, min_samples_leaf: 1, min_samples_split: 2, feature_subset: None },
+        );
+        let cart_pred = cart.predict(&x);
+        let cart_errors = cart_pred.iter().zip(&y).filter(|(a, b)| a != b).count();
+        assert_eq!(exact.status, SolveStatus::Optimal);
+        assert!(
+            exact.errors <= cart_errors,
+            "exact {} > CART {cart_errors} at depth {depth}",
+            exact.errors
+        );
+        // Exact errors consistent with its own predictions.
+        let pred = exact.predict(&x);
+        let errs = pred.iter().zip(&y).filter(|(a, b)| a != b).count();
+        assert_eq!(errs, exact.errors);
+    });
+}
+
+#[test]
+fn prop_kmeans_inertia_monotone_in_k_and_labels_valid() {
+    property("k-means inertia monotone in k", 20, |g| {
+        let n = g.usize_in(10..50);
+        let d = g.usize_in(1..4);
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                x.set(i, j, g.normal() * 3.0);
+            }
+        }
+        let mut rng = Rng::seed_from_u64(g.case_seed);
+        let mut prev = f64::INFINITY;
+        for k in 1..=n.min(6) {
+            let m = kmeans_fit(&x, &KMeansConfig { k, n_init: 4, ..Default::default() }, &mut rng);
+            assert_eq!(m.labels.len(), n);
+            assert!(m.labels.iter().all(|&l| l < k));
+            // Inertia = Σ d²(x_i, c_{l_i}) — verify against definition.
+            let manual: f64 = (0..n)
+                .map(|i| backbone_learn::linalg::sqdist(x.row(i), m.centroids.row(m.labels[i])))
+                .sum();
+            assert!((manual - m.inertia).abs() < 1e-6 * manual.max(1.0));
+            // Monotone non-increasing in k (with restarts, near-monotone;
+            // allow 1% slack for local optima).
+            assert!(m.inertia <= prev * 1.01 + 1e-9, "k={k}: {} > {prev}", m.inertia);
+            prev = m.inertia.min(prev);
+        }
+    });
+}
+
+#[test]
+fn prop_elastic_net_kkt_conditions() {
+    use backbone_learn::solvers::cd::{elastic_net_fit, ElasticNetConfig};
+    property("lasso KKT on standardized problem", 20, |g| {
+        let n = g.usize_in(20..60);
+        let p = g.usize_in(2..10);
+        let mut x = Matrix::zeros(n, p);
+        for i in 0..n {
+            for j in 0..p {
+                x.set(i, j, g.normal());
+            }
+        }
+        let y: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let lambda = g.f64_in(0.01..0.5);
+        let cfg = ElasticNetConfig { alpha: 1.0, tol: 1e-10, max_iter: 5000, ..Default::default() };
+        let m = elastic_net_fit(&x, &y, lambda, &cfg);
+        // KKT for the lasso on the *standardized* problem: re-standardize
+        // and check |(1/n) x̃_jᵀ r̃| ≤ λ (+tol) for zero coords, = λ for
+        // active coords.
+        let mut xs = x.clone();
+        let scale = xs.standardize_columns();
+        let y_mean = backbone_learn::linalg::mean(&y);
+        let beta_std: Vec<f64> =
+            m.beta.iter().zip(&scale).map(|(b, (_, s))| b * s).collect();
+        let pred_std = xs.matvec(&beta_std);
+        let resid: Vec<f64> = y
+            .iter()
+            .zip(&pred_std)
+            .map(|(yi, pi)| (yi - y_mean) - pi)
+            .collect();
+        let grad = xs.matvec_t(&resid);
+        for j in 0..p {
+            let gj = grad[j] / n as f64;
+            if beta_std[j] == 0.0 {
+                assert!(gj.abs() <= lambda + 1e-5, "KKT violated at zero coord {j}: {gj}");
+            } else {
+                assert!(
+                    (gj - lambda * beta_std[j].signum()).abs() < 1e-5,
+                    "KKT violated at active coord {j}: {gj} vs {}",
+                    lambda * beta_std[j].signum()
+                );
+            }
+        }
+    });
+}

@@ -5,13 +5,13 @@
 //!
 //! Run: `cargo run --release --example clustering_ambiguity`
 
-use backbone_learn::backbone::clustering::BackboneClustering;
 use backbone_learn::data::blobs::{generate, BlobsConfig};
 use backbone_learn::metrics::{adjusted_rand_index, silhouette_score};
 use backbone_learn::rng::Rng;
 use backbone_learn::solvers::clique::{clique_solve, CliqueConfig};
 use backbone_learn::solvers::kmeans::{kmeans_fit, KMeansConfig};
 use backbone_learn::util::{Budget, Stopwatch};
+use backbone_learn::Backbone;
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::seed_from_u64(11);
@@ -63,8 +63,12 @@ fn main() -> anyhow::Result<()> {
 
     // --- Backbone: M k-means subproblems → exact solve within B. ---------
     let watch = Stopwatch::start();
-    let mut bb = BackboneClustering::new(1.0, 5, target_k);
-    bb.min_cluster_size = 2;
+    let mut bb = Backbone::clustering()
+        .beta(1.0)
+        .num_subproblems(5)
+        .n_clusters(target_k)
+        .min_cluster_size(2)
+        .build()?;
     let model = bb.fit_with_budget(&data.x, &Budget::seconds(120.0))?.clone();
     let d = bb.last_diagnostics.as_ref().unwrap();
     println!(

@@ -12,7 +12,7 @@
 //! Run: `cargo run --release --example custom_backbone`
 
 use backbone_learn::backbone::{
-    run_backbone, BackboneLearner, BackboneParams, SubproblemStrategy,
+    BackboneLearner, BackboneParams, ExecutionPolicy, FitPipeline, SubproblemStrategy,
 };
 use backbone_learn::data::classification::{generate, ClassificationConfig};
 use backbone_learn::linalg::Matrix;
@@ -216,9 +216,13 @@ fn main() -> Result<()> {
         b_max: 12,
         max_iterations: 3,
         strategy: SubproblemStrategy::UniformCoverage,
+        execution: ExecutionPolicy::Sequential,
         seed: 1,
     };
-    let fit = run_backbone(&mut learner, &sd, &params, &Budget::seconds(60.0))?;
+    // FitPipeline validates the params (typed BackboneError, no panics)
+    // and runs Algorithm 1 with the batch-structured subproblem stage.
+    let pipeline = FitPipeline::new(params)?;
+    let fit = pipeline.run(&mut learner, &sd, &Budget::seconds(60.0))?;
 
     let d = &fit.diagnostics;
     println!("screened universe {} → backbone {:?}", d.screened_universe, fit.backbone);

@@ -4,7 +4,6 @@
 //!
 //! Run: `cargo run --release --example decision_tree_cv`
 
-use backbone_learn::backbone::decision_tree::BackboneDecisionTree;
 use backbone_learn::data::classification::{generate, ClassificationConfig};
 use backbone_learn::data::{binarize, train_test_split};
 use backbone_learn::metrics::auc;
@@ -12,6 +11,7 @@ use backbone_learn::rng::Rng;
 use backbone_learn::solvers::cart::{cart_fit, CartConfig};
 use backbone_learn::solvers::exact_tree::{exact_tree_solve, BinNode, ExactTreeConfig};
 use backbone_learn::util::{Budget, Stopwatch};
+use backbone_learn::Backbone;
 
 fn main() -> anyhow::Result<()> {
     let mut rng = Rng::seed_from_u64(3);
@@ -103,7 +103,12 @@ fn main() -> anyhow::Result<()> {
 
     // --- Backbone: CART subproblems → exact tree on backbone features. ---
     let watch = Stopwatch::start();
-    let mut bb = BackboneDecisionTree::new(0.5, 0.5, 5, 2);
+    let mut bb = Backbone::decision_tree()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(5)
+        .depth(2)
+        .build()?;
     bb.fit_with_budget(&split.x_train, &split.y_train, &Budget::seconds(60.0))?;
     let bb_auc = auc(&split.y_test, &bb.predict_proba(&split.x_test));
     let d = bb.last_diagnostics.as_ref().unwrap();

@@ -4,6 +4,10 @@
 //! via PJRT where shape buckets match), and prints the Table-1 rows, plus
 //! shape checks that assert the paper's qualitative findings.
 //!
+//! All BbLearn rows are fitted through the `Backbone::<problem>()`
+//! builders (see `bench_support`), so this driver also exercises the
+//! unified estimator API end to end.
+//!
 //! Results of this driver are recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example end_to_end_table1 [-- --reps N]`

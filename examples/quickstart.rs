@@ -1,19 +1,21 @@
-//! Quickstart — the paper's §3 usage snippet, reproduced end to end.
+//! Quickstart — the paper's §3 usage snippet, reproduced end to end on
+//! the unified estimator API:
 //!
 //! ```text
-//! bb = BackboneSparseRegression(alpha=0.5, beta=0.5, num_subproblems=5,
-//!      lambda_2=0.001, max_nonzeros=10)
-//! bb.fit(X, y)
-//! y_pred = bb.predict(X)
+//! bb = Backbone::sparse_regression()
+//!        .alpha(0.5).beta(0.5).num_subproblems(5)
+//!        .max_nonzeros(5).lambda2(0.001)
+//!        .build()?
+//! bb.fit(X, y)?;  y_pred = bb.predict(X)
 //! ```
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
 use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
 use backbone_learn::metrics::{r2_score, support_recovery};
 use backbone_learn::rng::Rng;
 use backbone_learn::runtime::Backend;
+use backbone_learn::Backbone;
 
 fn main() -> anyhow::Result<()> {
     // Synthetic high-dimensional sparse regression: 200 samples, 1000
@@ -24,16 +26,23 @@ fn main() -> anyhow::Result<()> {
         &mut rng,
     );
 
-    // The paper's constructor: (alpha, beta, num_subproblems, max_nonzeros).
-    let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, 5);
-    bb.lambda2 = 0.001;
     // Use the AOT JAX/Pallas artifacts when available (falls back to the
     // pure-Rust hot path otherwise).
-    bb.backend = Backend::pjrt_from_dir("artifacts").unwrap_or(Backend::Native);
+    let backend = Backend::pjrt_from_dir("artifacts").unwrap_or(Backend::Native);
     println!(
         "backend: {}",
-        if bb.backend.is_pjrt() { "PJRT (AOT artifacts)" } else { "native Rust" }
+        if backend.is_pjrt() { "PJRT (AOT artifacts)" } else { "native Rust" }
     );
+
+    // The typed builder: every knob named, validated at build() time.
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(5)
+        .max_nonzeros(5)
+        .lambda2(0.001)
+        .backend(backend)
+        .build()?;
 
     let model = bb.fit(&data.x, &data.y)?.clone();
     let y_pred = bb.predict(&data.x);

@@ -4,13 +4,13 @@
 //!
 //! Run: `cargo run --release --example sparse_regression_path [-- n p k]`
 
-use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
 use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
 use backbone_learn::metrics::{r2_score, support_recovery};
 use backbone_learn::rng::Rng;
 use backbone_learn::solvers::cd::{elastic_net_path, ElasticNetConfig};
 use backbone_learn::solvers::l0bnb::{l0bnb_solve, L0BnbConfig};
 use backbone_learn::util::{Budget, Stopwatch};
+use backbone_learn::Backbone;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<usize> =
@@ -66,9 +66,16 @@ fn main() -> anyhow::Result<()> {
 
     // --- Backbone. --------------------------------------------------------
     let watch = Stopwatch::start();
-    let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, k);
-    bb.backend = backbone_learn::runtime::Backend::pjrt_from_dir("artifacts")
-        .unwrap_or(backbone_learn::runtime::Backend::Native);
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(5)
+        .max_nonzeros(k)
+        .backend(
+            backbone_learn::runtime::Backend::pjrt_from_dir("artifacts")
+                .unwrap_or(backbone_learn::runtime::Backend::Native),
+        )
+        .build()?;
     let model = bb.fit(&data.x, &data.y)?.clone();
     let t = watch.elapsed_secs();
     report("BbLearn (backbone)", model.predict(&data.x), model.predict(&test.x),

@@ -8,8 +8,23 @@
 //! the paper's formulation — the aggregated-pair equivalent here).
 //!
 //! No screening step exists for points (Table 1 lists `a = —` for
-//! clustering), so utilities are uniform and `alpha` should stay 1.
+//! clustering), so the builder pre-sets `alpha = 1.0`:
+//!
+//! ```no_run
+//! # use backbone_learn::backbone::Backbone;
+//! # use backbone_learn::linalg::Matrix;
+//! # let x = Matrix::zeros(16, 2);
+//! let mut bb = Backbone::clustering()
+//!     .beta(0.8)
+//!     .num_subproblems(5)
+//!     .n_clusters(4)
+//!     .build()?;
+//! let model = bb.fit(&x)?;
+//! let labels = &model.labels;
+//! # Ok::<(), backbone_learn::backbone::BackboneError>(())
+//! ```
 
+use super::error::BackboneError;
 use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -45,11 +60,29 @@ pub struct BackboneClustering {
     /// Compute backend for the Lloyd-iteration hot path.
     pub backend: Backend,
     pub last_diagnostics: Option<BackboneDiagnostics>,
-    fitted: Option<ClusteringModel>,
+    pub(crate) fitted: Option<ClusteringModel>,
 }
 
 impl BackboneClustering {
-    /// Paper-style constructor: `(beta, num_subproblems, n_clusters)`.
+    /// Paper-style positional constructor:
+    /// `(beta, num_subproblems, n_clusters)`.
+    ///
+    /// ⚠ **Argument-order trap**: unlike every supervised learner (which
+    /// takes `(alpha, beta, num_subproblems, k)`), this constructor takes
+    /// **beta first** — clustering has no screening step, so there is no
+    /// leading `alpha`. Passing `(alpha, beta, M)` out of habit silently
+    /// misconfigures the run. The `Backbone::clustering()` builder names
+    /// every knob and is the only documented path.
+    ///
+    /// Unlike `build()`, a positional constructor cannot report invalid
+    /// hyperparameters — they surface as a [`BackboneError`] from `fit`
+    /// instead.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the `Backbone::clustering()` builder; this constructor \
+                takes (beta, num_subproblems, n_clusters) — beta FIRST, \
+                unlike the supervised learners"
+    )]
     pub fn new(beta: f64, num_subproblems: usize, n_clusters: usize) -> Self {
         Self {
             params: BackboneParams {
@@ -69,11 +102,27 @@ impl BackboneClustering {
         }
     }
 
-    pub fn fit(&mut self, x: &Matrix) -> Result<&ClusteringModel> {
+    pub fn fit(&mut self, x: &Matrix) -> Result<&ClusteringModel, BackboneError> {
         self.fit_with_budget(x, &Budget::unlimited())
     }
 
-    pub fn fit_with_budget(&mut self, x: &Matrix, budget: &Budget) -> Result<&ClusteringModel> {
+    pub fn fit_with_budget(
+        &mut self,
+        x: &Matrix,
+        budget: &Budget,
+    ) -> Result<&ClusteringModel, BackboneError> {
+        if self.n_clusters == 0 {
+            return Err(BackboneError::InvalidHyperparameter {
+                field: "n_clusters",
+                message: "must be at least 1".into(),
+            });
+        }
+        if x.rows() < 2 {
+            // The exact clique formulation needs at least one pair.
+            return Err(BackboneError::EmptyData {
+                what: "clustering needs at least two points",
+            });
+        }
         let mut inner = Inner {
             n_clusters: self.n_clusters,
             min_cluster_size: self.min_cluster_size,
@@ -86,7 +135,8 @@ impl BackboneClustering {
         Ok(self.fitted.as_ref().unwrap())
     }
 
-    /// Labels of the last fit.
+    /// Labels of the last fit. Panics when unfitted — prefer
+    /// [`Predict::try_predict`](super::Predict::try_predict).
     pub fn labels(&self) -> &[usize] {
         &self.fitted.as_ref().expect("call fit() first").labels
     }
@@ -193,6 +243,7 @@ impl BackboneLearner for Inner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backbone::Backbone;
     use crate::data::blobs::{generate, BlobsConfig};
     use crate::metrics::{adjusted_rand_index, silhouette_score};
 
@@ -210,10 +261,19 @@ mod tests {
         )
     }
 
+    fn cl(beta: f64, m: usize, k: usize) -> BackboneClustering {
+        Backbone::clustering()
+            .beta(beta)
+            .num_subproblems(m)
+            .n_clusters(k)
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn recovers_blobs_with_exact_reduced_solve() {
         let data = blobs(15, 3, 1);
-        let mut bb = BackboneClustering::new(1.0, 3, 3);
+        let mut bb = cl(1.0, 3, 3);
         let model = bb.fit_with_budget(&data.x, &Budget::seconds(120.0)).unwrap().clone();
         let ari = adjusted_rand_index(&model.labels, &data.labels_true);
         assert!(ari > 0.9, "ari={ari} status={:?}", model.status);
@@ -223,7 +283,7 @@ mod tests {
     fn ambiguous_k_selects_good_silhouette() {
         // Target clusters (4) exceed true clusters (2) — the Table 1 setup.
         let data = blobs(14, 2, 3);
-        let mut bb = BackboneClustering::new(1.0, 3, 4);
+        let mut bb = cl(1.0, 3, 4);
         let model = bb.fit_with_budget(&data.x, &Budget::seconds(120.0)).unwrap().clone();
         let sil = silhouette_score(&data.x, &model.labels);
         assert!(sil > 0.3, "sil={sil}");
@@ -251,7 +311,7 @@ mod tests {
     #[test]
     fn final_labels_only_cocluster_backbone_pairs() {
         let data = blobs(12, 3, 7);
-        let mut bb = BackboneClustering::new(0.8, 3, 3);
+        let mut bb = cl(0.8, 3, 3);
         bb.fit_with_budget(&data.x, &Budget::seconds(120.0)).unwrap();
         // Re-run the loop manually to grab the backbone: rely on
         // diagnostics instead — backbone size must be positive and labels
@@ -265,9 +325,16 @@ mod tests {
     #[test]
     fn timeout_still_returns_clustering() {
         let data = blobs(40, 3, 9);
-        let mut bb = BackboneClustering::new(1.0, 2, 3);
+        let mut bb = cl(1.0, 2, 3);
         let model = bb.fit_with_budget(&data.x, &Budget::seconds(0.05)).unwrap();
         assert_eq!(model.labels.len(), 40);
         assert!(model.objective.is_finite());
+    }
+
+    #[test]
+    fn empty_point_set_errors_instead_of_panicking() {
+        let mut bb = cl(1.0, 2, 2);
+        let err = bb.fit(&Matrix::zeros(0, 2)).unwrap_err();
+        assert!(matches!(err, BackboneError::EmptyData { .. }));
     }
 }

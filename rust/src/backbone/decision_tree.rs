@@ -6,7 +6,23 @@
 //! importance" are kept/discarded); the reduced problem binarizes the
 //! backbone features and solves an ODTLearn-style *optimal* shallow tree
 //! ([`crate::solvers::exact_tree`]).
+//!
+//! ```no_run
+//! # use backbone_learn::backbone::Backbone;
+//! # use backbone_learn::linalg::Matrix;
+//! # let (x, y) = (Matrix::zeros(10, 20), vec![0.0; 10]);
+//! let mut bb = Backbone::decision_tree()
+//!     .alpha(0.5)
+//!     .beta(0.5)
+//!     .num_subproblems(5)
+//!     .depth(2)
+//!     .build()?;
+//! let model = bb.fit(&x, &y)?;
+//! let proba = model.predict_proba(&x);
+//! # Ok::<(), backbone_learn::backbone::BackboneError>(())
+//! ```
 
+use super::error::BackboneError;
 use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
 use crate::data::binarize;
 use crate::linalg::Matrix;
@@ -94,11 +110,24 @@ pub struct BackboneDecisionTree {
     /// feature used in a split).
     pub importance_threshold: f64,
     pub last_diagnostics: Option<BackboneDiagnostics>,
-    fitted: Option<BackboneTreeModel>,
+    pub(crate) fitted: Option<BackboneTreeModel>,
 }
 
 impl BackboneDecisionTree {
-    /// Paper-style constructor: `(alpha, beta, num_subproblems, depth)`.
+    /// Paper-style positional constructor:
+    /// `(alpha, beta, num_subproblems, depth)`.
+    ///
+    /// Unlike `build()`, a positional constructor cannot report invalid
+    /// hyperparameters — they surface as a [`BackboneError`] from `fit`
+    /// instead. Note the argument-order trap across learners:
+    /// [`super::clustering::BackboneClustering::new`] takes **beta first**
+    /// (no alpha). The builder names every knob and is the only
+    /// documented path.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the `Backbone::decision_tree()` builder; positional \
+                argument order differs between learners"
+    )]
     pub fn new(alpha: f64, beta: f64, num_subproblems: usize, depth: usize) -> Self {
         Self {
             params: BackboneParams {
@@ -117,7 +146,7 @@ impl BackboneDecisionTree {
         }
     }
 
-    pub fn fit(&mut self, x: &Matrix, y: &[f64]) -> Result<&BackboneTreeModel> {
+    pub fn fit(&mut self, x: &Matrix, y: &[f64]) -> Result<&BackboneTreeModel, BackboneError> {
         self.fit_with_budget(x, y, &Budget::unlimited())
     }
 
@@ -126,7 +155,35 @@ impl BackboneDecisionTree {
         x: &Matrix,
         y: &[f64],
         budget: &Budget,
-    ) -> Result<&BackboneTreeModel> {
+    ) -> Result<&BackboneTreeModel, BackboneError> {
+        if x.rows() != y.len() {
+            return Err(BackboneError::DimensionMismatch {
+                x_rows: x.rows(),
+                y_len: y.len(),
+            });
+        }
+        if x.rows() == 0 {
+            return Err(BackboneError::EmptyData { what: "no training rows" });
+        }
+        // The tree is a binary classifier: gini screening and CART leaf
+        // probabilities silently break on non-{0,1} labels.
+        for (index, &value) in y.iter().enumerate() {
+            if value != 0.0 && value != 1.0 {
+                return Err(BackboneError::NonBinaryLabels { index, value });
+            }
+        }
+        if self.depth == 0 {
+            return Err(BackboneError::InvalidHyperparameter {
+                field: "depth",
+                message: "must be at least 1".into(),
+            });
+        }
+        if self.bins == 0 {
+            return Err(BackboneError::InvalidHyperparameter {
+                field: "bins",
+                message: "must be at least 1".into(),
+            });
+        }
         let data = SupervisedData { x: x.clone(), y: y.to_vec() };
         let mut inner = Inner {
             depth: self.depth,
@@ -140,10 +197,14 @@ impl BackboneDecisionTree {
         Ok(self.fitted.as_ref().unwrap())
     }
 
+    /// P(y = 1) per row. Panics when unfitted — prefer
+    /// [`Predict::try_predict`](super::Predict::try_predict).
     pub fn predict_proba(&self, x: &Matrix) -> Vec<f64> {
         self.fitted.as_ref().expect("call fit() first").predict_proba(x)
     }
 
+    /// 0/1 predictions. Panics when unfitted — prefer
+    /// [`Predict::try_predict`](super::Predict::try_predict).
     pub fn predict(&self, x: &Matrix) -> Vec<f64> {
         self.fitted.as_ref().expect("call fit() first").predict(x)
     }
@@ -247,6 +308,7 @@ impl BackboneLearner for Inner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backbone::Backbone;
     use crate::data::classification::{generate, ClassificationConfig};
 
     fn gen(n: usize, p: usize, k: usize, seed: u64) -> crate::data::classification::ClassificationData {
@@ -264,10 +326,20 @@ mod tests {
         )
     }
 
+    fn dt(alpha: f64, beta: f64, m: usize, depth: usize) -> BackboneDecisionTree {
+        Backbone::decision_tree()
+            .alpha(alpha)
+            .beta(beta)
+            .num_subproblems(m)
+            .depth(depth)
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn beats_chance_and_uses_backbone_features_only() {
         let data = gen(300, 30, 4, 1);
-        let mut bb = BackboneDecisionTree::new(0.5, 0.5, 4, 2);
+        let mut bb = dt(0.5, 0.5, 4, 2);
         let model = bb.fit(&data.x, &data.y).unwrap().clone();
         let auc = crate::metrics::auc(&data.y, &model.predict_proba(&data.x));
         assert!(auc > 0.7, "auc={auc}");
@@ -280,7 +352,7 @@ mod tests {
     #[test]
     fn backbone_much_smaller_than_p() {
         let data = gen(250, 60, 3, 2);
-        let mut bb = BackboneDecisionTree::new(0.5, 0.3, 5, 2);
+        let mut bb = dt(0.5, 0.3, 5, 2);
         bb.fit(&data.x, &data.y).unwrap();
         let d = bb.last_diagnostics.as_ref().unwrap();
         assert!(
@@ -294,7 +366,7 @@ mod tests {
     #[test]
     fn exact_phase_reports_errors_consistent_with_predictions() {
         let data = gen(150, 20, 3, 3);
-        let mut bb = BackboneDecisionTree::new(0.6, 0.5, 3, 2);
+        let mut bb = dt(0.6, 0.5, 3, 2);
         let model = bb.fit(&data.x, &data.y).unwrap().clone();
         let pred = model.predict(&data.x);
         let errs = pred.iter().zip(&data.y).filter(|(p, y)| p != y).count();
@@ -306,7 +378,7 @@ mod tests {
         // Constant labels → CART finds no splits → empty backbone.
         let x = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
         let y = vec![1.0, 1.0, 1.0];
-        let mut bb = BackboneDecisionTree::new(1.0, 1.0, 2, 2);
+        let mut bb = dt(1.0, 1.0, 2, 2);
         let model = bb.fit(&x, &y).unwrap();
         assert_eq!(model.errors, 0);
         assert!(matches!(model.root, BinNode::Leaf { .. }));
@@ -314,11 +386,27 @@ mod tests {
     }
 
     #[test]
+    fn rejects_non_binary_labels_with_typed_error() {
+        let x = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let y = vec![0.0, 1.0, 2.0];
+        let mut bb = dt(1.0, 1.0, 2, 2);
+        let err = bb.fit(&x, &y).unwrap_err();
+        assert_eq!(err, BackboneError::NonBinaryLabels { index: 2, value: 2.0 });
+    }
+
+    #[test]
+    fn zero_row_data_errors_instead_of_panicking() {
+        let mut bb = dt(1.0, 1.0, 2, 2);
+        let err = bb.fit(&Matrix::zeros(0, 3), &[]).unwrap_err();
+        assert!(matches!(err, BackboneError::EmptyData { .. }));
+    }
+
+    #[test]
     fn deeper_exact_tree_is_at_least_as_accurate_in_sample() {
         let data = gen(200, 15, 3, 4);
-        let mut shallow = BackboneDecisionTree::new(1.0, 1.0, 2, 1);
+        let mut shallow = dt(1.0, 1.0, 2, 1);
         let m1 = shallow.fit(&data.x, &data.y).unwrap().clone();
-        let mut deep = BackboneDecisionTree::new(1.0, 1.0, 2, 2);
+        let mut deep = dt(1.0, 1.0, 2, 2);
         deep.bins = 3;
         let m2 = deep.fit(&data.x, &data.y).unwrap().clone();
         assert!(m2.errors <= m1.errors, "depth2 {} vs depth1 {}", m2.errors, m1.errors);

@@ -1,0 +1,112 @@
+//! Typed, non-panicking error surface of the estimator API.
+//!
+//! Every way a *user input* can be wrong — hyperparameters out of range,
+//! mismatched data shapes, non-binary labels, predicting before fitting —
+//! maps to a [`BackboneError`] variant instead of an `assert!` panic.
+//! Builders report these at `build()` time; the deprecated positional
+//! constructors (which cannot return `Result`) defer the same checks to
+//! `fit()`. Failures inside downstream solvers are wrapped in
+//! [`BackboneError::Solver`] so callers keep a single error type.
+
+use std::fmt;
+
+/// Error type of the public estimator API (builders, `fit`, `predict`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BackboneError {
+    /// Screening keep-fraction α outside `(0, 1]` (or NaN).
+    InvalidAlpha { value: f64 },
+    /// Subproblem size fraction β outside `(0, 1]` (or NaN).
+    InvalidBeta { value: f64 },
+    /// `num_subproblems` (the paper's M) is zero.
+    ZeroSubproblems,
+    /// `max_iterations` is zero — the loop must run at least once.
+    ZeroIterations,
+    /// A learner-specific knob is out of range (`field` names the knob).
+    InvalidHyperparameter { field: &'static str, message: String },
+    /// `x` and `y` disagree on the number of samples.
+    DimensionMismatch { x_rows: usize, y_len: usize },
+    /// Input shape incompatible with the fitted model.
+    ShapeMismatch { expected: usize, got: usize },
+    /// A classification label is neither 0.0 nor 1.0.
+    NonBinaryLabels { index: usize, value: f64 },
+    /// The dataset has nothing to sample from (zero features / points).
+    EmptyData { what: &'static str },
+    /// A learner's `utilities()` returned the wrong number of entries.
+    UtilityLengthMismatch { expected: usize, got: usize },
+    /// `predict` (or similar) called before a successful `fit`.
+    NotFitted,
+    /// A downstream solver failed (wrapped message).
+    Solver { message: String },
+}
+
+impl fmt::Display for BackboneError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::InvalidAlpha { value } => {
+                write!(f, "alpha (screening keep-fraction) must be in (0, 1], got {value}")
+            }
+            Self::InvalidBeta { value } => {
+                write!(f, "beta (subproblem size fraction) must be in (0, 1], got {value}")
+            }
+            Self::ZeroSubproblems => {
+                write!(f, "num_subproblems must be at least 1")
+            }
+            Self::ZeroIterations => {
+                write!(f, "max_iterations must be at least 1")
+            }
+            Self::InvalidHyperparameter { field, message } => {
+                write!(f, "invalid hyperparameter `{field}`: {message}")
+            }
+            Self::DimensionMismatch { x_rows, y_len } => {
+                write!(f, "x has {x_rows} rows but y has {y_len} entries")
+            }
+            Self::ShapeMismatch { expected, got } => {
+                write!(f, "input shape incompatible with the fitted model: expected {expected}, got {got}")
+            }
+            Self::NonBinaryLabels { index, value } => {
+                write!(f, "labels must be in {{0, 1}}: y[{index}] = {value}")
+            }
+            Self::EmptyData { what } => {
+                write!(f, "empty dataset: {what}")
+            }
+            Self::UtilityLengthMismatch { expected, got } => {
+                write!(f, "learner returned {got} utilities for {expected} entities")
+            }
+            Self::NotFitted => {
+                write!(f, "estimator is not fitted yet; call fit() first")
+            }
+            Self::Solver { message } => {
+                write!(f, "solver failure: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for BackboneError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_the_offending_value() {
+        let e = BackboneError::InvalidAlpha { value: 1.5 };
+        assert!(e.to_string().contains("1.5"));
+        let e = BackboneError::NonBinaryLabels { index: 3, value: 2.0 };
+        assert!(e.to_string().contains("y[3]"));
+        let e = BackboneError::InvalidHyperparameter {
+            field: "max_nonzeros",
+            message: "must be at least 1".into(),
+        };
+        assert!(e.to_string().contains("max_nonzeros"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fallible() -> anyhow::Result<()> {
+            Err(BackboneError::ZeroSubproblems.into())
+        }
+        let err = fallible().unwrap_err();
+        assert!(err.downcast_ref::<BackboneError>().is_some());
+    }
+}

@@ -1,0 +1,757 @@
+//! The unified estimator API: the [`Backbone`] facade, one typed builder
+//! per learner, and the [`Fit`]/[`Predict`] trait pair.
+//!
+//! All four learners are constructed the same way — name the problem,
+//! chain the knobs you care about, `build()`:
+//!
+//! ```no_run
+//! use backbone_learn::backbone::Backbone;
+//! # use backbone_learn::linalg::Matrix;
+//! # let (x, y) = (Matrix::zeros(10, 20), vec![0.0; 10]);
+//! let mut sr = Backbone::sparse_regression()
+//!     .alpha(0.5)
+//!     .beta(0.5)
+//!     .num_subproblems(5)
+//!     .max_nonzeros(10)
+//!     .build()?;
+//! sr.fit(&x, &y)?;
+//!
+//! let _cl = Backbone::clustering()
+//!     .beta(0.8)
+//!     .num_subproblems(5)
+//!     .n_clusters(4)
+//!     .build()?;
+//! # Ok::<(), backbone_learn::backbone::BackboneError>(())
+//! ```
+//!
+//! Every knob shared by the four learners (β, M, B_max, iteration cap,
+//! subproblem strategy, execution policy, seed) lives on the generic
+//! [`Builder`] core; learner-specific knobs (`alpha`, `max_nonzeros`,
+//! `depth`, `n_clusters`, …) are inherent methods of the concrete builder
+//! aliases — notably, the clustering builder has **no** `.alpha()`
+//! method, because clustering has no screening step; the misconfiguration
+//! is unrepresentable. `build()` validates everything and returns a typed
+//! [`BackboneError`] — never a panic — on bad input.
+
+use super::clustering::{BackboneClustering, ClusteringModel};
+use super::decision_tree::{BackboneDecisionTree, BackboneTreeModel};
+use super::error::BackboneError;
+use super::pipeline::ExecutionPolicy;
+use super::sparse_logistic::BackboneSparseLogistic;
+use super::sparse_regression::{
+    BackboneSparseRegression, SparseRegressionModel, SupervisedData,
+};
+use super::{BackboneDiagnostics, BackboneParams, SubproblemStrategy};
+use crate::linalg::Matrix;
+use crate::runtime::Backend;
+use crate::solvers::logistic::LogisticModel;
+use crate::util::Budget;
+
+/// Entry point of the estimator API: one constructor per backbone
+/// problem, each returning a typed builder.
+pub struct Backbone;
+
+impl Backbone {
+    /// Builder for [`BackboneSparseRegression`] (indicators = features,
+    /// L0-heuristic subproblems, exact L0BnB reduced solve).
+    pub fn sparse_regression() -> SparseRegressionBuilder {
+        Builder::common(SparseRegressionCfg {
+            max_nonzeros: 10,
+            subproblem_nonzeros: None,
+            lambda2: 1e-3,
+            gap_tol: 0.01,
+            backend: Backend::default(),
+        })
+    }
+
+    /// Builder for [`BackboneSparseLogistic`] (indicators = features,
+    /// logistic-IHT subproblems, exact best-subset reduced solve).
+    pub fn sparse_logistic() -> SparseLogisticBuilder {
+        Builder::common(SparseLogisticCfg { max_nonzeros: 10, ridge: 1e-3, iht_iters: 150 })
+    }
+
+    /// Builder for [`BackboneDecisionTree`] (indicators = features, CART
+    /// subproblems, exact shallow tree on binarized backbone features).
+    pub fn decision_tree() -> DecisionTreeBuilder {
+        Builder::common(DecisionTreeCfg {
+            depth: 2,
+            bins: 2,
+            min_leaf: 1,
+            importance_threshold: 0.0,
+        })
+    }
+
+    /// Builder for [`BackboneClustering`] (entities = points, indicators =
+    /// co-clustered pairs, k-means subproblems, exact clique partitioning).
+    ///
+    /// `n_clusters` has no sensible default and **must** be set;
+    /// `build()` errors otherwise. Clustering has no screening step, so
+    /// this builder pins `alpha = 1.0` (it deliberately has no
+    /// `.alpha()` method) and defaults `max_iterations` to 1.
+    pub fn clustering() -> ClusteringBuilder {
+        let mut b = Builder::common(ClusteringCfg {
+            n_clusters: None,
+            min_cluster_size: 1,
+            n_init: 10,
+            backend: Backend::default(),
+        });
+        b.params.alpha = 1.0; // no point-screening for clustering
+        b.params.max_iterations = 1; // pairs do not recurse usefully
+        b
+    }
+}
+
+/// Generic builder core: the Algorithm-1 knobs shared by all learners.
+/// `C` carries the learner-specific configuration.
+#[derive(Debug, Clone)]
+pub struct Builder<C> {
+    params: BackboneParams,
+    b_max: Option<usize>,
+    cfg: C,
+}
+
+impl<C> Builder<C> {
+    fn common(cfg: C) -> Self {
+        Builder { params: BackboneParams::default(), b_max: None, cfg }
+    }
+
+    // NOTE: `alpha` is deliberately NOT on the generic core. Clustering
+    // has no screening step (α is pinned to 1.0 by its facade
+    // constructor), so only the supervised builders expose `.alpha()` —
+    // the misconfiguration is unrepresentable rather than validated.
+
+    /// Subproblem size fraction β ∈ (0, 1] of the current universe.
+    pub fn beta(mut self, beta: f64) -> Self {
+        self.params.beta = beta;
+        self
+    }
+
+    /// Number of subproblems M in the first iteration (≥ 1).
+    pub fn num_subproblems(mut self, m: usize) -> Self {
+        self.params.num_subproblems = m;
+        self
+    }
+
+    /// Maximum backbone size B_max (0 = no cap). Each learner has its own
+    /// default when this is not set.
+    pub fn b_max(mut self, b_max: usize) -> Self {
+        self.b_max = Some(b_max);
+        self
+    }
+
+    /// Hard cap on backbone iterations (≥ 1).
+    pub fn max_iterations(mut self, cap: usize) -> Self {
+        self.params.max_iterations = cap;
+        self
+    }
+
+    /// Subproblem construction strategy.
+    pub fn strategy(mut self, strategy: SubproblemStrategy) -> Self {
+        self.params.strategy = strategy;
+        self
+    }
+
+    /// How each iteration's subproblem batch is executed.
+    pub fn execution(mut self, policy: ExecutionPolicy) -> Self {
+        self.params.execution = policy;
+        self
+    }
+
+    /// RNG seed (subproblem sampling, heuristic restarts).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.params.seed = seed;
+        self
+    }
+
+    /// Validate the shared params, applying `default_b_max` when the user
+    /// did not set one, and hand back `(params, cfg)` for the concrete
+    /// builder's `build()`.
+    fn finish(self, default_b_max: usize) -> Result<(BackboneParams, C), BackboneError> {
+        let mut params = self.params;
+        params.b_max = self.b_max.unwrap_or(default_b_max);
+        params.validate()?;
+        Ok((params, self.cfg))
+    }
+}
+
+fn require_positive(field: &'static str, value: usize) -> Result<(), BackboneError> {
+    if value == 0 {
+        return Err(BackboneError::InvalidHyperparameter {
+            field,
+            message: "must be at least 1".into(),
+        });
+    }
+    Ok(())
+}
+
+fn require_non_negative(field: &'static str, value: f64) -> Result<(), BackboneError> {
+    if value.is_nan() || value < 0.0 {
+        return Err(BackboneError::InvalidHyperparameter {
+            field,
+            message: format!("must be a non-negative number, got {value}"),
+        });
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Sparse regression
+// ---------------------------------------------------------------------------
+
+/// Learner-specific knobs of the sparse-regression builder.
+#[derive(Debug, Clone)]
+pub struct SparseRegressionCfg {
+    max_nonzeros: usize,
+    subproblem_nonzeros: Option<usize>,
+    lambda2: f64,
+    gap_tol: f64,
+    backend: Backend,
+}
+
+/// Typed builder returned by [`Backbone::sparse_regression`].
+pub type SparseRegressionBuilder = Builder<SparseRegressionCfg>;
+
+impl Builder<SparseRegressionCfg> {
+    /// Screening keep-fraction α ∈ (0, 1]; 1.0 disables screening.
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.params.alpha = alpha;
+        self
+    }
+
+    /// Cardinality bound k of the final model (default 10).
+    pub fn max_nonzeros(mut self, k: usize) -> Self {
+        self.cfg.max_nonzeros = k;
+        self
+    }
+
+    /// Sparsity budget of each subproblem fit (defaults to `max_nonzeros`).
+    pub fn subproblem_nonzeros(mut self, k: usize) -> Self {
+        self.cfg.subproblem_nonzeros = Some(k);
+        self
+    }
+
+    /// Ridge penalty λ₂ shared by heuristic and exact phases.
+    pub fn lambda2(mut self, lambda2: f64) -> Self {
+        self.cfg.lambda2 = lambda2;
+        self
+    }
+
+    /// Optimality-gap tolerance of the exact reduced solve.
+    pub fn gap_tol(mut self, gap_tol: f64) -> Self {
+        self.cfg.gap_tol = gap_tol;
+        self
+    }
+
+    /// Compute backend for the dense screening/IHT hot paths.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    /// Validate and construct the estimator.
+    pub fn build(self) -> Result<BackboneSparseRegression, BackboneError> {
+        require_positive("max_nonzeros", self.cfg.max_nonzeros)?;
+        if let Some(k) = self.cfg.subproblem_nonzeros {
+            require_positive("subproblem_nonzeros", k)?;
+        }
+        require_non_negative("lambda2", self.cfg.lambda2)?;
+        require_non_negative("gap_tol", self.cfg.gap_tol)?;
+        // Paper default: keep iterating until the backbone is a small
+        // multiple of the target sparsity.
+        let default_b_max = 10 * self.cfg.max_nonzeros;
+        let (params, cfg) = self.finish(default_b_max)?;
+        Ok(BackboneSparseRegression {
+            params,
+            max_nonzeros: cfg.max_nonzeros,
+            lambda2: cfg.lambda2,
+            subproblem_nonzeros: cfg.subproblem_nonzeros.unwrap_or(cfg.max_nonzeros),
+            gap_tol: cfg.gap_tol,
+            backend: cfg.backend,
+            last_diagnostics: None,
+            fitted: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sparse logistic regression
+// ---------------------------------------------------------------------------
+
+/// Learner-specific knobs of the sparse-logistic builder.
+#[derive(Debug, Clone)]
+pub struct SparseLogisticCfg {
+    max_nonzeros: usize,
+    ridge: f64,
+    iht_iters: usize,
+}
+
+/// Typed builder returned by [`Backbone::sparse_logistic`].
+pub type SparseLogisticBuilder = Builder<SparseLogisticCfg>;
+
+impl Builder<SparseLogisticCfg> {
+    /// Screening keep-fraction α ∈ (0, 1]; 1.0 disables screening.
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.params.alpha = alpha;
+        self
+    }
+
+    /// Cardinality bound k of the final model (default 10).
+    pub fn max_nonzeros(mut self, k: usize) -> Self {
+        self.cfg.max_nonzeros = k;
+        self
+    }
+
+    /// Ridge stabilizer for the Newton fits.
+    pub fn ridge(mut self, ridge: f64) -> Self {
+        self.cfg.ridge = ridge;
+        self
+    }
+
+    /// IHT iterations per subproblem fit.
+    pub fn iht_iters(mut self, iters: usize) -> Self {
+        self.cfg.iht_iters = iters;
+        self
+    }
+
+    /// Validate and construct the estimator.
+    pub fn build(self) -> Result<BackboneSparseLogistic, BackboneError> {
+        require_positive("max_nonzeros", self.cfg.max_nonzeros)?;
+        require_positive("iht_iters", self.cfg.iht_iters)?;
+        require_non_negative("ridge", self.cfg.ridge)?;
+        // Keep the enumeration-based exact phase tractable.
+        let default_b_max = (4 * self.cfg.max_nonzeros).max(12);
+        let (params, cfg) = self.finish(default_b_max)?;
+        Ok(BackboneSparseLogistic {
+            params,
+            max_nonzeros: cfg.max_nonzeros,
+            ridge: cfg.ridge,
+            iht_iters: cfg.iht_iters,
+            last_diagnostics: None,
+            fitted: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decision tree
+// ---------------------------------------------------------------------------
+
+/// Learner-specific knobs of the decision-tree builder.
+#[derive(Debug, Clone)]
+pub struct DecisionTreeCfg {
+    depth: usize,
+    bins: usize,
+    min_leaf: usize,
+    importance_threshold: f64,
+}
+
+/// Typed builder returned by [`Backbone::decision_tree`].
+pub type DecisionTreeBuilder = Builder<DecisionTreeCfg>;
+
+impl Builder<DecisionTreeCfg> {
+    /// Screening keep-fraction α ∈ (0, 1]; 1.0 disables screening.
+    pub fn alpha(mut self, alpha: f64) -> Self {
+        self.params.alpha = alpha;
+        self
+    }
+
+    /// Depth of both the CART subproblem fits and the exact final tree.
+    pub fn depth(mut self, depth: usize) -> Self {
+        self.cfg.depth = depth;
+        self
+    }
+
+    /// Quantile thresholds per feature for the exact phase.
+    pub fn bins(mut self, bins: usize) -> Self {
+        self.cfg.bins = bins;
+        self
+    }
+
+    /// Minimum leaf size (both phases).
+    pub fn min_leaf(mut self, min_leaf: usize) -> Self {
+        self.cfg.min_leaf = min_leaf;
+        self
+    }
+
+    /// Keep subproblem features only above this normalized CART importance
+    /// (0 keeps any feature used in a split).
+    pub fn importance_threshold(mut self, threshold: f64) -> Self {
+        self.cfg.importance_threshold = threshold;
+        self
+    }
+
+    /// Validate and construct the estimator.
+    pub fn build(self) -> Result<BackboneDecisionTree, BackboneError> {
+        require_positive("depth", self.cfg.depth)?;
+        require_positive("bins", self.cfg.bins)?;
+        require_positive("min_leaf", self.cfg.min_leaf)?;
+        require_non_negative("importance_threshold", self.cfg.importance_threshold)?;
+        let (params, cfg) = self.finish(0)?; // trees rarely need multi-round shrinking
+        Ok(BackboneDecisionTree {
+            params,
+            depth: cfg.depth,
+            bins: cfg.bins,
+            min_leaf: cfg.min_leaf,
+            importance_threshold: cfg.importance_threshold,
+            last_diagnostics: None,
+            fitted: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Clustering
+// ---------------------------------------------------------------------------
+
+/// Learner-specific knobs of the clustering builder.
+#[derive(Debug, Clone)]
+pub struct ClusteringCfg {
+    n_clusters: Option<usize>,
+    min_cluster_size: usize,
+    n_init: usize,
+    backend: Backend,
+}
+
+/// Typed builder returned by [`Backbone::clustering`].
+pub type ClusteringBuilder = Builder<ClusteringCfg>;
+
+impl Builder<ClusteringCfg> {
+    /// Target number of clusters k — **required**, no default.
+    pub fn n_clusters(mut self, k: usize) -> Self {
+        self.cfg.n_clusters = Some(k);
+        self
+    }
+
+    /// Minimum cluster size b of the exact formulation.
+    pub fn min_cluster_size(mut self, b: usize) -> Self {
+        self.cfg.min_cluster_size = b;
+        self
+    }
+
+    /// k-means restarts per subproblem.
+    pub fn n_init(mut self, n_init: usize) -> Self {
+        self.cfg.n_init = n_init;
+        self
+    }
+
+    /// Compute backend for the Lloyd-iteration hot path.
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    /// Validate and construct the estimator.
+    pub fn build(self) -> Result<BackboneClustering, BackboneError> {
+        let Some(n_clusters) = self.cfg.n_clusters else {
+            return Err(BackboneError::InvalidHyperparameter {
+                field: "n_clusters",
+                message: "must be set (call .n_clusters(k) with k ≥ 1)".into(),
+            });
+        };
+        require_positive("n_clusters", n_clusters)?;
+        require_positive("min_cluster_size", self.cfg.min_cluster_size)?;
+        require_positive("n_init", self.cfg.n_init)?;
+        let (params, cfg) = self.finish(0)?;
+        Ok(BackboneClustering {
+            params,
+            n_clusters,
+            min_cluster_size: cfg.min_cluster_size,
+            n_init: cfg.n_init,
+            backend: cfg.backend,
+            last_diagnostics: None,
+            fitted: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fit / Predict traits
+// ---------------------------------------------------------------------------
+
+/// Uniform fitting surface shared by all four learners: one data type, a
+/// wall-clock budget, a typed error, and access to run diagnostics.
+pub trait Fit {
+    /// Training data (`SupervisedData` for the supervised learners, the
+    /// point matrix for clustering).
+    type Data: ?Sized;
+    /// Fitted model type.
+    type Model;
+
+    /// Fit under a wall-clock budget; returns the fitted model or a typed
+    /// error (never panics on user input).
+    fn try_fit(
+        &mut self,
+        data: &Self::Data,
+        budget: &Budget,
+    ) -> Result<&Self::Model, BackboneError>;
+
+    /// Diagnostics of the last successful fit, if any.
+    fn diagnostics(&self) -> Option<&BackboneDiagnostics>;
+}
+
+/// Uniform, non-panicking prediction surface. The inherent `predict`
+/// methods (which panic when unfitted) remain for compatibility; this
+/// trait returns [`BackboneError::NotFitted`] instead.
+pub trait Predict {
+    /// Prediction output (`Vec<f64>` for supervised learners, `Vec<usize>`
+    /// labels for clustering).
+    type Output;
+
+    /// Predict for `x`, or a typed error if the estimator is unfitted or
+    /// `x` has an incompatible shape.
+    fn try_predict(&self, x: &Matrix) -> Result<Self::Output, BackboneError>;
+}
+
+impl Fit for BackboneSparseRegression {
+    type Data = SupervisedData;
+    type Model = SparseRegressionModel;
+
+    fn try_fit(
+        &mut self,
+        data: &SupervisedData,
+        budget: &Budget,
+    ) -> Result<&SparseRegressionModel, BackboneError> {
+        self.fit_with_budget(&data.x, &data.y, budget)
+    }
+
+    fn diagnostics(&self) -> Option<&BackboneDiagnostics> {
+        self.last_diagnostics.as_ref()
+    }
+}
+
+impl Predict for BackboneSparseRegression {
+    type Output = Vec<f64>;
+
+    fn try_predict(&self, x: &Matrix) -> Result<Vec<f64>, BackboneError> {
+        let model = self.model().ok_or(BackboneError::NotFitted)?;
+        if x.cols() != model.beta.len() {
+            return Err(BackboneError::ShapeMismatch {
+                expected: model.beta.len(),
+                got: x.cols(),
+            });
+        }
+        Ok(model.predict(x))
+    }
+}
+
+impl Fit for BackboneSparseLogistic {
+    type Data = SupervisedData;
+    type Model = LogisticModel;
+
+    fn try_fit(
+        &mut self,
+        data: &SupervisedData,
+        budget: &Budget,
+    ) -> Result<&LogisticModel, BackboneError> {
+        self.fit_with_budget(&data.x, &data.y, budget)
+    }
+
+    fn diagnostics(&self) -> Option<&BackboneDiagnostics> {
+        self.last_diagnostics.as_ref()
+    }
+}
+
+impl Predict for BackboneSparseLogistic {
+    type Output = Vec<f64>;
+
+    fn try_predict(&self, x: &Matrix) -> Result<Vec<f64>, BackboneError> {
+        let model = self.model().ok_or(BackboneError::NotFitted)?;
+        if x.cols() != model.beta.len() {
+            return Err(BackboneError::ShapeMismatch {
+                expected: model.beta.len(),
+                got: x.cols(),
+            });
+        }
+        Ok(model.predict(x))
+    }
+}
+
+impl Fit for BackboneDecisionTree {
+    type Data = SupervisedData;
+    type Model = BackboneTreeModel;
+
+    fn try_fit(
+        &mut self,
+        data: &SupervisedData,
+        budget: &Budget,
+    ) -> Result<&BackboneTreeModel, BackboneError> {
+        self.fit_with_budget(&data.x, &data.y, budget)
+    }
+
+    fn diagnostics(&self) -> Option<&BackboneDiagnostics> {
+        self.last_diagnostics.as_ref()
+    }
+}
+
+impl Predict for BackboneDecisionTree {
+    type Output = Vec<f64>;
+
+    fn try_predict(&self, x: &Matrix) -> Result<Vec<f64>, BackboneError> {
+        let model = self.model().ok_or(BackboneError::NotFitted)?;
+        let needed = model.bin_map.iter().map(|&(src, _)| src + 1).max().unwrap_or(0);
+        if x.cols() < needed {
+            return Err(BackboneError::ShapeMismatch { expected: needed, got: x.cols() });
+        }
+        Ok(model.predict(x))
+    }
+}
+
+impl Fit for BackboneClustering {
+    type Data = Matrix;
+    type Model = ClusteringModel;
+
+    fn try_fit(
+        &mut self,
+        data: &Matrix,
+        budget: &Budget,
+    ) -> Result<&ClusteringModel, BackboneError> {
+        self.fit_with_budget(data, budget)
+    }
+
+    fn diagnostics(&self) -> Option<&BackboneDiagnostics> {
+        self.last_diagnostics.as_ref()
+    }
+}
+
+impl Predict for BackboneClustering {
+    type Output = Vec<usize>;
+
+    /// Clustering is transductive: predictions are the training labels,
+    /// and `x` must be the matrix the model was fitted on (row count is
+    /// checked).
+    fn try_predict(&self, x: &Matrix) -> Result<Vec<usize>, BackboneError> {
+        let model = self.model().ok_or(BackboneError::NotFitted)?;
+        if x.rows() != model.labels.len() {
+            return Err(BackboneError::ShapeMismatch {
+                expected: model.labels.len(),
+                got: x.rows(),
+            });
+        }
+        Ok(model.labels.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builders_validate_shared_params() {
+        assert!(matches!(
+            Backbone::sparse_regression().alpha(0.0).build(),
+            Err(BackboneError::InvalidAlpha { .. })
+        ));
+        assert!(matches!(
+            Backbone::sparse_logistic().beta(1.5).build(),
+            Err(BackboneError::InvalidBeta { .. })
+        ));
+        assert!(matches!(
+            Backbone::decision_tree().num_subproblems(0).build(),
+            Err(BackboneError::ZeroSubproblems)
+        ));
+        assert!(matches!(
+            Backbone::sparse_regression().max_iterations(0).build(),
+            Err(BackboneError::ZeroIterations)
+        ));
+    }
+
+    #[test]
+    fn builders_validate_learner_knobs() {
+        assert!(matches!(
+            Backbone::sparse_regression().max_nonzeros(0).build(),
+            Err(BackboneError::InvalidHyperparameter { field: "max_nonzeros", .. })
+        ));
+        assert!(matches!(
+            Backbone::sparse_regression().lambda2(-1.0).build(),
+            Err(BackboneError::InvalidHyperparameter { field: "lambda2", .. })
+        ));
+        assert!(matches!(
+            Backbone::decision_tree().depth(0).build(),
+            Err(BackboneError::InvalidHyperparameter { field: "depth", .. })
+        ));
+        assert!(matches!(
+            Backbone::clustering().build(),
+            Err(BackboneError::InvalidHyperparameter { field: "n_clusters", .. })
+        ));
+        assert!(matches!(
+            Backbone::clustering().n_clusters(0).build(),
+            Err(BackboneError::InvalidHyperparameter { field: "n_clusters", .. })
+        ));
+    }
+
+    #[test]
+    fn builder_defaults_mirror_the_deprecated_constructors() {
+        let built = Backbone::sparse_regression()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(5)
+            .max_nonzeros(10)
+            .build()
+            .unwrap();
+        #[allow(deprecated)]
+        let legacy = BackboneSparseRegression::new(0.5, 0.5, 5, 10);
+        assert_eq!(built.params.b_max, legacy.params.b_max);
+        assert_eq!(built.params.max_iterations, legacy.params.max_iterations);
+        assert_eq!(built.max_nonzeros, legacy.max_nonzeros);
+        assert_eq!(built.subproblem_nonzeros, legacy.subproblem_nonzeros);
+        assert_eq!(built.lambda2, legacy.lambda2);
+
+        let built = Backbone::clustering()
+            .beta(0.8)
+            .num_subproblems(3)
+            .n_clusters(4)
+            .build()
+            .unwrap();
+        #[allow(deprecated)]
+        let legacy = BackboneClustering::new(0.8, 3, 4);
+        assert_eq!(built.params.alpha, legacy.params.alpha);
+        assert_eq!(built.params.max_iterations, legacy.params.max_iterations);
+        assert_eq!(built.n_clusters, legacy.n_clusters);
+
+        let built = Backbone::sparse_logistic()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(5)
+            .max_nonzeros(3)
+            .build()
+            .unwrap();
+        #[allow(deprecated)]
+        let legacy = BackboneSparseLogistic::new(0.5, 0.5, 5, 3);
+        assert_eq!(built.params.b_max, legacy.params.b_max);
+        assert_eq!(built.ridge, legacy.ridge);
+        assert_eq!(built.iht_iters, legacy.iht_iters);
+
+        let built = Backbone::decision_tree()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(5)
+            .depth(2)
+            .build()
+            .unwrap();
+        #[allow(deprecated)]
+        let legacy = BackboneDecisionTree::new(0.5, 0.5, 5, 2);
+        assert_eq!(built.params.b_max, legacy.params.b_max);
+        assert_eq!(built.bins, legacy.bins);
+        assert_eq!(built.min_leaf, legacy.min_leaf);
+    }
+
+    #[test]
+    fn b_max_override_survives_build() {
+        let est = Backbone::sparse_regression().max_nonzeros(5).b_max(7).build().unwrap();
+        assert_eq!(est.params.b_max, 7);
+    }
+
+    #[test]
+    fn try_predict_before_fit_is_a_typed_error() {
+        let est = Backbone::sparse_regression().build().unwrap();
+        assert_eq!(
+            est.try_predict(&Matrix::zeros(2, 2)).unwrap_err(),
+            BackboneError::NotFitted
+        );
+        let est = Backbone::clustering().n_clusters(2).build().unwrap();
+        assert_eq!(
+            est.try_predict(&Matrix::zeros(2, 2)).unwrap_err(),
+            BackboneError::NotFitted
+        );
+    }
+}

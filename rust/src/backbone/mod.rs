@@ -1,22 +1,52 @@
 //! The backbone framework — Algorithm 1 of the paper, as a generic,
-//! trait-driven coordinator.
+//! trait-driven coordinator behind a unified estimator API.
+//!
+//! ## The estimator surface (start here)
+//!
+//! All four shipped learners are built through the [`Backbone`] facade's
+//! typed builders, share one [`BackboneParams`], and implement the
+//! [`Fit`]/[`Predict`] trait pair:
+//!
+//! ```no_run
+//! use backbone_learn::backbone::Backbone;
+//! # use backbone_learn::linalg::Matrix;
+//! # let (x, y) = (Matrix::zeros(10, 20), vec![0.0; 10]);
+//! let mut bb = Backbone::sparse_regression()
+//!     .alpha(0.5)
+//!     .beta(0.5)
+//!     .num_subproblems(5)
+//!     .max_nonzeros(10)
+//!     .build()?;
+//! let model = bb.fit(&x, &y)?;
+//! # Ok::<(), backbone_learn::backbone::BackboneError>(())
+//! ```
+//!
+//! Invalid hyperparameters are reported as typed [`BackboneError`]s at
+//! `build()` time — nothing in the public API panics on user input.
+//!
+//! ## The algorithm
 //!
 //! A [`BackboneLearner`] supplies the application-specific functions of
 //! Algorithm 1 (`screen` via [`BackboneLearner::utilities`],
 //! `fit_subproblem` + `extract_relevant` fused into
 //! [`BackboneLearner::fit_subproblem`], and `fit` as
-//! [`BackboneLearner::fit_reduced`]); [`run_backbone`] owns the loop:
+//! [`BackboneLearner::fit_reduced`]); [`FitPipeline`] owns the loop:
 //!
 //! ```text
 //! U₀, s ← screen(D, α)
 //! repeat
 //!   B ← ∅
 //!   (P_m) ← construct_subproblems(U_t, s, ⌈M/2ᵗ⌉, β)
-//!   for m: B ← B ∪ extract_relevant(fit_subproblem(D, P_m))
+//!   for m: B ← B ∪ extract_relevant(fit_subproblem(D, P_m))   // batch stage
 //!   t ← t+1; U_t ← entities(B)
-//! until |B| ≤ B_max  (or stall / iteration cap)
+//! until |B| ≤ B_max  (or stall / iteration cap / budget)
 //! model ← fit(D, B)
 //! ```
+//!
+//! The subproblem stage is an explicit batch
+//! (`Vec<Subproblem> → Vec<Vec<Indicator>>`) behind an
+//! [`ExecutionPolicy`], so the hot loop is ready for threaded execution
+//! without another API break (see [`pipeline`]).
 //!
 //! Two entity/indicator regimes mirror the package's `BackboneSupervised`
 //! and `BackboneUnsupervised` classes: in supervised problems entities and
@@ -28,18 +58,28 @@
 
 pub mod clustering;
 pub mod decision_tree;
+pub mod error;
+pub mod estimator;
+pub mod pipeline;
 pub mod screen;
 pub mod sparse_logistic;
 pub mod sparse_regression;
 pub mod subproblems;
 
+use crate::json::Json;
 use crate::rng::Rng;
 use crate::util::Budget;
 use anyhow::Result;
 use std::collections::BTreeMap;
 use std::fmt::Debug;
 
-pub use subproblems::SubproblemStrategy;
+pub use error::BackboneError;
+pub use estimator::{
+    Backbone, ClusteringBuilder, DecisionTreeBuilder, Fit, Predict, SparseLogisticBuilder,
+    SparseRegressionBuilder,
+};
+pub use pipeline::{solve_subproblem_batch, ExecutionPolicy, FitPipeline};
+pub use subproblems::{Subproblem, SubproblemStrategy};
 
 /// Hyperparameters of Algorithm 1 (the paper's `(M, β, α, B_max)`).
 #[derive(Debug, Clone)]
@@ -56,6 +96,8 @@ pub struct BackboneParams {
     pub max_iterations: usize,
     /// Subproblem construction strategy.
     pub strategy: SubproblemStrategy,
+    /// How each iteration's subproblem batch is executed.
+    pub execution: ExecutionPolicy,
     /// RNG seed (subproblem sampling, heuristic restarts).
     pub seed: u64,
 }
@@ -69,8 +111,30 @@ impl Default for BackboneParams {
             b_max: 0,
             max_iterations: 4,
             strategy: SubproblemStrategy::UniformCoverage,
+            execution: ExecutionPolicy::Sequential,
             seed: 0,
         }
+    }
+}
+
+impl BackboneParams {
+    /// Check the hyperparameter ranges Algorithm 1 requires. The builders
+    /// call this at `build()` time; [`FitPipeline::new`] calls it again so
+    /// hand-constructed params are equally safe.
+    pub fn validate(&self) -> Result<(), BackboneError> {
+        if !(self.alpha > 0.0 && self.alpha <= 1.0) {
+            return Err(BackboneError::InvalidAlpha { value: self.alpha });
+        }
+        if !(self.beta > 0.0 && self.beta <= 1.0) {
+            return Err(BackboneError::InvalidBeta { value: self.beta });
+        }
+        if self.num_subproblems == 0 {
+            return Err(BackboneError::ZeroSubproblems);
+        }
+        if self.max_iterations == 0 {
+            return Err(BackboneError::ZeroIterations);
+        }
+        Ok(())
     }
 }
 
@@ -122,6 +186,20 @@ pub struct IterationStats {
     pub elapsed_secs: f64,
 }
 
+impl IterationStats {
+    /// JSON view of this iteration (consumed by `cli fit --out`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("iteration".into(), Json::Number(self.iteration as f64));
+        m.insert("universe_size".into(), Json::Number(self.universe_size as f64));
+        m.insert("num_subproblems".into(), Json::Number(self.num_subproblems as f64));
+        m.insert("subproblem_size".into(), Json::Number(self.subproblem_size as f64));
+        m.insert("backbone_size".into(), Json::Number(self.backbone_size as f64));
+        m.insert("elapsed_secs".into(), Json::Number(self.elapsed_secs));
+        Json::Object(m)
+    }
+}
+
 /// Run-level diagnostics.
 #[derive(Debug, Clone, Default)]
 pub struct BackboneDiagnostics {
@@ -135,10 +213,36 @@ pub struct BackboneDiagnostics {
     /// Wall-clock seconds in phase 2 (reduced exact solve).
     pub phase2_secs: f64,
     /// Whether the loop exited via the |B| ≤ B_max criterion (vs stall /
-    /// iteration cap).
+    /// iteration cap / budget).
     pub converged: bool,
     /// True if the backbone was force-truncated to B_max by vote count.
     pub truncated: bool,
+    /// True if the wall-clock budget expired during phase 1 and the
+    /// subproblem batch (or the loop) was short-circuited.
+    pub budget_exhausted: bool,
+}
+
+impl BackboneDiagnostics {
+    /// JSON view of the whole run, for benchmark tooling (`cli fit --out`)
+    /// — per-iteration stats included, no log parsing required.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "screened_universe".into(),
+            Json::Number(self.screened_universe as f64),
+        );
+        m.insert(
+            "iterations".into(),
+            Json::Array(self.iterations.iter().map(IterationStats::to_json).collect()),
+        );
+        m.insert("backbone_size".into(), Json::Number(self.backbone_size as f64));
+        m.insert("phase1_secs".into(), Json::Number(self.phase1_secs));
+        m.insert("phase2_secs".into(), Json::Number(self.phase2_secs));
+        m.insert("converged".into(), Json::Bool(self.converged));
+        m.insert("truncated".into(), Json::Bool(self.truncated));
+        m.insert("budget_exhausted".into(), Json::Bool(self.budget_exhausted));
+        Json::Object(m)
+    }
 }
 
 /// Result of a backbone run.
@@ -149,123 +253,17 @@ pub struct BackboneFit<L: BackboneLearner> {
     pub diagnostics: BackboneDiagnostics,
 }
 
-/// Execute Algorithm 1.
+/// Execute Algorithm 1 — convenience wrapper over [`FitPipeline`].
+///
+/// Validates `params` (returning a typed [`BackboneError`] instead of
+/// panicking) and runs the pipeline once.
 pub fn run_backbone<L: BackboneLearner>(
     learner: &mut L,
     data: &L::Data,
     params: &BackboneParams,
     budget: &Budget,
-) -> Result<BackboneFit<L>> {
-    assert!(params.num_subproblems >= 1, "need at least one subproblem");
-    assert!(params.beta > 0.0 && params.beta <= 1.0, "beta must be in (0,1]");
-    assert!(params.alpha > 0.0 && params.alpha <= 1.0, "alpha must be in (0,1]");
-    let mut rng = Rng::seed_from_u64(params.seed);
-    let phase1_watch = crate::util::Stopwatch::start();
-
-    // --- Screen -----------------------------------------------------------
-    let n_entities = learner.num_entities(data);
-    let utilities = learner.utilities(data);
-    assert_eq!(utilities.len(), n_entities, "utilities length mismatch");
-    let keep = ((params.alpha * n_entities as f64).ceil() as usize).clamp(1, n_entities);
-    let mut by_utility: Vec<usize> = (0..n_entities).collect();
-    by_utility.sort_by(|&a, &b| {
-        utilities[b].partial_cmp(&utilities[a]).unwrap().then(a.cmp(&b))
-    });
-    let mut universe: Vec<usize> = by_utility.into_iter().take(keep).collect();
-    universe.sort_unstable();
-    let screened_universe = universe.len();
-
-    // --- Iterate ----------------------------------------------------------
-    let mut diagnostics =
-        BackboneDiagnostics { screened_universe, ..Default::default() };
-    let mut votes: BTreeMap<L::Indicator, usize> = BTreeMap::new();
-    let mut converged = false;
-
-    let mut t = 0usize;
-    loop {
-        let iter_watch = crate::util::Stopwatch::start();
-        // ⌈M / 2ᵗ⌉ subproblems this iteration.
-        let m_t = ((params.num_subproblems as f64) / 2f64.powi(t as i32)).ceil() as usize;
-        let m_t = m_t.max(1);
-        let sub_size =
-            ((params.beta * universe.len() as f64).ceil() as usize).clamp(1, universe.len());
-
-        let subproblems = subproblems::construct_subproblems(
-            &universe,
-            &utilities,
-            m_t,
-            sub_size,
-            params.strategy,
-            &mut rng,
-        );
-
-        votes.clear();
-        for sp in &subproblems {
-            let relevant = learner.fit_subproblem(data, sp, &mut rng)?;
-            for ind in relevant {
-                *votes.entry(ind).or_insert(0) += 1;
-            }
-        }
-        // Next universe: entities spanned by the backbone.
-        let mut next_universe: Vec<usize> = votes
-            .keys()
-            .flat_map(|ind| learner.indicator_entities(ind))
-            .collect();
-        next_universe.sort_unstable();
-        next_universe.dedup();
-
-        diagnostics.iterations.push(IterationStats {
-            iteration: t,
-            universe_size: universe.len(),
-            num_subproblems: m_t,
-            subproblem_size: sub_size,
-            backbone_size: votes.len(),
-            elapsed_secs: iter_watch.elapsed_secs(),
-        });
-
-        t += 1;
-        let b_size = votes.len();
-        // Termination checks (paper: |B| ≤ B_max, or other criterion).
-        if params.b_max == 0 || b_size <= params.b_max {
-            converged = true;
-            break;
-        }
-        if t >= params.max_iterations {
-            break;
-        }
-        if next_universe.len() >= universe.len() {
-            break; // stall: universe no longer shrinking
-        }
-        if budget.expired() {
-            break;
-        }
-        universe = next_universe;
-    }
-
-    // Assemble backbone; force-truncate to B_max by vote count on
-    // non-converged exits so phase 2 stays tractable (deterministic:
-    // vote count desc, then indicator order).
-    let mut backbone: Vec<L::Indicator> = votes.keys().cloned().collect();
-    let mut truncated = false;
-    if params.b_max > 0 && backbone.len() > params.b_max {
-        let mut ranked: Vec<(usize, L::Indicator)> =
-            votes.iter().map(|(k, &v)| (v, k.clone())).collect();
-        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
-        backbone = ranked.into_iter().take(params.b_max).map(|(_, k)| k).collect();
-        backbone.sort();
-        truncated = true;
-    }
-    diagnostics.backbone_size = backbone.len();
-    diagnostics.converged = converged;
-    diagnostics.truncated = truncated;
-    diagnostics.phase1_secs = phase1_watch.elapsed_secs();
-
-    // --- Reduced fit -------------------------------------------------------
-    let phase2_watch = crate::util::Stopwatch::start();
-    let model = learner.fit_reduced(data, &backbone, budget)?;
-    diagnostics.phase2_secs = phase2_watch.elapsed_secs();
-
-    Ok(BackboneFit { model, backbone, diagnostics })
+) -> Result<BackboneFit<L>, BackboneError> {
+    FitPipeline::new(params.clone())?.run(learner, data, budget)
 }
 
 #[cfg(test)]
@@ -348,6 +346,7 @@ mod tests {
         assert_eq!(fit.backbone, (0..8).collect::<Vec<_>>());
         assert_eq!(fit.model, fit.backbone);
         assert!(fit.diagnostics.converged);
+        assert!(!fit.diagnostics.budget_exhausted);
     }
 
     #[test]
@@ -440,5 +439,78 @@ mod tests {
         let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
         assert_eq!(learner.subproblem_calls, 1);
         assert_eq!(fit.backbone, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn invalid_params_error_without_touching_the_learner() {
+        let mut learner = toy(20, 4);
+        let params = BackboneParams { alpha: 0.0, ..Default::default() };
+        let err =
+            run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap_err();
+        assert_eq!(err, BackboneError::InvalidAlpha { value: 0.0 });
+        assert_eq!(learner.subproblem_calls, 0);
+    }
+
+    #[test]
+    fn utilities_length_mismatch_is_a_typed_error() {
+        struct BadLearner;
+        impl BackboneLearner for BadLearner {
+            type Data = ();
+            type Indicator = usize;
+            type Model = ();
+            fn num_entities(&self, _d: &()) -> usize {
+                10
+            }
+            fn utilities(&mut self, _d: &()) -> Vec<f64> {
+                vec![1.0; 3] // wrong length
+            }
+            fn fit_subproblem(
+                &mut self,
+                _d: &(),
+                _e: &[usize],
+                _r: &mut Rng,
+            ) -> Result<Vec<usize>> {
+                Ok(vec![])
+            }
+            fn indicator_entities(&self, i: &usize) -> Vec<usize> {
+                vec![*i]
+            }
+            fn fit_reduced(&mut self, _d: &(), _b: &[usize], _bu: &Budget) -> Result<()> {
+                Ok(())
+            }
+        }
+        let err = run_backbone(
+            &mut BadLearner,
+            &(),
+            &BackboneParams::default(),
+            &Budget::unlimited(),
+        )
+        .unwrap_err();
+        assert_eq!(err, BackboneError::UtilityLengthMismatch { expected: 10, got: 3 });
+    }
+
+    #[test]
+    fn diagnostics_json_roundtrips_through_the_json_module() {
+        let mut learner = toy(40, 6);
+        let params = BackboneParams::default();
+        let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
+        let d = &fit.diagnostics;
+        let text = d.to_json().to_string_pretty();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(
+            back.get("backbone_size").and_then(Json::as_usize),
+            Some(d.backbone_size)
+        );
+        assert_eq!(back.get("converged").and_then(Json::as_bool), Some(d.converged));
+        assert_eq!(
+            back.get("budget_exhausted").and_then(Json::as_bool),
+            Some(d.budget_exhausted)
+        );
+        let iters = back.get("iterations").unwrap().as_array().unwrap();
+        assert_eq!(iters.len(), d.iterations.len());
+        assert_eq!(
+            iters[0].get("universe_size").and_then(Json::as_usize),
+            Some(d.iterations[0].universe_size)
+        );
     }
 }

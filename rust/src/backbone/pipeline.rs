@@ -1,0 +1,413 @@
+//! The fit pipeline — Algorithm 1 of the paper as explicit, parallel-ready
+//! stages.
+//!
+//! [`FitPipeline`] owns a validated [`BackboneParams`] and drives the loop:
+//!
+//! 1. **Screen** — rank entities by utility, keep the top `⌈α·p⌉`.
+//! 2. **Subproblem batch** — construct `⌈M/2ᵗ⌉` subproblems and solve the
+//!    whole batch through [`solve_subproblem_batch`]
+//!    (`Vec<Subproblem> → Vec<Vec<Indicator>>`). Each subproblem gets an
+//!    independent RNG stream forked *before* execution, so batch results
+//!    do not depend on execution order — the property a threaded
+//!    [`ExecutionPolicy`] needs.
+//! 3. **Tally + terminate** — vote-count indicators, shrink the universe,
+//!    stop on `|B| ≤ B_max`, stall, the iteration cap, or budget
+//!    exhaustion (recorded in
+//!    [`BackboneDiagnostics::budget_exhausted`]).
+//! 4. **Reduced fit** — exact solve on the final backbone.
+//!
+//! The batch stage checks the wall-clock budget **before every
+//! subproblem**, so an expired budget short-circuits mid-iteration with
+//! the partial vote tally instead of finishing the whole batch first.
+
+use super::error::BackboneError;
+use super::subproblems::{construct_subproblems, Subproblem};
+use super::{
+    BackboneDiagnostics, BackboneFit, BackboneLearner, BackboneParams, IterationStats,
+};
+use crate::rng::Rng;
+use crate::util::{Budget, Stopwatch};
+use std::collections::BTreeMap;
+
+/// How the subproblem batch of one iteration is executed.
+///
+/// The batch contract (order-independent results, one pre-forked RNG
+/// stream per subproblem) is policy-agnostic, so switching policies can
+/// never change *what* is computed — only how it is scheduled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+#[non_exhaustive]
+pub enum ExecutionPolicy {
+    /// Solve subproblems one after another on the calling thread.
+    #[default]
+    Sequential,
+    /// Reserved for threaded / engine-backed execution. The batch
+    /// contract already guarantees order-independence; until a threaded
+    /// scheduler lands this policy lowers to the sequential schedule, so
+    /// selecting it is forward-compatible and never changes results.
+    Parallel,
+}
+
+/// Execute one iteration's subproblem batch: `Vec<Subproblem>` in,
+/// `Vec<Vec<Indicator>>` out (one result list per *solved* subproblem).
+///
+/// Returns `(results, budget_exhausted)`. When the budget expires
+/// mid-batch the remaining subproblems are skipped and the partial
+/// results are returned with `budget_exhausted = true`.
+pub fn solve_subproblem_batch<L: BackboneLearner>(
+    learner: &mut L,
+    data: &L::Data,
+    batch: &[Subproblem],
+    rng: &mut Rng,
+    budget: &Budget,
+    policy: ExecutionPolicy,
+) -> Result<(Vec<Vec<L::Indicator>>, bool), BackboneError> {
+    // Fork one independent stream per subproblem up front: results become
+    // a pure function of (subproblem, stream), independent of the order —
+    // or the thread — in which the batch is drained.
+    let mut streams: Vec<Rng> = batch.iter().map(|_| rng.fork()).collect();
+    let mut results = Vec::with_capacity(batch.len());
+    match policy {
+        ExecutionPolicy::Sequential | ExecutionPolicy::Parallel => {
+            for (subproblem, stream) in batch.iter().zip(streams.iter_mut()) {
+                if budget.expired() {
+                    return Ok((results, true));
+                }
+                let relevant = learner
+                    .fit_subproblem(data, subproblem, stream)
+                    .map_err(|e| BackboneError::Solver { message: format!("{e:#}") })?;
+                results.push(relevant);
+            }
+        }
+    }
+    Ok((results, false))
+}
+
+/// A validated, reusable runner for Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct FitPipeline {
+    params: BackboneParams,
+}
+
+impl FitPipeline {
+    /// Validate `params` and build the pipeline. All hyperparameter
+    /// errors surface here, before any data is touched.
+    pub fn new(params: BackboneParams) -> Result<FitPipeline, BackboneError> {
+        params.validate()?;
+        Ok(FitPipeline { params })
+    }
+
+    /// The validated hyperparameters.
+    pub fn params(&self) -> &BackboneParams {
+        &self.params
+    }
+
+    /// Run the two-phase backbone algorithm.
+    pub fn run<L: BackboneLearner>(
+        &self,
+        learner: &mut L,
+        data: &L::Data,
+        budget: &Budget,
+    ) -> Result<BackboneFit<L>, BackboneError> {
+        let params = &self.params;
+        let mut rng = Rng::seed_from_u64(params.seed);
+        let phase1_watch = Stopwatch::start();
+
+        // --- Screen stage --------------------------------------------------
+        let n_entities = learner.num_entities(data);
+        if n_entities == 0 {
+            return Err(BackboneError::EmptyData {
+                what: "no entities to sample (zero features / points)",
+            });
+        }
+        let utilities = learner.utilities(data);
+        if utilities.len() != n_entities {
+            return Err(BackboneError::UtilityLengthMismatch {
+                expected: n_entities,
+                got: utilities.len(),
+            });
+        }
+        let keep = ((params.alpha * n_entities as f64).ceil() as usize).clamp(1, n_entities);
+        let mut by_utility: Vec<usize> = (0..n_entities).collect();
+        by_utility.sort_by(|&a, &b| {
+            utilities[b]
+                .partial_cmp(&utilities[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut universe: Vec<usize> = by_utility.into_iter().take(keep).collect();
+        universe.sort_unstable();
+
+        // --- Iterate -------------------------------------------------------
+        let mut diagnostics =
+            BackboneDiagnostics { screened_universe: universe.len(), ..Default::default() };
+        let mut votes: BTreeMap<L::Indicator, usize> = BTreeMap::new();
+        let mut converged = false;
+
+        let mut t = 0usize;
+        loop {
+            let iter_watch = Stopwatch::start();
+            // ⌈M / 2ᵗ⌉ subproblems this iteration.
+            let m_t =
+                (((params.num_subproblems as f64) / 2f64.powi(t as i32)).ceil() as usize).max(1);
+            let sub_size =
+                ((params.beta * universe.len() as f64).ceil() as usize).clamp(1, universe.len());
+
+            let batch = construct_subproblems(
+                &universe,
+                &utilities,
+                m_t,
+                sub_size,
+                params.strategy,
+                &mut rng,
+            );
+            let (batch_results, exhausted) = solve_subproblem_batch(
+                learner,
+                data,
+                &batch,
+                &mut rng,
+                budget,
+                params.execution,
+            )?;
+
+            votes.clear();
+            for relevant in batch_results {
+                for ind in relevant {
+                    *votes.entry(ind).or_insert(0) += 1;
+                }
+            }
+            // Next universe: entities spanned by the backbone.
+            let mut next_universe: Vec<usize> = votes
+                .keys()
+                .flat_map(|ind| learner.indicator_entities(ind))
+                .collect();
+            next_universe.sort_unstable();
+            next_universe.dedup();
+
+            diagnostics.iterations.push(IterationStats {
+                iteration: t,
+                universe_size: universe.len(),
+                num_subproblems: m_t,
+                subproblem_size: sub_size,
+                backbone_size: votes.len(),
+                elapsed_secs: iter_watch.elapsed_secs(),
+            });
+
+            t += 1;
+            if exhausted {
+                diagnostics.budget_exhausted = true;
+                break;
+            }
+            let b_size = votes.len();
+            // Termination checks (paper: |B| ≤ B_max, or other criterion).
+            if params.b_max == 0 || b_size <= params.b_max {
+                converged = true;
+                break;
+            }
+            if t >= params.max_iterations {
+                break;
+            }
+            if next_universe.len() >= universe.len() {
+                break; // stall: universe no longer shrinking
+            }
+            if budget.expired() {
+                diagnostics.budget_exhausted = true;
+                break;
+            }
+            universe = next_universe;
+        }
+
+        // Assemble backbone; force-truncate to B_max by vote count on
+        // non-converged exits so phase 2 stays tractable (deterministic:
+        // vote count desc, then indicator order).
+        let mut backbone: Vec<L::Indicator> = votes.keys().cloned().collect();
+        let mut truncated = false;
+        if params.b_max > 0 && backbone.len() > params.b_max {
+            let mut ranked: Vec<(usize, L::Indicator)> =
+                votes.iter().map(|(k, &v)| (v, k.clone())).collect();
+            ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+            backbone = ranked.into_iter().take(params.b_max).map(|(_, k)| k).collect();
+            backbone.sort();
+            truncated = true;
+        }
+        diagnostics.backbone_size = backbone.len();
+        diagnostics.converged = converged;
+        diagnostics.truncated = truncated;
+        diagnostics.phase1_secs = phase1_watch.elapsed_secs();
+
+        // --- Reduced fit ---------------------------------------------------
+        let phase2_watch = Stopwatch::start();
+        let model = learner
+            .fit_reduced(data, &backbone, budget)
+            .map_err(|e| BackboneError::Solver { message: format!("{e:#}") })?;
+        diagnostics.phase2_secs = phase2_watch.elapsed_secs();
+
+        Ok(BackboneFit { model, backbone, diagnostics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Learner that counts calls and honours a per-call sleep so budget
+    /// short-circuiting can be observed deterministically.
+    struct SlowLearner {
+        n_entities: usize,
+        sleep: std::time::Duration,
+        subproblem_calls: usize,
+    }
+
+    impl BackboneLearner for SlowLearner {
+        type Data = ();
+        type Indicator = usize;
+        type Model = usize;
+
+        fn num_entities(&self, _d: &()) -> usize {
+            self.n_entities
+        }
+
+        fn utilities(&mut self, _d: &()) -> Vec<f64> {
+            vec![1.0; self.n_entities]
+        }
+
+        fn fit_subproblem(
+            &mut self,
+            _d: &(),
+            entities: &[usize],
+            _rng: &mut Rng,
+        ) -> anyhow::Result<Vec<usize>> {
+            self.subproblem_calls += 1;
+            std::thread::sleep(self.sleep);
+            Ok(entities.to_vec())
+        }
+
+        fn indicator_entities(&self, i: &usize) -> Vec<usize> {
+            vec![*i]
+        }
+
+        fn fit_reduced(
+            &mut self,
+            _d: &(),
+            backbone: &[usize],
+            _b: &Budget,
+        ) -> anyhow::Result<usize> {
+            Ok(backbone.len())
+        }
+    }
+
+    #[test]
+    fn pipeline_rejects_invalid_params() {
+        let bad = BackboneParams { beta: 0.0, ..Default::default() };
+        assert_eq!(
+            FitPipeline::new(bad).unwrap_err(),
+            BackboneError::InvalidBeta { value: 0.0 }
+        );
+        let bad = BackboneParams { alpha: 1.5, ..Default::default() };
+        assert!(matches!(
+            FitPipeline::new(bad),
+            Err(BackboneError::InvalidAlpha { .. })
+        ));
+        let bad = BackboneParams { num_subproblems: 0, ..Default::default() };
+        assert_eq!(FitPipeline::new(bad).unwrap_err(), BackboneError::ZeroSubproblems);
+    }
+
+    #[test]
+    fn expired_budget_short_circuits_batch_mid_iteration() {
+        let mut learner = SlowLearner {
+            n_entities: 20,
+            sleep: std::time::Duration::ZERO,
+            subproblem_calls: 0,
+        };
+        let params = BackboneParams { num_subproblems: 6, ..Default::default() };
+        let pipeline = FitPipeline::new(params).unwrap();
+        let fit = pipeline.run(&mut learner, &(), &Budget::seconds(0.0)).unwrap();
+        // Budget was already expired: no subproblem may run, yet the
+        // reduced fit still produced a (degenerate) model.
+        assert_eq!(learner.subproblem_calls, 0);
+        assert!(fit.diagnostics.budget_exhausted);
+        assert!(!fit.diagnostics.converged);
+        assert!(!fit.diagnostics.iterations.is_empty());
+        assert_eq!(fit.backbone.len(), 0);
+    }
+
+    #[test]
+    fn partial_batch_results_are_kept_on_exhaustion() {
+        // Sleep makes the budget expire after the first subproblem.
+        let mut learner = SlowLearner {
+            n_entities: 10,
+            sleep: std::time::Duration::from_millis(30),
+            subproblem_calls: 0,
+        };
+        let params =
+            BackboneParams { num_subproblems: 8, beta: 0.5, ..Default::default() };
+        let pipeline = FitPipeline::new(params).unwrap();
+        let fit = pipeline.run(&mut learner, &(), &Budget::seconds(0.02)).unwrap();
+        assert!(fit.diagnostics.budget_exhausted);
+        assert!(learner.subproblem_calls < 8, "batch was not short-circuited");
+        // The subproblems that did run still voted into the backbone.
+        assert_eq!(fit.backbone.len(), fit.diagnostics.backbone_size);
+    }
+
+    #[test]
+    fn parallel_policy_matches_sequential_results() {
+        let run = |policy: ExecutionPolicy| {
+            let mut learner = SlowLearner {
+                n_entities: 30,
+                sleep: std::time::Duration::ZERO,
+                subproblem_calls: 0,
+            };
+            let params = BackboneParams {
+                num_subproblems: 4,
+                beta: 0.4,
+                execution: policy,
+                seed: 11,
+                ..Default::default()
+            };
+            FitPipeline::new(params)
+                .unwrap()
+                .run(&mut learner, &(), &Budget::unlimited())
+                .unwrap()
+                .backbone
+        };
+        assert_eq!(run(ExecutionPolicy::Sequential), run(ExecutionPolicy::Parallel));
+    }
+
+    #[test]
+    fn batch_results_are_order_independent_via_forked_streams() {
+        // Two identical runs must agree even though each subproblem draws
+        // from its own stream (the determinism contract of the batch).
+        let mut rng_a = Rng::seed_from_u64(3);
+        let mut rng_b = Rng::seed_from_u64(3);
+        let batch: Vec<Subproblem> = vec![vec![0, 1], vec![2, 3], vec![4, 5]];
+        let mut l1 = SlowLearner {
+            n_entities: 6,
+            sleep: std::time::Duration::ZERO,
+            subproblem_calls: 0,
+        };
+        let mut l2 = SlowLearner {
+            n_entities: 6,
+            sleep: std::time::Duration::ZERO,
+            subproblem_calls: 0,
+        };
+        let (r1, e1) = solve_subproblem_batch(
+            &mut l1,
+            &(),
+            &batch,
+            &mut rng_a,
+            &Budget::unlimited(),
+            ExecutionPolicy::Sequential,
+        )
+        .unwrap();
+        let (r2, e2) = solve_subproblem_batch(
+            &mut l2,
+            &(),
+            &batch,
+            &mut rng_b,
+            &Budget::unlimited(),
+            ExecutionPolicy::Parallel,
+        )
+        .unwrap();
+        assert_eq!(r1, r2);
+        assert!(!e1 && !e2);
+    }
+}

@@ -5,6 +5,12 @@
 //! the PJRT engine when an AOT artifact of matching shape is available
 //! (see `runtime`); the pure-Rust versions here are the fallback and the
 //! cross-check oracle used in tests.
+//!
+//! These are internal oracles with a shape precondition
+//! (`x.rows() == y.len()`), asserted here. The public estimator surface
+//! ([`crate::backbone::Backbone`]) validates shapes *before* any screener
+//! runs and reports a typed `BackboneError` instead, so user input never
+//! reaches these asserts.
 
 use crate::linalg::{dot, variance, Matrix};
 

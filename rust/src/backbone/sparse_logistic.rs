@@ -6,7 +6,23 @@
 //! (Pearson correlation against 0/1 labels); subproblems are fit with the
 //! logistic-IHT heuristic; the reduced problem is best-subset logistic
 //! regression solved exactly by enumeration over the (small) backbone.
+//!
+//! ```no_run
+//! # use backbone_learn::backbone::Backbone;
+//! # use backbone_learn::linalg::Matrix;
+//! # let (x, y) = (Matrix::zeros(10, 20), vec![0.0; 10]);
+//! let mut bb = Backbone::sparse_logistic()
+//!     .alpha(0.5)
+//!     .beta(0.5)
+//!     .num_subproblems(5)
+//!     .max_nonzeros(3)
+//!     .build()?;
+//! let model = bb.fit(&x, &y)?;
+//! let proba = model.predict_proba(&x);
+//! # Ok::<(), backbone_learn::backbone::BackboneError>(())
+//! ```
 
+use super::error::BackboneError;
 use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -27,11 +43,24 @@ pub struct BackboneSparseLogistic {
     /// IHT iterations per subproblem fit.
     pub iht_iters: usize,
     pub last_diagnostics: Option<BackboneDiagnostics>,
-    fitted: Option<LogisticModel>,
+    pub(crate) fitted: Option<LogisticModel>,
 }
 
 impl BackboneSparseLogistic {
-    /// Paper-style constructor: `(alpha, beta, num_subproblems, max_nonzeros)`.
+    /// Paper-style positional constructor:
+    /// `(alpha, beta, num_subproblems, max_nonzeros)`.
+    ///
+    /// Unlike `build()`, a positional constructor cannot report invalid
+    /// hyperparameters — they surface as a [`BackboneError`] from `fit`
+    /// instead. Note the argument-order trap across learners:
+    /// [`super::clustering::BackboneClustering::new`] takes **beta first**
+    /// (no alpha). The builder names every knob and is the only
+    /// documented path.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the `Backbone::sparse_logistic()` builder; positional \
+                argument order differs between learners"
+    )]
     pub fn new(alpha: f64, beta: f64, num_subproblems: usize, max_nonzeros: usize) -> Self {
         Self {
             params: BackboneParams {
@@ -50,7 +79,7 @@ impl BackboneSparseLogistic {
         }
     }
 
-    pub fn fit(&mut self, x: &Matrix, y: &[f64]) -> Result<&LogisticModel> {
+    pub fn fit(&mut self, x: &Matrix, y: &[f64]) -> Result<&LogisticModel, BackboneError> {
         self.fit_with_budget(x, y, &Budget::unlimited())
     }
 
@@ -59,11 +88,27 @@ impl BackboneSparseLogistic {
         x: &Matrix,
         y: &[f64],
         budget: &Budget,
-    ) -> Result<&LogisticModel> {
-        assert!(
-            y.iter().all(|&v| v == 0.0 || v == 1.0),
-            "labels must be in {{0, 1}}"
-        );
+    ) -> Result<&LogisticModel, BackboneError> {
+        if x.rows() != y.len() {
+            return Err(BackboneError::DimensionMismatch {
+                x_rows: x.rows(),
+                y_len: y.len(),
+            });
+        }
+        if x.rows() == 0 {
+            return Err(BackboneError::EmptyData { what: "no training rows" });
+        }
+        for (index, &value) in y.iter().enumerate() {
+            if value != 0.0 && value != 1.0 {
+                return Err(BackboneError::NonBinaryLabels { index, value });
+            }
+        }
+        if self.max_nonzeros == 0 {
+            return Err(BackboneError::InvalidHyperparameter {
+                field: "max_nonzeros",
+                message: "must be at least 1".into(),
+            });
+        }
         let data = SupervisedData { x: x.clone(), y: y.to_vec() };
         let mut inner = Inner {
             k: self.max_nonzeros,
@@ -76,10 +121,14 @@ impl BackboneSparseLogistic {
         Ok(self.fitted.as_ref().unwrap())
     }
 
+    /// P(y = 1) per row. Panics when unfitted — prefer
+    /// [`Predict::try_predict`](super::Predict::try_predict).
     pub fn predict_proba(&self, x: &Matrix) -> Vec<f64> {
         self.fitted.as_ref().expect("call fit() first").predict_proba(x)
     }
 
+    /// 0/1 predictions. Panics when unfitted — prefer
+    /// [`Predict::try_predict`](super::Predict::try_predict).
     pub fn predict(&self, x: &Matrix) -> Vec<f64> {
         self.fitted.as_ref().expect("call fit() first").predict(x)
     }
@@ -145,6 +194,7 @@ impl BackboneLearner for Inner {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backbone::Backbone;
     use crate::data::classification::{generate, ClassificationConfig};
     use crate::metrics::{auc, support_recovery};
 
@@ -163,10 +213,20 @@ mod tests {
         )
     }
 
+    fn lg(alpha: f64, beta: f64, m: usize, k: usize) -> BackboneSparseLogistic {
+        Backbone::sparse_logistic()
+            .alpha(alpha)
+            .beta(beta)
+            .num_subproblems(m)
+            .max_nonzeros(k)
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn recovers_informative_features() {
         let data = gen(1);
-        let mut bb = BackboneSparseLogistic::new(0.5, 0.5, 5, 3);
+        let mut bb = lg(0.5, 0.5, 5, 3);
         let model = bb.fit(&data.x, &data.y).unwrap().clone();
         let rec = support_recovery(&model.support, &data.informative);
         assert!(rec.f1 >= 2.0 / 3.0, "f1={} support={:?}", rec.f1, model.support);
@@ -177,7 +237,7 @@ mod tests {
     #[test]
     fn support_bounded_by_max_nonzeros() {
         let data = gen(2);
-        let mut bb = BackboneSparseLogistic::new(0.6, 0.5, 3, 2);
+        let mut bb = lg(0.6, 0.5, 3, 2);
         let model = bb.fit(&data.x, &data.y).unwrap();
         assert!(model.support.len() <= 2);
         let nnz = model.beta.iter().filter(|&&b| b != 0.0).count();
@@ -187,7 +247,7 @@ mod tests {
     #[test]
     fn exact_phase_no_worse_than_subproblem_heuristic() {
         let data = gen(3);
-        let mut bb = BackboneSparseLogistic::new(0.5, 0.5, 4, 3);
+        let mut bb = lg(0.5, 0.5, 4, 3);
         let model = bb.fit(&data.x, &data.y).unwrap().clone();
         let heur = crate::solvers::logistic::logistic_l0_fit(&data.x, &data.y, 3, 1e-3, 150);
         assert!(
@@ -199,11 +259,11 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "labels must be in {0, 1}")]
-    fn rejects_non_binary_labels() {
+    fn rejects_non_binary_labels_with_typed_error() {
         let x = Matrix::zeros(4, 2);
         let y = vec![0.0, 1.0, 2.0, 1.0];
-        let mut bb = BackboneSparseLogistic::new(0.5, 0.5, 2, 1);
-        let _ = bb.fit(&x, &y);
+        let mut bb = lg(0.5, 0.5, 2, 1);
+        let err = bb.fit(&x, &y).unwrap_err();
+        assert_eq!(err, BackboneError::NonBinaryLabels { index: 2, value: 2.0 });
     }
 }

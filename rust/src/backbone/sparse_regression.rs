@@ -3,18 +3,25 @@
 //! Indicators are features. Subproblems are fit with the L0Learn-style
 //! heuristic ([`crate::solvers::cd::l0_fit`]); the reduced problem is
 //! solved exactly with the L0BnB-style branch-and-bound
-//! ([`crate::solvers::l0bnb`]). Mirrors the package's usage:
+//! ([`crate::solvers::l0bnb`]). Built through the estimator API:
 //!
 //! ```no_run
-//! # use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
+//! # use backbone_learn::backbone::Backbone;
 //! # use backbone_learn::linalg::Matrix;
 //! # let (x, y) = (Matrix::zeros(10, 20), vec![0.0; 10]);
-//! let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, 10); // α, β, M, max_nonzeros
-//! bb.lambda2 = 0.001;
-//! let model = bb.fit(&x, &y).unwrap();
+//! let mut bb = Backbone::sparse_regression()
+//!     .alpha(0.5)
+//!     .beta(0.5)
+//!     .num_subproblems(5)
+//!     .max_nonzeros(10)
+//!     .lambda2(0.001)
+//!     .build()?;
+//! let model = bb.fit(&x, &y)?;
 //! let y_pred = model.predict(&x);
+//! # Ok::<(), backbone_learn::backbone::BackboneError>(())
 //! ```
 
+use super::error::BackboneError;
 use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
@@ -70,11 +77,24 @@ pub struct BackboneSparseRegression {
     pub backend: Backend,
     /// Diagnostics of the last `fit` call.
     pub last_diagnostics: Option<BackboneDiagnostics>,
-    fitted: Option<SparseRegressionModel>,
+    pub(crate) fitted: Option<SparseRegressionModel>,
 }
 
 impl BackboneSparseRegression {
-    /// Paper-style constructor: `(alpha, beta, num_subproblems, max_nonzeros)`.
+    /// Paper-style positional constructor:
+    /// `(alpha, beta, num_subproblems, max_nonzeros)`.
+    ///
+    /// Unlike `build()`, a positional constructor cannot report invalid
+    /// hyperparameters — they surface as a [`BackboneError`] from `fit`
+    /// instead. Note the argument-order trap across learners:
+    /// [`super::clustering::BackboneClustering::new`] takes **beta first**
+    /// (no alpha). The builder names every knob and is the only
+    /// documented path.
+    #[deprecated(
+        since = "0.2.0",
+        note = "use the `Backbone::sparse_regression()` builder; positional \
+                argument order differs between learners"
+    )]
     pub fn new(alpha: f64, beta: f64, num_subproblems: usize, max_nonzeros: usize) -> Self {
         Self {
             params: BackboneParams {
@@ -97,7 +117,11 @@ impl BackboneSparseRegression {
     }
 
     /// Run the backbone and fit the final model.
-    pub fn fit(&mut self, x: &Matrix, y: &[f64]) -> Result<&SparseRegressionModel> {
+    pub fn fit(
+        &mut self,
+        x: &Matrix,
+        y: &[f64],
+    ) -> Result<&SparseRegressionModel, BackboneError> {
         self.fit_with_budget(x, y, &Budget::unlimited())
     }
 
@@ -107,7 +131,22 @@ impl BackboneSparseRegression {
         x: &Matrix,
         y: &[f64],
         budget: &Budget,
-    ) -> Result<&SparseRegressionModel> {
+    ) -> Result<&SparseRegressionModel, BackboneError> {
+        if x.rows() != y.len() {
+            return Err(BackboneError::DimensionMismatch {
+                x_rows: x.rows(),
+                y_len: y.len(),
+            });
+        }
+        if x.rows() == 0 {
+            return Err(BackboneError::EmptyData { what: "no training rows" });
+        }
+        if self.max_nonzeros == 0 {
+            return Err(BackboneError::InvalidHyperparameter {
+                field: "max_nonzeros",
+                message: "must be at least 1".into(),
+            });
+        }
         let data = SupervisedData { x: x.clone(), y: y.to_vec() };
         let mut inner = Inner { cfg: self.clone_config() };
         let fit = run_backbone(&mut inner, &data, &self.params, budget)?;
@@ -117,6 +156,9 @@ impl BackboneSparseRegression {
     }
 
     /// Predictions from the last fitted model.
+    ///
+    /// Panics when unfitted — prefer
+    /// [`Predict::try_predict`](super::Predict::try_predict).
     pub fn predict(&self, x: &Matrix) -> Vec<f64> {
         self.fitted.as_ref().expect("call fit() first").predict(x)
     }
@@ -251,6 +293,7 @@ pub fn l0_heuristic_baseline(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::backbone::Backbone;
     use crate::data::sparse_regression::{generate, SparseRegressionConfig};
 
     fn gen(n: usize, p: usize, k: usize, seed: u64) -> crate::data::sparse_regression::SparseRegressionData {
@@ -260,10 +303,20 @@ mod tests {
         )
     }
 
+    fn sr(alpha: f64, beta: f64, m: usize, k: usize) -> BackboneSparseRegression {
+        Backbone::sparse_regression()
+            .alpha(alpha)
+            .beta(beta)
+            .num_subproblems(m)
+            .max_nonzeros(k)
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn recovers_support_on_moderate_problem() {
         let data = gen(200, 400, 5, 1);
-        let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, 5);
+        let mut bb = sr(0.5, 0.5, 5, 5);
         let model = bb.fit(&data.x, &data.y).unwrap().clone();
         let rec = crate::metrics::support_recovery(&model.support, &data.support_true);
         assert!(rec.f1 >= 0.8, "f1={} support={:?}", rec.f1, model.support);
@@ -274,7 +327,7 @@ mod tests {
     #[test]
     fn support_never_exceeds_max_nonzeros() {
         let data = gen(100, 150, 4, 2);
-        let mut bb = BackboneSparseRegression::new(0.6, 0.5, 4, 3);
+        let mut bb = sr(0.6, 0.5, 4, 3);
         let model = bb.fit(&data.x, &data.y).unwrap();
         assert!(model.support.len() <= 3);
         let nnz = model.beta.iter().filter(|&&b| b != 0.0).count();
@@ -284,19 +337,20 @@ mod tests {
     #[test]
     fn backbone_diagnostics_populated() {
         let data = gen(80, 120, 3, 3);
-        let mut bb = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
+        let mut bb = sr(0.5, 0.5, 3, 3);
         bb.fit(&data.x, &data.y).unwrap();
         let d = bb.last_diagnostics.as_ref().unwrap();
         assert_eq!(d.screened_universe, 60); // α = 0.5 of 120
         assert!(!d.iterations.is_empty());
         assert!(d.backbone_size > 0);
         assert!(d.phase1_secs >= 0.0 && d.phase2_secs >= 0.0);
+        assert!(!d.budget_exhausted);
     }
 
     #[test]
     fn model_beta_zero_outside_backbone() {
         let data = gen(60, 90, 3, 4);
-        let mut bb = BackboneSparseRegression::new(0.4, 0.5, 3, 3);
+        let mut bb = sr(0.4, 0.5, 3, 3);
         let model = bb.fit(&data.x, &data.y).unwrap();
         for &j in &model.support {
             assert!(model.beta[j] != 0.0);
@@ -312,10 +366,10 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let data = gen(60, 80, 3, 5);
-        let mut bb1 = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
+        let mut bb1 = sr(0.5, 0.5, 3, 3);
         bb1.params.seed = 9;
         let m1 = bb1.fit(&data.x, &data.y).unwrap().clone();
-        let mut bb2 = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
+        let mut bb2 = sr(0.5, 0.5, 3, 3);
         bb2.params.seed = 9;
         let m2 = bb2.fit(&data.x, &data.y).unwrap().clone();
         assert_eq!(m1.support, m2.support);
@@ -323,9 +377,23 @@ mod tests {
     }
 
     #[test]
+    fn mismatched_dimensions_error_instead_of_panicking() {
+        let mut bb = sr(0.5, 0.5, 2, 2);
+        let err = bb.fit(&Matrix::zeros(4, 3), &[1.0, 2.0]).unwrap_err();
+        assert_eq!(err, BackboneError::DimensionMismatch { x_rows: 4, y_len: 2 });
+    }
+
+    #[test]
+    fn empty_feature_set_errors_instead_of_panicking() {
+        let mut bb = sr(0.5, 0.5, 2, 2);
+        let err = bb.fit(&Matrix::zeros(3, 0), &[1.0, 2.0, 3.0]).unwrap_err();
+        assert!(matches!(err, BackboneError::EmptyData { .. }));
+    }
+
+    #[test]
     #[should_panic(expected = "call fit() first")]
     fn predict_before_fit_panics() {
-        let bb = BackboneSparseRegression::new(0.5, 0.5, 5, 10);
+        let bb = sr(0.5, 0.5, 5, 10);
         let _ = bb.predict(&Matrix::zeros(2, 2));
     }
 }

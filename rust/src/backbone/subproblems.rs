@@ -15,6 +15,11 @@
 
 use crate::rng::Rng;
 
+/// One subproblem: the sorted, duplicate-free entity ids it samples.
+/// The pipeline's batch stage maps `Vec<Subproblem>` to
+/// `Vec<Vec<Indicator>>` (see [`crate::backbone::pipeline`]).
+pub type Subproblem = Vec<usize>;
+
 /// Strategy for assembling subproblems from the current universe.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubproblemStrategy {
@@ -25,7 +30,10 @@ pub enum SubproblemStrategy {
 /// Build `m` subproblems of `size` entities each from `universe`.
 ///
 /// `utilities` is indexed by *entity id* (not universe position).
-/// Returned subproblems are sorted and duplicate-free.
+/// Returned subproblems are sorted and duplicate-free. Out-of-range
+/// requests are clamped rather than panicking: `m` is raised to 1, `size`
+/// to `1..=universe.len()`; an empty universe yields `m` empty
+/// subproblems.
 pub fn construct_subproblems(
     universe: &[usize],
     utilities: &[f64],
@@ -33,9 +41,12 @@ pub fn construct_subproblems(
     size: usize,
     strategy: SubproblemStrategy,
     rng: &mut Rng,
-) -> Vec<Vec<usize>> {
-    assert!(m >= 1);
-    assert!(size >= 1 && size <= universe.len());
+) -> Vec<Subproblem> {
+    let m = m.max(1);
+    if universe.is_empty() {
+        return vec![Vec::new(); m];
+    }
+    let size = size.clamp(1, universe.len());
     match strategy {
         SubproblemStrategy::UniformCoverage => {
             let mut pool: Vec<usize> = Vec::new();
@@ -148,6 +159,33 @@ mod tests {
             }
         }
         assert!(hits as f64 / reps as f64 > 0.9, "hits={hits}");
+    }
+
+    #[test]
+    fn out_of_range_requests_clamp_instead_of_panicking() {
+        let mut rng = Rng::seed_from_u64(9);
+        // Empty universe → m empty subproblems.
+        let sps = construct_subproblems(
+            &[],
+            &[],
+            3,
+            5,
+            SubproblemStrategy::UniformCoverage,
+            &mut rng,
+        );
+        assert_eq!(sps, vec![Vec::<usize>::new(); 3]);
+        // size > |U| clamps to |U|; m = 0 clamps to 1.
+        let universe = vec![1, 4];
+        let sps = construct_subproblems(
+            &universe,
+            &[1.0; 5],
+            0,
+            10,
+            SubproblemStrategy::UtilityWeighted,
+            &mut rng,
+        );
+        assert_eq!(sps.len(), 1);
+        assert_eq!(sps[0], universe);
     }
 
     #[test]

@@ -15,9 +15,7 @@
 //!   BbLearn grid. Accuracy = silhouette score (in-sample, as in the
 //!   paper).
 
-use crate::backbone::clustering::BackboneClustering;
-use crate::backbone::decision_tree::BackboneDecisionTree;
-use crate::backbone::sparse_regression::BackboneSparseRegression;
+use crate::backbone::Backbone;
 use crate::config::{BackboneCell, ExperimentConfig, Problem};
 use crate::data::{binarize, blobs, classification, sparse_regression, train_test_split};
 use crate::linalg::Matrix;
@@ -133,7 +131,7 @@ impl Acc {
         TableRow {
             method: method.into(),
             m: cell.map(|c| c.m),
-            alpha: cell.and_then(|c| if c.alpha < 1.0 { Some(c.alpha) } else { Some(c.alpha) }),
+            alpha: cell.map(|c| c.alpha),
             beta: cell.map(|c| c.beta),
             accuracy: mean(&self.accuracy),
             time_secs: mean(&self.time),
@@ -212,10 +210,14 @@ pub fn run_sparse_regression_block(cfg: &ExperimentConfig) -> Result<Vec<TableRo
         // --- BbLearn grid ---
         for (ci, cell) in cfg.grid.iter().enumerate() {
             let watch = Stopwatch::start();
-            let mut learner =
-                BackboneSparseRegression::new(cell.alpha, cell.beta, cell.m, cfg.k);
-            learner.backend = default_backend();
-            learner.params.seed = cfg.seed.wrapping_add(rep as u64).wrapping_mul(31 + ci as u64);
+            let mut learner = Backbone::sparse_regression()
+                .alpha(cell.alpha)
+                .beta(cell.beta)
+                .num_subproblems(cell.m)
+                .max_nonzeros(cfg.k)
+                .backend(default_backend())
+                .seed(cfg.seed.wrapping_add(rep as u64).wrapping_mul(31 + ci as u64))
+                .build()?;
             let model = learner
                 .fit_with_budget(&data.x, &data.y, &Budget::seconds(cfg.budget_secs))?
                 .clone();
@@ -313,10 +315,14 @@ pub fn run_decision_tree_block(cfg: &ExperimentConfig) -> Result<Vec<TableRow>> 
         // --- BbLearn grid ---
         for (ci, cell) in cfg.grid.iter().enumerate() {
             let watch = Stopwatch::start();
-            let mut learner = BackboneDecisionTree::new(cell.alpha, cell.beta, cell.m, depth);
-            learner.bins = bins;
-            learner.params.seed =
-                cfg.seed.wrapping_add(rep as u64).wrapping_mul(17 + ci as u64);
+            let mut learner = Backbone::decision_tree()
+                .alpha(cell.alpha)
+                .beta(cell.beta)
+                .num_subproblems(cell.m)
+                .depth(depth)
+                .bins(bins)
+                .seed(cfg.seed.wrapping_add(rep as u64).wrapping_mul(17 + ci as u64))
+                .build()?;
             learner.fit_with_budget(
                 &split.x_train,
                 &split.y_train,
@@ -383,10 +389,13 @@ pub fn run_clustering_block(cfg: &ExperimentConfig) -> Result<Vec<TableRow>> {
         // --- BbLearn grid ---
         for (ci, cell) in cfg.grid.iter().enumerate() {
             let watch = Stopwatch::start();
-            let mut learner = BackboneClustering::new(cell.beta, cell.m, cfg.k);
-            learner.backend = default_backend();
-            learner.params.seed =
-                cfg.seed.wrapping_add(rep as u64).wrapping_mul(13 + ci as u64);
+            let mut learner = Backbone::clustering()
+                .beta(cell.beta)
+                .num_subproblems(cell.m)
+                .n_clusters(cfg.k)
+                .backend(default_backend())
+                .seed(cfg.seed.wrapping_add(rep as u64).wrapping_mul(13 + ci as u64))
+                .build()?;
             learner.fit_with_budget(&data.x, &Budget::seconds(cfg.budget_secs))?;
             let t = watch.elapsed_secs();
             let sil = silhouette_score(&data.x, learner.labels());

@@ -5,7 +5,7 @@
 use super::Args;
 use crate::bench_support::{render_table, run_block};
 use crate::config::{BackboneCell, ExperimentConfig, Problem};
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 pub fn run(args: &Args) -> Result<i32> {
     let sweep = args.get("sweep").unwrap_or_else(|| "alpha-beta".into());
@@ -50,6 +50,9 @@ pub fn run(args: &Args) -> Result<i32> {
             cell.alpha = 1.0;
         }
         cfg.grid.dedup_by(|a, b| a.m == b.m && a.beta == b.beta);
+    }
+    for (i, cell) in cfg.grid.iter().enumerate() {
+        cell.validate().with_context(|| format!("sweep cell {i}"))?;
     }
 
     eprintln!(

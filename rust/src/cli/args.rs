@@ -60,6 +60,17 @@ impl Args {
         }
     }
 
+    /// Float option constrained to the half-open interval `(lo, hi]` — the
+    /// range the backbone fractions (α, β) live in. Reports a CLI-level
+    /// error before any estimator is built.
+    pub fn get_fraction(&self, key: &str, default: f64) -> Result<f64> {
+        let v = self.get_f64(key, default)?;
+        if !(v > 0.0 && v <= 1.0) {
+            bail!("--{key} must be in (0, 1], got {v}");
+        }
+        Ok(v)
+    }
+
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.values.get(key) {
             Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
@@ -90,6 +101,17 @@ mod tests {
         assert_eq!(a.get_f64("alpha", 1.0).unwrap(), 0.25);
         assert_eq!(a.get_f64("beta", 0.5).unwrap(), 0.5);
         assert_eq!(a.get_u64("seed", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn fraction_getter_enforces_unit_interval() {
+        let a = Args::parse(&sv(&["--alpha", "0.25"])).unwrap();
+        assert_eq!(a.get_fraction("alpha", 1.0).unwrap(), 0.25);
+        assert_eq!(a.get_fraction("beta", 0.5).unwrap(), 0.5);
+        let bad = Args::parse(&sv(&["--alpha", "1.5"])).unwrap();
+        assert!(bad.get_fraction("alpha", 1.0).is_err());
+        let zero = Args::parse(&sv(&["--beta", "0"])).unwrap();
+        assert!(zero.get_fraction("beta", 0.5).is_err());
     }
 
     #[test]

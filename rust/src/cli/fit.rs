@@ -1,26 +1,35 @@
 //! `fit` subcommand: single backbone fit with diagnostics, on generated
 //! data (the quickest way to watch the two-phase algorithm work).
+//!
+//! With `--out FILE`, the run's [`BackboneDiagnostics`] and headline
+//! metrics are written as JSON so benchmark tooling can consume
+//! per-iteration stats without parsing the log output.
 
 use super::Args;
-use crate::backbone::clustering::BackboneClustering;
-use crate::backbone::decision_tree::BackboneDecisionTree;
-use crate::backbone::sparse_regression::BackboneSparseRegression;
+use crate::backbone::{Backbone, BackboneDiagnostics};
 use crate::config::Problem;
 use crate::data::{blobs, classification, sparse_regression};
+use crate::json::Json;
 use crate::metrics::{adjusted_rand_index, auc, r2_score, silhouette_score, support_recovery};
 use crate::rng::Rng;
 use crate::util::Budget;
 use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 
 pub fn run(args: &Args) -> Result<i32> {
     let problem =
         Problem::parse(&args.get("problem").context("--problem is required")?)?;
     let seed = args.get_u64("seed", 0)?;
-    let alpha = args.get_f64("alpha", 0.5)?;
-    let beta = args.get_f64("beta", 0.5)?;
+    let alpha = args.get_fraction("alpha", 0.5)?;
+    let beta = args.get_fraction("beta", 0.5)?;
     let m = args.get_usize("m", 5)?;
     let budget = Budget::seconds(args.get_f64("budget", 60.0)?);
+    let out = args.get("out");
     let mut rng = Rng::seed_from_u64(seed);
+
+    // Accumulated for `--out`: headline metric name → value.
+    let mut metrics: BTreeMap<String, Json> = BTreeMap::new();
+    let diagnostics: BackboneDiagnostics;
 
     match problem {
         Problem::SparseRegression => {
@@ -31,8 +40,13 @@ pub fn run(args: &Args) -> Result<i32> {
                 &sparse_regression::SparseRegressionConfig { n, p, k, rho: 0.1, snr: 5.0 },
                 &mut rng,
             );
-            let mut bb = BackboneSparseRegression::new(alpha, beta, m, k);
-            bb.params.seed = seed;
+            let mut bb = Backbone::sparse_regression()
+                .alpha(alpha)
+                .beta(beta)
+                .num_subproblems(m)
+                .max_nonzeros(k)
+                .seed(seed)
+                .build()?;
             let model = bb.fit_with_budget(&data.x, &data.y, &budget)?.clone();
             let r2 = r2_score(&data.y, &model.predict(&data.x));
             let rec = support_recovery(&model.support, &data.support_true);
@@ -42,6 +56,10 @@ pub fn run(args: &Args) -> Result<i32> {
             println!("R²        : {r2:.4}");
             println!("support F1: {:.3}", rec.f1);
             println!("exact gap : {:.4} ({:?})", model.gap, model.status);
+            metrics.insert("r2".into(), Json::Number(r2));
+            metrics.insert("support_f1".into(), Json::Number(rec.f1));
+            metrics.insert("gap".into(), Json::Number(model.gap));
+            diagnostics = bb.last_diagnostics.clone().unwrap();
         }
         Problem::DecisionTrees => {
             let n = args.get_usize("n", 300)?;
@@ -60,8 +78,13 @@ pub fn run(args: &Args) -> Result<i32> {
                 &mut rng,
             );
             let depth = args.get_usize("depth", 2)?;
-            let mut bb = BackboneDecisionTree::new(alpha, beta, m, depth);
-            bb.params.seed = seed;
+            let mut bb = Backbone::decision_tree()
+                .alpha(alpha)
+                .beta(beta)
+                .num_subproblems(m)
+                .depth(depth)
+                .seed(seed)
+                .build()?;
             bb.fit_with_budget(&data.x, &data.y, &budget)?;
             let a = auc(&data.y, &bb.predict_proba(&data.x));
             print_diag(&bb.last_diagnostics);
@@ -70,6 +93,9 @@ pub fn run(args: &Args) -> Result<i32> {
             println!("informative: {:?}", data.informative);
             println!("AUC       : {a:.4}");
             println!("errors    : {} ({:?})", model.errors, model.status);
+            metrics.insert("auc".into(), Json::Number(a));
+            metrics.insert("errors".into(), Json::Number(model.errors as f64));
+            diagnostics = bb.last_diagnostics.clone().unwrap();
         }
         Problem::Clustering => {
             let n = args.get_usize("n", 16)?;
@@ -87,22 +113,39 @@ pub fn run(args: &Args) -> Result<i32> {
                 },
                 &mut rng,
             );
-            let mut bb = BackboneClustering::new(beta, m, k);
-            bb.params.seed = seed;
+            let mut bb = Backbone::clustering()
+                .beta(beta)
+                .num_subproblems(m)
+                .n_clusters(k)
+                .seed(seed)
+                .build()?;
             let model = bb.fit_with_budget(&data.x, &budget)?.clone();
             print_diag(&bb.last_diagnostics);
-            println!("silhouette: {:.4}", silhouette_score(&data.x, &model.labels));
-            println!(
-                "ARI vs truth: {:.4}",
-                adjusted_rand_index(&model.labels, &data.labels_true)
-            );
+            let sil = silhouette_score(&data.x, &model.labels);
+            let ari = adjusted_rand_index(&model.labels, &data.labels_true);
+            println!("silhouette: {sil:.4}");
+            println!("ARI vs truth: {ari:.4}");
             println!("objective : {:.3} gap {:.4} ({:?})", model.objective, model.gap, model.status);
+            metrics.insert("silhouette".into(), Json::Number(sil));
+            metrics.insert("ari".into(), Json::Number(ari));
+            diagnostics = bb.last_diagnostics.clone().unwrap();
         }
+    }
+
+    if let Some(path) = out {
+        let mut doc = BTreeMap::new();
+        doc.insert("problem".into(), Json::String(problem.name().into()));
+        doc.insert("seed".into(), Json::Number(seed as f64));
+        doc.insert("diagnostics".into(), diagnostics.to_json());
+        doc.insert("metrics".into(), Json::Object(metrics));
+        let text = Json::Object(doc).to_string_pretty();
+        std::fs::write(&path, text).with_context(|| format!("writing `{path}`"))?;
+        eprintln!("wrote {path}");
     }
     Ok(0)
 }
 
-fn print_diag(diag: &Option<crate::backbone::BackboneDiagnostics>) {
+fn print_diag(diag: &Option<BackboneDiagnostics>) {
     let Some(d) = diag else { return };
     println!("screened universe: {}", d.screened_universe);
     for it in &d.iterations {
@@ -117,7 +160,12 @@ fn print_diag(diag: &Option<crate::backbone::BackboneDiagnostics>) {
         );
     }
     println!(
-        "backbone: {} (converged={}, truncated={}) phase1 {:.2}s phase2 {:.2}s",
-        d.backbone_size, d.converged, d.truncated, d.phase1_secs, d.phase2_secs
+        "backbone: {} (converged={}, truncated={}, budget_exhausted={}) phase1 {:.2}s phase2 {:.2}s",
+        d.backbone_size,
+        d.converged,
+        d.truncated,
+        d.budget_exhausted,
+        d.phase1_secs,
+        d.phase2_secs
     );
 }

@@ -2,7 +2,7 @@
 //!
 //! ```text
 //! backbone-learn table1 [--block sr|dt|cl|all] [--full] [--config FILE] [--out FILE]
-//! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S]
+//! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S] [--out FILE]
 //! backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
 //! backbone-learn dump-config --problem sr|dt|cl [--full]
 //! backbone-learn artifacts [--dir artifacts]
@@ -27,6 +27,7 @@ USAGE:
   backbone-learn table1 [--block sr|dt|cl|all] [--full] [--config FILE] [--out FILE]
   backbone-learn fit    --problem sr|dt|cl [--n N] [--p P] [--k K]
                         [--alpha A] [--beta B] [--m M] [--seed S] [--budget SECS]
+                        [--out FILE]   (write diagnostics + metrics as JSON)
   backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
   backbone-learn dump-config --problem sr|dt|cl [--full]
   backbone-learn artifacts [--dir DIR]

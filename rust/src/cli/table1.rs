@@ -30,6 +30,11 @@ pub fn run(args: &Args) -> Result<i32> {
         cfg.repetitions = args.get_usize("reps", cfg.repetitions)?;
         cfg.budget_secs = args.get_f64("budget", cfg.budget_secs)?;
         cfg.seed = args.get_u64("seed", cfg.seed)?;
+        // Fail fast on bad grids (typed BackboneError) instead of
+        // aborting mid-sweep after hours of compute.
+        for (i, cell) in cfg.grid.iter().enumerate() {
+            cell.validate().with_context(|| format!("grid cell {i}"))?;
+        }
 
         if !args.flag("quiet") {
             eprintln!(

@@ -4,6 +4,7 @@
 //! method grid, repetitions, budget), mirroring the knobs of Table 1.
 //! Everything has CLI-overridable defaults, so configs are optional.
 
+use crate::backbone::{BackboneError, BackboneParams};
 use crate::json::Json;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -41,6 +42,25 @@ pub struct BackboneCell {
     pub m: usize,
     pub alpha: f64,
     pub beta: f64,
+}
+
+impl BackboneCell {
+    /// Check this cell against the same rules the estimator builders
+    /// apply, so bad grids fail at config-load time rather than panicking
+    /// mid-sweep.
+    pub fn validate(&self) -> Result<(), BackboneError> {
+        self.to_params().validate()
+    }
+
+    /// Backbone params with this cell applied over the defaults.
+    pub fn to_params(&self) -> BackboneParams {
+        BackboneParams {
+            alpha: self.alpha,
+            beta: self.beta,
+            num_subproblems: self.m,
+            ..Default::default()
+        }
+    }
 }
 
 /// Experiment configuration (one block).
@@ -177,6 +197,9 @@ impl ExperimentConfig {
                 })
                 .collect::<Result<_>>()?;
         }
+        for (i, cell) in cfg.grid.iter().enumerate() {
+            cell.validate().with_context(|| format!("grid cell {i}"))?;
+        }
         Ok(cfg)
     }
 
@@ -246,5 +269,26 @@ mod tests {
         assert!(ExperimentConfig::from_json(r#"{"problem": "nope"}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"problem": "sr", "n": -3}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"n": 5}"#).is_err()); // missing problem
+    }
+
+    #[test]
+    fn rejects_invalid_grid_cells_at_load_time() {
+        let bad_beta = r#"{"problem": "sr",
+                           "grid": [{"m": 2, "alpha": 0.3, "beta": 0.0}]}"#;
+        let err = ExperimentConfig::from_json(bad_beta).unwrap_err();
+        assert!(err.downcast_ref::<BackboneError>().is_some(), "{err:#}");
+        let bad_m = r#"{"problem": "sr",
+                        "grid": [{"m": 0, "alpha": 0.3, "beta": 0.5}]}"#;
+        assert!(ExperimentConfig::from_json(bad_m).is_err());
+    }
+
+    #[test]
+    fn cell_to_params_carries_the_cell_over_defaults() {
+        let cell = BackboneCell { m: 7, alpha: 0.3, beta: 0.9 };
+        let params = cell.to_params();
+        assert_eq!(params.num_subproblems, 7);
+        assert_eq!(params.alpha, 0.3);
+        assert_eq!(params.beta, 0.9);
+        assert!(cell.validate().is_ok());
     }
 }

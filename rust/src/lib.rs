@@ -8,6 +8,43 @@
 //! net, CART, optimal shallow decision trees, k-means, clique-partitioning
 //! clustering, synthetic data generators, and evaluation metrics).
 //!
+//! ## Quickstart — the unified estimator API
+//!
+//! Every learner is built through the [`Backbone`] facade's typed
+//! builders, shares one [`backbone::BackboneParams`], and implements the
+//! [`Fit`]/[`Predict`] trait pair. Invalid hyperparameters are typed
+//! [`BackboneError`]s at `build()` time — never panics:
+//!
+//! ```no_run
+//! use backbone_learn::Backbone;
+//! use backbone_learn::data::sparse_regression::{SparseRegressionConfig, generate};
+//! use backbone_learn::rng::Rng;
+//!
+//! let mut rng = Rng::seed_from_u64(7);
+//! let data = generate(
+//!     &SparseRegressionConfig { n: 200, p: 1000, k: 5, ..Default::default() },
+//!     &mut rng,
+//! );
+//! let mut bb = Backbone::sparse_regression()
+//!     .alpha(0.5)            // screen: keep top 50% of features
+//!     .beta(0.5)             // each subproblem sees 50% of the universe
+//!     .num_subproblems(5)    // M = 5 in the first iteration
+//!     .max_nonzeros(10)      // cardinality bound of the final model
+//!     .build()?;
+//! let model = bb.fit(&data.x, &data.y)?;
+//! let y_pred = model.predict(&data.x);
+//! # Ok::<(), backbone_learn::BackboneError>(())
+//! ```
+//!
+//! The same shape works for the other three learners
+//! (`Backbone::sparse_logistic()`, `Backbone::decision_tree()`,
+//! `Backbone::clustering()`); see [`backbone::estimator`]. The fit loop
+//! itself is a [`FitPipeline`] whose subproblem stage is an explicit,
+//! order-independent batch behind an [`ExecutionPolicy`] — sequential
+//! today, thread-ready without an API break.
+//!
+//! ## Architecture
+//!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack:
 //!
 //! - **L3 (this crate)** — the backbone orchestration (Algorithm 1 of the
@@ -20,22 +57,10 @@
 //!   L2, verified against pure-jnp oracles by pytest.
 //!
 //! At runtime, [`runtime::Engine`] loads the HLO artifacts through the PJRT
-//! CPU client (`xla` crate) and serves them to the backbone hot path; every
-//! PJRT-backed routine has a bit-compatible pure-Rust fallback.
-//!
-//! ## Quickstart
-//!
-//! ```no_run
-//! use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
-//! use backbone_learn::data::sparse_regression::{SparseRegressionConfig, generate};
-//! use backbone_learn::rng::Rng;
-//!
-//! let mut rng = Rng::seed_from_u64(7);
-//! let data = generate(&SparseRegressionConfig { n: 200, p: 1000, k: 5, ..Default::default() }, &mut rng);
-//! let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, 10);
-//! let model = bb.fit(&data.x, &data.y).unwrap();
-//! let y_pred = model.predict(&data.x);
-//! ```
+//! CPU client (`xla` crate, behind the `pjrt` feature) and serves them to
+//! the backbone hot path; every PJRT-backed routine has a bit-compatible
+//! pure-Rust fallback, so builds without the feature lose only the AOT
+//! fast path.
 
 pub mod backbone;
 pub mod bench_support;
@@ -50,3 +75,5 @@ pub mod rng;
 pub mod runtime;
 pub mod solvers;
 pub mod util;
+
+pub use backbone::{Backbone, BackboneError, ExecutionPolicy, Fit, FitPipeline, Predict};

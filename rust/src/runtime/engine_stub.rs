@@ -1,0 +1,95 @@
+//! API-identical stand-in for the PJRT engine, compiled when the `pjrt`
+//! feature (and with it the `xla` crate) is disabled.
+//!
+//! [`Engine::load`] always errors, so [`super::Backend::pjrt_from_dir`]
+//! fails cleanly and callers fall back to [`super::Backend::Native`] — the
+//! bit-compatible pure-Rust implementations. The hot-path entry points
+//! exist only so `Backend` compiles unchanged; they are unreachable
+//! because no `Engine` value can be constructed.
+
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::solvers::kmeans::{KMeansConfig, KMeansModel};
+use anyhow::{bail, Result};
+
+/// One shape-specialized artifact from `manifest.json` (mirror of the
+/// real engine's type so `Engine::entries()` keeps its signature).
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub kind: String,
+    pub file: String,
+    pub n: usize,
+    /// Feature count (screen/iht) — 0 for lloyd entries.
+    pub p: usize,
+    /// Sparsity k (iht) / cluster count (lloyd) — 0 elsewhere.
+    pub k: usize,
+    /// Dimension d (lloyd only).
+    pub d: usize,
+    /// IHT iterations (iht only).
+    pub iters: usize,
+}
+
+/// Stub engine: carries no state and cannot be constructed.
+#[derive(Debug)]
+pub struct Engine {
+    entries: Vec<ManifestEntry>,
+}
+
+impl Engine {
+    /// Always errors: this build has no PJRT support.
+    pub fn load(_dir: &str) -> Result<Engine> {
+        bail!(
+            "built without the `pjrt` feature — AOT artifacts unavailable, \
+             using the native backend"
+        )
+    }
+
+    /// All manifest entries (empty; unreachable without `load`).
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+
+    /// Table of entries for `backbone-learn artifacts`.
+    pub fn describe(&self) -> String {
+        "0 artifacts (built without the `pjrt` feature)\n".to_string()
+    }
+
+    /// Whether a Lloyd artifact exists for this exact shape (never).
+    pub fn has_lloyd(&self, _n: usize, _d: usize, _k: usize) -> bool {
+        false
+    }
+
+    /// No artifact ever matches: callers fall back to native.
+    pub fn screen_utilities(&self, _x: &Matrix, _y: &[f64]) -> Result<Option<Vec<f64>>> {
+        Ok(None)
+    }
+
+    /// No artifact ever matches: callers fall back to native.
+    pub fn iht_support(
+        &self,
+        _x: &Matrix,
+        _y: &[f64],
+        _k: usize,
+    ) -> Result<Option<Vec<usize>>> {
+        Ok(None)
+    }
+
+    /// No artifact ever matches: callers fall back to native.
+    pub fn lloyd_step(
+        &self,
+        _points: &Matrix,
+        _centroids: &Matrix,
+    ) -> Result<Option<(Matrix, Vec<usize>, f64)>> {
+        Ok(None)
+    }
+
+    /// No artifact ever matches: callers fall back to native.
+    pub fn kmeans_via_lloyd(
+        &self,
+        _x: &Matrix,
+        _cfg: &KMeansConfig,
+        _rng: &mut Rng,
+    ) -> Result<Option<KMeansModel>> {
+        Ok(None)
+    }
+}

@@ -19,6 +19,14 @@
 //! Every consumer has a pure-Rust fallback ([`Backend`] decides), so the
 //! system works without artifacts — just without the AOT fast path.
 
+// The real engine needs the `xla` crate (PJRT bindings); builds without
+// the `pjrt` feature get an API-identical stub whose `Engine::load`
+// always errors, so every consumer transparently falls back to the
+// pure-Rust implementations.
+#[cfg(feature = "pjrt")]
+mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
 mod engine;
 
 pub use engine::{Engine, ManifestEntry};

@@ -2,9 +2,7 @@
 //! the paper's qualitative claims asserted end to end (phase-1 speedup
 //! structure, exact-phase optimality, heuristic-vs-backbone ordering).
 
-use backbone_learn::backbone::clustering::BackboneClustering;
-use backbone_learn::backbone::decision_tree::BackboneDecisionTree;
-use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
+use backbone_learn::backbone::Backbone;
 use backbone_learn::data::blobs;
 use backbone_learn::data::classification;
 use backbone_learn::data::sparse_regression;
@@ -34,7 +32,13 @@ fn sparse_regression_backbone_beats_lasso_on_support_recovery() {
     let lasso_rec = support_recovery(&lasso.support(), &data.support_true);
 
     // Backbone.
-    let mut bb = BackboneSparseRegression::new(0.5, 0.5, 5, 5);
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(5)
+        .max_nonzeros(5)
+        .build()
+        .unwrap();
     let model = bb.fit(&data.x, &data.y).unwrap().clone();
     let bb_rec = support_recovery(&model.support, &data.support_true);
 
@@ -75,9 +79,15 @@ fn decision_tree_backbone_competitive_with_cart_on_test_set() {
     );
     let cart_auc = auc(&split.y_test, &cart.predict_proba(&split.x_test));
 
-    let mut bb = BackboneDecisionTree::new(0.5, 0.5, 5, 2);
-    bb.bins = 3; // finer thresholds: CART picks optimal cut points, the
-                 // exact tree only sees the quantile grid
+    let mut bb = Backbone::decision_tree()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(5)
+        .depth(2)
+        .bins(3) // finer thresholds: CART picks optimal cut points, the
+        //          exact tree only sees the quantile grid
+        .build()
+        .unwrap();
     bb.fit(&split.x_train, &split.y_train).unwrap();
     let bb_auc = auc(&split.y_test, &bb.predict_proba(&split.x_test));
 
@@ -110,7 +120,12 @@ fn clustering_backbone_at_least_as_good_as_kmeans_silhouette() {
     );
     let km_sil = silhouette_score(&data.x, &km.labels);
 
-    let mut bb = BackboneClustering::new(1.0, 3, target_k);
+    let mut bb = Backbone::clustering()
+        .beta(1.0)
+        .num_subproblems(3)
+        .n_clusters(target_k)
+        .build()
+        .unwrap();
     let model = bb.fit_with_budget(&data.x, &Budget::seconds(60.0)).unwrap().clone();
     let bb_sil = silhouette_score(&data.x, &model.labels);
 
@@ -126,7 +141,13 @@ fn backbone_phase_timings_are_recorded_and_positive() {
         &sparse_regression::SparseRegressionConfig { n: 80, p: 200, k: 3, rho: 0.1, snr: 5.0 },
         &mut Rng::seed_from_u64(9),
     );
-    let mut bb = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(3)
+        .max_nonzeros(3)
+        .build()
+        .unwrap();
     bb.fit(&data.x, &data.y).unwrap();
     let d = bb.last_diagnostics.as_ref().unwrap();
     assert!(d.phase1_secs >= 0.0);
@@ -145,7 +166,13 @@ fn budget_propagates_to_exact_phase() {
         &sparse_regression::SparseRegressionConfig { n: 100, p: 300, k: 5, rho: 0.4, snr: 2.0 },
         &mut Rng::seed_from_u64(10),
     );
-    let mut bb = BackboneSparseRegression::new(0.5, 0.5, 3, 5);
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(3)
+        .max_nonzeros(5)
+        .build()
+        .unwrap();
     let model = bb.fit_with_budget(&data.x, &data.y, &Budget::seconds(0.0)).unwrap();
     assert!(matches!(model.status, SolveStatus::TimedOut | SolveStatus::Optimal));
     assert!(model.support.len() <= 5);

@@ -1,0 +1,367 @@
+//! Integration tests of the unified estimator API.
+//!
+//! Covers the acceptance surface of the API redesign:
+//! - **golden-path parity** — all four learners fitted through the
+//!   `Backbone::<problem>()` builders produce *identical* backbones and
+//!   models to the deprecated positional constructors;
+//! - **typed validation** — invalid hyperparameters and malformed data
+//!   return `BackboneError` from `build()`/`fit()` instead of panicking;
+//! - **budget exhaustion** — a zero budget short-circuits the subproblem
+//!   batch and is surfaced in `BackboneDiagnostics::budget_exhausted`;
+//! - **diagnostics JSON** — `BackboneDiagnostics::to_json()` round-trips
+//!   through the crate's `json` module (the `cli fit --out` payload).
+
+use backbone_learn::backbone::clustering::BackboneClustering;
+use backbone_learn::backbone::decision_tree::BackboneDecisionTree;
+use backbone_learn::backbone::sparse_logistic::BackboneSparseLogistic;
+use backbone_learn::backbone::sparse_regression::{BackboneSparseRegression, SupervisedData};
+use backbone_learn::backbone::{Backbone, BackboneError, ExecutionPolicy, Fit, Predict};
+use backbone_learn::data::{blobs, classification, sparse_regression};
+use backbone_learn::json::Json;
+use backbone_learn::linalg::Matrix;
+use backbone_learn::rng::Rng;
+use backbone_learn::util::Budget;
+
+fn sr_data(seed: u64) -> sparse_regression::SparseRegressionData {
+    sparse_regression::generate(
+        &sparse_regression::SparseRegressionConfig { n: 80, p: 120, k: 3, rho: 0.1, snr: 5.0 },
+        &mut Rng::seed_from_u64(seed),
+    )
+}
+
+fn cls_data(seed: u64) -> classification::ClassificationData {
+    classification::generate(
+        &classification::ClassificationConfig {
+            n: 150,
+            p: 25,
+            k: 3,
+            n_redundant: 0,
+            n_clusters: 2,
+            class_sep: 2.0,
+            flip_y: 0.02,
+        },
+        &mut Rng::seed_from_u64(seed),
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Golden-path parity: builders vs deprecated constructors
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sparse_regression_builder_matches_deprecated_constructor() {
+    let data = sr_data(1);
+    let mut built = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(3)
+        .max_nonzeros(3)
+        .seed(9)
+        .build()
+        .unwrap();
+    #[allow(deprecated)]
+    let mut legacy = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
+    legacy.params.seed = 9;
+
+    let m1 = built.fit(&data.x, &data.y).unwrap().clone();
+    let m2 = legacy.fit(&data.x, &data.y).unwrap().clone();
+    assert_eq!(m1.support, m2.support);
+    assert_eq!(m1.beta, m2.beta);
+    assert_eq!(m1.intercept, m2.intercept);
+    let d1 = built.last_diagnostics.as_ref().unwrap();
+    let d2 = legacy.last_diagnostics.as_ref().unwrap();
+    assert_eq!(d1.screened_universe, d2.screened_universe);
+    assert_eq!(d1.backbone_size, d2.backbone_size);
+    assert_eq!(d1.iterations.len(), d2.iterations.len());
+}
+
+#[test]
+fn sparse_logistic_builder_matches_deprecated_constructor() {
+    let data = cls_data(2);
+    let mut built = Backbone::sparse_logistic()
+        .alpha(0.6)
+        .beta(0.5)
+        .num_subproblems(3)
+        .max_nonzeros(2)
+        .seed(5)
+        .build()
+        .unwrap();
+    #[allow(deprecated)]
+    let mut legacy = BackboneSparseLogistic::new(0.6, 0.5, 3, 2);
+    legacy.params.seed = 5;
+
+    let m1 = built.fit(&data.x, &data.y).unwrap().clone();
+    let m2 = legacy.fit(&data.x, &data.y).unwrap().clone();
+    assert_eq!(m1.support, m2.support);
+    assert_eq!(m1.beta, m2.beta);
+    assert_eq!(
+        built.last_diagnostics.as_ref().unwrap().backbone_size,
+        legacy.last_diagnostics.as_ref().unwrap().backbone_size
+    );
+}
+
+#[test]
+fn decision_tree_builder_matches_deprecated_constructor() {
+    let data = cls_data(3);
+    let mut built = Backbone::decision_tree()
+        .alpha(0.6)
+        .beta(0.5)
+        .num_subproblems(3)
+        .depth(2)
+        .seed(7)
+        .build()
+        .unwrap();
+    #[allow(deprecated)]
+    let mut legacy = BackboneDecisionTree::new(0.6, 0.5, 3, 2);
+    legacy.params.seed = 7;
+
+    let m1 = built.fit(&data.x, &data.y).unwrap().clone();
+    let m2 = legacy.fit(&data.x, &data.y).unwrap().clone();
+    assert_eq!(m1.backbone_features, m2.backbone_features);
+    assert_eq!(m1.errors, m2.errors);
+    assert_eq!(m1.predict(&data.x), m2.predict(&data.x));
+}
+
+#[test]
+fn clustering_builder_matches_deprecated_constructor() {
+    let data = blobs::generate(
+        &blobs::BlobsConfig {
+            n: 14,
+            p: 2,
+            true_clusters: 3,
+            cluster_std: 0.4,
+            center_box: 8.0,
+            min_center_dist: 5.0,
+        },
+        &mut Rng::seed_from_u64(4),
+    );
+    let mut built = Backbone::clustering()
+        .beta(1.0)
+        .num_subproblems(3)
+        .n_clusters(3)
+        .seed(11)
+        .build()
+        .unwrap();
+    // The deprecated constructor's ordering trap: (beta, M, n_clusters).
+    #[allow(deprecated)]
+    let mut legacy = BackboneClustering::new(1.0, 3, 3);
+    legacy.params.seed = 11;
+
+    let budget = Budget::seconds(120.0);
+    let m1 = built.fit_with_budget(&data.x, &budget).unwrap().clone();
+    let m2 = legacy.fit_with_budget(&data.x, &Budget::seconds(120.0)).unwrap().clone();
+    assert_eq!(m1.labels, m2.labels);
+    assert_eq!(
+        built.last_diagnostics.as_ref().unwrap().backbone_size,
+        legacy.last_diagnostics.as_ref().unwrap().backbone_size
+    );
+}
+
+// ---------------------------------------------------------------------------
+// The Fit/Predict trait pair drives all four learners uniformly
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fit_predict_traits_cover_all_four_learners() {
+    fn fit_supervised<E>(est: &mut E, data: &SupervisedData) -> usize
+    where
+        E: Fit<Data = SupervisedData> + Predict<Output = Vec<f64>>,
+    {
+        est.try_fit(data, &Budget::unlimited()).unwrap();
+        let preds = est.try_predict(&data.x).unwrap();
+        assert_eq!(preds.len(), data.x.rows());
+        est.diagnostics().unwrap().backbone_size
+    }
+
+    let reg = sr_data(5);
+    let sup = SupervisedData { x: reg.x.clone(), y: reg.y.clone() };
+    let mut sr = Backbone::sparse_regression().max_nonzeros(3).build().unwrap();
+    assert!(fit_supervised(&mut sr, &sup) > 0);
+
+    let cls = cls_data(6);
+    let sup = SupervisedData { x: cls.x.clone(), y: cls.y.clone() };
+    let mut lg = Backbone::sparse_logistic().max_nonzeros(2).build().unwrap();
+    assert!(fit_supervised(&mut lg, &sup) > 0);
+    let mut dt = Backbone::decision_tree().depth(2).build().unwrap();
+    assert!(fit_supervised(&mut dt, &sup) > 0);
+
+    let pts = blobs::generate(
+        &blobs::BlobsConfig {
+            n: 12,
+            p: 2,
+            true_clusters: 2,
+            cluster_std: 0.4,
+            center_box: 8.0,
+            min_center_dist: 5.0,
+        },
+        &mut Rng::seed_from_u64(7),
+    );
+    let mut cl = Backbone::clustering().n_clusters(2).build().unwrap();
+    cl.try_fit(&pts.x, &Budget::seconds(60.0)).unwrap();
+    let labels = cl.try_predict(&pts.x).unwrap();
+    assert_eq!(labels.len(), 12);
+    assert!(cl.diagnostics().unwrap().backbone_size > 0);
+}
+
+// ---------------------------------------------------------------------------
+// Typed validation (no panics reachable from public inputs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn invalid_hyperparameters_return_typed_errors_from_build() {
+    assert!(matches!(
+        Backbone::sparse_regression().beta(0.0).build(),
+        Err(BackboneError::InvalidBeta { .. })
+    ));
+    assert!(matches!(
+        Backbone::sparse_regression().alpha(1.5).build(),
+        Err(BackboneError::InvalidAlpha { .. })
+    ));
+    assert!(matches!(
+        Backbone::sparse_logistic().num_subproblems(0).build(),
+        Err(BackboneError::ZeroSubproblems)
+    ));
+    assert!(matches!(
+        Backbone::decision_tree().depth(0).build(),
+        Err(BackboneError::InvalidHyperparameter { field: "depth", .. })
+    ));
+    assert!(matches!(
+        Backbone::clustering().build(),
+        Err(BackboneError::InvalidHyperparameter { field: "n_clusters", .. })
+    ));
+}
+
+#[test]
+fn deprecated_constructors_defer_validation_to_fit() {
+    let data = sr_data(8);
+    #[allow(deprecated)]
+    let mut bad = BackboneSparseRegression::new(0.0, 0.5, 5, 3); // alpha = 0
+    let err = bad.fit(&data.x, &data.y).unwrap_err();
+    assert_eq!(err, BackboneError::InvalidAlpha { value: 0.0 });
+
+    #[allow(deprecated)]
+    let mut bad = BackboneClustering::new(2.0, 3, 2); // beta > 1
+    let err = bad.fit(&Matrix::zeros(6, 2)).unwrap_err();
+    assert_eq!(err, BackboneError::InvalidBeta { value: 2.0 });
+}
+
+#[test]
+fn malformed_data_returns_typed_errors_from_fit() {
+    let mut sr = Backbone::sparse_regression().build().unwrap();
+    assert_eq!(
+        sr.fit(&Matrix::zeros(4, 3), &[1.0, 2.0]).unwrap_err(),
+        BackboneError::DimensionMismatch { x_rows: 4, y_len: 2 }
+    );
+    assert!(matches!(
+        sr.fit(&Matrix::zeros(3, 0), &[1.0, 2.0, 3.0]).unwrap_err(),
+        BackboneError::EmptyData { .. }
+    ));
+    // Zero rows (y empty too, so dims agree) must error, not panic.
+    assert!(matches!(
+        sr.fit(&Matrix::zeros(0, 3), &[]).unwrap_err(),
+        BackboneError::EmptyData { .. }
+    ));
+
+    let mut lg = Backbone::sparse_logistic().build().unwrap();
+    let x = Matrix::zeros(3, 2);
+    assert_eq!(
+        lg.fit(&x, &[0.0, 1.0, 0.5]).unwrap_err(),
+        BackboneError::NonBinaryLabels { index: 2, value: 0.5 }
+    );
+
+    // The decision tree is also a binary classifier: same label contract.
+    let mut dt = Backbone::decision_tree().build().unwrap();
+    assert_eq!(
+        dt.fit(&x, &[0.0, 1.0, 2.0]).unwrap_err(),
+        BackboneError::NonBinaryLabels { index: 2, value: 2.0 }
+    );
+    assert!(matches!(
+        dt.fit(&Matrix::zeros(0, 2), &[]).unwrap_err(),
+        BackboneError::EmptyData { .. }
+    ));
+
+    let mut cl = Backbone::clustering().n_clusters(2).build().unwrap();
+    assert!(matches!(
+        cl.fit(&Matrix::zeros(1, 2)).unwrap_err(),
+        BackboneError::EmptyData { .. }
+    ));
+}
+
+#[test]
+fn try_predict_reports_not_fitted_and_shape_mismatch() {
+    let sr = Backbone::sparse_regression().build().unwrap();
+    assert_eq!(sr.try_predict(&Matrix::zeros(2, 2)).unwrap_err(), BackboneError::NotFitted);
+
+    let data = sr_data(9);
+    let mut sr = Backbone::sparse_regression().max_nonzeros(3).build().unwrap();
+    sr.fit(&data.x, &data.y).unwrap();
+    // Wrong feature count.
+    let err = sr.try_predict(&Matrix::zeros(5, 7)).unwrap_err();
+    assert_eq!(err, BackboneError::ShapeMismatch { expected: 120, got: 7 });
+}
+
+// ---------------------------------------------------------------------------
+// Budget exhaustion + execution policy
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zero_budget_short_circuits_and_reports_exhaustion() {
+    let data = sr_data(10);
+    let mut bb = Backbone::sparse_regression().max_nonzeros(3).build().unwrap();
+    let model = bb.fit_with_budget(&data.x, &data.y, &Budget::seconds(0.0)).unwrap().clone();
+    let d = bb.last_diagnostics.as_ref().unwrap();
+    assert!(d.budget_exhausted, "exhaustion not surfaced: {d:?}");
+    assert!(!d.converged);
+    assert!(!d.iterations.is_empty());
+    // A (degenerate) model is still returned.
+    assert!(model.support.len() <= 3);
+    assert!(model.objective.is_finite());
+}
+
+#[test]
+fn parallel_policy_reproduces_sequential_fit() {
+    let data = sr_data(11);
+    let run = |policy: ExecutionPolicy| {
+        let mut bb = Backbone::sparse_regression()
+            .max_nonzeros(3)
+            .execution(policy)
+            .seed(3)
+            .build()
+            .unwrap();
+        bb.fit(&data.x, &data.y).unwrap().clone()
+    };
+    let seq = run(ExecutionPolicy::Sequential);
+    let par = run(ExecutionPolicy::Parallel);
+    assert_eq!(seq.support, par.support);
+    assert_eq!(seq.beta, par.beta);
+}
+
+// ---------------------------------------------------------------------------
+// Diagnostics JSON (the `cli fit --out` payload)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn diagnostics_to_json_is_machine_readable() {
+    let data = sr_data(12);
+    let mut bb = Backbone::sparse_regression().max_nonzeros(3).build().unwrap();
+    bb.fit(&data.x, &data.y).unwrap();
+    let d = bb.last_diagnostics.as_ref().unwrap();
+
+    let parsed = Json::parse(&d.to_json().to_string_pretty()).unwrap();
+    assert_eq!(
+        parsed.get("screened_universe").and_then(Json::as_usize),
+        Some(d.screened_universe)
+    );
+    assert_eq!(parsed.get("backbone_size").and_then(Json::as_usize), Some(d.backbone_size));
+    assert_eq!(parsed.get("converged").and_then(Json::as_bool), Some(d.converged));
+    assert_eq!(
+        parsed.get("budget_exhausted").and_then(Json::as_bool),
+        Some(d.budget_exhausted)
+    );
+    let iters = parsed.get("iterations").unwrap().as_array().unwrap();
+    assert_eq!(iters.len(), d.iterations.len());
+    for (js, it) in iters.iter().zip(&d.iterations) {
+        assert_eq!(js.get("iteration").and_then(Json::as_usize), Some(it.iteration));
+        assert_eq!(js.get("backbone_size").and_then(Json::as_usize), Some(it.backbone_size));
+    }
+}

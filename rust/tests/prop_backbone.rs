@@ -3,8 +3,8 @@
 //! and hyperparameters.
 
 use backbone_learn::backbone::{
-    run_backbone, subproblems::construct_subproblems, BackboneLearner, BackboneParams,
-    SubproblemStrategy,
+    run_backbone, subproblems::construct_subproblems, Backbone, BackboneError,
+    BackboneLearner, BackboneParams, ExecutionPolicy, SubproblemStrategy,
 };
 use backbone_learn::prop::{property, Gen};
 use backbone_learn::rng::Rng;
@@ -69,6 +69,13 @@ fn random_params(g: &mut Gen) -> BackboneParams {
         } else {
             SubproblemStrategy::UtilityWeighted
         },
+        // Both policies must satisfy every coordinator invariant (the
+        // batch contract guarantees identical results).
+        execution: if g.bool_with(0.5) {
+            ExecutionPolicy::Sequential
+        } else {
+            ExecutionPolicy::Parallel
+        },
         seed: g.usize_in(0..1_000_000) as u64,
     }
 }
@@ -124,6 +131,7 @@ fn prop_subproblem_counts_follow_m_over_2t() {
             max_iterations: g.usize_in(1..5),
             strategy: SubproblemStrategy::UniformCoverage,
             seed: 7,
+            ..Default::default()
         };
         let mut learner = OracleLearner {
             n_entities: n,
@@ -200,7 +208,6 @@ fn prop_construct_subproblems_invariants() {
 
 #[test]
 fn prop_sparse_regression_model_consistency() {
-    use backbone_learn::backbone::sparse_regression::BackboneSparseRegression;
     use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
 
     property("sparse-regression model invariants", 15, |g| {
@@ -217,13 +224,14 @@ fn prop_sparse_regression_model_consistency() {
             },
             g.rng(),
         );
-        let mut bb = BackboneSparseRegression::new(
-            g.f64_in(0.2..1.0),
-            g.f64_in(0.2..1.0),
-            g.usize_in(1..6),
-            k,
-        );
-        bb.params.seed = g.usize_in(0..1000) as u64;
+        let mut bb = Backbone::sparse_regression()
+            .alpha(g.f64_in(0.2..1.0))
+            .beta(g.f64_in(0.2..1.0))
+            .num_subproblems(g.usize_in(1..6))
+            .max_nonzeros(k)
+            .seed(g.usize_in(0..1000) as u64)
+            .build()
+            .unwrap();
         let model = bb.fit(&data.x, &data.y).unwrap().clone();
         // Support ≤ k, beta zero off-support.
         assert!(model.support.len() <= k);
@@ -243,7 +251,6 @@ fn prop_sparse_regression_model_consistency() {
 
 #[test]
 fn prop_clustering_labels_valid_and_pairs_respected() {
-    use backbone_learn::backbone::clustering::BackboneClustering;
     use backbone_learn::data::blobs::{generate, BlobsConfig};
 
     property("clustering label invariants", 8, |g| {
@@ -260,8 +267,13 @@ fn prop_clustering_labels_valid_and_pairs_respected() {
             },
             g.rng(),
         );
-        let mut bb = BackboneClustering::new(g.f64_in(0.6..1.0), g.usize_in(1..4), k);
-        bb.params.seed = g.usize_in(0..1000) as u64;
+        let mut bb = Backbone::clustering()
+            .beta(g.f64_in(0.6..1.0))
+            .num_subproblems(g.usize_in(1..4))
+            .n_clusters(k)
+            .seed(g.usize_in(0..1000) as u64)
+            .build()
+            .unwrap();
         let model = bb.fit_with_budget(&data.x, &Budget::seconds(30.0)).unwrap().clone();
         assert_eq!(model.labels.len(), n);
         let kk = model.labels.iter().max().unwrap() + 1;
@@ -275,5 +287,51 @@ fn prop_clustering_labels_valid_and_pairs_respected() {
             assert!(clusters <= k, "{clusters} clusters with k={k}");
         }
         assert!(model.objective.is_finite());
+    });
+}
+
+#[test]
+fn prop_invalid_hyperparameters_error_instead_of_panicking() {
+    property("invalid hyperparameters → typed BackboneError", 120, |g| {
+        let which = g.usize_in(0..6);
+        let err = match which {
+            // α > 1, α ≤ 0, β = 0 / β > 1, M = 0, k = 0.
+            0 => Backbone::sparse_regression()
+                .alpha(1.0 + g.f64_in(0.001..10.0))
+                .build()
+                .map(|_| ())
+                .unwrap_err(),
+            1 => Backbone::sparse_regression()
+                .alpha(-g.f64_in(0.0..5.0))
+                .build()
+                .map(|_| ())
+                .unwrap_err(),
+            2 => Backbone::sparse_logistic().beta(0.0).build().map(|_| ()).unwrap_err(),
+            3 => Backbone::decision_tree()
+                .beta(1.0 + g.f64_in(0.001..10.0))
+                .build()
+                .map(|_| ())
+                .unwrap_err(),
+            4 => Backbone::clustering()
+                .n_clusters(2)
+                .num_subproblems(0)
+                .build()
+                .map(|_| ())
+                .unwrap_err(),
+            _ => Backbone::sparse_regression()
+                .max_nonzeros(0)
+                .build()
+                .map(|_| ())
+                .unwrap_err(),
+        };
+        match which {
+            0 | 1 => assert!(matches!(err, BackboneError::InvalidAlpha { .. }), "{err}"),
+            2 | 3 => assert!(matches!(err, BackboneError::InvalidBeta { .. }), "{err}"),
+            4 => assert!(matches!(err, BackboneError::ZeroSubproblems), "{err}"),
+            _ => assert!(
+                matches!(err, BackboneError::InvalidHyperparameter { .. }),
+                "{err}"
+            ),
+        }
     });
 }

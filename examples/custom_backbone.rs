@@ -86,10 +86,26 @@ struct SparseLogisticBackbone {
     iht_iters: usize,
 }
 
+/// Per-task scratch of `fit_subproblem` — the workspace contract:
+/// configuration lives on the (shared, `&self`) learner; every mutable
+/// buffer lives here. The pipeline `Default`-constructs one workspace per
+/// worker thread under `ExecutionPolicy::Parallel` (one total for
+/// `Sequential`), so buffers are reused across subproblems and the
+/// learner itself never needs `&mut`. Learners with no scratch can use
+/// `type Workspace = ();`.
+#[derive(Default)]
+struct IhtScratch {
+    xs: Matrix,
+    beta: Vec<f64>,
+    grad: Vec<f64>,
+    idx: Vec<usize>,
+}
+
 impl BackboneLearner for SparseLogisticBackbone {
     type Data = backbone_learn::backbone::sparse_regression::SupervisedData;
     type Indicator = usize;
     type Model = SparseLogitModel;
+    type Workspace = IhtScratch;
 
     fn num_entities(&self, data: &Self::Data) -> usize {
         data.x.cols()
@@ -101,36 +117,45 @@ impl BackboneLearner for SparseLogisticBackbone {
     }
 
     fn fit_subproblem(
-        &mut self,
+        &self,
         data: &Self::Data,
         entities: &[usize],
         _rng: &mut Rng,
+        ws: &mut IhtScratch,
     ) -> Result<Vec<usize>> {
-        // Logistic IHT on the subproblem columns.
-        let xs = data.x.select_columns(entities);
-        let (n, p) = (xs.rows(), xs.cols());
-        let mut beta = vec![0.0; p];
+        // Logistic IHT on the subproblem columns. All scratch lives in
+        // `ws`, so results are a pure function of (data, entities) and the
+        // batch can run on any thread count with bit-identical output.
+        data.x.select_columns_into(entities, &mut ws.xs);
+        let (n, p) = (ws.xs.rows(), ws.xs.cols());
+        ws.beta.clear();
+        ws.beta.resize(p, 0.0);
         let lr = 4.0 / n as f64;
         for _ in 0..self.iht_iters {
-            let mut grad = vec![0.0; p];
+            ws.grad.clear();
+            ws.grad.resize(p, 0.0);
             for i in 0..n {
-                let z = backbone_learn::linalg::dot(xs.row(i), &beta);
+                let z = backbone_learn::linalg::dot(ws.xs.row(i), &ws.beta);
                 let e = sigmoid(z) - data.y[i];
-                for (g, &v) in grad.iter_mut().zip(xs.row(i)) {
+                for (g, &v) in ws.grad.iter_mut().zip(ws.xs.row(i)) {
                     *g += e * v;
                 }
             }
-            for (b, g) in beta.iter_mut().zip(&grad) {
+            for (b, g) in ws.beta.iter_mut().zip(&ws.grad) {
                 *b -= lr * g;
             }
             // Project to the k-sparse ball.
-            let mut idx: Vec<usize> = (0..p).collect();
-            idx.sort_by(|&a, &b| beta[b].abs().partial_cmp(&beta[a].abs()).unwrap());
-            for &j in idx.iter().skip(self.k) {
+            ws.idx.clear();
+            ws.idx.extend(0..p);
+            let beta = &mut ws.beta;
+            ws.idx
+                .sort_by(|&a, &b| beta[b].abs().partial_cmp(&beta[a].abs()).unwrap());
+            for &j in ws.idx.iter().skip(self.k) {
                 beta[j] = 0.0;
             }
         }
-        Ok(beta
+        Ok(ws
+            .beta
             .iter()
             .enumerate()
             .filter(|(_, &b)| b != 0.0)
@@ -216,7 +241,11 @@ fn main() -> Result<()> {
         b_max: 12,
         max_iterations: 3,
         strategy: SubproblemStrategy::UniformCoverage,
-        execution: ExecutionPolicy::Sequential,
+        // The workspace split makes the custom learner `&self` in the
+        // batch, so the subproblems run on all cores — bit-identical to
+        // `ExecutionPolicy::Sequential`.
+        execution: ExecutionPolicy::Parallel,
+        threads: 0, // 0 = all available cores
         seed: 1,
     };
     // FitPipeline validates the params (typed BackboneError, no panics)
@@ -225,7 +254,10 @@ fn main() -> Result<()> {
     let fit = pipeline.run(&mut learner, &sd, &Budget::seconds(60.0))?;
 
     let d = &fit.diagnostics;
-    println!("screened universe {} → backbone {:?}", d.screened_universe, fit.backbone);
+    println!(
+        "screened universe {} → backbone {:?} ({} worker threads)",
+        d.screened_universe, fit.backbone, d.threads_used
+    );
     let model = &fit.model;
     let a = auc(&data.y, &model.predict_proba(&data.x));
     let rec = support_recovery(&model.support, &data.informative);

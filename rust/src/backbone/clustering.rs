@@ -30,7 +30,7 @@ use crate::linalg::Matrix;
 use crate::rng::Rng;
 use crate::runtime::Backend;
 use crate::solvers::clique::{clique_solve, labels_objective, CliqueConfig};
-use crate::solvers::kmeans::{kmeans_fit, KMeansConfig};
+use crate::solvers::kmeans::{kmeans_fit, KMeansConfig, KMeansWorkspace};
 use crate::solvers::SolveStatus;
 use crate::util::Budget;
 use anyhow::Result;
@@ -157,6 +157,9 @@ impl BackboneLearner for Inner {
     type Data = Matrix;
     type Indicator = (usize, usize);
     type Model = ClusteringModel;
+    /// Lloyd-iteration scratch (labels, distances, centroid accumulators,
+    /// point-subset buffer), one set per scheduler worker.
+    type Workspace = KMeansWorkspace;
 
     fn num_entities(&self, data: &Matrix) -> usize {
         data.rows()
@@ -167,18 +170,22 @@ impl BackboneLearner for Inner {
     }
 
     fn fit_subproblem(
-        &mut self,
+        &self,
         data: &Matrix,
         entities: &[usize],
         rng: &mut Rng,
+        ws: &mut KMeansWorkspace,
     ) -> Result<Vec<(usize, usize)>> {
-        let xs = data.select_rows(entities);
+        let mut xs = std::mem::take(&mut ws.xs);
+        data.select_rows_into(entities, &mut xs);
         let k = self.n_clusters.min(entities.len());
         let model = self.backend.kmeans(
             &xs,
             &KMeansConfig { k, n_init: self.n_init, ..Default::default() },
             rng,
+            ws,
         );
+        ws.xs = xs; // hand the point-subset buffer back for the next fit
         // Co-clustered pairs in *global* point indices.
         let mut pairs = Vec::new();
         for a in 0..entities.len() {
@@ -292,15 +299,16 @@ mod tests {
     #[test]
     fn subproblem_pairs_respect_entities() {
         let data = blobs(12, 2, 5);
-        let mut inner = Inner {
+        let inner = Inner {
             n_clusters: 2,
             min_cluster_size: 1,
             n_init: 3,
             backend: Backend::default(),
         };
         let mut rng = Rng::seed_from_u64(1);
+        let mut ws = KMeansWorkspace::default();
         let entities = vec![0, 3, 5, 7, 9];
-        let pairs = inner.fit_subproblem(&data.x, &entities, &mut rng).unwrap();
+        let pairs = inner.fit_subproblem(&data.x, &entities, &mut rng, &mut ws).unwrap();
         assert!(!pairs.is_empty());
         for (i, j) in pairs {
             assert!(i < j);

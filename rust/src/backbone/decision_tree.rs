@@ -27,7 +27,7 @@ use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
 use crate::data::binarize;
 use crate::linalg::Matrix;
 use crate::rng::Rng;
-use crate::solvers::cart::{cart_fit, CartConfig};
+use crate::solvers::cart::{cart_fit_with, CartConfig, CartWorkspace};
 use crate::solvers::exact_tree::{exact_tree_solve, BinNode, ExactTreeConfig};
 use crate::solvers::SolveStatus;
 use crate::util::Budget;
@@ -225,6 +225,9 @@ impl BackboneLearner for Inner {
     type Data = SupervisedData;
     type Indicator = usize;
     type Model = BackboneTreeModel;
+    /// CART split-search scratch (the per-feature sort buffer), one set
+    /// per scheduler worker.
+    type Workspace = CartWorkspace;
 
     fn num_entities(&self, data: &SupervisedData) -> usize {
         data.x.cols()
@@ -235,10 +238,11 @@ impl BackboneLearner for Inner {
     }
 
     fn fit_subproblem(
-        &mut self,
+        &self,
         data: &SupervisedData,
         entities: &[usize],
         _rng: &mut Rng,
+        ws: &mut CartWorkspace,
     ) -> Result<Vec<usize>> {
         let cfg = CartConfig {
             max_depth: self.depth,
@@ -246,7 +250,7 @@ impl BackboneLearner for Inner {
             min_samples_leaf: self.min_leaf,
             feature_subset: Some(entities.to_vec()),
         };
-        let model = cart_fit(&data.x, &data.y, &cfg);
+        let model = cart_fit_with(&data.x, &data.y, &cfg, ws);
         let mut relevant: Vec<usize> = model
             .features_used()
             .into_iter()

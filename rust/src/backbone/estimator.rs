@@ -157,6 +157,17 @@ impl<C> Builder<C> {
         self
     }
 
+    /// Run each iteration's subproblem batch on `n` OS worker threads
+    /// (0 = all available cores; 1 = the inline sequential schedule, no
+    /// thread is spawned). Implies [`ExecutionPolicy::Parallel`]; results
+    /// are bit-identical to the sequential schedule for any thread
+    /// count, so this only changes wall-clock time.
+    pub fn threads(mut self, n: usize) -> Self {
+        self.params.execution = ExecutionPolicy::Parallel;
+        self.params.threads = n;
+        self
+    }
+
     /// RNG seed (subproblem sampling, heuristic restarts).
     pub fn seed(mut self, seed: u64) -> Self {
         self.params.seed = seed;
@@ -739,6 +750,17 @@ mod tests {
     fn b_max_override_survives_build() {
         let est = Backbone::sparse_regression().max_nonzeros(5).b_max(7).build().unwrap();
         assert_eq!(est.params.b_max, 7);
+    }
+
+    #[test]
+    fn threads_implies_parallel_execution() {
+        let est = Backbone::sparse_regression().threads(3).build().unwrap();
+        assert_eq!(est.params.execution, ExecutionPolicy::Parallel);
+        assert_eq!(est.params.threads, 3);
+        // 0 = all available cores, resolved at batch time.
+        let est = Backbone::clustering().n_clusters(2).threads(0).build().unwrap();
+        assert_eq!(est.params.execution, ExecutionPolicy::Parallel);
+        assert_eq!(est.params.threads, 0);
     }
 
     #[test]

@@ -43,10 +43,13 @@
 //! model ← fit(D, B)
 //! ```
 //!
-//! The subproblem stage is an explicit batch
-//! (`Vec<Subproblem> → Vec<Vec<Indicator>>`) behind an
-//! [`ExecutionPolicy`], so the hot loop is ready for threaded execution
-//! without another API break (see [`pipeline`]).
+//! The subproblem stage is an explicit batch behind an
+//! [`ExecutionPolicy`]: [`ExecutionPolicy::Sequential`] drains it on the
+//! calling thread, [`ExecutionPolicy::Parallel`] on a scoped-thread
+//! scheduler ([`BackboneParams::threads`] workers) with bit-identical
+//! results — subproblem solving is `&self` plus a per-worker
+//! [`BackboneLearner::Workspace`], so learners are shared across workers
+//! and scratch state is not (see [`pipeline`]).
 //!
 //! Two entity/indicator regimes mirror the package's `BackboneSupervised`
 //! and `BackboneUnsupervised` classes: in supervised problems entities and
@@ -78,7 +81,9 @@ pub use estimator::{
     Backbone, ClusteringBuilder, DecisionTreeBuilder, Fit, Predict, SparseLogisticBuilder,
     SparseRegressionBuilder,
 };
-pub use pipeline::{solve_subproblem_batch, ExecutionPolicy, FitPipeline};
+pub use pipeline::{
+    resolved_threads, solve_subproblem_batch, BatchOutcome, ExecutionPolicy, FitPipeline,
+};
 pub use subproblems::{Subproblem, SubproblemStrategy};
 
 /// Hyperparameters of Algorithm 1 (the paper's `(M, β, α, B_max)`).
@@ -98,12 +103,37 @@ pub struct BackboneParams {
     pub strategy: SubproblemStrategy,
     /// How each iteration's subproblem batch is executed.
     pub execution: ExecutionPolicy,
+    /// Worker threads of the [`ExecutionPolicy::Parallel`] scheduler
+    /// (0 = all available cores). Ignored by `Sequential`.
+    pub threads: usize,
     /// RNG seed (subproblem sampling, heuristic restarts).
     pub seed: u64,
 }
 
+/// Test amplifier: `BACKBONE_THREADS=N` flips the *default* execution
+/// policy to the threaded scheduler with N workers (0 = all cores), so
+/// the entire test suite can be run through `Parallel` — CI does exactly
+/// that. Results are bit-identical by contract, so this can never change
+/// what a test observes, only how it is scheduled. Read once per process;
+/// an unparseable value panics loudly rather than silently testing the
+/// sequential schedule.
+fn default_execution() -> (ExecutionPolicy, usize) {
+    static AMPLIFIER: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    let amplifier = AMPLIFIER.get_or_init(|| match std::env::var("BACKBONE_THREADS") {
+        Ok(v) => Some(v.trim().parse::<usize>().unwrap_or_else(|_| {
+            panic!("BACKBONE_THREADS must be an integer worker count (0 = all cores), got `{v}`")
+        })),
+        Err(_) => None,
+    });
+    match *amplifier {
+        Some(n) => (ExecutionPolicy::Parallel, n),
+        None => (ExecutionPolicy::Sequential, 1),
+    }
+}
+
 impl Default for BackboneParams {
     fn default() -> Self {
+        let (execution, threads) = default_execution();
         Self {
             num_subproblems: 5,
             beta: 0.5,
@@ -111,7 +141,8 @@ impl Default for BackboneParams {
             b_max: 0,
             max_iterations: 4,
             strategy: SubproblemStrategy::UniformCoverage,
-            execution: ExecutionPolicy::Sequential,
+            execution,
+            threads,
             seed: 0,
         }
     }
@@ -139,6 +170,26 @@ impl BackboneParams {
 }
 
 /// Application-specific pieces of Algorithm 1.
+///
+/// ## The workspace contract
+///
+/// [`BackboneLearner::fit_subproblem`] takes `&self` — the learner is
+/// **shared state**, borrowed simultaneously by every worker of the
+/// parallel batch scheduler — plus an exclusive `&mut Self::Workspace`,
+/// the **per-task scratch**. The scheduler `Default`-constructs one
+/// workspace per worker thread (the sequential path constructs one and
+/// reuses it across the whole batch), so:
+///
+/// - put configuration and anything read-only in `self`;
+/// - put mutable scratch (residual/gradient buffers, sort scratch,
+///   centroid accumulators, …) in the workspace — it is reused across
+///   subproblems, which is also an allocation-reuse win sequentially;
+/// - results must be a pure function of `(data, entities, rng)`: workspace
+///   contents must never leak into results, or `Parallel` and
+///   `Sequential` stop being bit-identical (the determinism tests catch
+///   this for the shipped learners).
+///
+/// Learners with no scratch state can use `type Workspace = ();`.
 pub trait BackboneLearner {
     /// Training data (e.g. `(X, y)` for supervised, `X` for clustering).
     type Data: ?Sized;
@@ -146,6 +197,9 @@ pub trait BackboneLearner {
     type Indicator: Clone + Ord + Debug;
     /// Final fitted model.
     type Model;
+    /// Per-task scratch state of `fit_subproblem` (see the workspace
+    /// contract above). `Default`-constructed once per worker thread.
+    type Workspace: Default + Send;
 
     /// Number of sampling entities (features / points).
     fn num_entities(&self, data: &Self::Data) -> usize;
@@ -155,11 +209,13 @@ pub trait BackboneLearner {
 
     /// Solve one subproblem restricted to `entities`; return the relevant
     /// indicators (`extract_relevant ∘ fit_subproblem` in paper terms).
+    /// `&self` + per-task `ws` so batches can run on worker threads.
     fn fit_subproblem(
-        &mut self,
+        &self,
         data: &Self::Data,
         entities: &[usize],
         rng: &mut Rng,
+        ws: &mut Self::Workspace,
     ) -> Result<Vec<Self::Indicator>>;
 
     /// Entities an indicator spans (identity for features; both endpoints
@@ -184,6 +240,9 @@ pub struct IterationStats {
     pub subproblem_size: usize,
     pub backbone_size: usize,
     pub elapsed_secs: f64,
+    /// Wall-clock seconds of each subproblem solve, in batch order
+    /// (0.0 for subproblems skipped on budget exhaustion).
+    pub subproblem_secs: Vec<f64>,
 }
 
 impl IterationStats {
@@ -196,6 +255,10 @@ impl IterationStats {
         m.insert("subproblem_size".into(), Json::Number(self.subproblem_size as f64));
         m.insert("backbone_size".into(), Json::Number(self.backbone_size as f64));
         m.insert("elapsed_secs".into(), Json::Number(self.elapsed_secs));
+        m.insert(
+            "subproblem_secs".into(),
+            Json::Array(self.subproblem_secs.iter().map(|&s| Json::Number(s)).collect()),
+        );
         Json::Object(m)
     }
 }
@@ -220,6 +283,12 @@ pub struct BackboneDiagnostics {
     /// True if the wall-clock budget expired during phase 1 and the
     /// subproblem batch (or the loop) was short-circuited.
     pub budget_exhausted: bool,
+    /// Subproblems skipped (never solved) because the budget expired
+    /// mid-batch; their votes are missing from the backbone tally.
+    pub subproblems_skipped: usize,
+    /// Worker threads the subproblem scheduler actually used (1 for the
+    /// sequential policy; the resolved count for `Parallel`).
+    pub threads_used: usize,
 }
 
 impl BackboneDiagnostics {
@@ -241,6 +310,11 @@ impl BackboneDiagnostics {
         m.insert("converged".into(), Json::Bool(self.converged));
         m.insert("truncated".into(), Json::Bool(self.truncated));
         m.insert("budget_exhausted".into(), Json::Bool(self.budget_exhausted));
+        m.insert(
+            "subproblems_skipped".into(),
+            Json::Number(self.subproblems_skipped as f64),
+        );
+        m.insert("threads_used".into(), Json::Number(self.threads_used as f64));
         Json::Object(m)
     }
 }
@@ -256,34 +330,52 @@ pub struct BackboneFit<L: BackboneLearner> {
 /// Execute Algorithm 1 — convenience wrapper over [`FitPipeline`].
 ///
 /// Validates `params` (returning a typed [`BackboneError`] instead of
-/// panicking) and runs the pipeline once.
+/// panicking) and runs the pipeline once. The `Sync`/`Send` bounds are
+/// what lets the batch stage hand `&L` and the indicators to the scoped
+/// worker threads of [`ExecutionPolicy::Parallel`]; every plain-data
+/// learner satisfies them automatically.
 pub fn run_backbone<L: BackboneLearner>(
     learner: &mut L,
     data: &L::Data,
     params: &BackboneParams,
     budget: &Budget,
-) -> Result<BackboneFit<L>, BackboneError> {
+) -> Result<BackboneFit<L>, BackboneError>
+where
+    L: Sync,
+    L::Data: Sync,
+    L::Indicator: Send,
+{
     FitPipeline::new(params.clone())?.run(learner, data, budget)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     /// A synthetic learner over abstract "entities": entity j is relevant
     /// iff j < n_relevant; subproblem fits report the relevant entities
-    /// they saw. Lets us test the Algorithm-1 loop in isolation.
+    /// they saw. Lets us test the Algorithm-1 loop in isolation. The call
+    /// counter is atomic because `fit_subproblem` takes `&self` and may be
+    /// driven from worker threads.
     struct ToyLearner {
         n_entities: usize,
         n_relevant: usize,
-        subproblem_calls: usize,
+        subproblem_calls: AtomicUsize,
         reduced_called_with: Vec<usize>,
+    }
+
+    impl ToyLearner {
+        fn calls(&self) -> usize {
+            self.subproblem_calls.load(Ordering::Relaxed)
+        }
     }
 
     impl BackboneLearner for ToyLearner {
         type Data = ();
         type Indicator = usize;
         type Model = Vec<usize>;
+        type Workspace = ();
 
         fn num_entities(&self, _data: &()) -> usize {
             self.n_entities
@@ -297,12 +389,13 @@ mod tests {
         }
 
         fn fit_subproblem(
-            &mut self,
+            &self,
             _data: &(),
             entities: &[usize],
             _rng: &mut Rng,
+            _ws: &mut (),
         ) -> Result<Vec<usize>> {
-            self.subproblem_calls += 1;
+            self.subproblem_calls.fetch_add(1, Ordering::Relaxed);
             Ok(entities.iter().copied().filter(|&j| j < self.n_relevant).collect())
         }
 
@@ -325,7 +418,7 @@ mod tests {
         ToyLearner {
             n_entities: n,
             n_relevant: rel,
-            subproblem_calls: 0,
+            subproblem_calls: AtomicUsize::new(0),
             reduced_called_with: vec![],
         }
     }
@@ -437,7 +530,7 @@ mod tests {
             ..Default::default()
         };
         let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
-        assert_eq!(learner.subproblem_calls, 1);
+        assert_eq!(learner.calls(), 1);
         assert_eq!(fit.backbone, vec![0, 1, 2, 3]);
     }
 
@@ -448,7 +541,7 @@ mod tests {
         let err =
             run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap_err();
         assert_eq!(err, BackboneError::InvalidAlpha { value: 0.0 });
-        assert_eq!(learner.subproblem_calls, 0);
+        assert_eq!(learner.calls(), 0);
     }
 
     #[test]
@@ -458,6 +551,7 @@ mod tests {
             type Data = ();
             type Indicator = usize;
             type Model = ();
+            type Workspace = ();
             fn num_entities(&self, _d: &()) -> usize {
                 10
             }
@@ -465,10 +559,11 @@ mod tests {
                 vec![1.0; 3] // wrong length
             }
             fn fit_subproblem(
-                &mut self,
+                &self,
                 _d: &(),
                 _e: &[usize],
                 _r: &mut Rng,
+                _ws: &mut (),
             ) -> Result<Vec<usize>> {
                 Ok(vec![])
             }

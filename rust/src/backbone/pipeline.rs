@@ -1,4 +1,4 @@
-//! The fit pipeline — Algorithm 1 of the paper as explicit, parallel-ready
+//! The fit pipeline — Algorithm 1 of the paper as explicit, parallel
 //! stages.
 //!
 //! [`FitPipeline`] owns a validated [`BackboneParams`] and drives the loop:
@@ -6,10 +6,11 @@
 //! 1. **Screen** — rank entities by utility, keep the top `⌈α·p⌉`.
 //! 2. **Subproblem batch** — construct `⌈M/2ᵗ⌉` subproblems and solve the
 //!    whole batch through [`solve_subproblem_batch`]
-//!    (`Vec<Subproblem> → Vec<Vec<Indicator>>`). Each subproblem gets an
+//!    (`Vec<Subproblem> → BatchOutcome`). Each subproblem gets an
 //!    independent RNG stream forked *before* execution, so batch results
-//!    do not depend on execution order — the property a threaded
-//!    [`ExecutionPolicy`] needs.
+//!    do not depend on execution order — which is what lets
+//!    [`ExecutionPolicy::Parallel`] run the batch on a scoped-thread
+//!    scheduler with bit-identical results.
 //! 3. **Tally + terminate** — vote-count indicators, shrink the universe,
 //!    stop on `|B| ≤ B_max`, stall, the iteration cap, or budget
 //!    exhaustion (recorded in
@@ -17,8 +18,11 @@
 //! 4. **Reduced fit** — exact solve on the final backbone.
 //!
 //! The batch stage checks the wall-clock budget **before every
-//! subproblem**, so an expired budget short-circuits mid-iteration with
-//! the partial vote tally instead of finishing the whole batch first.
+//! subproblem** — sequentially on the calling thread, or on each worker
+//! before it claims the next task — so an expired budget short-circuits
+//! mid-iteration with the partial vote tally instead of finishing the
+//! whole batch first. Skipped subproblems are counted in
+//! [`BackboneDiagnostics::subproblems_skipped`].
 
 use super::error::BackboneError;
 use super::subproblems::{construct_subproblems, Subproblem};
@@ -28,58 +32,210 @@ use super::{
 use crate::rng::Rng;
 use crate::util::{Budget, Stopwatch};
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// How the subproblem batch of one iteration is executed.
 ///
-/// The batch contract (order-independent results, one pre-forked RNG
-/// stream per subproblem) is policy-agnostic, so switching policies can
-/// never change *what* is computed — only how it is scheduled.
+/// The batch contract — results written to their original batch slots,
+/// one RNG stream forked per subproblem *before* execution, learners
+/// borrowed `&self` with all mutable scratch in a per-worker
+/// [`BackboneLearner::Workspace`] — makes results a pure function of the
+/// batch, independent of scheduling. Switching policies (or thread
+/// counts) can therefore never change *what* is computed, only how fast;
+/// the determinism suite (`tests/parallel_determinism.rs`) enforces
+/// bit-identical fits across policies for all four shipped learners.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 #[non_exhaustive]
 pub enum ExecutionPolicy {
-    /// Solve subproblems one after another on the calling thread.
+    /// Solve subproblems one after another on the calling thread, reusing
+    /// one workspace across the batch.
     #[default]
     Sequential,
-    /// Reserved for threaded / engine-backed execution. The batch
-    /// contract already guarantees order-independence; until a threaded
-    /// scheduler lands this policy lowers to the sequential schedule, so
-    /// selecting it is forward-compatible and never changes results.
+    /// Solve the batch on [`BackboneParams::threads`] OS worker threads
+    /// (`std::thread::scope`; 0 = all available cores). Workers claim
+    /// subproblems from a shared queue, each with its own workspace and
+    /// the subproblem's pre-forked RNG stream, and write results back to
+    /// the subproblem's batch slot — bit-identical to `Sequential`. When
+    /// the resolved worker count is 1 the batch runs inline on the
+    /// calling thread (no spawn), i.e. `threads = 1` *is* the sequential
+    /// schedule.
     Parallel,
 }
 
-/// Execute one iteration's subproblem batch: `Vec<Subproblem>` in,
-/// `Vec<Vec<Indicator>>` out (one result list per *solved* subproblem).
+/// Resolve a requested worker count (0 = all available cores) to the
+/// number of OS threads the parallel scheduler will actually spawn.
+pub fn resolved_threads(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
+/// Outcome of one iteration's subproblem batch.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome<I> {
+    /// One slot per subproblem, in batch order; `None` = skipped because
+    /// the budget expired before the subproblem was claimed.
+    pub results: Vec<Option<Vec<I>>>,
+    /// Wall-clock seconds of each subproblem solve (0.0 for skipped).
+    pub wall_secs: Vec<f64>,
+    /// True if the budget expired mid-batch (⇔ at least one slot skipped).
+    pub exhausted: bool,
+    /// Worker threads used (1 for the sequential schedule).
+    pub threads_used: usize,
+}
+
+impl<I> BatchOutcome<I> {
+    /// Number of subproblems skipped on budget exhaustion.
+    pub fn skipped(&self) -> usize {
+        self.results.iter().filter(|r| r.is_none()).count()
+    }
+}
+
+/// Execute one iteration's subproblem batch: `Vec<Subproblem>` in, a
+/// slot-per-subproblem [`BatchOutcome`] out.
 ///
-/// Returns `(results, budget_exhausted)`. When the budget expires
-/// mid-batch the remaining subproblems are skipped and the partial
-/// results are returned with `budget_exhausted = true`.
+/// When the budget expires mid-batch the unclaimed subproblems are
+/// skipped (`None` slots) and the partial results are returned with
+/// `exhausted = true`. Solver errors abort the batch; when several
+/// workers fail concurrently, the error of the lowest batch slot is
+/// returned (matching what the sequential schedule would have hit first).
 pub fn solve_subproblem_batch<L: BackboneLearner>(
-    learner: &mut L,
+    learner: &L,
     data: &L::Data,
     batch: &[Subproblem],
     rng: &mut Rng,
     budget: &Budget,
     policy: ExecutionPolicy,
-) -> Result<(Vec<Vec<L::Indicator>>, bool), BackboneError> {
+    threads: usize,
+) -> Result<BatchOutcome<L::Indicator>, BackboneError>
+where
+    L: Sync,
+    L::Data: Sync,
+    L::Indicator: Send,
+{
     // Fork one independent stream per subproblem up front: results become
     // a pure function of (subproblem, stream), independent of the order —
     // or the thread — in which the batch is drained.
-    let mut streams: Vec<Rng> = batch.iter().map(|_| rng.fork()).collect();
-    let mut results = Vec::with_capacity(batch.len());
-    match policy {
-        ExecutionPolicy::Sequential | ExecutionPolicy::Parallel => {
-            for (subproblem, stream) in batch.iter().zip(streams.iter_mut()) {
-                if budget.expired() {
-                    return Ok((results, true));
-                }
-                let relevant = learner
-                    .fit_subproblem(data, subproblem, stream)
-                    .map_err(|e| BackboneError::Solver { message: format!("{e:#}") })?;
-                results.push(relevant);
-            }
+    let streams: Vec<Rng> = batch.iter().map(|_| rng.fork()).collect();
+    let mut results: Vec<Option<Vec<L::Indicator>>> =
+        (0..batch.len()).map(|_| None).collect();
+    let mut wall_secs = vec![0.0; batch.len()];
+    let mut exhausted = false;
+
+    let n_workers = match policy {
+        ExecutionPolicy::Sequential => 1,
+        ExecutionPolicy::Parallel => {
+            resolved_threads(threads).clamp(1, batch.len().max(1))
         }
-    }
-    Ok((results, false))
+    };
+    let threads_used = match n_workers {
+        // A single worker runs inline on the calling thread — this IS the
+        // sequential schedule, so `Parallel` with `threads = 1` spawns
+        // nothing and behaves exactly like `Sequential`.
+        0 | 1 => {
+            let mut ws = L::Workspace::default();
+            for (i, (subproblem, stream)) in batch.iter().zip(&streams).enumerate() {
+                if budget.expired() {
+                    exhausted = true;
+                    break;
+                }
+                let watch = Stopwatch::start();
+                let relevant = learner
+                    .fit_subproblem(data, subproblem, &mut stream.clone(), &mut ws)
+                    .map_err(|e| BackboneError::Solver { message: format!("{e:#}") })?;
+                wall_secs[i] = watch.elapsed_secs();
+                results[i] = Some(relevant);
+            }
+            1
+        }
+        n_workers => {
+            // Shared claim counter: `fetch_add` hands out batch slots in
+            // order, so each subproblem is claimed by exactly one worker.
+            let next = AtomicUsize::new(0);
+            // Lowest failing batch slot so far (usize::MAX = none). On
+            // error a worker stops; the others keep attempting only
+            // slots *below* this watermark and skip everything above it,
+            // so the batch winds down quickly without racing ahead. Any
+            // recorded failing slot is ≥ the globally minimal failing
+            // slot s (slots below s succeed by definition), so s itself
+            // is never skipped — the reported error deterministically
+            // matches what the sequential schedule would have hit first.
+            let min_error_slot = AtomicUsize::new(usize::MAX);
+            let first_error: Mutex<Option<(usize, BackboneError)>> = Mutex::new(None);
+
+            let mut worker_results = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..n_workers)
+                    .map(|_| {
+                        scope.spawn(|| {
+                            let mut ws = L::Workspace::default();
+                            let mut done: Vec<(usize, Vec<L::Indicator>, f64)> = Vec::new();
+                            let mut hit_budget = false;
+                            loop {
+                                let i = next.fetch_add(1, Ordering::Relaxed);
+                                if i >= batch.len() {
+                                    break;
+                                }
+                                if i > min_error_slot.load(Ordering::Relaxed) {
+                                    break; // a lower slot already failed
+                                }
+                                if budget.expired() {
+                                    hit_budget = true;
+                                    break;
+                                }
+                                // Clone the pre-forked stream: same initial
+                                // state the sequential path would use.
+                                let mut stream = streams[i].clone();
+                                let watch = Stopwatch::start();
+                                match learner.fit_subproblem(
+                                    data,
+                                    &batch[i],
+                                    &mut stream,
+                                    &mut ws,
+                                ) {
+                                    Ok(relevant) => {
+                                        done.push((i, relevant, watch.elapsed_secs()));
+                                    }
+                                    Err(e) => {
+                                        let err = BackboneError::Solver {
+                                            message: format!("{e:#}"),
+                                        };
+                                        min_error_slot.fetch_min(i, Ordering::Relaxed);
+                                        let mut slot = first_error.lock().unwrap();
+                                        if slot.as_ref().map_or(true, |(fi, _)| i < *fi) {
+                                            *slot = Some((i, err));
+                                        }
+                                        break;
+                                    }
+                                }
+                            }
+                            (done, hit_budget)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("subproblem worker panicked"))
+                    .collect::<Vec<_>>()
+            });
+            if let Some((_, err)) = first_error.into_inner().unwrap() {
+                return Err(err);
+            }
+            for (done, hit_budget) in worker_results.drain(..) {
+                exhausted |= hit_budget;
+                for (i, relevant, secs) in done {
+                    wall_secs[i] = secs;
+                    results[i] = Some(relevant);
+                }
+            }
+            n_workers
+        }
+    };
+    // Invariant: exhausted ⇔ some slot was skipped (defensive re-derive).
+    exhausted = exhausted || results.iter().any(Option::is_none);
+    Ok(BatchOutcome { results, wall_secs, exhausted, threads_used })
 }
 
 /// A validated, reusable runner for Algorithm 1.
@@ -101,13 +257,19 @@ impl FitPipeline {
         &self.params
     }
 
-    /// Run the two-phase backbone algorithm.
+    /// Run the two-phase backbone algorithm. The `Sync`/`Send` bounds let
+    /// the batch stage share `&L` across the parallel scheduler's workers.
     pub fn run<L: BackboneLearner>(
         &self,
         learner: &mut L,
         data: &L::Data,
         budget: &Budget,
-    ) -> Result<BackboneFit<L>, BackboneError> {
+    ) -> Result<BackboneFit<L>, BackboneError>
+    where
+        L: Sync,
+        L::Data: Sync,
+        L::Indicator: Send,
+    {
         let params = &self.params;
         let mut rng = Rng::seed_from_u64(params.seed);
         let phase1_watch = Stopwatch::start();
@@ -160,17 +322,22 @@ impl FitPipeline {
                 params.strategy,
                 &mut rng,
             );
-            let (batch_results, exhausted) = solve_subproblem_batch(
-                learner,
+            let outcome = solve_subproblem_batch(
+                &*learner,
                 data,
                 &batch,
                 &mut rng,
                 budget,
                 params.execution,
+                params.threads,
             )?;
+            let exhausted = outcome.exhausted;
+            diagnostics.subproblems_skipped += outcome.skipped();
+            diagnostics.threads_used = diagnostics.threads_used.max(outcome.threads_used);
+            let subproblem_secs = outcome.wall_secs;
 
             votes.clear();
-            for relevant in batch_results {
+            for relevant in outcome.results.into_iter().flatten() {
                 for ind in relevant {
                     *votes.entry(ind).or_insert(0) += 1;
                 }
@@ -190,6 +357,7 @@ impl FitPipeline {
                 subproblem_size: sub_size,
                 backbone_size: votes.len(),
                 elapsed_secs: iter_watch.elapsed_secs(),
+                subproblem_secs,
             });
 
             t += 1;
@@ -249,18 +417,30 @@ impl FitPipeline {
 mod tests {
     use super::*;
 
-    /// Learner that counts calls and honours a per-call sleep so budget
-    /// short-circuiting can be observed deterministically.
+    /// Learner that counts calls (atomically — `fit_subproblem` is `&self`
+    /// and may run on worker threads) and honours a per-call sleep so
+    /// budget short-circuiting can be observed deterministically.
     struct SlowLearner {
         n_entities: usize,
         sleep: std::time::Duration,
-        subproblem_calls: usize,
+        subproblem_calls: AtomicUsize,
+    }
+
+    impl SlowLearner {
+        fn new(n_entities: usize, sleep: std::time::Duration) -> Self {
+            Self { n_entities, sleep, subproblem_calls: AtomicUsize::new(0) }
+        }
+
+        fn calls(&self) -> usize {
+            self.subproblem_calls.load(Ordering::Relaxed)
+        }
     }
 
     impl BackboneLearner for SlowLearner {
         type Data = ();
         type Indicator = usize;
         type Model = usize;
+        type Workspace = ();
 
         fn num_entities(&self, _d: &()) -> usize {
             self.n_entities
@@ -271,12 +451,13 @@ mod tests {
         }
 
         fn fit_subproblem(
-            &mut self,
+            &self,
             _d: &(),
             entities: &[usize],
             _rng: &mut Rng,
+            _ws: &mut (),
         ) -> anyhow::Result<Vec<usize>> {
-            self.subproblem_calls += 1;
+            self.subproblem_calls.fetch_add(1, Ordering::Relaxed);
             std::thread::sleep(self.sleep);
             Ok(entities.to_vec())
         }
@@ -313,18 +494,15 @@ mod tests {
 
     #[test]
     fn expired_budget_short_circuits_batch_mid_iteration() {
-        let mut learner = SlowLearner {
-            n_entities: 20,
-            sleep: std::time::Duration::ZERO,
-            subproblem_calls: 0,
-        };
+        let mut learner = SlowLearner::new(20, std::time::Duration::ZERO);
         let params = BackboneParams { num_subproblems: 6, ..Default::default() };
         let pipeline = FitPipeline::new(params).unwrap();
         let fit = pipeline.run(&mut learner, &(), &Budget::seconds(0.0)).unwrap();
         // Budget was already expired: no subproblem may run, yet the
         // reduced fit still produced a (degenerate) model.
-        assert_eq!(learner.subproblem_calls, 0);
+        assert_eq!(learner.calls(), 0);
         assert!(fit.diagnostics.budget_exhausted);
+        assert_eq!(fit.diagnostics.subproblems_skipped, 6);
         assert!(!fit.diagnostics.converged);
         assert!(!fit.diagnostics.iterations.is_empty());
         assert_eq!(fit.backbone.len(), 0);
@@ -333,33 +511,28 @@ mod tests {
     #[test]
     fn partial_batch_results_are_kept_on_exhaustion() {
         // Sleep makes the budget expire after the first subproblem.
-        let mut learner = SlowLearner {
-            n_entities: 10,
-            sleep: std::time::Duration::from_millis(30),
-            subproblem_calls: 0,
-        };
+        let mut learner = SlowLearner::new(10, std::time::Duration::from_millis(30));
         let params =
             BackboneParams { num_subproblems: 8, beta: 0.5, ..Default::default() };
         let pipeline = FitPipeline::new(params).unwrap();
         let fit = pipeline.run(&mut learner, &(), &Budget::seconds(0.02)).unwrap();
         assert!(fit.diagnostics.budget_exhausted);
-        assert!(learner.subproblem_calls < 8, "batch was not short-circuited");
+        assert!(learner.calls() < 8, "batch was not short-circuited");
+        // The skipped remainder is reported, not silently lost.
+        assert_eq!(fit.diagnostics.subproblems_skipped, 8 - learner.calls());
         // The subproblems that did run still voted into the backbone.
         assert_eq!(fit.backbone.len(), fit.diagnostics.backbone_size);
     }
 
     #[test]
     fn parallel_policy_matches_sequential_results() {
-        let run = |policy: ExecutionPolicy| {
-            let mut learner = SlowLearner {
-                n_entities: 30,
-                sleep: std::time::Duration::ZERO,
-                subproblem_calls: 0,
-            };
+        let run = |policy: ExecutionPolicy, threads: usize| {
+            let mut learner = SlowLearner::new(30, std::time::Duration::ZERO);
             let params = BackboneParams {
                 num_subproblems: 4,
                 beta: 0.4,
                 execution: policy,
+                threads,
                 seed: 11,
                 ..Default::default()
             };
@@ -369,7 +542,14 @@ mod tests {
                 .unwrap()
                 .backbone
         };
-        assert_eq!(run(ExecutionPolicy::Sequential), run(ExecutionPolicy::Parallel));
+        let sequential = run(ExecutionPolicy::Sequential, 1);
+        for threads in [1, 2, 4, 0] {
+            assert_eq!(
+                sequential,
+                run(ExecutionPolicy::Parallel, threads),
+                "threads={threads}"
+            );
+        }
     }
 
     #[test]
@@ -379,35 +559,186 @@ mod tests {
         let mut rng_a = Rng::seed_from_u64(3);
         let mut rng_b = Rng::seed_from_u64(3);
         let batch: Vec<Subproblem> = vec![vec![0, 1], vec![2, 3], vec![4, 5]];
-        let mut l1 = SlowLearner {
-            n_entities: 6,
-            sleep: std::time::Duration::ZERO,
-            subproblem_calls: 0,
-        };
-        let mut l2 = SlowLearner {
-            n_entities: 6,
-            sleep: std::time::Duration::ZERO,
-            subproblem_calls: 0,
-        };
-        let (r1, e1) = solve_subproblem_batch(
-            &mut l1,
+        let l1 = SlowLearner::new(6, std::time::Duration::ZERO);
+        let l2 = SlowLearner::new(6, std::time::Duration::ZERO);
+        let seq = solve_subproblem_batch(
+            &l1,
             &(),
             &batch,
             &mut rng_a,
             &Budget::unlimited(),
             ExecutionPolicy::Sequential,
+            1,
         )
         .unwrap();
-        let (r2, e2) = solve_subproblem_batch(
-            &mut l2,
+        let par = solve_subproblem_batch(
+            &l2,
             &(),
             &batch,
             &mut rng_b,
             &Budget::unlimited(),
             ExecutionPolicy::Parallel,
+            3,
         )
         .unwrap();
-        assert_eq!(r1, r2);
-        assert!(!e1 && !e2);
+        assert_eq!(seq.results, par.results);
+        assert!(!seq.exhausted && !par.exhausted);
+        assert_eq!(seq.skipped(), 0);
+        assert_eq!(par.skipped(), 0);
+        assert_eq!(seq.threads_used, 1);
+        assert_eq!(par.threads_used, 3);
+    }
+
+    #[test]
+    fn parallel_batch_executes_on_multiple_os_threads() {
+        use std::collections::BTreeSet;
+        use std::sync::Mutex;
+
+        /// Learner that records the thread id of every subproblem solve.
+        struct ThreadSpy {
+            seen: Mutex<BTreeSet<std::thread::ThreadId>>,
+        }
+        impl BackboneLearner for ThreadSpy {
+            type Data = ();
+            type Indicator = usize;
+            type Model = ();
+            type Workspace = ();
+            fn num_entities(&self, _d: &()) -> usize {
+                8
+            }
+            fn utilities(&mut self, _d: &()) -> Vec<f64> {
+                vec![1.0; 8]
+            }
+            fn fit_subproblem(
+                &self,
+                _d: &(),
+                entities: &[usize],
+                _r: &mut Rng,
+                _ws: &mut (),
+            ) -> anyhow::Result<Vec<usize>> {
+                self.seen.lock().unwrap().insert(std::thread::current().id());
+                // Rendezvous: hold this task until a second worker thread
+                // has also entered (bounded, so a degenerate scheduler
+                // cannot deadlock the test). With 2 workers and a spinning
+                // first task, the second worker always claims the next
+                // task, so both thread ids are observed deterministically.
+                let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+                while self.seen.lock().unwrap().len() < 2
+                    && std::time::Instant::now() < deadline
+                {
+                    std::thread::yield_now();
+                }
+                Ok(entities.to_vec())
+            }
+            fn indicator_entities(&self, i: &usize) -> Vec<usize> {
+                vec![*i]
+            }
+            fn fit_reduced(&mut self, _d: &(), _b: &[usize], _bu: &Budget) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+
+        let spy = ThreadSpy { seen: Mutex::new(BTreeSet::new()) };
+        let batch: Vec<Subproblem> = (0..8).map(|i| vec![i]).collect();
+        let outcome = solve_subproblem_batch(
+            &spy,
+            &(),
+            &batch,
+            &mut Rng::seed_from_u64(1),
+            &Budget::unlimited(),
+            ExecutionPolicy::Parallel,
+            2,
+        )
+        .unwrap();
+        assert_eq!(outcome.skipped(), 0);
+        let seen = spy.seen.lock().unwrap();
+        assert_eq!(seen.len(), 2, "expected 2 worker threads, saw {}", seen.len());
+        assert!(!seen.contains(&std::thread::current().id()));
+    }
+
+    #[test]
+    fn parallel_solver_error_reports_lowest_batch_slot() {
+        /// Fails on subproblems whose first entity is odd.
+        struct Flaky;
+        impl BackboneLearner for Flaky {
+            type Data = ();
+            type Indicator = usize;
+            type Model = ();
+            type Workspace = ();
+            fn num_entities(&self, _d: &()) -> usize {
+                8
+            }
+            fn utilities(&mut self, _d: &()) -> Vec<f64> {
+                vec![1.0; 8]
+            }
+            fn fit_subproblem(
+                &self,
+                _d: &(),
+                entities: &[usize],
+                _r: &mut Rng,
+                _ws: &mut (),
+            ) -> anyhow::Result<Vec<usize>> {
+                if entities[0] % 2 == 1 {
+                    anyhow::bail!("subproblem {} failed", entities[0]);
+                }
+                Ok(entities.to_vec())
+            }
+            fn indicator_entities(&self, i: &usize) -> Vec<usize> {
+                vec![*i]
+            }
+            fn fit_reduced(&mut self, _d: &(), _b: &[usize], _bu: &Budget) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+
+        let batch: Vec<Subproblem> = (0..8).map(|i| vec![i]).collect();
+        for policy in [ExecutionPolicy::Sequential, ExecutionPolicy::Parallel] {
+            let err = solve_subproblem_batch(
+                &Flaky,
+                &(),
+                &batch,
+                &mut Rng::seed_from_u64(2),
+                &Budget::unlimited(),
+                policy,
+                4,
+            )
+            .unwrap_err();
+            match err {
+                BackboneError::Solver { message } => {
+                    // Slot 1 is the first failure in batch order; workers
+                    // racing ahead must not win the error report.
+                    assert!(
+                        message.contains("subproblem 1"),
+                        "{policy:?}: wrong error slot: {message}"
+                    );
+                }
+                other => panic!("unexpected error {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_zero_budget_skips_everything() {
+        let learner = SlowLearner::new(12, std::time::Duration::ZERO);
+        let batch: Vec<Subproblem> = (0..6).map(|i| vec![i]).collect();
+        let outcome = solve_subproblem_batch(
+            &learner,
+            &(),
+            &batch,
+            &mut Rng::seed_from_u64(4),
+            &Budget::seconds(0.0),
+            ExecutionPolicy::Parallel,
+            3,
+        )
+        .unwrap();
+        assert!(outcome.exhausted);
+        assert_eq!(outcome.skipped(), 6);
+        assert_eq!(learner.calls(), 0);
+    }
+
+    #[test]
+    fn resolved_threads_zero_means_available_parallelism() {
+        assert!(resolved_threads(0) >= 1);
+        assert_eq!(resolved_threads(3), 3);
     }
 }

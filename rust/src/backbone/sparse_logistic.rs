@@ -26,7 +26,9 @@ use super::error::BackboneError;
 use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
-use crate::solvers::logistic::{logistic_best_subset, logistic_l0_fit, LogisticModel};
+use crate::solvers::logistic::{
+    logistic_best_subset, logistic_l0_fit_with, LogisticModel, LogisticWorkspace,
+};
 use crate::util::Budget;
 use anyhow::Result;
 
@@ -148,6 +150,9 @@ impl BackboneLearner for Inner {
     type Data = SupervisedData;
     type Indicator = usize;
     type Model = LogisticModel;
+    /// Logistic-IHT scratch (gradient, iterate, projection index and
+    /// design-matrix buffers), one set per scheduler worker.
+    type Workspace = LogisticWorkspace;
 
     fn num_entities(&self, data: &SupervisedData) -> usize {
         data.x.cols()
@@ -159,14 +164,17 @@ impl BackboneLearner for Inner {
     }
 
     fn fit_subproblem(
-        &mut self,
+        &self,
         data: &SupervisedData,
         entities: &[usize],
         _rng: &mut Rng,
+        ws: &mut LogisticWorkspace,
     ) -> Result<Vec<usize>> {
-        let xs = data.x.select_columns(entities);
+        let mut xs = std::mem::take(&mut ws.xs);
+        data.x.select_columns_into(entities, &mut xs);
         let k = self.k.min(entities.len());
-        let m = logistic_l0_fit(&xs, &data.y, k, self.ridge, self.iht_iters);
+        let m = logistic_l0_fit_with(&xs, &data.y, k, self.ridge, self.iht_iters, ws);
+        ws.xs = xs; // hand the design-matrix buffer back for the next fit
         Ok(m.support.iter().map(|&local| entities[local]).collect())
     }
 

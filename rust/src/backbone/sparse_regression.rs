@@ -26,7 +26,7 @@ use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 use crate::runtime::Backend;
-use crate::solvers::cd::{l0_fit, L0Config};
+use crate::solvers::cd::{l0_fit, L0Config, L0Workspace};
 use crate::solvers::l0bnb::{l0bnb_solve, L0BnbConfig};
 use crate::solvers::SolveStatus;
 use crate::util::Budget;
@@ -198,6 +198,10 @@ impl BackboneLearner for Inner {
     type Data = SupervisedData;
     type Indicator = usize;
     type Model = SparseRegressionModel;
+    /// CD/IHT scratch (residual, gradient, iterate, design-matrix
+    /// buffers), hoisted out of the learner so subproblem fits are
+    /// `&self` and each scheduler worker reuses one allocation set.
+    type Workspace = L0Workspace;
 
     fn num_entities(&self, data: &SupervisedData) -> usize {
         data.x.cols()
@@ -208,18 +212,22 @@ impl BackboneLearner for Inner {
     }
 
     fn fit_subproblem(
-        &mut self,
+        &self,
         data: &SupervisedData,
         entities: &[usize],
         _rng: &mut Rng,
+        ws: &mut L0Workspace,
     ) -> Result<Vec<usize>> {
-        let xs = data.x.select_columns(entities);
+        let mut xs = std::mem::take(&mut ws.xs);
+        data.x.select_columns_into(entities, &mut xs);
         let k = self.cfg.subproblem_nonzeros.min(entities.len());
         let model = self.cfg.backend.l0_subproblem_fit(
             &xs,
             &data.y,
             &L0Config { k, lambda2: self.cfg.lambda2, ..Default::default() },
+            ws,
         );
+        ws.xs = xs; // hand the design-matrix buffer back for the next fit
         Ok(model.support.iter().map(|&local| entities[local]).collect())
     }
 

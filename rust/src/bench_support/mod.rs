@@ -210,14 +210,16 @@ pub fn run_sparse_regression_block(cfg: &ExperimentConfig) -> Result<Vec<TableRo
         // --- BbLearn grid ---
         for (ci, cell) in cfg.grid.iter().enumerate() {
             let watch = Stopwatch::start();
-            let mut learner = Backbone::sparse_regression()
+            let builder = Backbone::sparse_regression()
                 .alpha(cell.alpha)
                 .beta(cell.beta)
                 .num_subproblems(cell.m)
                 .max_nonzeros(cfg.k)
                 .backend(default_backend())
-                .seed(cfg.seed.wrapping_add(rep as u64).wrapping_mul(31 + ci as u64))
-                .build()?;
+                .seed(cfg.seed.wrapping_add(rep as u64).wrapping_mul(31 + ci as u64));
+            // cfg.threads is authoritative (overrides any BACKBONE_THREADS
+            // default): 1 = inline sequential schedule, 0 = all cores.
+            let mut learner = builder.threads(cfg.threads).build()?;
             let model = learner
                 .fit_with_budget(&data.x, &data.y, &Budget::seconds(cfg.budget_secs))?
                 .clone();
@@ -315,14 +317,16 @@ pub fn run_decision_tree_block(cfg: &ExperimentConfig) -> Result<Vec<TableRow>> 
         // --- BbLearn grid ---
         for (ci, cell) in cfg.grid.iter().enumerate() {
             let watch = Stopwatch::start();
-            let mut learner = Backbone::decision_tree()
+            let builder = Backbone::decision_tree()
                 .alpha(cell.alpha)
                 .beta(cell.beta)
                 .num_subproblems(cell.m)
                 .depth(depth)
                 .bins(bins)
-                .seed(cfg.seed.wrapping_add(rep as u64).wrapping_mul(17 + ci as u64))
-                .build()?;
+                .seed(cfg.seed.wrapping_add(rep as u64).wrapping_mul(17 + ci as u64));
+            // cfg.threads is authoritative (overrides any BACKBONE_THREADS
+            // default): 1 = inline sequential schedule, 0 = all cores.
+            let mut learner = builder.threads(cfg.threads).build()?;
             learner.fit_with_budget(
                 &split.x_train,
                 &split.y_train,
@@ -389,13 +393,15 @@ pub fn run_clustering_block(cfg: &ExperimentConfig) -> Result<Vec<TableRow>> {
         // --- BbLearn grid ---
         for (ci, cell) in cfg.grid.iter().enumerate() {
             let watch = Stopwatch::start();
-            let mut learner = Backbone::clustering()
+            let builder = Backbone::clustering()
                 .beta(cell.beta)
                 .num_subproblems(cell.m)
                 .n_clusters(cfg.k)
                 .backend(default_backend())
-                .seed(cfg.seed.wrapping_add(rep as u64).wrapping_mul(13 + ci as u64))
-                .build()?;
+                .seed(cfg.seed.wrapping_add(rep as u64).wrapping_mul(13 + ci as u64));
+            // cfg.threads is authoritative (overrides any BACKBONE_THREADS
+            // default): 1 = inline sequential schedule, 0 = all cores.
+            let mut learner = builder.threads(cfg.threads).build()?;
             learner.fit_with_budget(&data.x, &Budget::seconds(cfg.budget_secs))?;
             let t = watch.elapsed_secs();
             let sil = silhouette_score(&data.x, learner.labels());

@@ -23,6 +23,14 @@ pub fn run(args: &Args) -> Result<i32> {
     let alpha = args.get_fraction("alpha", 0.5)?;
     let beta = args.get_fraction("beta", 0.5)?;
     let m = args.get_usize("m", 5)?;
+    // Subproblem-batch workers: an explicit `--threads N` overrides any
+    // BACKBONE_THREADS default. 1 = the inline sequential schedule,
+    // 0 = all available cores, n = exactly n workers. Bit-identical
+    // results across values. Absent → the library default applies.
+    let threads: Option<usize> = match args.get("threads") {
+        Some(_) => Some(args.get_usize("threads", 1)?),
+        None => None,
+    };
     let budget = Budget::seconds(args.get_f64("budget", 60.0)?);
     let out = args.get("out");
     let mut rng = Rng::seed_from_u64(seed);
@@ -40,13 +48,17 @@ pub fn run(args: &Args) -> Result<i32> {
                 &sparse_regression::SparseRegressionConfig { n, p, k, rho: 0.1, snr: 5.0 },
                 &mut rng,
             );
-            let mut bb = Backbone::sparse_regression()
+            let builder = Backbone::sparse_regression()
                 .alpha(alpha)
                 .beta(beta)
                 .num_subproblems(m)
                 .max_nonzeros(k)
-                .seed(seed)
-                .build()?;
+                .seed(seed);
+            let builder = match threads {
+                None => builder,
+                Some(n) => builder.threads(n),
+            };
+            let mut bb = builder.build()?;
             let model = bb.fit_with_budget(&data.x, &data.y, &budget)?.clone();
             let r2 = r2_score(&data.y, &model.predict(&data.x));
             let rec = support_recovery(&model.support, &data.support_true);
@@ -78,13 +90,17 @@ pub fn run(args: &Args) -> Result<i32> {
                 &mut rng,
             );
             let depth = args.get_usize("depth", 2)?;
-            let mut bb = Backbone::decision_tree()
+            let builder = Backbone::decision_tree()
                 .alpha(alpha)
                 .beta(beta)
                 .num_subproblems(m)
                 .depth(depth)
-                .seed(seed)
-                .build()?;
+                .seed(seed);
+            let builder = match threads {
+                None => builder,
+                Some(n) => builder.threads(n),
+            };
+            let mut bb = builder.build()?;
             bb.fit_with_budget(&data.x, &data.y, &budget)?;
             let a = auc(&data.y, &bb.predict_proba(&data.x));
             print_diag(&bb.last_diagnostics);
@@ -113,12 +129,16 @@ pub fn run(args: &Args) -> Result<i32> {
                 },
                 &mut rng,
             );
-            let mut bb = Backbone::clustering()
+            let builder = Backbone::clustering()
                 .beta(beta)
                 .num_subproblems(m)
                 .n_clusters(k)
-                .seed(seed)
-                .build()?;
+                .seed(seed);
+            let builder = match threads {
+                None => builder,
+                Some(n) => builder.threads(n),
+            };
+            let mut bb = builder.build()?;
             let model = bb.fit_with_budget(&data.x, &budget)?.clone();
             print_diag(&bb.last_diagnostics);
             let sil = silhouette_score(&data.x, &model.labels);
@@ -136,6 +156,11 @@ pub fn run(args: &Args) -> Result<i32> {
         let mut doc = BTreeMap::new();
         doc.insert("problem".into(), Json::String(problem.name().into()));
         doc.insert("seed".into(), Json::Number(seed as f64));
+        // Requested worker count when --threads was given explicitly; the
+        // resolved count actually used is in diagnostics.threads_used.
+        if let Some(n) = threads {
+            doc.insert("threads".into(), Json::Number(n as f64));
+        }
         doc.insert("diagnostics".into(), diagnostics.to_json());
         doc.insert("metrics".into(), Json::Object(metrics));
         let text = Json::Object(doc).to_string_pretty();
@@ -160,11 +185,14 @@ fn print_diag(diag: &Option<BackboneDiagnostics>) {
         );
     }
     println!(
-        "backbone: {} (converged={}, truncated={}, budget_exhausted={}) phase1 {:.2}s phase2 {:.2}s",
+        "backbone: {} (converged={}, truncated={}, budget_exhausted={}, skipped={}) \
+         threads {} phase1 {:.2}s phase2 {:.2}s",
         d.backbone_size,
         d.converged,
         d.truncated,
         d.budget_exhausted,
+        d.subproblems_skipped,
+        d.threads_used,
         d.phase1_secs,
         d.phase2_secs
     );

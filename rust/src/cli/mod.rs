@@ -1,12 +1,18 @@
 //! Command-line launcher.
 //!
 //! ```text
-//! backbone-learn table1 [--block sr|dt|cl|all] [--full] [--config FILE] [--out FILE]
-//! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S] [--out FILE]
-//! backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
+//! backbone-learn table1 [--block sr|dt|cl|all] [--full] [--threads N] [--config FILE] [--out FILE]
+//! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S --threads N] [--out FILE]
+//! backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl] [--threads N]
 //! backbone-learn dump-config --problem sr|dt|cl [--full]
 //! backbone-learn artifacts [--dir artifacts]
 //! ```
+//!
+//! `--threads N` runs each backbone iteration's subproblem batch on N OS
+//! worker threads (0 = all available cores; 1 = the inline sequential
+//! schedule; omitted = library default, sequential unless
+//! `BACKBONE_THREADS` is set). Results are bit-identical across thread
+//! counts.
 //!
 //! (The vendored offline crate set has no `clap`; this is a small
 //! hand-rolled parser with the same ergonomics for our needs.)
@@ -24,15 +30,19 @@ const USAGE: &str = "\
 backbone-learn — BackboneLearn reproduction (Rust + JAX/Pallas AOT)
 
 USAGE:
-  backbone-learn table1 [--block sr|dt|cl|all] [--full] [--config FILE] [--out FILE]
+  backbone-learn table1 [--block sr|dt|cl|all] [--full] [--threads N]
+                        [--config FILE] [--out FILE]
   backbone-learn fit    --problem sr|dt|cl [--n N] [--p P] [--k K]
                         [--alpha A] [--beta B] [--m M] [--seed S] [--budget SECS]
-                        [--out FILE]   (write diagnostics + metrics as JSON)
+                        [--threads N] [--out FILE]   (diagnostics + metrics as JSON)
   backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
+                        [--threads N]
   backbone-learn dump-config --problem sr|dt|cl [--full]
   backbone-learn artifacts [--dir DIR]
 
 Run with quick (CI-scale) sizes by default; pass --full for Table-1 scale.
+--threads N solves each subproblem batch on N OS threads (0 = all cores,
+1 = inline sequential) with bit-identical results.
 ";
 
 /// CLI entry point (called from `main.rs`).

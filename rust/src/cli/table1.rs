@@ -30,6 +30,8 @@ pub fn run(args: &Args) -> Result<i32> {
         cfg.repetitions = args.get_usize("reps", cfg.repetitions)?;
         cfg.budget_secs = args.get_f64("budget", cfg.budget_secs)?;
         cfg.seed = args.get_u64("seed", cfg.seed)?;
+        // 0 = all available cores; 1 (default) = sequential schedule.
+        cfg.threads = args.get_usize("threads", cfg.threads)?;
         // Fail fast on bad grids (typed BackboneError) instead of
         // aborting mid-sweep after hours of compute.
         for (i, cell) in cfg.grid.iter().enumerate() {

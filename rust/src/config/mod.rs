@@ -80,6 +80,11 @@ pub struct ExperimentConfig {
     pub grid: Vec<BackboneCell>,
     /// Base RNG seed.
     pub seed: u64,
+    /// Worker threads of the BbLearn subproblem batches: 1 = sequential
+    /// schedule, 0 = all available cores, n = exactly n workers. Results
+    /// are bit-identical across values (the batch contract); this only
+    /// changes wall-clock time.
+    pub threads: usize,
 }
 
 impl ExperimentConfig {
@@ -100,6 +105,7 @@ impl ExperimentConfig {
                     BackboneCell { m: 10, alpha: 0.5, beta: 0.9 },
                 ],
                 seed: 0,
+                threads: 1,
             },
             Problem::DecisionTrees => Self {
                 problem,
@@ -115,6 +121,7 @@ impl ExperimentConfig {
                     BackboneCell { m: 10, alpha: 0.5, beta: 0.9 },
                 ],
                 seed: 0,
+                threads: 1,
             },
             Problem::Clustering => Self {
                 problem,
@@ -128,6 +135,7 @@ impl ExperimentConfig {
                     BackboneCell { m: 10, alpha: 1.0, beta: 1.0 },
                 ],
                 seed: 0,
+                threads: 1,
             },
         }
     }
@@ -181,6 +189,7 @@ impl ExperimentConfig {
         cfg.k = geti("k", cfg.k)?;
         cfg.repetitions = geti("repetitions", cfg.repetitions)?;
         cfg.seed = geti("seed", cfg.seed as usize)? as u64;
+        cfg.threads = geti("threads", cfg.threads)?;
         if let Some(v) = doc.get("budget_secs") {
             cfg.budget_secs = v.as_f64().context("`budget_secs` must be a number")?;
         }
@@ -213,6 +222,7 @@ impl ExperimentConfig {
         m.insert("repetitions".into(), Json::Number(self.repetitions as f64));
         m.insert("budget_secs".into(), Json::Number(self.budget_secs));
         m.insert("seed".into(), Json::Number(self.seed as f64));
+        m.insert("threads".into(), Json::Number(self.threads as f64));
         let grid: Vec<Json> = self
             .grid
             .iter()
@@ -262,6 +272,17 @@ mod tests {
         assert_eq!(cfg.p, 5000); // default preserved
         assert_eq!(cfg.budget_secs, 1.5);
         assert_eq!(cfg.grid, vec![BackboneCell { m: 2, alpha: 0.3, beta: 0.7 }]);
+    }
+
+    #[test]
+    fn threads_roundtrip_and_default_to_sequential() {
+        let cfg = ExperimentConfig::paper_defaults(Problem::SparseRegression);
+        assert_eq!(cfg.threads, 1, "default must be the sequential schedule");
+        let text = r#"{"problem": "sr", "threads": 4}"#;
+        let cfg = ExperimentConfig::from_json(text).unwrap();
+        assert_eq!(cfg.threads, 4);
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.threads, 4);
     }
 
     #[test]

@@ -40,8 +40,13 @@
 //! (`Backbone::sparse_logistic()`, `Backbone::decision_tree()`,
 //! `Backbone::clustering()`); see [`backbone::estimator`]. The fit loop
 //! itself is a [`FitPipeline`] whose subproblem stage is an explicit,
-//! order-independent batch behind an [`ExecutionPolicy`] — sequential
-//! today, thread-ready without an API break.
+//! order-independent batch behind an [`ExecutionPolicy`]:
+//! `.threads(n)` on any builder (or `--threads N` on the CLI) runs each
+//! iteration's batch on `n` OS worker threads (0 = all cores) with
+//! **bit-identical** results to the sequential schedule — subproblem
+//! solving is `&self` plus a per-worker
+//! [`backbone::BackboneLearner::Workspace`], so learners are shared
+//! across workers and mutable scratch is not.
 //!
 //! ## Architecture
 //!

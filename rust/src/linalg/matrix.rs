@@ -15,6 +15,14 @@ pub struct Matrix {
     data: Vec<f64>,
 }
 
+impl Default for Matrix {
+    /// Empty 0×0 matrix — lets solver workspaces hold reusable matrix
+    /// buffers while deriving/implementing `Default`.
+    fn default() -> Self {
+        Matrix::zeros(0, 0)
+    }
+}
+
 impl fmt::Debug for Matrix {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "Matrix({}x{})", self.rows, self.cols)?;
@@ -138,6 +146,23 @@ impl Matrix {
         out
     }
 
+    /// Column selection into a caller-owned matrix (reshaped to fit) — the
+    /// allocation-free variant the subproblem workspaces use so repeated
+    /// fits reuse one design-matrix buffer.
+    pub fn select_columns_into(&self, cols: &[usize], out: &mut Matrix) {
+        out.rows = self.rows;
+        out.cols = cols.len();
+        out.data.clear();
+        out.data.resize(self.rows * cols.len(), 0.0);
+        for i in 0..self.rows {
+            let src = self.row(i);
+            let dst = &mut out.data[i * cols.len()..(i + 1) * cols.len()];
+            for (jj, &j) in cols.iter().enumerate() {
+                dst[jj] = src[j];
+            }
+        }
+    }
+
     /// New matrix containing the given rows (in the given order).
     pub fn select_rows(&self, rows: &[usize]) -> Matrix {
         let mut out = Matrix::zeros(rows.len(), self.cols);
@@ -145,6 +170,17 @@ impl Matrix {
             out.row_mut(ii).copy_from_slice(self.row(i));
         }
         out
+    }
+
+    /// Row selection into a caller-owned matrix (reshaped to fit).
+    pub fn select_rows_into(&self, rows: &[usize], out: &mut Matrix) {
+        out.rows = rows.len();
+        out.cols = self.cols;
+        out.data.clear();
+        out.data.resize(rows.len() * self.cols, 0.0);
+        for (ii, &i) in rows.iter().enumerate() {
+            out.row_mut(ii).copy_from_slice(self.row(i));
+        }
     }
 
     /// Pad with zero columns on the right up to `target_cols` (used to fit

@@ -62,21 +62,38 @@ pub fn variance(a: &[f64]) -> f64 {
 impl Matrix {
     /// `self * v` for a column vector `v`.
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.matvec_into(v, &mut out);
+        out
+    }
+
+    /// `self * v` written into a caller-owned buffer (resized to fit) —
+    /// the allocation-free variant the solver workspaces use in their hot
+    /// loops.
+    pub fn matvec_into(&self, v: &[f64], out: &mut Vec<f64>) {
         assert_eq!(v.len(), self.cols(), "matvec: dimension mismatch");
-        (0..self.rows()).map(|i| dot(self.row(i), v)).collect()
+        out.clear();
+        out.extend((0..self.rows()).map(|i| dot(self.row(i), v)));
     }
 
     /// `selfᵀ * v` — computed without materializing the transpose by
     /// accumulating scaled rows (row-major friendly).
     pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = Vec::new();
+        self.matvec_t_into(v, &mut out);
+        out
+    }
+
+    /// `selfᵀ * v` written into a caller-owned buffer (resized to fit).
+    pub fn matvec_t_into(&self, v: &[f64], out: &mut Vec<f64>) {
         assert_eq!(v.len(), self.rows(), "matvec_t: dimension mismatch");
-        let mut out = vec![0.0; self.cols()];
+        out.clear();
+        out.resize(self.cols(), 0.0);
         for (i, &vi) in v.iter().enumerate() {
             if vi != 0.0 {
-                axpy(vi, self.row(i), &mut out);
+                axpy(vi, self.row(i), out);
             }
         }
-        out
     }
 
     /// Matrix product `self * other` with ikj loop order (streams `other`'s

@@ -6,10 +6,9 @@ use crate::linalg::Matrix;
 use crate::rng::Rng;
 use crate::solvers::kmeans::{KMeansConfig, KMeansModel};
 use anyhow::{anyhow, bail, Context, Result};
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 /// One shape-specialized artifact from `manifest.json`.
 #[derive(Debug, Clone)]
@@ -32,10 +31,28 @@ pub struct Engine {
     dir: PathBuf,
     entries: Vec<ManifestEntry>,
     client: xla::PjRtClient,
-    // File name → compiled executable (lazy, memoized). Single-threaded
-    // interior mutability: the coordinator drives PJRT from one thread.
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    // File name → compiled executable (lazy, memoized). A mutex (not
+    // RefCell) so the engine is Sync: backbone learners holding a
+    // `Backend` are shared by reference across the parallel subproblem
+    // scheduler's worker threads. Compilation is rare (once per shape
+    // bucket); the lock is uncontended on the hot path.
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    // Serializes ALL PJRT FFI access (client + executables): the `xla`
+    // crate's wrappers are not thread-safe, so every public entry point
+    // that touches them funnels through `run()`/`describe()`, which take
+    // this gate first. Workers therefore time-slice the engine rather
+    // than race it — the native fallbacks carry the parallel speedup.
+    gate: Mutex<()>,
 }
+
+// SAFETY: the `xla` FFI wrapper types are !Send/!Sync, but every code
+// path that dereferences them (`compile` → only called from `run`;
+// `run`; `describe`) executes under the `gate` mutex, so no two threads
+// ever access the PJRT client or an executable concurrently, and the
+// PJRT CPU client has no thread-affinity requirements. The cache map
+// itself is independently synchronized.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
 
 impl std::fmt::Debug for Engine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -79,7 +96,13 @@ impl Engine {
             });
         }
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
-        Ok(Engine { dir, entries, client, cache: RefCell::new(HashMap::new()) })
+        Ok(Engine {
+            dir,
+            entries,
+            client,
+            cache: Mutex::new(HashMap::new()),
+            gate: Mutex::new(()),
+        })
     }
 
     /// All manifest entries.
@@ -89,6 +112,7 @@ impl Engine {
 
     /// Table of entries for `backbone-learn artifacts`.
     pub fn describe(&self) -> String {
+        let _gate = self.gate.lock().unwrap(); // platform_name is FFI
         let mut out = format!(
             "{} artifacts on platform `{}`:\n",
             self.entries.len(),
@@ -103,8 +127,14 @@ impl Engine {
         out
     }
 
-    fn compile(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(file) {
+    fn compile(&self, file: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        // Hold the lock across compilation so concurrent batch workers
+        // hitting the same shape bucket compile each artifact exactly
+        // once (compilation is the expensive step this cache amortizes;
+        // it only runs once per file, so the coarse critical section is
+        // never on the steady-state hot path).
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(file) {
             return Ok(exe.clone());
         }
         let path = self.dir.join(file);
@@ -113,12 +143,12 @@ impl Engine {
         )
         .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
+        let exe = Arc::new(
             self.client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compiling {file}: {e}"))?,
         );
-        self.cache.borrow_mut().insert(file.to_string(), exe.clone());
+        cache.insert(file.to_string(), exe.clone());
         Ok(exe)
     }
 
@@ -135,6 +165,10 @@ impl Engine {
     }
 
     fn run(&self, file: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        // One worker in the PJRT runtime at a time (see the Sync SAFETY
+        // note on `Engine`): compilation and execution both happen under
+        // the gate.
+        let _gate = self.gate.lock().unwrap();
         let exe = self.compile(file)?;
         let result = exe
             .execute::<xla::Literal>(inputs)

@@ -33,8 +33,8 @@ pub use engine::{Engine, ManifestEntry};
 
 use crate::linalg::Matrix;
 use crate::rng::Rng;
-use crate::solvers::cd::{l0_fit, polish_to_model, L0Config, L0Model};
-use crate::solvers::kmeans::{kmeans_fit, KMeansConfig, KMeansModel};
+use crate::solvers::cd::{l0_fit_with, polish_to_model, L0Config, L0Model, L0Workspace};
+use crate::solvers::kmeans::{kmeans_fit_with, KMeansConfig, KMeansModel, KMeansWorkspace};
 use std::sync::Arc;
 
 /// Which engine executes dense numeric hot paths.
@@ -70,20 +70,35 @@ impl Backend {
     }
 
     /// L0 heuristic subproblem fit (IHT support + ridge polish on the PJRT
-    /// path; full native CD/IHT/swap heuristic otherwise).
-    pub fn l0_subproblem_fit(&self, x: &Matrix, y: &[f64], cfg: &L0Config) -> L0Model {
+    /// path; full native CD/IHT/swap heuristic otherwise). `ws` is the
+    /// caller-owned scratch of the native path — the backbone passes one
+    /// per worker thread so repeated subproblem fits reuse buffers.
+    pub fn l0_subproblem_fit(
+        &self,
+        x: &Matrix,
+        y: &[f64],
+        cfg: &L0Config,
+        ws: &mut L0Workspace,
+    ) -> L0Model {
         if let Backend::Pjrt(engine) = self {
             if let Ok(Some(support)) = engine.iht_support(x, y, cfg.k) {
                 return polish_to_model(x, y, &support, cfg.lambda2);
             }
         }
-        l0_fit(x, y, cfg)
+        l0_fit_with(x, y, cfg, ws)
     }
 
     /// k-means fit: kmeans++ seeding is always native (cheap, branchy);
     /// the Lloyd iterations run through the AOT `lloyd_step` artifact when
-    /// a shape bucket matches.
-    pub fn kmeans(&self, x: &Matrix, cfg: &KMeansConfig, rng: &mut Rng) -> KMeansModel {
+    /// a shape bucket matches. `ws` is the native path's caller-owned
+    /// scratch (one per backbone worker thread).
+    pub fn kmeans(
+        &self,
+        x: &Matrix,
+        cfg: &KMeansConfig,
+        rng: &mut Rng,
+        ws: &mut KMeansWorkspace,
+    ) -> KMeansModel {
         if let Backend::Pjrt(engine) = self {
             if engine.has_lloyd(x.rows(), x.cols(), cfg.k) {
                 if let Ok(Some(model)) = engine.kmeans_via_lloyd(x, cfg, rng) {
@@ -91,7 +106,7 @@ impl Backend {
                 }
             }
         }
-        kmeans_fit(x, cfg, rng)
+        kmeans_fit_with(x, cfg, rng, ws)
     }
 }
 

@@ -108,18 +108,29 @@ fn gini(pos: f64, total: f64) -> f64 {
     2.0 * p * (1.0 - p)
 }
 
+/// Reusable scratch for [`cart_fit_with`]: the per-feature (value, label)
+/// sort buffer that split search fills once per (node, feature). One
+/// `Default` workspace serves any problem shape; contents never affect
+/// results.
+#[derive(Debug, Clone, Default)]
+pub struct CartWorkspace {
+    vals: Vec<(f64, f64)>,
+}
+
 /// Best split of `rows` on `feature`: returns (threshold, weighted child
-/// impurity, n_left) or None if no valid split exists.
+/// impurity, n_left) or None if no valid split exists. `vals` is a
+/// caller-owned sort buffer (overwritten before use).
 fn best_split_on_feature(
     x: &Matrix,
     y: &[f64],
     rows: &[usize],
     feature: usize,
     min_leaf: usize,
+    vals: &mut Vec<(f64, f64)>,
 ) -> Option<(f64, f64, usize)> {
     let n = rows.len();
-    let mut vals: Vec<(f64, f64)> =
-        rows.iter().map(|&i| (x.get(i, feature), y[i])).collect();
+    vals.clear();
+    vals.extend(rows.iter().map(|&i| (x.get(i, feature), y[i])));
     vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
     let total_pos: f64 = vals.iter().map(|v| v.1).sum();
 
@@ -151,6 +162,7 @@ struct Builder<'a> {
     x: &'a Matrix,
     y: &'a [f64],
     cfg: &'a CartConfig,
+    ws: &'a mut CartWorkspace,
     importances: Vec<f64>,
     n_total: f64,
     max_depth_seen: usize,
@@ -180,9 +192,14 @@ impl<'a> Builder<'a> {
 
         let mut best: Option<(usize, f64, f64, usize)> = None; // (feat, thr, imp, n_left)
         for &f in &features {
-            if let Some((thr, imp, n_left)) =
-                best_split_on_feature(self.x, self.y, &rows, f, self.cfg.min_samples_leaf)
-            {
+            if let Some((thr, imp, n_left)) = best_split_on_feature(
+                self.x,
+                self.y,
+                &rows,
+                f,
+                self.cfg.min_samples_leaf,
+                &mut self.ws.vals,
+            ) {
                 if best.map_or(true, |(_, _, bi, _)| imp < bi) {
                     best = Some((f, thr, imp, n_left));
                 }
@@ -207,14 +224,27 @@ impl<'a> Builder<'a> {
     }
 }
 
-/// Fit a CART classifier.
+/// Fit a CART classifier (one-shot scratch; see [`cart_fit_with`]).
 pub fn cart_fit(x: &Matrix, y: &[f64], cfg: &CartConfig) -> CartModel {
+    cart_fit_with(x, y, cfg, &mut CartWorkspace::default())
+}
+
+/// Fit a CART classifier borrowing caller-owned scratch — the backbone's
+/// `fit_subproblem` entry point for decision trees. Bit-identical to
+/// [`cart_fit`] for any workspace state.
+pub fn cart_fit_with(
+    x: &Matrix,
+    y: &[f64],
+    cfg: &CartConfig,
+    ws: &mut CartWorkspace,
+) -> CartModel {
     assert_eq!(x.rows(), y.len());
     assert!(x.rows() > 0, "empty training set");
     let mut b = Builder {
         x,
         y,
         cfg,
+        ws,
         importances: vec![0.0; x.cols()],
         n_total: x.rows() as f64,
         max_depth_seen: 0,

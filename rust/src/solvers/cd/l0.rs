@@ -48,6 +48,26 @@ pub struct L0Model {
     pub objective: f64,
 }
 
+/// Reusable scratch buffers for [`l0_fit_with`]: the IHT iterate, its
+/// gradient/residual vectors and the top-k index buffer, plus a reusable
+/// design-matrix buffer for callers that restrict columns per fit.
+///
+/// One workspace serves any problem shape — buffers are resized on entry —
+/// so a single `Default`-constructed workspace can be reused across every
+/// subproblem a worker thread solves. Contents never affect results: every
+/// buffer is overwritten before it is read.
+#[derive(Debug, Clone, Default)]
+pub struct L0Workspace {
+    /// Caller-owned column-restricted design matrix (`select_columns_into`).
+    pub xs: crate::linalg::Matrix,
+    beta: Vec<f64>,
+    pred: Vec<f64>,
+    resid: Vec<f64>,
+    grad: Vec<f64>,
+    z: Vec<f64>,
+    idx: Vec<usize>,
+}
+
 impl L0Model {
     pub fn predict(&self, x: &Matrix) -> Vec<f64> {
         x.matvec(&self.beta).iter().map(|v| v + self.intercept).collect()
@@ -56,11 +76,17 @@ impl L0Model {
 
 /// Largest-magnitude `k` indices of `v` (ties broken by lower index).
 fn top_k_indices(v: &[f64], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..v.len()).collect();
+    top_k_indices_with(v, k, &mut Vec::new())
+}
+
+/// [`top_k_indices`] reusing a caller-owned index buffer for the sort.
+fn top_k_indices_with(v: &[f64], k: usize, idx: &mut Vec<usize>) -> Vec<usize> {
+    idx.clear();
+    idx.extend(0..v.len());
     idx.sort_by(|&a, &b| {
         v[b].abs().partial_cmp(&v[a].abs()).unwrap().then(a.cmp(&b))
     });
-    let mut top: Vec<usize> = idx.into_iter().take(k).collect();
+    let mut top: Vec<usize> = idx.iter().copied().take(k).collect();
     top.sort_unstable();
     top
 }
@@ -113,19 +139,21 @@ fn polish(
 
 /// Power-iteration estimate of the largest eigenvalue of `XᵀX / n` —
 /// the IHT step size is `1 / L` with `L` this spectral bound (times n).
-fn lipschitz_estimate(x: &Matrix) -> f64 {
+/// Borrows the workspace's `z`/`pred`/`grad` buffers for the iteration.
+fn lipschitz_estimate(x: &Matrix, ws: &mut L0Workspace) -> f64 {
     let p = x.cols();
-    let mut v = vec![1.0 / (p as f64).sqrt(); p];
+    ws.z.clear();
+    ws.z.resize(p, 1.0 / (p as f64).sqrt());
     let mut lam = 1.0;
     for _ in 0..20 {
-        let xv = x.matvec(&v);
-        let xtxv = x.matvec_t(&xv);
-        let norm = crate::linalg::norm2(&xtxv);
+        x.matvec_into(&ws.z, &mut ws.pred); // X v
+        x.matvec_t_into(&ws.pred, &mut ws.grad); // Xᵀ X v
+        let norm = crate::linalg::norm2(&ws.grad);
         if norm < 1e-12 {
             return 1.0;
         }
         lam = norm;
-        for (vi, g) in v.iter_mut().zip(&xtxv) {
+        for (vi, g) in ws.z.iter_mut().zip(&ws.grad) {
             *vi = g / norm;
         }
     }
@@ -144,8 +172,17 @@ pub fn polish_to_model(x: &Matrix, y: &[f64], support: &[usize], lambda2: f64) -
     L0Model { beta, intercept, support, objective }
 }
 
-/// Fit via IHT + polish + local swaps.
+/// Fit via IHT + polish + local swaps (one-shot scratch; see
+/// [`l0_fit_with`] for the allocation-reusing entry point).
 pub fn l0_fit(x: &Matrix, y: &[f64], cfg: &L0Config) -> L0Model {
+    l0_fit_with(x, y, cfg, &mut L0Workspace::default())
+}
+
+/// Fit via IHT + polish + local swaps, borrowing caller-owned scratch —
+/// the entry point of the backbone's `fit_subproblem` hot loop, where one
+/// workspace is reused across every subproblem a worker thread solves.
+/// Bit-identical to [`l0_fit`] for any workspace state.
+pub fn l0_fit_with(x: &Matrix, y: &[f64], cfg: &L0Config, ws: &mut L0Workspace) -> L0Model {
     assert_eq!(x.rows(), y.len());
     let p = x.cols();
     let k = cfg.k.min(p);
@@ -155,38 +192,41 @@ pub fn l0_fit(x: &Matrix, y: &[f64], cfg: &L0Config) -> L0Model {
     }
 
     // --- IHT phase -------------------------------------------------------
-    let lip = lipschitz_estimate(x) + cfg.lambda2;
+    let lip = lipschitz_estimate(x, ws) + cfg.lambda2;
     let step = 1.0 / lip;
-    let mut beta = vec![0.0; p];
+    ws.beta.clear();
+    ws.beta.resize(p, 0.0);
     let mut support: Vec<usize> = Vec::new();
     let mut stable = 0;
     for _ in 0..cfg.max_iter {
         // gradient of ½‖y−Xβ‖² + ½λ₂‖β‖² : −Xᵀ(y−Xβ) + λ₂β
-        let pred = x.matvec(&beta);
-        let resid: Vec<f64> = y.iter().zip(&pred).map(|(yv, pv)| yv - pv).collect();
-        let grad_neg = x.matvec_t(&resid); // = Xᵀ r
-        let mut z = beta.clone();
-        for j in 0..p {
-            z[j] += step * (grad_neg[j] - cfg.lambda2 * beta[j]);
-        }
-        let new_support = top_k_indices(&z, k);
-        let mut new_beta = vec![0.0; p];
+        x.matvec_into(&ws.beta, &mut ws.pred);
+        ws.resid.clear();
+        ws.resid.extend(y.iter().zip(&ws.pred).map(|(yv, pv)| yv - pv));
+        x.matvec_t_into(&ws.resid, &mut ws.grad); // = Xᵀ r
+        ws.z.clear();
+        ws.z.extend(
+            ws.beta
+                .iter()
+                .zip(&ws.grad)
+                .map(|(&b, &g)| b + step * (g - cfg.lambda2 * b)),
+        );
+        let new_support = top_k_indices_with(&ws.z, k, &mut ws.idx);
+        ws.beta.iter_mut().for_each(|b| *b = 0.0);
         for &j in &new_support {
-            new_beta[j] = z[j];
+            ws.beta[j] = ws.z[j];
         }
         if new_support == support {
             stable += 1;
             if stable >= cfg.patience {
-                beta = new_beta;
                 break;
             }
         } else {
             stable = 0;
         }
         support = new_support;
-        beta = new_beta;
     }
-    let _ = &beta; // last IHT iterate feeds the polish below via `support`
+    // The last IHT iterate feeds the polish below via `support`.
 
     // --- Polish ----------------------------------------------------------
     let (mut beta, mut intercept, mut objective) = polish(x, y, &support, cfg.lambda2);
@@ -199,13 +239,13 @@ pub fn l0_fit(x: &Matrix, y: &[f64], cfg: &L0Config) -> L0Model {
         if support.is_empty() || support.len() >= p {
             break;
         }
-        let pred = x.matvec(&beta);
-        let resid: Vec<f64> = y
-            .iter()
-            .zip(&pred)
-            .map(|(yv, pv)| yv - pv - intercept)
-            .collect();
-        let corr = x.matvec_t(&resid);
+        x.matvec_into(&beta, &mut ws.pred);
+        ws.resid.clear();
+        ws.resid.extend(
+            y.iter().zip(&ws.pred).map(|(yv, pv)| yv - pv - intercept),
+        );
+        x.matvec_t_into(&ws.resid, &mut ws.grad);
+        let corr = &ws.grad;
         // Strongest excluded candidate.
         let cand = (0..p)
             .filter(|j| !support.contains(j))
@@ -280,6 +320,25 @@ mod tests {
             assert!(m.support.len() <= k);
             let nnz = m.beta.iter().filter(|&&b| b != 0.0).count();
             assert_eq!(nnz, m.support.len());
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical_to_fresh_scratch() {
+        // One workspace reused across differently-shaped fits must give
+        // exactly what fresh scratch gives — the contract that lets the
+        // batch scheduler hand one workspace per worker thread.
+        let mut ws = L0Workspace::default();
+        for (n, p, k, seed) in [(40, 30, 3, 10), (60, 80, 5, 11), (25, 12, 2, 12)] {
+            let cfg_data = SparseRegressionConfig { n, p, k, rho: 0.2, snr: 5.0 };
+            let data = generate(&cfg_data, &mut Rng::seed_from_u64(seed));
+            let cfg = L0Config { k, ..Default::default() };
+            let fresh = l0_fit(&data.x, &data.y, &cfg);
+            let reused = l0_fit_with(&data.x, &data.y, &cfg, &mut ws);
+            assert_eq!(fresh.support, reused.support);
+            assert_eq!(fresh.beta, reused.beta);
+            assert_eq!(fresh.intercept, reused.intercept);
+            assert_eq!(fresh.objective, reused.objective);
         }
     }
 

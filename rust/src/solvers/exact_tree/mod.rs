@@ -36,7 +36,11 @@ impl Default for ExactTreeConfig {
 }
 
 /// Tree over binary features.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is structural (probabilities compared exactly) — the
+/// determinism suite uses it to assert parallel and sequential backbone
+/// runs produce bit-identical trees.
+#[derive(Debug, Clone, PartialEq)]
 pub enum BinNode {
     Leaf {
         prob: f64,

@@ -54,6 +54,21 @@ impl KMeansModel {
     }
 }
 
+/// Reusable scratch for [`kmeans_fit_with`]: the Lloyd-iteration label /
+/// distance / accumulator buffers plus a reusable point-subset matrix for
+/// callers that restrict rows per fit. Buffers are resized on entry, so
+/// one `Default` workspace serves any problem shape; contents never affect
+/// results.
+#[derive(Debug, Clone, Default)]
+pub struct KMeansWorkspace {
+    /// Caller-owned row-restricted point matrix (`select_rows_into`).
+    pub xs: Matrix,
+    labels: Vec<usize>,
+    d2: Vec<f64>,
+    sums: Matrix,
+    counts: Vec<usize>,
+}
+
 fn nearest_centroid(point: &[f64], centroids: &Matrix) -> (usize, f64) {
     let mut best = (0, f64::INFINITY);
     for c in 0..centroids.rows() {
@@ -67,18 +82,19 @@ fn nearest_centroid(point: &[f64], centroids: &Matrix) -> (usize, f64) {
 
 /// k-means++ seeding: first center uniform, subsequent centers sampled
 /// with probability proportional to the squared distance to the nearest
-/// chosen center.
-fn kmeanspp_init(x: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
+/// chosen center. `d2` is a caller-owned distance buffer.
+fn kmeanspp_init(x: &Matrix, k: usize, rng: &mut Rng, d2: &mut Vec<f64>) -> Matrix {
     let n = x.rows();
     let mut centers: Vec<usize> = vec![rng.usize_below(n)];
-    let mut d2: Vec<f64> = (0..n).map(|i| sqdist(x.row(i), x.row(centers[0]))).collect();
+    d2.clear();
+    d2.extend((0..n).map(|i| sqdist(x.row(i), x.row(centers[0]))));
     while centers.len() < k {
         let total: f64 = d2.iter().sum();
         let next = if total <= 1e-300 {
             // All points coincide with chosen centers; pick uniformly.
             rng.usize_below(n)
         } else {
-            rng.categorical(&d2)
+            rng.categorical(&d2[..])
         };
         centers.push(next);
         for i in 0..n {
@@ -92,38 +108,51 @@ fn kmeanspp_init(x: &Matrix, k: usize, rng: &mut Rng) -> Matrix {
     c
 }
 
-/// One restart of Lloyd's algorithm from the given initial centroids.
-fn lloyd(x: &Matrix, mut centroids: Matrix, cfg: &KMeansConfig) -> KMeansModel {
+/// One restart of Lloyd's algorithm from the given initial centroids,
+/// borrowing the workspace's label/accumulator buffers.
+fn lloyd(
+    x: &Matrix,
+    mut centroids: Matrix,
+    cfg: &KMeansConfig,
+    ws: &mut KMeansWorkspace,
+) -> KMeansModel {
     let (n, p) = (x.rows(), x.cols());
     let k = centroids.rows();
-    let mut labels = vec![0usize; n];
+    ws.labels.clear();
+    ws.labels.resize(n, 0);
     let mut iterations = 0;
     for it in 0..cfg.max_iter {
         iterations = it + 1;
         // Assignment step.
         for i in 0..n {
-            labels[i] = nearest_centroid(x.row(i), &centroids).0;
+            ws.labels[i] = nearest_centroid(x.row(i), &centroids).0;
         }
-        // Update step.
-        let mut sums = Matrix::zeros(k, p);
-        let mut counts = vec![0usize; k];
+        // Update step (sums/counts reused across iterations and fits).
+        if ws.sums.rows() != k || ws.sums.cols() != p {
+            ws.sums = Matrix::zeros(k, p);
+        } else {
+            ws.sums.data_mut().iter_mut().for_each(|v| *v = 0.0);
+        }
+        ws.counts.clear();
+        ws.counts.resize(k, 0);
         for i in 0..n {
-            counts[labels[i]] += 1;
+            let li = ws.labels[i];
+            ws.counts[li] += 1;
             let row = x.row(i);
-            let srow = sums.row_mut(labels[i]);
+            let srow = ws.sums.row_mut(li);
             for (s, &v) in srow.iter_mut().zip(row) {
                 *s += v;
             }
         }
         let mut movement = 0.0f64;
         for c in 0..k {
-            if counts[c] == 0 {
+            if ws.counts[c] == 0 {
                 // Empty cluster: re-seed at the point farthest from its
                 // centroid (standard fix; keeps k clusters alive).
                 let far = (0..n)
                     .max_by(|&a, &b| {
-                        let da = sqdist(x.row(a), centroids.row(labels[a]));
-                        let db = sqdist(x.row(b), centroids.row(labels[b]));
+                        let da = sqdist(x.row(a), centroids.row(ws.labels[a]));
+                        let db = sqdist(x.row(b), centroids.row(ws.labels[b]));
                         da.partial_cmp(&db).unwrap()
                     })
                     .unwrap();
@@ -132,8 +161,8 @@ fn lloyd(x: &Matrix, mut centroids: Matrix, cfg: &KMeansConfig) -> KMeansModel {
                 centroids.row_mut(c).copy_from_slice(&target);
                 continue;
             }
-            let inv = 1.0 / counts[c] as f64;
-            let new: Vec<f64> = sums.row(c).iter().map(|s| s * inv).collect();
+            let inv = 1.0 / ws.counts[c] as f64;
+            let new: Vec<f64> = ws.sums.row(c).iter().map(|s| s * inv).collect();
             movement += sqdist(centroids.row(c), &new);
             centroids.row_mut(c).copy_from_slice(&new);
         }
@@ -145,19 +174,32 @@ fn lloyd(x: &Matrix, mut centroids: Matrix, cfg: &KMeansConfig) -> KMeansModel {
     let mut inertia = 0.0;
     for i in 0..n {
         let (c, d) = nearest_centroid(x.row(i), &centroids);
-        labels[i] = c;
+        ws.labels[i] = c;
         inertia += d;
     }
-    KMeansModel { labels, centroids, inertia, iterations }
+    KMeansModel { labels: ws.labels.clone(), centroids, inertia, iterations }
 }
 
-/// Fit k-means with `cfg.n_init` k-means++ restarts.
+/// Fit k-means with `cfg.n_init` k-means++ restarts (one-shot scratch;
+/// see [`kmeans_fit_with`]).
 pub fn kmeans_fit(x: &Matrix, cfg: &KMeansConfig, rng: &mut Rng) -> KMeansModel {
+    kmeans_fit_with(x, cfg, rng, &mut KMeansWorkspace::default())
+}
+
+/// Fit k-means borrowing caller-owned scratch — the backbone's
+/// `fit_subproblem` entry point for clustering. Bit-identical to
+/// [`kmeans_fit`] for any workspace state.
+pub fn kmeans_fit_with(
+    x: &Matrix,
+    cfg: &KMeansConfig,
+    rng: &mut Rng,
+    ws: &mut KMeansWorkspace,
+) -> KMeansModel {
     assert!(cfg.k >= 1 && x.rows() >= cfg.k, "need at least k points");
     let mut best: Option<KMeansModel> = None;
     for _ in 0..cfg.n_init.max(1) {
-        let init = kmeanspp_init(x, cfg.k, rng);
-        let model = lloyd(x, init, cfg);
+        let init = kmeanspp_init(x, cfg.k, rng, &mut ws.d2);
+        let model = lloyd(x, init, cfg, ws);
         if best.as_ref().map_or(true, |b| model.inertia < b.inertia) {
             best = Some(model);
         }
@@ -207,6 +249,24 @@ mod tests {
             );
             assert!(m.inertia <= prev + 1e-9, "k={k}: {} > {prev}", m.inertia);
             prev = m.inertia;
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_bit_identical_to_fresh_scratch() {
+        // One workspace reused across differently-shaped fits must give
+        // exactly what fresh scratch gives — the contract that lets the
+        // batch scheduler hand one workspace per worker thread.
+        let mut ws = KMeansWorkspace::default();
+        for (k, seed) in [(2usize, 4u64), (5, 5), (3, 6)] {
+            let data = blob_data(3);
+            let cfg = KMeansConfig { k, ..Default::default() };
+            let fresh = kmeans_fit(&data.x, &cfg, &mut Rng::seed_from_u64(seed));
+            let reused =
+                kmeans_fit_with(&data.x, &cfg, &mut Rng::seed_from_u64(seed), &mut ws);
+            assert_eq!(fresh.labels, reused.labels);
+            assert_eq!(fresh.inertia, reused.inertia);
+            assert_eq!(fresh.centroids, reused.centroids);
         }
     }
 

@@ -151,13 +151,42 @@ pub fn logistic_fit(
     (beta, b0, nll)
 }
 
-/// L0-constrained logistic heuristic: IHT + Newton polish.
+/// Reusable scratch for [`logistic_l0_fit_with`]: the IHT iterate, its
+/// gradient, the projection index buffer, and a reusable design-matrix
+/// buffer for callers that restrict columns per fit. Buffers are resized
+/// on entry, so one `Default` workspace serves any problem shape; contents
+/// never affect results.
+#[derive(Debug, Clone, Default)]
+pub struct LogisticWorkspace {
+    /// Caller-owned column-restricted design matrix (`select_columns_into`).
+    pub xs: Matrix,
+    beta: Vec<f64>,
+    grad: Vec<f64>,
+    idx: Vec<usize>,
+}
+
+/// L0-constrained logistic heuristic: IHT + Newton polish (one-shot
+/// scratch; see [`logistic_l0_fit_with`]).
 pub fn logistic_l0_fit(
     x: &Matrix,
     y: &[f64],
     k: usize,
     ridge: f64,
     iht_iters: usize,
+) -> LogisticModel {
+    logistic_l0_fit_with(x, y, k, ridge, iht_iters, &mut LogisticWorkspace::default())
+}
+
+/// L0-constrained logistic heuristic borrowing caller-owned scratch — the
+/// backbone's `fit_subproblem` entry point for sparse logistic regression.
+/// Bit-identical to [`logistic_l0_fit`] for any workspace state.
+pub fn logistic_l0_fit_with(
+    x: &Matrix,
+    y: &[f64],
+    k: usize,
+    ridge: f64,
+    iht_iters: usize,
+    ws: &mut LogisticWorkspace,
 ) -> LogisticModel {
     assert_eq!(x.rows(), y.len());
     let (n, p) = (x.rows(), x.cols());
@@ -173,25 +202,29 @@ pub fn logistic_l0_fit(
         };
     }
     // IHT with a conservative step (logistic Lipschitz ≤ ‖X‖²/4).
-    let mut beta = vec![0.0; p];
+    ws.beta.clear();
+    ws.beta.resize(p, 0.0);
+    let beta = &mut ws.beta;
     let mut b0 = 0.0;
     let lr = 4.0 / n as f64;
     for _ in 0..iht_iters {
-        let mut grad = vec![0.0; p];
+        ws.grad.clear();
+        ws.grad.resize(p, 0.0);
         let mut grad0 = 0.0;
         for i in 0..n {
-            let e = sigmoid(dot(x.row(i), &beta) + b0) - y[i];
+            let e = sigmoid(dot(x.row(i), &beta[..]) + b0) - y[i];
             grad0 += e;
-            crate::linalg::axpy(e, x.row(i), &mut grad);
+            crate::linalg::axpy(e, x.row(i), &mut ws.grad);
         }
-        for (bj, gj) in beta.iter_mut().zip(&grad) {
+        for (bj, gj) in beta.iter_mut().zip(&ws.grad) {
             *bj -= lr * (gj + ridge * *bj);
         }
         b0 -= lr * grad0;
         // Project to k-sparse.
-        let mut idx: Vec<usize> = (0..p).collect();
-        idx.sort_by(|&a, &b| beta[b].abs().partial_cmp(&beta[a].abs()).unwrap());
-        for &j in idx.iter().skip(k) {
+        ws.idx.clear();
+        ws.idx.extend(0..p);
+        ws.idx.sort_by(|&a, &b| beta[b].abs().partial_cmp(&beta[a].abs()).unwrap());
+        for &j in ws.idx.iter().skip(k) {
             beta[j] = 0.0;
         }
     }

@@ -1,36 +1,60 @@
 //! Small shared utilities: wall-clock budgets, timing, and index sets.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-/// A wall-clock budget shared by long-running solvers.
+/// A thread-safe wall-clock budget shared by long-running solvers.
 ///
 /// Exact MIO solvers (L0BnB, MILP branch-and-bound, exact trees) honour the
 /// paper's one-hour cap through this type: they poll `expired()` at node
 /// boundaries and return their incumbent with a `TimedOut` status, exactly
 /// like the `ODTLearn`/`Exact` rows of Table 1 that report 3600 s.
+///
+/// The budget is a fixed deadline (`Instant` + optional `Duration`) plus a
+/// latched exhausted flag: once any observer — including a worker on
+/// another thread of the parallel subproblem scheduler — sees the deadline
+/// pass, every clone of this budget reports `expired()` from then on via a
+/// single relaxed atomic load. `&Budget` is `Send + Sync`, so the batch
+/// scheduler hands the same budget to all workers and they short-circuit
+/// mid-batch exactly as the sequential path does.
 #[derive(Debug, Clone)]
 pub struct Budget {
     start: Instant,
     limit: Option<Duration>,
+    /// Latched once the deadline is observed as passed; `Arc` so clones
+    /// (and the threads borrowing them) agree instantly.
+    exhausted: Arc<AtomicBool>,
 }
 
 impl Budget {
     /// Unlimited budget.
     pub fn unlimited() -> Self {
-        Self { start: Instant::now(), limit: None }
+        Self { start: Instant::now(), limit: None, exhausted: Arc::new(AtomicBool::new(false)) }
     }
 
     /// Budget of `secs` seconds starting now.
     pub fn seconds(secs: f64) -> Self {
-        Self { start: Instant::now(), limit: Some(Duration::from_secs_f64(secs)) }
+        Self {
+            start: Instant::now(),
+            limit: Some(Duration::from_secs_f64(secs)),
+            exhausted: Arc::new(AtomicBool::new(false)),
+        }
     }
 
-    /// True once the budget is exhausted.
+    /// True once the budget is exhausted. Monotone: after the first `true`
+    /// every subsequent call (on any clone, from any thread) is `true`.
     #[inline]
     pub fn expired(&self) -> bool {
+        if self.exhausted.load(Ordering::Relaxed) {
+            return true;
+        }
         match self.limit {
-            Some(l) => self.start.elapsed() >= l,
-            None => false,
+            Some(l) if self.start.elapsed() >= l => {
+                self.exhausted.store(true, Ordering::Relaxed);
+                true
+            }
+            _ => false,
         }
     }
 
@@ -182,6 +206,28 @@ mod tests {
     fn budget_zero_expires_immediately() {
         let b = Budget::seconds(0.0);
         assert!(b.expired());
+    }
+
+    #[test]
+    fn budget_is_send_sync_and_latches_across_clones() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Budget>();
+        let a = Budget::seconds(0.0);
+        let b = a.clone();
+        // Observing expiry on one clone latches the shared flag; the other
+        // clone sees it without re-reading the clock.
+        assert!(a.expired());
+        assert!(b.expired());
+    }
+
+    #[test]
+    fn budget_expired_is_visible_from_other_threads() {
+        let budget = Budget::seconds(0.0);
+        let seen = std::thread::scope(|s| {
+            s.spawn(|| budget.expired()).join().unwrap()
+        });
+        assert!(seen);
+        assert!(budget.expired());
     }
 
     #[test]

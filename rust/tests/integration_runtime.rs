@@ -9,8 +9,8 @@ use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
 use backbone_learn::linalg::Matrix;
 use backbone_learn::rng::Rng;
 use backbone_learn::runtime::{Backend, Engine};
-use backbone_learn::solvers::cd::{l0_fit, L0Config};
-use backbone_learn::solvers::kmeans::KMeansConfig;
+use backbone_learn::solvers::cd::{l0_fit, L0Config, L0Workspace};
+use backbone_learn::solvers::kmeans::{KMeansConfig, KMeansWorkspace};
 
 fn engine() -> Option<Engine> {
     match Engine::load("artifacts") {
@@ -81,8 +81,14 @@ fn pjrt_backend_equals_native_backend_on_subproblem_fit() {
     let cfg = SparseRegressionConfig { n: 200, p: 300, k: 4, rho: 0.0, snr: 50.0 };
     let data = generate(&cfg, &mut Rng::seed_from_u64(4));
     let l0cfg = L0Config { k: 4, ..Default::default() };
-    let via_pjrt = backend.l0_subproblem_fit(&data.x, &data.y, &l0cfg);
-    let via_native = Backend::Native.l0_subproblem_fit(&data.x, &data.y, &l0cfg);
+    let via_pjrt =
+        backend.l0_subproblem_fit(&data.x, &data.y, &l0cfg, &mut L0Workspace::default());
+    let via_native = Backend::Native.l0_subproblem_fit(
+        &data.x,
+        &data.y,
+        &l0cfg,
+        &mut L0Workspace::default(),
+    );
     // Clean signal: both must find the exact true support, and the
     // polished coefficients then agree to f32 precision.
     assert_eq!(via_pjrt.support, data.support_true);
@@ -141,8 +147,18 @@ fn pjrt_kmeans_equals_native_quality() {
     );
     let backend = Backend::Pjrt(std::sync::Arc::new(engine));
     let cfg = KMeansConfig { k: 4, n_init: 5, ..Default::default() };
-    let pjrt = backend.kmeans(&data.x, &cfg, &mut Rng::seed_from_u64(7));
-    let native = Backend::Native.kmeans(&data.x, &cfg, &mut Rng::seed_from_u64(7));
+    let pjrt = backend.kmeans(
+        &data.x,
+        &cfg,
+        &mut Rng::seed_from_u64(7),
+        &mut KMeansWorkspace::default(),
+    );
+    let native = Backend::Native.kmeans(
+        &data.x,
+        &cfg,
+        &mut Rng::seed_from_u64(7),
+        &mut KMeansWorkspace::default(),
+    );
     let ari_pjrt =
         backbone_learn::metrics::adjusted_rand_index(&pjrt.labels, &data.labels_true);
     let ari_native =

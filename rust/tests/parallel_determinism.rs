@@ -1,0 +1,195 @@
+//! Determinism acceptance suite for `ExecutionPolicy::Parallel`: every
+//! shipped learner, fitted through the real threaded scheduler with 1, 2,
+//! and 4 workers, must produce a **bit-identical** model to the
+//! sequential schedule for the same seed — coefficients, supports, tree
+//! structure, labels, objectives, everything. This is the contract that
+//! makes `--threads N` a pure wall-clock knob.
+
+use backbone_learn::backbone::{Backbone, ExecutionPolicy};
+use backbone_learn::data::{blobs, classification, sparse_regression};
+use backbone_learn::rng::Rng;
+use backbone_learn::util::Budget;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+#[test]
+fn sparse_regression_parallel_fits_are_bit_identical() {
+    let data = sparse_regression::generate(
+        &sparse_regression::SparseRegressionConfig {
+            n: 100,
+            p: 200,
+            k: 4,
+            rho: 0.2,
+            snr: 5.0,
+        },
+        &mut Rng::seed_from_u64(21),
+    );
+    let fit = |threads: Option<usize>| {
+        let builder = Backbone::sparse_regression()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(5)
+            .max_nonzeros(4)
+            .seed(7)
+            .execution(ExecutionPolicy::Sequential);
+        let builder = match threads {
+            None => builder,
+            Some(n) => builder.threads(n),
+        };
+        let mut bb = builder.build().unwrap();
+        let model = bb.fit(&data.x, &data.y).unwrap().clone();
+        let backbone_size = bb.last_diagnostics.as_ref().unwrap().backbone_size;
+        (model, backbone_size)
+    };
+    let (seq, seq_backbone) = fit(None);
+    for threads in THREAD_COUNTS {
+        let (par, par_backbone) = fit(Some(threads));
+        assert_eq!(seq.beta, par.beta, "threads={threads}");
+        assert_eq!(seq.intercept, par.intercept, "threads={threads}");
+        assert_eq!(seq.support, par.support, "threads={threads}");
+        assert_eq!(seq.objective, par.objective, "threads={threads}");
+        assert_eq!(seq_backbone, par_backbone, "threads={threads}");
+    }
+}
+
+#[test]
+fn sparse_logistic_parallel_fits_are_bit_identical() {
+    let data = classification::generate(
+        &classification::ClassificationConfig {
+            n: 200,
+            p: 40,
+            k: 3,
+            n_redundant: 0,
+            n_clusters: 2,
+            class_sep: 2.0,
+            flip_y: 0.02,
+        },
+        &mut Rng::seed_from_u64(22),
+    );
+    let fit = |threads: Option<usize>| {
+        let builder = Backbone::sparse_logistic()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(4)
+            .max_nonzeros(3)
+            .seed(5)
+            .execution(ExecutionPolicy::Sequential);
+        let builder = match threads {
+            None => builder,
+            Some(n) => builder.threads(n),
+        };
+        let mut bb = builder.build().unwrap();
+        bb.fit(&data.x, &data.y).unwrap().clone()
+    };
+    let seq = fit(None);
+    for threads in THREAD_COUNTS {
+        let par = fit(Some(threads));
+        assert_eq!(seq.beta, par.beta, "threads={threads}");
+        assert_eq!(seq.intercept, par.intercept, "threads={threads}");
+        assert_eq!(seq.support, par.support, "threads={threads}");
+        assert_eq!(seq.nll, par.nll, "threads={threads}");
+    }
+}
+
+#[test]
+fn decision_tree_parallel_fits_are_bit_identical() {
+    let data = classification::generate(
+        &classification::ClassificationConfig {
+            n: 250,
+            p: 30,
+            k: 4,
+            n_redundant: 2,
+            n_clusters: 4,
+            class_sep: 1.8,
+            flip_y: 0.03,
+        },
+        &mut Rng::seed_from_u64(23),
+    );
+    let fit = |threads: Option<usize>| {
+        let builder = Backbone::decision_tree()
+            .alpha(0.6)
+            .beta(0.5)
+            .num_subproblems(4)
+            .depth(2)
+            .seed(3)
+            .execution(ExecutionPolicy::Sequential);
+        let builder = match threads {
+            None => builder,
+            Some(n) => builder.threads(n),
+        };
+        let mut bb = builder.build().unwrap();
+        bb.fit(&data.x, &data.y).unwrap().clone()
+    };
+    let seq = fit(None);
+    for threads in THREAD_COUNTS {
+        let par = fit(Some(threads));
+        assert_eq!(seq.root, par.root, "threads={threads}");
+        assert_eq!(seq.bin_map, par.bin_map, "threads={threads}");
+        assert_eq!(seq.errors, par.errors, "threads={threads}");
+        assert_eq!(seq.backbone_features, par.backbone_features, "threads={threads}");
+    }
+}
+
+#[test]
+fn clustering_parallel_fits_are_bit_identical() {
+    let data = blobs::generate(
+        &blobs::BlobsConfig {
+            n: 14,
+            p: 2,
+            true_clusters: 3,
+            cluster_std: 0.4,
+            center_box: 8.0,
+            min_center_dist: 5.0,
+        },
+        &mut Rng::seed_from_u64(24),
+    );
+    let fit = |threads: Option<usize>| {
+        let builder = Backbone::clustering()
+            .beta(0.9)
+            .num_subproblems(4)
+            .n_clusters(3)
+            .seed(9)
+            .execution(ExecutionPolicy::Sequential);
+        let builder = match threads {
+            None => builder,
+            Some(n) => builder.threads(n),
+        };
+        let mut bb = builder.build().unwrap();
+        bb.fit_with_budget(&data.x, &Budget::seconds(120.0)).unwrap().clone()
+    };
+    let seq = fit(None);
+    for threads in THREAD_COUNTS {
+        let par = fit(Some(threads));
+        assert_eq!(seq.labels, par.labels, "threads={threads}");
+        assert_eq!(seq.objective, par.objective, "threads={threads}");
+    }
+}
+
+#[test]
+fn diagnostics_report_the_worker_count() {
+    let data = sparse_regression::generate(
+        &sparse_regression::SparseRegressionConfig { n: 60, p: 100, k: 3, rho: 0.1, snr: 5.0 },
+        &mut Rng::seed_from_u64(25),
+    );
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(4)
+        .max_nonzeros(3)
+        .threads(2)
+        .build()
+        .unwrap();
+    bb.fit(&data.x, &data.y).unwrap();
+    assert_eq!(bb.last_diagnostics.as_ref().unwrap().threads_used, 2);
+    assert_eq!(bb.last_diagnostics.as_ref().unwrap().subproblems_skipped, 0);
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(4)
+        .max_nonzeros(3)
+        .execution(ExecutionPolicy::Sequential)
+        .build()
+        .unwrap();
+    bb.fit(&data.x, &data.y).unwrap();
+    assert_eq!(bb.last_diagnostics.as_ref().unwrap().threads_used, 1);
+}

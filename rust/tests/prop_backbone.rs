@@ -15,14 +15,20 @@ use backbone_learn::util::Budget;
 struct OracleLearner {
     n_entities: usize,
     relevant: Vec<usize>,
-    subproblem_sizes: Vec<usize>,
     reduced_backbone: Vec<usize>,
+}
+
+impl OracleLearner {
+    fn new(n_entities: usize, relevant: Vec<usize>) -> Self {
+        Self { n_entities, relevant, reduced_backbone: vec![] }
+    }
 }
 
 impl BackboneLearner for OracleLearner {
     type Data = ();
     type Indicator = usize;
     type Model = usize; // backbone length
+    type Workspace = ();
 
     fn num_entities(&self, _d: &()) -> usize {
         self.n_entities
@@ -36,12 +42,12 @@ impl BackboneLearner for OracleLearner {
     }
 
     fn fit_subproblem(
-        &mut self,
+        &self,
         _d: &(),
         entities: &[usize],
         _rng: &mut Rng,
+        _ws: &mut (),
     ) -> anyhow::Result<Vec<usize>> {
-        self.subproblem_sizes.push(entities.len());
         // Invariant: entities are sorted, unique.
         assert!(entities.windows(2).all(|w| w[0] < w[1]), "unsorted subproblem");
         Ok(entities.iter().copied().filter(|j| self.relevant.contains(j)).collect())
@@ -69,13 +75,15 @@ fn random_params(g: &mut Gen) -> BackboneParams {
         } else {
             SubproblemStrategy::UtilityWeighted
         },
-        // Both policies must satisfy every coordinator invariant (the
-        // batch contract guarantees identical results).
+        // Both policies — and any worker count, including 0 = all cores —
+        // must satisfy every coordinator invariant (the batch contract
+        // guarantees identical results).
         execution: if g.bool_with(0.5) {
             ExecutionPolicy::Sequential
         } else {
             ExecutionPolicy::Parallel
         },
+        threads: g.usize_in(0..6),
         seed: g.usize_in(0..1_000_000) as u64,
     }
 }
@@ -87,12 +95,7 @@ fn prop_backbone_subset_of_universe_and_bmax_respected() {
         let n_rel = g.usize_in(1..n.max(2)).min(n);
         let relevant = g.subset(n, n_rel);
         let params = random_params(g);
-        let mut learner = OracleLearner {
-            n_entities: n,
-            relevant: relevant.clone(),
-            subproblem_sizes: vec![],
-            reduced_backbone: vec![],
-        };
+        let mut learner = OracleLearner::new(n, relevant.clone());
         let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
 
         // 1. Backbone is sorted & unique.
@@ -133,12 +136,8 @@ fn prop_subproblem_counts_follow_m_over_2t() {
             seed: 7,
             ..Default::default()
         };
-        let mut learner = OracleLearner {
-            n_entities: n,
-            relevant: (0..n).collect(), // everything relevant → never shrinks
-            subproblem_sizes: vec![],
-            reduced_backbone: vec![],
-        };
+        // Everything relevant → the universe never shrinks.
+        let mut learner = OracleLearner::new(n, (0..n).collect());
         let fit = run_backbone(&mut learner, &(), &params, &Budget::unlimited()).unwrap();
         for (t, it) in fit.diagnostics.iterations.iter().enumerate() {
             let expected = (((params.num_subproblems as f64) / 2f64.powi(t as i32)).ceil()
@@ -161,15 +160,35 @@ fn prop_determinism_same_seed_same_backbone() {
         let relevant = g.subset(n, n_rel);
         let params = random_params(g);
         let run = |relevant: Vec<usize>| {
-            let mut l = OracleLearner {
-                n_entities: n,
-                relevant,
-                subproblem_sizes: vec![],
-                reduced_backbone: vec![],
-            };
+            let mut l = OracleLearner::new(n, relevant);
             run_backbone(&mut l, &(), &params, &Budget::unlimited()).unwrap().backbone
         };
         assert_eq!(run(relevant.clone()), run(relevant));
+    });
+}
+
+#[test]
+fn prop_parallel_bit_identical_to_sequential_for_any_batch_and_thread_count() {
+    // The satellite determinism property: randomize batch size (M, β, n)
+    // against worker count; the parallel scheduler must reproduce the
+    // sequential schedule bit for bit — same backbone, same model, same
+    // reduced-fit input — for every combination.
+    property("parallel ≡ sequential under random batch/thread shapes", 60, |g| {
+        let n = g.usize_in(5..80);
+        let n_rel = g.usize_in(1..n.max(2)).min(n);
+        let relevant = g.subset(n, n_rel);
+        let mut params = random_params(g);
+        params.execution = ExecutionPolicy::Sequential;
+        params.threads = 1;
+        let run = |params: &BackboneParams| {
+            let mut l = OracleLearner::new(n, relevant.clone());
+            let fit = run_backbone(&mut l, &(), params, &Budget::unlimited()).unwrap();
+            (fit.backbone, fit.model, l.reduced_backbone)
+        };
+        let sequential = run(&params);
+        params.execution = ExecutionPolicy::Parallel;
+        params.threads = g.usize_in(0..6); // 0 = all available cores
+        assert_eq!(sequential, run(&params), "threads={}", params.threads);
     });
 }
 

@@ -170,13 +170,68 @@ fn main() {
         );
     }
 
+    // --- Blocked kernels vs scalar oracles (same shapes the fits hit). ------
+    {
+        let x = &big.x; // 500×5000
+        let v: Vec<f64> = (0..x.cols()).map(|i| ((i % 13) as f64 - 6.0) * 0.1).collect();
+        let w: Vec<f64> = (0..x.rows()).map(|i| ((i % 7) as f64 - 3.0) * 0.1).collect();
+        let t_blk = bench_n("matvec   blocked (500×5000)", 50, || {
+            std::hint::black_box(x.matvec(&v));
+        });
+        let t_nav = bench_n("matvec   naive   (500×5000)", 50, || {
+            std::hint::black_box(x.matvec_naive(&v));
+        });
+        println!("  → naive/blocked: {:.2}×\n", t_nav / t_blk);
+        let t_blk = bench_n("matvec_t blocked (500×5000)", 50, || {
+            std::hint::black_box(x.matvec_t(&w));
+        });
+        let t_nav = bench_n("matvec_t naive   (500×5000)", 50, || {
+            std::hint::black_box(x.matvec_t_naive(&w));
+        });
+        println!("  → naive/blocked: {:.2}×\n", t_nav / t_blk);
+        let sub = x.select_columns(&(0..400).collect::<Vec<_>>());
+        let t_blk = bench_n("gram     blocked (500×400)", 10, || {
+            std::hint::black_box(sub.gram());
+        });
+        let t_nav = bench_n("gram     naive   (500×400)", 10, || {
+            std::hint::black_box(sub.gram_naive());
+        });
+        println!("  → naive/blocked: {:.2}×\n", t_nav / t_blk);
+    }
+
+    // --- End-to-end backbone fit at the perf-gate shape (single thread). ----
+    // n=500, p=2000, k=10 sparse regression: the acceptance class the
+    // PR-over-PR perf trajectory (`cli bench`, BENCH_*.json) tracks.
+    {
+        let data = generate(
+            &SparseRegressionConfig { n: 500, p: 2000, k: 10, rho: 0.1, snr: 5.0 },
+            &mut Rng::seed_from_u64(71),
+        );
+        let t = bench_n("backbone SR fit (sequential, 500×2000, k=10)", 3, || {
+            let mut bb = Backbone::sparse_regression()
+                .alpha(0.5)
+                .beta(0.5)
+                .num_subproblems(8)
+                .max_nonzeros(10)
+                .seed(7)
+                .build()
+                .unwrap();
+            std::hint::black_box(bb.fit(&data.x, &data.y).unwrap().clone());
+        });
+        println!("  → {:.1} ms end-to-end\n", t * 1e3);
+    }
+
     // --- Matmul roofline reference. -----------------------------------------
     let a = Matrix::from_vec(256, 256, (0..256 * 256).map(|i| (i % 7) as f64).collect());
-    let t = bench_n("matmul 256×256×256 (native)", 10, || {
+    let t = bench_n("matmul 256×256×256 (blocked)", 10, || {
         std::hint::black_box(a.matmul(&a));
     });
     let flops = 2.0 * 256f64.powi(3);
-    println!("  → {:.2} GFLOP/s native matmul\n", flops / t / 1e9);
+    println!("  → {:.2} GFLOP/s blocked matmul", flops / t / 1e9);
+    let t_nav = bench_n("matmul 256×256×256 (naive)", 10, || {
+        std::hint::black_box(a.matmul_naive(&a));
+    });
+    println!("  → naive/blocked: {:.2}×\n", t_nav / t);
 
     println!("done.");
 }

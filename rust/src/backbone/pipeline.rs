@@ -289,14 +289,22 @@ impl FitPipeline {
             });
         }
         let keep = ((params.alpha * n_entities as f64).ceil() as usize).clamp(1, n_entities);
+        // Top-⌈α·p⌉ by O(p) expected-time selection instead of a full
+        // O(p log p) argsort; the comparator is total for finite
+        // utilities (desc, then index asc), so the kept set — and thus
+        // the universe — is identical to the sort-based formulation.
         let mut by_utility: Vec<usize> = (0..n_entities).collect();
-        by_utility.sort_by(|&a, &b| {
-            utilities[b]
-                .partial_cmp(&utilities[a])
+        let cmp = |a: &usize, b: &usize| {
+            utilities[*b]
+                .partial_cmp(&utilities[*a])
                 .unwrap_or(std::cmp::Ordering::Equal)
-                .then(a.cmp(&b))
-        });
-        let mut universe: Vec<usize> = by_utility.into_iter().take(keep).collect();
+                .then(a.cmp(b))
+        };
+        if keep < n_entities {
+            by_utility.select_nth_unstable_by(keep, cmp);
+        }
+        by_utility.truncate(keep);
+        let mut universe: Vec<usize> = by_utility;
         universe.sort_unstable();
 
         // --- Iterate -------------------------------------------------------

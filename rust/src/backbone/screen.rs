@@ -14,32 +14,59 @@
 
 use crate::linalg::{dot, variance, Matrix};
 
+/// Reusable screener scratch: one values buffer and one argsort index
+/// buffer shared across every feature of a [`gini_gain_utilities_with`]
+/// call (replacing a per-feature `Vec<(f64, f64)>` allocation + pair
+/// sort), plus the centered-target and accumulator buffers of
+/// [`correlation_utilities_with`]. One `Default` scratch serves any
+/// problem shape; contents never affect results.
+#[derive(Debug, Clone, Default)]
+pub struct ScreenScratch {
+    vals: Vec<f64>,
+    order: Vec<usize>,
+    yc: Vec<f64>,
+    num: Vec<f64>,
+    den: Vec<f64>,
+}
+
 /// |Pearson correlation| of each column of `x` with `y` — the sparse
 /// regression screener (marginal utility `s_j = |corr(x_j, y)|`).
-/// Zero-variance columns get utility 0.
+/// Zero-variance columns get utility 0. (One-shot scratch; see
+/// [`correlation_utilities_with`].)
 pub fn correlation_utilities(x: &Matrix, y: &[f64]) -> Vec<f64> {
+    correlation_utilities_with(x, y, &mut ScreenScratch::default())
+}
+
+/// [`correlation_utilities`] borrowing caller-owned scratch for the
+/// centered target and per-column accumulators; only the returned vector
+/// is allocated. Bit-identical to [`correlation_utilities`].
+pub fn correlation_utilities_with(x: &Matrix, y: &[f64], ws: &mut ScreenScratch) -> Vec<f64> {
     assert_eq!(x.rows(), y.len());
     let n = x.rows();
     if n == 0 {
         return vec![0.0; x.cols()];
     }
     let y_mean = crate::linalg::mean(y);
-    let yc: Vec<f64> = y.iter().map(|v| v - y_mean).collect();
-    let y_norm = dot(&yc, &yc).sqrt();
+    ws.yc.clear();
+    ws.yc.extend(y.iter().map(|v| v - y_mean));
+    let y_norm = dot(&ws.yc, &ws.yc).sqrt();
     let means = x.col_means();
-    let mut num = vec![0.0; x.cols()]; // Σ (x_ij - mean_j) yc_i
-    let mut den = vec![0.0; x.cols()]; // Σ (x_ij - mean_j)²
+    ws.num.clear();
+    ws.num.resize(x.cols(), 0.0); // Σ (x_ij - mean_j) yc_i
+    ws.den.clear();
+    ws.den.resize(x.cols(), 0.0); // Σ (x_ij - mean_j)²
     for i in 0..n {
         let row = x.row(i);
-        let w = yc[i];
+        let w = ws.yc[i];
         for (j, (&v, &m)) in row.iter().zip(&means).enumerate() {
             let c = v - m;
-            num[j] += c * w;
-            den[j] += c * c;
+            ws.num[j] += c * w;
+            ws.den[j] += c * c;
         }
     }
-    num.iter()
-        .zip(&den)
+    ws.num
+        .iter()
+        .zip(&ws.den)
         .map(|(&nu, &de)| {
             if de > 1e-24 && y_norm > 1e-12 {
                 (nu / (de.sqrt() * y_norm)).abs()
@@ -52,8 +79,19 @@ pub fn correlation_utilities(x: &Matrix, y: &[f64]) -> Vec<f64> {
 
 /// Univariate best-split Gini gain of each feature — the decision-tree
 /// screener. For feature j: max over thresholds of the impurity decrease
-/// of the single split `x_j ≤ t`.
+/// of the single split `x_j ≤ t`. (One-shot scratch; see
+/// [`gini_gain_utilities_with`].)
 pub fn gini_gain_utilities(x: &Matrix, y: &[f64]) -> Vec<f64> {
+    gini_gain_utilities_with(x, y, &mut ScreenScratch::default())
+}
+
+/// [`gini_gain_utilities`] borrowing caller-owned scratch: every feature
+/// reuses one values buffer and one stable argsort index buffer (labels
+/// are read through the sorted indices), so the per-feature cost is a
+/// sort, not a sort plus an allocation. The stable argsort by value
+/// induces exactly the tie order of the previous `Vec<(value, label)>`
+/// stable sort — results are bit-identical.
+pub fn gini_gain_utilities_with(x: &Matrix, y: &[f64], ws: &mut ScreenScratch) -> Vec<f64> {
     assert_eq!(x.rows(), y.len());
     let n = x.rows();
     let total_pos: f64 = y.iter().sum();
@@ -61,15 +99,20 @@ pub fn gini_gain_utilities(x: &Matrix, y: &[f64]) -> Vec<f64> {
         let p = total_pos / n as f64;
         2.0 * p * (1.0 - p)
     };
+    let (vals, order) = (&mut ws.vals, &mut ws.order);
     (0..x.cols())
         .map(|j| {
-            let mut vals: Vec<(f64, f64)> = (0..n).map(|i| (x.get(i, j), y[i])).collect();
-            vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            vals.clear();
+            vals.extend((0..n).map(|i| x.get(i, j)));
+            order.clear();
+            order.extend(0..n);
+            order.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
             let mut best_gain = 0.0f64;
             let mut left_pos = 0.0;
             for i in 0..n - 1 {
-                left_pos += vals[i].1;
-                if vals[i].0 == vals[i + 1].0 {
+                let (ra, rb) = (order[i], order[i + 1]);
+                left_pos += y[ra];
+                if vals[ra] == vals[rb] {
                     continue;
                 }
                 let nl = (i + 1) as f64;

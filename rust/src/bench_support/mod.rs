@@ -434,6 +434,217 @@ pub fn clustering_accuracy(x: &Matrix, labels: &[usize]) -> f64 {
     silhouette_score(x, labels)
 }
 
+// ---------------------------------------------------------------------------
+// Perf suite (`cli bench`): end-to-end fit timings as machine-readable rows
+// ---------------------------------------------------------------------------
+
+/// One timed configuration of the perf suite: a learner fitted end to end
+/// on a standard shape at a fixed seed, `reps` times.
+#[derive(Debug, Clone)]
+pub struct BenchFitResult {
+    /// Learner id: `sparse_regression` | `sparse_logistic` |
+    /// `decision_tree` | `clustering`.
+    pub learner: &'static str,
+    pub n: usize,
+    pub p: usize,
+    pub k: usize,
+    /// Subproblems per iteration (M).
+    pub m: usize,
+    /// Requested worker threads (0 = all cores, 1 = inline sequential).
+    pub threads: usize,
+    pub reps: usize,
+    pub mean_secs: f64,
+    pub min_secs: f64,
+    /// Headline quality metric — guards against "fast because wrong".
+    pub metric_name: &'static str,
+    pub metric: f64,
+}
+
+/// One standard shape of the perf suite.
+struct BenchShape {
+    learner: &'static str,
+    n: usize,
+    p: usize,
+    k: usize,
+    m: usize,
+}
+
+/// The perf-suite shapes. `quick` is the CI scale (finishes in well under
+/// a minute on one core); full scale includes the n=500, p=2000
+/// sparse-regression class the perf acceptance gate tracks.
+fn bench_shapes(quick: bool) -> Vec<BenchShape> {
+    if quick {
+        vec![
+            BenchShape { learner: "sparse_regression", n: 120, p: 600, k: 5, m: 5 },
+            BenchShape { learner: "sparse_logistic", n: 120, p: 200, k: 3, m: 4 },
+            BenchShape { learner: "decision_tree", n: 150, p: 20, k: 3, m: 4 },
+            BenchShape { learner: "clustering", n: 16, p: 2, k: 3, m: 3 },
+        ]
+    } else {
+        vec![
+            BenchShape { learner: "sparse_regression", n: 500, p: 2000, k: 10, m: 8 },
+            BenchShape { learner: "sparse_logistic", n: 300, p: 1000, k: 5, m: 6 },
+            BenchShape { learner: "decision_tree", n: 300, p: 40, k: 5, m: 5 },
+            BenchShape { learner: "clustering", n: 24, p: 2, k: 4, m: 4 },
+        ]
+    }
+}
+
+/// Run every learner's end-to-end fit on the standard shapes, once per
+/// entry of `threads_list` (the `cli bench` payload: typically `[1, 0]`,
+/// i.e. the inline sequential schedule and the all-cores scheduler —
+/// bit-identical results, so the ratio is pure scheduling speedup).
+/// Deterministic seeds; `budget_secs` bounds each fit's exact phase.
+pub fn run_bench_suite(
+    quick: bool,
+    reps: usize,
+    budget_secs: f64,
+    threads_list: &[usize],
+) -> Result<Vec<BenchFitResult>> {
+    let reps = reps.max(1);
+    let mut out = Vec::new();
+    for shape in bench_shapes(quick) {
+        for &threads in threads_list {
+            let mut secs = Vec::with_capacity(reps);
+            let mut metric = 0.0;
+            let metric_name;
+            match shape.learner {
+                "sparse_regression" => {
+                    let data = sparse_regression::generate(
+                        &sparse_regression::SparseRegressionConfig {
+                            n: shape.n,
+                            p: shape.p,
+                            k: shape.k,
+                            rho: 0.1,
+                            snr: 5.0,
+                        },
+                        &mut Rng::seed_from_u64(71),
+                    );
+                    metric_name = "r2";
+                    for _ in 0..reps {
+                        let mut bb = Backbone::sparse_regression()
+                            .alpha(0.5)
+                            .beta(0.5)
+                            .num_subproblems(shape.m)
+                            .max_nonzeros(shape.k)
+                            .threads(threads)
+                            .seed(7)
+                            .build()?;
+                        let watch = Stopwatch::start();
+                        let model = bb
+                            .fit_with_budget(&data.x, &data.y, &Budget::seconds(budget_secs))?
+                            .clone();
+                        secs.push(watch.elapsed_secs());
+                        metric = r2_score(&data.y, &model.predict(&data.x));
+                    }
+                }
+                "sparse_logistic" => {
+                    let data = classification::generate(
+                        &classification::ClassificationConfig {
+                            n: shape.n,
+                            p: shape.p,
+                            k: shape.k,
+                            n_redundant: 0,
+                            n_clusters: 2,
+                            class_sep: 1.5,
+                            flip_y: 0.05,
+                        },
+                        &mut Rng::seed_from_u64(72),
+                    );
+                    metric_name = "auc";
+                    for _ in 0..reps {
+                        let mut bb = Backbone::sparse_logistic()
+                            .alpha(0.5)
+                            .beta(0.5)
+                            .num_subproblems(shape.m)
+                            .max_nonzeros(shape.k)
+                            .threads(threads)
+                            .seed(7)
+                            .build()?;
+                        let watch = Stopwatch::start();
+                        bb.fit_with_budget(&data.x, &data.y, &Budget::seconds(budget_secs))?;
+                        secs.push(watch.elapsed_secs());
+                        metric = auc(&data.y, &bb.predict_proba(&data.x));
+                    }
+                }
+                "decision_tree" => {
+                    let data = classification::generate(
+                        &classification::ClassificationConfig {
+                            n: shape.n,
+                            p: shape.p,
+                            k: shape.k,
+                            n_redundant: 0,
+                            n_clusters: 4,
+                            class_sep: 1.5,
+                            flip_y: 0.05,
+                        },
+                        &mut Rng::seed_from_u64(73),
+                    );
+                    metric_name = "auc";
+                    for _ in 0..reps {
+                        let mut bb = Backbone::decision_tree()
+                            .alpha(0.6)
+                            .beta(0.5)
+                            .num_subproblems(shape.m)
+                            .depth(2)
+                            .threads(threads)
+                            .seed(7)
+                            .build()?;
+                        let watch = Stopwatch::start();
+                        bb.fit_with_budget(&data.x, &data.y, &Budget::seconds(budget_secs))?;
+                        secs.push(watch.elapsed_secs());
+                        metric = auc(&data.y, &bb.predict_proba(&data.x));
+                    }
+                }
+                "clustering" => {
+                    let data = blobs::generate(
+                        &blobs::BlobsConfig {
+                            n: shape.n,
+                            p: shape.p,
+                            true_clusters: (shape.k.saturating_sub(1)).max(2),
+                            cluster_std: 1.0,
+                            center_box: 10.0,
+                            min_center_dist: 4.0,
+                        },
+                        &mut Rng::seed_from_u64(74),
+                    );
+                    metric_name = "silhouette";
+                    for _ in 0..reps {
+                        let mut bb = Backbone::clustering()
+                            .beta(0.8)
+                            .num_subproblems(shape.m)
+                            .n_clusters(shape.k)
+                            .threads(threads)
+                            .seed(7)
+                            .build()?;
+                        let watch = Stopwatch::start();
+                        bb.fit_with_budget(&data.x, &Budget::seconds(budget_secs))?;
+                        secs.push(watch.elapsed_secs());
+                        metric = silhouette_score(&data.x, bb.labels());
+                    }
+                }
+                other => anyhow::bail!("unknown bench learner `{other}`"),
+            }
+            let mean_secs = mean(&secs);
+            let min_secs = secs.iter().copied().fold(f64::INFINITY, f64::min);
+            out.push(BenchFitResult {
+                learner: shape.learner,
+                n: shape.n,
+                p: shape.p,
+                k: shape.k,
+                m: shape.m,
+                threads,
+                reps,
+                mean_secs,
+                min_secs,
+                metric_name,
+                metric,
+            });
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -497,6 +708,25 @@ mod tests {
         assert_eq!(rows[0].method, "KMeans");
         assert_eq!(rows[1].method, "Exact");
         assert!(rows[2].alpha.is_none(), "clustering lists a = —");
+    }
+
+    #[test]
+    fn bench_suite_produces_one_row_per_shape_and_thread_count() {
+        // Sequential-only, single rep, tight budget: structure over speed.
+        let rows = run_bench_suite(true, 1, 5.0, &[1]).unwrap();
+        assert_eq!(rows.len(), 4);
+        let learners: Vec<&str> = rows.iter().map(|r| r.learner).collect();
+        assert_eq!(
+            learners,
+            vec!["sparse_regression", "sparse_logistic", "decision_tree", "clustering"]
+        );
+        for r in &rows {
+            assert_eq!(r.threads, 1);
+            assert_eq!(r.reps, 1);
+            assert!(r.mean_secs >= 0.0 && r.min_secs >= 0.0);
+            assert!(r.min_secs <= r.mean_secs + 1e-12);
+            assert!(r.metric.is_finite(), "{}: metric {}", r.learner, r.metric);
+        }
     }
 
     #[test]

@@ -1,0 +1,122 @@
+//! `bench` subcommand: the machine-readable perf harness.
+//!
+//! Runs each learner's end-to-end backbone fit on the standard shapes
+//! (`bench_support::run_bench_suite`), once on the inline sequential
+//! schedule (`threads = 1`) and once on the all-cores scheduler
+//! (`threads = 0`), and writes the timings as JSON — the `BENCH_*.json`
+//! perf trajectory every PR appends to and CI uploads as an artifact.
+//!
+//! ```text
+//! backbone-learn bench [--quick] [--reps N] [--budget SECS] [--out FILE]
+//! ```
+//!
+//! `--quick` is the CI scale (small shapes, 1 rep by default); without it
+//! the suite includes the n=500, p=2000 sparse-regression class the perf
+//! acceptance gate tracks. Fits are bit-identical across thread counts
+//! (the batch-scheduler contract), so the sequential/parallel ratio is
+//! pure scheduling speedup.
+//!
+//! JSON schema (`backbone-bench/v1`):
+//!
+//! ```json
+//! {
+//!   "schema": "backbone-bench/v1",
+//!   "quick": true,
+//!   "reps": 1,
+//!   "budget_secs": 20.0,
+//!   "threads_available": 8,
+//!   "results": [
+//!     { "learner": "sparse_regression", "n": 120, "p": 600, "k": 5,
+//!       "m": 5, "threads": 1, "reps": 1, "mean_secs": 0.42,
+//!       "min_secs": 0.42, "metric": { "name": "r2", "value": 0.93 } }
+//!   ]
+//! }
+//! ```
+
+use super::Args;
+use crate::backbone::pipeline::resolved_threads;
+use crate::bench_support::run_bench_suite;
+use crate::json::Json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+
+pub fn run(args: &Args) -> Result<i32> {
+    let quick = args.flag("quick");
+    let reps = args.get_usize("reps", if quick { 1 } else { 3 })?;
+    let budget_secs = args.get_f64("budget", if quick { 20.0 } else { 120.0 })?;
+    let out = args.get("out").unwrap_or_else(|| "BENCH_PR4.json".into());
+
+    eprintln!(
+        "[bench] {} scale: reps={reps} budget={budget_secs}s → {out}",
+        if quick { "quick" } else { "full" }
+    );
+    let results = run_bench_suite(quick, reps, budget_secs, &[1, 0])?;
+
+    println!(
+        "{:<18} {:>5} {:>5} {:>3} {:>3} {:>7} {:>10} {:>10} {:>12}",
+        "Learner", "n", "p", "k", "M", "thr", "mean (s)", "min (s)", "metric"
+    );
+    for r in &results {
+        println!(
+            "{:<18} {:>5} {:>5} {:>3} {:>3} {:>7} {:>10.3} {:>10.3} {:>6}={:.3}",
+            r.learner,
+            r.n,
+            r.p,
+            r.k,
+            r.m,
+            if r.threads == 0 { "all".into() } else { r.threads.to_string() },
+            r.mean_secs,
+            r.min_secs,
+            r.metric_name,
+            r.metric
+        );
+    }
+    // Sequential → parallel speedup per learner (same shape, same fit —
+    // the contract makes results identical, so this is pure scheduling).
+    for pair in results.chunks(2) {
+        if let [seq, par] = pair {
+            if par.mean_secs > 0.0 {
+                println!(
+                    "  {}: sequential/parallel = {:.2}×",
+                    seq.learner,
+                    seq.mean_secs / par.mean_secs
+                );
+            }
+        }
+    }
+
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    doc.insert("schema".into(), Json::String("backbone-bench/v1".into()));
+    doc.insert("quick".into(), Json::Bool(quick));
+    doc.insert("reps".into(), Json::Number(reps as f64));
+    doc.insert("budget_secs".into(), Json::Number(budget_secs));
+    doc.insert(
+        "threads_available".into(),
+        Json::Number(resolved_threads(0) as f64),
+    );
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut row: BTreeMap<String, Json> = BTreeMap::new();
+            row.insert("learner".into(), Json::String(r.learner.into()));
+            row.insert("n".into(), Json::Number(r.n as f64));
+            row.insert("p".into(), Json::Number(r.p as f64));
+            row.insert("k".into(), Json::Number(r.k as f64));
+            row.insert("m".into(), Json::Number(r.m as f64));
+            row.insert("threads".into(), Json::Number(r.threads as f64));
+            row.insert("reps".into(), Json::Number(r.reps as f64));
+            row.insert("mean_secs".into(), Json::Number(r.mean_secs));
+            row.insert("min_secs".into(), Json::Number(r.min_secs));
+            let mut metric: BTreeMap<String, Json> = BTreeMap::new();
+            metric.insert("name".into(), Json::String(r.metric_name.into()));
+            metric.insert("value".into(), Json::Number(r.metric));
+            row.insert("metric".into(), Json::Object(metric));
+            Json::Object(row)
+        })
+        .collect();
+    doc.insert("results".into(), Json::Array(rows));
+    let text = Json::Object(doc).to_string_pretty();
+    std::fs::write(&out, &text).with_context(|| format!("writing `{out}`"))?;
+    eprintln!("wrote {out}");
+    Ok(0)
+}

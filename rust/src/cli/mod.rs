@@ -4,6 +4,7 @@
 //! backbone-learn table1 [--block sr|dt|cl|all] [--full] [--threads N] [--config FILE] [--out FILE]
 //! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S --threads N] [--out FILE]
 //! backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl] [--threads N]
+//! backbone-learn bench  [--quick] [--reps N] [--budget SECS] [--out FILE]
 //! backbone-learn dump-config --problem sr|dt|cl [--full]
 //! backbone-learn artifacts [--dir artifacts]
 //! ```
@@ -19,6 +20,7 @@
 
 mod ablate;
 mod args;
+mod bench;
 mod fit;
 mod table1;
 
@@ -37,6 +39,8 @@ USAGE:
                         [--threads N] [--out FILE]   (diagnostics + metrics as JSON)
   backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
                         [--threads N]
+  backbone-learn bench  [--quick] [--reps N] [--budget SECS] [--out FILE]
+                        (end-to-end perf harness; timings as JSON)
   backbone-learn dump-config --problem sr|dt|cl [--full]
   backbone-learn artifacts [--dir DIR]
 
@@ -68,6 +72,7 @@ pub fn run(argv: &[String]) -> Result<i32> {
         "table1" => table1::run(&args),
         "fit" => fit::run(&args),
         "ablate" => ablate::run(&args),
+        "bench" => bench::run(&args),
         "dump-config" => {
             let problem = crate::config::Problem::parse(
                 &args.get("problem").unwrap_or_else(|| "sr".into()),

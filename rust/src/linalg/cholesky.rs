@@ -31,6 +31,33 @@ pub fn cholesky(a: &Matrix) -> Result<Matrix> {
     Ok(l)
 }
 
+/// Extend a Cholesky factorization by one bordered row/column in O(m²).
+///
+/// Given the lower factor `l` of an m×m SPD matrix `A` and the bordered
+/// matrix `A' = [[A, c], [cᵀ, d]]` (`cross` = c, `diag` = d), returns the
+/// (m+1)×(m+1) lower factor of `A'` without refactorizing: the new row is
+/// `w = L⁻¹c` (one forward substitution) and the new pivot is
+/// `√(d − wᵀw)`. Fails if the bordered matrix is not (numerically)
+/// positive definite. This is the incremental primitive behind the L0
+/// swap search's O(k²) trial evaluation (`solvers::cd::l0`).
+pub fn cholesky_bordered(l: &Matrix, cross: &[f64], diag: f64) -> Result<Matrix> {
+    let m = l.rows();
+    assert_eq!(m, l.cols(), "cholesky_bordered: factor must be square");
+    assert_eq!(m, cross.len(), "cholesky_bordered: border length mismatch");
+    let w = solve_lower(l, cross);
+    let d = diag - dot(&w, &w);
+    if d <= 0.0 {
+        bail!("cholesky_bordered: bordered matrix not positive definite (d={d})");
+    }
+    let mut out = Matrix::zeros(m + 1, m + 1);
+    for i in 0..m {
+        out.row_mut(i)[..=i].copy_from_slice(&l.row(i)[..=i]);
+    }
+    out.row_mut(m)[..m].copy_from_slice(&w);
+    out.set(m, m, d.sqrt());
+    Ok(out)
+}
+
 /// Solve `L y = b` (forward substitution) for lower-triangular `L`.
 pub fn solve_lower(l: &Matrix, b: &[f64]) -> Vec<f64> {
     let n = l.rows();
@@ -117,6 +144,25 @@ mod tests {
                 assert!((recon.get(i, j) - a.get(i, j)).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn bordered_factor_matches_full_factorization() {
+        let a = Matrix::from_rows(&[
+            vec![6.0, 2.0, 1.0],
+            vec![2.0, 5.0, 2.0],
+            vec![1.0, 2.0, 4.0],
+        ]);
+        let l2 = cholesky(&a.select_columns(&[0, 1]).select_rows(&[0, 1])).unwrap();
+        let l3 = cholesky_bordered(&l2, &[1.0, 2.0], 4.0).unwrap();
+        let full = cholesky(&a).unwrap();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((l3.get(i, j) - full.get(i, j)).abs() < 1e-12);
+            }
+        }
+        // Indefinite border must be rejected.
+        assert!(cholesky_bordered(&l2, &[10.0, 10.0], 1.0).is_err());
     }
 
     #[test]

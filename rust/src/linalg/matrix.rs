@@ -1,6 +1,30 @@
 //! Row-major dense matrix.
 
 use std::fmt;
+use std::sync::OnceLock;
+
+/// Lazily-computed squared-norm caches ([`Matrix::row_sq_norms`] /
+/// [`Matrix::col_sq_norms`]). Invalidated wholesale by every `&mut`
+/// accessor; excluded from equality and (being `OnceLock`) safe to share
+/// across the parallel scheduler's worker threads.
+#[derive(Debug, Default)]
+struct NormCache {
+    rows: OnceLock<Vec<f64>>,
+    cols: OnceLock<Vec<f64>>,
+}
+
+impl Clone for NormCache {
+    fn clone(&self) -> Self {
+        let fresh = NormCache::default();
+        if let Some(r) = self.rows.get() {
+            let _ = fresh.rows.set(r.clone());
+        }
+        if let Some(c) = self.cols.get() {
+            let _ = fresh.cols.set(c.clone());
+        }
+        fresh
+    }
+}
 
 /// Dense row-major `f64` matrix.
 ///
@@ -8,11 +32,43 @@ use std::fmt;
 /// crate are (i) per-sample row scans (tree solvers, k-means) and (ii)
 /// column gathers into contiguous sub-matrices (subproblem construction),
 /// which we materialize explicitly via [`Matrix::select_columns`].
-#[derive(Clone, PartialEq)]
+///
+/// Squared row/column norms are memoized on first use (see
+/// [`Matrix::row_sq_norms`]); every mutating accessor drops the memo, so
+/// cached values can never go stale. Equality and `Debug` ignore the
+/// cache.
 pub struct Matrix {
     rows: usize,
     cols: usize,
     data: Vec<f64>,
+    norms: NormCache,
+}
+
+impl Clone for Matrix {
+    fn clone(&self) -> Self {
+        Self {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.clone(),
+            norms: self.norms.clone(),
+        }
+    }
+
+    /// Field-wise `clone_from` so scratch matrices (`Matrix` fields in
+    /// solver workspaces) reuse their existing buffer instead of
+    /// reallocating per call.
+    fn clone_from(&mut self, source: &Self) {
+        self.rows = source.rows;
+        self.cols = source.cols;
+        self.data.clone_from(&source.data);
+        self.norms = source.norms.clone();
+    }
+}
+
+impl PartialEq for Matrix {
+    fn eq(&self, other: &Self) -> bool {
+        self.rows == other.rows && self.cols == other.cols && self.data == other.data
+    }
 }
 
 impl Default for Matrix {
@@ -39,13 +95,13 @@ impl fmt::Debug for Matrix {
 impl Matrix {
     /// All-zeros matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
-        Self { rows, cols, data: vec![0.0; rows * cols] }
+        Self { rows, cols, data: vec![0.0; rows * cols], norms: NormCache::default() }
     }
 
     /// Build from a flat row-major buffer.
     pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
         assert_eq!(data.len(), rows * cols, "from_vec: buffer size mismatch");
-        Self { rows, cols, data }
+        Self { rows, cols, data, norms: NormCache::default() }
     }
 
     /// Build from nested rows.
@@ -57,7 +113,7 @@ impl Matrix {
             assert_eq!(row.len(), c, "from_rows: ragged rows");
             data.extend_from_slice(row);
         }
-        Self { rows: r, cols: c, data }
+        Self { rows: r, cols: c, data, norms: NormCache::default() }
     }
 
     /// Identity matrix.
@@ -88,7 +144,44 @@ impl Matrix {
     #[inline]
     pub fn set(&mut self, i: usize, j: usize, v: f64) {
         debug_assert!(i < self.rows && j < self.cols);
+        self.invalidate_norms();
         self.data[i * self.cols + j] = v;
+    }
+
+    /// Drop the memoized squared norms (called by every `&mut` accessor;
+    /// cheap — no allocation).
+    #[inline]
+    fn invalidate_norms(&mut self) {
+        self.norms = NormCache::default();
+    }
+
+    /// Squared Euclidean norm of every row, memoized on first call.
+    ///
+    /// Caching contract: the memo is dropped by every mutating accessor
+    /// (`set`, `row_mut`, `data_mut`, `select_*_into` on the output,
+    /// `standardize_columns`), so the returned slice always reflects the
+    /// current contents. First call is O(rows·cols); subsequent calls on
+    /// an unmutated matrix are O(1). Thread-safe: concurrent first calls
+    /// race benignly inside `OnceLock`.
+    pub fn row_sq_norms(&self) -> &[f64] {
+        self.norms.rows.get_or_init(|| {
+            (0..self.rows).map(|i| super::dot(self.row(i), self.row(i))).collect()
+        })
+    }
+
+    /// Squared Euclidean norm of every column, memoized on first call
+    /// (same caching contract as [`Matrix::row_sq_norms`]). Computed in a
+    /// single row-major pass.
+    pub fn col_sq_norms(&self) -> &[f64] {
+        self.norms.cols.get_or_init(|| {
+            let mut out = vec![0.0; self.cols];
+            for i in 0..self.rows {
+                for (o, &v) in out.iter_mut().zip(self.row(i)) {
+                    *o += v * v;
+                }
+            }
+            out
+        })
     }
 
     /// Contiguous view of row `i`.
@@ -100,6 +193,7 @@ impl Matrix {
     /// Mutable view of row `i`.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        self.invalidate_norms();
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
@@ -117,6 +211,7 @@ impl Matrix {
     /// Flat mutable row-major data.
     #[inline]
     pub fn data_mut(&mut self) -> &mut [f64] {
+        self.invalidate_norms();
         &mut self.data
     }
 
@@ -150,6 +245,7 @@ impl Matrix {
     /// allocation-free variant the subproblem workspaces use so repeated
     /// fits reuse one design-matrix buffer.
     pub fn select_columns_into(&self, cols: &[usize], out: &mut Matrix) {
+        out.invalidate_norms();
         out.rows = self.rows;
         out.cols = cols.len();
         out.data.clear();
@@ -174,6 +270,7 @@ impl Matrix {
 
     /// Row selection into a caller-owned matrix (reshaped to fit).
     pub fn select_rows_into(&self, rows: &[usize], out: &mut Matrix) {
+        out.invalidate_norms();
         out.rows = rows.len();
         out.cols = self.cols;
         out.data.clear();
@@ -255,6 +352,7 @@ impl Matrix {
         let stds = self.col_stds();
         let scale: Vec<f64> =
             stds.iter().map(|&s| if s > 1e-12 { s } else { 1.0 }).collect();
+        self.invalidate_norms();
         for i in 0..self.rows {
             let row = &mut self.data[i * self.cols..(i + 1) * self.cols];
             for j in 0..row.len() {
@@ -323,6 +421,30 @@ mod tests {
         assert!((params[0].0 - 3.0).abs() < 1e-12);
         assert!((params[1].1 - 1.0).abs() < 1e-12);
         assert_eq!(m.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn sq_norm_caches_track_mutation() {
+        let mut m = Matrix::from_rows(&[vec![3.0, 4.0], vec![0.0, 2.0]]);
+        assert_eq!(m.row_sq_norms(), &[25.0, 4.0]);
+        assert_eq!(m.col_sq_norms(), &[9.0, 20.0]);
+        // Cached: a second call sees the same values.
+        assert_eq!(m.row_sq_norms(), &[25.0, 4.0]);
+        // Any mutation drops the memo.
+        m.set(0, 0, 0.0);
+        assert_eq!(m.row_sq_norms(), &[16.0, 4.0]);
+        m.row_mut(1)[1] = 1.0;
+        assert_eq!(m.col_sq_norms(), &[0.0, 17.0]);
+        // select_*_into invalidates the *output* buffer's memo.
+        let mut buf = Matrix::from_rows(&[vec![9.0]]);
+        let _ = buf.row_sq_norms();
+        m.select_columns_into(&[1], &mut buf);
+        assert_eq!(buf.row_sq_norms(), &[16.0, 1.0]);
+        // Clones keep (an equally valid copy of) the memo; equality
+        // ignores it.
+        let c = m.clone();
+        assert_eq!(c, m);
+        assert_eq!(c.row_sq_norms(), m.row_sq_norms());
     }
 
     #[test]

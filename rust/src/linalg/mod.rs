@@ -2,8 +2,12 @@
 //!
 //! All solvers operate on small-to-medium dense problems (the paper's exact
 //! methods cap out around `n=500`, `p=5000`), so a straightforward row-major
-//! `f64` matrix with cache-blocked matmul, Cholesky, and least-squares is
-//! the right substrate — no sparse structures or external BLAS.
+//! `f64` matrix with cache-blocked 4-accumulator kernels, Cholesky
+//! (including the O(k²) bordered update [`cholesky_bordered`]), and
+//! least-squares is the right substrate — no sparse structures or external
+//! BLAS. The original scalar loops are retained as `*_naive` property-test
+//! oracles; squared row/column norms are memoized per matrix (see
+//! [`Matrix::row_sq_norms`]) with invalidation on every mutation.
 
 mod cholesky;
 mod matrix;

@@ -108,38 +108,46 @@ fn gini(pos: f64, total: f64) -> f64 {
     2.0 * p * (1.0 - p)
 }
 
-/// Reusable scratch for [`cart_fit_with`]: the per-feature (value, label)
-/// sort buffer that split search fills once per (node, feature). One
-/// `Default` workspace serves any problem shape; contents never affect
-/// results.
+/// Reusable scratch for [`cart_fit_with`]: one feature-values buffer and
+/// one argsort index buffer that split search refills once per (node,
+/// feature) — labels are read through the sorted indices instead of
+/// sorting `(value, label)` pairs. One `Default` workspace serves any
+/// problem shape; contents never affect results.
 #[derive(Debug, Clone, Default)]
 pub struct CartWorkspace {
-    vals: Vec<(f64, f64)>,
+    vals: Vec<f64>,
+    order: Vec<usize>,
 }
 
 /// Best split of `rows` on `feature`: returns (threshold, weighted child
-/// impurity, n_left) or None if no valid split exists. `vals` is a
-/// caller-owned sort buffer (overwritten before use).
+/// impurity, n_left) or None if no valid split exists. `ws` provides the
+/// caller-owned value/argsort buffers (overwritten before use). The
+/// stable argsort by value induces exactly the tie order of the previous
+/// pair sort — results are bit-identical.
 fn best_split_on_feature(
     x: &Matrix,
     y: &[f64],
     rows: &[usize],
     feature: usize,
     min_leaf: usize,
-    vals: &mut Vec<(f64, f64)>,
+    ws: &mut CartWorkspace,
 ) -> Option<(f64, f64, usize)> {
     let n = rows.len();
+    let (vals, order) = (&mut ws.vals, &mut ws.order);
     vals.clear();
-    vals.extend(rows.iter().map(|&i| (x.get(i, feature), y[i])));
-    vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-    let total_pos: f64 = vals.iter().map(|v| v.1).sum();
+    vals.extend(rows.iter().map(|&i| x.get(i, feature)));
+    order.clear();
+    order.extend(0..n);
+    order.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
+    let total_pos: f64 = rows.iter().map(|&i| y[i]).sum();
 
     let mut best: Option<(f64, f64, usize)> = None;
     let mut left_pos = 0.0;
     for i in 0..n - 1 {
-        left_pos += vals[i].1;
+        let (ra, rb) = (order[i], order[i + 1]);
+        left_pos += y[rows[ra]];
         // Only split between distinct values.
-        if vals[i].0 == vals[i + 1].0 {
+        if vals[ra] == vals[rb] {
             continue;
         }
         let n_left = i + 1;
@@ -150,7 +158,7 @@ fn best_split_on_feature(
         let impurity = (n_left as f64 * gini(left_pos, n_left as f64)
             + n_right as f64 * gini(total_pos - left_pos, n_right as f64))
             / n as f64;
-        let threshold = 0.5 * (vals[i].0 + vals[i + 1].0);
+        let threshold = 0.5 * (vals[ra] + vals[rb]);
         if best.map_or(true, |(_, bi, _)| impurity < bi) {
             best = Some((threshold, impurity, n_left));
         }
@@ -198,7 +206,7 @@ impl<'a> Builder<'a> {
                 &rows,
                 f,
                 self.cfg.min_samples_leaf,
-                &mut self.ws.vals,
+                self.ws,
             ) {
                 if best.map_or(true, |(_, _, bi, _)| imp < bi) {
                     best = Some((f, thr, imp, n_left));

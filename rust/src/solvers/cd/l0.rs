@@ -7,13 +7,40 @@
 //! for the most correlated excluded ones), the combination L0Learn's
 //! `CDPSI` algorithm popularized.
 //!
+//! Hot-path structure (the per-core cost the backbone multiplies by M
+//! subproblems per iteration):
+//!
+//! - the polish builds the support's **centered Gram system**
+//!   (`XsᵀXs`, `Xsᵀy`) in one O(nk²) row-major pass — no column gather,
+//!   no matrix clone, no centering copy — and solves it by Cholesky;
+//! - each swap-search trial is evaluated **incrementally**: the trial
+//!   shares the retained (k−1)² Gram block with the current support, so
+//!   the data-dependent work is only the candidate column's cross
+//!   products (O(nk)) plus a bordered Cholesky update
+//!   ([`crate::linalg::cholesky_bordered`], O(k²)) on top of an O(k³)
+//!   refactorization of the retained block (k = support size, tiny next
+//!   to n) — versus the previous per-trial column gather + centering +
+//!   full normal-equations rebuild (O(nk² + k³), dominated by the
+//!   O(nk²) Gram rebuild);
+//! - trial objectives use the Gram quadratic form
+//!   `yᵀy − 2βᵀb + βᵀGβ + λ₂‖β‖²` (O(k²)); the returned model's
+//!   objective is recomputed once from the definition via the fused
+//!   [`Matrix::residual_into`] pass.
+//!
+//! The straightforward full-refit polish is retained as
+//! [`polish_support`] — the property-test oracle the Gram-cached path
+//! ([`polish_support_cached`]) is checked against.
+//!
 //! This routine is the default `fit_subproblem` for the sparse-regression
 //! backbone. When a PJRT artifact of matching shape is available, the IHT
 //! iterations run through the AOT-compiled JAX/Pallas kernel instead (see
 //! `runtime::iht`); this pure-Rust implementation is the fallback and the
 //! cross-check oracle.
 
-use crate::linalg::{dot, least_squares, Matrix};
+use crate::linalg::{
+    cholesky, cholesky_bordered, dot, least_squares, solve_lower, solve_lower_transpose,
+    Matrix,
+};
 
 /// L0 heuristic hyperparameters.
 #[derive(Debug, Clone)]
@@ -28,11 +55,27 @@ pub struct L0Config {
     pub patience: usize,
     /// Local-swap improvement rounds after IHT.
     pub swap_rounds: usize,
+    /// Optional warm start for the IHT phase: a dense length-p iterate
+    /// (e.g. the relaxation solution of an enclosing branch-and-bound
+    /// node, or a neighbouring cardinality's fit) projected onto the
+    /// top-k magnitude set before the first iteration. Ignored when the
+    /// length does not match the problem. Passing the warm start
+    /// explicitly — instead of smuggling it through workspace state —
+    /// keeps every fit a pure function of its inputs, which is the batch
+    /// scheduler's determinism contract.
+    pub warm_start: Option<Vec<f64>>,
 }
 
 impl Default for L0Config {
     fn default() -> Self {
-        Self { k: 10, lambda2: 1e-3, max_iter: 100, patience: 3, swap_rounds: 2 }
+        Self {
+            k: 10,
+            lambda2: 1e-3,
+            max_iter: 100,
+            patience: 3,
+            swap_rounds: 2,
+            warm_start: None,
+        }
     }
 }
 
@@ -49,8 +92,10 @@ pub struct L0Model {
 }
 
 /// Reusable scratch buffers for [`l0_fit_with`]: the IHT iterate, its
-/// gradient/residual vectors and the top-k index buffer, plus a reusable
-/// design-matrix buffer for callers that restrict columns per fit.
+/// gradient/residual vectors and the top-k index buffer, the support
+/// membership mask of the swap search, the Gram-cached polish state
+/// ([`PolishCache`]), plus a reusable design-matrix buffer for callers
+/// that restrict columns per fit.
 ///
 /// One workspace serves any problem shape — buffers are resized on entry —
 /// so a single `Default`-constructed workspace can be reused across every
@@ -66,6 +111,285 @@ pub struct L0Workspace {
     grad: Vec<f64>,
     z: Vec<f64>,
     idx: Vec<usize>,
+    /// Support membership mask of the swap search (length p, reset per
+    /// use) — replaces the O(p·k) `support.contains` scan of the
+    /// candidate loop with O(p) lookups.
+    mask: Vec<bool>,
+    cache: PolishCache,
+}
+
+/// Centered Gram system of one support: `G = Σᵢ(xᵢ−m)(xᵢ−m)ᵀ`,
+/// `b = Σᵢ(xᵢ−m)(yᵢ−ȳ)`, plus the column means and y statistics needed
+/// to recover the intercept and the objective without touching `X`
+/// again. Built in one O(nk²) row-major pass; kept in sync across
+/// accepted swaps by splicing in the already-computed candidate cross
+/// products (O(k)) instead of rebuilding.
+#[derive(Debug, Clone, Default)]
+struct PolishCache {
+    /// Cache column order: feature ids, insertion order (not sorted).
+    features: Vec<usize>,
+    g: Matrix,
+    xty: Vec<f64>,
+    means: Vec<f64>,
+    y_mean: f64,
+    /// Centered yᵀy.
+    yty: f64,
+    /// Row-gather scratch of the build pass.
+    srow: Vec<f64>,
+    /// Scratch for `G + λI` submatrices handed to Cholesky.
+    gl: Matrix,
+    /// Candidate cross-product scratch of the swap trials.
+    cross: Vec<f64>,
+    /// Retained-feature ids scratch of the swap trials.
+    rfeats: Vec<usize>,
+    /// Retained cache-position scratch of the swap trials.
+    rpos: Vec<usize>,
+    /// Right-hand-side scratch of the swap trials.
+    bbuf: Vec<f64>,
+}
+
+/// Everything a swap trial computes: the bordered solve's coefficients
+/// (retained order then candidate), the trial objective, and the
+/// candidate column's statistics (spliced into the cache on acceptance).
+struct SwapEval {
+    beta: Vec<f64>,
+    intercept: f64,
+    objective: f64,
+    cross: Vec<f64>,
+    diag: f64,
+    xty: f64,
+    mean: f64,
+}
+
+impl PolishCache {
+    /// One-pass build of the centered Gram system for `support`: O(nk²).
+    fn build(&mut self, x: &Matrix, y: &[f64], support: &[usize]) {
+        let k = support.len();
+        let n = x.rows();
+        self.features.clear();
+        self.features.extend_from_slice(support);
+        if self.g.rows() != k || self.g.cols() != k {
+            self.g = Matrix::zeros(k, k);
+        } else {
+            self.g.data_mut().iter_mut().for_each(|v| *v = 0.0);
+        }
+        self.xty.clear();
+        self.xty.resize(k, 0.0);
+        self.means.clear();
+        self.means.resize(k, 0.0);
+        self.srow.clear();
+        self.srow.resize(k, 0.0);
+        let mut y_sum = 0.0;
+        let mut y_sq = 0.0;
+        let gd = self.g.data_mut();
+        for i in 0..n {
+            let row = x.row(i);
+            for (jj, &j) in support.iter().enumerate() {
+                self.srow[jj] = row[j];
+            }
+            let yi = y[i];
+            y_sum += yi;
+            y_sq += yi * yi;
+            for a in 0..k {
+                let sa = self.srow[a];
+                self.means[a] += sa;
+                self.xty[a] += sa * yi;
+                let ga = &mut gd[a * k + a..(a + 1) * k];
+                let sr = &self.srow[a..];
+                for (b, gb) in ga.iter_mut().enumerate() {
+                    *gb += sa * sr[b];
+                }
+            }
+        }
+        let nf = (n.max(1)) as f64;
+        self.y_mean = y_sum / nf;
+        self.yty = y_sq - nf * self.y_mean * self.y_mean;
+        for m in self.means.iter_mut() {
+            *m /= nf;
+        }
+        for a in 0..k {
+            self.xty[a] -= nf * self.means[a] * self.y_mean;
+            for b in a..k {
+                let v = gd[a * k + b] - nf * self.means[a] * self.means[b];
+                gd[a * k + b] = v;
+                gd[b * k + a] = v;
+            }
+        }
+    }
+
+    /// Solve `(G + λ₂I)β = b` by Cholesky with the same jitter fallback
+    /// as [`crate::linalg::least_squares`]; `None` if even the jittered
+    /// system is not positive definite (degenerate support).
+    fn solve(&mut self, lambda2: f64) -> Option<Vec<f64>> {
+        let k = self.features.len();
+        if k == 0 {
+            return Some(Vec::new());
+        }
+        self.gl.clone_from(&self.g); // field-wise: reuses gl's buffer
+        {
+            let gld = self.gl.data_mut();
+            for i in 0..k {
+                gld[i * k + i] += lambda2;
+            }
+        }
+        let l = match cholesky(&self.gl) {
+            Ok(l) => l,
+            Err(_) => {
+                let jitter = 1e-8 * (self.gl.frobenius_norm() / k as f64).max(1e-8);
+                let gld = self.gl.data_mut();
+                for i in 0..k {
+                    gld[i * k + i] += jitter;
+                }
+                cholesky(&self.gl).ok()?
+            }
+        };
+        let w = solve_lower(&l, &self.xty);
+        Some(solve_lower_transpose(&l, &w))
+    }
+
+    /// Ridge objective `yᵀy − 2βᵀb + βᵀGβ + λ₂‖β‖²` of coefficients in
+    /// cache order — O(k²), no pass over the data. Exact for any β (not
+    /// just stationary points), so jittered solves stay comparable.
+    fn objective_for(&self, beta_s: &[f64], lambda2: f64) -> f64 {
+        let k = self.features.len();
+        debug_assert_eq!(beta_s.len(), k);
+        let mut quad = 0.0;
+        for a in 0..k {
+            quad += beta_s[a] * dot(self.g.row(a), beta_s);
+        }
+        self.yty - 2.0 * dot(beta_s, &self.xty) + quad + lambda2 * dot(beta_s, beta_s)
+    }
+
+    /// Intercept recovering the uncentered model: `ȳ − Σ βⱼ mⱼ`.
+    fn intercept_for(&self, beta_s: &[f64]) -> f64 {
+        self.y_mean - dot(beta_s, &self.means)
+    }
+
+    /// Evaluate swapping the support member at cache position `w` for the
+    /// excluded feature `cand`: O(nk) candidate cross products + O(k²)
+    /// bordered Cholesky/solve (plus one O(k³) factorization of the
+    /// retained block, k = support size). `None` when the trial system is
+    /// numerically degenerate — the caller treats that as non-improving.
+    fn eval_swap(
+        &mut self,
+        x: &Matrix,
+        y: &[f64],
+        w: usize,
+        cand: usize,
+        lambda2: f64,
+    ) -> Option<SwapEval> {
+        let k = self.features.len();
+        let n = x.rows();
+        let nf = (n.max(1)) as f64;
+        let km = k - 1;
+        self.rpos.clear();
+        self.rpos.extend((0..k).filter(|&a| a != w));
+        self.rfeats.clear();
+        for &a in &self.rpos {
+            let f = self.features[a];
+            self.rfeats.push(f);
+        }
+        // Retained (k−1)² block of G, ridge added — shared with the
+        // current support, no recomputation.
+        if self.gl.rows() != km || self.gl.cols() != km {
+            self.gl = Matrix::zeros(km, km);
+        }
+        {
+            let gld = self.gl.data_mut();
+            for i in 0..km {
+                for j in 0..km {
+                    gld[i * km + j] = self.g.get(self.rpos[i], self.rpos[j])
+                        + if i == j { lambda2 } else { 0.0 };
+                }
+            }
+        }
+        let l_minus = cholesky(&self.gl).ok()?;
+
+        // Candidate column statistics + cross products: one O(nk) pass.
+        self.cross.clear();
+        self.cross.resize(km, 0.0);
+        let mut diag_raw = 0.0;
+        let mut xty_raw = 0.0;
+        let mut sum_c = 0.0;
+        for i in 0..n {
+            let row = x.row(i);
+            let xc = row[cand];
+            sum_c += xc;
+            diag_raw += xc * xc;
+            xty_raw += xc * y[i];
+            if xc != 0.0 {
+                for (j, &f) in self.rfeats.iter().enumerate() {
+                    self.cross[j] += xc * row[f];
+                }
+            }
+        }
+        let mean_c = sum_c / nf;
+        for j in 0..km {
+            self.cross[j] -= nf * mean_c * self.means[self.rpos[j]];
+        }
+        let diag_c = diag_raw - nf * mean_c * mean_c;
+        let xty_c = xty_raw - nf * mean_c * self.y_mean;
+
+        // Bordered factor + solve: O(k²).
+        let l = cholesky_bordered(&l_minus, &self.cross, diag_c + lambda2).ok()?;
+        self.bbuf.clear();
+        for &a in &self.rpos {
+            self.bbuf.push(self.xty[a]);
+        }
+        self.bbuf.push(xty_c);
+        let t = solve_lower(&l, &self.bbuf);
+        let beta = solve_lower_transpose(&l, &t);
+
+        // Quadratic-form objective over the bordered Gram.
+        let mut quad = 0.0;
+        for i in 0..km {
+            let gi = self.g.row(self.rpos[i]);
+            let mut s = 0.0;
+            for j in 0..km {
+                s += gi[self.rpos[j]] * beta[j];
+            }
+            quad += beta[i] * s;
+        }
+        let b_last = beta[km];
+        quad += 2.0 * b_last * dot(&beta[..km], &self.cross) + b_last * b_last * diag_c;
+        let objective =
+            self.yty - 2.0 * dot(&beta, &self.bbuf) + quad + lambda2 * dot(&beta, &beta);
+
+        let mut intercept = self.y_mean - b_last * mean_c;
+        for j in 0..km {
+            intercept -= beta[j] * self.means[self.rpos[j]];
+        }
+
+        Some(SwapEval {
+            beta,
+            intercept,
+            objective,
+            cross: self.cross.clone(),
+            diag: diag_c,
+            xty: xty_c,
+            mean: mean_c,
+        })
+    }
+
+    /// Splice an accepted swap into the cache: position `w` becomes
+    /// feature `cand` with the trial's already-computed column statistics
+    /// — O(k), no data pass.
+    fn accept_swap(&mut self, w: usize, cand: usize, eval: &SwapEval) {
+        let k = self.features.len();
+        self.features[w] = cand;
+        self.means[w] = eval.mean;
+        self.xty[w] = eval.xty;
+        let mut j = 0;
+        for a in 0..k {
+            if a == w {
+                continue;
+            }
+            self.g.set(w, a, eval.cross[j]);
+            self.g.set(a, w, eval.cross[j]);
+            j += 1;
+        }
+        self.g.set(w, w, eval.diag);
+    }
 }
 
 impl L0Model {
@@ -79,21 +403,34 @@ fn top_k_indices(v: &[f64], k: usize) -> Vec<usize> {
     top_k_indices_with(v, k, &mut Vec::new())
 }
 
-/// [`top_k_indices`] reusing a caller-owned index buffer for the sort.
+/// [`top_k_indices`] reusing a caller-owned index buffer. Uses an O(p)
+/// expected-time selection instead of a full sort; the comparator is a
+/// total order (magnitude desc, then index asc), so the selected set —
+/// and therefore the result — is identical to the sort-based oracle.
 fn top_k_indices_with(v: &[f64], k: usize, idx: &mut Vec<usize>) -> Vec<usize> {
     idx.clear();
     idx.extend(0..v.len());
-    idx.sort_by(|&a, &b| {
-        v[b].abs().partial_cmp(&v[a].abs()).unwrap().then(a.cmp(&b))
-    });
-    let mut top: Vec<usize> = idx.iter().copied().take(k).collect();
+    let k = k.min(idx.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let cmp = |a: &usize, b: &usize| {
+        v[*b].abs().partial_cmp(&v[*a].abs()).unwrap().then(a.cmp(b))
+    };
+    if k < idx.len() {
+        idx.select_nth_unstable_by(k, cmp);
+    }
+    let mut top: Vec<usize> = idx[..k].to_vec();
     top.sort_unstable();
     top
 }
 
-/// Ridge refit restricted to `support`; returns (dense beta, intercept,
-/// objective).
-fn polish(
+/// Ridge refit restricted to `support` via explicit column gather,
+/// centering, and full normal-equations solve; returns (dense beta,
+/// intercept, objective). **Scalar reference path**: this is the oracle
+/// [`polish_support_cached`] is property-tested against (agreement
+/// ≤ 1e-9) — production call sites use the Gram-cached path.
+pub fn polish_support(
     x: &Matrix,
     y: &[f64],
     support: &[usize],
@@ -137,14 +474,58 @@ fn polish(
     (beta, intercept, obj)
 }
 
+/// Gram-cached ridge refit on `support`: builds the centered Gram system
+/// in the workspace's [`PolishCache`] (one O(nk²) pass, no column
+/// gather/clone) and solves it by Cholesky; the objective is computed
+/// from the definition via one fused [`Matrix::residual_into`] pass.
+/// Agrees with the [`polish_support`] oracle to ≤ 1e-9 on well-scaled
+/// data (enforced by `tests/prop_linalg.rs`).
+pub fn polish_support_cached(
+    x: &Matrix,
+    y: &[f64],
+    support: &[usize],
+    lambda2: f64,
+    ws: &mut L0Workspace,
+) -> (Vec<f64>, f64, f64) {
+    if support.is_empty() {
+        return polish_support(x, y, support, lambda2);
+    }
+    let (beta, intercept) = polish_cached_core(x, y, support, lambda2, ws);
+    x.residual_into(&beta, y, intercept, &mut ws.resid);
+    let obj = dot(&ws.resid, &ws.resid) + lambda2 * dot(&beta, &beta);
+    (beta, intercept, obj)
+}
+
+/// Build + solve of the Gram-cached polish; returns (dense beta,
+/// intercept) and leaves the cache populated for the swap search.
+fn polish_cached_core(
+    x: &Matrix,
+    y: &[f64],
+    support: &[usize],
+    lambda2: f64,
+    ws: &mut L0Workspace,
+) -> (Vec<f64>, f64) {
+    ws.cache.build(x, y, support);
+    let beta_s = ws.cache.solve(lambda2).unwrap_or_else(|| vec![0.0; support.len()]);
+    let intercept = ws.cache.intercept_for(&beta_s);
+    let mut beta = vec![0.0; x.cols()];
+    for (jj, &j) in support.iter().enumerate() {
+        beta[j] = beta_s[jj];
+    }
+    (beta, intercept)
+}
+
 /// Power-iteration estimate of the largest eigenvalue of `XᵀX / n` —
 /// the IHT step size is `1 / L` with `L` this spectral bound (times n).
-/// Borrows the workspace's `z`/`pred`/`grad` buffers for the iteration.
+/// Borrows the workspace's `z`/`pred`/`grad` buffers for the iteration
+/// and exits early once the eigenvalue estimate is relatively converged
+/// (|Δλ| ≤ 1e-6·λ), which typically halves the 20-iteration budget.
 fn lipschitz_estimate(x: &Matrix, ws: &mut L0Workspace) -> f64 {
     let p = x.cols();
     ws.z.clear();
     ws.z.resize(p, 1.0 / (p as f64).sqrt());
     let mut lam = 1.0;
+    let mut prev = 0.0;
     for _ in 0..20 {
         x.matvec_into(&ws.z, &mut ws.pred); // X v
         x.matvec_t_into(&ws.pred, &mut ws.grad); // Xᵀ X v
@@ -153,6 +534,10 @@ fn lipschitz_estimate(x: &Matrix, ws: &mut L0Workspace) -> f64 {
             return 1.0;
         }
         lam = norm;
+        if (lam - prev).abs() <= 1e-6 * lam {
+            break;
+        }
+        prev = lam;
         for (vi, g) in ws.z.iter_mut().zip(&ws.grad) {
             *vi = g / norm;
         }
@@ -168,7 +553,7 @@ pub fn polish_to_model(x: &Matrix, y: &[f64], support: &[usize], lambda2: f64) -
     let mut support = support.to_vec();
     support.sort_unstable();
     support.dedup();
-    let (beta, intercept, objective) = polish(x, y, &support, lambda2);
+    let (beta, intercept, objective) = polish_support(x, y, &support, lambda2);
     L0Model { beta, intercept, support, objective }
 }
 
@@ -187,7 +572,7 @@ pub fn l0_fit_with(x: &Matrix, y: &[f64], cfg: &L0Config, ws: &mut L0Workspace) 
     let p = x.cols();
     let k = cfg.k.min(p);
     if k == 0 || p == 0 {
-        let (beta, intercept, objective) = polish(x, y, &[], cfg.lambda2);
+        let (beta, intercept, objective) = polish_support(x, y, &[], cfg.lambda2);
         return L0Model { beta, intercept, support: vec![], objective };
     }
 
@@ -196,13 +581,20 @@ pub fn l0_fit_with(x: &Matrix, y: &[f64], cfg: &L0Config, ws: &mut L0Workspace) 
     let step = 1.0 / lip;
     ws.beta.clear();
     ws.beta.resize(p, 0.0);
+    match &cfg.warm_start {
+        Some(w0) if w0.len() == p => {
+            // Project the warm start onto the k-sparse ball.
+            for &j in &top_k_indices_with(w0, k, &mut ws.idx) {
+                ws.beta[j] = w0[j];
+            }
+        }
+        _ => {}
+    }
     let mut support: Vec<usize> = Vec::new();
     let mut stable = 0;
     for _ in 0..cfg.max_iter {
         // gradient of ½‖y−Xβ‖² + ½λ₂‖β‖² : −Xᵀ(y−Xβ) + λ₂β
-        x.matvec_into(&ws.beta, &mut ws.pred);
-        ws.resid.clear();
-        ws.resid.extend(y.iter().zip(&ws.pred).map(|(yv, pv)| yv - pv));
+        x.residual_into(&ws.beta, y, 0.0, &mut ws.resid); // r = y − Xβ, fused
         x.matvec_t_into(&ws.resid, &mut ws.grad); // = Xᵀ r
         ws.z.clear();
         ws.z.extend(
@@ -228,49 +620,86 @@ pub fn l0_fit_with(x: &Matrix, y: &[f64], cfg: &L0Config, ws: &mut L0Workspace) 
     }
     // The last IHT iterate feeds the polish below via `support`.
 
-    // --- Polish ----------------------------------------------------------
-    let (mut beta, mut intercept, mut objective) = polish(x, y, &support, cfg.lambda2);
+    // --- Polish (Gram-cached) --------------------------------------------
+    let (mut beta, mut intercept) = polish_cached_core(x, y, &support, cfg.lambda2, ws);
+    // In-search objectives use the cache's O(k²) quadratic form — the same
+    // formula for the incumbent and every trial, so comparisons are
+    // consistent; the definition-based objective is recomputed once at the
+    // end.
+    let mut objective = {
+        let beta_s: Vec<f64> = ws.cache.features.iter().map(|&f| beta[f]).collect();
+        ws.cache.objective_for(&beta_s, cfg.lambda2)
+    };
 
     // --- Local swap search -------------------------------------------------
     // For each swap round: compute the residual correlation of excluded
     // features; try swapping the weakest support member for the strongest
-    // excluded candidate; keep if the polished objective improves.
+    // excluded candidate; keep if the polished objective improves. Each
+    // trial is evaluated incrementally against the cached Gram system.
     for _ in 0..cfg.swap_rounds {
         if support.is_empty() || support.len() >= p {
             break;
         }
-        x.matvec_into(&beta, &mut ws.pred);
-        ws.resid.clear();
-        ws.resid.extend(
-            y.iter().zip(&ws.pred).map(|(yv, pv)| yv - pv - intercept),
-        );
+        x.residual_into(&beta, y, intercept, &mut ws.resid);
         x.matvec_t_into(&ws.resid, &mut ws.grad);
         let corr = &ws.grad;
-        // Strongest excluded candidate.
-        let cand = (0..p)
-            .filter(|j| !support.contains(j))
-            .max_by(|&a, &b| corr[a].abs().partial_cmp(&corr[b].abs()).unwrap());
+        // Strongest excluded candidate — O(p) membership-mask scan.
+        ws.mask.clear();
+        ws.mask.resize(p, false);
+        for &j in &ws.cache.features {
+            ws.mask[j] = true;
+        }
+        let mut cand: Option<usize> = None;
+        let mut best = f64::NEG_INFINITY;
+        for (j, &is_in) in ws.mask.iter().enumerate() {
+            if !is_in && corr[j].abs() >= best {
+                best = corr[j].abs();
+                cand = Some(j);
+            }
+        }
         let Some(cand) = cand else { break };
-        // Weakest support member (smallest |beta|).
-        let weakest_pos = support
+        // Weakest support member (smallest |beta|), by cache position.
+        let weakest_pos = ws
+            .cache
+            .features
             .iter()
             .enumerate()
             .min_by(|(_, &a), (_, &b)| beta[a].abs().partial_cmp(&beta[b].abs()).unwrap())
             .map(|(pos, _)| pos)
             .unwrap();
-        let mut trial = support.clone();
-        trial[weakest_pos] = cand;
-        trial.sort_unstable();
-        let (tb, ti, tobj) = polish(x, y, &trial, cfg.lambda2);
-        if tobj + 1e-12 < objective {
-            support = trial;
-            beta = tb;
-            intercept = ti;
-            objective = tobj;
+        let Some(eval) = ws.cache.eval_swap(x, y, weakest_pos, cand, cfg.lambda2) else {
+            break;
+        };
+        if eval.objective + 1e-12 < objective {
+            let old = ws.cache.features[weakest_pos];
+            ws.cache.accept_swap(weakest_pos, cand, &eval);
+            // Rebuild the dense iterate from the bordered solve: retained
+            // coefficients in order, candidate last.
+            beta[old] = 0.0;
+            let mut j = 0;
+            for (pos, &f) in ws.cache.features.iter().enumerate() {
+                if pos == weakest_pos {
+                    continue;
+                }
+                beta[f] = eval.beta[j];
+                j += 1;
+            }
+            beta[cand] = eval.beta[j];
+            intercept = eval.intercept;
+            objective = eval.objective;
+            support = {
+                let mut s = ws.cache.features.clone();
+                s.sort_unstable();
+                s
+            };
         } else {
             break; // local optimum
         }
     }
+
+    // Definition-based objective of the returned model (one fused pass).
+    x.residual_into(&beta, y, intercept, &mut ws.resid);
+    let objective = dot(&ws.resid, &ws.resid) + cfg.lambda2 * dot(&beta, &beta);
 
     L0Model { beta, intercept, support, objective }
 }
@@ -287,6 +716,43 @@ mod tests {
         assert_eq!(top_k_indices(&v, 2), vec![1, 4]);
         assert_eq!(top_k_indices(&v, 0), Vec::<usize>::new());
         assert_eq!(top_k_indices(&v, 5).len(), 5);
+    }
+
+    #[test]
+    fn top_k_matches_full_sort_oracle() {
+        let mut rng = Rng::seed_from_u64(42);
+        for _ in 0..50 {
+            let n = 1 + rng.usize_below(40);
+            let v: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.2) { 0.5 } else { rng.normal() })
+                .collect();
+            for k in [0, 1, n / 2, n.saturating_sub(1), n] {
+                let mut idx: Vec<usize> = (0..n).collect();
+                idx.sort_by(|&a, &b| {
+                    v[b].abs().partial_cmp(&v[a].abs()).unwrap().then(a.cmp(&b))
+                });
+                let mut oracle: Vec<usize> = idx.into_iter().take(k).collect();
+                oracle.sort_unstable();
+                assert_eq!(top_k_indices(&v, k), oracle, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn cached_polish_matches_reference_polish() {
+        let cfg_data = SparseRegressionConfig { n: 60, p: 30, k: 4, rho: 0.3, snr: 8.0 };
+        let data = generate(&cfg_data, &mut Rng::seed_from_u64(21));
+        let mut ws = L0Workspace::default();
+        for support in [vec![0], vec![1, 7, 12], vec![2, 3, 4, 5, 6, 20, 29]] {
+            let (b1, i1, o1) = polish_support(&data.x, &data.y, &support, 1e-3);
+            let (b2, i2, o2) =
+                polish_support_cached(&data.x, &data.y, &support, 1e-3, &mut ws);
+            assert!((i1 - i2).abs() < 1e-9, "intercept {i1} vs {i2}");
+            assert!((o1 - o2).abs() < 1e-9 * (1.0 + o1.abs()), "obj {o1} vs {o2}");
+            for (a, b) in b1.iter().zip(&b2) {
+                assert!((a - b).abs() < 1e-9, "beta {a} vs {b}");
+            }
+        }
     }
 
     #[test]
@@ -340,6 +806,30 @@ mod tests {
             assert_eq!(fresh.intercept, reused.intercept);
             assert_eq!(fresh.objective, reused.objective);
         }
+    }
+
+    #[test]
+    fn warm_start_is_deterministic_and_respects_budget() {
+        let cfg_data = SparseRegressionConfig { n: 60, p: 40, k: 4, rho: 0.2, snr: 8.0 };
+        let data = generate(&cfg_data, &mut Rng::seed_from_u64(13));
+        // Warm-start from the (noisy) truth: same inputs → same fit.
+        let mut warm: Vec<f64> = vec![0.0; 40];
+        for &j in &data.support_true {
+            warm[j] = 1.0;
+        }
+        let cfg = L0Config { k: 4, warm_start: Some(warm), ..Default::default() };
+        let a = l0_fit(&data.x, &data.y, &cfg);
+        let b = l0_fit(&data.x, &data.y, &cfg);
+        assert_eq!(a.support, b.support);
+        assert_eq!(a.beta, b.beta);
+        assert!(a.support.len() <= 4);
+        // A wrong-length warm start is ignored, not fatal.
+        let cfg_bad =
+            L0Config { k: 4, warm_start: Some(vec![1.0; 7]), ..Default::default() };
+        let cold = l0_fit(&data.x, &data.y, &L0Config { k: 4, ..Default::default() });
+        let ignored = l0_fit(&data.x, &data.y, &cfg_bad);
+        assert_eq!(cold.support, ignored.support);
+        assert_eq!(cold.beta, ignored.beta);
     }
 
     #[test]

@@ -16,7 +16,10 @@ pub mod l0;
 pub use elastic_net::{
     elastic_net_fit, elastic_net_path, ElasticNetConfig, ElasticNetModel, ElasticNetPath,
 };
-pub use l0::{l0_fit, l0_fit_with, polish_to_model, L0Config, L0Model, L0Workspace};
+pub use l0::{
+    l0_fit, l0_fit_with, polish_support, polish_support_cached, polish_to_model, L0Config,
+    L0Model, L0Workspace,
+};
 
 /// Soft-thresholding operator `S(z, γ) = sign(z) · max(|z| − γ, 0)`.
 #[inline]

@@ -9,8 +9,17 @@
 //! the backbone routes it through the AOT-compiled Pallas
 //! `pairwise_sqdist` kernel (see `runtime`), with this implementation as
 //! the fallback/oracle.
+//!
+//! Native distances use the expanded form `‖x−c‖² = ‖x‖² + ‖c‖² − 2·x·c`
+//! (clamped at zero against rounding): point norms come from the
+//! matrix-level memo ([`Matrix::row_sq_norms`], computed once per fit and
+//! shared by every restart), centroid norms from the same memo on the
+//! centroid matrix (recomputed lazily only after an update step mutates
+//! it). Each point↔centroid candidate then costs a single dot product,
+//! which the 4-accumulator [`dot`] kernel vectorizes — the
+//! subtract-square-sum loop of `sqdist` does not.
 
-use crate::linalg::{sqdist, Matrix};
+use crate::linalg::{dot, sqdist, Matrix};
 use crate::rng::Rng;
 
 /// k-means hyperparameters.
@@ -48,8 +57,10 @@ pub struct KMeansModel {
 impl KMeansModel {
     /// Assign new points to the nearest centroid.
     pub fn predict(&self, x: &Matrix) -> Vec<usize> {
+        let xn = x.row_sq_norms();
+        let cn = self.centroids.row_sq_norms();
         (0..x.rows())
-            .map(|i| nearest_centroid(x.row(i), &self.centroids).0)
+            .map(|i| nearest_centroid_normed(x.row(i), xn[i], &self.centroids, cn).0)
             .collect()
     }
 }
@@ -69,10 +80,19 @@ pub struct KMeansWorkspace {
     counts: Vec<usize>,
 }
 
-fn nearest_centroid(point: &[f64], centroids: &Matrix) -> (usize, f64) {
+/// Nearest centroid via cached squared norms: `point_sq` is `‖point‖²`,
+/// `cent_sq[c]` is `‖centroid_c‖²`. Used identically by Lloyd's final
+/// assignment and [`KMeansModel::predict`], so training labels and
+/// re-prediction agree bit-for-bit.
+fn nearest_centroid_normed(
+    point: &[f64],
+    point_sq: f64,
+    centroids: &Matrix,
+    cent_sq: &[f64],
+) -> (usize, f64) {
     let mut best = (0, f64::INFINITY);
     for c in 0..centroids.rows() {
-        let d = sqdist(point, centroids.row(c));
+        let d = (point_sq + cent_sq[c] - 2.0 * dot(point, centroids.row(c))).max(0.0);
         if d < best.1 {
             best = (c, d);
         }
@@ -85,9 +105,12 @@ fn nearest_centroid(point: &[f64], centroids: &Matrix) -> (usize, f64) {
 /// chosen center. `d2` is a caller-owned distance buffer.
 fn kmeanspp_init(x: &Matrix, k: usize, rng: &mut Rng, d2: &mut Vec<f64>) -> Matrix {
     let n = x.rows();
+    let xn = x.row_sq_norms();
+    // Point-to-point distance from the shared norm memo (clamped ≥ 0).
+    let sq = |a: usize, b: usize| (xn[a] + xn[b] - 2.0 * dot(x.row(a), x.row(b))).max(0.0);
     let mut centers: Vec<usize> = vec![rng.usize_below(n)];
     d2.clear();
-    d2.extend((0..n).map(|i| sqdist(x.row(i), x.row(centers[0]))));
+    d2.extend((0..n).map(|i| sq(i, centers[0])));
     while centers.len() < k {
         let total: f64 = d2.iter().sum();
         let next = if total <= 1e-300 {
@@ -98,7 +121,7 @@ fn kmeanspp_init(x: &Matrix, k: usize, rng: &mut Rng, d2: &mut Vec<f64>) -> Matr
         };
         centers.push(next);
         for i in 0..n {
-            d2[i] = d2[i].min(sqdist(x.row(i), x.row(next)));
+            d2[i] = d2[i].min(sq(i, next));
         }
     }
     let mut c = Matrix::zeros(k, x.cols());
@@ -118,14 +141,18 @@ fn lloyd(
 ) -> KMeansModel {
     let (n, p) = (x.rows(), x.cols());
     let k = centroids.rows();
+    let xn = x.row_sq_norms(); // memoized once, shared across restarts
     ws.labels.clear();
     ws.labels.resize(n, 0);
     let mut iterations = 0;
     for it in 0..cfg.max_iter {
         iterations = it + 1;
-        // Assignment step.
+        // Assignment step. Centroid norms are the matrix memo: the update
+        // step's mutations invalidated it, so this recomputes O(kp) once
+        // per iteration, then every candidate is a single dot product.
+        let cn = centroids.row_sq_norms();
         for i in 0..n {
-            ws.labels[i] = nearest_centroid(x.row(i), &centroids).0;
+            ws.labels[i] = nearest_centroid_normed(x.row(i), xn[i], &centroids, cn).0;
         }
         // Update step (sums/counts reused across iterations and fits).
         if ws.sums.rows() != k || ws.sums.cols() != p {
@@ -171,9 +198,10 @@ fn lloyd(
         }
     }
     // Final assignment + inertia.
+    let cn = centroids.row_sq_norms();
     let mut inertia = 0.0;
     for i in 0..n {
-        let (c, d) = nearest_centroid(x.row(i), &centroids);
+        let (c, d) = nearest_centroid_normed(x.row(i), xn[i], &centroids, cn);
         ws.labels[i] = c;
         inertia += d;
     }

@@ -196,8 +196,24 @@ pub fn l0bnb_solve(x: &Matrix, y: &[f64], cfg: &L0BnbConfig, budget: &Budget) ->
     // Sufficient statistics shared by every node (§Perf: Gram caching).
     let cache = GramCache::new(&xc, &yc);
 
-    // Incumbent from the heuristic (warm start).
-    let heur = l0_fit(x, y, &L0Config { k, lambda2: cfg.lambda2, ..Default::default() });
+    // Root relaxation first: its dense iterate warm-starts the IHT
+    // heuristic below (the bnb "pipeline" refits nested subsets of the
+    // same problem, so the relaxation is exactly the kind of overlapping
+    // previous iterate `L0Config::warm_start` exists for). Deterministic:
+    // the warm start is an explicit input, not hidden state.
+    let (beta_root, root_bound) = cache.ridge_objective(&(0..p).collect::<Vec<_>>(), cfg.lambda2);
+
+    // Incumbent from the heuristic (warm-started from the relaxation).
+    let heur = l0_fit(
+        x,
+        y,
+        &L0Config {
+            k,
+            lambda2: cfg.lambda2,
+            warm_start: if beta_root.len() == p { Some(beta_root) } else { None },
+            ..Default::default()
+        },
+    );
     let (mut inc_support, mut inc_obj) = {
         let (_, obj) = cache.ridge_objective(&heur.support, cfg.lambda2);
         (heur.support.clone(), obj)
@@ -238,14 +254,12 @@ pub fn l0bnb_solve(x: &Matrix, y: &[f64], cfg: &L0BnbConfig, budget: &Budget) ->
         return finish(vec![], obj, obj, SolveStatus::Optimal, 0);
     }
 
-    // Root node.
+    // Root node (bound already computed for the warm start above).
     let mut heap: BinaryHeap<Node> = BinaryHeap::new();
-    let (_, root_bound) = cache.ridge_objective(&(0..p).collect::<Vec<_>>(), cfg.lambda2);
     heap.push(Node { bound: root_bound, fixed_in: vec![], fixed_out: vec![] });
 
     let mut nodes = 0usize;
     let mut best_open_bound;
-    let _ = root_bound;
 
     while let Some(node) = heap.pop() {
         best_open_bound = node.bound;

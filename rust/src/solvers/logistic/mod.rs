@@ -63,7 +63,9 @@ fn nll_from_scores(y: &[f64], z: &[f64]) -> f64 {
 
 /// Dense logistic fit on the columns `subset` of `x` via damped Newton
 /// (IRLS). Returns (beta_on_subset, intercept, nll). `ridge` stabilizes
-/// the Hessian (and bounds coefficients on separable data).
+/// the Hessian (and bounds coefficients on separable data). One-shot
+/// scratch; see [`logistic_fit_with`] for the allocation-reusing entry
+/// point.
 pub fn logistic_fit(
     x: &Matrix,
     y: &[f64],
@@ -71,8 +73,26 @@ pub fn logistic_fit(
     ridge: f64,
     max_newton: usize,
 ) -> (Vec<f64>, f64, f64) {
-    let xs = x.select_columns(subset);
-    let (n, p) = (xs.rows(), xs.cols());
+    logistic_fit_with(x, y, subset, ridge, max_newton, &mut LogisticWorkspace::default())
+}
+
+/// [`logistic_fit`] borrowing caller-owned scratch. All IRLS state — the
+/// subset design matrix, score/candidate buffers of the line search, the
+/// (p+1)² Hessian and gradient — lives in the workspace, so the Newton
+/// loop and repeated calls (best-subset enumeration, the IHT polish)
+/// allocate only the returned coefficient vector. Bit-identical to
+/// [`logistic_fit`] for any workspace state.
+pub fn logistic_fit_with(
+    x: &Matrix,
+    y: &[f64],
+    subset: &[usize],
+    ridge: f64,
+    max_newton: usize,
+    ws: &mut LogisticWorkspace,
+) -> (Vec<f64>, f64, f64) {
+    x.select_columns_into(subset, &mut ws.xsub);
+    let (n, p) = (ws.xsub.rows(), ws.xsub.cols());
+    let pp = p + 1;
     let mut beta = vec![0.0; p];
     let mut b0 = {
         // Log-odds of the base rate as a warm intercept.
@@ -80,60 +100,73 @@ pub fn logistic_fit(
         let pc = pos.clamp(1e-6, 1.0 - 1e-6);
         (pc / (1.0 - pc)).ln()
     };
-    let mut z: Vec<f64> = (0..n).map(|i| dot(xs.row(i), &beta) + b0).collect();
-    let mut nll = nll_from_scores(y, &z) + 0.5 * ridge * dot(&beta, &beta);
+    ws.z.clear();
+    for i in 0..n {
+        let zi = dot(ws.xsub.row(i), &beta) + b0;
+        ws.z.push(zi);
+    }
+    let mut nll = nll_from_scores(y, &ws.z) + 0.5 * ridge * dot(&beta, &beta);
 
     for _ in 0..max_newton {
-        // Gradient and Hessian of the (p+1)-dim problem (intercept last).
-        let mut grad = vec![0.0; p + 1];
-        let mut hess = Matrix::zeros(p + 1, p + 1);
+        // Gradient and Hessian of the (p+1)-dim problem (intercept last),
+        // accumulated into reusable workspace buffers; the intercept
+        // cross-terms are fused into the per-row triangle update.
+        ws.gradbuf.clear();
+        ws.gradbuf.resize(pp, 0.0);
+        if ws.hess.rows() != pp || ws.hess.cols() != pp {
+            ws.hess = Matrix::zeros(pp, pp);
+        } else {
+            ws.hess.data_mut().iter_mut().for_each(|v| *v = 0.0);
+        }
+        let hd = ws.hess.data_mut();
         for i in 0..n {
-            let mu = sigmoid(z[i]);
+            let mu = sigmoid(ws.z[i]);
             let e = mu - y[i];
             let w = (mu * (1.0 - mu)).max(1e-9);
-            let row = xs.row(i);
+            let row = ws.xsub.row(i);
             for a in 0..p {
-                grad[a] += e * row[a];
-                let ha = hess.row_mut(a);
-                for b in a..p {
-                    ha[b] += w * row[a] * row[b];
+                ws.gradbuf[a] += e * row[a];
+                let wra = w * row[a];
+                let ha = &mut hd[a * pp + a..a * pp + p];
+                let ra = &row[a..];
+                for (b, hb) in ha.iter_mut().enumerate() {
+                    *hb += wra * ra[b];
                 }
-                // intercept cross-terms accumulated below
+                hd[a * pp + p] += wra; // intercept cross-term
             }
-            grad[p] += e;
-            for a in 0..p {
-                let v = hess.get(a, p) + w * row[a];
-                hess.set(a, p, v);
-            }
-            hess.set(p, p, hess.get(p, p) + w);
+            ws.gradbuf[p] += e;
+            hd[p * pp + p] += w;
         }
         for a in 0..p {
-            grad[a] += ridge * beta[a];
-            hess.set(a, a, hess.get(a, a) + ridge);
+            ws.gradbuf[a] += ridge * beta[a];
+            hd[a * pp + a] += ridge;
         }
         // Mirror the upper triangle.
-        for a in 0..p + 1 {
+        for a in 0..pp {
             for b in 0..a {
-                let v = hess.get(b, a);
-                hess.set(a, b, v);
+                hd[a * pp + b] = hd[b * pp + a];
             }
         }
-        let Ok(step) = solve_spd(&hess, &grad) else { break };
-        // Damped line search on the NLL.
+        let Ok(step) = solve_spd(&ws.hess, &ws.gradbuf) else { break };
+        // Damped line search on the NLL (candidate buffers reused).
         let mut t = 1.0;
         let mut improved = false;
         for _ in 0..12 {
-            let cand_beta: Vec<f64> =
-                beta.iter().zip(&step[..p]).map(|(b, s)| b - t * s).collect();
+            ws.cand_beta.clear();
+            ws.cand_beta.extend(beta.iter().zip(&step[..p]).map(|(b, s)| b - t * s));
             let cand_b0 = b0 - t * step[p];
-            let cand_z: Vec<f64> =
-                (0..n).map(|i| dot(xs.row(i), &cand_beta) + cand_b0).collect();
+            ws.cand_z.clear();
+            for i in 0..n {
+                let zi = dot(ws.xsub.row(i), &ws.cand_beta) + cand_b0;
+                ws.cand_z.push(zi);
+            }
             let cand_nll =
-                nll_from_scores(y, &cand_z) + 0.5 * ridge * dot(&cand_beta, &cand_beta);
+                nll_from_scores(y, &ws.cand_z) + 0.5 * ridge * dot(&ws.cand_beta, &ws.cand_beta);
             if cand_nll < nll - 1e-12 {
-                beta = cand_beta;
+                beta.clear();
+                beta.extend_from_slice(&ws.cand_beta);
                 b0 = cand_b0;
-                z = cand_z;
+                std::mem::swap(&mut ws.z, &mut ws.cand_z);
                 let delta = nll - cand_nll;
                 nll = cand_nll;
                 improved = true;
@@ -151,11 +184,12 @@ pub fn logistic_fit(
     (beta, b0, nll)
 }
 
-/// Reusable scratch for [`logistic_l0_fit_with`]: the IHT iterate, its
-/// gradient, the projection index buffer, and a reusable design-matrix
-/// buffer for callers that restrict columns per fit. Buffers are resized
-/// on entry, so one `Default` workspace serves any problem shape; contents
-/// never affect results.
+/// Reusable scratch for [`logistic_l0_fit_with`] and
+/// [`logistic_fit_with`]: the IHT iterate, its gradient, the projection
+/// index buffer, the IRLS score/Hessian/line-search buffers, and a
+/// reusable design-matrix buffer for callers that restrict columns per
+/// fit. Buffers are resized on entry, so one `Default` workspace serves
+/// any problem shape; contents never affect results.
 #[derive(Debug, Clone, Default)]
 pub struct LogisticWorkspace {
     /// Caller-owned column-restricted design matrix (`select_columns_into`).
@@ -163,6 +197,14 @@ pub struct LogisticWorkspace {
     beta: Vec<f64>,
     grad: Vec<f64>,
     idx: Vec<usize>,
+    /// IRLS subset design (distinct from `xs`, which callers may have
+    /// lent out while this workspace is in use).
+    xsub: Matrix,
+    z: Vec<f64>,
+    cand_z: Vec<f64>,
+    cand_beta: Vec<f64>,
+    gradbuf: Vec<f64>,
+    hess: Matrix,
 }
 
 /// L0-constrained logistic heuristic: IHT + Newton polish (one-shot
@@ -192,7 +234,7 @@ pub fn logistic_l0_fit_with(
     let (n, p) = (x.rows(), x.cols());
     let k = k.min(p);
     if k == 0 || p == 0 {
-        let (_, b0, nll) = logistic_fit(x, y, &[], ridge, 25);
+        let (_, b0, nll) = logistic_fit_with(x, y, &[], ridge, 25, ws);
         return LogisticModel {
             beta: vec![0.0; p],
             intercept: b0,
@@ -220,19 +262,25 @@ pub fn logistic_l0_fit_with(
             *bj -= lr * (gj + ridge * *bj);
         }
         b0 -= lr * grad0;
-        // Project to k-sparse.
-        ws.idx.clear();
-        ws.idx.extend(0..p);
-        ws.idx.sort_by(|&a, &b| beta[b].abs().partial_cmp(&beta[a].abs()).unwrap());
-        for &j in ws.idx.iter().skip(k) {
-            beta[j] = 0.0;
+        // Project to k-sparse: O(p) expected-time selection under a total
+        // order (magnitude desc, then index asc — the order the previous
+        // stable sort induced), so the zeroed set is identical.
+        if k < p {
+            ws.idx.clear();
+            ws.idx.extend(0..p);
+            ws.idx.select_nth_unstable_by(k, |a, b| {
+                beta[*b].abs().partial_cmp(&beta[*a].abs()).unwrap().then(a.cmp(b))
+            });
+            for &j in &ws.idx[k..] {
+                beta[j] = 0.0;
+            }
         }
     }
     let mut support: Vec<usize> =
         (0..p).filter(|&j| beta[j] != 0.0).collect();
     support.sort_unstable();
-    // Newton polish on the support.
-    let (beta_s, intercept, nll) = logistic_fit(x, y, &support, ridge, 25);
+    // Newton polish on the support (reusing this workspace's IRLS buffers).
+    let (beta_s, intercept, nll) = logistic_fit_with(x, y, &support, ridge, 25, ws);
     let mut dense = vec![0.0; p];
     for (jj, &j) in support.iter().enumerate() {
         dense[j] = beta_s[jj];
@@ -255,6 +303,9 @@ pub fn logistic_best_subset(
     let k = k.min(pool.len());
     let mut best: Option<(f64, Vec<usize>, Vec<f64>, f64)> = None;
     let mut timed_out = false;
+    // One workspace across the whole enumeration: every candidate fit
+    // reuses the same design/Hessian/line-search buffers.
+    let mut ws = LogisticWorkspace::default();
 
     // Iterative lexicographic subset enumeration (no recursion).
     let mut idx: Vec<usize> = (0..k).collect();
@@ -265,7 +316,7 @@ pub fn logistic_best_subset(
                 break;
             }
             let subset: Vec<usize> = idx.iter().map(|&i| pool[i]).collect();
-            let (beta_s, b0, nll) = logistic_fit(x, y, &subset, ridge, 25);
+            let (beta_s, b0, nll) = logistic_fit_with(x, y, &subset, ridge, 25, &mut ws);
             if best.as_ref().map_or(true, |(n, ..)| nll < *n) {
                 best = Some((nll, subset, beta_s, b0));
             }
@@ -299,7 +350,7 @@ pub fn logistic_best_subset(
     let (nll, support, beta_s, intercept) = match best {
         Some(b) => b,
         None => {
-            let (_, b0, nll) = logistic_fit(x, y, &[], ridge, 25);
+            let (_, b0, nll) = logistic_fit_with(x, y, &[], ridge, 25, &mut ws);
             (nll, vec![], vec![], b0)
         }
     };

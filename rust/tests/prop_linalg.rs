@@ -1,0 +1,191 @@
+//! Property tests of the blocked linalg kernels and the Gram-cached
+//! polish against their retained scalar oracles (the perf-pass safety
+//! net): blocked `matvec`/`matvec_t`/`matmul`/`gram` must agree with the
+//! `*_naive` reference implementations to ≤ 1e-9 across random shapes,
+//! the Gram-cached polish must agree with the full-refit
+//! `polish_support` oracle, `cholesky_bordered` must agree with a full
+//! refactorization, and fixed-seed fits must be bit-reproducible.
+
+use backbone_learn::backbone::Backbone;
+use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
+use backbone_learn::linalg::{cholesky, cholesky_bordered, Matrix};
+use backbone_learn::prop::{property, Gen};
+use backbone_learn::rng::Rng;
+use backbone_learn::solvers::cd::{
+    l0_fit, l0_fit_with, polish_support, polish_support_cached, L0Config, L0Workspace,
+};
+
+const TOL: f64 = 1e-9;
+
+fn random_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for i in 0..rows {
+        for j in 0..cols {
+            // Mix of normals and exact zeros exercises the zero-skip
+            // fast paths of the blocked kernels.
+            let v = if g.bool_with(0.15) { 0.0 } else { g.normal() };
+            m.set(i, j, v);
+        }
+    }
+    m
+}
+
+fn assert_close_slice(a: &[f64], b: &[f64], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() <= TOL * (1.0 + x.abs()), "{what}[{i}]: {x} vs {y}");
+    }
+}
+
+fn assert_close_matrix(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()), "{what}: shape mismatch");
+    assert_close_slice(a.data(), b.data(), what);
+}
+
+#[test]
+fn prop_blocked_kernels_match_scalar_oracles() {
+    property("blocked linalg = scalar oracles", 60, |g| {
+        let rows = g.usize_in(1..40);
+        let cols = g.usize_in(1..40);
+        let a = random_matrix(g, rows, cols);
+        let v = g.vec_normal(cols);
+        let w = g.vec_normal(rows);
+
+        assert_close_slice(&a.matvec(&v), &a.matvec_naive(&v), "matvec");
+        assert_close_slice(&a.matvec_t(&w), &a.matvec_t_naive(&w), "matvec_t");
+        assert_close_matrix(&a.gram(), &a.gram_naive(), "gram");
+
+        let inner = g.usize_in(1..20);
+        let b = random_matrix(g, cols, inner);
+        assert_close_matrix(&a.matmul(&b), &a.matmul_naive(&b), "matmul");
+
+        // Fused residual vs the unfused composition.
+        let beta = g.vec_normal(cols);
+        let y = g.vec_normal(rows);
+        let offset = g.normal();
+        let mut fused = Vec::new();
+        a.residual_into(&beta, &y, offset, &mut fused);
+        let pred = a.matvec_naive(&beta);
+        let unfused: Vec<f64> =
+            y.iter().zip(&pred).map(|(yi, pi)| yi - offset - pi).collect();
+        assert_close_slice(&fused, &unfused, "residual_into");
+
+        // Cached squared norms vs direct computation.
+        let rn: Vec<f64> = (0..rows)
+            .map(|i| a.row(i).iter().map(|x| x * x).sum::<f64>())
+            .collect();
+        assert_close_slice(a.row_sq_norms(), &rn, "row_sq_norms");
+        let mut cn = vec![0.0; cols];
+        for i in 0..rows {
+            for (c, &x) in cn.iter_mut().zip(a.row(i)) {
+                *c += x * x;
+            }
+        }
+        assert_close_slice(a.col_sq_norms(), &cn, "col_sq_norms");
+    });
+}
+
+#[test]
+fn prop_bordered_cholesky_matches_full_factorization() {
+    property("bordered cholesky = full refactorization", 60, |g| {
+        let m = g.usize_in(1..12);
+        let rows = m + g.usize_in(1..6);
+        // SPD via AᵀA + I.
+        let a = random_matrix(g, rows, m);
+        let mut spd = a.gram();
+        for i in 0..m {
+            let v = spd.get(i, i) + 1.0;
+            spd.set(i, i, v);
+        }
+        let full = cholesky(&spd).expect("SPD by construction");
+        // Factor the leading (m−1) block, then border with the last
+        // row/column.
+        let lead: Vec<usize> = (0..m - 1).collect();
+        let sub = spd.select_rows(&lead).select_columns(&lead);
+        let l_minus = cholesky(&sub).expect("leading block SPD");
+        let cross: Vec<f64> = (0..m - 1).map(|i| spd.get(i, m - 1)).collect();
+        let bordered = cholesky_bordered(&l_minus, &cross, spd.get(m - 1, m - 1))
+            .expect("bordered SPD");
+        assert_close_matrix(&bordered, &full, "cholesky_bordered");
+    });
+}
+
+#[test]
+fn prop_gram_cached_polish_matches_full_refit_oracle() {
+    property("gram-cached polish = full-refit oracle", 40, |g| {
+        let n = g.usize_in(20..60);
+        let p = g.usize_in(5..30);
+        let k = g.usize_in(1..8).min(p);
+        let mut x = random_matrix(g, n, p);
+        // Random column offsets make the centering path do real work.
+        for j in 0..p {
+            let shift = g.normal() * 2.0;
+            for i in 0..n {
+                let v = x.get(i, j) + shift;
+                x.set(i, j, v);
+            }
+        }
+        let y = g.vec_normal(n);
+        let support = g.subset(p, k);
+        let lambda2 = g.f64_in(1e-4..0.1);
+
+        let (b1, i1, o1) = polish_support(&x, &y, &support, lambda2);
+        let mut ws = L0Workspace::default();
+        let (b2, i2, o2) = polish_support_cached(&x, &y, &support, lambda2, &mut ws);
+        assert!((i1 - i2).abs() <= TOL * (1.0 + i1.abs()), "intercept {i1} vs {i2}");
+        assert!((o1 - o2).abs() <= TOL * (1.0 + o1.abs()), "objective {o1} vs {o2}");
+        assert_close_slice(&b1, &b2, "polish beta");
+    });
+}
+
+#[test]
+fn prop_l0_fit_deterministic_and_workspace_invariant() {
+    property("l0_fit reproducible + workspace-invariant", 15, |g| {
+        let n = g.usize_in(25..60);
+        let p = g.usize_in(10..40);
+        let k = g.usize_in(1..6).min(p);
+        let x = random_matrix(g, n, p);
+        let y = g.vec_normal(n);
+        let cfg = L0Config { k, lambda2: 1e-3, ..Default::default() };
+        let a = l0_fit(&x, &y, &cfg);
+        let b = l0_fit(&x, &y, &cfg);
+        assert_eq!(a.support, b.support);
+        assert_eq!(a.beta, b.beta);
+        assert_eq!(a.intercept, b.intercept);
+        assert_eq!(a.objective, b.objective);
+        // A dirty reused workspace must not change anything.
+        let mut ws = L0Workspace::default();
+        let _ = l0_fit_with(&x, &y, &L0Config { k: 2.min(p), ..Default::default() }, &mut ws);
+        let c = l0_fit_with(&x, &y, &cfg, &mut ws);
+        assert_eq!(a.support, c.support);
+        assert_eq!(a.beta, c.beta);
+    });
+}
+
+/// Fixed-seed, fixed-data end-to-end fit is bit-reproducible — the
+/// determinism anchor of the perf pass (blocked kernels and the
+/// Gram-cached polish must not introduce any run-to-run variance).
+#[test]
+fn backbone_fit_is_bit_reproducible_at_fixed_seed() {
+    let data = generate(
+        &SparseRegressionConfig { n: 120, p: 200, k: 4, rho: 0.1, snr: 5.0 },
+        &mut Rng::seed_from_u64(99),
+    );
+    let fit = || {
+        let mut bb = Backbone::sparse_regression()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(4)
+            .max_nonzeros(4)
+            .seed(31)
+            .build()
+            .unwrap();
+        bb.fit(&data.x, &data.y).unwrap().clone()
+    };
+    let a = fit();
+    let b = fit();
+    assert_eq!(a.support, b.support);
+    assert_eq!(a.beta, b.beta);
+    assert_eq!(a.intercept, b.intercept);
+    assert_eq!(a.objective, b.objective);
+}

@@ -1,0 +1,75 @@
+//! Persistence & serving walkthrough: fit a sparse-regression backbone,
+//! freeze it as a `backbone-model/v1` artifact, load it back, and verify
+//! the loaded model predicts **bit-identically** — then run the loopback
+//! serving self-test against it (the same harness as
+//! `backbone-learn serve --self-test`).
+//!
+//! Run: `cargo run --release --example serve_predict`
+//!
+//! The CLI equivalent of the first half:
+//! ```text
+//! backbone-learn save    --learner sr --out model.json --data-out rows.csv
+//! backbone-learn predict --model model.json --data rows.csv
+//! backbone-learn serve   --model model.json --port 8787
+//! curl -s localhost:8787/healthz
+//! ```
+
+use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
+use backbone_learn::persist::ModelArtifact;
+use backbone_learn::rng::Rng;
+use backbone_learn::serve::selftest::{run_self_test, SelfTestConfig};
+use backbone_learn::{Backbone, Predict};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Fit: the standard quickstart problem.
+    let mut rng = Rng::seed_from_u64(7);
+    let data = generate(
+        &SparseRegressionConfig { n: 200, p: 500, k: 5, rho: 0.1, snr: 5.0 },
+        &mut rng,
+    );
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(5)
+        .max_nonzeros(5)
+        .seed(7)
+        .build()?;
+    bb.fit(&data.x, &data.y)?;
+    println!("fitted: support = {:?}", bb.model().unwrap().support);
+
+    // 2. Save: fitted state + provenance → versioned JSON artifact.
+    let path = std::env::temp_dir().join("serve_predict_example.json");
+    let path = path.to_string_lossy().into_owned();
+    let artifact = ModelArtifact::from_sparse_regression(&bb)?;
+    artifact.save(&path)?;
+    println!(
+        "saved:  {path} ({} bytes, crate {})",
+        std::fs::metadata(&path)?.len(),
+        artifact.provenance.crate_version
+    );
+
+    // 3. Load: the artifact alone is enough to predict — no refit, no
+    //    training data.
+    let loaded = ModelArtifact::load(&path)?;
+    let in_memory = bb.try_predict(&data.x)?;
+    let from_disk = loaded.model.try_predict(&data.x)?;
+    let identical = in_memory
+        .iter()
+        .zip(&from_disk)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!("loaded: predictions bit-identical to the fitted estimator: {identical}");
+    assert!(identical, "round-trip must be exact");
+
+    // 4. Serve: loopback load test over real HTTP (the `--self-test`
+    //    harness; `cli serve` runs the same server as a daemon).
+    let report = run_self_test(
+        loaded.model,
+        &SelfTestConfig { requests: 100, concurrency: 4, batch_rows: 16, threads: 2 },
+    )?;
+    println!(
+        "served: {} requests, {} failed, {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
+        report.requests, report.failed, report.req_per_sec, report.p50_ms, report.p99_ms
+    );
+    std::fs::remove_file(&path).ok();
+    Ok(())
+}

@@ -64,44 +64,6 @@ pub struct BackboneClustering {
 }
 
 impl BackboneClustering {
-    /// Paper-style positional constructor:
-    /// `(beta, num_subproblems, n_clusters)`.
-    ///
-    /// ⚠ **Argument-order trap**: unlike every supervised learner (which
-    /// takes `(alpha, beta, num_subproblems, k)`), this constructor takes
-    /// **beta first** — clustering has no screening step, so there is no
-    /// leading `alpha`. Passing `(alpha, beta, M)` out of habit silently
-    /// misconfigures the run. The `Backbone::clustering()` builder names
-    /// every knob and is the only documented path.
-    ///
-    /// Unlike `build()`, a positional constructor cannot report invalid
-    /// hyperparameters — they surface as a [`BackboneError`] from `fit`
-    /// instead.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use the `Backbone::clustering()` builder; this constructor \
-                takes (beta, num_subproblems, n_clusters) — beta FIRST, \
-                unlike the supervised learners"
-    )]
-    pub fn new(beta: f64, num_subproblems: usize, n_clusters: usize) -> Self {
-        Self {
-            params: BackboneParams {
-                alpha: 1.0, // no point-screening for clustering
-                beta,
-                num_subproblems,
-                b_max: 0,
-                max_iterations: 1, // pairs do not recurse usefully
-                ..Default::default()
-            },
-            n_clusters,
-            min_cluster_size: 1,
-            n_init: 10,
-            backend: Backend::default(),
-            last_diagnostics: None,
-            fitted: None,
-        }
-    }
-
     pub fn fit(&mut self, x: &Matrix) -> Result<&ClusteringModel, BackboneError> {
         self.fit_with_budget(x, &Budget::unlimited())
     }

@@ -114,38 +114,6 @@ pub struct BackboneDecisionTree {
 }
 
 impl BackboneDecisionTree {
-    /// Paper-style positional constructor:
-    /// `(alpha, beta, num_subproblems, depth)`.
-    ///
-    /// Unlike `build()`, a positional constructor cannot report invalid
-    /// hyperparameters — they surface as a [`BackboneError`] from `fit`
-    /// instead. Note the argument-order trap across learners:
-    /// [`super::clustering::BackboneClustering::new`] takes **beta first**
-    /// (no alpha). The builder names every knob and is the only
-    /// documented path.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use the `Backbone::decision_tree()` builder; positional \
-                argument order differs between learners"
-    )]
-    pub fn new(alpha: f64, beta: f64, num_subproblems: usize, depth: usize) -> Self {
-        Self {
-            params: BackboneParams {
-                alpha,
-                beta,
-                num_subproblems,
-                b_max: 0, // trees rarely need multi-round shrinking
-                ..Default::default()
-            },
-            depth,
-            bins: 2,
-            min_leaf: 1,
-            importance_threshold: 0.0,
-            last_diagnostics: None,
-            fitted: None,
-        }
-    }
-
     pub fn fit(&mut self, x: &Matrix, y: &[f64]) -> Result<&BackboneTreeModel, BackboneError> {
         self.fit_with_budget(x, y, &Budget::unlimited())
     }

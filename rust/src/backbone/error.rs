@@ -3,9 +3,8 @@
 //! Every way a *user input* can be wrong — hyperparameters out of range,
 //! mismatched data shapes, non-binary labels, predicting before fitting —
 //! maps to a [`BackboneError`] variant instead of an `assert!` panic.
-//! Builders report these at `build()` time; the deprecated positional
-//! constructors (which cannot return `Result`) defer the same checks to
-//! `fit()`. Failures inside downstream solvers are wrapped in
+//! Builders report these at `build()` time; `fit()` re-checks them for
+//! hand-mutated params. Failures inside downstream solvers are wrapped in
 //! [`BackboneError::Solver`] so callers keep a single error type.
 
 use std::fmt;

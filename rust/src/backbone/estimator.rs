@@ -690,8 +690,11 @@ mod tests {
         ));
     }
 
+    /// The paper-era defaults the (removed) positional constructors used
+    /// to encode, now pinned as literals: these feed the artifact
+    /// format's provenance, so they must not drift silently.
     #[test]
-    fn builder_defaults_mirror_the_deprecated_constructors() {
+    fn builder_defaults_are_stable() {
         let built = Backbone::sparse_regression()
             .alpha(0.5)
             .beta(0.5)
@@ -699,13 +702,12 @@ mod tests {
             .max_nonzeros(10)
             .build()
             .unwrap();
-        #[allow(deprecated)]
-        let legacy = BackboneSparseRegression::new(0.5, 0.5, 5, 10);
-        assert_eq!(built.params.b_max, legacy.params.b_max);
-        assert_eq!(built.params.max_iterations, legacy.params.max_iterations);
-        assert_eq!(built.max_nonzeros, legacy.max_nonzeros);
-        assert_eq!(built.subproblem_nonzeros, legacy.subproblem_nonzeros);
-        assert_eq!(built.lambda2, legacy.lambda2);
+        assert_eq!(built.params.b_max, 100); // 10 × max_nonzeros
+        assert_eq!(built.params.max_iterations, 4);
+        assert_eq!(built.max_nonzeros, 10);
+        assert_eq!(built.subproblem_nonzeros, 10);
+        assert_eq!(built.lambda2, 1e-3);
+        assert_eq!(built.gap_tol, 0.01);
 
         let built = Backbone::clustering()
             .beta(0.8)
@@ -713,11 +715,11 @@ mod tests {
             .n_clusters(4)
             .build()
             .unwrap();
-        #[allow(deprecated)]
-        let legacy = BackboneClustering::new(0.8, 3, 4);
-        assert_eq!(built.params.alpha, legacy.params.alpha);
-        assert_eq!(built.params.max_iterations, legacy.params.max_iterations);
-        assert_eq!(built.n_clusters, legacy.n_clusters);
+        assert_eq!(built.params.alpha, 1.0); // no point-screening
+        assert_eq!(built.params.max_iterations, 1);
+        assert_eq!(built.n_clusters, 4);
+        assert_eq!(built.min_cluster_size, 1);
+        assert_eq!(built.n_init, 10);
 
         let built = Backbone::sparse_logistic()
             .alpha(0.5)
@@ -726,11 +728,9 @@ mod tests {
             .max_nonzeros(3)
             .build()
             .unwrap();
-        #[allow(deprecated)]
-        let legacy = BackboneSparseLogistic::new(0.5, 0.5, 5, 3);
-        assert_eq!(built.params.b_max, legacy.params.b_max);
-        assert_eq!(built.ridge, legacy.ridge);
-        assert_eq!(built.iht_iters, legacy.iht_iters);
+        assert_eq!(built.params.b_max, 12); // (4 × max_nonzeros).max(12)
+        assert_eq!(built.ridge, 1e-3);
+        assert_eq!(built.iht_iters, 150);
 
         let built = Backbone::decision_tree()
             .alpha(0.5)
@@ -739,11 +739,9 @@ mod tests {
             .depth(2)
             .build()
             .unwrap();
-        #[allow(deprecated)]
-        let legacy = BackboneDecisionTree::new(0.5, 0.5, 5, 2);
-        assert_eq!(built.params.b_max, legacy.params.b_max);
-        assert_eq!(built.bins, legacy.bins);
-        assert_eq!(built.min_leaf, legacy.min_leaf);
+        assert_eq!(built.params.b_max, 0); // trees rarely need shrinking
+        assert_eq!(built.bins, 2);
+        assert_eq!(built.min_leaf, 1);
     }
 
     #[test]

@@ -49,38 +49,6 @@ pub struct BackboneSparseLogistic {
 }
 
 impl BackboneSparseLogistic {
-    /// Paper-style positional constructor:
-    /// `(alpha, beta, num_subproblems, max_nonzeros)`.
-    ///
-    /// Unlike `build()`, a positional constructor cannot report invalid
-    /// hyperparameters — they surface as a [`BackboneError`] from `fit`
-    /// instead. Note the argument-order trap across learners:
-    /// [`super::clustering::BackboneClustering::new`] takes **beta first**
-    /// (no alpha). The builder names every knob and is the only
-    /// documented path.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use the `Backbone::sparse_logistic()` builder; positional \
-                argument order differs between learners"
-    )]
-    pub fn new(alpha: f64, beta: f64, num_subproblems: usize, max_nonzeros: usize) -> Self {
-        Self {
-            params: BackboneParams {
-                alpha,
-                beta,
-                num_subproblems,
-                // Keep the enumeration-based exact phase tractable.
-                b_max: (4 * max_nonzeros).max(12),
-                ..Default::default()
-            },
-            max_nonzeros,
-            ridge: 1e-3,
-            iht_iters: 150,
-            last_diagnostics: None,
-            fitted: None,
-        }
-    }
-
     pub fn fit(&mut self, x: &Matrix, y: &[f64]) -> Result<&LogisticModel, BackboneError> {
         self.fit_with_budget(x, y, &Budget::unlimited())
     }

@@ -81,41 +81,6 @@ pub struct BackboneSparseRegression {
 }
 
 impl BackboneSparseRegression {
-    /// Paper-style positional constructor:
-    /// `(alpha, beta, num_subproblems, max_nonzeros)`.
-    ///
-    /// Unlike `build()`, a positional constructor cannot report invalid
-    /// hyperparameters — they surface as a [`BackboneError`] from `fit`
-    /// instead. Note the argument-order trap across learners:
-    /// [`super::clustering::BackboneClustering::new`] takes **beta first**
-    /// (no alpha). The builder names every knob and is the only
-    /// documented path.
-    #[deprecated(
-        since = "0.2.0",
-        note = "use the `Backbone::sparse_regression()` builder; positional \
-                argument order differs between learners"
-    )]
-    pub fn new(alpha: f64, beta: f64, num_subproblems: usize, max_nonzeros: usize) -> Self {
-        Self {
-            params: BackboneParams {
-                alpha,
-                beta,
-                num_subproblems,
-                // Paper default: keep iterating until the backbone is a
-                // small multiple of the target sparsity.
-                b_max: 10 * max_nonzeros,
-                ..Default::default()
-            },
-            max_nonzeros,
-            lambda2: 1e-3,
-            subproblem_nonzeros: max_nonzeros,
-            gap_tol: 0.01,
-            backend: Backend::default(),
-            last_diagnostics: None,
-            fitted: None,
-        }
-    }
-
     /// Run the backbone and fit the final model.
     pub fn fit(
         &mut self,

@@ -434,6 +434,26 @@ pub fn clustering_accuracy(x: &Matrix, labels: &[usize]) -> f64 {
     silhouette_score(x, labels)
 }
 
+/// Linear-interpolation percentile of an **ascending-sorted** sample
+/// (`q` in `[0, 1]`; the R-7 / NumPy default). Returns `NaN` on an empty
+/// sample. Shared by the serving stats endpoint and the `serve
+/// --self-test` latency report.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Perf suite (`cli bench`): end-to-end fit timings as machine-readable rows
 // ---------------------------------------------------------------------------
@@ -727,6 +747,17 @@ mod tests {
             assert!(r.min_secs <= r.mean_secs + 1e-12);
             assert!(r.metric.is_finite(), "{}: metric {}", r.learner, r.metric);
         }
+    }
+
+    #[test]
+    fn percentile_interpolates_and_handles_edges() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.5), 2.5);
+        assert!((percentile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert!(percentile(&[], 0.5).is_nan());
     }
 
     #[test]

@@ -11,7 +11,7 @@ pub struct Args {
 }
 
 /// Option keys that are boolean flags (never consume a value).
-const FLAG_KEYS: &[&str] = &["full", "help", "quiet", "native-only", "quick"];
+const FLAG_KEYS: &[&str] = &["full", "help", "quiet", "native-only", "quick", "self-test"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {

@@ -3,6 +3,9 @@
 //! ```text
 //! backbone-learn table1 [--block sr|dt|cl|all] [--full] [--threads N] [--config FILE] [--out FILE]
 //! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S --threads N] [--out FILE]
+//! backbone-learn save    --learner sr|lr|dt|cl --out model.json [fit args] [--data-out rows.csv]
+//! backbone-learn predict --model model.json --data rows.csv [--labels y.csv] [--out preds.json]
+//! backbone-learn serve   --model model.json [--port P] [--threads N] [--self-test [--quick]]
 //! backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl] [--threads N]
 //! backbone-learn bench  [--quick] [--reps N] [--budget SECS] [--out FILE]
 //! backbone-learn dump-config --problem sr|dt|cl [--full]
@@ -22,6 +25,7 @@ mod ablate;
 mod args;
 mod bench;
 mod fit;
+mod model;
 mod table1;
 
 pub use args::Args;
@@ -37,6 +41,21 @@ USAGE:
   backbone-learn fit    --problem sr|dt|cl [--n N] [--p P] [--k K]
                         [--alpha A] [--beta B] [--m M] [--seed S] [--budget SECS]
                         [--threads N] [--out FILE]   (diagnostics + metrics as JSON)
+  backbone-learn save    --learner sr|lr|dt|cl --out model.json
+                         [--n N] [--p P] [--k K] [--alpha A] [--beta B] [--m M]
+                         [--seed S] [--budget SECS] [--threads N]
+                         [--data-out rows.csv] [--labels-out y.csv]
+                         (fit on generated data → backbone-model/v1 artifact)
+  backbone-learn predict --model model.json --data rows.csv
+                         [--labels y.csv] [--out preds.json]
+                         (artifact + CSV rows → predictions; --labels adds
+                          metrics incl. confusion matrix + ROC AUC)
+  backbone-learn serve   --model model.json [--host H] [--port P] [--threads N]
+                         (HTTP prediction server: POST /predict, GET /healthz,
+                          GET /stats)
+  backbone-learn serve   --model model.json --self-test [--quick] [--requests N]
+                         [--concurrency C] [--batch B] [--out report.json]
+                         (loopback load test; non-zero exit on any failure)
   backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
                         [--threads N]
   backbone-learn bench  [--quick] [--reps N] [--budget SECS] [--out FILE]
@@ -71,6 +90,9 @@ pub fn run(argv: &[String]) -> Result<i32> {
     match cmd.as_str() {
         "table1" => table1::run(&args),
         "fit" => fit::run(&args),
+        "save" => model::save(&args),
+        "predict" => model::predict(&args),
+        "serve" => model::serve(&args),
         "ablate" => ablate::run(&args),
         "bench" => bench::run(&args),
         "dump-config" => {

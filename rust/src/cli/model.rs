@@ -1,0 +1,362 @@
+//! `save` / `predict` / `serve` subcommands — the persistence + serving
+//! half of the CLI.
+//!
+//! ```text
+//! backbone-learn save    --learner sr|lr|dt|cl --out model.json
+//!                        [--n N --p P --k K --alpha A --beta B --m M
+//!                         --seed S --budget SECS --threads N]
+//!                        [--data-out rows.csv] [--labels-out y.csv]
+//! backbone-learn predict --model model.json --data rows.csv
+//!                        [--labels y.csv] [--out preds.json]
+//! backbone-learn serve   --model model.json [--port P] [--host H]
+//!                        [--threads N]
+//! backbone-learn serve   --model model.json --self-test [--quick]
+//!                        [--requests N] [--concurrency C] [--batch B]
+//!                        [--threads N] [--out report.json]
+//! ```
+//!
+//! `save` fits a learner on generated data (same generators as `fit`)
+//! and freezes the fitted state as a `backbone-model/v1` artifact;
+//! `predict` runs a saved artifact over CSV rows (reporting regression /
+//! classification / clustering metrics when `--labels` is given,
+//! including the confusion matrix and ROC AUC for classifiers); `serve`
+//! exposes the artifact over HTTP, or — with `--self-test` — drives its
+//! own loopback load generator and exits non-zero if any request failed.
+
+use super::Args;
+use crate::backbone::Backbone;
+use crate::data::{blobs, classification, csv, sparse_regression};
+use crate::json::Json;
+use crate::linalg::Matrix;
+use crate::metrics::{
+    adjusted_rand_index, confusion_matrix, mse, r2_score, roc_auc, silhouette_score,
+};
+use crate::persist::{LearnerKind, LoadedModel, ModelArtifact};
+use crate::rng::Rng;
+use crate::serve::selftest::{run_self_test, SelfTestConfig};
+use crate::serve::{ServeConfig, Server};
+use crate::util::Budget;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parse the CLI learner id (`--learner`, falling back to `--problem`
+/// for symmetry with `fit`).
+fn parse_learner(args: &Args) -> Result<LearnerKind> {
+    let id = args
+        .get("learner")
+        .or_else(|| args.get("problem"))
+        .context("--learner is required (sr|lr|dt|cl)")?;
+    Ok(match id.as_str() {
+        "sr" | "sparse-regression" | "sparse_regression" => LearnerKind::SparseRegression,
+        "lr" | "sparse-logistic" | "sparse_logistic" | "logistic" => {
+            LearnerKind::SparseLogistic
+        }
+        "dt" | "decision-tree" | "decision_tree" | "decision-trees" => {
+            LearnerKind::DecisionTree
+        }
+        "cl" | "clustering" => LearnerKind::Clustering,
+        other => bail!("unknown learner `{other}` (expected sr|lr|dt|cl)"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// save
+// ---------------------------------------------------------------------------
+
+pub fn save(args: &Args) -> Result<i32> {
+    let learner = parse_learner(args)?;
+    let out = args.get("out").context("--out is required (artifact path)")?;
+    let seed = args.get_u64("seed", 0)?;
+    let alpha = args.get_fraction("alpha", 0.5)?;
+    let beta = args.get_fraction("beta", 0.5)?;
+    let m = args.get_usize("m", 5)?;
+    let threads = args.get_usize("threads", 1)?;
+    let budget = Budget::seconds(args.get_f64("budget", 60.0)?);
+    let mut rng = Rng::seed_from_u64(seed);
+
+    // (X rows, labels) written alongside the artifact on request — the
+    // natural companion inputs for `cli predict`.
+    let companion: (Matrix, Vec<f64>);
+
+    let artifact = match learner {
+        LearnerKind::SparseRegression => {
+            let n = args.get_usize("n", 200)?;
+            let p = args.get_usize("p", 500)?;
+            let k = args.get_usize("k", 5)?;
+            let data = sparse_regression::generate(
+                &sparse_regression::SparseRegressionConfig { n, p, k, rho: 0.1, snr: 5.0 },
+                &mut rng,
+            );
+            let mut bb = Backbone::sparse_regression()
+                .alpha(alpha)
+                .beta(beta)
+                .num_subproblems(m)
+                .max_nonzeros(k)
+                .threads(threads)
+                .seed(seed)
+                .build()?;
+            bb.fit_with_budget(&data.x, &data.y, &budget)?;
+            companion = (data.x, data.y);
+            ModelArtifact::from_sparse_regression(&bb)?
+        }
+        LearnerKind::SparseLogistic => {
+            let n = args.get_usize("n", 200)?;
+            let p = args.get_usize("p", 100)?;
+            let k = args.get_usize("k", 3)?;
+            let data = classification::generate(
+                &classification::ClassificationConfig {
+                    n,
+                    p,
+                    k,
+                    n_redundant: 0,
+                    n_clusters: 2,
+                    class_sep: 1.5,
+                    flip_y: 0.05,
+                },
+                &mut rng,
+            );
+            let mut bb = Backbone::sparse_logistic()
+                .alpha(alpha)
+                .beta(beta)
+                .num_subproblems(m)
+                .max_nonzeros(k)
+                .threads(threads)
+                .seed(seed)
+                .build()?;
+            bb.fit_with_budget(&data.x, &data.y, &budget)?;
+            companion = (data.x, data.y);
+            ModelArtifact::from_sparse_logistic(&bb)?
+        }
+        LearnerKind::DecisionTree => {
+            let n = args.get_usize("n", 300)?;
+            let p = args.get_usize("p", 40)?;
+            let k = args.get_usize("k", 5)?;
+            let data = classification::generate(
+                &classification::ClassificationConfig {
+                    n,
+                    p,
+                    k,
+                    n_redundant: (p / 10).min(k),
+                    n_clusters: 4,
+                    class_sep: 1.5,
+                    flip_y: 0.05,
+                },
+                &mut rng,
+            );
+            let mut bb = Backbone::decision_tree()
+                .alpha(alpha)
+                .beta(beta)
+                .num_subproblems(m)
+                .depth(args.get_usize("depth", 2)?)
+                .threads(threads)
+                .seed(seed)
+                .build()?;
+            bb.fit_with_budget(&data.x, &data.y, &budget)?;
+            companion = (data.x, data.y);
+            ModelArtifact::from_decision_tree(&bb)?
+        }
+        LearnerKind::Clustering => {
+            let n = args.get_usize("n", 16)?;
+            let p = args.get_usize("p", 2)?;
+            let k = args.get_usize("k", 4)?;
+            let true_k = (k.saturating_sub(2)).max(2);
+            let data = blobs::generate(
+                &blobs::BlobsConfig {
+                    n,
+                    p,
+                    true_clusters: true_k,
+                    cluster_std: 1.0,
+                    center_box: 10.0,
+                    min_center_dist: 4.0,
+                },
+                &mut rng,
+            );
+            let mut bb = Backbone::clustering()
+                .beta(beta)
+                .num_subproblems(m)
+                .n_clusters(k)
+                .threads(threads)
+                .seed(seed)
+                .build()?;
+            bb.fit_with_budget(&data.x, &budget)?;
+            let truth: Vec<f64> = data.labels_true.iter().map(|&l| l as f64).collect();
+            companion = (data.x, truth);
+            ModelArtifact::from_clustering(&bb)?
+        }
+    };
+
+    artifact.save(&out)?;
+    let digest = artifact.provenance.diagnostics.as_ref();
+    println!(
+        "saved {} artifact → {out} (backbone size {}, {} iterations)",
+        artifact.learner().name(),
+        digest.map_or(0, |d| d.backbone_size),
+        digest.map_or(0, |d| d.iterations),
+    );
+    if let Some(path) = args.get("data-out") {
+        std::fs::write(&path, csv::format_matrix(&companion.0))
+            .with_context(|| format!("writing `{path}`"))?;
+        eprintln!("wrote {path}");
+    }
+    if let Some(path) = args.get("labels-out") {
+        std::fs::write(&path, csv::format_vector(&companion.1))
+            .with_context(|| format!("writing `{path}`"))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(0)
+}
+
+// ---------------------------------------------------------------------------
+// predict
+// ---------------------------------------------------------------------------
+
+pub fn predict(args: &Args) -> Result<i32> {
+    let model_path = args.get("model").context("--model is required")?;
+    let data_path = args.get("data").context("--data is required (CSV rows)")?;
+    let artifact = ModelArtifact::load(&model_path)?;
+    let x = csv::read_matrix(&data_path)?;
+    let kind = artifact.learner();
+
+    // One inference pass; predictions are the thresholded view of it.
+    let scores = artifact.model.predict_scores(&x)?;
+    let predictions = artifact.model.predictions_from_scores(&scores);
+
+    let mut metrics: BTreeMap<String, Json> = BTreeMap::new();
+    if let Some(labels_path) = args.get("labels") {
+        let y = csv::read_vector(&labels_path)?;
+        if y.len() != predictions.len() {
+            bail!(
+                "--labels has {} entries but --data has {} rows",
+                y.len(),
+                predictions.len()
+            );
+        }
+        match kind {
+            LearnerKind::SparseRegression => {
+                metrics.insert("r2".into(), Json::from_f64(r2_score(&y, &predictions)));
+                metrics.insert("mse".into(), Json::from_f64(mse(&y, &predictions)));
+            }
+            LearnerKind::SparseLogistic | LearnerKind::DecisionTree => {
+                let cm = confusion_matrix(&y, &scores);
+                metrics.insert("accuracy".into(), Json::from_f64(cm.accuracy()));
+                metrics.insert("roc_auc".into(), Json::from_f64(roc_auc(&y, &scores)));
+                metrics.insert("precision".into(), Json::from_f64(cm.precision()));
+                metrics.insert("recall".into(), Json::from_f64(cm.recall()));
+                metrics.insert("f1".into(), Json::from_f64(cm.f1()));
+                let mut counts = BTreeMap::new();
+                counts.insert("true_pos".to_string(), Json::Number(cm.true_pos as f64));
+                counts.insert("false_pos".to_string(), Json::Number(cm.false_pos as f64));
+                counts.insert("true_neg".to_string(), Json::Number(cm.true_neg as f64));
+                counts.insert("false_neg".to_string(), Json::Number(cm.false_neg as f64));
+                metrics.insert("confusion_matrix".into(), Json::Object(counts));
+            }
+            LearnerKind::Clustering => {
+                let pred_labels: Vec<usize> =
+                    predictions.iter().map(|&p| p as usize).collect();
+                let true_labels: Vec<usize> = y.iter().map(|&l| l as usize).collect();
+                metrics.insert(
+                    "ari".into(),
+                    Json::from_f64(adjusted_rand_index(&pred_labels, &true_labels)),
+                );
+                metrics.insert(
+                    "silhouette".into(),
+                    Json::from_f64(silhouette_score(&x, &pred_labels)),
+                );
+            }
+        }
+        for (name, value) in &metrics {
+            eprintln!("{name:<16} {}", value.to_string_compact());
+        }
+    }
+
+    if let Some(out) = args.get("out") {
+        let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+        doc.insert("schema".into(), Json::String("backbone-predictions/v1".into()));
+        doc.insert("learner".into(), Json::String(kind.name().into()));
+        doc.insert("model".into(), Json::String(model_path.clone()));
+        doc.insert("rows".into(), Json::Number(predictions.len() as f64));
+        doc.insert(
+            "predictions".into(),
+            Json::Array(predictions.iter().map(|&p| Json::from_f64(p)).collect()),
+        );
+        if kind.is_classifier() {
+            doc.insert(
+                "scores".into(),
+                Json::Array(scores.iter().map(|&s| Json::from_f64(s)).collect()),
+            );
+        }
+        if !metrics.is_empty() {
+            doc.insert("metrics".into(), Json::Object(metrics));
+        }
+        std::fs::write(&out, Json::Object(doc).to_string_pretty())
+            .with_context(|| format!("writing `{out}`"))?;
+        eprintln!("wrote {out}");
+    } else {
+        for p in &predictions {
+            println!("{p}");
+        }
+    }
+    Ok(0)
+}
+
+// ---------------------------------------------------------------------------
+// serve
+// ---------------------------------------------------------------------------
+
+pub fn serve(args: &Args) -> Result<i32> {
+    let model_path = args.get("model").context("--model is required")?;
+    let artifact = ModelArtifact::load(&model_path)?;
+    let model: LoadedModel = artifact.model.clone();
+    let threads = args.get_usize("threads", 2)?;
+
+    if args.flag("self-test") {
+        let base = if args.flag("quick") { SelfTestConfig::quick() } else { SelfTestConfig::full() };
+        let cfg = SelfTestConfig {
+            requests: args.get_usize("requests", base.requests)?,
+            concurrency: args.get_usize("concurrency", base.concurrency)?,
+            batch_rows: args.get_usize("batch", base.batch_rows)?,
+            threads: match args.get("threads") {
+                Some(_) => threads,
+                None => base.threads,
+            },
+        };
+        let report = run_self_test(model, &cfg)?;
+        println!(
+            "self-test [{}]: {} requests ({} failed), {} threads, batch {} rows",
+            report.learner, report.requests, report.failed, report.threads, report.batch_rows
+        );
+        println!(
+            "  {:.0} req/s · {:.0} rows/s · latency mean {:.2} ms · p50 {:.2} ms · p99 {:.2} ms",
+            report.req_per_sec, report.rows_per_sec, report.mean_ms, report.p50_ms, report.p99_ms
+        );
+        if let Some(out) = args.get("out") {
+            std::fs::write(&out, report.to_json().to_string_pretty())
+                .with_context(|| format!("writing `{out}`"))?;
+            eprintln!("wrote {out}");
+        }
+        // CI contract: non-zero exit if any request failed. (A zero
+        // request count can't happen — run_self_test clamps to ≥ 1.)
+        return Ok(if report.failed > 0 { 1 } else { 0 });
+    }
+
+    let host = args.get("host").unwrap_or_else(|| "127.0.0.1".into());
+    let port = args.get_usize("port", 8787)?;
+    let addr = format!("{host}:{port}");
+    let server = Server::bind(
+        &addr,
+        model,
+        &ServeConfig { threads, ..ServeConfig::default() },
+    )
+    .with_context(|| format!("binding `{addr}`"))?;
+    let bound = server.local_addr()?;
+    println!(
+        "serving {} model from {model_path} on http://{bound} ({} threads)",
+        artifact.learner().name(),
+        crate::backbone::resolved_threads(threads)
+    );
+    println!("  POST /predict   {{\"rows\": [[...], ...]}} → predictions");
+    println!("  GET  /healthz   liveness + model identity");
+    println!("  GET  /stats     request counters + latency profile");
+    server.run();
+    Ok(0)
+}

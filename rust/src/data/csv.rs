@@ -1,0 +1,191 @@
+//! Minimal numeric-CSV reader/writer for the persistence CLI
+//! (`cli predict --data rows.csv`) and the serving examples.
+//!
+//! Scope is deliberately narrow: comma-separated **finite** `f64` fields
+//! (non-finite spellings like `NaN`/`inf` are rejected, matching the
+//! HTTP `/predict` front end so both inference paths validate alike),
+//! optional header line (auto-detected: the first non-empty line is
+//! treated as a header only when **none** of its fields parse as
+//! numbers — a first line that mixes numeric and non-numeric fields is a
+//! malformed data row and errors rather than being silently skipped), no
+//! quoting, no escapes. Ragged rows are an error.
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+
+/// Parse a numeric CSV document into a row-major matrix.
+pub fn parse_matrix(text: &str) -> Result<Matrix> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width: Option<usize> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        let parsed: Result<Vec<f64>, _> =
+            fields.iter().map(|f| f.parse::<f64>()).collect();
+        let values = match parsed {
+            Ok(v) => v,
+            Err(e) => {
+                // A fully non-numeric first line is a header; a first
+                // line that *mixes* numeric and non-numeric fields is far
+                // more likely a corrupt data row — skipping it would
+                // silently misalign every downstream prediction, so it
+                // errors instead. Anywhere else: malformed data.
+                let all_non_numeric =
+                    fields.iter().all(|f| f.parse::<f64>().is_err());
+                if rows.is_empty() && width.is_none() && all_non_numeric {
+                    width = Some(fields.len());
+                    continue;
+                }
+                bail!("line {}: non-numeric field ({e})", lineno + 1);
+            }
+        };
+        if let Some(j) = values.iter().position(|v| !v.is_finite()) {
+            // Same contract as the HTTP /predict front end: inference
+            // inputs must be finite, or predictions/metrics go NaN
+            // silently.
+            bail!("line {}: field {} is not a finite number", lineno + 1, j + 1);
+        }
+        if let Some(w) = width {
+            if values.len() != w {
+                bail!(
+                    "line {}: expected {} fields, got {}",
+                    lineno + 1,
+                    w,
+                    values.len()
+                );
+            }
+        } else {
+            width = Some(values.len());
+        }
+        rows.push(values);
+    }
+    if rows.is_empty() {
+        bail!("CSV contains no data rows");
+    }
+    Ok(Matrix::from_rows(&rows))
+}
+
+/// Parse a single-column (or single-row) numeric CSV into a vector —
+/// the label-file format of `cli predict --labels`.
+pub fn parse_vector(text: &str) -> Result<Vec<f64>> {
+    let m = parse_matrix(text)?;
+    if m.cols() == 1 {
+        Ok((0..m.rows()).map(|i| m.get(i, 0)).collect())
+    } else if m.rows() == 1 {
+        Ok(m.row(0).to_vec())
+    } else {
+        bail!(
+            "expected a single-column (or single-row) CSV, got {}×{}",
+            m.rows(),
+            m.cols()
+        )
+    }
+}
+
+/// Read and parse a numeric CSV file.
+pub fn read_matrix(path: &str) -> Result<Matrix> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading `{path}`"))?;
+    parse_matrix(&text).with_context(|| format!("parsing `{path}`"))
+}
+
+/// Read and parse a label vector file.
+pub fn read_vector(path: &str) -> Result<Vec<f64>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading `{path}`"))?;
+    parse_vector(&text).with_context(|| format!("parsing `{path}`"))
+}
+
+/// Render a matrix as CSV text (shortest round-tripping decimal form per
+/// value, no header).
+pub fn format_matrix(x: &Matrix) -> String {
+    let mut out = String::new();
+    for i in 0..x.rows() {
+        let row = x.row(i);
+        for (j, v) in row.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&v.to_string());
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render a vector as single-column CSV text.
+pub fn format_vector(y: &[f64]) -> String {
+    let mut out = String::new();
+    for v in y {
+        out.push_str(&format!("{v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_numeric_csv() {
+        let m = parse_matrix("1,2.5,-3\n4,5,6\n").unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 3));
+        assert_eq!(m.get(0, 1), 2.5);
+        assert_eq!(m.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn skips_header_line() {
+        let m = parse_matrix("f0, f1\n1, 2\n3, 4\n").unwrap();
+        assert_eq!((m.rows(), m.cols()), (2, 2));
+        assert_eq!(m.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn header_width_constrains_data_rows() {
+        assert!(parse_matrix("a,b\n1,2,3\n").is_err());
+    }
+
+    #[test]
+    fn ragged_and_malformed_rows_error() {
+        assert!(parse_matrix("1,2\n3\n").is_err());
+        assert!(parse_matrix("1,2\n3,oops\n").is_err());
+        assert!(parse_matrix("\n\n").is_err());
+    }
+
+    #[test]
+    fn non_finite_values_are_rejected_like_the_http_front_end() {
+        assert!(parse_matrix("1,NaN\n2,3\n").is_err());
+        assert!(parse_matrix("1,2\n-inf,3\n").is_err());
+        // A "nan,inf" line parses as numbers, so it can't be a header —
+        // it errors as non-finite data instead of being silently eaten.
+        assert!(parse_matrix("nan,inf\n1,2\n").is_err());
+    }
+
+    #[test]
+    fn corrupt_first_row_is_not_mistaken_for_a_header() {
+        // One bad field among numeric ones: a damaged data row, not a
+        // header — skipping it would silently drop a prediction row.
+        assert!(parse_matrix("1O.5,2.0,3.0\n4,5,6\n").is_err());
+        // A fully non-numeric first line is still detected as a header.
+        let m = parse_matrix("alpha,beta\n1,2\n").unwrap();
+        assert_eq!((m.rows(), m.cols()), (1, 2));
+    }
+
+    #[test]
+    fn round_trips_through_format() {
+        let m = parse_matrix("0.1,2\n-3.25,0.0000001\n").unwrap();
+        let back = parse_matrix(&format_matrix(&m)).unwrap();
+        assert_eq!(m.data(), back.data());
+    }
+
+    #[test]
+    fn vector_accepts_column_or_row() {
+        assert_eq!(parse_vector("1\n0\n1\n").unwrap(), vec![1.0, 0.0, 1.0]);
+        assert_eq!(parse_vector("1,0,1\n").unwrap(), vec![1.0, 0.0, 1.0]);
+        assert!(parse_vector("1,2\n3,4\n").is_err());
+    }
+}

@@ -9,9 +9,12 @@
 //!   interdependence (the paper's decision-tree workload).
 //! - [`blobs`] — noisy isotropic Gaussian blobs for clustering, with the
 //!   "ambiguity" knob: target cluster count exceeding the true count.
+//! - [`csv`] — minimal numeric-CSV I/O for `cli predict` inputs and the
+//!   serving examples.
 
 pub mod blobs;
 pub mod classification;
+pub mod csv;
 pub mod sparse_regression;
 
 use crate::linalg::Matrix;

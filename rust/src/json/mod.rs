@@ -6,10 +6,50 @@
 //! handled by this self-contained recursive-descent implementation. It
 //! supports the full JSON grammar except `\uXXXX` surrogate pairs beyond
 //! the BMP (not needed for manifests/configs).
+//!
+//! ## Non-finite floats (artifact duty)
+//!
+//! JSON has no `NaN`/`Infinity` literals, but fitted-model artifacts
+//! (`backbone-model/v1`) legitimately carry them (e.g. the optimality
+//! `gap` of a heuristic fallback is `NaN`). A float-printing serializer
+//! that emits `NaN` bare produces a document **no** parser accepts back —
+//! a silent-corruption trap. This module therefore:
+//!
+//! - serializes a non-finite [`Json::Number`] as the tagged strings
+//!   `"NaN"` / `"Infinity"` / `"-Infinity"` (always-valid output);
+//! - rejects bare `NaN`/`Infinity`/`-Infinity` tokens at parse time with
+//!   the typed, downcastable error [`NonFiniteLiteral`];
+//! - offers the explicit codec pair [`Json::from_f64`] /
+//!   [`Json::as_f64_tagged`] for round-tripping any `f64` bit-faithfully
+//!   (finite values use the shortest decimal form, which `f64` parsing
+//!   inverts exactly).
 
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Typed parse error for bare non-finite number literals (`NaN`,
+/// `Infinity`, `-Infinity`): they are not valid JSON, and accepting them
+/// would mask serializers that corrupt documents. Use the tagged-string
+/// encoding ([`Json::from_f64`]) instead.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NonFiniteLiteral {
+    /// Byte offset of the offending token.
+    pub at: usize,
+}
+
+impl std::fmt::Display for NonFiniteLiteral {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "non-finite number literal at byte {}: NaN/Infinity are not valid JSON \
+             (use the tagged-string encoding, e.g. \"NaN\")",
+            self.at
+        )
+    }
+}
+
+impl std::error::Error for NonFiniteLiteral {}
 
 /// A parsed JSON value. Objects use `BTreeMap` for deterministic ordering.
 #[derive(Debug, Clone, PartialEq)]
@@ -63,6 +103,35 @@ impl Json {
         }
     }
 
+    /// Encode an `f64` so that **every** value round-trips: finite values
+    /// become a [`Json::Number`] (shortest decimal form, parsed back
+    /// bit-identically), non-finite values become the tagged strings
+    /// `"NaN"` / `"Infinity"` / `"-Infinity"`. Inverse:
+    /// [`Json::as_f64_tagged`].
+    pub fn from_f64(x: f64) -> Json {
+        if x.is_finite() {
+            Json::Number(x)
+        } else {
+            Json::String(non_finite_tag(x).to_string())
+        }
+    }
+
+    /// Decode a float written by [`Json::from_f64`]: numbers pass through,
+    /// the tagged strings map back to the non-finite values. Any other
+    /// shape (including untagged strings) is `None`.
+    pub fn as_f64_tagged(&self) -> Option<f64> {
+        match self {
+            Json::Number(x) => Some(*x),
+            Json::String(s) => match s.as_str() {
+                "NaN" => Some(f64::NAN),
+                "Infinity" => Some(f64::INFINITY),
+                "-Infinity" => Some(f64::NEG_INFINITY),
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 && x <= usize::MAX as f64 {
@@ -110,7 +179,15 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Number(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // Plain `{x}` would emit `NaN`/`inf` — tokens no JSON
+                    // parser (including ours) accepts back. Fall back to
+                    // the tagged-string encoding so output stays valid.
+                    write_escaped(out, non_finite_tag(*x));
+                } else if x.fract() == 0.0 && x.abs() < 1e15 && (*x != 0.0 || x.is_sign_positive())
+                {
+                    // `-0.0` is excluded: `as i64` would drop the sign bit
+                    // and break bit-identical artifact round-trips.
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -160,6 +237,17 @@ fn newline_indent(out: &mut String, indent: Option<usize>, depth: usize) {
         for _ in 0..w * depth {
             out.push(' ');
         }
+    }
+}
+
+/// Tagged-string spelling of a non-finite `f64` (see the module docs).
+fn non_finite_tag(x: f64) -> &'static str {
+    if x.is_nan() {
+        "NaN"
+    } else if x > 0.0 {
+        "Infinity"
+    } else {
+        "-Infinity"
     }
 }
 
@@ -215,6 +303,19 @@ impl<'a> Parser<'a> {
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
             Some(b'n') => self.literal("null", Json::Null),
+            // Bare NaN/Infinity: reject with the typed error rather than
+            // the generic "unexpected byte" so the cause is diagnosable.
+            // Only the exact spellings qualify — `Nope` is garbage, not a
+            // float-printing serializer's fingerprint.
+            Some(c @ (b'N' | b'I')) => {
+                if self.bytes[self.pos..].starts_with(b"NaN")
+                    || self.bytes[self.pos..].starts_with(b"Infinity")
+                {
+                    Err(anyhow::Error::new(NonFiniteLiteral { at: self.pos }))
+                } else {
+                    bail!("unexpected byte `{}` at {}", c as char, self.pos)
+                }
+            }
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             Some(c) => bail!("unexpected byte `{}` at {}", c as char, self.pos),
             None => bail!("unexpected end of input"),
@@ -234,6 +335,10 @@ impl<'a> Parser<'a> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
+            if self.bytes[self.pos..].starts_with(b"Infinity") {
+                // `-Infinity`: same typed rejection as the bare spellings.
+                return Err(anyhow::Error::new(NonFiniteLiteral { at: start }));
+            }
         }
         while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
             self.pos += 1;
@@ -427,5 +532,68 @@ mod tests {
         assert_eq!(Json::parse("[]").unwrap(), Json::Array(vec![]));
         assert_eq!(Json::parse("{}").unwrap(), Json::Object(Default::default()));
         assert_eq!(Json::Array(vec![]).to_string_compact(), "[]");
+    }
+
+    #[test]
+    fn control_characters_escape_and_round_trip() {
+        let nasty = "a\u{1}b\u{1f}c\"d\\e\nf\tg";
+        let text = Json::String(nasty.into()).to_string_compact();
+        // Every emitted byte must be a legal JSON string byte (no raw
+        // control characters survive into the document).
+        assert!(text.bytes().all(|b| b >= 0x20), "raw control byte in {text:?}");
+        assert!(text.contains("\\u0001") && text.contains("\\u001f"), "{text}");
+        assert_eq!(Json::parse(&text).unwrap(), Json::String(nasty.into()));
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_tagged_strings() {
+        assert_eq!(Json::Number(f64::NAN).to_string_compact(), "\"NaN\"");
+        assert_eq!(Json::Number(f64::INFINITY).to_string_compact(), "\"Infinity\"");
+        assert_eq!(
+            Json::Number(f64::NEG_INFINITY).to_string_compact(),
+            "\"-Infinity\""
+        );
+        // The emitted document is valid JSON and parses back.
+        let doc = Json::Object(
+            [("gap".to_string(), Json::Number(f64::NAN))].into_iter().collect(),
+        );
+        let back = Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(back.get("gap").unwrap(), &Json::String("NaN".into()));
+    }
+
+    #[test]
+    fn bare_non_finite_literals_are_typed_parse_errors() {
+        for doc in ["NaN", "Infinity", "-Infinity", "[1, NaN]", r#"{"a": -Infinity}"#] {
+            let err = Json::parse(doc).unwrap_err();
+            assert!(
+                err.downcast_ref::<NonFiniteLiteral>().is_some(),
+                "`{doc}` did not produce NonFiniteLiteral: {err}"
+            );
+        }
+        // Only the exact spellings get the typed diagnosis; other garbage
+        // starting with the same bytes stays a generic parse error.
+        for doc in ["Nope", "Inf", "-Item", "[Nautilus]"] {
+            let err = Json::parse(doc).unwrap_err();
+            assert!(
+                err.downcast_ref::<NonFiniteLiteral>().is_none(),
+                "`{doc}` was misdiagnosed as a non-finite literal: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn from_f64_round_trips_every_class_of_value() {
+        for x in [0.0, -0.0, 1.5, -3.25, 1e-300, 123456789.0, f64::MAX, f64::MIN_POSITIVE] {
+            let text = Json::from_f64(x).to_string_compact();
+            let back = Json::parse(&text).unwrap().as_f64_tagged().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} → {text} → {back}");
+        }
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let text = Json::from_f64(x).to_string_compact();
+            let back = Json::parse(&text).unwrap().as_f64_tagged().unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} → {text} → {back}");
+        }
+        // Untagged strings are not floats.
+        assert_eq!(Json::String("fast".into()).as_f64_tagged(), None);
     }
 }

@@ -38,7 +38,16 @@
 //!
 //! The same shape works for the other three learners
 //! (`Backbone::sparse_logistic()`, `Backbone::decision_tree()`,
-//! `Backbone::clustering()`); see [`backbone::estimator`]. The fit loop
+//! `Backbone::clustering()`); see [`backbone::estimator`].
+//!
+//! Fitted models outlive the process: [`persist::ModelArtifact`] freezes
+//! any fitted learner as a versioned `backbone-model/v1` JSON artifact
+//! whose [`persist::LoadedModel`] predicts bit-identically to the
+//! in-memory estimator, and [`serve`] exposes a loaded artifact over a
+//! std-only batched HTTP prediction server (`cli save` / `cli predict` /
+//! `cli serve`).
+//!
+//! The fit loop
 //! itself is a [`FitPipeline`] whose subproblem stage is an explicit,
 //! order-independent batch behind an [`ExecutionPolicy`]:
 //! `.threads(n)` on any builder (or `--threads N` on the CLI) runs each
@@ -75,10 +84,13 @@ pub mod data;
 pub mod json;
 pub mod linalg;
 pub mod metrics;
+pub mod persist;
 pub mod prop;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod util;
 
 pub use backbone::{Backbone, BackboneError, ExecutionPolicy, Fit, FitPipeline, Predict};
+pub use persist::{LoadedModel, ModelArtifact};

@@ -1,7 +1,9 @@
 //! Evaluation metrics used by Table 1 and the ablations.
 //!
 //! - Regression: `R²`, MSE (Table 1's sparse-regression accuracy column).
-//! - Classification: accuracy, `AUC` (Table 1's decision-tree column).
+//! - Classification: accuracy, `AUC` (Table 1's decision-tree column),
+//!   plus [`roc_auc`]/[`confusion_matrix`] for offline evaluation of
+//!   served models (`cli predict --labels`).
 //! - Clustering: mean `silhouette` score (Table 1's clustering column),
 //!   adjusted Rand index (ground-truth recovery, used in ablations).
 //! - Support recovery: precision/recall/F1 of a selected feature set
@@ -91,6 +93,81 @@ pub fn auc(y_true: &[f64], scores: &[f64]) -> f64 {
     let n_pos = pos.len() as f64;
     let n_neg = neg.len() as f64;
     (rank_sum_pos - n_pos * (n_pos + 1.0) / 2.0) / (n_pos * n_neg)
+}
+
+/// Canonical name for the area under the ROC curve (see [`auc`] for the
+/// rank-based computation). Reported by `cli predict --labels` so served
+/// classifiers are evaluable offline.
+pub fn roc_auc(y_true: &[f64], scores: &[f64]) -> f64 {
+    auc(y_true, scores)
+}
+
+/// Binary confusion counts at the 0.5 threshold, plus the derived rates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConfusionMatrix {
+    pub true_pos: usize,
+    pub false_pos: usize,
+    pub true_neg: usize,
+    pub false_neg: usize,
+}
+
+impl ConfusionMatrix {
+    pub fn total(&self) -> usize {
+        self.true_pos + self.false_pos + self.true_neg + self.false_neg
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        if self.total() == 0 {
+            return 0.0;
+        }
+        (self.true_pos + self.true_neg) as f64 / self.total() as f64
+    }
+
+    /// TP / (TP + FP); 0 when nothing was predicted positive.
+    pub fn precision(&self) -> f64 {
+        let denom = self.true_pos + self.false_pos;
+        if denom == 0 {
+            0.0
+        } else {
+            self.true_pos as f64 / denom as f64
+        }
+    }
+
+    /// TP / (TP + FN); 1 when there are no positives to find.
+    pub fn recall(&self) -> f64 {
+        let denom = self.true_pos + self.false_neg;
+        if denom == 0 {
+            1.0
+        } else {
+            self.true_pos as f64 / denom as f64
+        }
+    }
+
+    pub fn f1(&self) -> f64 {
+        let (p, r) = (self.precision(), self.recall());
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+}
+
+/// Confusion counts for labels in {0, 1} given scores thresholded at 0.5
+/// (same convention as [`accuracy`]).
+pub fn confusion_matrix(y_true: &[f64], scores: &[f64]) -> ConfusionMatrix {
+    assert_eq!(y_true.len(), scores.len());
+    let mut cm =
+        ConfusionMatrix { true_pos: 0, false_pos: 0, true_neg: 0, false_neg: 0 };
+    for (y, s) in y_true.iter().zip(scores) {
+        match (*y >= 0.5, *s >= 0.5) {
+            (true, true) => cm.true_pos += 1,
+            (false, true) => cm.false_pos += 1,
+            (false, false) => cm.true_neg += 1,
+            (true, false) => cm.false_neg += 1,
+        }
+    }
+    cm
 }
 
 /// Mean silhouette coefficient over all points.
@@ -255,6 +332,43 @@ mod tests {
     #[test]
     fn auc_degenerate_single_class() {
         assert_eq!(auc(&[1.0, 1.0], &[0.3, 0.7]), 0.5);
+    }
+
+    #[test]
+    fn roc_auc_is_auc() {
+        let y = [0.0, 1.0, 0.0, 1.0];
+        let s = [0.2, 0.9, 0.4, 0.6];
+        assert_eq!(roc_auc(&y, &s), auc(&y, &s));
+    }
+
+    #[test]
+    fn confusion_matrix_counts_and_rates() {
+        let y = [1.0, 1.0, 1.0, 0.0, 0.0, 0.0];
+        let s = [0.9, 0.6, 0.2, 0.8, 0.1, 0.3];
+        let cm = confusion_matrix(&y, &s);
+        assert_eq!(
+            cm,
+            ConfusionMatrix { true_pos: 2, false_pos: 1, true_neg: 2, false_neg: 1 }
+        );
+        assert_eq!(cm.total(), 6);
+        assert!((cm.accuracy() - 4.0 / 6.0).abs() < 1e-12);
+        assert!((cm.precision() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((cm.recall() - 2.0 / 3.0).abs() < 1e-12);
+        assert!((cm.f1() - 2.0 / 3.0).abs() < 1e-12);
+        // Accuracy agrees with the scalar metric.
+        assert_eq!(cm.accuracy(), accuracy(&y, &s));
+    }
+
+    #[test]
+    fn confusion_matrix_degenerate_cases() {
+        // Nothing predicted positive → precision 0; no true positives to
+        // find → recall 1 by convention.
+        let cm = confusion_matrix(&[0.0, 0.0], &[0.1, 0.2]);
+        assert_eq!(cm.precision(), 0.0);
+        assert_eq!(cm.recall(), 1.0);
+        assert_eq!(cm.f1(), 0.0);
+        let empty = confusion_matrix(&[], &[]);
+        assert_eq!(empty.accuracy(), 0.0);
     }
 
     #[test]

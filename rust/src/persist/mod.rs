@@ -1,0 +1,1029 @@
+//! Model persistence: the versioned `backbone-model/v1` artifact format.
+//!
+//! The backbone method's whole point is that its *output* is compact — a
+//! sparse support, a shallow tree, a centroid-free label set — so a
+//! fitted model is cheap to persist and serve. This module freezes that
+//! output as a JSON artifact (built on the in-house [`crate::json`]
+//! module; no new dependencies) that round-trips the fitted state of all
+//! four learners **bit-identically**:
+//!
+//! ```text
+//! fit → ModelArtifact::from_*(est) → save(path)            (cli save)
+//! load(path) → LoadedModel::try_predict(x)                 (cli predict / serve)
+//! ```
+//!
+//! [`LoadedModel`] implements the estimator API's [`Predict`] trait with
+//! the exact same shape checks and prediction rules as the fitted
+//! estimator it came from, so a served model and an in-memory model are
+//! interchangeable (enforced by the `persist_roundtrip` suite, which
+//! also pins the wire format with golden fixture files).
+//!
+//! ## Artifact layout
+//!
+//! ```json
+//! {
+//!   "schema": "backbone-model/v1",
+//!   "learner": "sparse_regression",
+//!   "crate_version": "0.3.0",
+//!   "provenance": {
+//!     "seed": 7,
+//!     "params": { "alpha": 0.5, "beta": 0.5, "num_subproblems": 5,
+//!                  "b_max": 100, "max_iterations": 4 },
+//!     "config": { "max_nonzeros": 10, "lambda2": 0.001, ... },
+//!     "diagnostics": { "backbone_size": 12, "iterations": 2, ... }
+//!   },
+//!   "model": { ...learner-specific fitted state... }
+//! }
+//! ```
+//!
+//! Floats are encoded with [`Json::from_f64`] (shortest decimal form;
+//! `NaN`/`±inf` as tagged strings), so every `f64` — including the `NaN`
+//! optimality gap of a heuristic fallback — survives save/load with its
+//! exact bit pattern.
+
+use crate::backbone::clustering::{BackboneClustering, ClusteringModel};
+use crate::backbone::decision_tree::{BackboneDecisionTree, BackboneTreeModel};
+use crate::backbone::sparse_logistic::BackboneSparseLogistic;
+use crate::backbone::sparse_regression::{BackboneSparseRegression, SparseRegressionModel};
+use crate::backbone::{BackboneDiagnostics, BackboneError, BackboneParams, Predict};
+use crate::json::Json;
+use crate::linalg::Matrix;
+use crate::solvers::exact_tree::BinNode;
+use crate::solvers::logistic::LogisticModel;
+use crate::solvers::SolveStatus;
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Schema tag of the artifact format this module reads and writes.
+pub const MODEL_SCHEMA: &str = "backbone-model/v1";
+
+/// Typed error surface of artifact save/load.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PersistError {
+    /// Filesystem failure (path + OS message).
+    Io { path: String, message: String },
+    /// The document is not valid JSON.
+    Parse { message: String },
+    /// The document is JSON but not a `backbone-model/v1` artifact
+    /// (missing/wrong schema tag, unknown learner id, version mismatch).
+    Schema { message: String },
+    /// A required field is missing or has the wrong type/value.
+    Field { field: String, message: String },
+    /// Tried to capture an artifact from an estimator that has no fitted
+    /// model yet.
+    NotFitted,
+}
+
+impl fmt::Display for PersistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Io { path, message } => write!(f, "artifact I/O on `{path}`: {message}"),
+            Self::Parse { message } => write!(f, "artifact is not valid JSON: {message}"),
+            Self::Schema { message } => write!(f, "not a {MODEL_SCHEMA} artifact: {message}"),
+            Self::Field { field, message } => {
+                write!(f, "artifact field `{field}`: {message}")
+            }
+            Self::NotFitted => {
+                write!(f, "estimator has no fitted model to persist; call fit() first")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PersistError {}
+
+/// Which of the four shipped learners produced an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LearnerKind {
+    SparseRegression,
+    SparseLogistic,
+    DecisionTree,
+    Clustering,
+}
+
+impl LearnerKind {
+    /// Stable learner id used in the artifact's `learner` field.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::SparseRegression => "sparse_regression",
+            Self::SparseLogistic => "sparse_logistic",
+            Self::DecisionTree => "decision_tree",
+            Self::Clustering => "clustering",
+        }
+    }
+
+    /// Parse a learner id (the inverse of [`LearnerKind::name`]).
+    pub fn parse(s: &str) -> Result<Self, PersistError> {
+        match s {
+            "sparse_regression" => Ok(Self::SparseRegression),
+            "sparse_logistic" => Ok(Self::SparseLogistic),
+            "decision_tree" => Ok(Self::DecisionTree),
+            "clustering" => Ok(Self::Clustering),
+            other => Err(PersistError::Schema {
+                message: format!("unknown learner id `{other}`"),
+            }),
+        }
+    }
+
+    /// True for the two probabilistic binary classifiers (whose serving
+    /// payload includes scores alongside 0/1 predictions).
+    pub fn is_classifier(&self) -> bool {
+        matches!(self, Self::SparseLogistic | Self::DecisionTree)
+    }
+}
+
+/// Fitted state loaded from (or headed into) an artifact. Implements
+/// [`Predict`] with the same rules as the estimator it was captured from.
+#[derive(Debug, Clone)]
+pub enum LoadedModel {
+    SparseRegression(SparseRegressionModel),
+    SparseLogistic(LogisticModel),
+    DecisionTree(BackboneTreeModel),
+    Clustering(ClusteringModel),
+}
+
+impl LoadedModel {
+    pub fn kind(&self) -> LearnerKind {
+        match self {
+            Self::SparseRegression(_) => LearnerKind::SparseRegression,
+            Self::SparseLogistic(_) => LearnerKind::SparseLogistic,
+            Self::DecisionTree(_) => LearnerKind::DecisionTree,
+            Self::Clustering(_) => LearnerKind::Clustering,
+        }
+    }
+
+    /// Feature count a prediction input must satisfy: the exact column
+    /// count for the linear models, the *minimum* column count for the
+    /// tree (only split features are read), `None` for clustering (which
+    /// is transductive — the contract is on the row count instead, see
+    /// [`LoadedModel::expected_rows`]).
+    pub fn num_features(&self) -> Option<usize> {
+        match self {
+            Self::SparseRegression(m) => Some(m.beta.len()),
+            Self::SparseLogistic(m) => Some(m.beta.len()),
+            Self::DecisionTree(m) => {
+                Some(m.bin_map.iter().map(|&(src, _)| src + 1).max().unwrap_or(0))
+            }
+            Self::Clustering(_) => None,
+        }
+    }
+
+    /// Row count a clustering prediction input must have (the training
+    /// point count); `None` for the supervised learners.
+    pub fn expected_rows(&self) -> Option<usize> {
+        match self {
+            Self::Clustering(m) => Some(m.labels.len()),
+            _ => None,
+        }
+    }
+
+    /// Continuous scores for evaluation and serving: raw predictions for
+    /// regression, P(y = 1) for the classifiers, labels (as f64) for
+    /// clustering. Shape checks are the same as [`Predict::try_predict`].
+    pub fn predict_scores(&self, x: &Matrix) -> Result<Vec<f64>, BackboneError> {
+        self.check_shape(x)?;
+        Ok(match self {
+            Self::SparseRegression(m) => m.predict(x),
+            Self::SparseLogistic(m) => m.predict_proba(x),
+            Self::DecisionTree(m) => m.predict_proba(x),
+            Self::Clustering(m) => m.labels.iter().map(|&l| l as f64).collect(),
+        })
+    }
+
+    /// Predictions derived from a [`LoadedModel::predict_scores`] batch,
+    /// bit-identical to [`Predict::try_predict`] on the same input: the
+    /// classifiers threshold P(y = 1) at 0.5 exactly as their inherent
+    /// `predict` does; regression and clustering scores *are* the
+    /// predictions. Lets the serving hot path run inference once.
+    pub fn predictions_from_scores(&self, scores: &[f64]) -> Vec<f64> {
+        match self {
+            Self::SparseRegression(_) | Self::Clustering(_) => scores.to_vec(),
+            Self::SparseLogistic(_) | Self::DecisionTree(_) => scores
+                .iter()
+                .map(|&p| if p >= 0.5 { 1.0 } else { 0.0 })
+                .collect(),
+        }
+    }
+
+    fn check_shape(&self, x: &Matrix) -> Result<(), BackboneError> {
+        match self {
+            Self::SparseRegression(m) => {
+                if x.cols() != m.beta.len() {
+                    return Err(BackboneError::ShapeMismatch {
+                        expected: m.beta.len(),
+                        got: x.cols(),
+                    });
+                }
+            }
+            Self::SparseLogistic(m) => {
+                if x.cols() != m.beta.len() {
+                    return Err(BackboneError::ShapeMismatch {
+                        expected: m.beta.len(),
+                        got: x.cols(),
+                    });
+                }
+            }
+            Self::DecisionTree(_) => {
+                // Same contract /healthz advertises via num_features().
+                let needed = self.num_features().unwrap_or(0);
+                if x.cols() < needed {
+                    return Err(BackboneError::ShapeMismatch {
+                        expected: needed,
+                        got: x.cols(),
+                    });
+                }
+            }
+            Self::Clustering(m) => {
+                if x.rows() != m.labels.len() {
+                    return Err(BackboneError::ShapeMismatch {
+                        expected: m.labels.len(),
+                        got: x.rows(),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Predict for LoadedModel {
+    type Output = Vec<f64>;
+
+    /// Predict exactly as the originating estimator would: raw values for
+    /// regression, thresholded 0/1 labels for the classifiers, cluster
+    /// labels (as exactly-representable f64) for clustering.
+    fn try_predict(&self, x: &Matrix) -> Result<Vec<f64>, BackboneError> {
+        self.check_shape(x)?;
+        Ok(match self {
+            Self::SparseRegression(m) => m.predict(x),
+            Self::SparseLogistic(m) => m.predict(x),
+            Self::DecisionTree(m) => m.predict(x),
+            Self::Clustering(m) => m.labels.iter().map(|&l| l as f64).collect(),
+        })
+    }
+}
+
+/// Summary of the fit that produced an artifact (enough to audit a served
+/// model without re-running it; not needed to predict).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiagnosticsDigest {
+    pub screened_universe: usize,
+    pub backbone_size: usize,
+    /// Number of backbone iterations the fit ran.
+    pub iterations: usize,
+    pub converged: bool,
+    pub truncated: bool,
+    pub budget_exhausted: bool,
+    pub phase1_secs: f64,
+    pub phase2_secs: f64,
+}
+
+impl DiagnosticsDigest {
+    pub fn from_diagnostics(d: &BackboneDiagnostics) -> Self {
+        Self {
+            screened_universe: d.screened_universe,
+            backbone_size: d.backbone_size,
+            iterations: d.iterations.len(),
+            converged: d.converged,
+            truncated: d.truncated,
+            budget_exhausted: d.budget_exhausted,
+            phase1_secs: d.phase1_secs,
+            phase2_secs: d.phase2_secs,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("screened_universe".into(), Json::Number(self.screened_universe as f64));
+        m.insert("backbone_size".into(), Json::Number(self.backbone_size as f64));
+        m.insert("iterations".into(), Json::Number(self.iterations as f64));
+        m.insert("converged".into(), Json::Bool(self.converged));
+        m.insert("truncated".into(), Json::Bool(self.truncated));
+        m.insert("budget_exhausted".into(), Json::Bool(self.budget_exhausted));
+        m.insert("phase1_secs".into(), Json::from_f64(self.phase1_secs));
+        m.insert("phase2_secs".into(), Json::from_f64(self.phase2_secs));
+        Json::Object(m)
+    }
+
+    fn from_json(v: &Json) -> Result<Self, PersistError> {
+        Ok(Self {
+            screened_universe: req_usize(v, "screened_universe")?,
+            backbone_size: req_usize(v, "backbone_size")?,
+            iterations: req_usize(v, "iterations")?,
+            converged: req_bool(v, "converged")?,
+            truncated: req_bool(v, "truncated")?,
+            budget_exhausted: req_bool(v, "budget_exhausted")?,
+            phase1_secs: req_f64(v, "phase1_secs")?,
+            phase2_secs: req_f64(v, "phase2_secs")?,
+        })
+    }
+}
+
+/// Where an artifact came from: the Algorithm-1 hyperparameters, the
+/// learner-specific knobs, the RNG seed, the crate version that fitted
+/// it, and a digest of the fit diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    /// `CARGO_PKG_VERSION` of the crate that fitted the model.
+    pub crate_version: String,
+    /// RNG seed of the fit.
+    pub seed: u64,
+    /// Shared Algorithm-1 params (`alpha`, `beta`, `num_subproblems`,
+    /// `b_max`, `max_iterations`), as a JSON object.
+    pub params: Json,
+    /// Learner-specific knobs (e.g. `max_nonzeros`, `lambda2`), as a JSON
+    /// object.
+    pub config: Json,
+    /// Digest of the fit's diagnostics, when the estimator had any.
+    pub diagnostics: Option<DiagnosticsDigest>,
+}
+
+impl Provenance {
+    fn capture(
+        params: &BackboneParams,
+        config: Json,
+        diagnostics: Option<&BackboneDiagnostics>,
+    ) -> Self {
+        let mut p = BTreeMap::new();
+        p.insert("alpha".into(), Json::from_f64(params.alpha));
+        p.insert("beta".into(), Json::from_f64(params.beta));
+        p.insert("num_subproblems".into(), Json::Number(params.num_subproblems as f64));
+        p.insert("b_max".into(), Json::Number(params.b_max as f64));
+        p.insert("max_iterations".into(), Json::Number(params.max_iterations as f64));
+        Self {
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            seed: params.seed,
+            params: Json::Object(p),
+            config,
+            diagnostics: diagnostics.map(DiagnosticsDigest::from_diagnostics),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        // f64 is exact only up to 2^53; larger seeds go through a decimal
+        // string so the provenance always names the seed that actually
+        // produced the fit.
+        let seed = if self.seed <= (1u64 << 53) {
+            Json::Number(self.seed as f64)
+        } else {
+            Json::String(self.seed.to_string())
+        };
+        m.insert("seed".into(), seed);
+        m.insert("params".into(), self.params.clone());
+        m.insert("config".into(), self.config.clone());
+        if let Some(d) = &self.diagnostics {
+            m.insert("diagnostics".into(), d.to_json());
+        }
+        Json::Object(m)
+    }
+
+    fn from_json(v: &Json, crate_version: String) -> Result<Self, PersistError> {
+        let params = v.get("params").cloned().unwrap_or(Json::Object(BTreeMap::new()));
+        let config = v.get("config").cloned().unwrap_or(Json::Object(BTreeMap::new()));
+        for (field, val) in [("params", &params), ("config", &config)] {
+            if val.as_object().is_none() {
+                return Err(PersistError::Field {
+                    field: format!("provenance.{field}"),
+                    message: "must be a JSON object".into(),
+                });
+            }
+        }
+        let seed = match v.get("seed") {
+            None => 0,
+            Some(Json::String(s)) => s.parse::<u64>().map_err(|_| PersistError::Field {
+                field: "provenance.seed".into(),
+                message: format!("must be a non-negative integer, got `{s}`"),
+            })?,
+            Some(n) => {
+                let x = n.as_f64().unwrap_or(-1.0);
+                if x < 0.0 || x.fract() != 0.0 || x > (1u64 << 53) as f64 {
+                    return Err(PersistError::Field {
+                        field: "provenance.seed".into(),
+                        message: format!("must be a non-negative integer, got {x}"),
+                    });
+                }
+                x as u64
+            }
+        };
+        let diagnostics = match v.get("diagnostics") {
+            Some(d) => Some(DiagnosticsDigest::from_json(d)?),
+            None => None,
+        };
+        Ok(Self { crate_version, seed, params, config, diagnostics })
+    }
+}
+
+/// A complete, versioned fitted-model artifact.
+#[derive(Debug, Clone)]
+pub struct ModelArtifact {
+    pub model: LoadedModel,
+    pub provenance: Provenance,
+}
+
+impl ModelArtifact {
+    /// Learner id of the contained model.
+    pub fn learner(&self) -> LearnerKind {
+        self.model.kind()
+    }
+
+    /// Capture a fitted sparse-regression estimator.
+    pub fn from_sparse_regression(
+        est: &BackboneSparseRegression,
+    ) -> Result<Self, PersistError> {
+        let model = est.model().ok_or(PersistError::NotFitted)?.clone();
+        let mut c = BTreeMap::new();
+        c.insert("max_nonzeros".into(), Json::Number(est.max_nonzeros as f64));
+        c.insert("subproblem_nonzeros".into(), Json::Number(est.subproblem_nonzeros as f64));
+        c.insert("lambda2".into(), Json::from_f64(est.lambda2));
+        c.insert("gap_tol".into(), Json::from_f64(est.gap_tol));
+        Ok(Self {
+            model: LoadedModel::SparseRegression(model),
+            provenance: Provenance::capture(
+                &est.params,
+                Json::Object(c),
+                est.last_diagnostics.as_ref(),
+            ),
+        })
+    }
+
+    /// Capture a fitted sparse-logistic estimator.
+    pub fn from_sparse_logistic(est: &BackboneSparseLogistic) -> Result<Self, PersistError> {
+        let model = est.model().ok_or(PersistError::NotFitted)?.clone();
+        let mut c = BTreeMap::new();
+        c.insert("max_nonzeros".into(), Json::Number(est.max_nonzeros as f64));
+        c.insert("ridge".into(), Json::from_f64(est.ridge));
+        c.insert("iht_iters".into(), Json::Number(est.iht_iters as f64));
+        Ok(Self {
+            model: LoadedModel::SparseLogistic(model),
+            provenance: Provenance::capture(
+                &est.params,
+                Json::Object(c),
+                est.last_diagnostics.as_ref(),
+            ),
+        })
+    }
+
+    /// Capture a fitted decision-tree estimator.
+    pub fn from_decision_tree(est: &BackboneDecisionTree) -> Result<Self, PersistError> {
+        let model = est.model().ok_or(PersistError::NotFitted)?.clone();
+        let mut c = BTreeMap::new();
+        c.insert("depth".into(), Json::Number(est.depth as f64));
+        c.insert("bins".into(), Json::Number(est.bins as f64));
+        c.insert("min_leaf".into(), Json::Number(est.min_leaf as f64));
+        c.insert("importance_threshold".into(), Json::from_f64(est.importance_threshold));
+        Ok(Self {
+            model: LoadedModel::DecisionTree(model),
+            provenance: Provenance::capture(
+                &est.params,
+                Json::Object(c),
+                est.last_diagnostics.as_ref(),
+            ),
+        })
+    }
+
+    /// Capture a fitted clustering estimator.
+    pub fn from_clustering(est: &BackboneClustering) -> Result<Self, PersistError> {
+        let model = est.model().ok_or(PersistError::NotFitted)?.clone();
+        let mut c = BTreeMap::new();
+        c.insert("n_clusters".into(), Json::Number(est.n_clusters as f64));
+        c.insert("min_cluster_size".into(), Json::Number(est.min_cluster_size as f64));
+        c.insert("n_init".into(), Json::Number(est.n_init as f64));
+        Ok(Self {
+            model: LoadedModel::Clustering(model),
+            provenance: Provenance::capture(
+                &est.params,
+                Json::Object(c),
+                est.last_diagnostics.as_ref(),
+            ),
+        })
+    }
+
+    /// Serialize to the `backbone-model/v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Json::String(MODEL_SCHEMA.into()));
+        m.insert("learner".into(), Json::String(self.learner().name().into()));
+        m.insert(
+            "crate_version".into(),
+            Json::String(self.provenance.crate_version.clone()),
+        );
+        m.insert("provenance".into(), self.provenance.to_json());
+        m.insert(
+            "model".into(),
+            match &self.model {
+                LoadedModel::SparseRegression(x) => sr_to_json(x),
+                LoadedModel::SparseLogistic(x) => lg_to_json(x),
+                LoadedModel::DecisionTree(x) => dt_to_json(x),
+                LoadedModel::Clustering(x) => cl_to_json(x),
+            },
+        );
+        Json::Object(m)
+    }
+
+    /// Deserialize from a parsed `backbone-model/v1` document.
+    pub fn from_json(v: &Json) -> Result<Self, PersistError> {
+        let schema = v.get("schema").and_then(Json::as_str).ok_or_else(|| {
+            PersistError::Schema { message: "missing `schema` tag".into() }
+        })?;
+        if schema != MODEL_SCHEMA {
+            return Err(PersistError::Schema {
+                message: format!("unsupported schema `{schema}` (expected {MODEL_SCHEMA})"),
+            });
+        }
+        let learner = LearnerKind::parse(
+            v.get("learner").and_then(Json::as_str).ok_or_else(|| {
+                PersistError::Schema { message: "missing `learner` id".into() }
+            })?,
+        )?;
+        let crate_version = v
+            .get("crate_version")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let provenance = Provenance::from_json(
+            v.get("provenance").unwrap_or(&Json::Null),
+            crate_version,
+        )?;
+        let body = v.require("model").map_err(|e| PersistError::Field {
+            field: "model".into(),
+            message: e.to_string(),
+        })?;
+        let model = match learner {
+            LearnerKind::SparseRegression => LoadedModel::SparseRegression(sr_from_json(body)?),
+            LearnerKind::SparseLogistic => LoadedModel::SparseLogistic(lg_from_json(body)?),
+            LearnerKind::DecisionTree => LoadedModel::DecisionTree(dt_from_json(body)?),
+            LearnerKind::Clustering => LoadedModel::Clustering(cl_from_json(body)?),
+        };
+        Ok(Self { model, provenance })
+    }
+
+    /// Parse an artifact from JSON text.
+    pub fn parse(text: &str) -> Result<Self, PersistError> {
+        let v = Json::parse(text)
+            .map_err(|e| PersistError::Parse { message: format!("{e:#}") })?;
+        Self::from_json(&v)
+    }
+
+    /// Write the artifact to `path` (pretty-printed, trailing newline).
+    pub fn save(&self, path: &str) -> Result<(), PersistError> {
+        std::fs::write(path, self.to_json().to_string_pretty()).map_err(|e| {
+            PersistError::Io { path: path.into(), message: e.to_string() }
+        })
+    }
+
+    /// Load an artifact from `path`.
+    pub fn load(path: &str) -> Result<Self, PersistError> {
+        let text = std::fs::read_to_string(path).map_err(|e| PersistError::Io {
+            path: path.into(),
+            message: e.to_string(),
+        })?;
+        Self::parse(&text)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-learner model codecs
+// ---------------------------------------------------------------------------
+
+fn status_name(s: SolveStatus) -> &'static str {
+    match s {
+        SolveStatus::Optimal => "optimal",
+        SolveStatus::TimedOut => "timed_out",
+        SolveStatus::NodeLimit => "node_limit",
+        SolveStatus::Infeasible => "infeasible",
+        SolveStatus::Unbounded => "unbounded",
+    }
+}
+
+fn status_from_json(v: &Json, field: &'static str) -> Result<SolveStatus, PersistError> {
+    let name = v.get(field).and_then(Json::as_str).ok_or_else(|| PersistError::Field {
+        field: field.into(),
+        message: "missing solve status".into(),
+    })?;
+    match name {
+        "optimal" => Ok(SolveStatus::Optimal),
+        "timed_out" => Ok(SolveStatus::TimedOut),
+        "node_limit" => Ok(SolveStatus::NodeLimit),
+        "infeasible" => Ok(SolveStatus::Infeasible),
+        "unbounded" => Ok(SolveStatus::Unbounded),
+        other => Err(PersistError::Field {
+            field: field.into(),
+            message: format!("unknown solve status `{other}`"),
+        }),
+    }
+}
+
+fn f64_array(xs: &[f64]) -> Json {
+    Json::Array(xs.iter().map(|&x| Json::from_f64(x)).collect())
+}
+
+fn usize_array(xs: &[usize]) -> Json {
+    Json::Array(xs.iter().map(|&x| Json::Number(x as f64)).collect())
+}
+
+fn req_field<'a>(v: &'a Json, field: &str) -> Result<&'a Json, PersistError> {
+    v.get(field).ok_or_else(|| PersistError::Field {
+        field: field.into(),
+        message: "missing".into(),
+    })
+}
+
+fn req_f64(v: &Json, field: &str) -> Result<f64, PersistError> {
+    req_field(v, field)?.as_f64_tagged().ok_or_else(|| PersistError::Field {
+        field: field.into(),
+        message: "must be a number (or tagged non-finite string)".into(),
+    })
+}
+
+fn req_usize(v: &Json, field: &str) -> Result<usize, PersistError> {
+    req_field(v, field)?.as_usize().ok_or_else(|| PersistError::Field {
+        field: field.into(),
+        message: "must be a non-negative integer".into(),
+    })
+}
+
+fn req_bool(v: &Json, field: &str) -> Result<bool, PersistError> {
+    req_field(v, field)?.as_bool().ok_or_else(|| PersistError::Field {
+        field: field.into(),
+        message: "must be a boolean".into(),
+    })
+}
+
+fn req_f64_vec(v: &Json, field: &str) -> Result<Vec<f64>, PersistError> {
+    let arr = req_field(v, field)?.as_array().ok_or_else(|| PersistError::Field {
+        field: field.into(),
+        message: "must be an array".into(),
+    })?;
+    arr.iter()
+        .map(|x| {
+            x.as_f64_tagged().ok_or_else(|| PersistError::Field {
+                field: field.into(),
+                message: "array entries must be numbers".into(),
+            })
+        })
+        .collect()
+}
+
+fn req_usize_vec(v: &Json, field: &str) -> Result<Vec<usize>, PersistError> {
+    let arr = req_field(v, field)?.as_array().ok_or_else(|| PersistError::Field {
+        field: field.into(),
+        message: "must be an array".into(),
+    })?;
+    arr.iter()
+        .map(|x| {
+            x.as_usize().ok_or_else(|| PersistError::Field {
+                field: field.into(),
+                message: "array entries must be non-negative integers".into(),
+            })
+        })
+        .collect()
+}
+
+fn sr_to_json(m: &SparseRegressionModel) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("beta".into(), f64_array(&m.beta));
+    o.insert("intercept".into(), Json::from_f64(m.intercept));
+    o.insert("support".into(), usize_array(&m.support));
+    o.insert("objective".into(), Json::from_f64(m.objective));
+    o.insert("gap".into(), Json::from_f64(m.gap));
+    o.insert("status".into(), Json::String(status_name(m.status).into()));
+    Json::Object(o)
+}
+
+fn sr_from_json(v: &Json) -> Result<SparseRegressionModel, PersistError> {
+    Ok(SparseRegressionModel {
+        beta: req_f64_vec(v, "beta")?,
+        intercept: req_f64(v, "intercept")?,
+        support: req_usize_vec(v, "support")?,
+        objective: req_f64(v, "objective")?,
+        gap: req_f64(v, "gap")?,
+        status: status_from_json(v, "status")?,
+    })
+}
+
+fn lg_to_json(m: &LogisticModel) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("beta".into(), f64_array(&m.beta));
+    o.insert("intercept".into(), Json::from_f64(m.intercept));
+    o.insert("support".into(), usize_array(&m.support));
+    o.insert("nll".into(), Json::from_f64(m.nll));
+    o.insert("status".into(), Json::String(status_name(m.status).into()));
+    Json::Object(o)
+}
+
+fn lg_from_json(v: &Json) -> Result<LogisticModel, PersistError> {
+    Ok(LogisticModel {
+        beta: req_f64_vec(v, "beta")?,
+        intercept: req_f64(v, "intercept")?,
+        support: req_usize_vec(v, "support")?,
+        nll: req_f64(v, "nll")?,
+        status: status_from_json(v, "status")?,
+    })
+}
+
+fn node_to_json(node: &BinNode) -> Json {
+    let mut o = BTreeMap::new();
+    match node {
+        BinNode::Leaf { prob, n } => {
+            let mut leaf = BTreeMap::new();
+            leaf.insert("prob".into(), Json::from_f64(*prob));
+            leaf.insert("n".into(), Json::Number(*n as f64));
+            o.insert("leaf".into(), Json::Object(leaf));
+        }
+        BinNode::Split { feature, left, right } => {
+            let mut split = BTreeMap::new();
+            split.insert("feature".into(), Json::Number(*feature as f64));
+            split.insert("left".into(), node_to_json(left));
+            split.insert("right".into(), node_to_json(right));
+            o.insert("split".into(), Json::Object(split));
+        }
+    }
+    Json::Object(o)
+}
+
+fn node_from_json(v: &Json) -> Result<BinNode, PersistError> {
+    if let Some(leaf) = v.get("leaf") {
+        return Ok(BinNode::Leaf {
+            prob: req_f64(leaf, "prob")?,
+            n: req_usize(leaf, "n")?,
+        });
+    }
+    if let Some(split) = v.get("split") {
+        return Ok(BinNode::Split {
+            feature: req_usize(split, "feature")?,
+            left: Box::new(node_from_json(req_field(split, "left")?)?),
+            right: Box::new(node_from_json(req_field(split, "right")?)?),
+        });
+    }
+    Err(PersistError::Field {
+        field: "root".into(),
+        message: "tree node must be a `leaf` or `split` object".into(),
+    })
+}
+
+fn dt_to_json(m: &BackboneTreeModel) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("root".into(), node_to_json(&m.root));
+    o.insert(
+        "bin_map".into(),
+        Json::Array(
+            m.bin_map
+                .iter()
+                .map(|&(src, thr)| {
+                    Json::Array(vec![Json::Number(src as f64), Json::from_f64(thr)])
+                })
+                .collect(),
+        ),
+    );
+    o.insert("errors".into(), Json::Number(m.errors as f64));
+    o.insert("status".into(), Json::String(status_name(m.status).into()));
+    o.insert("backbone_features".into(), usize_array(&m.backbone_features));
+    Json::Object(o)
+}
+
+fn dt_from_json(v: &Json) -> Result<BackboneTreeModel, PersistError> {
+    let pairs = req_field(v, "bin_map")?.as_array().ok_or_else(|| PersistError::Field {
+        field: "bin_map".into(),
+        message: "must be an array".into(),
+    })?;
+    let mut bin_map = Vec::with_capacity(pairs.len());
+    for pair in pairs {
+        let entry = pair.as_array().filter(|a| a.len() == 2).ok_or_else(|| {
+            PersistError::Field {
+                field: "bin_map".into(),
+                message: "entries must be [feature, threshold] pairs".into(),
+            }
+        })?;
+        let src = entry[0].as_usize().ok_or_else(|| PersistError::Field {
+            field: "bin_map".into(),
+            message: "feature index must be a non-negative integer".into(),
+        })?;
+        let thr = entry[1].as_f64_tagged().ok_or_else(|| PersistError::Field {
+            field: "bin_map".into(),
+            message: "threshold must be a number".into(),
+        })?;
+        bin_map.push((src, thr));
+    }
+    let root = node_from_json(req_field(v, "root")?)?;
+    // A split's binary-column index must resolve through the bin map —
+    // reject artifacts whose tree points past it rather than panicking
+    // at predict time.
+    fn check(node: &BinNode, bins: usize) -> Result<(), PersistError> {
+        if let BinNode::Split { feature, left, right } = node {
+            if *feature >= bins {
+                return Err(PersistError::Field {
+                    field: "root".into(),
+                    message: format!(
+                        "split references binary column {feature} but bin_map has {bins}"
+                    ),
+                });
+            }
+            check(left, bins)?;
+            check(right, bins)?;
+        }
+        Ok(())
+    }
+    check(&root, bin_map.len())?;
+    Ok(BackboneTreeModel {
+        root,
+        bin_map,
+        errors: req_usize(v, "errors")?,
+        status: status_from_json(v, "status")?,
+        backbone_features: req_usize_vec(v, "backbone_features")?,
+    })
+}
+
+fn cl_to_json(m: &ClusteringModel) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("labels".into(), usize_array(&m.labels));
+    o.insert("objective".into(), Json::from_f64(m.objective));
+    o.insert("gap".into(), Json::from_f64(m.gap));
+    o.insert("status".into(), Json::String(status_name(m.status).into()));
+    Json::Object(o)
+}
+
+fn cl_from_json(v: &Json) -> Result<ClusteringModel, PersistError> {
+    Ok(ClusteringModel {
+        labels: req_usize_vec(v, "labels")?,
+        objective: req_f64(v, "objective")?,
+        gap: req_f64(v, "gap")?,
+        status: status_from_json(v, "status")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_sr_model() -> SparseRegressionModel {
+        SparseRegressionModel {
+            beta: vec![0.0, 1.5, 0.0, -2.25],
+            intercept: 0.5,
+            support: vec![1, 3],
+            objective: 3.5,
+            gap: f64::NAN,
+            status: SolveStatus::Optimal,
+        }
+    }
+
+    fn toy_artifact() -> ModelArtifact {
+        ModelArtifact {
+            model: LoadedModel::SparseRegression(toy_sr_model()),
+            provenance: Provenance {
+                crate_version: env!("CARGO_PKG_VERSION").into(),
+                seed: 7,
+                params: Json::Object(BTreeMap::new()),
+                config: Json::Object(BTreeMap::new()),
+                diagnostics: None,
+            },
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_bit() {
+        let art = toy_artifact();
+        let text = art.to_json().to_string_pretty();
+        let back = ModelArtifact::parse(&text).unwrap();
+        let LoadedModel::SparseRegression(m) = &back.model else {
+            panic!("wrong learner kind")
+        };
+        let orig = toy_sr_model();
+        assert_eq!(m.beta, orig.beta);
+        assert_eq!(m.intercept.to_bits(), orig.intercept.to_bits());
+        assert!(m.gap.is_nan(), "NaN gap must survive the round trip");
+        assert_eq!(m.support, orig.support);
+        assert_eq!(m.status, orig.status);
+        assert_eq!(back.provenance.seed, 7);
+    }
+
+    #[test]
+    fn predict_matches_in_memory_model() {
+        let art = toy_artifact();
+        let x = Matrix::from_rows(&[
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![-1.0, 0.5, 0.0, 2.0],
+        ]);
+        let direct = toy_sr_model().predict(&x);
+        let loaded = art.model.try_predict(&x).unwrap();
+        assert_eq!(direct, loaded);
+    }
+
+    #[test]
+    fn shape_mismatch_is_a_typed_error() {
+        let art = toy_artifact();
+        let err = art.model.try_predict(&Matrix::zeros(2, 3)).unwrap_err();
+        assert_eq!(err, BackboneError::ShapeMismatch { expected: 4, got: 3 });
+    }
+
+    #[test]
+    fn wrong_schema_and_learner_are_schema_errors() {
+        let err = ModelArtifact::parse("{}").unwrap_err();
+        assert!(matches!(err, PersistError::Schema { .. }), "{err}");
+
+        let err = ModelArtifact::parse(
+            r#"{"schema": "backbone-model/v0", "learner": "sparse_regression", "model": {}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, PersistError::Schema { .. }), "{err}");
+
+        let err = ModelArtifact::parse(
+            r#"{"schema": "backbone-model/v1", "learner": "perceptron", "model": {}}"#,
+        )
+        .unwrap_err();
+        assert!(matches!(err, PersistError::Schema { .. }), "{err}");
+    }
+
+    #[test]
+    fn missing_model_fields_name_the_field() {
+        let doc = r#"{"schema": "backbone-model/v1", "learner": "sparse_regression",
+                      "model": {"beta": [1.0]}}"#;
+        let err = ModelArtifact::parse(doc).unwrap_err();
+        let PersistError::Field { field, .. } = &err else { panic!("{err}") };
+        assert_eq!(field, "intercept");
+    }
+
+    #[test]
+    fn malformed_tree_nodes_are_rejected() {
+        let doc = r#"{"schema": "backbone-model/v1", "learner": "decision_tree",
+          "model": {"root": {"split": {"feature": 5,
+                      "left": {"leaf": {"prob": 0.5, "n": 1}},
+                      "right": {"leaf": {"prob": 0.5, "n": 1}}}},
+                    "bin_map": [[0, 0.5]], "errors": 0, "status": "optimal",
+                    "backbone_features": [0]}}"#;
+        let err = ModelArtifact::parse(doc).unwrap_err();
+        assert!(
+            matches!(&err, PersistError::Field { field, .. } if field == "root"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn clustering_predict_is_transductive() {
+        let art = ModelArtifact {
+            model: LoadedModel::Clustering(ClusteringModel {
+                labels: vec![0, 1, 1, 0],
+                objective: 2.0,
+                gap: 0.0,
+                status: SolveStatus::Optimal,
+            }),
+            provenance: toy_artifact().provenance,
+        };
+        let preds = art.model.try_predict(&Matrix::zeros(4, 2)).unwrap();
+        assert_eq!(preds, vec![0.0, 1.0, 1.0, 0.0]);
+        let err = art.model.try_predict(&Matrix::zeros(3, 2)).unwrap_err();
+        assert_eq!(err, BackboneError::ShapeMismatch { expected: 4, got: 3 });
+    }
+
+    #[test]
+    fn seeds_beyond_f64_precision_survive_round_trip() {
+        let mut art = toy_artifact();
+        art.provenance.seed = (1u64 << 53) + 1; // not representable as f64
+        let text = art.to_json().to_string_pretty();
+        let back = ModelArtifact::parse(&text).unwrap();
+        assert_eq!(back.provenance.seed, (1u64 << 53) + 1);
+        // Small seeds stay plain numbers (the fixture format).
+        art.provenance.seed = 7;
+        let text = art.to_json().to_string_pretty();
+        assert!(text.contains("\"seed\": 7"), "{text}");
+        assert_eq!(ModelArtifact::parse(&text).unwrap().provenance.seed, 7);
+    }
+
+    #[test]
+    fn predictions_from_scores_matches_try_predict() {
+        let x = Matrix::from_rows(&[
+            vec![1.0, 2.0, 3.0, 4.0],
+            vec![-1.0, 0.5, 0.0, 2.0],
+            vec![0.0, 0.0, 0.0, 0.0],
+        ]);
+        let sr = LoadedModel::SparseRegression(toy_sr_model());
+        assert_eq!(
+            sr.predictions_from_scores(&sr.predict_scores(&x).unwrap()),
+            sr.try_predict(&x).unwrap()
+        );
+        let lg = LoadedModel::SparseLogistic(LogisticModel {
+            beta: vec![2.0, -1.0, 0.0, 0.5],
+            intercept: -0.25,
+            support: vec![0, 1, 3],
+            nll: 1.0,
+            status: SolveStatus::Optimal,
+        });
+        assert_eq!(
+            lg.predictions_from_scores(&lg.predict_scores(&x).unwrap()),
+            lg.try_predict(&x).unwrap()
+        );
+    }
+
+    #[test]
+    fn learner_kind_names_round_trip() {
+        for kind in [
+            LearnerKind::SparseRegression,
+            LearnerKind::SparseLogistic,
+            LearnerKind::DecisionTree,
+            LearnerKind::Clustering,
+        ] {
+            assert_eq!(LearnerKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(LearnerKind::parse("svm").is_err());
+    }
+}

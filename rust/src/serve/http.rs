@@ -1,0 +1,235 @@
+//! Minimal HTTP/1.1 request/response plumbing for the prediction server.
+//!
+//! Std-only (the vendored crate set has no HTTP stack): enough of RFC
+//! 9112 for a JSON prediction API — request line, headers (only
+//! `Content-Length` is honoured), bounded body read, `Connection: close`
+//! responses. Anything outside that subset is answered with a 4xx rather
+//! than guessed at.
+
+use std::io::{Read, Write};
+
+/// Cap on the request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 16 * 1024;
+
+/// A parsed request: method, path (query string stripped), body.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Why a request could not be served; maps to an HTTP status.
+#[derive(Debug)]
+pub enum HttpError {
+    /// Malformed request line/headers → 400.
+    BadRequest(String),
+    /// Body (or head) exceeds the configured cap → 413.
+    TooLarge { limit: usize },
+    /// Socket-level failure (peer vanished, timeout): no response owed.
+    Io(std::io::Error),
+}
+
+impl HttpError {
+    /// Status line pieces for the error response (`None` = do not respond).
+    pub fn status(&self) -> Option<(u16, &'static str)> {
+        match self {
+            Self::BadRequest(_) => Some((400, "Bad Request")),
+            Self::TooLarge { .. } => Some((413, "Payload Too Large")),
+            Self::Io(_) => None,
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            Self::BadRequest(m) => m.clone(),
+            Self::TooLarge { limit } => format!("request exceeds {limit} bytes"),
+            Self::Io(e) => e.to_string(),
+        }
+    }
+}
+
+impl From<std::io::Error> for HttpError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+/// Read one request from `stream`. `max_body` bounds the declared
+/// `Content-Length`; requests without one have an empty body (the API
+/// never uses chunked encoding).
+pub fn read_request<S: Read>(stream: &mut S, max_body: usize) -> Result<Request, HttpError> {
+    // Accumulate chunks until the blank line that ends the head; body
+    // bytes that arrive in the same chunk are carried over below.
+    // (Chunked reads, not byte-at-a-time: one syscall per packet, not
+    // one per header byte — this loop is on the serving hot path.)
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let split = loop {
+        // Re-scan from just before the previous end so a terminator
+        // straddling two chunks is still found.
+        let from = buf.len().saturating_sub(chunk.len() + 3);
+        if let Some(pos) =
+            buf[from..].windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + from)
+        {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD_BYTES {
+            return Err(HttpError::TooLarge { limit: MAX_HEAD_BYTES });
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            if buf.is_empty() {
+                // Connection opened and closed without sending anything —
+                // a TCP health probe or a shutdown poke, not a malformed
+                // request. Io ⇒ no response owed, no failure counted.
+                return Err(HttpError::Io(std::io::ErrorKind::UnexpectedEof.into()));
+            }
+            return Err(HttpError::BadRequest("connection closed mid-request".into()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let (head, leftover) = buf.split_at(split + 4);
+    let head_text = String::from_utf8_lossy(head);
+    let mut lines = head_text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let target = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || target.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(HttpError::BadRequest(format!(
+            "malformed request line `{request_line}`"
+        )));
+    }
+    // Strip any query string; the API routes on the path alone.
+    let path = target.split('?').next().unwrap_or("").to_string();
+
+    let mut content_length = 0usize;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().map_err(|_| {
+                    HttpError::BadRequest(format!("bad Content-Length `{}`", value.trim()))
+                })?;
+            }
+        }
+    }
+    if content_length > max_body {
+        return Err(HttpError::TooLarge { limit: max_body });
+    }
+    // Body = whatever arrived with the head, then the remainder.
+    let mut body = leftover[..leftover.len().min(content_length)].to_vec();
+    let missing = content_length - body.len();
+    if missing > 0 {
+        let start = body.len();
+        body.resize(content_length, 0);
+        stream.read_exact(&mut body[start..])?;
+    }
+    Ok(Request { method, path, body })
+}
+
+/// Write a `Connection: close` response with the given status and body.
+pub fn write_response<S: Write>(
+    stream: &mut S,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Write a JSON response (the server's only content type).
+pub fn write_json<S: Write>(
+    stream: &mut S,
+    status: u16,
+    reason: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    write_response(stream, status, reason, "application/json", body.as_bytes())
+}
+
+/// Minimal client-side response parse for the self-test load generator:
+/// returns `(status, body)` from a full `Connection: close` exchange.
+pub fn parse_response(raw: &[u8]) -> Result<(u16, Vec<u8>), HttpError> {
+    let split = raw
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| HttpError::BadRequest("response head not terminated".into()))?;
+    let head = String::from_utf8_lossy(&raw[..split]);
+    let status_line = head.split("\r\n").next().unwrap_or("");
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            HttpError::BadRequest(format!("malformed status line `{status_line}`"))
+        })?;
+    Ok((status, raw[split + 4..].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /predict?x=1 HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nwxyz";
+        let req = read_request(&mut &raw[..], 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/predict");
+        assert_eq!(req.body, b"wxyz");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = b"GET /healthz HTTP/1.1\r\n\r\n";
+        let req = read_request(&mut &raw[..], 1024).unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_request_line_and_bad_length() {
+        let raw = b"NONSENSE\r\n\r\n";
+        assert!(matches!(
+            read_request(&mut &raw[..], 1024),
+            Err(HttpError::BadRequest(_))
+        ));
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: banana\r\n\r\n";
+        assert!(matches!(
+            read_request(&mut &raw[..], 1024),
+            Err(HttpError::BadRequest(_))
+        ));
+    }
+
+    #[test]
+    fn enforces_body_cap() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 2048\r\n\r\n";
+        assert!(matches!(
+            read_request(&mut &raw[..], 1024),
+            Err(HttpError::TooLarge { limit: 1024 })
+        ));
+    }
+
+    #[test]
+    fn response_round_trips_through_client_parse() {
+        let mut buf = Vec::new();
+        write_json(&mut buf, 200, "OK", "{\"ok\":true}").unwrap();
+        let (status, body) = parse_response(&buf).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\":true}");
+    }
+}

@@ -1,0 +1,525 @@
+//! The prediction server: a std-only, batched HTTP/1.1 inference service
+//! over a loaded `backbone-model/v1` artifact.
+//!
+//! The ROADMAP's north star is serving backbone models under heavy
+//! traffic; the backbone output is exactly the compact artifact that
+//! makes that cheap. This module is the serving half of the persistence
+//! subsystem (`cli serve --model m.json --port P --threads N`):
+//!
+//! - **No new dependencies** — `std::net::TcpListener` + scoped worker
+//!   threads (`std::thread::scope`), mirroring the PR-2 subproblem
+//!   scheduler idiom: shared immutable state behind an `Arc`, per-worker
+//!   connection handling, atomics for the counters.
+//! - **Batched** — one `POST /predict` carries any number of rows
+//!   (`{"rows": [[...], ...]}`); inference is a single
+//!   [`LoadedModel::predict_scores`] pass over the whole batch (the
+//!   prediction view is derived from it, bit-identical to
+//!   `try_predict`).
+//! - **Observable** — `GET /healthz` for liveness, `GET /stats` for
+//!   request/failure counters and a windowed latency profile
+//!   (mean/p50/p99 over the most recent requests).
+//!
+//! The loopback load generator lives in [`selftest`]
+//! (`cli serve --self-test`), which drives a real server over real
+//! sockets and reports p50/p99/req-s in `backbone-bench/v1`-style JSON.
+
+pub mod http;
+pub mod selftest;
+
+use crate::backbone::resolved_threads;
+use crate::bench_support::percentile;
+use crate::json::Json;
+use crate::linalg::Matrix;
+use crate::persist::{LoadedModel, MODEL_SCHEMA};
+use http::{read_request, write_json, Request};
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Server tunables.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads accepting and handling connections (0 = all cores).
+    pub threads: usize,
+    /// Cap on a request body (the batched rows payload).
+    pub max_body_bytes: usize,
+    /// Per-connection socket read/write timeout.
+    pub io_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            threads: 2,
+            max_body_bytes: 8 * 1024 * 1024,
+            io_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// Sliding window of recent request latencies (microseconds). Bounded so
+/// `/stats` stays O(window) regardless of uptime; the lifetime request
+/// count is exact, the latency profile covers the most recent window.
+struct LatencyWindow {
+    samples: Vec<u64>,
+    next: usize,
+    count: u64,
+}
+
+const LATENCY_WINDOW: usize = 4096;
+
+impl LatencyWindow {
+    fn new() -> Self {
+        Self { samples: Vec::with_capacity(LATENCY_WINDOW), next: 0, count: 0 }
+    }
+
+    fn record(&mut self, us: u64) {
+        if self.samples.len() < LATENCY_WINDOW {
+            self.samples.push(us);
+        } else {
+            self.samples[self.next] = us;
+            self.next = (self.next + 1) % LATENCY_WINDOW;
+        }
+        self.count += 1;
+    }
+
+    /// `(lifetime count, unsorted window copy)` — a plain O(n) memcpy so
+    /// the stats mutex is never held through a sort; callers order the
+    /// samples after the lock is released.
+    fn snapshot(&self) -> (u64, Vec<f64>) {
+        (self.count, self.samples.iter().map(|&u| u as f64).collect())
+    }
+}
+
+/// Request/latency counters surfaced by `GET /stats`.
+pub struct ServerStats {
+    requests: AtomicU64,
+    predict_requests: AtomicU64,
+    rows_predicted: AtomicU64,
+    failures: AtomicU64,
+    latency: Mutex<LatencyWindow>,
+}
+
+impl ServerStats {
+    fn new() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            predict_requests: AtomicU64::new(0),
+            rows_predicted: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            latency: Mutex::new(LatencyWindow::new()),
+        }
+    }
+
+    fn record_predict(&self, rows: usize, latency_us: u64) {
+        self.predict_requests.fetch_add(1, Ordering::Relaxed);
+        self.rows_predicted.fetch_add(rows as u64, Ordering::Relaxed);
+        self.latency.lock().unwrap().record(latency_us);
+    }
+
+    fn to_json(&self, uptime_secs: f64, threads: usize) -> Json {
+        // The lock guard lives only for the snapshot statement; sorting
+        // happens outside it so /stats polls never stall predict workers.
+        let (count, mut window) = self.latency.lock().unwrap().snapshot();
+        window.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = if window.is_empty() {
+            f64::NAN
+        } else {
+            window.iter().sum::<f64>() / window.len() as f64
+        };
+        let mut latency = BTreeMap::new();
+        latency.insert("count".into(), Json::Number(count as f64));
+        // mean/p50/p99 summarize only the most recent `window` samples;
+        // `count` is lifetime — surface the window size so consumers
+        // can't conflate the two.
+        latency.insert("window".into(), Json::Number(window.len() as f64));
+        latency.insert("mean_us".into(), Json::from_f64(mean));
+        latency.insert("p50_us".into(), Json::from_f64(percentile(&window, 0.50)));
+        latency.insert("p99_us".into(), Json::from_f64(percentile(&window, 0.99)));
+        let mut m = BTreeMap::new();
+        m.insert(
+            "requests_total".into(),
+            Json::Number(self.requests.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "predict_requests".into(),
+            Json::Number(self.predict_requests.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "rows_predicted".into(),
+            Json::Number(self.rows_predicted.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "failures".into(),
+            Json::Number(self.failures.load(Ordering::Relaxed) as f64),
+        );
+        m.insert("latency".into(), Json::Object(latency));
+        m.insert("uptime_secs".into(), Json::from_f64(uptime_secs));
+        m.insert("threads".into(), Json::Number(threads as f64));
+        Json::Object(m)
+    }
+}
+
+/// Shared state of a running server: the model plus observability.
+pub struct ServerState {
+    model: LoadedModel,
+    stats: ServerStats,
+    started: Instant,
+    shutdown: AtomicBool,
+    threads: usize,
+    max_body: usize,
+    io_timeout: Duration,
+}
+
+/// A bound (but not yet running) prediction server.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<ServerState>,
+}
+
+/// Handle for stopping a running server from another thread: sets the
+/// shutdown flag, then pokes the listener once per worker so every
+/// blocked `accept` wakes up and observes it.
+pub struct ShutdownHandle {
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+}
+
+impl ShutdownHandle {
+    pub fn shutdown(&self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        for _ in 0..self.state.threads {
+            let _ = TcpStream::connect(self.addr);
+        }
+    }
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:8000"`; port 0 for an ephemeral
+    /// port) and prepare to serve `model`.
+    pub fn bind(addr: &str, model: LoadedModel, cfg: &ServeConfig) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let state = Arc::new(ServerState {
+            model,
+            stats: ServerStats::new(),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+            threads: resolved_threads(cfg.threads),
+            max_body: cfg.max_body_bytes,
+            io_timeout: cfg.io_timeout,
+        });
+        Ok(Server { listener, state })
+    }
+
+    /// Address the server is listening on (resolves port 0).
+    pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
+        self.listener.local_addr()
+    }
+
+    /// Shutdown handle usable from other threads while `run` blocks.
+    pub fn shutdown_handle(&self) -> std::io::Result<ShutdownHandle> {
+        Ok(ShutdownHandle { addr: self.local_addr()?, state: Arc::clone(&self.state) })
+    }
+
+    /// Accept and serve connections on the configured worker threads
+    /// until the shutdown flag is raised. Blocks the calling thread.
+    pub fn run(self) {
+        let listener = &self.listener;
+        let state = &self.state;
+        std::thread::scope(|scope| {
+            for _ in 0..state.threads {
+                scope.spawn(move || {
+                    loop {
+                        if state.shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        let Ok((stream, _peer)) = listener.accept() else {
+                            // Persistent accept failures (e.g. fd
+                            // exhaustion) must not become a busy-spin
+                            // that starves the connections already open.
+                            std::thread::sleep(Duration::from_millis(10));
+                            continue;
+                        };
+                        // Serve whatever was accepted even if shutdown
+                        // raced in — a real client that won the race gets
+                        // its response; a ShutdownHandle poke reads as an
+                        // instant EOF and is dropped without counters.
+                        handle_connection(stream, state);
+                        if state.shutdown.load(Ordering::SeqCst) {
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+fn handle_connection(mut stream: TcpStream, state: &ServerState) {
+    let _ = stream.set_read_timeout(Some(state.io_timeout));
+    let _ = stream.set_write_timeout(Some(state.io_timeout));
+    let request = match read_request(&mut stream, state.max_body) {
+        Ok(req) => req,
+        Err(e) => {
+            // Only connections we actually answer enter the counters; a
+            // bare connect-then-close (TCP health probe, shutdown poke)
+            // is an Io error and stays invisible, so /stats failure
+            // rates reflect served traffic, not probing.
+            if let Some((status, reason)) = e.status() {
+                state.stats.requests.fetch_add(1, Ordering::Relaxed);
+                state.stats.failures.fetch_add(1, Ordering::Relaxed);
+                let _ = write_json(&mut stream, status, reason, &error_body(&e.message()));
+            }
+            return;
+        }
+    };
+    state.stats.requests.fetch_add(1, Ordering::Relaxed);
+    let outcome = route(&request, state);
+    let failed = !(200..300).contains(&outcome.status);
+    if failed {
+        state.stats.failures.fetch_add(1, Ordering::Relaxed);
+    }
+    let _ = write_json(&mut stream, outcome.status, outcome.reason, &outcome.body);
+}
+
+struct Outcome {
+    status: u16,
+    reason: &'static str,
+    body: String,
+}
+
+fn ok(body: Json) -> Outcome {
+    Outcome { status: 200, reason: "OK", body: body.to_string_compact() }
+}
+
+fn error(status: u16, reason: &'static str, message: &str) -> Outcome {
+    Outcome { status, reason, body: error_body(message) }
+}
+
+fn error_body(message: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::String(message.into()));
+    Json::Object(m).to_string_compact()
+}
+
+fn route(request: &Request, state: &ServerState) -> Outcome {
+    match (request.method.as_str(), request.path.as_str()) {
+        ("GET", "/healthz") => ok(health_json(state)),
+        ("GET", "/stats") => ok(state
+            .stats
+            .to_json(state.started.elapsed().as_secs_f64(), state.threads)),
+        ("POST", "/predict") => predict(request, state),
+        ("GET" | "HEAD", "/predict") => {
+            error(405, "Method Not Allowed", "use POST /predict with a JSON body")
+        }
+        _ => error(404, "Not Found", "routes: POST /predict, GET /healthz, GET /stats"),
+    }
+}
+
+fn health_json(state: &ServerState) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("status".into(), Json::String("ok".into()));
+    m.insert("schema".into(), Json::String(MODEL_SCHEMA.into()));
+    m.insert("learner".into(), Json::String(state.model.kind().name().into()));
+    if let Some(p) = state.model.num_features() {
+        m.insert("num_features".into(), Json::Number(p as f64));
+    }
+    if let Some(n) = state.model.expected_rows() {
+        m.insert("expected_rows".into(), Json::Number(n as f64));
+    }
+    m.insert(
+        "uptime_secs".into(),
+        Json::from_f64(state.started.elapsed().as_secs_f64()),
+    );
+    Json::Object(m)
+}
+
+/// `POST /predict`: parse the batched rows, run one batch inference,
+/// answer with predictions (plus scores for the classifiers).
+fn predict(request: &Request, state: &ServerState) -> Outcome {
+    let started = Instant::now();
+    let text = match std::str::from_utf8(&request.body) {
+        Ok(t) => t,
+        Err(_) => return error(400, "Bad Request", "body is not UTF-8"),
+    };
+    let doc = match Json::parse(text) {
+        Ok(d) => d,
+        Err(e) => return error(400, "Bad Request", &format!("body is not JSON: {e:#}")),
+    };
+    let rows = match parse_rows(&doc) {
+        Ok(r) => r,
+        Err(message) => return error(400, "Bad Request", &message),
+    };
+    let x = Matrix::from_rows(&rows);
+    // One inference per request: scores are the expensive pass, the
+    // prediction view is derived from them (bit-identical to
+    // try_predict by the predictions_from_scores contract).
+    let scores = match state.model.predict_scores(&x) {
+        Ok(s) => s,
+        Err(e) => return error(400, "Bad Request", &e.to_string()),
+    };
+    let predictions = state.model.predictions_from_scores(&scores);
+    let latency_us = started.elapsed().as_micros() as u64;
+    state.stats.record_predict(rows.len(), latency_us);
+
+    let mut m = BTreeMap::new();
+    m.insert(
+        "predictions".into(),
+        Json::Array(predictions.iter().map(|&p| Json::from_f64(p)).collect()),
+    );
+    if state.model.kind().is_classifier() {
+        m.insert(
+            "scores".into(),
+            Json::Array(scores.iter().map(|&s| Json::from_f64(s)).collect()),
+        );
+    }
+    m.insert("rows".into(), Json::Number(rows.len() as f64));
+    m.insert("latency_us".into(), Json::Number(latency_us as f64));
+    ok(Json::Object(m))
+}
+
+/// Extract `{"rows": [[...], ...]}` as a rectangular f64 batch.
+fn parse_rows(doc: &Json) -> Result<Vec<Vec<f64>>, String> {
+    let rows = doc
+        .get("rows")
+        .and_then(Json::as_array)
+        .ok_or("body must be an object with a `rows` array of arrays")?;
+    if rows.is_empty() {
+        return Err("`rows` must contain at least one row".into());
+    }
+    let mut out = Vec::with_capacity(rows.len());
+    let mut width: Option<usize> = None;
+    for (i, row) in rows.iter().enumerate() {
+        let cells = row
+            .as_array()
+            .ok_or_else(|| format!("rows[{i}] is not an array"))?;
+        let mut values = Vec::with_capacity(cells.len());
+        for (j, cell) in cells.iter().enumerate() {
+            values.push(
+                cell.as_f64_tagged()
+                    .filter(|v| v.is_finite())
+                    .ok_or_else(|| format!("rows[{i}][{j}] is not a finite number"))?,
+            );
+        }
+        match width {
+            None => width = Some(values.len()),
+            Some(w) if w != values.len() => {
+                return Err(format!(
+                    "rows[{i}] has {} values but rows[0] has {w}",
+                    values.len()
+                ));
+            }
+            Some(_) => {}
+        }
+        out.push(values);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::LoadedModel;
+    use crate::solvers::SolveStatus;
+
+    fn toy_model() -> LoadedModel {
+        LoadedModel::SparseRegression(crate::backbone::sparse_regression::SparseRegressionModel {
+            beta: vec![2.0, 0.0, -1.0],
+            intercept: 0.5,
+            support: vec![0, 2],
+            objective: 1.0,
+            gap: 0.0,
+            status: SolveStatus::Optimal,
+        })
+    }
+
+    fn toy_state() -> ServerState {
+        ServerState {
+            model: toy_model(),
+            stats: ServerStats::new(),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+            threads: 1,
+            max_body: 1024,
+            io_timeout: Duration::from_secs(1),
+        }
+    }
+
+    fn post_predict(body: &str) -> Request {
+        Request { method: "POST".into(), path: "/predict".into(), body: body.into() }
+    }
+
+    #[test]
+    fn predict_route_computes_batch() {
+        let state = toy_state();
+        let out = route(&post_predict(r#"{"rows": [[1, 0, 0], [0, 0, 1]]}"#), &state);
+        assert_eq!(out.status, 200);
+        let doc = Json::parse(&out.body).unwrap();
+        let preds = doc.get("predictions").unwrap().as_array().unwrap();
+        assert_eq!(preds[0].as_f64(), Some(2.5)); // 2*1 + 0.5
+        assert_eq!(preds[1].as_f64(), Some(-0.5)); // -1*1 + 0.5
+        assert_eq!(doc.get("rows").and_then(Json::as_usize), Some(2));
+        assert_eq!(state.stats.rows_predicted.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn predict_route_rejects_bad_payloads() {
+        let state = toy_state();
+        for (body, hint) in [
+            ("not json", "not JSON"),
+            (r#"{"cols": []}"#, "`rows`"),
+            (r#"{"rows": []}"#, "at least one"),
+            (r#"{"rows": [[1, 2]]}"#, "incompatible"),
+            (r#"{"rows": [[1, 2, 3], [1]]}"#, "rows[1]"),
+            (r#"{"rows": [["a", 2, 3]]}"#, "finite number"),
+        ] {
+            let out = route(&post_predict(body), &state);
+            assert_eq!(out.status, 400, "{body}");
+            assert!(out.body.contains(hint), "{body} → {}", out.body);
+        }
+        assert_eq!(state.stats.predict_requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn unknown_routes_and_methods() {
+        let state = toy_state();
+        let req = Request { method: "GET".into(), path: "/nope".into(), body: vec![] };
+        assert_eq!(route(&req, &state).status, 404);
+        let req = Request { method: "GET".into(), path: "/predict".into(), body: vec![] };
+        assert_eq!(route(&req, &state).status, 405);
+    }
+
+    #[test]
+    fn stats_json_reflects_recorded_latencies() {
+        let state = toy_state();
+        for us in [100, 200, 300] {
+            state.stats.record_predict(1, us);
+        }
+        let doc = state.stats.to_json(1.0, 4);
+        let lat = doc.get("latency").unwrap();
+        assert_eq!(lat.get("count").and_then(Json::as_usize), Some(3));
+        assert_eq!(lat.get("p50_us").and_then(Json::as_f64), Some(200.0));
+        assert_eq!(doc.get("rows_predicted").and_then(Json::as_usize), Some(3));
+        assert_eq!(doc.get("threads").and_then(Json::as_usize), Some(4));
+    }
+
+    #[test]
+    fn latency_window_stays_bounded() {
+        let mut w = LatencyWindow::new();
+        for i in 0..(LATENCY_WINDOW as u64 + 100) {
+            w.record(i);
+        }
+        let (count, window) = w.snapshot();
+        assert_eq!(count, LATENCY_WINDOW as u64 + 100);
+        assert_eq!(window.len(), LATENCY_WINDOW);
+        // The ring keeps the most recent LATENCY_WINDOW samples: the 100
+        // oldest (0..100) were overwritten.
+        assert_eq!(window.iter().copied().fold(f64::INFINITY, f64::min), 100.0);
+        assert_eq!(
+            window.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+            (LATENCY_WINDOW + 99) as f64
+        );
+    }
+}

@@ -1,0 +1,292 @@
+//! Loopback load generator: `cli serve --self-test`.
+//!
+//! Boots a real [`Server`](super::Server) on an ephemeral localhost port,
+//! drives it with concurrent client threads over real TCP sockets, and
+//! reports throughput + latency percentiles in `backbone-bench/v1`-style
+//! JSON (`backbone-serve-selftest/v1`). Every response is verified
+//! against a locally computed prediction for the same batch, so "zero
+//! failed requests" means the *served* numbers are bit-identical to the
+//! in-process model — not merely that sockets stayed open. CI's
+//! `serve-smoke` job runs this end to end.
+
+use super::http::parse_response;
+use super::{ServeConfig, Server};
+use crate::backbone::Predict;
+use crate::bench_support::percentile;
+use crate::json::Json;
+use crate::linalg::Matrix;
+use crate::persist::LoadedModel;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+/// Load-generator knobs.
+#[derive(Debug, Clone)]
+pub struct SelfTestConfig {
+    /// Total requests to issue across all client threads.
+    pub requests: usize,
+    /// Concurrent client threads.
+    pub concurrency: usize,
+    /// Rows per batched `/predict` request (clustering overrides this
+    /// with its transductive row-count contract).
+    pub batch_rows: usize,
+    /// Server worker threads (0 = all cores).
+    pub threads: usize,
+}
+
+impl SelfTestConfig {
+    /// CI scale: finishes in seconds on one core.
+    pub fn quick() -> Self {
+        Self { requests: 200, concurrency: 4, batch_rows: 16, threads: 2 }
+    }
+
+    /// Full scale for local benchmarking.
+    pub fn full() -> Self {
+        Self { requests: 2000, concurrency: 8, batch_rows: 32, threads: 0 }
+    }
+}
+
+/// Outcome of a self-test run.
+#[derive(Debug, Clone)]
+pub struct SelfTestReport {
+    pub learner: &'static str,
+    pub requests: usize,
+    /// Requests that failed: connect/write errors, non-200 statuses, or
+    /// served predictions that diverged from the local model.
+    pub failed: usize,
+    pub concurrency: usize,
+    pub batch_rows: usize,
+    /// Resolved server worker count.
+    pub threads: usize,
+    pub elapsed_secs: f64,
+    pub req_per_sec: f64,
+    pub rows_per_sec: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl SelfTestReport {
+    /// `backbone-serve-selftest/v1` JSON payload (CI artifact).
+    pub fn to_json(&self) -> Json {
+        let mut lat = BTreeMap::new();
+        lat.insert("mean_ms".to_string(), Json::from_f64(self.mean_ms));
+        lat.insert("p50_ms".to_string(), Json::from_f64(self.p50_ms));
+        lat.insert("p99_ms".to_string(), Json::from_f64(self.p99_ms));
+        let mut m = BTreeMap::new();
+        m.insert(
+            "schema".to_string(),
+            Json::String("backbone-serve-selftest/v1".into()),
+        );
+        m.insert("learner".to_string(), Json::String(self.learner.into()));
+        m.insert("requests".to_string(), Json::Number(self.requests as f64));
+        m.insert("failed".to_string(), Json::Number(self.failed as f64));
+        m.insert("concurrency".to_string(), Json::Number(self.concurrency as f64));
+        m.insert("batch_rows".to_string(), Json::Number(self.batch_rows as f64));
+        m.insert("threads".to_string(), Json::Number(self.threads as f64));
+        m.insert("elapsed_secs".to_string(), Json::from_f64(self.elapsed_secs));
+        m.insert("req_per_sec".to_string(), Json::from_f64(self.req_per_sec));
+        m.insert("rows_per_sec".to_string(), Json::from_f64(self.rows_per_sec));
+        m.insert("latency".to_string(), Json::Object(lat));
+        Json::Object(m)
+    }
+}
+
+/// Deterministic batch matching the model's input contract: clustering
+/// gets exactly its training row count, the supervised learners get
+/// `batch_rows` rows of the right width.
+fn synth_batch(model: &LoadedModel, batch_rows: usize) -> Vec<Vec<f64>> {
+    let rows = model.expected_rows().unwrap_or(batch_rows.max(1));
+    let cols = model.num_features().unwrap_or(2).max(1);
+    (0..rows)
+        .map(|i| (0..cols).map(|j| ((i * cols + j) % 7) as f64 * 0.25 - 0.75).collect())
+        .collect()
+}
+
+/// One raw HTTP exchange; returns the response bytes.
+fn exchange(addr: SocketAddr, request: &[u8]) -> std::io::Result<Vec<u8>> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    stream.write_all(request)?;
+    let mut response = Vec::new();
+    stream.read_to_end(&mut response)?;
+    Ok(response)
+}
+
+/// Check one response: 200, JSON body, predictions bit-identical to the
+/// locally computed ones.
+fn verify(response: &[u8], expected: &[f64]) -> bool {
+    let Ok((status, body)) = parse_response(response) else { return false };
+    if status != 200 {
+        return false;
+    }
+    let Ok(text) = std::str::from_utf8(&body) else { return false };
+    let Ok(doc) = Json::parse(text) else { return false };
+    let Some(preds) = doc.get("predictions").and_then(Json::as_array) else {
+        return false;
+    };
+    preds.len() == expected.len()
+        && preds.iter().zip(expected).all(|(p, &e)| {
+            p.as_f64_tagged().is_some_and(|v| v.to_bits() == e.to_bits())
+        })
+}
+
+/// Boot a server around `model`, hammer it from `cfg.concurrency` client
+/// threads, verify every response, and summarize.
+pub fn run_self_test(model: LoadedModel, cfg: &SelfTestConfig) -> Result<SelfTestReport> {
+    let learner = model.kind().name();
+    let rows = synth_batch(&model, cfg.batch_rows);
+    let expected = model
+        .try_predict(&Matrix::from_rows(&rows))
+        .context("self-test batch rejected by the model")?;
+
+    // Pre-render the request bytes once; every client reuses them.
+    let rows_json = Json::Array(
+        rows.iter()
+            .map(|r| Json::Array(r.iter().map(|&v| Json::from_f64(v)).collect()))
+            .collect(),
+    );
+    let body = {
+        let mut m = BTreeMap::new();
+        m.insert("rows".to_string(), rows_json);
+        Json::Object(m).to_string_compact()
+    };
+    let request = format!(
+        "POST /predict HTTP/1.1\r\nHost: selftest\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+        body.len(),
+        body
+    )
+    .into_bytes();
+
+    let server = Server::bind(
+        "127.0.0.1:0",
+        model,
+        &ServeConfig { threads: cfg.threads, ..ServeConfig::default() },
+    )
+    .context("binding self-test server")?;
+    let addr = server.local_addr()?;
+    let shutdown = server.shutdown_handle()?;
+    let threads = crate::backbone::resolved_threads(cfg.threads);
+
+    let total = cfg.requests.max(1);
+    let concurrency = cfg.concurrency.clamp(1, total);
+
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(total);
+    let mut failed = 0usize;
+    let started = Instant::now();
+    let elapsed = std::thread::scope(|scope| {
+        scope.spawn(move || server.run());
+        let clients: Vec<_> = (0..concurrency)
+            .map(|t| {
+                // Spread the remainder over the first threads.
+                let quota = total / concurrency + usize::from(t < total % concurrency);
+                let request = &request;
+                let expected = &expected;
+                scope.spawn(move || {
+                    let mut lat = Vec::with_capacity(quota);
+                    let mut bad = 0usize;
+                    for _ in 0..quota {
+                        let sent = Instant::now();
+                        match exchange(addr, request) {
+                            Ok(resp) if verify(&resp, expected) => {
+                                lat.push(sent.elapsed().as_secs_f64() * 1e3);
+                            }
+                            _ => bad += 1,
+                        }
+                    }
+                    (lat, bad)
+                })
+            })
+            .collect();
+        for client in clients {
+            let (lat, bad) = client.join().expect("self-test client panicked");
+            latencies_ms.extend(lat);
+            failed += bad;
+        }
+        let elapsed = started.elapsed().as_secs_f64();
+        shutdown.shutdown();
+        elapsed
+    });
+
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean_ms = if latencies_ms.is_empty() {
+        f64::NAN
+    } else {
+        latencies_ms.iter().sum::<f64>() / latencies_ms.len() as f64
+    };
+    Ok(SelfTestReport {
+        learner,
+        requests: total,
+        failed,
+        concurrency,
+        batch_rows: rows.len(),
+        threads,
+        elapsed_secs: elapsed,
+        req_per_sec: if elapsed > 0.0 { total as f64 / elapsed } else { f64::NAN },
+        rows_per_sec: if elapsed > 0.0 {
+            (total * rows.len()) as f64 / elapsed
+        } else {
+            f64::NAN
+        },
+        mean_ms,
+        p50_ms: percentile(&latencies_ms, 0.50),
+        p99_ms: percentile(&latencies_ms, 0.99),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::SolveStatus;
+
+    fn toy_model() -> LoadedModel {
+        LoadedModel::SparseRegression(
+            crate::backbone::sparse_regression::SparseRegressionModel {
+                beta: vec![1.0, -2.0, 0.5],
+                intercept: 0.25,
+                support: vec![0, 1, 2],
+                objective: 1.0,
+                gap: 0.0,
+                status: SolveStatus::Optimal,
+            },
+        )
+    }
+
+    #[test]
+    fn self_test_round_trips_with_zero_failures() {
+        let report = run_self_test(
+            toy_model(),
+            &SelfTestConfig { requests: 24, concurrency: 3, batch_rows: 4, threads: 2 },
+        )
+        .unwrap();
+        assert_eq!(report.requests, 24);
+        assert_eq!(report.failed, 0, "loopback self-test had failures");
+        assert!(report.req_per_sec > 0.0);
+        assert!(report.p50_ms >= 0.0 && report.p99_ms >= report.p50_ms);
+        let doc = report.to_json();
+        assert_eq!(
+            doc.get("schema").and_then(Json::as_str),
+            Some("backbone-serve-selftest/v1")
+        );
+        assert_eq!(doc.get("failed").and_then(Json::as_usize), Some(0));
+    }
+
+    #[test]
+    fn synth_batch_respects_model_contracts() {
+        let batch = synth_batch(&toy_model(), 8);
+        assert_eq!(batch.len(), 8);
+        assert!(batch.iter().all(|r| r.len() == 3));
+
+        let cl = LoadedModel::Clustering(crate::backbone::clustering::ClusteringModel {
+            labels: vec![0, 1, 0],
+            objective: 0.0,
+            gap: 0.0,
+            status: SolveStatus::Optimal,
+        });
+        let batch = synth_batch(&cl, 8);
+        assert_eq!(batch.len(), 3, "clustering batch must match training rows");
+    }
+}

@@ -1,20 +1,17 @@
 //! Integration tests of the unified estimator API.
 //!
 //! Covers the acceptance surface of the API redesign:
-//! - **golden-path parity** — all four learners fitted through the
-//!   `Backbone::<problem>()` builders produce *identical* backbones and
-//!   models to the deprecated positional constructors;
+//! - **construction determinism** — identically-configured builders
+//!   produce bit-identical fits (the seeds are inputs, not state);
 //! - **typed validation** — invalid hyperparameters and malformed data
-//!   return `BackboneError` from `build()`/`fit()` instead of panicking;
+//!   return `BackboneError` from `build()`/`fit()` instead of panicking,
+//!   including params hand-mutated after `build()`;
 //! - **budget exhaustion** — a zero budget short-circuits the subproblem
 //!   batch and is surfaced in `BackboneDiagnostics::budget_exhausted`;
 //! - **diagnostics JSON** — `BackboneDiagnostics::to_json()` round-trips
 //!   through the crate's `json` module (the `cli fit --out` payload).
 
-use backbone_learn::backbone::clustering::BackboneClustering;
-use backbone_learn::backbone::decision_tree::BackboneDecisionTree;
-use backbone_learn::backbone::sparse_logistic::BackboneSparseLogistic;
-use backbone_learn::backbone::sparse_regression::{BackboneSparseRegression, SupervisedData};
+use backbone_learn::backbone::sparse_regression::SupervisedData;
 use backbone_learn::backbone::{Backbone, BackboneError, ExecutionPolicy, Fit, Predict};
 use backbone_learn::data::{blobs, classification, sparse_regression};
 use backbone_learn::json::Json;
@@ -45,116 +42,34 @@ fn cls_data(seed: u64) -> classification::ClassificationData {
 }
 
 // ---------------------------------------------------------------------------
-// Golden-path parity: builders vs deprecated constructors
+// Construction determinism: two identically-configured builders agree
 // ---------------------------------------------------------------------------
 
 #[test]
-fn sparse_regression_builder_matches_deprecated_constructor() {
+fn identically_configured_builders_fit_identically() {
     let data = sr_data(1);
-    let mut built = Backbone::sparse_regression()
-        .alpha(0.5)
-        .beta(0.5)
-        .num_subproblems(3)
-        .max_nonzeros(3)
-        .seed(9)
-        .build()
-        .unwrap();
-    #[allow(deprecated)]
-    let mut legacy = BackboneSparseRegression::new(0.5, 0.5, 3, 3);
-    legacy.params.seed = 9;
-
-    let m1 = built.fit(&data.x, &data.y).unwrap().clone();
-    let m2 = legacy.fit(&data.x, &data.y).unwrap().clone();
+    let build = || {
+        Backbone::sparse_regression()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(3)
+            .max_nonzeros(3)
+            .seed(9)
+            .build()
+            .unwrap()
+    };
+    let mut a = build();
+    let mut b = build();
+    let m1 = a.fit(&data.x, &data.y).unwrap().clone();
+    let m2 = b.fit(&data.x, &data.y).unwrap().clone();
     assert_eq!(m1.support, m2.support);
     assert_eq!(m1.beta, m2.beta);
     assert_eq!(m1.intercept, m2.intercept);
-    let d1 = built.last_diagnostics.as_ref().unwrap();
-    let d2 = legacy.last_diagnostics.as_ref().unwrap();
+    let d1 = a.last_diagnostics.as_ref().unwrap();
+    let d2 = b.last_diagnostics.as_ref().unwrap();
     assert_eq!(d1.screened_universe, d2.screened_universe);
     assert_eq!(d1.backbone_size, d2.backbone_size);
     assert_eq!(d1.iterations.len(), d2.iterations.len());
-}
-
-#[test]
-fn sparse_logistic_builder_matches_deprecated_constructor() {
-    let data = cls_data(2);
-    let mut built = Backbone::sparse_logistic()
-        .alpha(0.6)
-        .beta(0.5)
-        .num_subproblems(3)
-        .max_nonzeros(2)
-        .seed(5)
-        .build()
-        .unwrap();
-    #[allow(deprecated)]
-    let mut legacy = BackboneSparseLogistic::new(0.6, 0.5, 3, 2);
-    legacy.params.seed = 5;
-
-    let m1 = built.fit(&data.x, &data.y).unwrap().clone();
-    let m2 = legacy.fit(&data.x, &data.y).unwrap().clone();
-    assert_eq!(m1.support, m2.support);
-    assert_eq!(m1.beta, m2.beta);
-    assert_eq!(
-        built.last_diagnostics.as_ref().unwrap().backbone_size,
-        legacy.last_diagnostics.as_ref().unwrap().backbone_size
-    );
-}
-
-#[test]
-fn decision_tree_builder_matches_deprecated_constructor() {
-    let data = cls_data(3);
-    let mut built = Backbone::decision_tree()
-        .alpha(0.6)
-        .beta(0.5)
-        .num_subproblems(3)
-        .depth(2)
-        .seed(7)
-        .build()
-        .unwrap();
-    #[allow(deprecated)]
-    let mut legacy = BackboneDecisionTree::new(0.6, 0.5, 3, 2);
-    legacy.params.seed = 7;
-
-    let m1 = built.fit(&data.x, &data.y).unwrap().clone();
-    let m2 = legacy.fit(&data.x, &data.y).unwrap().clone();
-    assert_eq!(m1.backbone_features, m2.backbone_features);
-    assert_eq!(m1.errors, m2.errors);
-    assert_eq!(m1.predict(&data.x), m2.predict(&data.x));
-}
-
-#[test]
-fn clustering_builder_matches_deprecated_constructor() {
-    let data = blobs::generate(
-        &blobs::BlobsConfig {
-            n: 14,
-            p: 2,
-            true_clusters: 3,
-            cluster_std: 0.4,
-            center_box: 8.0,
-            min_center_dist: 5.0,
-        },
-        &mut Rng::seed_from_u64(4),
-    );
-    let mut built = Backbone::clustering()
-        .beta(1.0)
-        .num_subproblems(3)
-        .n_clusters(3)
-        .seed(11)
-        .build()
-        .unwrap();
-    // The deprecated constructor's ordering trap: (beta, M, n_clusters).
-    #[allow(deprecated)]
-    let mut legacy = BackboneClustering::new(1.0, 3, 3);
-    legacy.params.seed = 11;
-
-    let budget = Budget::seconds(120.0);
-    let m1 = built.fit_with_budget(&data.x, &budget).unwrap().clone();
-    let m2 = legacy.fit_with_budget(&data.x, &Budget::seconds(120.0)).unwrap().clone();
-    assert_eq!(m1.labels, m2.labels);
-    assert_eq!(
-        built.last_diagnostics.as_ref().unwrap().backbone_size,
-        legacy.last_diagnostics.as_ref().unwrap().backbone_size
-    );
 }
 
 // ---------------------------------------------------------------------------
@@ -232,15 +147,17 @@ fn invalid_hyperparameters_return_typed_errors_from_build() {
 }
 
 #[test]
-fn deprecated_constructors_defer_validation_to_fit() {
+fn hand_mutated_params_are_revalidated_at_fit() {
+    // `params` is public: a user can corrupt a built estimator. The fit
+    // pipeline re-validates, so this is a typed error, not a panic.
     let data = sr_data(8);
-    #[allow(deprecated)]
-    let mut bad = BackboneSparseRegression::new(0.0, 0.5, 5, 3); // alpha = 0
+    let mut bad = Backbone::sparse_regression().max_nonzeros(3).build().unwrap();
+    bad.params.alpha = 0.0;
     let err = bad.fit(&data.x, &data.y).unwrap_err();
     assert_eq!(err, BackboneError::InvalidAlpha { value: 0.0 });
 
-    #[allow(deprecated)]
-    let mut bad = BackboneClustering::new(2.0, 3, 2); // beta > 1
+    let mut bad = Backbone::clustering().n_clusters(2).build().unwrap();
+    bad.params.beta = 2.0;
     let err = bad.fit(&Matrix::zeros(6, 2)).unwrap_err();
     assert_eq!(err, BackboneError::InvalidBeta { value: 2.0 });
 }

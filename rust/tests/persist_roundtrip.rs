@@ -1,0 +1,422 @@
+//! Persistence acceptance suite: for every learner,
+//! `fit → save → load → predict` must be **bit-identical** to predicting
+//! from the in-memory fitted estimator — on fresh data, not just the
+//! training matrix — and the `backbone-model/v1` wire format itself is
+//! pinned by golden fixture files (`tests/fixtures/model_v1_*.json`)
+//! that fail this suite on any accidental format drift.
+
+use backbone_learn::backbone::clustering::ClusteringModel;
+use backbone_learn::backbone::decision_tree::BackboneTreeModel;
+use backbone_learn::backbone::sparse_regression::SparseRegressionModel;
+use backbone_learn::backbone::{Backbone, Predict};
+use backbone_learn::data::{blobs, classification, sparse_regression};
+use backbone_learn::json::Json;
+use backbone_learn::linalg::Matrix;
+use backbone_learn::persist::{LearnerKind, LoadedModel, ModelArtifact, Provenance};
+use backbone_learn::prop::{property, Gen};
+use backbone_learn::rng::Rng;
+use backbone_learn::solvers::exact_tree::BinNode;
+use backbone_learn::solvers::logistic::LogisticModel;
+use backbone_learn::solvers::SolveStatus;
+use backbone_learn::util::Budget;
+
+/// Unique scratch path for one save/load cycle.
+fn scratch(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("backbone_persist_{}_{}.json", name, std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], context: &str) {
+    assert_eq!(a.len(), b.len(), "{context}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{context}: prediction {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-learner fit → save → load → predict round trips
+// ---------------------------------------------------------------------------
+
+#[test]
+fn sparse_regression_round_trip_is_bit_identical() {
+    let gen_cfg = sparse_regression::SparseRegressionConfig {
+        n: 80,
+        p: 120,
+        k: 3,
+        rho: 0.1,
+        snr: 5.0,
+    };
+    let data = sparse_regression::generate(&gen_cfg, &mut Rng::seed_from_u64(1));
+    let fresh = sparse_regression::generate(&gen_cfg, &mut Rng::seed_from_u64(2));
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(3)
+        .max_nonzeros(3)
+        .seed(9)
+        .build()
+        .unwrap();
+    bb.fit(&data.x, &data.y).unwrap();
+
+    let path = scratch("sr");
+    ModelArtifact::from_sparse_regression(&bb).unwrap().save(&path).unwrap();
+    let loaded = ModelArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.learner(), LearnerKind::SparseRegression);
+    assert_bits_eq(
+        &bb.try_predict(&fresh.x).unwrap(),
+        &loaded.model.try_predict(&fresh.x).unwrap(),
+        "sparse regression",
+    );
+    // Provenance carried the fit's story along.
+    let digest = loaded.provenance.diagnostics.as_ref().unwrap();
+    assert_eq!(
+        digest.backbone_size,
+        bb.last_diagnostics.as_ref().unwrap().backbone_size
+    );
+    assert_eq!(loaded.provenance.seed, 9);
+}
+
+#[test]
+fn sparse_logistic_round_trip_is_bit_identical() {
+    let gen_cfg = classification::ClassificationConfig {
+        n: 150,
+        p: 25,
+        k: 3,
+        n_redundant: 0,
+        n_clusters: 2,
+        class_sep: 2.0,
+        flip_y: 0.02,
+    };
+    let data = classification::generate(&gen_cfg, &mut Rng::seed_from_u64(3));
+    let fresh = classification::generate(&gen_cfg, &mut Rng::seed_from_u64(4));
+    let mut bb = Backbone::sparse_logistic()
+        .alpha(0.6)
+        .beta(0.5)
+        .num_subproblems(3)
+        .max_nonzeros(2)
+        .seed(5)
+        .build()
+        .unwrap();
+    bb.fit(&data.x, &data.y).unwrap();
+
+    let path = scratch("lg");
+    ModelArtifact::from_sparse_logistic(&bb).unwrap().save(&path).unwrap();
+    let loaded = ModelArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.learner(), LearnerKind::SparseLogistic);
+    assert_bits_eq(
+        &bb.try_predict(&fresh.x).unwrap(),
+        &loaded.model.try_predict(&fresh.x).unwrap(),
+        "sparse logistic labels",
+    );
+    // Probabilities too, not just the thresholded labels.
+    assert_bits_eq(
+        &bb.predict_proba(&fresh.x),
+        &loaded.model.predict_scores(&fresh.x).unwrap(),
+        "sparse logistic probabilities",
+    );
+}
+
+#[test]
+fn decision_tree_round_trip_is_bit_identical() {
+    let gen_cfg = classification::ClassificationConfig {
+        n: 150,
+        p: 20,
+        k: 3,
+        n_redundant: 0,
+        n_clusters: 4,
+        class_sep: 2.0,
+        flip_y: 0.02,
+    };
+    let data = classification::generate(&gen_cfg, &mut Rng::seed_from_u64(5));
+    let fresh = classification::generate(&gen_cfg, &mut Rng::seed_from_u64(6));
+    let mut bb = Backbone::decision_tree()
+        .alpha(0.6)
+        .beta(0.5)
+        .num_subproblems(3)
+        .depth(2)
+        .seed(7)
+        .build()
+        .unwrap();
+    bb.fit(&data.x, &data.y).unwrap();
+
+    let path = scratch("dt");
+    ModelArtifact::from_decision_tree(&bb).unwrap().save(&path).unwrap();
+    let loaded = ModelArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.learner(), LearnerKind::DecisionTree);
+    assert_bits_eq(
+        &bb.try_predict(&fresh.x).unwrap(),
+        &loaded.model.try_predict(&fresh.x).unwrap(),
+        "decision tree labels",
+    );
+    assert_bits_eq(
+        &bb.predict_proba(&fresh.x),
+        &loaded.model.predict_scores(&fresh.x).unwrap(),
+        "decision tree probabilities",
+    );
+}
+
+#[test]
+fn clustering_round_trip_is_bit_identical() {
+    let data = blobs::generate(
+        &blobs::BlobsConfig {
+            n: 14,
+            p: 2,
+            true_clusters: 3,
+            cluster_std: 0.4,
+            center_box: 8.0,
+            min_center_dist: 5.0,
+        },
+        &mut Rng::seed_from_u64(4),
+    );
+    let mut bb = Backbone::clustering()
+        .beta(1.0)
+        .num_subproblems(3)
+        .n_clusters(3)
+        .seed(11)
+        .build()
+        .unwrap();
+    bb.fit_with_budget(&data.x, &Budget::seconds(120.0)).unwrap();
+
+    let path = scratch("cl");
+    ModelArtifact::from_clustering(&bb).unwrap().save(&path).unwrap();
+    let loaded = ModelArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(loaded.learner(), LearnerKind::Clustering);
+    // Clustering is transductive: labels-as-f64, checked on the training
+    // matrix (the only valid input by the row-count contract).
+    let direct: Vec<f64> = bb.try_predict(&data.x).unwrap().iter().map(|&l| l as f64).collect();
+    assert_bits_eq(
+        &direct,
+        &loaded.model.try_predict(&data.x).unwrap(),
+        "clustering labels",
+    );
+}
+
+#[test]
+fn unfitted_estimator_cannot_be_persisted() {
+    let bb = Backbone::sparse_regression().build().unwrap();
+    assert!(ModelArtifact::from_sparse_regression(&bb).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Property: random models survive the wire format bit-for-bit
+// ---------------------------------------------------------------------------
+
+#[test]
+fn random_models_round_trip_bitwise() {
+    property("sparse-regression artifacts round-trip", 60, |g: &mut Gen| {
+        let p = g.usize_in(1..30);
+        let k = g.usize_in(0..p.min(6));
+        let mut beta = vec![0.0; p];
+        let support = g.subset(p, k);
+        for &j in &support {
+            beta[j] = g.normal() * 10.0;
+        }
+        let model = SparseRegressionModel {
+            beta,
+            intercept: g.normal(),
+            support,
+            objective: g.normal().abs(),
+            gap: if g.bool_with(0.3) { f64::NAN } else { g.normal().abs() },
+            status: SolveStatus::Optimal,
+        };
+        let artifact = ModelArtifact {
+            model: LoadedModel::SparseRegression(model.clone()),
+            provenance: Provenance {
+                crate_version: "0.2.0".into(),
+                seed: 0,
+                params: Json::parse("{}").unwrap(),
+                config: Json::parse("{}").unwrap(),
+                diagnostics: None,
+            },
+        };
+        let text = artifact.to_json().to_string_pretty();
+        let back = ModelArtifact::parse(&text).unwrap();
+        let LoadedModel::SparseRegression(m) = &back.model else {
+            panic!("wrong learner kind after round trip")
+        };
+        assert_eq!(m.support, model.support);
+        for (a, b) in m.beta.iter().zip(&model.beta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(m.intercept.to_bits(), model.intercept.to_bits());
+        assert_eq!(m.gap.to_bits(), model.gap.to_bits());
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Golden fixtures: the wire format is frozen
+// ---------------------------------------------------------------------------
+
+fn fixed_provenance(seed: u64, params: &str, config: &str) -> Provenance {
+    Provenance {
+        crate_version: "0.2.0".into(),
+        seed,
+        params: Json::parse(params).unwrap(),
+        config: Json::parse(config).unwrap(),
+        diagnostics: None,
+    }
+}
+
+fn golden_sr() -> ModelArtifact {
+    ModelArtifact {
+        model: LoadedModel::SparseRegression(SparseRegressionModel {
+            beta: vec![0.0, 1.5, 0.0, -2.25, 0.0],
+            intercept: 0.5,
+            support: vec![1, 3],
+            objective: 3.5,
+            gap: f64::NAN,
+            status: SolveStatus::Optimal,
+        }),
+        provenance: fixed_provenance(
+            7,
+            r#"{"alpha": 0.5, "b_max": 100, "beta": 0.5, "max_iterations": 4,
+                "num_subproblems": 5}"#,
+            r#"{"gap_tol": 0.01, "lambda2": 0.001, "max_nonzeros": 10,
+                "subproblem_nonzeros": 10}"#,
+        ),
+    }
+}
+
+fn golden_lg() -> ModelArtifact {
+    ModelArtifact {
+        model: LoadedModel::SparseLogistic(LogisticModel {
+            beta: vec![0.75, 0.0, -1.5],
+            intercept: -0.25,
+            support: vec![0, 2],
+            nll: 12.5,
+            status: SolveStatus::Optimal,
+        }),
+        provenance: fixed_provenance(
+            3,
+            r#"{"alpha": 0.5, "b_max": 12, "beta": 0.5, "max_iterations": 4,
+                "num_subproblems": 5}"#,
+            r#"{"iht_iters": 150, "max_nonzeros": 2, "ridge": 0.001}"#,
+        ),
+    }
+}
+
+fn golden_dt() -> ModelArtifact {
+    ModelArtifact {
+        model: LoadedModel::DecisionTree(BackboneTreeModel {
+            root: BinNode::Split {
+                feature: 0,
+                left: Box::new(BinNode::Leaf { prob: 0.25, n: 8 }),
+                right: Box::new(BinNode::Split {
+                    feature: 1,
+                    left: Box::new(BinNode::Leaf { prob: 0.75, n: 4 }),
+                    right: Box::new(BinNode::Leaf { prob: 1.0, n: 3 }),
+                }),
+            },
+            bin_map: vec![(2, 0.5), (5, -1.25)],
+            errors: 3,
+            status: SolveStatus::TimedOut,
+            backbone_features: vec![2, 5],
+        }),
+        provenance: fixed_provenance(
+            1,
+            r#"{"alpha": 0.5, "b_max": 0, "beta": 0.5, "max_iterations": 4,
+                "num_subproblems": 5}"#,
+            r#"{"bins": 2, "depth": 2, "importance_threshold": 0, "min_leaf": 1}"#,
+        ),
+    }
+}
+
+fn golden_cl() -> ModelArtifact {
+    ModelArtifact {
+        model: LoadedModel::Clustering(ClusteringModel {
+            labels: vec![0, 1, 1, 0, 2],
+            objective: 4.5,
+            gap: f64::NAN,
+            status: SolveStatus::Infeasible,
+        }),
+        provenance: fixed_provenance(
+            11,
+            r#"{"alpha": 1, "b_max": 0, "beta": 0.8, "max_iterations": 1,
+                "num_subproblems": 5}"#,
+            r#"{"min_cluster_size": 1, "n_clusters": 3, "n_init": 10}"#,
+        ),
+    }
+}
+
+/// Serialized golden artifacts must match the committed fixtures byte for
+/// byte, and the fixtures must load back into working models. Any change
+/// to the wire format — key names, number formatting, nesting — turns
+/// this red and forces a deliberate schema bump.
+#[test]
+fn golden_fixtures_pin_the_wire_format() {
+    let cases: [(&str, ModelArtifact, &str); 4] = [
+        (
+            "sparse_regression",
+            golden_sr(),
+            include_str!("fixtures/model_v1_sparse_regression.json"),
+        ),
+        (
+            "sparse_logistic",
+            golden_lg(),
+            include_str!("fixtures/model_v1_sparse_logistic.json"),
+        ),
+        ("decision_tree", golden_dt(), include_str!("fixtures/model_v1_decision_tree.json")),
+        ("clustering", golden_cl(), include_str!("fixtures/model_v1_clustering.json")),
+    ];
+    for (name, artifact, fixture) in cases {
+        let rendered = artifact.to_json().to_string_pretty();
+        assert_eq!(
+            rendered, fixture,
+            "{name}: serialized artifact drifted from the committed fixture"
+        );
+        let loaded = ModelArtifact::parse(fixture)
+            .unwrap_or_else(|e| panic!("{name}: fixture no longer loads: {e}"));
+        assert_eq!(loaded.learner().name(), name);
+    }
+}
+
+/// Fixture models predict pinned values — format stability alone is not
+/// enough, the *semantics* of a loaded model are frozen too.
+#[test]
+fn golden_fixture_predictions_are_pinned() {
+    let sr = ModelArtifact::parse(include_str!("fixtures/model_v1_sparse_regression.json"))
+        .unwrap();
+    let x = Matrix::from_rows(&[
+        vec![1.0, 2.0, 3.0, 4.0, 5.0],
+        vec![0.0, -1.0, 0.0, 2.0, 0.0],
+    ]);
+    // 1.5*x1 - 2.25*x3 + 0.5
+    assert_eq!(sr.model.try_predict(&x).unwrap(), vec![-5.5, -5.5]);
+
+    let dt =
+        ModelArtifact::parse(include_str!("fixtures/model_v1_decision_tree.json")).unwrap();
+    // bin_map: column 0 = (feature 2, thr 0.5) — x[2] ≤ 0.5 goes right;
+    // column 1 = (feature 5, thr -1.25) — x[5] ≤ -1.25 goes right.
+    let x = Matrix::from_rows(&[
+        vec![0.0, 0.0, 1.0, 0.0, 0.0, 0.0],  // x2 > 0.5 → left leaf
+        vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0],  // right, x5 > -1.25 → left leaf
+        vec![0.0, 0.0, 0.0, 0.0, 0.0, -2.0], // right, x5 ≤ -1.25 → right leaf
+    ]);
+    assert_eq!(dt.model.predict_scores(&x).unwrap(), vec![0.25, 0.75, 1.0]);
+    assert_eq!(dt.model.try_predict(&x).unwrap(), vec![0.0, 1.0, 1.0]);
+
+    let cl = ModelArtifact::parse(include_str!("fixtures/model_v1_clustering.json")).unwrap();
+    assert_eq!(
+        cl.model.try_predict(&Matrix::zeros(5, 2)).unwrap(),
+        vec![0.0, 1.0, 1.0, 0.0, 2.0]
+    );
+
+    let lg = ModelArtifact::parse(include_str!("fixtures/model_v1_sparse_logistic.json"))
+        .unwrap();
+    let x = Matrix::from_rows(&[vec![10.0, 0.0, 0.0], vec![-10.0, 0.0, 0.0]]);
+    assert_eq!(lg.model.try_predict(&x).unwrap(), vec![1.0, 0.0]);
+}

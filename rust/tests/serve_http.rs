@@ -1,0 +1,203 @@
+//! End-to-end tests of the prediction server over real TCP sockets:
+//! boot a `Server` on an ephemeral port, speak actual HTTP/1.1 to it,
+//! and check `/predict`, `/healthz`, `/stats`, error handling, and
+//! shutdown. Also drives the full artifact path: fit → save → load →
+//! serve → compare served predictions against the in-memory model.
+
+use backbone_learn::backbone::sparse_regression::SparseRegressionModel;
+use backbone_learn::backbone::{Backbone, Predict};
+use backbone_learn::data::sparse_regression;
+use backbone_learn::json::Json;
+use backbone_learn::linalg::Matrix;
+use backbone_learn::persist::{LoadedModel, ModelArtifact};
+use backbone_learn::rng::Rng;
+use backbone_learn::serve::http::parse_response;
+use backbone_learn::serve::selftest::{run_self_test, SelfTestConfig};
+use backbone_learn::serve::{ServeConfig, Server};
+use backbone_learn::solvers::SolveStatus;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+fn toy_model() -> LoadedModel {
+    LoadedModel::SparseRegression(SparseRegressionModel {
+        beta: vec![1.0, -1.0],
+        intercept: 0.5,
+        support: vec![0, 1],
+        objective: 1.0,
+        gap: 0.0,
+        status: SolveStatus::Optimal,
+    })
+}
+
+/// One raw request/response exchange against `addr`.
+fn exchange(addr: SocketAddr, raw: &str) -> (u16, Json) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(raw.as_bytes()).expect("write");
+    let mut response = Vec::new();
+    stream.read_to_end(&mut response).expect("read");
+    let (status, body) = parse_response(&response).expect("parse response");
+    let body = String::from_utf8(body).expect("utf8 body");
+    (status, Json::parse(&body).expect("json body"))
+}
+
+fn get(addr: SocketAddr, path: &str) -> (u16, Json) {
+    exchange(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, Json) {
+    exchange(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+/// Boot a server, run `f` against it, shut it down.
+fn with_server(model: LoadedModel, f: impl FnOnce(SocketAddr)) {
+    let server =
+        Server::bind("127.0.0.1:0", model, &ServeConfig { threads: 2, ..Default::default() })
+            .expect("bind");
+    let addr = server.local_addr().expect("addr");
+    let shutdown = server.shutdown_handle().expect("handle");
+    std::thread::scope(|scope| {
+        scope.spawn(move || server.run());
+        f(addr);
+        shutdown.shutdown();
+    });
+}
+
+#[test]
+fn healthz_reports_model_identity() {
+    with_server(toy_model(), |addr| {
+        let (status, body) = get(addr, "/healthz");
+        assert_eq!(status, 200);
+        assert_eq!(body.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(body.get("schema").and_then(Json::as_str), Some("backbone-model/v1"));
+        assert_eq!(
+            body.get("learner").and_then(Json::as_str),
+            Some("sparse_regression")
+        );
+        assert_eq!(body.get("num_features").and_then(Json::as_usize), Some(2));
+    });
+}
+
+#[test]
+fn predict_serves_batches_and_stats_count_them() {
+    with_server(toy_model(), |addr| {
+        let (status, body) = post(addr, "/predict", r#"{"rows": [[1, 0], [0, 1], [2, 2]]}"#);
+        assert_eq!(status, 200, "{body:?}");
+        let preds: Vec<f64> = body
+            .get("predictions")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|p| p.as_f64().unwrap())
+            .collect();
+        assert_eq!(preds, vec![1.5, -0.5, 0.5]);
+        assert_eq!(body.get("rows").and_then(Json::as_usize), Some(3));
+
+        let (status, stats) = get(addr, "/stats");
+        assert_eq!(status, 200);
+        assert_eq!(stats.get("predict_requests").and_then(Json::as_usize), Some(1));
+        assert_eq!(stats.get("rows_predicted").and_then(Json::as_usize), Some(3));
+        assert_eq!(stats.get("failures").and_then(Json::as_usize), Some(0));
+        let lat = stats.get("latency").unwrap();
+        assert_eq!(lat.get("count").and_then(Json::as_usize), Some(1));
+    });
+}
+
+#[test]
+fn bad_requests_get_4xx_json_errors() {
+    with_server(toy_model(), |addr| {
+        let (status, body) = post(addr, "/predict", "this is not json");
+        assert_eq!(status, 400);
+        assert!(body.get("error").is_some());
+
+        let (status, _) = post(addr, "/predict", r#"{"rows": [[1, 2, 3]]}"#);
+        assert_eq!(status, 400, "shape mismatch must be a client error");
+
+        let (status, _) = get(addr, "/predict");
+        assert_eq!(status, 405);
+
+        let (status, _) = get(addr, "/nothing-here");
+        assert_eq!(status, 404);
+
+        let (_, stats) = get(addr, "/stats");
+        assert_eq!(stats.get("failures").and_then(Json::as_usize), Some(4));
+        // Failed requests never enter the latency profile.
+        let lat = stats.get("latency").unwrap();
+        assert_eq!(lat.get("count").and_then(Json::as_usize), Some(0));
+    });
+}
+
+#[test]
+fn fitted_artifact_serves_bit_identical_predictions() {
+    // The full path the CLI wires together: fit → artifact → load → serve.
+    let gen_cfg = sparse_regression::SparseRegressionConfig {
+        n: 60,
+        p: 80,
+        k: 3,
+        rho: 0.1,
+        snr: 5.0,
+    };
+    let data = sparse_regression::generate(&gen_cfg, &mut Rng::seed_from_u64(21));
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(3)
+        .max_nonzeros(3)
+        .seed(2)
+        .build()
+        .unwrap();
+    bb.fit(&data.x, &data.y).unwrap();
+    let artifact = ModelArtifact::from_sparse_regression(&bb).unwrap();
+    // Through the wire format, not just the in-memory struct.
+    let served_model =
+        ModelArtifact::parse(&artifact.to_json().to_string_pretty()).unwrap().model;
+
+    let rows: Vec<Vec<f64>> = (0..4).map(|i| data.x.row(i).to_vec()).collect();
+    let x = Matrix::from_rows(&rows);
+    let expected = bb.try_predict(&x).unwrap();
+
+    with_server(served_model, |addr| {
+        let body = {
+            let rows_json: Vec<Json> = rows
+                .iter()
+                .map(|r| Json::Array(r.iter().map(|&v| Json::from_f64(v)).collect()))
+                .collect();
+            let mut m = std::collections::BTreeMap::new();
+            m.insert("rows".to_string(), Json::Array(rows_json));
+            Json::Object(m).to_string_compact()
+        };
+        let (status, response) = post(addr, "/predict", &body);
+        assert_eq!(status, 200, "{response:?}");
+        let served: Vec<f64> = response
+            .get("predictions")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|p| p.as_f64_tagged().unwrap())
+            .collect();
+        assert_eq!(served.len(), expected.len());
+        for (s, e) in served.iter().zip(&expected) {
+            assert_eq!(s.to_bits(), e.to_bits(), "served prediction differs");
+        }
+    });
+}
+
+#[test]
+fn self_test_harness_reports_zero_failures() {
+    let report = run_self_test(
+        toy_model(),
+        &SelfTestConfig { requests: 16, concurrency: 2, batch_rows: 8, threads: 2 },
+    )
+    .unwrap();
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.requests, 16);
+    assert!(report.req_per_sec > 0.0);
+    assert!(report.p99_ms >= report.p50_ms);
+}

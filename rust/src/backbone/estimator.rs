@@ -61,6 +61,7 @@ impl Backbone {
             lambda2: 1e-3,
             gap_tol: 0.01,
             backend: Backend::default(),
+            warm_start: None,
         })
     }
 
@@ -217,6 +218,7 @@ pub struct SparseRegressionCfg {
     lambda2: f64,
     gap_tol: f64,
     backend: Backend,
+    warm_start: Option<Vec<f64>>,
 }
 
 /// Typed builder returned by [`Backbone::sparse_regression`].
@@ -259,6 +261,16 @@ impl Builder<SparseRegressionCfg> {
         self
     }
 
+    /// Warm-start iterate: a dense length-`p` coefficient vector (e.g. a
+    /// `crate::warmstart` suggestion). Nonzero indices seed the screened
+    /// universe; the iterate feeds every subproblem's
+    /// `L0Config::warm_start`. Ignored when its length doesn't match the
+    /// fitted problem's `p`.
+    pub fn warm_start(mut self, beta: Vec<f64>) -> Self {
+        self.cfg.warm_start = Some(beta);
+        self
+    }
+
     /// Validate and construct the estimator.
     pub fn build(self) -> Result<BackboneSparseRegression, BackboneError> {
         require_positive("max_nonzeros", self.cfg.max_nonzeros)?;
@@ -278,6 +290,7 @@ impl Builder<SparseRegressionCfg> {
             subproblem_nonzeros: cfg.subproblem_nonzeros.unwrap_or(cfg.max_nonzeros),
             gap_tol: cfg.gap_tol,
             backend: cfg.backend,
+            warm_start: cfg.warm_start,
             last_diagnostics: None,
             fitted: None,
         })

@@ -348,6 +348,24 @@ where
     FitPipeline::new(params.clone())?.run(learner, data, budget)
 }
 
+/// [`run_backbone`] with warm-start seed entities unioned into the
+/// screened universe (see [`FitPipeline::with_seed_entities`]). An empty
+/// `seeds` slice is exactly [`run_backbone`].
+pub fn run_backbone_seeded<L: BackboneLearner>(
+    learner: &mut L,
+    data: &L::Data,
+    params: &BackboneParams,
+    budget: &Budget,
+    seeds: &[usize],
+) -> Result<BackboneFit<L>, BackboneError>
+where
+    L: Sync,
+    L::Data: Sync,
+    L::Indicator: Send,
+{
+    FitPipeline::new(params.clone())?.with_seed_entities(seeds).run(learner, data, budget)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

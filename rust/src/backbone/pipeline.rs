@@ -242,6 +242,7 @@ where
 #[derive(Debug, Clone)]
 pub struct FitPipeline {
     params: BackboneParams,
+    seed_entities: Vec<usize>,
 }
 
 impl FitPipeline {
@@ -249,7 +250,21 @@ impl FitPipeline {
     /// errors surface here, before any data is touched.
     pub fn new(params: BackboneParams) -> Result<FitPipeline, BackboneError> {
         params.validate()?;
-        Ok(FitPipeline { params })
+        Ok(FitPipeline { params, seed_entities: Vec::new() })
+    }
+
+    /// Seed the screener's keep-set: these entities are unioned into the
+    /// screened universe regardless of their utility rank (deduplicated;
+    /// out-of-range indices ignored). This is the warm-start hook — a
+    /// `crate::warmstart` suggestion seeds the cached support here so a
+    /// small screening `alpha` cannot screen out the entities the cached
+    /// solution says matter. An empty seed set leaves the pipeline on
+    /// the exact cold path (bit-identical universe and RNG schedule).
+    pub fn with_seed_entities(mut self, entities: &[usize]) -> FitPipeline {
+        self.seed_entities = entities.to_vec();
+        self.seed_entities.sort_unstable();
+        self.seed_entities.dedup();
+        self
     }
 
     /// The validated hyperparameters.
@@ -306,6 +321,11 @@ impl FitPipeline {
         by_utility.truncate(keep);
         let mut universe: Vec<usize> = by_utility;
         universe.sort_unstable();
+        if !self.seed_entities.is_empty() {
+            universe.extend(self.seed_entities.iter().copied().filter(|&e| e < n_entities));
+            universe.sort_unstable();
+            universe.dedup();
+        }
 
         // --- Iterate -------------------------------------------------------
         let mut diagnostics =
@@ -742,6 +762,32 @@ mod tests {
         assert!(outcome.exhausted);
         assert_eq!(outcome.skipped(), 6);
         assert_eq!(learner.calls(), 0);
+    }
+
+    #[test]
+    fn seed_entities_join_the_universe_and_empty_seeds_stay_cold() {
+        // Uniform utilities: the screen keeps the lowest-index entities,
+        // so high-index seeds are only reachable through the seed hook.
+        let params = BackboneParams { alpha: 0.1, ..Default::default() };
+        let run = |seeds: &[usize]| {
+            let mut learner = SlowLearner::new(20, std::time::Duration::ZERO);
+            FitPipeline::new(params.clone())
+                .unwrap()
+                .with_seed_entities(seeds)
+                .run(&mut learner, &(), &Budget::unlimited())
+                .unwrap()
+        };
+        let seeded = run(&[19, 15, 15, 25]);
+        assert!(seeded.backbone.contains(&15));
+        assert!(seeded.backbone.contains(&19));
+        // Out-of-range seed 25 is ignored, not an error.
+        assert!(!seeded.backbone.contains(&25));
+        // An empty seed set is the exact cold path.
+        assert_eq!(run(&[]).backbone, run(&[]).backbone);
+        assert_eq!(
+            run(&[]).diagnostics.screened_universe + 2,
+            seeded.diagnostics.screened_universe
+        );
     }
 
     #[test]

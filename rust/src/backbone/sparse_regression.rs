@@ -22,7 +22,7 @@
 //! ```
 
 use super::error::BackboneError;
-use super::{run_backbone, BackboneDiagnostics, BackboneLearner, BackboneParams};
+use super::{run_backbone_seeded, BackboneDiagnostics, BackboneLearner, BackboneParams};
 use crate::linalg::Matrix;
 use crate::rng::Rng;
 use crate::runtime::Backend;
@@ -75,6 +75,14 @@ pub struct BackboneSparseRegression {
     pub gap_tol: f64,
     /// Compute backend for the dense screening/IHT hot paths.
     pub backend: Backend,
+    /// Optional warm start: a dense length-`p` coefficient iterate
+    /// (e.g. a `crate::warmstart` suggestion). Its nonzero indices seed
+    /// the screened universe and the iterate itself is projected onto
+    /// every subproblem's local coordinates as `L0Config::warm_start`.
+    /// An explicit input, never hidden state — `None` (or a length
+    /// mismatch, which is ignored) is the exact cold path, and the same
+    /// warm start always reproduces the same fit bit-for-bit.
+    pub warm_start: Option<Vec<f64>>,
     /// Diagnostics of the last `fit` call.
     pub last_diagnostics: Option<BackboneDiagnostics>,
     pub(crate) fitted: Option<SparseRegressionModel>,
@@ -113,8 +121,23 @@ impl BackboneSparseRegression {
             });
         }
         let data = SupervisedData { x: x.clone(), y: y.to_vec() };
-        let mut inner = Inner { cfg: self.clone_config() };
-        let fit = run_backbone(&mut inner, &data, &self.params, budget)?;
+        // A warm start with the wrong length cannot index this problem's
+        // columns; drop it (mirroring the `L0Config::warm_start`
+        // contract) rather than erroring, so a stale cache entry can
+        // never make a fit fail.
+        let warm: Option<&Vec<f64>> =
+            self.warm_start.as_ref().filter(|w| w.len() == x.cols());
+        let seeds: Vec<usize> = warm
+            .map(|w| {
+                w.iter()
+                    .enumerate()
+                    .filter(|(_, &v)| v != 0.0)
+                    .map(|(j, _)| j)
+                    .collect()
+            })
+            .unwrap_or_default();
+        let mut inner = Inner { cfg: self.clone_config(warm.cloned()) };
+        let fit = run_backbone_seeded(&mut inner, &data, &self.params, budget, &seeds)?;
         self.last_diagnostics = Some(fit.diagnostics);
         self.fitted = Some(fit.model);
         Ok(self.fitted.as_ref().unwrap())
@@ -133,13 +156,14 @@ impl BackboneSparseRegression {
         self.fitted.as_ref()
     }
 
-    fn clone_config(&self) -> InnerConfig {
+    fn clone_config(&self, warm_start: Option<Vec<f64>>) -> InnerConfig {
         InnerConfig {
             max_nonzeros: self.max_nonzeros,
             subproblem_nonzeros: self.subproblem_nonzeros,
             lambda2: self.lambda2,
             gap_tol: self.gap_tol,
             backend: self.backend.clone(),
+            warm_start,
         }
     }
 }
@@ -151,6 +175,8 @@ struct InnerConfig {
     lambda2: f64,
     gap_tol: f64,
     backend: Backend,
+    /// Validated dense length-`p` warm iterate (length already checked).
+    warm_start: Option<Vec<f64>>,
 }
 
 /// The [`BackboneLearner`] implementation (kept separate from the public
@@ -186,10 +212,19 @@ impl BackboneLearner for Inner {
         let mut xs = std::mem::take(&mut ws.xs);
         data.x.select_columns_into(entities, &mut xs);
         let k = self.cfg.subproblem_nonzeros.min(entities.len());
+        // Project the global warm iterate onto this subproblem's local
+        // coordinates. Part of the config, not the workspace: the fit
+        // stays a pure function of (subproblem, stream), preserving the
+        // batch determinism contract.
+        let warm_start = self
+            .cfg
+            .warm_start
+            .as_ref()
+            .map(|w| entities.iter().map(|&j| w[j]).collect());
         let model = self.cfg.backend.l0_subproblem_fit(
             &xs,
             &data.y,
-            &L0Config { k, lambda2: self.cfg.lambda2, ..Default::default() },
+            &L0Config { k, lambda2: self.cfg.lambda2, warm_start, ..Default::default() },
             ws,
         );
         ws.xs = xs; // hand the design-matrix buffer back for the next fit
@@ -347,6 +382,40 @@ mod tests {
         let m2 = bb2.fit(&data.x, &data.y).unwrap().clone();
         assert_eq!(m1.support, m2.support);
         assert_eq!(m1.beta, m2.beta);
+    }
+
+    #[test]
+    fn warm_start_is_reproducible_and_stale_lengths_fall_back_cold() {
+        let data = gen(80, 120, 3, 6);
+        let mut cold = sr(0.5, 0.5, 3, 3);
+        let cold_model = cold.fit(&data.x, &data.y).unwrap().clone();
+
+        // Same warm start + same seed ⇒ bit-identical warm fits.
+        let warm_fit = |alpha: f64| {
+            let mut bb = sr(alpha, 0.5, 3, 3);
+            bb.warm_start = Some(cold_model.beta.clone());
+            bb.fit(&data.x, &data.y).unwrap().clone()
+        };
+        let w1 = warm_fit(0.1);
+        let w2 = warm_fit(0.1);
+        assert_eq!(w1.support, w2.support);
+        for (a, b) in w1.beta.iter().zip(&w2.beta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // The seeded universe keeps the warm support reachable even at a
+        // tiny alpha, so the warm objective can't be worse than refitting
+        // from a universe that contains the cold support.
+        assert!(w1.support.len() <= 3);
+
+        // A warm start whose length doesn't match p is ignored: the fit
+        // is bit-identical to the cold path.
+        let mut stale = sr(0.5, 0.5, 3, 3);
+        stale.warm_start = Some(vec![1.0; 7]);
+        let s = stale.fit(&data.x, &data.y).unwrap().clone();
+        assert_eq!(s.support, cold_model.support);
+        for (a, b) in s.beta.iter().zip(&cold_model.beta) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

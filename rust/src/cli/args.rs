@@ -11,7 +11,8 @@ pub struct Args {
 }
 
 /// Option keys that are boolean flags (never consume a value).
-const FLAG_KEYS: &[&str] = &["full", "help", "quiet", "native-only", "quick", "self-test"];
+const FLAG_KEYS: &[&str] =
+    &["fit", "full", "help", "quiet", "native-only", "quick", "self-test", "warm"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {

@@ -8,7 +8,18 @@
 //!
 //! ```text
 //! backbone-learn bench [--quick] [--reps N] [--budget SECS] [--out FILE]
+//! backbone-learn bench --warm [--quick] [--instances N] [--budget SECS]
+//!                      [--seed S] [--out FILE]
 //! ```
+//!
+//! `--warm` switches to the warm-start benchmark: a repeat family of
+//! sparse-regression instances (same shape, different data seeds) is
+//! fitted three ways — cold, warm-started from a leave-one-out
+//! [`WarmStartStore`] (nearest-neighbor hit, shrunken screening
+//! universe), and served from an exact cache hit (no solve at all).
+//! Rows carry `mode` and `objective` so CI can assert warm fits are
+//! faster at equal-or-better objectives; the default output file is
+//! `BENCH_PR6.json`.
 //!
 //! `--quick` is the CI scale (small shapes, 1 rep by default); without it
 //! the suite includes the n=500, p=2000 sparse-regression class the perf
@@ -35,12 +46,23 @@
 
 use super::Args;
 use crate::backbone::pipeline::resolved_threads;
+use crate::backbone::sparse_regression::SparseRegressionModel;
+use crate::backbone::Backbone;
 use crate::bench_support::run_bench_suite;
+use crate::data::sparse_regression;
 use crate::json::Json;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+use crate::util::Budget;
+use crate::warmstart::{featurize, suggested_alpha, InstanceFeatures, WarmStartStore};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 pub fn run(args: &Args) -> Result<i32> {
+    if args.flag("warm") {
+        return run_warm(args);
+    }
     let quick = args.flag("quick");
     let reps = args.get_usize("reps", if quick { 1 } else { 3 })?;
     let budget_secs = args.get_f64("budget", if quick { 20.0 } else { 120.0 })?;
@@ -114,6 +136,197 @@ pub fn run(args: &Args) -> Result<i32> {
             Json::Object(row)
         })
         .collect();
+    doc.insert("results".into(), Json::Array(rows));
+    let text = Json::Object(doc).to_string_pretty();
+    std::fs::write(&out, &text).with_context(|| format!("writing `{out}`"))?;
+    eprintln!("wrote {out}");
+    Ok(0)
+}
+
+/// One instance of the repeat family, with its cached featurization.
+struct FamilyInstance {
+    x: Matrix,
+    y: Vec<f64>,
+    features: InstanceFeatures,
+}
+
+/// `bench --warm`: cold vs warm-started vs exact-cache-hit fits on a
+/// repeat family of same-shape sparse-regression instances.
+fn run_warm(args: &Args) -> Result<i32> {
+    let quick = args.flag("quick");
+    let instances = args.get_usize("instances", 5)?.max(2);
+    let budget_secs = args.get_f64("budget", if quick { 20.0 } else { 120.0 })?;
+    let seed = args.get_u64("seed", 0)?;
+    let out = args.get("out").unwrap_or_else(|| "BENCH_PR6.json".into());
+    let (n, p, k, m) = if quick { (100, 400, 5, 5) } else { (200, 1000, 5, 5) };
+    let cold_alpha = 0.5;
+
+    eprintln!(
+        "[bench --warm] {} repeat-family instances (n={n} p={p} k={k} m={m}) → {out}",
+        instances
+    );
+    let family: Vec<FamilyInstance> = (0..instances)
+        .map(|i| {
+            let mut rng = Rng::seed_from_u64(seed.wrapping_add(i as u64));
+            let data = sparse_regression::generate(
+                &sparse_regression::SparseRegressionConfig { n, p, k, rho: 0.1, snr: 5.0 },
+                &mut rng,
+            );
+            let features = featurize(&data.x, &data.y, k);
+            FamilyInstance { x: data.x, y: data.y, features }
+        })
+        .collect();
+
+    // One timed fit: cold (no warm start) or neighbor-warm (cached beta
+    // plus the shrunken screening fraction the cache suggests).
+    let solve = |inst: &FamilyInstance,
+                 alpha: f64,
+                 warm: Option<Vec<f64>>|
+     -> Result<(SparseRegressionModel, f64)> {
+        let builder = Backbone::sparse_regression()
+            .alpha(alpha)
+            .beta(0.5)
+            .num_subproblems(m)
+            .max_nonzeros(k)
+            .threads(1)
+            .seed(seed);
+        let builder = match warm {
+            None => builder,
+            Some(w) => builder.warm_start(w),
+        };
+        let mut bb = builder.build()?;
+        let clock = Instant::now();
+        let model = bb.fit_with_budget(&inst.x, &inst.y, &Budget::seconds(budget_secs))?.clone();
+        Ok((model, clock.elapsed().as_secs_f64()))
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    let mut row = |i: usize, mode: &str, secs: f64, objective: f64, distance: Option<f64>| {
+        let mut r: BTreeMap<String, Json> = BTreeMap::new();
+        r.insert("learner".into(), Json::String("sparse_regression".into()));
+        r.insert("instance".into(), Json::Number(i as f64));
+        r.insert("n".into(), Json::Number(n as f64));
+        r.insert("p".into(), Json::Number(p as f64));
+        r.insert("k".into(), Json::Number(k as f64));
+        r.insert("m".into(), Json::Number(m as f64));
+        r.insert("threads".into(), Json::Number(1.0));
+        r.insert("mode".into(), Json::String(mode.into()));
+        r.insert("secs".into(), Json::Number(secs));
+        r.insert("objective".into(), Json::from_f64(objective));
+        if let Some(d) = distance {
+            r.insert("distance".into(), Json::Number(d));
+        }
+        rows.push(Json::Object(r));
+    };
+
+    // Pass 1: cold fits — the baseline, and the entries the store learns.
+    let mut cold: Vec<(SparseRegressionModel, f64)> = Vec::new();
+    for (i, inst) in family.iter().enumerate() {
+        let (model, secs) = solve(inst, cold_alpha, None)?;
+        println!("instance {i}: cold  {secs:>8.3}s  objective {:.6}", model.objective);
+        row(i, "cold", secs, model.objective, None);
+        cold.push((model, secs));
+    }
+
+    // Pass 2: neighbor-warm fits — for each instance, a leave-one-out
+    // store (so the hit is a true neighbor, never the instance itself)
+    // suggests a warm start; the timed window covers lookup + solve.
+    let mut warm: Vec<(f64, f64)> = Vec::new();
+    for (i, inst) in family.iter().enumerate() {
+        let mut store = WarmStartStore::new(instances.max(8));
+        for (j, other) in family.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            let model = &cold[j].0;
+            let coeffs: Vec<f64> = model.support.iter().map(|&c| model.beta[c]).collect();
+            store.record(
+                &other.features,
+                &model.support,
+                &coeffs,
+                model.intercept,
+                model.objective,
+                cold_alpha,
+            );
+        }
+        let clock = Instant::now();
+        let suggestion = store.suggest(&inst.features);
+        let (model, solve_secs, distance) = match suggestion {
+            Some(w) if w.beta.len() == p => {
+                let alpha = suggested_alpha(p, k);
+                let d = w.distance;
+                let (model, secs) = solve(inst, alpha, Some(w.beta))?;
+                (model, secs, Some(d))
+            }
+            _ => {
+                let (model, secs) = solve(inst, cold_alpha, None)?;
+                (model, secs, None)
+            }
+        };
+        let secs = clock.elapsed().as_secs_f64().max(solve_secs);
+        println!(
+            "instance {i}: warm  {secs:>8.3}s  objective {:.6}  (cold {:.3}s, {:.2}×)",
+            model.objective,
+            cold[i].1,
+            cold[i].1 / secs.max(1e-12)
+        );
+        row(i, "warm_neighbor", secs, model.objective, distance);
+        warm.push((secs, model.objective));
+    }
+
+    // Pass 3: exact cache hits — the store has seen these instances, so
+    // the lookup *is* the fit (featurize + nearest-neighbor + copy-out).
+    let mut store = WarmStartStore::new(instances.max(8));
+    for (inst, (model, _)) in family.iter().zip(&cold) {
+        let coeffs: Vec<f64> = model.support.iter().map(|&c| model.beta[c]).collect();
+        store.record(&inst.features, &model.support, &coeffs, model.intercept, model.objective, cold_alpha);
+    }
+    let mut exact: Vec<f64> = Vec::new();
+    for (i, inst) in family.iter().enumerate() {
+        let clock = Instant::now();
+        let features = featurize(&inst.x, &inst.y, k);
+        let w = store.suggest(&features).context("exact lookup missed its own entry")?;
+        let secs = clock.elapsed().as_secs_f64();
+        println!(
+            "instance {i}: exact {secs:>8.3}s  objective {:.6}  (hit exact={})",
+            w.objective, w.exact
+        );
+        row(i, "warm_exact", secs, w.objective, Some(w.distance));
+        exact.push(secs);
+    }
+
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len().max(1) as f64;
+    let cold_secs: Vec<f64> = cold.iter().map(|(_, s)| *s).collect();
+    let warm_secs: Vec<f64> = warm.iter().map(|(s, _)| *s).collect();
+    let (cold_mean, warm_mean, exact_mean) =
+        (mean(&cold_secs), mean(&warm_secs), mean(&exact));
+    let worsened = warm
+        .iter()
+        .zip(&cold)
+        .filter(|((_, wo), (cm, _))| *wo > cm.objective * (1.0 + 1e-9) + 1e-12)
+        .count();
+    println!(
+        "family mean: cold {cold_mean:.3}s · warm {warm_mean:.3}s ({:.2}×) · \
+         exact {exact_mean:.6}s ({:.0}×) · objectives worsened: {worsened}/{instances}",
+        cold_mean / warm_mean.max(1e-12),
+        cold_mean / exact_mean.max(1e-12),
+    );
+
+    let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+    doc.insert("schema".into(), Json::String("backbone-bench/v1".into()));
+    doc.insert("mode".into(), Json::String("warm".into()));
+    doc.insert("quick".into(), Json::Bool(quick));
+    doc.insert("instances".into(), Json::Number(instances as f64));
+    doc.insert("seed".into(), Json::Number(seed as f64));
+    doc.insert("budget_secs".into(), Json::Number(budget_secs));
+    doc.insert("threads_available".into(), Json::Number(resolved_threads(0) as f64));
+    let mut summary: BTreeMap<String, Json> = BTreeMap::new();
+    summary.insert("cold_mean_secs".into(), Json::Number(cold_mean));
+    summary.insert("warm_mean_secs".into(), Json::Number(warm_mean));
+    summary.insert("exact_mean_secs".into(), Json::Number(exact_mean));
+    summary.insert("warm_speedup".into(), Json::Number(cold_mean / warm_mean.max(1e-12)));
+    summary.insert("exact_speedup".into(), Json::Number(cold_mean / exact_mean.max(1e-12)));
+    summary.insert("objectives_worsened".into(), Json::Number(worsened as f64));
+    doc.insert("summary".into(), Json::Object(summary));
     doc.insert("results".into(), Json::Array(rows));
     let text = Json::Object(doc).to_string_pretty();
     std::fs::write(&out, &text).with_context(|| format!("writing `{out}`"))?;

@@ -4,17 +4,28 @@
 //! With `--out FILE`, the run's [`BackboneDiagnostics`] and headline
 //! metrics are written as JSON so benchmark tooling can consume
 //! per-iteration stats without parsing the log output.
+//!
+//! With `--warm-cache FILE` (sparse regression only), fits consult a
+//! persistent [`WarmStartStore`]: an exact feature match serves the
+//! remembered solution without solving, a near neighbor warm-starts the
+//! solve with a shrunken screening universe, and every real fit is
+//! recorded back into the store. The `--out` document then carries a
+//! `warm_start` object plus `fit_secs` so CI can compare cold vs warm.
 
 use super::Args;
+use crate::backbone::sparse_regression::SparseRegressionModel;
 use crate::backbone::{Backbone, BackboneDiagnostics};
 use crate::config::Problem;
 use crate::data::{blobs, classification, sparse_regression};
 use crate::json::Json;
 use crate::metrics::{adjusted_rand_index, auc, r2_score, silhouette_score, support_recovery};
 use crate::rng::Rng;
+use crate::solvers::SolveStatus;
 use crate::util::Budget;
+use crate::warmstart::{featurize, suggested_alpha, WarmStartStore, DEFAULT_STORE_CAPACITY};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
+use std::time::Instant;
 
 pub fn run(args: &Args) -> Result<i32> {
     let problem =
@@ -38,6 +49,9 @@ pub fn run(args: &Args) -> Result<i32> {
     // Accumulated for `--out`: headline metric name → value.
     let mut metrics: BTreeMap<String, Json> = BTreeMap::new();
     let diagnostics: BackboneDiagnostics;
+    // Filled by the sparse-regression branch when `--warm-cache` is in play.
+    let mut warm_json: Option<Json> = None;
+    let mut fit_secs: Option<f64> = None;
 
     match problem {
         Problem::SparseRegression => {
@@ -48,30 +62,119 @@ pub fn run(args: &Args) -> Result<i32> {
                 &sparse_regression::SparseRegressionConfig { n, p, k, rho: 0.1, snr: 5.0 },
                 &mut rng,
             );
-            let builder = Backbone::sparse_regression()
-                .alpha(alpha)
-                .beta(beta)
-                .num_subproblems(m)
-                .max_nonzeros(k)
-                .seed(seed);
-            let builder = match threads {
-                None => builder,
-                Some(n) => builder.threads(n),
+            // Warm-start cache: consult the store before fitting, record
+            // after. A corrupt or missing store degrades to a cold fit.
+            let warm_cache = args.get("warm-cache");
+            let (mut store, store_error) = match &warm_cache {
+                Some(path) => {
+                    let (s, e) = WarmStartStore::load_or_empty(path, DEFAULT_STORE_CAPACITY);
+                    (Some(s), e)
+                }
+                None => (None, None),
             };
-            let mut bb = builder.build()?;
-            let model = bb.fit_with_budget(&data.x, &data.y, &budget)?.clone();
+            if let Some(err) = &store_error {
+                eprintln!("warning: warm-start store unusable ({err}); fitting cold");
+            }
+            let features = store.as_ref().map(|_| featurize(&data.x, &data.y, k));
+            let suggestion = match (store.as_mut(), features.as_ref()) {
+                (Some(s), Some(f)) => s.suggest(f),
+                _ => None,
+            };
+            let clock = Instant::now();
+            let model: SparseRegressionModel;
+            let hit: &str;
+            let mut distance: Option<f64> = None;
+            if let Some(w) = suggestion.as_ref().filter(|w| w.exact && w.beta.len() == p) {
+                // Exact feature match: serve the remembered solution — the
+                // warm start IS the fit, no solve needed.
+                println!("warm start: exact cache hit (no solve)");
+                model = SparseRegressionModel {
+                    beta: w.beta.clone(),
+                    intercept: w.intercept,
+                    support: w.support.clone(),
+                    objective: w.objective,
+                    gap: f64::NAN,
+                    status: SolveStatus::Optimal,
+                };
+                diagnostics = BackboneDiagnostics::default();
+                hit = "exact";
+                distance = Some(0.0);
+            } else {
+                // Neighbor hit warm-starts the solve and shrinks the
+                // screening universe; otherwise fit cold as before.
+                let (fit_alpha, warm_beta) = match &suggestion {
+                    Some(w) if w.beta.len() == p => {
+                        let a = suggested_alpha(p, k);
+                        println!(
+                            "warm start: neighbor at distance {:.3e} → α={a:.4}",
+                            w.distance
+                        );
+                        hit = "neighbor";
+                        distance = Some(w.distance);
+                        (a, Some(w.beta.clone()))
+                    }
+                    _ => {
+                        hit = "none";
+                        (alpha, None)
+                    }
+                };
+                let builder = Backbone::sparse_regression()
+                    .alpha(fit_alpha)
+                    .beta(beta)
+                    .num_subproblems(m)
+                    .max_nonzeros(k)
+                    .seed(seed);
+                let builder = match threads {
+                    None => builder,
+                    Some(n) => builder.threads(n),
+                };
+                let builder = match warm_beta {
+                    None => builder,
+                    Some(wb) => builder.warm_start(wb),
+                };
+                let mut bb = builder.build()?;
+                model = bb.fit_with_budget(&data.x, &data.y, &budget)?.clone();
+                diagnostics = bb.last_diagnostics.clone().unwrap();
+                if let (Some(s), Some(f), Some(path)) =
+                    (store.as_mut(), features.as_ref(), warm_cache.as_ref())
+                {
+                    let coeffs: Vec<f64> =
+                        model.support.iter().map(|&j| model.beta[j]).collect();
+                    s.record(f, &model.support, &coeffs, model.intercept, model.objective, fit_alpha);
+                    match s.save(path) {
+                        Ok(()) => eprintln!("warm-start store: {} entries → {path}", s.len()),
+                        Err(e) => eprintln!("warning: could not save warm-start store: {e}"),
+                    }
+                }
+            }
+            let elapsed = clock.elapsed().as_secs_f64();
             let r2 = r2_score(&data.y, &model.predict(&data.x));
             let rec = support_recovery(&model.support, &data.support_true);
-            print_diag(&bb.last_diagnostics);
+            print_diag(&Some(diagnostics.clone()));
             println!("support   : {:?}", model.support);
             println!("true supp : {:?}", data.support_true);
             println!("R²        : {r2:.4}");
             println!("support F1: {:.3}", rec.f1);
             println!("exact gap : {:.4} ({:?})", model.gap, model.status);
+            println!("objective : {:.6} in {elapsed:.3}s", model.objective);
             metrics.insert("r2".into(), Json::Number(r2));
             metrics.insert("support_f1".into(), Json::Number(rec.f1));
             metrics.insert("gap".into(), Json::Number(model.gap));
-            diagnostics = bb.last_diagnostics.clone().unwrap();
+            metrics.insert("objective".into(), Json::Number(model.objective));
+            fit_secs = Some(elapsed);
+            if let Some(store) = &store {
+                let mut w = BTreeMap::new();
+                w.insert("enabled".into(), Json::Bool(true));
+                w.insert("hit".into(), Json::String(hit.into()));
+                if let Some(d) = distance {
+                    w.insert("distance".into(), Json::Number(d));
+                }
+                w.insert("store_entries".into(), Json::Number(store.len() as f64));
+                if let Some(err) = &store_error {
+                    w.insert("store_error".into(), Json::String(err.to_string()));
+                }
+                warm_json = Some(Json::Object(w));
+            }
         }
         Problem::DecisionTrees => {
             let n = args.get_usize("n", 300)?;
@@ -163,6 +266,12 @@ pub fn run(args: &Args) -> Result<i32> {
         }
         doc.insert("diagnostics".into(), diagnostics.to_json());
         doc.insert("metrics".into(), Json::Object(metrics));
+        if let Some(secs) = fit_secs {
+            doc.insert("fit_secs".into(), Json::Number(secs));
+        }
+        if let Some(w) = warm_json {
+            doc.insert("warm_start".into(), w);
+        }
         let text = Json::Object(doc).to_string_pretty();
         std::fs::write(&path, text).with_context(|| format!("writing `{path}`"))?;
         eprintln!("wrote {path}");

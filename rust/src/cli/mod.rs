@@ -2,12 +2,12 @@
 //!
 //! ```text
 //! backbone-learn table1 [--block sr|dt|cl|all] [--full] [--threads N] [--config FILE] [--out FILE]
-//! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S --threads N] [--out FILE]
+//! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S --threads N] [--warm-cache FILE] [--out FILE]
 //! backbone-learn save    --learner sr|lr|dt|cl --out model.json [fit args] [--data-out rows.csv]
 //! backbone-learn predict --model model.json --data rows.csv [--labels y.csv] [--out preds.json]
-//! backbone-learn serve   --model model.json [--port P] [--threads N] [--self-test [--quick]]
+//! backbone-learn serve   --model model.json [--port P] [--threads N] [--fit] [--warm-cache FILE] [--self-test [--quick]]
 //! backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl] [--threads N]
-//! backbone-learn bench  [--quick] [--reps N] [--budget SECS] [--out FILE]
+//! backbone-learn bench  [--quick] [--warm] [--reps N] [--budget SECS] [--out FILE]
 //! backbone-learn dump-config --problem sr|dt|cl [--full]
 //! backbone-learn artifacts [--dir artifacts]
 //! ```
@@ -41,6 +41,8 @@ USAGE:
   backbone-learn fit    --problem sr|dt|cl [--n N] [--p P] [--k K]
                         [--alpha A] [--beta B] [--m M] [--seed S] [--budget SECS]
                         [--threads N] [--out FILE]   (diagnostics + metrics as JSON)
+                        [--warm-cache store.json]    (sr only: learn + reuse warm
+                         starts across fits; exact repeats skip the solve)
   backbone-learn save    --learner sr|lr|dt|cl --out model.json
                          [--n N] [--p P] [--k K] [--alpha A] [--beta B] [--m M]
                          [--seed S] [--budget SECS] [--threads N]
@@ -51,8 +53,10 @@ USAGE:
                          (artifact + CSV rows → predictions; --labels adds
                           metrics incl. confusion matrix + ROC AUC)
   backbone-learn serve   --model model.json [--host H] [--port P] [--threads N]
+                         [--fit] [--warm-cache store.json] [--max-fits N]
                          (HTTP prediction server: POST /predict, GET /healthz,
-                          GET /stats)
+                          GET /stats; --fit adds POST /fit — online fits with a
+                          learned warm-start cache, served by model id)
   backbone-learn serve   --model model.json --self-test [--quick] [--requests N]
                          [--concurrency C] [--batch B] [--out report.json]
                          (loopback load test; non-zero exit on any failure)
@@ -60,6 +64,9 @@ USAGE:
                         [--threads N]
   backbone-learn bench  [--quick] [--reps N] [--budget SECS] [--out FILE]
                         (end-to-end perf harness; timings as JSON)
+  backbone-learn bench  --warm [--quick] [--instances N] [--budget SECS]
+                        [--out FILE]  (cold vs warm-start fits on a repeat
+                         family → BENCH_PR6.json)
   backbone-learn dump-config --problem sr|dt|cl [--full]
   backbone-learn artifacts [--dir DIR]
 

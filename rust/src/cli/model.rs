@@ -9,7 +9,8 @@
 //! backbone-learn predict --model model.json --data rows.csv
 //!                        [--labels y.csv] [--out preds.json]
 //! backbone-learn serve   --model model.json [--port P] [--host H]
-//!                        [--threads N]
+//!                        [--threads N] [--fit] [--warm-cache store.json]
+//!                        [--max-fits N]
 //! backbone-learn serve   --model model.json --self-test [--quick]
 //!                        [--requests N] [--concurrency C] [--batch B]
 //!                        [--threads N] [--out report.json]
@@ -342,12 +343,16 @@ pub fn serve(args: &Args) -> Result<i32> {
     let host = args.get("host").unwrap_or_else(|| "127.0.0.1".into());
     let port = args.get_usize("port", 8787)?;
     let addr = format!("{host}:{port}");
-    let server = Server::bind(
-        &addr,
-        model,
-        &ServeConfig { threads, ..ServeConfig::default() },
-    )
-    .with_context(|| format!("binding `{addr}`"))?;
+    let enable_fit = args.flag("fit");
+    let cfg = ServeConfig {
+        threads,
+        enable_fit,
+        max_concurrent_fits: args.get_usize("max-fits", 1)?,
+        warm_cache_path: args.get("warm-cache"),
+        ..ServeConfig::default()
+    };
+    let server = Server::bind(&addr, model, &cfg)
+        .with_context(|| format!("binding `{addr}`"))?;
     let bound = server.local_addr()?;
     println!(
         "serving {} model from {model_path} on http://{bound} ({} threads)",
@@ -355,8 +360,14 @@ pub fn serve(args: &Args) -> Result<i32> {
         crate::backbone::resolved_threads(threads)
     );
     println!("  POST /predict   {{\"rows\": [[...], ...]}} → predictions");
+    if enable_fit {
+        println!("  POST /fit       {{\"x\": [[...]], \"y\": [...], \"k\": K}} → model id + support");
+    }
     println!("  GET  /healthz   liveness + model identity");
-    println!("  GET  /stats     request counters + latency profile");
+    println!("  GET  /stats     per-route request counters + latency profile");
+    if let Some(err) = server.warm_store_error() {
+        eprintln!("warning: warm-start store unusable ({err}); /fit starts cold");
+    }
     server.run();
     Ok(0)
 }

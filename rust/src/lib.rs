@@ -45,7 +45,10 @@
 //! whose [`persist::LoadedModel`] predicts bit-identically to the
 //! in-memory estimator, and [`serve`] exposes a loaded artifact over a
 //! std-only batched HTTP prediction server (`cli save` / `cli predict` /
-//! `cli serve`).
+//! `cli serve`). [`warmstart`] closes the loop: a bounded, persistable
+//! store of past fits predicts warm starts for new instances of the same
+//! problem family (`cli fit --warm-cache`, `cli serve --fit` with
+//! `POST /fit`), so repeat-family instances solve warm instead of cold.
 //!
 //! The fit loop
 //! itself is a [`FitPipeline`] whose subproblem stage is an explicit,
@@ -91,6 +94,8 @@ pub mod runtime;
 pub mod serve;
 pub mod solvers;
 pub mod util;
+pub mod warmstart;
 
 pub use backbone::{Backbone, BackboneError, ExecutionPolicy, Fit, FitPipeline, Predict};
 pub use persist::{LoadedModel, ModelArtifact};
+pub use warmstart::{WarmStart, WarmStartStore};

@@ -27,12 +27,14 @@ pub mod http;
 pub mod selftest;
 
 use crate::backbone::resolved_threads;
+use crate::backbone::Backbone;
 use crate::bench_support::percentile;
 use crate::json::Json;
 use crate::linalg::Matrix;
 use crate::persist::{LoadedModel, MODEL_SCHEMA};
+use crate::warmstart::{featurize, suggested_alpha, WarmStartStore};
 use http::{read_request, write_json, Request};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -47,6 +49,23 @@ pub struct ServeConfig {
     pub max_body_bytes: usize,
     /// Per-connection socket read/write timeout.
     pub io_timeout: Duration,
+    /// Enable `POST /fit` (the online fit path). Off by default: fitting
+    /// is orders of magnitude heavier than inference, so it must be an
+    /// explicit opt-in (`cli serve --fit`).
+    pub enable_fit: bool,
+    /// Bounded queueing for `POST /fit`: at most this many fits run at
+    /// once; excess requests are answered `429` immediately instead of
+    /// occupying a worker thread behind a long solve.
+    pub max_concurrent_fits: usize,
+    /// Bound on models fitted online and held for `/predict` lookup by
+    /// id; the oldest model is evicted first (deterministic FIFO).
+    pub registry_capacity: usize,
+    /// Bound on the warm-start store consulted/updated by `POST /fit`.
+    pub warm_capacity: usize,
+    /// Optional path of a `backbone-warmstart-store/v1` document: loaded
+    /// at bind time (corrupt/missing degrades to an empty store) and
+    /// written back after every successful fit.
+    pub warm_cache_path: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -55,6 +74,11 @@ impl Default for ServeConfig {
             threads: 2,
             max_body_bytes: 8 * 1024 * 1024,
             io_timeout: Duration::from_secs(10),
+            enable_fit: false,
+            max_concurrent_fits: 1,
+            registry_capacity: 16,
+            warm_capacity: crate::warmstart::DEFAULT_STORE_CAPACITY,
+            warm_cache_path: None,
         }
     }
 }
@@ -93,35 +117,58 @@ impl LatencyWindow {
     }
 }
 
-/// Request/latency counters surfaced by `GET /stats`.
-pub struct ServerStats {
+/// Per-route request/failure/latency accounting. `/predict` and `/fit`
+/// each own one of these so they are independently observable in
+/// `GET /stats` — a slow fit queue can never hide in the predict
+/// latency profile (and vice versa).
+struct RouteStats {
+    /// Requests routed here (attempts, including ones answered 4xx).
     requests: AtomicU64,
-    predict_requests: AtomicU64,
-    rows_predicted: AtomicU64,
+    /// Attempts answered with a non-2xx status.
     failures: AtomicU64,
+    /// Work units completed: rows predicted / models fitted.
+    units: AtomicU64,
+    /// Latency of *successful* requests only.
     latency: Mutex<LatencyWindow>,
 }
 
-impl ServerStats {
+impl RouteStats {
     fn new() -> Self {
         Self {
             requests: AtomicU64::new(0),
-            predict_requests: AtomicU64::new(0),
-            rows_predicted: AtomicU64::new(0),
             failures: AtomicU64::new(0),
+            units: AtomicU64::new(0),
             latency: Mutex::new(LatencyWindow::new()),
         }
     }
 
-    fn record_predict(&self, rows: usize, latency_us: u64) {
-        self.predict_requests.fetch_add(1, Ordering::Relaxed);
-        self.rows_predicted.fetch_add(rows as u64, Ordering::Relaxed);
+    fn record_ok(&self, units: usize, latency_us: u64) {
+        self.units.fetch_add(units as u64, Ordering::Relaxed);
         self.latency.lock().unwrap().record(latency_us);
     }
 
-    fn to_json(&self, uptime_secs: f64, threads: usize) -> Json {
+    /// `{requests, failures, <units_key>, latency: {...}}`.
+    fn to_json(&self, units_key: &str) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "requests".into(),
+            Json::Number(self.requests.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "failures".into(),
+            Json::Number(self.failures.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            units_key.into(),
+            Json::Number(self.units.load(Ordering::Relaxed) as f64),
+        );
+        m.insert("latency".into(), self.latency_json());
+        Json::Object(m)
+    }
+
+    fn latency_json(&self) -> Json {
         // The lock guard lives only for the snapshot statement; sorting
-        // happens outside it so /stats polls never stall predict workers.
+        // happens outside it so /stats polls never stall the workers.
         let (count, mut window) = self.latency.lock().unwrap().snapshot();
         window.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let mean = if window.is_empty() {
@@ -138,31 +185,107 @@ impl ServerStats {
         latency.insert("mean_us".into(), Json::from_f64(mean));
         latency.insert("p50_us".into(), Json::from_f64(percentile(&window, 0.50)));
         latency.insert("p99_us".into(), Json::from_f64(percentile(&window, 0.99)));
+        Json::Object(latency)
+    }
+}
+
+/// Request/latency counters surfaced by `GET /stats`.
+pub struct ServerStats {
+    requests: AtomicU64,
+    failures: AtomicU64,
+    predict: RouteStats,
+    fit: RouteStats,
+}
+
+impl ServerStats {
+    fn new() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            predict: RouteStats::new(),
+            fit: RouteStats::new(),
+        }
+    }
+
+    fn record_predict(&self, rows: usize, latency_us: u64) {
+        self.predict.record_ok(rows, latency_us);
+    }
+
+    fn to_json(&self, uptime_secs: f64, threads: usize) -> Json {
+        let mut routes = BTreeMap::new();
+        routes.insert("fit".into(), self.fit.to_json("models_fitted"));
+        routes.insert("predict".into(), self.predict.to_json("rows_predicted"));
         let mut m = BTreeMap::new();
         m.insert(
             "requests_total".into(),
             Json::Number(self.requests.load(Ordering::Relaxed) as f64),
         );
-        m.insert(
-            "predict_requests".into(),
-            Json::Number(self.predict_requests.load(Ordering::Relaxed) as f64),
-        );
+        // Pre-split consumers read the predict route's numbers at the
+        // top level; keep those keys as mirrors of `routes.predict`.
+        let (predict_ok, _) = self.predict.latency.lock().unwrap().snapshot();
+        m.insert("predict_requests".into(), Json::Number(predict_ok as f64));
         m.insert(
             "rows_predicted".into(),
-            Json::Number(self.rows_predicted.load(Ordering::Relaxed) as f64),
+            Json::Number(self.predict.units.load(Ordering::Relaxed) as f64),
         );
         m.insert(
             "failures".into(),
             Json::Number(self.failures.load(Ordering::Relaxed) as f64),
         );
-        m.insert("latency".into(), Json::Object(latency));
+        m.insert("latency".into(), self.predict.latency_json());
+        m.insert("routes".into(), Json::Object(routes));
         m.insert("uptime_secs".into(), Json::from_f64(uptime_secs));
         m.insert("threads".into(), Json::Number(threads as f64));
         Json::Object(m)
     }
 }
 
-/// Shared state of a running server: the model plus observability.
+/// Models fitted online through `POST /fit`, addressable from
+/// `/predict` by id. Bounded: the oldest model is evicted first, so a
+/// long-running fit service cannot grow without limit. Ids are assigned
+/// from a monotone counter (`m1`, `m2`, …) — deterministic for a given
+/// request order, never wall clock.
+struct ModelRegistry {
+    models: BTreeMap<String, Arc<LoadedModel>>,
+    order: VecDeque<String>,
+    next_id: u64,
+    capacity: usize,
+}
+
+impl ModelRegistry {
+    fn new(capacity: usize) -> Self {
+        Self {
+            models: BTreeMap::new(),
+            order: VecDeque::new(),
+            next_id: 0,
+            capacity: capacity.max(1),
+        }
+    }
+
+    fn insert(&mut self, model: LoadedModel) -> String {
+        self.next_id += 1;
+        let id = format!("m{}", self.next_id);
+        self.models.insert(id.clone(), Arc::new(model));
+        self.order.push_back(id.clone());
+        while self.models.len() > self.capacity {
+            if let Some(old) = self.order.pop_front() {
+                self.models.remove(&old);
+            }
+        }
+        id
+    }
+
+    fn get(&self, id: &str) -> Option<Arc<LoadedModel>> {
+        self.models.get(id).cloned()
+    }
+
+    fn len(&self) -> usize {
+        self.models.len()
+    }
+}
+
+/// Shared state of a running server: the model plus observability and
+/// (when `--fit` is enabled) the online-fit machinery.
 pub struct ServerState {
     model: LoadedModel,
     stats: ServerStats,
@@ -171,6 +294,16 @@ pub struct ServerState {
     threads: usize,
     max_body: usize,
     io_timeout: Duration,
+    fit_enabled: bool,
+    /// Fits currently executing; the admission gate for bounded queueing.
+    fits_in_flight: AtomicU64,
+    max_concurrent_fits: u64,
+    registry: Mutex<ModelRegistry>,
+    warm: Mutex<WarmStartStore>,
+    /// Typed load failure of the warm cache at bind time (the store
+    /// degraded to empty; fits stay cold until it repopulates).
+    warm_error: Option<String>,
+    warm_cache_path: Option<String>,
 }
 
 /// A bound (but not yet running) prediction server.
@@ -201,6 +334,13 @@ impl Server {
     /// port) and prepare to serve `model`.
     pub fn bind(addr: &str, model: LoadedModel, cfg: &ServeConfig) -> std::io::Result<Server> {
         let listener = TcpListener::bind(addr)?;
+        let (warm, warm_error) = match &cfg.warm_cache_path {
+            Some(path) => {
+                let (store, err) = WarmStartStore::load_or_empty(path, cfg.warm_capacity);
+                (store, err.map(|e| e.to_string()))
+            }
+            None => (WarmStartStore::new(cfg.warm_capacity), None),
+        };
         let state = Arc::new(ServerState {
             model,
             stats: ServerStats::new(),
@@ -209,6 +349,13 @@ impl Server {
             threads: resolved_threads(cfg.threads),
             max_body: cfg.max_body_bytes,
             io_timeout: cfg.io_timeout,
+            fit_enabled: cfg.enable_fit,
+            fits_in_flight: AtomicU64::new(0),
+            max_concurrent_fits: cfg.max_concurrent_fits.max(1) as u64,
+            registry: Mutex::new(ModelRegistry::new(cfg.registry_capacity)),
+            warm: Mutex::new(warm),
+            warm_error,
+            warm_cache_path: cfg.warm_cache_path.clone(),
         });
         Ok(Server { listener, state })
     }
@@ -216,6 +363,13 @@ impl Server {
     /// Address the server is listening on (resolves port 0).
     pub fn local_addr(&self) -> std::io::Result<SocketAddr> {
         self.listener.local_addr()
+    }
+
+    /// Typed load error from the warm-start store, if the configured
+    /// `warm_cache_path` existed but could not be parsed (the server
+    /// still starts, degraded to cold fits).
+    pub fn warm_store_error(&self) -> Option<&str> {
+        self.state.warm_error.as_deref()
     }
 
     /// Shutdown handle usable from other threads while `run` blocks.
@@ -310,12 +464,35 @@ fn route(request: &Request, state: &ServerState) -> Outcome {
         ("GET", "/stats") => ok(state
             .stats
             .to_json(state.started.elapsed().as_secs_f64(), state.threads)),
-        ("POST", "/predict") => predict(request, state),
+        ("POST", "/predict") => noted(&state.stats.predict, predict(request, state)),
+        ("POST", "/fit") if state.fit_enabled => noted(&state.stats.fit, fit(request, state)),
+        ("POST", "/fit") => error(
+            403,
+            "Forbidden",
+            "fit endpoint disabled; start the server with --fit",
+        ),
         ("GET" | "HEAD", "/predict") => {
             error(405, "Method Not Allowed", "use POST /predict with a JSON body")
         }
-        _ => error(404, "Not Found", "routes: POST /predict, GET /healthz, GET /stats"),
+        ("GET" | "HEAD", "/fit") => {
+            error(405, "Method Not Allowed", "use POST /fit with a JSON body")
+        }
+        _ => error(
+            404,
+            "Not Found",
+            "routes: POST /predict, POST /fit, GET /healthz, GET /stats",
+        ),
     }
+}
+
+/// Enter `outcome` into a route's attempt/failure counters (success
+/// latency/units were already recorded by the handler itself).
+fn noted(route_stats: &RouteStats, outcome: Outcome) -> Outcome {
+    route_stats.requests.fetch_add(1, Ordering::Relaxed);
+    if !(200..300).contains(&outcome.status) {
+        route_stats.failures.fetch_add(1, Ordering::Relaxed);
+    }
+    outcome
 }
 
 fn health_json(state: &ServerState) -> Json {
@@ -329,6 +506,20 @@ fn health_json(state: &ServerState) -> Json {
     if let Some(n) = state.model.expected_rows() {
         m.insert("expected_rows".into(), Json::Number(n as f64));
     }
+    m.insert("fit_enabled".into(), Json::Bool(state.fit_enabled));
+    if state.fit_enabled {
+        m.insert(
+            "models_online".into(),
+            Json::Number(state.registry.lock().unwrap().len() as f64),
+        );
+        m.insert(
+            "warm_store_entries".into(),
+            Json::Number(state.warm.lock().unwrap().len() as f64),
+        );
+        if let Some(err) = &state.warm_error {
+            m.insert("warm_store_error".into(), Json::String(err.clone()));
+        }
+    }
     m.insert(
         "uptime_secs".into(),
         Json::from_f64(state.started.elapsed().as_secs_f64()),
@@ -337,7 +528,9 @@ fn health_json(state: &ServerState) -> Json {
 }
 
 /// `POST /predict`: parse the batched rows, run one batch inference,
-/// answer with predictions (plus scores for the classifiers).
+/// answer with predictions (plus scores for the classifiers). An
+/// optional `"model"` field addresses a model fitted online through
+/// `POST /fit`; without it, the model the server was started with.
 fn predict(request: &Request, state: &ServerState) -> Outcome {
     let started = Instant::now();
     let text = match std::str::from_utf8(&request.body) {
@@ -348,19 +541,33 @@ fn predict(request: &Request, state: &ServerState) -> Outcome {
         Ok(d) => d,
         Err(e) => return error(400, "Bad Request", &format!("body is not JSON: {e:#}")),
     };
-    let rows = match parse_rows(&doc) {
+    let rows = match parse_matrix(&doc, "rows") {
         Ok(r) => r,
         Err(message) => return error(400, "Bad Request", &message),
     };
+    let online = match doc.get("model").and_then(Json::as_str) {
+        Some(id) => match state.registry.lock().unwrap().get(id) {
+            Some(m) => Some(m),
+            None => {
+                return error(
+                    404,
+                    "Not Found",
+                    &format!("unknown model id `{id}` (evicted or never fitted)"),
+                );
+            }
+        },
+        None => None,
+    };
+    let model: &LoadedModel = online.as_deref().unwrap_or(&state.model);
     let x = Matrix::from_rows(&rows);
     // One inference per request: scores are the expensive pass, the
     // prediction view is derived from them (bit-identical to
     // try_predict by the predictions_from_scores contract).
-    let scores = match state.model.predict_scores(&x) {
+    let scores = match model.predict_scores(&x) {
         Ok(s) => s,
         Err(e) => return error(400, "Bad Request", &e.to_string()),
     };
-    let predictions = state.model.predictions_from_scores(&scores);
+    let predictions = model.predictions_from_scores(&scores);
     let latency_us = started.elapsed().as_micros() as u64;
     state.stats.record_predict(rows.len(), latency_us);
 
@@ -369,7 +576,7 @@ fn predict(request: &Request, state: &ServerState) -> Outcome {
         "predictions".into(),
         Json::Array(predictions.iter().map(|&p| Json::from_f64(p)).collect()),
     );
-    if state.model.kind().is_classifier() {
+    if model.kind().is_classifier() {
         m.insert(
             "scores".into(),
             Json::Array(scores.iter().map(|&s| Json::from_f64(s)).collect()),
@@ -380,34 +587,258 @@ fn predict(request: &Request, state: &ServerState) -> Outcome {
     ok(Json::Object(m))
 }
 
-/// Extract `{"rows": [[...], ...]}` as a rectangular f64 batch.
-fn parse_rows(doc: &Json) -> Result<Vec<Vec<f64>>, String> {
+/// `POST /fit`: fit a sparse-regression model online and register it
+/// for `/predict` by id. Body:
+///
+/// ```json
+/// {"x": [[...], ...], "y": [...], "k": 5,
+///  "alpha": 0.5, "beta": 0.5, "m": 5, "seed": 0, "warm": true}
+/// ```
+///
+/// Only `x`, `y`, `k` are required. With `"warm"` (default true) the
+/// warm-start store is consulted first: an exact feature match serves
+/// the cached solution immediately (no solve), a near neighbor
+/// warm-starts the backbone with a shrunk screening fraction, and every
+/// solved fit is written back to the store.
+fn fit(request: &Request, state: &ServerState) -> Outcome {
+    // Bounded queueing: admission is a single atomic increment; a full
+    // queue is answered 429 immediately instead of parking a worker
+    // thread behind someone else's solve.
+    let in_flight = state.fits_in_flight.fetch_add(1, Ordering::SeqCst);
+    let outcome = if in_flight >= state.max_concurrent_fits {
+        error(
+            429,
+            "Too Many Requests",
+            "fit queue is full; retry after the running fit completes",
+        )
+    } else {
+        fit_inner(request, state)
+    };
+    state.fits_in_flight.fetch_sub(1, Ordering::SeqCst);
+    outcome
+}
+
+fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
+    let started = Instant::now();
+    let text = match std::str::from_utf8(&request.body) {
+        Ok(t) => t,
+        Err(_) => return error(400, "Bad Request", "body is not UTF-8"),
+    };
+    let doc = match Json::parse(text) {
+        Ok(d) => d,
+        Err(e) => return error(400, "Bad Request", &format!("body is not JSON: {e:#}")),
+    };
+    let rows = match parse_matrix(&doc, "x") {
+        Ok(r) => r,
+        Err(message) => return error(400, "Bad Request", &message),
+    };
+    let y: Vec<f64> = match doc.get("y").and_then(Json::as_array) {
+        Some(arr) => {
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                match v.as_f64_tagged().filter(|v| v.is_finite()) {
+                    Some(v) => out.push(v),
+                    None => {
+                        return error(
+                            400,
+                            "Bad Request",
+                            &format!("y[{i}] is not a finite number"),
+                        );
+                    }
+                }
+            }
+            out
+        }
+        None => return error(400, "Bad Request", "body must have a `y` array"),
+    };
+    if y.len() != rows.len() {
+        return error(
+            400,
+            "Bad Request",
+            &format!("x has {} rows but y has {} values", rows.len(), y.len()),
+        );
+    }
+    let Some(k) = doc.get("k").and_then(Json::as_usize).filter(|&k| k >= 1) else {
+        return error(400, "Bad Request", "body must have an integer `k` ≥ 1");
+    };
+    let x = Matrix::from_rows(&rows);
+    if k > x.cols() {
+        return error(400, "Bad Request", "`k` exceeds the number of columns in `x`");
+    }
+    let alpha = doc.get("alpha").and_then(Json::as_f64_tagged).unwrap_or(0.5);
+    let beta = doc.get("beta").and_then(Json::as_f64_tagged).unwrap_or(0.5);
+    let m_sub = doc.get("m").and_then(Json::as_usize).unwrap_or(5);
+    let seed = doc.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let warm_wanted = doc.get("warm").and_then(Json::as_bool).unwrap_or(true);
+
+    let features = featurize(&x, &y, k);
+    let suggestion = if warm_wanted {
+        state.warm.lock().unwrap().suggest(&features)
+    } else {
+        None
+    };
+
+    let mut warm_info = BTreeMap::new();
+    warm_info.insert("enabled".into(), Json::Bool(warm_wanted));
+    if let Some(err) = &state.warm_error {
+        warm_info.insert("store_error".into(), Json::String(err.clone()));
+    }
+
+    // Exact feature match: the instance was fitted before, so the cached
+    // solution *is* the solution — serve it immediately (mlopt-style
+    // "online MIO in milliseconds") through the same registry path.
+    if let Some(w) = suggestion.as_ref().filter(|w| w.exact && w.beta.len() == x.cols()) {
+        let model = crate::backbone::sparse_regression::SparseRegressionModel {
+            beta: w.beta.clone(),
+            intercept: w.intercept,
+            support: w.support.clone(),
+            objective: w.objective,
+            gap: f64::NAN,
+            status: crate::solvers::SolveStatus::Optimal,
+        };
+        let model_id =
+            state.registry.lock().unwrap().insert(LoadedModel::SparseRegression(model));
+        warm_info.insert("hit".into(), Json::String("exact".into()));
+        warm_info.insert("distance".into(), Json::from_f64(0.0));
+        let latency_us = started.elapsed().as_micros() as u64;
+        state.stats.fit.record_ok(1, latency_us);
+        return ok(fit_response(
+            model_id,
+            &w.support,
+            w.objective,
+            w.support.len(),
+            latency_us,
+            warm_info,
+            state,
+        ));
+    }
+
+    // Cold or neighbor-warm solve. A neighbor supplies the warm iterate
+    // and a shrunk screening fraction; its support is seeded into the
+    // universe so the small alpha cannot screen it out.
+    let (fit_alpha, warm_beta) = match &suggestion {
+        Some(w) if w.beta.len() == x.cols() => {
+            warm_info.insert("hit".into(), Json::String("neighbor".into()));
+            warm_info.insert("distance".into(), Json::from_f64(w.distance));
+            (suggested_alpha(x.cols(), k), Some(w.beta.clone()))
+        }
+        _ => {
+            warm_info.insert("hit".into(), Json::String("none".into()));
+            (alpha, None)
+        }
+    };
+    let mut builder = Backbone::sparse_regression()
+        .alpha(fit_alpha)
+        .beta(beta)
+        .num_subproblems(m_sub)
+        .max_nonzeros(k)
+        .seed(seed);
+    if let Some(w) = warm_beta {
+        builder = builder.warm_start(w);
+    }
+    let mut bb = match builder.build() {
+        Ok(bb) => bb,
+        Err(e) => return error(400, "Bad Request", &e.to_string()),
+    };
+    let model = match bb.fit(&x, &y) {
+        Ok(m) => m.clone(),
+        Err(e) => return error(400, "Bad Request", &e.to_string()),
+    };
+
+    // Write-through: remember this fit for future instances, and persist
+    // the store when the server was given a cache path.
+    {
+        let mut store = state.warm.lock().unwrap();
+        let coefficients: Vec<f64> =
+            model.support.iter().map(|&j| model.beta[j]).collect();
+        store.record(
+            &features,
+            &model.support,
+            &coefficients,
+            model.intercept,
+            model.objective,
+            fit_alpha,
+        );
+        if let Some(path) = &state.warm_cache_path {
+            if let Err(e) = store.save(path) {
+                eprintln!("warning: {e}");
+            }
+        }
+    }
+
+    let support = model.support.clone();
+    let objective = model.objective;
+    let backbone_size =
+        bb.last_diagnostics.as_ref().map(|d| d.backbone_size).unwrap_or(support.len());
+    let model_id =
+        state.registry.lock().unwrap().insert(LoadedModel::SparseRegression(model));
+    let latency_us = started.elapsed().as_micros() as u64;
+    state.stats.fit.record_ok(1, latency_us);
+    ok(fit_response(
+        model_id,
+        &support,
+        objective,
+        backbone_size,
+        latency_us,
+        warm_info,
+        state,
+    ))
+}
+
+fn fit_response(
+    model_id: String,
+    support: &[usize],
+    objective: f64,
+    backbone_size: usize,
+    latency_us: u64,
+    mut warm_info: BTreeMap<String, Json>,
+    state: &ServerState,
+) -> Json {
+    warm_info.insert(
+        "store_entries".into(),
+        Json::Number(state.warm.lock().unwrap().len() as f64),
+    );
+    let mut m = BTreeMap::new();
+    m.insert("model_id".into(), Json::String(model_id));
+    m.insert(
+        "support".into(),
+        Json::Array(support.iter().map(|&j| Json::Number(j as f64)).collect()),
+    );
+    m.insert("objective".into(), Json::from_f64(objective));
+    m.insert("backbone_size".into(), Json::Number(backbone_size as f64));
+    m.insert("latency_us".into(), Json::Number(latency_us as f64));
+    m.insert("warm".into(), Json::Object(warm_info));
+    Json::Object(m)
+}
+
+/// Extract `{"<key>": [[...], ...]}` as a rectangular f64 batch.
+fn parse_matrix(doc: &Json, key: &str) -> Result<Vec<Vec<f64>>, String> {
     let rows = doc
-        .get("rows")
+        .get(key)
         .and_then(Json::as_array)
-        .ok_or("body must be an object with a `rows` array of arrays")?;
+        .ok_or_else(|| format!("body must be an object with a `{key}` array of arrays"))?;
     if rows.is_empty() {
-        return Err("`rows` must contain at least one row".into());
+        return Err(format!("`{key}` must contain at least one row"));
     }
     let mut out = Vec::with_capacity(rows.len());
     let mut width: Option<usize> = None;
     for (i, row) in rows.iter().enumerate() {
         let cells = row
             .as_array()
-            .ok_or_else(|| format!("rows[{i}] is not an array"))?;
+            .ok_or_else(|| format!("{key}[{i}] is not an array"))?;
         let mut values = Vec::with_capacity(cells.len());
         for (j, cell) in cells.iter().enumerate() {
             values.push(
                 cell.as_f64_tagged()
                     .filter(|v| v.is_finite())
-                    .ok_or_else(|| format!("rows[{i}][{j}] is not a finite number"))?,
+                    .ok_or_else(|| format!("{key}[{i}][{j}] is not a finite number"))?,
             );
         }
         match width {
             None => width = Some(values.len()),
             Some(w) if w != values.len() => {
                 return Err(format!(
-                    "rows[{i}] has {} values but rows[0] has {w}",
+                    "{key}[{i}] has {} values but {key}[0] has {w}",
                     values.len()
                 ));
             }
@@ -436,6 +867,10 @@ mod tests {
     }
 
     fn toy_state() -> ServerState {
+        toy_state_with(false)
+    }
+
+    fn toy_state_with(fit_enabled: bool) -> ServerState {
         ServerState {
             model: toy_model(),
             stats: ServerStats::new(),
@@ -444,11 +879,22 @@ mod tests {
             threads: 1,
             max_body: 1024,
             io_timeout: Duration::from_secs(1),
+            fit_enabled,
+            fits_in_flight: AtomicU64::new(0),
+            max_concurrent_fits: 1,
+            registry: Mutex::new(ModelRegistry::new(4)),
+            warm: Mutex::new(WarmStartStore::new(8)),
+            warm_error: None,
+            warm_cache_path: None,
         }
     }
 
     fn post_predict(body: &str) -> Request {
         Request { method: "POST".into(), path: "/predict".into(), body: body.into() }
+    }
+
+    fn post_fit(body: &str) -> Request {
+        Request { method: "POST".into(), path: "/fit".into(), body: body.into() }
     }
 
     #[test]
@@ -461,7 +907,7 @@ mod tests {
         assert_eq!(preds[0].as_f64(), Some(2.5)); // 2*1 + 0.5
         assert_eq!(preds[1].as_f64(), Some(-0.5)); // -1*1 + 0.5
         assert_eq!(doc.get("rows").and_then(Json::as_usize), Some(2));
-        assert_eq!(state.stats.rows_predicted.load(Ordering::Relaxed), 2);
+        assert_eq!(state.stats.predict.units.load(Ordering::Relaxed), 2);
     }
 
     #[test]
@@ -479,7 +925,10 @@ mod tests {
             assert_eq!(out.status, 400, "{body}");
             assert!(out.body.contains(hint), "{body} → {}", out.body);
         }
-        assert_eq!(state.stats.predict_requests.load(Ordering::Relaxed), 0);
+        // Six attempts, six failures, zero completed predictions.
+        assert_eq!(state.stats.predict.requests.load(Ordering::Relaxed), 6);
+        assert_eq!(state.stats.predict.failures.load(Ordering::Relaxed), 6);
+        assert_eq!(state.stats.predict.units.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -503,6 +952,132 @@ mod tests {
         assert_eq!(lat.get("p50_us").and_then(Json::as_f64), Some(200.0));
         assert_eq!(doc.get("rows_predicted").and_then(Json::as_usize), Some(3));
         assert_eq!(doc.get("threads").and_then(Json::as_usize), Some(4));
+        // Per-route split: predict and fit are independently observable.
+        let routes = doc.get("routes").unwrap();
+        let predict = routes.get("predict").unwrap();
+        assert_eq!(predict.get("rows_predicted").and_then(Json::as_usize), Some(3));
+        assert_eq!(
+            predict.get("latency").unwrap().get("count").and_then(Json::as_usize),
+            Some(3)
+        );
+        let fit = routes.get("fit").unwrap();
+        assert_eq!(fit.get("models_fitted").and_then(Json::as_usize), Some(0));
+        assert_eq!(fit.get("requests").and_then(Json::as_usize), Some(0));
+        assert_eq!(
+            fit.get("latency").unwrap().get("count").and_then(Json::as_usize),
+            Some(0)
+        );
+    }
+
+    /// Tiny deterministic fit body: y = 2·x₀ on 8 rows of 3 features.
+    fn fit_body() -> &'static str {
+        r#"{"x": [[1, 0, 0], [2, 1, 0], [3, 0, 1], [4, 1, 1], [5, 0, 0], [6, 1, 0], [7, 0, 1], [8, 1, 1]],
+            "y": [2, 4, 6, 8, 10, 12, 14, 16], "k": 1, "m": 2}"#
+    }
+
+    #[test]
+    fn fit_route_is_gated_behind_enable_fit() {
+        let state = toy_state_with(false);
+        let out = route(&post_fit(fit_body()), &state);
+        assert_eq!(out.status, 403);
+        assert!(out.body.contains("--fit"), "{}", out.body);
+        assert_eq!(state.stats.fit.requests.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fit_route_fits_registers_and_serves_the_model() {
+        let state = toy_state_with(true);
+        let out = route(&post_fit(fit_body()), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
+        let doc = Json::parse(&out.body).unwrap();
+        let model_id = doc.get("model_id").and_then(Json::as_str).unwrap().to_string();
+        let support = doc.get("support").unwrap().as_array().unwrap();
+        assert_eq!(support.len(), 1);
+        assert_eq!(support[0].as_usize(), Some(0));
+        let warm = doc.get("warm").unwrap();
+        assert_eq!(warm.get("hit").and_then(Json::as_str), Some("none"));
+        assert_eq!(warm.get("store_entries").and_then(Json::as_usize), Some(1));
+        assert_eq!(state.stats.fit.units.load(Ordering::Relaxed), 1);
+
+        // The fitted model serves /predict by id...
+        let body = format!(r#"{{"rows": [[10, 0, 0]], "model": "{model_id}"}}"#);
+        let out = route(&post_predict(&body), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
+        let doc = Json::parse(&out.body).unwrap();
+        let pred = doc.get("predictions").unwrap().as_array().unwrap()[0].as_f64().unwrap();
+        // Small ridge penalty (λ₂ default) shrinks the slope slightly.
+        assert!((pred - 20.0).abs() < 0.1, "pred={pred}");
+        // ...and an unknown id is a clean 404, not the default model.
+        let out = route(&post_predict(r#"{"rows": [[1, 0, 0]], "model": "m999"}"#), &state);
+        assert_eq!(out.status, 404);
+    }
+
+    #[test]
+    fn repeat_fit_is_an_exact_warm_hit_with_identical_objective() {
+        let state = toy_state_with(true);
+        let cold = route(&post_fit(fit_body()), &state);
+        assert_eq!(cold.status, 200, "{}", cold.body);
+        let cold_doc = Json::parse(&cold.body).unwrap();
+        let warm = route(&post_fit(fit_body()), &state);
+        assert_eq!(warm.status, 200, "{}", warm.body);
+        let warm_doc = Json::parse(&warm.body).unwrap();
+        assert_eq!(
+            warm_doc.get("warm").unwrap().get("hit").and_then(Json::as_str),
+            Some("exact")
+        );
+        // Bit-identical objective: the cached solution is served as-is.
+        let cold_obj = cold_doc.get("objective").unwrap().as_f64_tagged().unwrap();
+        let warm_obj = warm_doc.get("objective").unwrap().as_f64_tagged().unwrap();
+        assert_eq!(cold_obj.to_bits(), warm_obj.to_bits());
+        // Both fits got distinct registry ids.
+        assert_ne!(
+            cold_doc.get("model_id").and_then(Json::as_str),
+            warm_doc.get("model_id").and_then(Json::as_str)
+        );
+    }
+
+    #[test]
+    fn fit_route_rejects_bad_payloads_with_400() {
+        let state = toy_state_with(true);
+        for (body, hint) in [
+            ("nope", "not JSON"),
+            (r#"{"y": [1], "k": 1}"#, "`x`"),
+            (r#"{"x": [[1, 2]], "k": 1}"#, "`y`"),
+            (r#"{"x": [[1, 2]], "y": [1, 2], "k": 1}"#, "rows but y"),
+            (r#"{"x": [[1, 2]], "y": [1]}"#, "`k`"),
+            (r#"{"x": [[1, 2]], "y": [1], "k": 3}"#, "exceeds"),
+        ] {
+            let out = route(&post_fit(body), &state);
+            assert_eq!(out.status, 400, "{body}");
+            assert!(out.body.contains(hint), "{body} → {}", out.body);
+        }
+        assert_eq!(state.stats.fit.failures.load(Ordering::Relaxed), 6);
+        assert_eq!(state.stats.fit.units.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fit_queue_overflow_returns_429() {
+        let state = toy_state_with(true);
+        // Simulate a fit already in flight; the gate must bounce us.
+        state.fits_in_flight.store(1, Ordering::SeqCst);
+        let out = route(&post_fit(fit_body()), &state);
+        assert_eq!(out.status, 429, "{}", out.body);
+        state.fits_in_flight.store(0, Ordering::SeqCst);
+        let out = route(&post_fit(fit_body()), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
+    }
+
+    #[test]
+    fn model_registry_evicts_oldest_deterministically() {
+        let mut reg = ModelRegistry::new(2);
+        let a = reg.insert(toy_model());
+        let b = reg.insert(toy_model());
+        let c = reg.insert(toy_model());
+        assert_eq!((a.as_str(), b.as_str(), c.as_str()), ("m1", "m2", "m3"));
+        assert_eq!(reg.len(), 2);
+        assert!(reg.get("m1").is_none(), "oldest model must be evicted first");
+        assert!(reg.get("m2").is_some());
+        assert!(reg.get("m3").is_some());
     }
 
     #[test]

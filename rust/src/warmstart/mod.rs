@@ -1,0 +1,678 @@
+//! Learning-to-solve warm starts: a bounded, persistable store of past
+//! fits that turns repeat-family instances into fast warm solves.
+//!
+//! The backbone machinery fits one instance from scratch every time, but
+//! real workloads are *families*: streams of instances drawn from the
+//! same generator (same sparsity pattern, same correlation structure)
+//! where yesterday's support is an excellent guess for today's. In the
+//! spirit of MIPLearn's `LearningSolver` and "Online Mixed-Integer
+//! Optimization in Milliseconds", this module:
+//!
+//! 1. **Featurizes** an incoming instance ([`featurize`]) into a small
+//!    deterministic vector — `n`, `p`, `k`, column-norm summaries from
+//!    the memoized [`Matrix::col_sq_norms`], response moments, screening
+//!    (correlation-utility) summaries, and a spectral proxy
+//!    (normalized Frobenius norm).
+//! 2. **Remembers** past fits in a [`WarmStartStore`]: a bounded map
+//!    `features → (support, coefficients, screening alpha)` with
+//!    deterministic LRU eviction (a logical tick counter, never wall
+//!    clock) and a `backbone-warmstart-store/v1` JSON wire format on the
+//!    in-house json module.
+//! 3. **Predicts** a warm start for a new instance by nearest-neighbor
+//!    lookup in feature space ([`WarmStartStore::suggest`]): the cached
+//!    coefficients feed `L0Config::warm_start`, the cached support seeds
+//!    the screener's keep-set, and the suggested screening fraction
+//!    ([`suggested_alpha`]) shrinks the universe so fewer backbone
+//!    rounds are needed. A distance-zero hit is *exact*: the cached
+//!    solution can be served directly without solving at all.
+//!
+//! Determinism contract: a warm start is an **input**, not hidden
+//! state. Given the same store state and the same instance, the
+//! suggested warm start is bit-identical, and the downstream fit is
+//! bit-reproducible across `threads(1)` and `threads(0)` by the same
+//! argument as the cold path (the warm iterate is part of the
+//! subproblem config, and batch results are a pure function of the
+//! subproblem plus its pre-forked RNG stream).
+
+use crate::backbone::screen::correlation_utilities;
+use crate::json::Json;
+use crate::linalg::Matrix;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Schema tag identifying a warm-start store document.
+pub const WARMSTART_SCHEMA: &str = "backbone-warmstart-store/v1";
+
+/// Fixed length of the instance feature vector (see [`featurize`]).
+pub const FEATURE_LEN: usize = 12;
+
+/// Default bound on stored entries when a caller does not choose one.
+pub const DEFAULT_STORE_CAPACITY: usize = 64;
+
+/// Typed failure surfaced by the store codec. Mirrors `PersistError` so
+/// callers (CLI diagnostics, the fit service) can report *why* a store
+/// was unusable while still degrading gracefully to a cold fit.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WarmStartError {
+    /// Filesystem failure (path + OS message).
+    Io { path: String, message: String },
+    /// The document is not valid JSON.
+    Parse { message: String },
+    /// The document is JSON but not a `backbone-warmstart-store/v1`
+    /// document (missing/wrong schema tag).
+    Schema { message: String },
+    /// A required field is missing or has the wrong type/value.
+    Field { field: String, message: String },
+}
+
+impl fmt::Display for WarmStartError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Io { path, message } => write!(f, "warm-start store I/O on `{path}`: {message}"),
+            Self::Parse { message } => write!(f, "warm-start store is not valid JSON: {message}"),
+            Self::Schema { message } => write!(f, "not a {WARMSTART_SCHEMA} document: {message}"),
+            Self::Field { field, message } => {
+                write!(f, "warm-start store field `{field}`: {message}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WarmStartError {}
+
+/// Deterministic feature vector summarizing one sparse-regression
+/// instance `(x, y, k)`. Two bit-identical instances produce
+/// bit-identical features, so a repeat submission is a distance-zero
+/// (exact) store hit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InstanceFeatures {
+    /// Feature count of the instance; warm starts only transfer between
+    /// instances with the same `p` (coefficients index columns).
+    pub p: usize,
+    /// The [`FEATURE_LEN`] summary values, in the documented order.
+    pub values: Vec<f64>,
+}
+
+/// Featurize an instance. Fixed order:
+///
+/// | idx | feature |
+/// |-----|---------|
+/// | 0 | `n` (rows) |
+/// | 1 | `p` (columns) |
+/// | 2 | `k` (requested nonzeros) |
+/// | 3 | mean of memoized column squared norms |
+/// | 4 | min of column squared norms |
+/// | 5 | max of column squared norms |
+/// | 6 | population std of column squared norms |
+/// | 7 | Frobenius norm / sqrt(n·p) (spectral scale proxy) |
+/// | 8 | mean of `y` |
+/// | 9 | second moment of `y` (`Σy²/n`) |
+/// | 10 | mean absolute screening (correlation) utility |
+/// | 11 | max absolute screening utility |
+pub fn featurize(x: &Matrix, y: &[f64], k: usize) -> InstanceFeatures {
+    let n = x.rows();
+    let p = x.cols();
+    let norms = x.col_sq_norms();
+    let (mut nmin, mut nmax, mut nsum) = (f64::INFINITY, f64::NEG_INFINITY, 0.0);
+    for &v in norms {
+        nmin = nmin.min(v);
+        nmax = nmax.max(v);
+        nsum += v;
+    }
+    let nmean = if p == 0 { 0.0 } else { nsum / p as f64 };
+    let mut nvar = 0.0;
+    for &v in norms {
+        nvar += (v - nmean) * (v - nmean);
+    }
+    let nstd = if p == 0 { 0.0 } else { (nvar / p as f64).sqrt() };
+    if p == 0 {
+        nmin = 0.0;
+        nmax = 0.0;
+    }
+    let frob_scaled = if n == 0 || p == 0 {
+        0.0
+    } else {
+        x.frobenius_norm() / ((n * p) as f64).sqrt()
+    };
+    let (mut ysum, mut ysq) = (0.0, 0.0);
+    for &v in y {
+        ysum += v;
+        ysq += v * v;
+    }
+    let ymean = if n == 0 { 0.0 } else { ysum / n as f64 };
+    let ymom2 = if n == 0 { 0.0 } else { ysq / n as f64 };
+    let utils = correlation_utilities(x, y);
+    let (mut umax, mut usum) = (0.0f64, 0.0);
+    for &u in &utils {
+        let a = u.abs();
+        umax = umax.max(a);
+        usum += a;
+    }
+    let umean = if utils.is_empty() { 0.0 } else { usum / utils.len() as f64 };
+    InstanceFeatures {
+        p,
+        values: vec![
+            n as f64,
+            p as f64,
+            k as f64,
+            nmean,
+            nmin,
+            nmax,
+            nstd,
+            frob_scaled,
+            ymean,
+            ymom2,
+            umean,
+            umax,
+        ],
+    }
+}
+
+/// Screening fraction to use for a warm fit: keep roughly `4k` of the
+/// `p` columns (the seeded support is unioned in regardless), never more
+/// than the cold default of one half. The small keep-set is where the
+/// warm speedup comes from — subproblems shrink with the universe.
+pub fn suggested_alpha(p: usize, k: usize) -> f64 {
+    ((4 * k.max(1)) as f64 / p.max(1) as f64).min(0.5)
+}
+
+/// One remembered fit: the instance's features plus the solution sparse
+/// pattern and the screening strategy that produced it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StoreEntry {
+    /// Feature vector of the instance this entry was learned from.
+    pub features: Vec<f64>,
+    /// Feature count of that instance (warm starts don't cross `p`).
+    pub p: usize,
+    /// Fitted support (global column indices, sorted).
+    pub support: Vec<usize>,
+    /// Coefficients at `support` (same length/order).
+    pub coefficients: Vec<f64>,
+    /// Fitted intercept.
+    pub intercept: f64,
+    /// Training objective of the remembered fit.
+    pub objective: f64,
+    /// Screening fraction used by the remembered fit.
+    pub alpha: f64,
+    /// Logical insertion tick (monotone per store, never wall clock).
+    pub inserted: u64,
+    /// Logical tick of the most recent use (insertion or suggestion).
+    pub last_used: u64,
+}
+
+/// A warm start predicted for a new instance from the nearest stored
+/// neighbor in feature space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WarmStart {
+    /// Dense length-`p` coefficient iterate (cached coefficients
+    /// scattered onto their support) — feed to `L0Config::warm_start`.
+    pub beta: Vec<f64>,
+    /// Cached support — seeds the screener's keep-set.
+    pub support: Vec<usize>,
+    /// Cached intercept (used directly on an exact hit).
+    pub intercept: f64,
+    /// Cached training objective of the neighbor's fit.
+    pub objective: f64,
+    /// Screening fraction the neighbor was fitted with.
+    pub alpha: f64,
+    /// Euclidean distance in feature space to the neighbor.
+    pub distance: f64,
+    /// `distance == 0.0`: the instance was seen before, so the cached
+    /// solution is *the* solution and can be served without solving.
+    pub exact: bool,
+}
+
+/// Bounded, persistable store of past fits with deterministic LRU
+/// eviction. All ordering is driven by a logical tick counter so that
+/// replaying the same operation sequence reproduces the same store
+/// byte-for-byte.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WarmStartStore {
+    entries: Vec<StoreEntry>,
+    capacity: usize,
+    tick: u64,
+}
+
+impl WarmStartStore {
+    /// Empty store bounded to `capacity` entries (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> Self {
+        Self { entries: Vec::new(), capacity: capacity.max(1), tick: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Read-only view of the stored entries, in insertion order.
+    pub fn entries(&self) -> &[StoreEntry] {
+        &self.entries
+    }
+
+    /// Remember a fit. A bit-identical feature vector replaces its
+    /// existing entry in place (refreshing the payload and its LRU
+    /// position); otherwise the entry is appended and the least
+    /// recently used entry is evicted once the bound is exceeded —
+    /// ties broken by insertion tick, then list position, so eviction
+    /// order is deterministic.
+    pub fn record(
+        &mut self,
+        features: &InstanceFeatures,
+        support: &[usize],
+        coefficients: &[f64],
+        intercept: f64,
+        objective: f64,
+        alpha: f64,
+    ) {
+        debug_assert_eq!(support.len(), coefficients.len());
+        let tick = self.tick;
+        self.tick += 1;
+        if let Some(entry) = self
+            .entries
+            .iter_mut()
+            .find(|e| e.p == features.p && bits_eq(&e.features, &features.values))
+        {
+            entry.support = support.to_vec();
+            entry.coefficients = coefficients.to_vec();
+            entry.intercept = intercept;
+            entry.objective = objective;
+            entry.alpha = alpha;
+            entry.last_used = tick;
+            return;
+        }
+        self.entries.push(StoreEntry {
+            features: features.values.clone(),
+            p: features.p,
+            support: support.to_vec(),
+            coefficients: coefficients.to_vec(),
+            intercept,
+            objective,
+            alpha,
+            inserted: tick,
+            last_used: tick,
+        });
+        while self.entries.len() > self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(i, e)| (e.last_used, e.inserted, *i))
+                .map(|(i, _)| i)
+                .expect("non-empty entries");
+            self.entries.remove(victim);
+        }
+    }
+
+    /// Nearest stored neighbor of `features` (Euclidean distance over
+    /// the feature vector, candidates restricted to the same `p`).
+    /// Bumps the chosen entry's LRU position. Ties broken by insertion
+    /// tick so the suggestion is deterministic.
+    pub fn suggest(&mut self, features: &InstanceFeatures) -> Option<WarmStart> {
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (i, entry) in self.entries.iter().enumerate() {
+            if entry.p != features.p || entry.features.len() != features.values.len() {
+                continue;
+            }
+            let mut d2 = 0.0;
+            for (a, b) in entry.features.iter().zip(&features.values) {
+                d2 += (a - b) * (a - b);
+            }
+            let candidate = (d2, entry.inserted, i);
+            let better = match best {
+                None => true,
+                Some((bd, bt, _)) => d2 < bd || (d2 == bd && entry.inserted < bt),
+            };
+            if better {
+                best = Some(candidate);
+            }
+        }
+        let (d2, _, idx) = best?;
+        let tick = self.tick;
+        self.tick += 1;
+        let entry = &mut self.entries[idx];
+        entry.last_used = tick;
+        let mut beta = vec![0.0; entry.p];
+        for (&j, &c) in entry.support.iter().zip(&entry.coefficients) {
+            if j < beta.len() {
+                beta[j] = c;
+            }
+        }
+        let distance = d2.sqrt();
+        Some(WarmStart {
+            beta,
+            support: entry.support.clone(),
+            intercept: entry.intercept,
+            objective: entry.objective,
+            alpha: entry.alpha,
+            distance,
+            exact: distance == 0.0,
+        })
+    }
+
+    /// Serialize to the `backbone-warmstart-store/v1` document.
+    pub fn to_json(&self) -> Json {
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m = BTreeMap::new();
+                m.insert("alpha".into(), Json::from_f64(e.alpha));
+                m.insert("coefficients".into(), f64_array(&e.coefficients));
+                m.insert("features".into(), f64_array(&e.features));
+                m.insert("inserted".into(), Json::Number(e.inserted as f64));
+                m.insert("intercept".into(), Json::from_f64(e.intercept));
+                m.insert("last_used".into(), Json::Number(e.last_used as f64));
+                m.insert("objective".into(), Json::from_f64(e.objective));
+                m.insert("p".into(), Json::Number(e.p as f64));
+                m.insert("support".into(), usize_array(&e.support));
+                Json::Object(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("capacity".into(), Json::Number(self.capacity as f64));
+        m.insert("entries".into(), Json::Array(entries));
+        m.insert("schema".into(), Json::String(WARMSTART_SCHEMA.into()));
+        m.insert("tick".into(), Json::Number(self.tick as f64));
+        Json::Object(m)
+    }
+
+    /// Decode a `backbone-warmstart-store/v1` document.
+    pub fn from_json(doc: &Json) -> Result<Self, WarmStartError> {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some(s) if s == WARMSTART_SCHEMA => {}
+            Some(s) => {
+                return Err(WarmStartError::Schema { message: format!("schema is `{s}`") });
+            }
+            None => {
+                return Err(WarmStartError::Schema { message: "missing `schema` tag".into() });
+            }
+        }
+        let capacity = req_usize(doc, "capacity")?.max(1);
+        let tick = req_usize(doc, "tick")? as u64;
+        let raw = req_field(doc, "entries")?.as_array().ok_or_else(|| WarmStartError::Field {
+            field: "entries".into(),
+            message: "must be an array".into(),
+        })?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for (i, e) in raw.iter().enumerate() {
+            let support = req_usize_vec(e, "support")?;
+            let coefficients = req_f64_vec(e, "coefficients")?;
+            if support.len() != coefficients.len() {
+                return Err(WarmStartError::Field {
+                    field: format!("entries[{i}]"),
+                    message: format!(
+                        "support has {} indices but coefficients has {}",
+                        support.len(),
+                        coefficients.len()
+                    ),
+                });
+            }
+            let features = req_f64_vec(e, "features")?;
+            if features.len() != FEATURE_LEN {
+                return Err(WarmStartError::Field {
+                    field: format!("entries[{i}].features"),
+                    message: format!("expected {FEATURE_LEN} values, got {}", features.len()),
+                });
+            }
+            entries.push(StoreEntry {
+                features,
+                p: req_usize(e, "p")?,
+                support,
+                coefficients,
+                intercept: req_f64(e, "intercept")?,
+                objective: req_f64(e, "objective")?,
+                alpha: req_f64(e, "alpha")?,
+                inserted: req_usize(e, "inserted")? as u64,
+                last_used: req_usize(e, "last_used")? as u64,
+            });
+        }
+        let mut store = Self { entries, capacity, tick };
+        // A hand-edited document may under-report its tick; restoring
+        // monotonicity keeps future LRU updates deterministic.
+        let max_used = store.entries.iter().map(|e| e.last_used.max(e.inserted)).max();
+        if let Some(m) = max_used {
+            store.tick = store.tick.max(m + 1);
+        }
+        Ok(store)
+    }
+
+    /// Parse a document from its JSON text.
+    pub fn parse(text: &str) -> Result<Self, WarmStartError> {
+        let doc = Json::parse(text)
+            .map_err(|e| WarmStartError::Parse { message: format!("{e:#}") })?;
+        Self::from_json(&doc)
+    }
+
+    /// Write the store to `path` (pretty-printed, trailing newline).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), WarmStartError> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_json().to_string_pretty()).map_err(|e| {
+            WarmStartError::Io { path: path.display().to_string(), message: e.to_string() }
+        })
+    }
+
+    /// Read a store from `path`.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self, WarmStartError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path).map_err(|e| WarmStartError::Io {
+            path: path.display().to_string(),
+            message: e.to_string(),
+        })?;
+        Self::parse(&text)
+    }
+
+    /// Load `path`, degrading gracefully: a missing file is a fresh
+    /// empty store (no error — the cache simply hasn't been built yet),
+    /// while an unreadable or corrupt file also yields an empty store
+    /// but surfaces the typed error so callers can report it in
+    /// diagnostics. Either way the caller can proceed with a cold fit.
+    pub fn load_or_empty(
+        path: impl AsRef<Path>,
+        capacity: usize,
+    ) -> (Self, Option<WarmStartError>) {
+        let path = path.as_ref();
+        if !path.exists() {
+            return (Self::new(capacity), None);
+        }
+        match Self::load(path) {
+            Ok(store) => (store, None),
+            Err(e) => (Self::new(capacity), Some(e)),
+        }
+    }
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn f64_array(xs: &[f64]) -> Json {
+    Json::Array(xs.iter().map(|&x| Json::from_f64(x)).collect())
+}
+
+fn usize_array(xs: &[usize]) -> Json {
+    Json::Array(xs.iter().map(|&x| Json::Number(x as f64)).collect())
+}
+
+fn req_field<'a>(v: &'a Json, field: &str) -> Result<&'a Json, WarmStartError> {
+    v.get(field).ok_or_else(|| WarmStartError::Field {
+        field: field.into(),
+        message: "missing".into(),
+    })
+}
+
+fn req_f64(v: &Json, field: &str) -> Result<f64, WarmStartError> {
+    req_field(v, field)?.as_f64_tagged().ok_or_else(|| WarmStartError::Field {
+        field: field.into(),
+        message: "must be a number (or tagged non-finite string)".into(),
+    })
+}
+
+fn req_usize(v: &Json, field: &str) -> Result<usize, WarmStartError> {
+    req_field(v, field)?.as_usize().ok_or_else(|| WarmStartError::Field {
+        field: field.into(),
+        message: "must be a non-negative integer".into(),
+    })
+}
+
+fn req_f64_vec(v: &Json, field: &str) -> Result<Vec<f64>, WarmStartError> {
+    let arr = req_field(v, field)?.as_array().ok_or_else(|| WarmStartError::Field {
+        field: field.into(),
+        message: "must be an array".into(),
+    })?;
+    arr.iter()
+        .map(|x| x.as_f64_tagged())
+        .collect::<Option<Vec<f64>>>()
+        .ok_or_else(|| WarmStartError::Field {
+            field: field.into(),
+            message: "must contain only numbers".into(),
+        })
+}
+
+fn req_usize_vec(v: &Json, field: &str) -> Result<Vec<usize>, WarmStartError> {
+    let arr = req_field(v, field)?.as_array().ok_or_else(|| WarmStartError::Field {
+        field: field.into(),
+        message: "must be an array".into(),
+    })?;
+    arr.iter()
+        .map(|x| x.as_usize())
+        .collect::<Option<Vec<usize>>>()
+        .ok_or_else(|| WarmStartError::Field {
+            field: field.into(),
+            message: "must contain non-negative integers".into(),
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feats(seed: f64) -> InstanceFeatures {
+        InstanceFeatures {
+            p: 4,
+            values: (0..FEATURE_LEN).map(|i| seed + i as f64).collect(),
+        }
+    }
+
+    #[test]
+    fn record_and_exact_suggest_round_trip() {
+        let mut store = WarmStartStore::new(8);
+        store.record(&feats(1.0), &[0, 2], &[1.5, -2.0], 0.25, 3.0, 0.5);
+        let warm = store.suggest(&feats(1.0)).expect("hit");
+        assert!(warm.exact);
+        assert_eq!(warm.distance, 0.0);
+        assert_eq!(warm.beta, vec![1.5, 0.0, -2.0, 0.0]);
+        assert_eq!(warm.support, vec![0, 2]);
+        assert_eq!(warm.intercept, 0.25);
+        assert_eq!(warm.objective, 3.0);
+    }
+
+    #[test]
+    fn nearest_neighbor_prefers_closer_entry_and_breaks_ties_by_age() {
+        let mut store = WarmStartStore::new(8);
+        store.record(&feats(0.0), &[0], &[1.0], 0.0, 1.0, 0.5);
+        store.record(&feats(10.0), &[1], &[2.0], 0.0, 2.0, 0.5);
+        let warm = store.suggest(&feats(9.0)).expect("hit");
+        assert!(!warm.exact);
+        assert_eq!(warm.support, vec![1]);
+        // Equidistant: the older entry wins.
+        let warm = store.suggest(&feats(5.0)).expect("hit");
+        assert_eq!(warm.support, vec![0]);
+    }
+
+    #[test]
+    fn eviction_is_lru_and_deterministic() {
+        let mut store = WarmStartStore::new(2);
+        store.record(&feats(0.0), &[0], &[1.0], 0.0, 1.0, 0.5); // tick 0
+        store.record(&feats(10.0), &[1], &[1.0], 0.0, 1.0, 0.5); // tick 1
+        // Touch the older entry so the *newer* one becomes LRU.
+        let _ = store.suggest(&feats(0.0)); // tick 2
+        store.record(&feats(20.0), &[2], &[1.0], 0.0, 1.0, 0.5); // evicts feats(10.0)
+        let supports: Vec<&[usize]> = store.entries().iter().map(|e| &e.support[..]).collect();
+        assert_eq!(supports, vec![&[0][..], &[2][..]]);
+    }
+
+    #[test]
+    fn duplicate_features_replace_in_place() {
+        let mut store = WarmStartStore::new(4);
+        store.record(&feats(1.0), &[0], &[1.0], 0.0, 5.0, 0.5);
+        store.record(&feats(1.0), &[3], &[9.0], 1.0, 4.0, 0.25);
+        assert_eq!(store.len(), 1);
+        let warm = store.suggest(&feats(1.0)).unwrap();
+        assert_eq!(warm.support, vec![3]);
+        assert_eq!(warm.objective, 4.0);
+        assert_eq!(warm.alpha, 0.25);
+    }
+
+    #[test]
+    fn suggest_skips_mismatched_p() {
+        let mut store = WarmStartStore::new(4);
+        store.record(&feats(1.0), &[0], &[1.0], 0.0, 1.0, 0.5);
+        let other = InstanceFeatures { p: 9, values: feats(1.0).values };
+        assert!(store.suggest(&other).is_none());
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let mut store = WarmStartStore::new(3);
+        store.record(&feats(0.5), &[1, 3], &[0.1, -0.2], 0.25, 1.5, 0.5);
+        store.record(&feats(7.0), &[0], &[f64::MIN_POSITIVE], -0.5, 2.5, 0.025);
+        let text = store.to_json().to_string_pretty();
+        let back = WarmStartStore::parse(&text).unwrap();
+        assert_eq!(back.capacity(), 3);
+        assert_eq!(back.len(), 2);
+        for (a, b) in store.entries().iter().zip(back.entries()) {
+            assert!(bits_eq(&a.features, &b.features));
+            assert!(bits_eq(&a.coefficients, &b.coefficients));
+            assert_eq!(a.support, b.support);
+            assert_eq!(a.inserted, b.inserted);
+            assert_eq!(a.last_used, b.last_used);
+        }
+        // Reserialization is byte-stable.
+        assert_eq!(back.to_json().to_string_pretty(), text);
+    }
+
+    #[test]
+    fn schema_and_field_errors_are_typed() {
+        assert!(matches!(
+            WarmStartStore::parse("not json"),
+            Err(WarmStartError::Parse { .. })
+        ));
+        assert!(matches!(
+            WarmStartStore::parse(r#"{"schema": "backbone-model/v1"}"#),
+            Err(WarmStartError::Schema { .. })
+        ));
+        assert!(matches!(
+            WarmStartStore::parse(r#"{"schema": "backbone-warmstart-store/v1", "tick": 0}"#),
+            Err(WarmStartError::Field { .. })
+        ));
+    }
+
+    #[test]
+    fn suggested_alpha_shrinks_with_p_and_caps_at_half() {
+        assert_eq!(suggested_alpha(800, 5), 0.025);
+        assert_eq!(suggested_alpha(10, 5), 0.5);
+        assert_eq!(suggested_alpha(0, 0), 0.5);
+    }
+
+    #[test]
+    fn featurize_is_deterministic_and_fixed_length() {
+        let x = Matrix::from_rows(&[vec![1.0, 2.0, 0.5], vec![-1.0, 0.0, 2.0]]);
+        let y = [1.0, -1.0];
+        let a = featurize(&x, &y, 2);
+        let b = featurize(&x, &y, 2);
+        assert_eq!(a.values.len(), FEATURE_LEN);
+        assert_eq!(a.p, 3);
+        assert!(bits_eq(&a.values, &b.values));
+        assert_eq!(a.values[0], 2.0); // n
+        assert_eq!(a.values[1], 3.0); // p
+        assert_eq!(a.values[2], 2.0); // k
+    }
+}

@@ -56,9 +56,12 @@ fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, Json) {
 
 /// Boot a server, run `f` against it, shut it down.
 fn with_server(model: LoadedModel, f: impl FnOnce(SocketAddr)) {
-    let server =
-        Server::bind("127.0.0.1:0", model, &ServeConfig { threads: 2, ..Default::default() })
-            .expect("bind");
+    with_server_cfg(model, ServeConfig { threads: 2, ..Default::default() }, f);
+}
+
+/// Same, with an explicit config (fit service, warm cache, ...).
+fn with_server_cfg(model: LoadedModel, cfg: ServeConfig, f: impl FnOnce(SocketAddr)) {
+    let server = Server::bind("127.0.0.1:0", model, &cfg).expect("bind");
     let addr = server.local_addr().expect("addr");
     let shutdown = server.shutdown_handle().expect("handle");
     std::thread::scope(|scope| {
@@ -187,6 +190,84 @@ fn fitted_artifact_serves_bit_identical_predictions() {
             assert_eq!(s.to_bits(), e.to_bits(), "served prediction differs");
         }
     });
+}
+
+#[test]
+fn fit_service_learns_and_serves_warm_starts_end_to_end() {
+    // The full online loop over real sockets: POST /fit solves cold and
+    // registers the model, /predict serves it by id, a repeat submission
+    // is an exact warm hit with a bit-identical objective, and the
+    // learned store persists across server restarts.
+    let cache = std::env::temp_dir()
+        .join(format!("backbone_warm_e2e_{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let _ = std::fs::remove_file(&cache);
+    let body = concat!(
+        r#"{"x": [[1, 0, 0], [2, 1, 0], [3, 0, 1], [4, 1, 1],"#,
+        r#" [5, 0, 0], [6, 1, 0], [7, 0, 1], [8, 1, 1]],"#,
+        r#" "y": [2, 4, 6, 8, 10, 12, 14, 16], "k": 1, "m": 2}"#
+    );
+    let cfg = ServeConfig {
+        threads: 2,
+        enable_fit: true,
+        warm_cache_path: Some(cache.clone()),
+        ..Default::default()
+    };
+    with_server_cfg(toy_model(), cfg.clone(), |addr| {
+        let (status, first) = post(addr, "/fit", body);
+        assert_eq!(status, 200, "{first:?}");
+        let warm = first.get("warm").unwrap();
+        assert_eq!(warm.get("hit").and_then(Json::as_str), Some("none"));
+        let id = first.get("model_id").and_then(Json::as_str).unwrap().to_string();
+
+        // Served immediately by the registry path. y = 2·x₀; the small
+        // default ridge penalty shrinks the slope slightly.
+        let (status, pred) = post(
+            addr,
+            "/predict",
+            &format!(r#"{{"model": "{id}", "rows": [[10, 0, 0]]}}"#),
+        );
+        assert_eq!(status, 200, "{pred:?}");
+        let p = pred.get("predictions").unwrap().as_array().unwrap()[0]
+            .as_f64_tagged()
+            .unwrap();
+        assert!((p - 20.0).abs() < 0.1, "prediction {p}");
+
+        let (status, second) = post(addr, "/fit", body);
+        assert_eq!(status, 200, "{second:?}");
+        assert_eq!(
+            second.get("warm").unwrap().get("hit").and_then(Json::as_str),
+            Some("exact")
+        );
+        let o1 = first.get("objective").and_then(Json::as_f64_tagged).unwrap();
+        let o2 = second.get("objective").and_then(Json::as_f64_tagged).unwrap();
+        assert_eq!(o1.to_bits(), o2.to_bits(), "exact hit must reproduce the objective");
+
+        // Per-route accounting: two fits, one predict.
+        let (_, stats) = get(addr, "/stats");
+        let routes = stats.get("routes").unwrap();
+        let fit_route = routes.get("fit").unwrap();
+        assert_eq!(fit_route.get("requests").and_then(Json::as_usize), Some(2));
+        assert_eq!(fit_route.get("models_fitted").and_then(Json::as_usize), Some(2));
+        assert_eq!(fit_route.get("failures").and_then(Json::as_usize), Some(0));
+        assert_eq!(
+            routes.get("predict").unwrap().get("requests").and_then(Json::as_usize),
+            Some(1)
+        );
+    });
+
+    // A fresh server over the same cache path starts warm: the first
+    // submission of the already-seen instance is an exact hit.
+    with_server_cfg(toy_model(), cfg, |addr| {
+        let (status, resp) = post(addr, "/fit", body);
+        assert_eq!(status, 200, "{resp:?}");
+        assert_eq!(
+            resp.get("warm").unwrap().get("hit").and_then(Json::as_str),
+            Some("exact")
+        );
+    });
+    let _ = std::fs::remove_file(&cache);
 }
 
 #[test]

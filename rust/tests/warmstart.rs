@@ -1,0 +1,225 @@
+//! Integration tests of the learning-to-solve warm-start subsystem:
+//! warm fits must stay bit-reproducible across thread counts (the warm
+//! start is an input, not hidden state), the store's LRU eviction must
+//! be deterministic under sequence replay, a corrupt or missing store
+//! must degrade gracefully to a cold fit with a typed error, and the
+//! `backbone-warmstart-store/v1` wire format is byte-pinned against a
+//! golden fixture.
+
+use backbone_learn::backbone::Backbone;
+use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
+use backbone_learn::linalg::Matrix;
+use backbone_learn::prop::{property, Gen};
+use backbone_learn::rng::Rng;
+use backbone_learn::util::Budget;
+use backbone_learn::warmstart::{
+    featurize, suggested_alpha, InstanceFeatures, WarmStartError, WarmStartStore, FEATURE_LEN,
+};
+
+fn temp_path(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("backbone_warmstart_{}_{}.json", name, std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], context: &str) {
+    assert_eq!(a.len(), b.len(), "{context}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{context}[{i}]: {x} vs {y}");
+    }
+}
+
+/// Same cache state + same instance ⇒ the suggested warm start is
+/// bit-identical, and the warm fit is bit-identical across the inline
+/// sequential schedule (`threads(1)`) and the all-cores scheduler
+/// (`threads(0)`).
+#[test]
+fn warm_fit_is_bit_identical_across_thread_counts() {
+    let cfg = SparseRegressionConfig { n: 60, p: 120, k: 3, rho: 0.1, snr: 5.0 };
+    let mut rng = Rng::seed_from_u64(7);
+    let data = generate(&cfg, &mut rng);
+    let budget = Budget::seconds(30.0);
+    let mut cold = Backbone::sparse_regression()
+        .alpha(0.2)
+        .beta(0.5)
+        .num_subproblems(4)
+        .max_nonzeros(3)
+        .threads(1)
+        .seed(7)
+        .build()
+        .unwrap();
+    let cold_model = cold.fit_with_budget(&data.x, &data.y, &budget).unwrap().clone();
+    let features = featurize(&data.x, &data.y, 3);
+    let mut store = WarmStartStore::new(8);
+    let coeffs: Vec<f64> = cold_model.support.iter().map(|&j| cold_model.beta[j]).collect();
+    store.record(
+        &features,
+        &cold_model.support,
+        &coeffs,
+        cold_model.intercept,
+        cold_model.objective,
+        0.2,
+    );
+
+    // A fresh instance from the same family gets a neighbor hit.
+    let data2 = generate(&cfg, &mut rng);
+    let f2 = featurize(&data2.x, &data2.y, 3);
+    let fit = |threads: usize, store: &mut WarmStartStore| {
+        let w = store.suggest(&f2).expect("neighbor hit");
+        assert!(!w.exact, "different data must not be an exact hit");
+        let mut bb = Backbone::sparse_regression()
+            .alpha(suggested_alpha(120, 3))
+            .beta(0.5)
+            .num_subproblems(4)
+            .max_nonzeros(3)
+            .threads(threads)
+            .seed(7)
+            .warm_start(w.beta)
+            .build()
+            .unwrap();
+        bb.fit_with_budget(&data2.x, &data2.y, &budget).unwrap().clone()
+    };
+    // Clone the store per run so both thread counts see the same state.
+    let m1 = fit(1, &mut store.clone());
+    let m0 = fit(0, &mut store.clone());
+    assert_bits_eq(&m1.beta, &m0.beta, "warm beta across thread counts");
+    assert_eq!(m1.support, m0.support);
+    assert_eq!(m1.intercept.to_bits(), m0.intercept.to_bits());
+    assert_eq!(m1.objective.to_bits(), m0.objective.to_bits());
+}
+
+/// Replaying the same record/suggest sequence reproduces the same store
+/// byte-for-byte — eviction and LRU updates are driven by the logical
+/// tick, never wall clock.
+#[test]
+fn eviction_sequence_replay_is_deterministic() {
+    let run = || {
+        let mut store = WarmStartStore::new(3);
+        for i in 0..10u64 {
+            let f = InstanceFeatures {
+                p: 5,
+                values: (0..FEATURE_LEN).map(|j| (i as f64) * 3.0 + j as f64).collect(),
+            };
+            store.record(&f, &[i as usize % 5], &[1.0 + i as f64], 0.0, i as f64, 0.5);
+            if i % 3 == 0 {
+                let probe = InstanceFeatures {
+                    p: 5,
+                    values: (0..FEATURE_LEN).map(|j| j as f64).collect(),
+                };
+                let _ = store.suggest(&probe);
+            }
+        }
+        assert_eq!(store.len(), 3, "capacity bound respected");
+        store.to_json().to_string_pretty()
+    };
+    assert_eq!(run(), run());
+}
+
+/// A corrupt store surfaces a typed error but still yields an empty
+/// store, so the caller degrades to a cold fit; a missing file is a
+/// fresh cache, not an error. Cold fits stay bit-reproducible.
+#[test]
+fn corrupt_store_degrades_to_cold_fit_with_typed_error() {
+    let path = temp_path("corrupt");
+    std::fs::write(&path, "{ this is not json !").unwrap();
+    let (store, err) = WarmStartStore::load_or_empty(&path, 8);
+    assert!(store.is_empty());
+    assert!(matches!(err, Some(WarmStartError::Parse { .. })), "got {err:?}");
+
+    std::fs::write(&path, r#"{"schema": "backbone-model/v1"}"#).unwrap();
+    let (store2, err2) = WarmStartStore::load_or_empty(&path, 8);
+    assert!(store2.is_empty());
+    assert!(matches!(err2, Some(WarmStartError::Schema { .. })), "got {err2:?}");
+
+    std::fs::remove_file(&path).unwrap();
+    let (store3, err3) = WarmStartStore::load_or_empty(&path, 8);
+    assert!(store3.is_empty() && err3.is_none());
+
+    // The degraded (empty) store yields no suggestion, and the fit that
+    // proceeds without one is the ordinary, reproducible cold fit.
+    let mut rng = Rng::seed_from_u64(3);
+    let data =
+        generate(&SparseRegressionConfig { n: 40, p: 60, k: 2, rho: 0.1, snr: 5.0 }, &mut rng);
+    let mut empty = store;
+    assert!(empty.suggest(&featurize(&data.x, &data.y, 2)).is_none());
+    let budget = Budget::seconds(30.0);
+    let fit = || {
+        Backbone::sparse_regression()
+            .alpha(0.3)
+            .beta(0.5)
+            .num_subproblems(3)
+            .max_nonzeros(2)
+            .threads(1)
+            .seed(3)
+            .build()
+            .unwrap()
+            .fit_with_budget(&data.x, &data.y, &budget)
+            .unwrap()
+            .clone()
+    };
+    let a = fit();
+    let b = fit();
+    assert_bits_eq(&a.beta, &b.beta, "cold fit determinism");
+    assert_eq!(a.support, b.support);
+}
+
+/// The `backbone-warmstart-store/v1` wire format is byte-pinned: this
+/// exact operation sequence must serialize to the committed fixture,
+/// and the fixture must parse back and reserialize byte-identically.
+#[test]
+fn store_wire_format_matches_golden_fixture() {
+    let mut store = WarmStartStore::new(4);
+    let f1 = InstanceFeatures {
+        p: 6,
+        values: vec![4.0, 6.0, 2.0, 1.5, 1.0, 2.0, 0.5, 0.25, 0.0, 1.0, 0.75, 1.25],
+    };
+    store.record(&f1, &[1, 4], &[0.5, -2.0], 0.25, 3.5, 0.5);
+    let f2 = InstanceFeatures {
+        p: 6,
+        values: vec![4.0, 6.0, 2.0, 1.75, 1.25, 2.25, 0.5, 0.25, 0.5, 1.5, 0.625, 1.125],
+    };
+    store.record(&f2, &[0, 3], &[1.5, 0.75], -0.5, 2.25, 0.25);
+
+    let golden = include_str!("fixtures/warmstart_store_v1.json");
+    assert_eq!(store.to_json().to_string_pretty(), golden);
+    let back = WarmStartStore::parse(golden).unwrap();
+    assert_eq!(back, store);
+    assert_eq!(back.to_json().to_string_pretty(), golden);
+}
+
+/// Featurization is total and fixed-length on random instances, survives
+/// the JSON round trip bit-exactly, and a repeat submission of the same
+/// instance is always an exact (distance-zero) hit.
+#[test]
+fn prop_featurize_round_trips_through_the_store() {
+    property("warmstart_featurize_roundtrip", 40, |g: &mut Gen| {
+        let n = g.usize_in(2..10);
+        let p = g.usize_in(1..12);
+        let mut x = Matrix::zeros(n, p);
+        for i in 0..n {
+            for j in 0..p {
+                x.set(i, j, g.normal());
+            }
+        }
+        let y: Vec<f64> = (0..n).map(|_| g.normal()).collect();
+        let k = g.usize_in(1..(p + 1));
+        let f = featurize(&x, &y, k);
+        assert_eq!(f.values.len(), FEATURE_LEN);
+        assert_eq!(f.p, p);
+        assert!(f.values.iter().all(|v| v.is_finite()), "features finite: {:?}", f.values);
+
+        let mut store = WarmStartStore::new(4);
+        let support: Vec<usize> = (0..k.min(p)).collect();
+        let coeffs: Vec<f64> = support.iter().map(|_| g.normal()).collect();
+        store.record(&f, &support, &coeffs, g.normal(), g.normal().abs(), 0.5);
+        let text = store.to_json().to_string_pretty();
+        let mut back = WarmStartStore::parse(&text).unwrap();
+        assert_bits_eq(&back.entries()[0].features, &f.values, "features round trip");
+        assert_bits_eq(&back.entries()[0].coefficients, &coeffs, "coefficients round trip");
+        let w = back.suggest(&f).expect("hit");
+        assert!(w.exact);
+        assert_eq!(w.distance, 0.0);
+        assert_eq!(w.support, support);
+    });
+}

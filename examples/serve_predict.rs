@@ -61,15 +61,38 @@ fn main() -> anyhow::Result<()> {
     assert!(identical, "round-trip must be exact");
 
     // 4. Serve: loopback load test over real HTTP (the `--self-test`
-    //    harness; `cli serve` runs the same server as a daemon).
+    //    harness; `cli serve` runs the same server as a daemon). The
+    //    full harness also measures close-mode for comparison and
+    //    hot-swaps the model mid-load to prove zero drops.
     let report = run_self_test(
         loaded.model,
-        &SelfTestConfig { requests: 100, concurrency: 4, batch_rows: 16, threads: 2 },
+        &SelfTestConfig {
+            requests: 100,
+            connections: 4,
+            batch_rows: 16,
+            threads: 2,
+            ..SelfTestConfig::quick()
+        },
     )?;
+    let ka = &report.keep_alive;
     println!(
         "served: {} requests, {} failed, {:.0} req/s, p50 {:.2} ms, p99 {:.2} ms",
-        report.requests, report.failed, report.req_per_sec, report.p50_ms, report.p99_ms
+        ka.requests,
+        ka.failed,
+        ka.req_per_sec,
+        ka.p50_ms,
+        ka.p99_ms
     );
+    if let Some(speedup) = report.keepalive_speedup {
+        println!("served: keep-alive is {speedup:.2}x close-mode throughput");
+    }
+    if let Some(swap) = &report.swap {
+        println!(
+            "served: hot swap under load — {} on v1, {} on v2, {} boundary violations",
+            swap.served_old, swap.served_new, swap.boundary_violations
+        );
+    }
+    assert!(report.passed(), "self-test must pass");
     std::fs::remove_file(&path).ok();
     Ok(())
 }

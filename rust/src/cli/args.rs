@@ -3,16 +3,31 @@
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
-/// Parsed arguments: `--key value` pairs and bare `--flag`s.
+/// Parsed arguments: `--key value` pairs and bare `--flag`s. Repeating a
+/// key keeps every occurrence in order ([`Args::get_all`]); the
+/// single-value getters see the last one (last-wins overrides).
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     values: BTreeMap<String, String>,
+    /// Every `--key value` in command-line order (repeats preserved).
+    pairs: Vec<(String, String)>,
     flags: Vec<String>,
 }
 
 /// Option keys that are boolean flags (never consume a value).
-const FLAG_KEYS: &[&str] =
-    &["fit", "full", "help", "quiet", "native-only", "quick", "self-test", "warm"];
+const FLAG_KEYS: &[&str] = &[
+    "fit",
+    "full",
+    "help",
+    "quiet",
+    "native-only",
+    "no-compare",
+    "no-keep-alive",
+    "no-swap",
+    "quick",
+    "self-test",
+    "warm",
+];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Args> {
@@ -25,6 +40,7 @@ impl Args {
             };
             if let Some((k, v)) = key.split_once('=') {
                 out.values.insert(k.to_string(), v.to_string());
+                out.pairs.push((k.to_string(), v.to_string()));
             } else if FLAG_KEYS.contains(&key) {
                 out.flags.push(key.to_string());
             } else {
@@ -32,6 +48,7 @@ impl Args {
                     .get(i + 1)
                     .with_context(|| format!("missing value for --{key}"))?;
                 out.values.insert(key.to_string(), v.clone());
+                out.pairs.push((key.to_string(), v.clone()));
                 i += 1;
             }
             i += 1;
@@ -41,6 +58,12 @@ impl Args {
 
     pub fn get(&self, key: &str) -> Option<String> {
         self.values.get(key).cloned()
+    }
+
+    /// Every value given for `key`, in command-line order. Repeatable
+    /// options (`serve --model a=x.json --model b=y.json`) read this.
+    pub fn get_all(&self, key: &str) -> Vec<String> {
+        self.pairs.iter().filter(|(k, _)| k == key).map(|(_, v)| v.clone()).collect()
     }
 
     pub fn flag(&self, key: &str) -> bool {
@@ -59,6 +82,15 @@ impl Args {
             Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
             None => Ok(default),
         }
+    }
+
+    /// Float option with no default — `None` when absent (for knobs whose
+    /// presence changes behaviour, like `serve --self-test --target-rps`).
+    pub fn get_opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.values
+            .get(key)
+            .map(|v| v.parse().with_context(|| format!("--{key} must be a number")))
+            .transpose()
     }
 
     /// Float option constrained to the half-open interval `(lo, hi]` — the
@@ -94,6 +126,15 @@ mod tests {
         assert_eq!(a.get("block").as_deref(), Some("sr"));
         assert!(a.flag("full"));
         assert_eq!(a.get_usize("n", 0).unwrap(), 50);
+    }
+
+    #[test]
+    fn repeated_keys_keep_order_and_last_wins_for_get() {
+        let a = Args::parse(&sv(&["--model", "a=x.json", "--model=b=y.json", "--n", "3"]))
+            .unwrap();
+        assert_eq!(a.get_all("model"), vec!["a=x.json".to_string(), "b=y.json".into()]);
+        assert_eq!(a.get("model").as_deref(), Some("b=y.json"), "get() is last-wins");
+        assert!(a.get_all("missing").is_empty());
     }
 
     #[test]

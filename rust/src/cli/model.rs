@@ -8,12 +8,16 @@
 //!                        [--data-out rows.csv] [--labels-out y.csv]
 //! backbone-learn predict --model model.json --data rows.csv
 //!                        [--labels y.csv] [--out preds.json]
-//! backbone-learn serve   --model model.json [--port P] [--host H]
-//!                        [--threads N] [--fit] [--warm-cache store.json]
-//!                        [--max-fits N]
+//! backbone-learn serve   --model [name=]model.json [--model name=other.json ...]
+//!                        [--port P] [--host H] [--threads N]
+//!                        [--fit] [--warm-cache store.json] [--max-fits N]
+//!                        [--max-inflight N] [--read-timeout SECS]
+//!                        [--idle-timeout SECS] [--no-keep-alive]
 //! backbone-learn serve   --model model.json --self-test [--quick]
-//!                        [--requests N] [--concurrency C] [--batch B]
-//!                        [--threads N] [--out report.json]
+//!                        [--requests N] [--connections C] [--batch B]
+//!                        [--threads N] [--target-rps R] [--duration SECS]
+//!                        [--slo-p99-ms MS] [--no-keep-alive] [--no-swap]
+//!                        [--no-compare] [--out report.json]
 //! ```
 //!
 //! `save` fits a learner on generated data (same generators as `fit`)
@@ -21,8 +25,11 @@
 //! `predict` runs a saved artifact over CSV rows (reporting regression /
 //! classification / clustering metrics when `--labels` is given,
 //! including the confusion matrix and ROC AUC for classifiers); `serve`
-//! exposes the artifact over HTTP, or — with `--self-test` — drives its
-//! own loopback load generator and exits non-zero if any request failed.
+//! exposes one or more named artifacts over keep-alive HTTP (path-routed
+//! `/models/<id>/predict`, hot swap via `PUT /models/<id>`), or — with
+//! `--self-test` — drives its own loopback load test (keep-alive reuse,
+//! close-mode comparison, hot-swap-under-load, optional p99 SLO) and
+//! exits non-zero unless the report passes.
 
 use super::Args;
 use crate::backbone::Backbone;
@@ -35,7 +42,7 @@ use crate::metrics::{
 use crate::persist::{LearnerKind, LoadedModel, ModelArtifact};
 use crate::rng::Rng;
 use crate::serve::selftest::{run_self_test, SelfTestConfig};
-use crate::serve::{ServeConfig, Server};
+use crate::serve::{parse_model_spec, ServeConfig, Server};
 use crate::util::Budget;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
@@ -305,66 +312,155 @@ pub fn predict(args: &Args) -> Result<i32> {
 // ---------------------------------------------------------------------------
 
 pub fn serve(args: &Args) -> Result<i32> {
-    let model_path = args.get("model").context("--model is required")?;
-    let artifact = ModelArtifact::load(&model_path)?;
-    let model: LoadedModel = artifact.model.clone();
+    // Repeatable `--model [name=]path`: a bare path names itself
+    // `default` (only allowed first); the first registration is the
+    // default model for unqualified `/predict`.
+    let specs = args.get_all("model");
+    if specs.is_empty() {
+        bail!("--model is required ([name=]path, repeatable)");
+    }
+    let mut models: Vec<(String, LoadedModel, &'static str, String)> = Vec::new();
+    for (i, spec) in specs.iter().enumerate() {
+        let (name, path) = parse_model_spec(spec, i)?;
+        let artifact = ModelArtifact::load(&path)?;
+        models.push((name, artifact.model, artifact.learner().name(), path));
+    }
     let threads = args.get_usize("threads", 2)?;
 
     if args.flag("self-test") {
-        let base = if args.flag("quick") { SelfTestConfig::quick() } else { SelfTestConfig::full() };
+        let base =
+            if args.flag("quick") { SelfTestConfig::quick() } else { SelfTestConfig::full() };
+        // `--connections` is the PR-7 name; `--concurrency` stays as an
+        // alias for pre-PR-7 scripts.
+        let connections_default = args.get_usize("concurrency", base.connections)?;
         let cfg = SelfTestConfig {
             requests: args.get_usize("requests", base.requests)?,
-            concurrency: args.get_usize("concurrency", base.concurrency)?,
+            connections: args.get_usize("connections", connections_default)?,
             batch_rows: args.get_usize("batch", base.batch_rows)?,
             threads: match args.get("threads") {
                 Some(_) => threads,
                 None => base.threads,
             },
+            keep_alive: !args.flag("no-keep-alive"),
+            compare_close: !args.flag("no-compare"),
+            swap_under_load: !args.flag("no-swap"),
+            target_rps: args.get_opt_f64("target-rps")?,
+            duration_secs: args.get_opt_f64("duration")?,
+            slo_p99_ms: args.get_opt_f64("slo-p99-ms")?,
         };
+        for (key, value) in [
+            ("target-rps", cfg.target_rps),
+            ("duration", cfg.duration_secs),
+            ("slo-p99-ms", cfg.slo_p99_ms),
+        ] {
+            if let Some(v) = value {
+                if !v.is_finite() || v <= 0.0 {
+                    bail!("--{key} must be a positive number, got {v}");
+                }
+            }
+        }
+        let (_, model, _, _) = models.swap_remove(0);
         let report = run_self_test(model, &cfg)?;
+        let ka = &report.keep_alive;
         println!(
-            "self-test [{}]: {} requests ({} failed), {} threads, batch {} rows",
-            report.learner, report.requests, report.failed, report.threads, report.batch_rows
+            "self-test [{}]: {} requests over {} connection(s), {} failed, \
+             {} server thread(s), batch {} rows",
+            report.learner,
+            ka.requests,
+            report.connections,
+            report.total_failed(),
+            report.threads,
+            report.batch_rows
         );
         println!(
-            "  {:.0} req/s · {:.0} rows/s · latency mean {:.2} ms · p50 {:.2} ms · p99 {:.2} ms",
-            report.req_per_sec, report.rows_per_sec, report.mean_ms, report.p50_ms, report.p99_ms
+            "  keep-alive: {:.0} req/s · {:.0} rows/s · {} socket(s) · \
+             p50 {:.2} ms · p99 {:.2} ms",
+            ka.req_per_sec, ka.rows_per_sec, ka.connections_opened, ka.p50_ms, ka.p99_ms
         );
+        if let Some(close) = &report.close_mode {
+            match report.keepalive_speedup {
+                Some(speedup) => println!(
+                    "  close-mode: {:.0} req/s over {} socket(s) → keep-alive speedup {:.2}x",
+                    close.req_per_sec, close.connections_opened, speedup
+                ),
+                None => println!(
+                    "  close-mode: {:.0} req/s over {} socket(s)",
+                    close.req_per_sec, close.connections_opened
+                ),
+            }
+        }
+        if let Some(swap) = &report.swap {
+            println!(
+                "  hot swap: status {} · {} old / {} new · {} boundary violation(s)",
+                swap.status, swap.served_old, swap.served_new, swap.boundary_violations
+            );
+        }
+        if let Some(slo) = report.slo_p99_ms {
+            println!(
+                "  slo: p99 {:.2} ms vs {:.2} ms budget → {}",
+                ka.p99_ms,
+                slo,
+                if report.slo_pass() == Some(true) { "pass" } else { "FAIL" }
+            );
+        }
         if let Some(out) = args.get("out") {
             std::fs::write(&out, report.to_json().to_string_pretty())
                 .with_context(|| format!("writing `{out}`"))?;
             eprintln!("wrote {out}");
         }
-        // CI contract: non-zero exit if any request failed. (A zero
-        // request count can't happen — run_self_test clamps to ≥ 1.)
-        return Ok(if report.failed > 0 { 1 } else { 0 });
+        // CI contract: non-zero exit unless the whole report passes
+        // (zero failures, clean swap boundary, SLO when requested).
+        return Ok(if report.passed() { 0 } else { 1 });
     }
 
     let host = args.get("host").unwrap_or_else(|| "127.0.0.1".into());
     let port = args.get_usize("port", 8787)?;
     let addr = format!("{host}:{port}");
     let enable_fit = args.flag("fit");
-    let cfg = ServeConfig {
-        threads,
-        enable_fit,
-        max_concurrent_fits: args.get_usize("max-fits", 1)?,
-        warm_cache_path: args.get("warm-cache"),
-        ..ServeConfig::default()
+    let defaults = ServeConfig::default();
+    let duration_arg = |key: &str, default: std::time::Duration| -> Result<std::time::Duration> {
+        let secs = args.get_f64(key, default.as_secs_f64())?;
+        if !secs.is_finite() || secs <= 0.0 {
+            bail!("--{key} must be a positive number of seconds, got {secs}");
+        }
+        Ok(std::time::Duration::from_secs_f64(secs))
     };
-    let server = Server::bind(&addr, model, &cfg)
+    let cfg = ServeConfig::builder()
+        .threads(threads)
+        .enable_fit(enable_fit)
+        .keep_alive(!args.flag("no-keep-alive"))
+        .read_timeout(duration_arg("read-timeout", defaults.read_timeout())?)
+        .idle_timeout(duration_arg("idle-timeout", defaults.idle_timeout())?)
+        .max_concurrent_fits(args.get_usize("max-fits", defaults.max_concurrent_fits())?)
+        .max_inflight_predicts(
+            args.get_usize("max-inflight", defaults.max_inflight_predicts())?,
+        )
+        .registry_capacity(args.get_usize("registry-cap", defaults.registry_capacity())?)
+        .warm_cache_path(args.get("warm-cache"))
+        .build()?;
+    let named: Vec<(String, LoadedModel)> =
+        models.iter().map(|(name, model, _, _)| (name.clone(), model.clone())).collect();
+    let server = Server::bind_registry(&addr, named, &cfg)
         .with_context(|| format!("binding `{addr}`"))?;
     let bound = server.local_addr()?;
     println!(
-        "serving {} model from {model_path} on http://{bound} ({} threads)",
-        artifact.learner().name(),
-        crate::backbone::resolved_threads(threads)
+        "serving {} model(s) on http://{bound} ({} threads, keep-alive {})",
+        models.len(),
+        crate::backbone::resolved_threads(threads),
+        if cfg.keep_alive() { "on" } else { "off" }
     );
-    println!("  POST /predict   {{\"rows\": [[...], ...]}} → predictions");
-    if enable_fit {
-        println!("  POST /fit       {{\"x\": [[...]], \"y\": [...], \"k\": K}} → model id + support");
+    for (name, _, learner, path) in &models {
+        println!("  model {name}: {learner} from {path}");
     }
-    println!("  GET  /healthz   liveness + model identity");
-    println!("  GET  /stats     per-route request counters + latency profile");
+    println!("  POST /predict              {{\"rows\": [[...], ...]}} → default model");
+    println!("  POST /models/<id>/predict  same payload, routed by model id");
+    println!("  PUT  /models/<id>          artifact JSON or {{\"path\": ...}} → hot swap");
+    println!("  GET  /models               registry listing (id, version, source)");
+    if enable_fit {
+        println!("  POST /fit                  {{\"x\": [[...]], \"y\": [...], \"k\": K}} → model id");
+    }
+    println!("  GET  /healthz              liveness + default model identity");
+    println!("  GET  /stats                backbone-serve-stats/v1 counters + latency");
     if let Some(err) = server.warm_store_error() {
         eprintln!("warning: warm-start store unusable ({err}); /fit starts cold");
     }

@@ -43,9 +43,13 @@
 //! Fitted models outlive the process: [`persist::ModelArtifact`] freezes
 //! any fitted learner as a versioned `backbone-model/v1` JSON artifact
 //! whose [`persist::LoadedModel`] predicts bit-identically to the
-//! in-memory estimator, and [`serve`] exposes a loaded artifact over a
-//! std-only batched HTTP prediction server (`cli save` / `cli predict` /
-//! `cli serve`). [`warmstart`] closes the loop: a bounded, persistable
+//! in-memory estimator, and [`serve`] exposes loaded artifacts over a
+//! std-only keep-alive HTTP/1.1 server — a versioned multi-model
+//! registry with path-routed predict (`POST /models/<id>/predict`),
+//! atomic hot swap (`PUT /models/<id>`), and bounded 429+`Retry-After`
+//! backpressure, configured through [`ServeConfig::builder`]
+//! (`cli save` / `cli predict` / `cli serve`). [`warmstart`] closes the
+//! loop: a bounded, persistable
 //! store of past fits predicts warm starts for new instances of the same
 //! problem family (`cli fit --warm-cache`, `cli serve --fit` with
 //! `POST /fit`), so repeat-family instances solve warm instead of cold.
@@ -98,4 +102,5 @@ pub mod warmstart;
 
 pub use backbone::{Backbone, BackboneError, ExecutionPolicy, Fit, FitPipeline, Predict};
 pub use persist::{LoadedModel, ModelArtifact};
+pub use serve::{ServeConfig, ServeError, Server};
 pub use warmstart::{WarmStart, WarmStartStore};

@@ -24,7 +24,7 @@
 //! {
 //!   "schema": "backbone-model/v1",
 //!   "learner": "sparse_regression",
-//!   "crate_version": "0.3.0",
+//!   "crate_version": "0.4.0",
 //!   "provenance": {
 //!     "seed": 7,
 //!     "params": { "alpha": 0.5, "beta": 0.5, "num_subproblems": 5,

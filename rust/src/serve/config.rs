@@ -1,0 +1,517 @@
+//! Server configuration: a validated builder with typed errors.
+//!
+//! PR 1 replaced the estimators' panicking field-bags with
+//! `Backbone::…()` builders returning typed `BackboneError`s; this
+//! module does the same for the serving tier. [`ServeConfig`] has
+//! private fields and is constructed through [`ServeConfig::builder()`],
+//! which validates every knob and returns a non-panicking
+//! [`ServeError`]. The pre-0.4 public-field bag survives one release as
+//! the `#[deprecated]` [`ServeConfigFields`] shim.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Why a serving configuration (or model registration) is invalid.
+/// Mirrors the `BackboneError` idiom: typed, non-panicking, surfaced at
+/// `build()` time before any socket is bound.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// `max_body_bytes` of zero would reject every request body.
+    ZeroBodyCap,
+    /// A timeout or retry interval was zero; the field names which.
+    ZeroDuration { what: &'static str },
+    /// A queue/registry bound was zero; the field names which.
+    ZeroCapacity { what: &'static str },
+    /// A model was registered under an empty name.
+    EmptyModelName,
+    /// Names `m1`, `m2`, … are reserved for models fitted online via
+    /// `POST /fit`.
+    ReservedModelName { name: String },
+    /// Two startup models were registered under the same name.
+    DuplicateModelName { name: String },
+    /// Names route as URL path segments, so they cannot contain `/`
+    /// or whitespace.
+    InvalidModelName { name: String },
+    /// A `--model` CLI spec that is neither `path` nor `name=path`.
+    InvalidModelSpec { spec: String },
+    /// No model was registered at all.
+    NoModels,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::ZeroBodyCap => write!(f, "max_body_bytes must be at least 1"),
+            Self::ZeroDuration { what } => write!(f, "{what} must be non-zero"),
+            Self::ZeroCapacity { what } => write!(f, "{what} must be at least 1"),
+            Self::EmptyModelName => write!(f, "model name must not be empty"),
+            Self::ReservedModelName { name } => write!(
+                f,
+                "model name `{name}` is reserved for online-fitted models (m1, m2, …)"
+            ),
+            Self::DuplicateModelName { name } => {
+                write!(f, "model name `{name}` registered twice")
+            }
+            Self::InvalidModelName { name } => write!(
+                f,
+                "model name `{name}` must not contain `/`, `=`, or whitespace"
+            ),
+            Self::InvalidModelSpec { spec } => write!(
+                f,
+                "bad --model spec `{spec}`: expected `path` (first model only) or `name=path`"
+            ),
+            Self::NoModels => write!(f, "at least one model must be registered"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A model name is a URL path segment (`/models/<name>/predict`) and a
+/// registry key; reject anything that cannot be both.
+pub fn validate_model_name(name: &str) -> Result<(), ServeError> {
+    if name.is_empty() {
+        return Err(ServeError::EmptyModelName);
+    }
+    if name.contains(['/', '=']) || name.chars().any(char::is_whitespace) {
+        return Err(ServeError::InvalidModelName { name: name.into() });
+    }
+    let mut chars = name.chars();
+    if chars.next() == Some('m') && name.len() > 1 && chars.all(|c| c.is_ascii_digit()) {
+        return Err(ServeError::ReservedModelName { name: name.into() });
+    }
+    Ok(())
+}
+
+/// Parse one repeated `--model` CLI value: `name=path`, or a bare
+/// `path` (allowed only for the first model, registered as `default`).
+pub fn parse_model_spec(spec: &str, index: usize) -> Result<(String, String), ServeError> {
+    if let Some((name, path)) = spec.split_once('=') {
+        if path.is_empty() {
+            return Err(ServeError::InvalidModelSpec { spec: spec.into() });
+        }
+        validate_model_name(name)?;
+        return Ok((name.to_string(), path.to_string()));
+    }
+    if index > 0 {
+        // A second bare path would silently shadow the first; require
+        // explicit names as soon as more than one model is served.
+        return Err(ServeError::InvalidModelSpec { spec: spec.into() });
+    }
+    Ok(("default".to_string(), spec.to_string()))
+}
+
+/// Server tunables. Fields are private — construct via
+/// [`ServeConfig::builder()`], which validates and returns a typed
+/// [`ServeError`] instead of panicking (or serving with a nonsensical
+/// config). `ServeConfig::default()` is the validated default build.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    threads: usize,
+    max_body_bytes: usize,
+    read_timeout: Duration,
+    idle_timeout: Duration,
+    keep_alive: bool,
+    max_requests_per_conn: usize,
+    enable_fit: bool,
+    max_concurrent_fits: usize,
+    max_inflight_predicts: usize,
+    retry_after_secs: u64,
+    registry_capacity: usize,
+    warm_capacity: usize,
+    warm_cache_path: Option<String>,
+}
+
+impl ServeConfig {
+    /// Start from the defaults; chain setters, then `build()`.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder::default()
+    }
+
+    /// Worker threads accepting and handling connections (0 = all cores).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Cap on a request body (the batched rows payload).
+    pub fn max_body_bytes(&self) -> usize {
+        self.max_body_bytes
+    }
+
+    /// Socket read/write timeout while a request is in flight.
+    pub fn read_timeout(&self) -> Duration {
+        self.read_timeout
+    }
+
+    /// How long a keep-alive connection may sit idle between requests
+    /// before the server closes it and the worker returns to `accept`.
+    pub fn idle_timeout(&self) -> Duration {
+        self.idle_timeout
+    }
+
+    /// Whether connections are kept open across requests (HTTP/1.1
+    /// keep-alive). Clients can always opt out per-request with
+    /// `Connection: close`.
+    pub fn keep_alive(&self) -> bool {
+        self.keep_alive
+    }
+
+    /// Requests served on one connection before the server closes it
+    /// (0 = unlimited). A rebalancing valve: with one worker per live
+    /// connection, this bounds how long a single chatty client can pin
+    /// a worker.
+    pub fn max_requests_per_conn(&self) -> usize {
+        self.max_requests_per_conn
+    }
+
+    /// Whether `POST /fit` (the online fit path) is enabled.
+    pub fn enable_fit(&self) -> bool {
+        self.enable_fit
+    }
+
+    /// Bounded admission for `POST /fit`: at most this many fits run at
+    /// once; excess requests are answered `429` + `Retry-After`.
+    pub fn max_concurrent_fits(&self) -> usize {
+        self.max_concurrent_fits
+    }
+
+    /// Bounded admission for the predict routes (0 = unlimited): excess
+    /// concurrent predicts are answered `429` + `Retry-After` instead of
+    /// queueing without bound.
+    pub fn max_inflight_predicts(&self) -> usize {
+        self.max_inflight_predicts
+    }
+
+    /// Value of the `Retry-After` header on backpressure (429) responses.
+    pub fn retry_after_secs(&self) -> u64 {
+        self.retry_after_secs
+    }
+
+    /// Bound on models fitted online and held for prediction by id;
+    /// the oldest fitted model is evicted first (deterministic FIFO).
+    /// Named models registered at startup or via `PUT /models/<id>` are
+    /// pinned and never evicted.
+    pub fn registry_capacity(&self) -> usize {
+        self.registry_capacity
+    }
+
+    /// Bound on the warm-start store consulted/updated by `POST /fit`.
+    pub fn warm_capacity(&self) -> usize {
+        self.warm_capacity
+    }
+
+    /// Optional path of a `backbone-warmstart-store/v1` document: loaded
+    /// at bind time (corrupt/missing degrades to an empty store) and
+    /// written back after every successful fit.
+    pub fn warm_cache_path(&self) -> Option<&str> {
+        self.warm_cache_path.as_deref()
+    }
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        // The builder defaults always validate.
+        ServeConfigBuilder::default().build().expect("default ServeConfig is valid")
+    }
+}
+
+/// Builder for [`ServeConfig`]; see the accessor docs for semantics.
+#[derive(Debug, Clone)]
+pub struct ServeConfigBuilder {
+    threads: usize,
+    max_body_bytes: usize,
+    read_timeout: Duration,
+    idle_timeout: Duration,
+    keep_alive: bool,
+    max_requests_per_conn: usize,
+    enable_fit: bool,
+    max_concurrent_fits: usize,
+    max_inflight_predicts: usize,
+    retry_after_secs: u64,
+    registry_capacity: usize,
+    warm_capacity: usize,
+    warm_cache_path: Option<String>,
+}
+
+impl Default for ServeConfigBuilder {
+    fn default() -> Self {
+        Self {
+            threads: 2,
+            max_body_bytes: 8 * 1024 * 1024,
+            read_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(5),
+            keep_alive: true,
+            max_requests_per_conn: 0,
+            enable_fit: false,
+            max_concurrent_fits: 1,
+            max_inflight_predicts: 0,
+            retry_after_secs: 1,
+            registry_capacity: 16,
+            warm_capacity: crate::warmstart::DEFAULT_STORE_CAPACITY,
+            warm_cache_path: None,
+        }
+    }
+}
+
+impl ServeConfigBuilder {
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn max_body_bytes(mut self, bytes: usize) -> Self {
+        self.max_body_bytes = bytes;
+        self
+    }
+
+    pub fn read_timeout(mut self, timeout: Duration) -> Self {
+        self.read_timeout = timeout;
+        self
+    }
+
+    pub fn idle_timeout(mut self, timeout: Duration) -> Self {
+        self.idle_timeout = timeout;
+        self
+    }
+
+    pub fn keep_alive(mut self, on: bool) -> Self {
+        self.keep_alive = on;
+        self
+    }
+
+    pub fn max_requests_per_conn(mut self, n: usize) -> Self {
+        self.max_requests_per_conn = n;
+        self
+    }
+
+    pub fn enable_fit(mut self, on: bool) -> Self {
+        self.enable_fit = on;
+        self
+    }
+
+    pub fn max_concurrent_fits(mut self, n: usize) -> Self {
+        self.max_concurrent_fits = n;
+        self
+    }
+
+    pub fn max_inflight_predicts(mut self, n: usize) -> Self {
+        self.max_inflight_predicts = n;
+        self
+    }
+
+    pub fn retry_after_secs(mut self, secs: u64) -> Self {
+        self.retry_after_secs = secs;
+        self
+    }
+
+    pub fn registry_capacity(mut self, n: usize) -> Self {
+        self.registry_capacity = n;
+        self
+    }
+
+    pub fn warm_capacity(mut self, n: usize) -> Self {
+        self.warm_capacity = n;
+        self
+    }
+
+    pub fn warm_cache_path(mut self, path: Option<String>) -> Self {
+        self.warm_cache_path = path;
+        self
+    }
+
+    /// Validate every knob; typed error, no panics.
+    pub fn build(self) -> Result<ServeConfig, ServeError> {
+        if self.max_body_bytes == 0 {
+            return Err(ServeError::ZeroBodyCap);
+        }
+        if self.read_timeout.is_zero() {
+            return Err(ServeError::ZeroDuration { what: "read_timeout" });
+        }
+        if self.idle_timeout.is_zero() {
+            return Err(ServeError::ZeroDuration { what: "idle_timeout" });
+        }
+        if self.retry_after_secs == 0 {
+            return Err(ServeError::ZeroDuration { what: "retry_after_secs" });
+        }
+        if self.max_concurrent_fits == 0 {
+            return Err(ServeError::ZeroCapacity { what: "max_concurrent_fits" });
+        }
+        if self.registry_capacity == 0 {
+            return Err(ServeError::ZeroCapacity { what: "registry_capacity" });
+        }
+        if self.warm_capacity == 0 {
+            return Err(ServeError::ZeroCapacity { what: "warm_capacity" });
+        }
+        Ok(ServeConfig {
+            threads: self.threads,
+            max_body_bytes: self.max_body_bytes,
+            read_timeout: self.read_timeout,
+            idle_timeout: self.idle_timeout,
+            keep_alive: self.keep_alive,
+            max_requests_per_conn: self.max_requests_per_conn,
+            enable_fit: self.enable_fit,
+            max_concurrent_fits: self.max_concurrent_fits,
+            max_inflight_predicts: self.max_inflight_predicts,
+            retry_after_secs: self.retry_after_secs,
+            registry_capacity: self.registry_capacity,
+            warm_capacity: self.warm_capacity,
+            warm_cache_path: self.warm_cache_path,
+        })
+    }
+}
+
+/// The pre-0.4 public-field configuration bag, kept for one release so
+/// `ServeConfig { threads: 2, .. }`-style call sites have a mechanical
+/// migration target: swap the type name and call `.into_config()`.
+#[deprecated(
+    since = "0.4.0",
+    note = "use ServeConfig::builder(); this field-bag shim is removed next release"
+)]
+#[derive(Debug, Clone)]
+pub struct ServeConfigFields {
+    pub threads: usize,
+    pub max_body_bytes: usize,
+    pub io_timeout: Duration,
+    pub enable_fit: bool,
+    pub max_concurrent_fits: usize,
+    pub registry_capacity: usize,
+    pub warm_capacity: usize,
+    pub warm_cache_path: Option<String>,
+}
+
+#[allow(deprecated)]
+impl Default for ServeConfigFields {
+    fn default() -> Self {
+        Self {
+            threads: 2,
+            max_body_bytes: 8 * 1024 * 1024,
+            io_timeout: Duration::from_secs(10),
+            enable_fit: false,
+            max_concurrent_fits: 1,
+            registry_capacity: 16,
+            warm_capacity: crate::warmstart::DEFAULT_STORE_CAPACITY,
+            warm_cache_path: None,
+        }
+    }
+}
+
+#[allow(deprecated)]
+impl ServeConfigFields {
+    /// Validate into the real config (the old fields map 1:1; knobs the
+    /// bag never had keep their builder defaults).
+    pub fn into_config(self) -> Result<ServeConfig, ServeError> {
+        ServeConfig::builder()
+            .threads(self.threads)
+            .max_body_bytes(self.max_body_bytes)
+            .read_timeout(self.io_timeout)
+            .enable_fit(self.enable_fit)
+            .max_concurrent_fits(self.max_concurrent_fits)
+            .registry_capacity(self.registry_capacity)
+            .warm_capacity(self.warm_capacity)
+            .warm_cache_path(self.warm_cache_path)
+            .build()
+    }
+}
+
+#[allow(deprecated)]
+impl TryFrom<ServeConfigFields> for ServeConfig {
+    type Error = ServeError;
+
+    fn try_from(fields: ServeConfigFields) -> Result<Self, ServeError> {
+        fields.into_config()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_validate() {
+        let cfg = ServeConfig::default();
+        assert_eq!(cfg.threads(), 2);
+        assert!(cfg.keep_alive());
+        assert_eq!(cfg.max_concurrent_fits(), 1);
+        assert_eq!(cfg.retry_after_secs(), 1);
+        assert_eq!(cfg.max_inflight_predicts(), 0, "unlimited by default");
+    }
+
+    #[test]
+    fn builder_rejects_degenerate_knobs_with_typed_errors() {
+        assert_eq!(
+            ServeConfig::builder().max_body_bytes(0).build().unwrap_err(),
+            ServeError::ZeroBodyCap
+        );
+        assert_eq!(
+            ServeConfig::builder()
+                .idle_timeout(Duration::ZERO)
+                .build()
+                .unwrap_err(),
+            ServeError::ZeroDuration { what: "idle_timeout" }
+        );
+        assert_eq!(
+            ServeConfig::builder().max_concurrent_fits(0).build().unwrap_err(),
+            ServeError::ZeroCapacity { what: "max_concurrent_fits" }
+        );
+        assert_eq!(
+            ServeConfig::builder().retry_after_secs(0).build().unwrap_err(),
+            ServeError::ZeroDuration { what: "retry_after_secs" }
+        );
+        assert_eq!(
+            ServeConfig::builder().registry_capacity(0).build().unwrap_err(),
+            ServeError::ZeroCapacity { what: "registry_capacity" }
+        );
+    }
+
+    #[test]
+    fn model_names_are_validated() {
+        assert!(validate_model_name("default").is_ok());
+        assert!(validate_model_name("churn-v2").is_ok());
+        assert!(validate_model_name("m").is_ok(), "bare `m` is not a fitted id");
+        assert!(validate_model_name("m2x").is_ok(), "digits then letters is fine");
+        assert_eq!(validate_model_name(""), Err(ServeError::EmptyModelName));
+        assert_eq!(
+            validate_model_name("m12"),
+            Err(ServeError::ReservedModelName { name: "m12".into() })
+        );
+        assert!(matches!(
+            validate_model_name("a/b"),
+            Err(ServeError::InvalidModelName { .. })
+        ));
+        assert!(matches!(
+            validate_model_name("a b"),
+            Err(ServeError::InvalidModelName { .. })
+        ));
+    }
+
+    #[test]
+    fn model_specs_parse_names_and_bare_paths() {
+        assert_eq!(
+            parse_model_spec("model.json", 0).unwrap(),
+            ("default".into(), "model.json".into())
+        );
+        assert_eq!(
+            parse_model_spec("churn=models/churn.json", 1).unwrap(),
+            ("churn".into(), "models/churn.json".into())
+        );
+        assert!(matches!(
+            parse_model_spec("second.json", 1),
+            Err(ServeError::InvalidModelSpec { .. })
+        ));
+        assert!(matches!(
+            parse_model_spec("m3=x.json", 0),
+            Err(ServeError::ReservedModelName { .. })
+        ));
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn legacy_field_bag_converts() {
+        let cfg = ServeConfigFields { threads: 7, enable_fit: true, ..Default::default() }
+            .into_config()
+            .unwrap();
+        assert_eq!(cfg.threads(), 7);
+        assert!(cfg.enable_fit());
+        assert!(cfg.keep_alive(), "new knobs take builder defaults");
+    }
+}

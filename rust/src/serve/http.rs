@@ -1,22 +1,28 @@
 //! Minimal HTTP/1.1 request/response plumbing for the prediction server.
 //!
 //! Std-only (the vendored crate set has no HTTP stack): enough of RFC
-//! 9112 for a JSON prediction API — request line, headers (only
-//! `Content-Length` is honoured), bounded body read, `Connection: close`
-//! responses. Anything outside that subset is answered with a 4xx rather
-//! than guessed at.
+//! 9112 for a JSON prediction API — request line, headers
+//! (`Content-Length` and `Connection` are honoured), bounded body read,
+//! keep-alive or close responses. Anything outside that subset is
+//! answered with a 4xx rather than guessed at. Pipelining is not
+//! supported: a client must read each response before sending the next
+//! request on the same connection (every client in this crate does).
 
 use std::io::{Read, Write};
 
 /// Cap on the request head (request line + headers).
 const MAX_HEAD_BYTES: usize = 16 * 1024;
 
-/// A parsed request: method, path (query string stripped), body.
+/// A parsed request: method, path (query string stripped), body, and
+/// whether the client is willing to keep the connection open
+/// (HTTP/1.1 defaults to keep-alive unless `Connection: close`;
+/// HTTP/1.0 defaults to close unless `Connection: keep-alive`).
 #[derive(Debug, Clone)]
 pub struct Request {
     pub method: String,
     pub path: String,
     pub body: Vec<u8>,
+    pub keep_alive: bool,
 }
 
 /// Why a request could not be served; maps to an HTTP status.
@@ -55,24 +61,21 @@ impl From<std::io::Error> for HttpError {
     }
 }
 
-/// Read one request from `stream`. `max_body` bounds the declared
-/// `Content-Length`; requests without one have an empty body (the API
-/// never uses chunked encoding).
-pub fn read_request<S: Read>(stream: &mut S, max_body: usize) -> Result<Request, HttpError> {
-    // Accumulate chunks until the blank line that ends the head; body
-    // bytes that arrive in the same chunk are carried over below.
-    // (Chunked reads, not byte-at-a-time: one syscall per packet, not
-    // one per header byte — this loop is on the serving hot path.)
+/// Read chunks from `stream` until the `\r\n\r\n` head terminator;
+/// returns the buffer and the terminator position.
+fn read_head<S: Read>(stream: &mut S) -> Result<(Vec<u8>, usize), HttpError> {
+    // Chunked reads, not byte-at-a-time: one syscall per packet, not one
+    // per header byte — this loop is on the serving hot path.
     let mut buf = Vec::with_capacity(1024);
     let mut chunk = [0u8; 1024];
-    let split = loop {
+    loop {
         // Re-scan from just before the previous end so a terminator
         // straddling two chunks is still found.
         let from = buf.len().saturating_sub(chunk.len() + 3);
         if let Some(pos) =
             buf[from..].windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + from)
         {
-            break pos;
+            return Ok((buf, pos));
         }
         if buf.len() > MAX_HEAD_BYTES {
             return Err(HttpError::TooLarge { limit: MAX_HEAD_BYTES });
@@ -81,14 +84,50 @@ pub fn read_request<S: Read>(stream: &mut S, max_body: usize) -> Result<Request,
         if n == 0 {
             if buf.is_empty() {
                 // Connection opened and closed without sending anything —
-                // a TCP health probe or a shutdown poke, not a malformed
-                // request. Io ⇒ no response owed, no failure counted.
+                // a TCP health probe, a shutdown poke, or a keep-alive
+                // peer hanging up between requests. Io ⇒ no response
+                // owed, no failure counted.
                 return Err(HttpError::Io(std::io::ErrorKind::UnexpectedEof.into()));
             }
             return Err(HttpError::BadRequest("connection closed mid-request".into()));
         }
         buf.extend_from_slice(&chunk[..n]);
-    };
+    }
+}
+
+/// Parse `name: value` header lines into lowercase-name pairs.
+fn parse_headers<'a>(lines: impl Iterator<Item = &'a str>) -> Vec<(String, String)> {
+    lines
+        .filter(|l| !l.is_empty())
+        .filter_map(|l| l.split_once(':'))
+        .map(|(name, value)| (name.trim().to_ascii_lowercase(), value.trim().to_string()))
+        .collect()
+}
+
+fn header<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+}
+
+/// Read the declared body: whatever arrived with the head, then the rest.
+fn read_body<S: Read>(
+    stream: &mut S,
+    leftover: &[u8],
+    content_length: usize,
+) -> Result<Vec<u8>, HttpError> {
+    let mut body = leftover[..leftover.len().min(content_length)].to_vec();
+    if body.len() < content_length {
+        let start = body.len();
+        body.resize(content_length, 0);
+        stream.read_exact(&mut body[start..])?;
+    }
+    Ok(body)
+}
+
+/// Read one request from `stream`. `max_body` bounds the declared
+/// `Content-Length`; requests without one have an empty body (the API
+/// never uses chunked encoding).
+pub fn read_request<S: Read>(stream: &mut S, max_body: usize) -> Result<Request, HttpError> {
+    let (buf, split) = read_head(stream)?;
     let (head, leftover) = buf.split_at(split + 4);
     let head_text = String::from_utf8_lossy(head);
     let mut lines = head_text.split("\r\n");
@@ -105,46 +144,76 @@ pub fn read_request<S: Read>(stream: &mut S, max_body: usize) -> Result<Request,
     // Strip any query string; the API routes on the path alone.
     let path = target.split('?').next().unwrap_or("").to_string();
 
-    let mut content_length = 0usize;
-    for line in lines {
-        if line.is_empty() {
-            continue;
-        }
-        if let Some((name, value)) = line.split_once(':') {
-            if name.eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse().map_err(|_| {
-                    HttpError::BadRequest(format!("bad Content-Length `{}`", value.trim()))
-                })?;
-            }
-        }
-    }
+    let headers = parse_headers(lines);
+    let content_length = match header(&headers, "content-length") {
+        Some(v) => v.parse().map_err(|_| {
+            HttpError::BadRequest(format!("bad Content-Length `{v}`"))
+        })?,
+        None => 0usize,
+    };
     if content_length > max_body {
         return Err(HttpError::TooLarge { limit: max_body });
     }
-    // Body = whatever arrived with the head, then the remainder.
-    let mut body = leftover[..leftover.len().min(content_length)].to_vec();
-    let missing = content_length - body.len();
-    if missing > 0 {
-        let start = body.len();
-        body.resize(content_length, 0);
-        stream.read_exact(&mut body[start..])?;
-    }
-    Ok(Request { method, path, body })
+    let connection = header(&headers, "connection").unwrap_or("").to_ascii_lowercase();
+    let keep_alive = if connection.contains("close") {
+        false
+    } else if version.starts_with("HTTP/1.1") {
+        true
+    } else {
+        connection.contains("keep-alive")
+    };
+
+    let body = read_body(stream, leftover, content_length)?;
+    Ok(Request { method, path, body, keep_alive })
 }
 
-/// Write a `Connection: close` response with the given status and body.
+/// How a response is written: connection disposition plus any extra
+/// headers (the server uses this for `Retry-After` on 429s).
+#[derive(Debug, Clone, Copy)]
+pub struct WriteOptions<'a> {
+    /// Announce `Connection: keep-alive` and keep the socket open.
+    pub keep_alive: bool,
+    /// Advertised `Keep-Alive: timeout=N` (seconds; 0 = omit the header).
+    pub idle_timeout_secs: u64,
+    /// Extra response headers, written verbatim.
+    pub extra_headers: &'a [(&'static str, String)],
+}
+
+impl Default for WriteOptions<'_> {
+    fn default() -> Self {
+        Self { keep_alive: false, idle_timeout_secs: 0, extra_headers: &[] }
+    }
+}
+
+/// Write a response with the given status, body, and options.
 pub fn write_response<S: Write>(
     stream: &mut S,
     status: u16,
     reason: &str,
     content_type: &str,
     body: &[u8],
+    opts: &WriteOptions<'_>,
 ) -> std::io::Result<()> {
-    let head = format!(
+    let mut head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\n",
         body.len()
     );
+    for (name, value) in opts.extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    if opts.keep_alive {
+        head.push_str("Connection: keep-alive\r\n");
+        if opts.idle_timeout_secs > 0 {
+            head.push_str(&format!("Keep-Alive: timeout={}\r\n", opts.idle_timeout_secs));
+        }
+    } else {
+        head.push_str("Connection: close\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()
@@ -156,19 +225,23 @@ pub fn write_json<S: Write>(
     status: u16,
     reason: &str,
     body: &str,
+    opts: &WriteOptions<'_>,
 ) -> std::io::Result<()> {
-    write_response(stream, status, reason, "application/json", body.as_bytes())
+    write_response(stream, status, reason, "application/json", body.as_bytes(), opts)
 }
 
-/// Minimal client-side response parse for the self-test load generator:
-/// returns `(status, body)` from a full `Connection: close` exchange.
-pub fn parse_response(raw: &[u8]) -> Result<(u16, Vec<u8>), HttpError> {
-    let split = raw
-        .windows(4)
-        .position(|w| w == b"\r\n\r\n")
-        .ok_or_else(|| HttpError::BadRequest("response head not terminated".into()))?;
-    let head = String::from_utf8_lossy(&raw[..split]);
-    let status_line = head.split("\r\n").next().unwrap_or("");
+/// Read exactly one response from a (possibly keep-alive) connection:
+/// head until `\r\n\r\n`, then `Content-Length` body bytes. This is the
+/// client half the keep-alive load generator uses — `read_to_end` would
+/// block until the server closes, which a keep-alive server never does.
+pub fn read_response<S: Read>(
+    stream: &mut S,
+) -> Result<(u16, Vec<(String, String)>, Vec<u8>), HttpError> {
+    let (buf, split) = read_head(stream)?;
+    let (head, leftover) = buf.split_at(split + 4);
+    let head_text = String::from_utf8_lossy(head);
+    let mut lines = head_text.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
     let status: u16 = status_line
         .split(' ')
         .nth(1)
@@ -176,7 +249,22 @@ pub fn parse_response(raw: &[u8]) -> Result<(u16, Vec<u8>), HttpError> {
         .ok_or_else(|| {
             HttpError::BadRequest(format!("malformed status line `{status_line}`"))
         })?;
-    Ok((status, raw[split + 4..].to_vec()))
+    let headers = parse_headers(lines);
+    let content_length: usize = match header(&headers, "content-length") {
+        Some(v) => v.parse().map_err(|_| {
+            HttpError::BadRequest(format!("bad Content-Length `{v}`"))
+        })?,
+        None => 0,
+    };
+    let body = read_body(stream, leftover, content_length)?;
+    Ok((status, headers, body))
+}
+
+/// Minimal client-side response parse for `Connection: close` exchanges:
+/// returns `(status, body)` from the full response bytes.
+pub fn parse_response(raw: &[u8]) -> Result<(u16, Vec<u8>), HttpError> {
+    let (status, _headers, body) = read_response(&mut &raw[..])?;
+    Ok((status, body))
 }
 
 #[cfg(test)]
@@ -190,6 +278,7 @@ mod tests {
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/predict");
         assert_eq!(req.body, b"wxyz");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
     }
 
     #[test]
@@ -199,6 +288,16 @@ mod tests {
         assert_eq!(req.method, "GET");
         assert_eq!(req.path, "/healthz");
         assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn connection_header_controls_keep_alive() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        assert!(!read_request(&mut &raw[..], 1024).unwrap().keep_alive);
+        let raw = b"GET / HTTP/1.0\r\n\r\n";
+        assert!(!read_request(&mut &raw[..], 1024).unwrap().keep_alive, "1.0 defaults to close");
+        let raw = b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+        assert!(read_request(&mut &raw[..], 1024).unwrap().keep_alive);
     }
 
     #[test]
@@ -227,9 +326,32 @@ mod tests {
     #[test]
     fn response_round_trips_through_client_parse() {
         let mut buf = Vec::new();
-        write_json(&mut buf, 200, "OK", "{\"ok\":true}").unwrap();
+        write_json(&mut buf, 200, "OK", "{\"ok\":true}", &WriteOptions::default()).unwrap();
         let (status, body) = parse_response(&buf).unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, b"{\"ok\":true}");
+        assert!(String::from_utf8_lossy(&buf).contains("Connection: close"));
+    }
+
+    #[test]
+    fn keep_alive_response_carries_headers_and_incremental_read_stops() {
+        let mut buf = Vec::new();
+        let opts = WriteOptions {
+            keep_alive: true,
+            idle_timeout_secs: 5,
+            extra_headers: &[("Retry-After", "2".to_string())],
+        };
+        write_json(&mut buf, 429, "Too Many Requests", "{}", &opts).unwrap();
+        let (status, headers, body) = read_response(&mut &buf[..]).unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(body, b"{}");
+        assert_eq!(
+            headers.iter().find(|(n, _)| n == "retry-after").map(|(_, v)| v.as_str()),
+            Some("2")
+        );
+        assert_eq!(
+            headers.iter().find(|(n, _)| n == "connection").map(|(_, v)| v.as_str()),
+            Some("keep-alive")
+        );
     }
 }

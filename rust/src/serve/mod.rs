@@ -1,92 +1,66 @@
-//! The prediction server: a std-only, batched HTTP/1.1 inference service
-//! over a loaded `backbone-model/v1` artifact.
+//! The serving tier: a std-only, multi-model HTTP/1.1 inference service
+//! over `backbone-model/v1` artifacts.
 //!
 //! The ROADMAP's north star is serving backbone models under heavy
-//! traffic; the backbone output is exactly the compact artifact that
-//! makes that cheap. This module is the serving half of the persistence
-//! subsystem (`cli serve --model m.json --port P --threads N`):
+//! traffic; PR 7 grows PR 5/6's one-model, one-request-per-connection
+//! server into a production-grade tier:
 //!
-//! - **No new dependencies** — `std::net::TcpListener` + scoped worker
-//!   threads (`std::thread::scope`), mirroring the PR-2 subproblem
-//!   scheduler idiom: shared immutable state behind an `Arc`, per-worker
-//!   connection handling, atomics for the counters.
-//! - **Batched** — one `POST /predict` carries any number of rows
-//!   (`{"rows": [[...], ...]}`); inference is a single
-//!   [`LoadedModel::predict_scores`] pass over the whole batch (the
-//!   prediction view is derived from it, bit-identical to
-//!   `try_predict`).
-//! - **Observable** — `GET /healthz` for liveness, `GET /stats` for
-//!   request/failure counters and a windowed latency profile
-//!   (mean/p50/p99 over the most recent requests).
+//! - **Keep-alive** — each accepted connection runs a request loop
+//!   (HTTP/1.1 semantics; `Connection: close` opts out) with separate
+//!   read and idle timeouts, so a client paying one TCP handshake can
+//!   stream thousands of predict calls.
+//! - **Multi-model, path-routed** — a versioned [`registry`] holds
+//!   named models (`--model name=path`, pinned) next to online-fitted
+//!   ones (`m1`, `m2`, … bounded FIFO); `POST /models/<id>/predict`
+//!   routes by path, `GET /models` lists the namespace, and
+//!   `PUT /models/<id>` hot-swaps an artifact behind an `Arc` so
+//!   in-flight requests finish on the old version and zero drop.
+//! - **Explicit backpressure** — both fit and predict admission are
+//!   bounded atomic gates answering `429` + `Retry-After` (header and
+//!   structured body) instead of queueing without bound.
+//! - **Redesigned API** — [`ServeConfig::builder()`] with typed
+//!   [`ServeError`]s replaces the public-field bag (kept one release as
+//!   the deprecated `ServeConfigFields` shim), and dispatch is a
+//!   [`router::Route`] trait + registration table instead of an
+//!   if-chain; handlers live in [`routes`].
 //!
 //! The loopback load generator lives in [`selftest`]
-//! (`cli serve --self-test`), which drives a real server over real
-//! sockets and reports p50/p99/req-s in `backbone-bench/v1`-style JSON.
+//! (`cli serve --self-test`): keep-alive vs close-mode phases, optional
+//! paced target-RPS, hot-swap-under-load, and SLO checks, reported as
+//! `backbone-serve-selftest/v1` JSON.
 
+pub mod config;
 pub mod http;
+pub mod registry;
+pub mod router;
+pub mod routes;
 pub mod selftest;
 
+pub use config::{parse_model_spec, validate_model_name, ServeConfig, ServeError};
+#[allow(deprecated)]
+pub use config::ServeConfigFields;
+
 use crate::backbone::resolved_threads;
-use crate::backbone::Backbone;
 use crate::bench_support::percentile;
 use crate::json::Json;
-use crate::linalg::Matrix;
-use crate::persist::{LoadedModel, MODEL_SCHEMA};
-use crate::warmstart::{featurize, suggested_alpha, WarmStartStore};
-use http::{read_request, write_json, Request};
-use std::collections::{BTreeMap, VecDeque};
+use crate::persist::LoadedModel;
+use crate::warmstart::WarmStartStore;
+use http::{read_request, write_json, WriteOptions};
+use registry::ModelRegistry;
+use router::Router;
+use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-/// Server tunables.
-#[derive(Debug, Clone)]
-pub struct ServeConfig {
-    /// Worker threads accepting and handling connections (0 = all cores).
-    pub threads: usize,
-    /// Cap on a request body (the batched rows payload).
-    pub max_body_bytes: usize,
-    /// Per-connection socket read/write timeout.
-    pub io_timeout: Duration,
-    /// Enable `POST /fit` (the online fit path). Off by default: fitting
-    /// is orders of magnitude heavier than inference, so it must be an
-    /// explicit opt-in (`cli serve --fit`).
-    pub enable_fit: bool,
-    /// Bounded queueing for `POST /fit`: at most this many fits run at
-    /// once; excess requests are answered `429` immediately instead of
-    /// occupying a worker thread behind a long solve.
-    pub max_concurrent_fits: usize,
-    /// Bound on models fitted online and held for `/predict` lookup by
-    /// id; the oldest model is evicted first (deterministic FIFO).
-    pub registry_capacity: usize,
-    /// Bound on the warm-start store consulted/updated by `POST /fit`.
-    pub warm_capacity: usize,
-    /// Optional path of a `backbone-warmstart-store/v1` document: loaded
-    /// at bind time (corrupt/missing degrades to an empty store) and
-    /// written back after every successful fit.
-    pub warm_cache_path: Option<String>,
-}
-
-impl Default for ServeConfig {
-    fn default() -> Self {
-        Self {
-            threads: 2,
-            max_body_bytes: 8 * 1024 * 1024,
-            io_timeout: Duration::from_secs(10),
-            enable_fit: false,
-            max_concurrent_fits: 1,
-            registry_capacity: 16,
-            warm_capacity: crate::warmstart::DEFAULT_STORE_CAPACITY,
-            warm_cache_path: None,
-        }
-    }
-}
+/// Schema tag of the `GET /stats` payload.
+pub const STATS_SCHEMA: &str = "backbone-serve-stats/v1";
 
 /// Sliding window of recent request latencies (microseconds). Bounded so
 /// `/stats` stays O(window) regardless of uptime; the lifetime request
 /// count is exact, the latency profile covers the most recent window.
-struct LatencyWindow {
+pub(crate) struct LatencyWindow {
     samples: Vec<u64>,
     next: usize,
     count: u64,
@@ -117,23 +91,29 @@ impl LatencyWindow {
     }
 }
 
-/// Per-route request/failure/latency accounting. `/predict` and `/fit`
-/// each own one of these so they are independently observable in
-/// `GET /stats` — a slow fit queue can never hide in the predict
-/// latency profile (and vice versa).
-struct RouteStats {
+/// Per-route (and per-model) request/failure/latency accounting. Each
+/// endpoint and each registry entry owns one of these so they are
+/// independently observable in `GET /stats` — a slow fit queue can never
+/// hide in the predict latency profile (and vice versa).
+pub struct RouteStats {
     /// Requests routed here (attempts, including ones answered 4xx).
-    requests: AtomicU64,
+    pub(crate) requests: AtomicU64,
     /// Attempts answered with a non-2xx status.
-    failures: AtomicU64,
+    pub(crate) failures: AtomicU64,
     /// Work units completed: rows predicted / models fitted.
-    units: AtomicU64,
+    pub(crate) units: AtomicU64,
     /// Latency of *successful* requests only.
-    latency: Mutex<LatencyWindow>,
+    pub(crate) latency: Mutex<LatencyWindow>,
+}
+
+impl Default for RouteStats {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl RouteStats {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self {
             requests: AtomicU64::new(0),
             failures: AtomicU64::new(0),
@@ -142,7 +122,7 @@ impl RouteStats {
         }
     }
 
-    fn record_ok(&self, units: usize, latency_us: u64) {
+    pub(crate) fn record_ok(&self, units: usize, latency_us: u64) {
         self.units.fetch_add(units as u64, Ordering::Relaxed);
         self.latency.lock().unwrap().record(latency_us);
     }
@@ -189,12 +169,15 @@ impl RouteStats {
     }
 }
 
-/// Request/latency counters surfaced by `GET /stats`.
+/// Whole-server counters surfaced by `GET /stats`.
 pub struct ServerStats {
-    requests: AtomicU64,
-    failures: AtomicU64,
-    predict: RouteStats,
-    fit: RouteStats,
+    pub(crate) requests: AtomicU64,
+    pub(crate) failures: AtomicU64,
+    /// Connections that delivered at least one parseable request — the
+    /// keep-alive reuse denominator (requests_total / connections).
+    pub(crate) connections: AtomicU64,
+    pub(crate) predict: RouteStats,
+    pub(crate) fit: RouteStats,
 }
 
 impl ServerStats {
@@ -202,119 +185,147 @@ impl ServerStats {
         Self {
             requests: AtomicU64::new(0),
             failures: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
             predict: RouteStats::new(),
             fit: RouteStats::new(),
         }
     }
+}
 
-    fn record_predict(&self, rows: usize, latency_us: u64) {
-        self.predict.record_ok(rows, latency_us);
+/// Shared state of a running server: the model registry plus
+/// observability and (when `--fit` is enabled) the online-fit machinery.
+pub struct ServerState {
+    pub(crate) cfg: ServeConfig,
+    pub(crate) stats: ServerStats,
+    pub(crate) started: Instant,
+    pub(crate) shutdown: AtomicBool,
+    pub(crate) threads: usize,
+    /// Fits currently executing; the admission gate for bounded queueing.
+    pub(crate) fits_in_flight: AtomicU64,
+    /// Predicts currently executing; gate when `max_inflight_predicts`>0.
+    pub(crate) predicts_in_flight: AtomicU64,
+    pub(crate) registry: Mutex<ModelRegistry>,
+    pub(crate) warm: Mutex<WarmStartStore>,
+    /// Typed load failure of the warm cache at bind time (the store
+    /// degraded to empty; fits stay cold until it repopulates).
+    pub(crate) warm_error: Option<String>,
+}
+
+impl ServerState {
+    /// Build server state from named startup models (the first name is
+    /// the default) and a validated config. Typed errors for an empty
+    /// model list or invalid/duplicate names.
+    pub fn new(
+        models: Vec<(String, LoadedModel)>,
+        cfg: ServeConfig,
+    ) -> Result<ServerState, ServeError> {
+        if models.is_empty() {
+            return Err(ServeError::NoModels);
+        }
+        let mut registry = ModelRegistry::new(cfg.registry_capacity());
+        for (name, model) in models {
+            registry.register_named(&name, model)?;
+        }
+        let (warm, warm_error) = match cfg.warm_cache_path() {
+            Some(path) => {
+                let (store, err) = WarmStartStore::load_or_empty(path, cfg.warm_capacity());
+                (store, err.map(|e| e.to_string()))
+            }
+            None => (WarmStartStore::new(cfg.warm_capacity()), None),
+        };
+        let threads = resolved_threads(cfg.threads());
+        Ok(ServerState {
+            cfg,
+            stats: ServerStats::new(),
+            started: Instant::now(),
+            shutdown: AtomicBool::new(false),
+            threads,
+            fits_in_flight: AtomicU64::new(0),
+            predicts_in_flight: AtomicU64::new(0),
+            registry: Mutex::new(registry),
+            warm: Mutex::new(warm),
+            warm_error,
+        })
     }
 
-    fn to_json(&self, uptime_secs: f64, threads: usize) -> Json {
+    /// The `backbone-serve-stats/v1` payload. Pre-PR-7 consumers read
+    /// the predict route's numbers at the top level
+    /// (`predict_requests`, `rows_predicted`, `failures`, `latency`);
+    /// those keys are kept as mirrors of `routes.predict` one release
+    /// (see the README deprecation note) next to the versioned layout.
+    pub fn stats_json(&self) -> Json {
         let mut routes = BTreeMap::new();
-        routes.insert("fit".into(), self.fit.to_json("models_fitted"));
-        routes.insert("predict".into(), self.predict.to_json("rows_predicted"));
+        routes.insert("fit".into(), self.stats.fit.to_json("models_fitted"));
+        routes.insert("predict".into(), self.stats.predict.to_json("rows_predicted"));
+
+        let registry = self.registry.lock().unwrap();
+        let mut models = BTreeMap::new();
+        for (id, entry) in registry.iter() {
+            let mut section = entry.stats.to_json("rows_predicted").as_object().cloned().unwrap();
+            section.insert("version".into(), Json::Number(entry.version as f64));
+            section.insert("source".into(), Json::String(entry.source.name().into()));
+            models.insert(id.clone(), Json::Object(section));
+        }
+        let swaps = registry.swaps();
+        drop(registry);
+
         let mut m = BTreeMap::new();
+        m.insert("schema".into(), Json::String(STATS_SCHEMA.into()));
         m.insert(
             "requests_total".into(),
-            Json::Number(self.requests.load(Ordering::Relaxed) as f64),
+            Json::Number(self.stats.requests.load(Ordering::Relaxed) as f64),
         );
-        // Pre-split consumers read the predict route's numbers at the
-        // top level; keep those keys as mirrors of `routes.predict`.
-        let (predict_ok, _) = self.predict.latency.lock().unwrap().snapshot();
+        m.insert(
+            "connections".into(),
+            Json::Number(self.stats.connections.load(Ordering::Relaxed) as f64),
+        );
+        // Legacy top-level mirrors of `routes.predict` (deprecated).
+        let (predict_ok, _) = self.stats.predict.latency.lock().unwrap().snapshot();
         m.insert("predict_requests".into(), Json::Number(predict_ok as f64));
         m.insert(
             "rows_predicted".into(),
-            Json::Number(self.predict.units.load(Ordering::Relaxed) as f64),
+            Json::Number(self.stats.predict.units.load(Ordering::Relaxed) as f64),
         );
         m.insert(
             "failures".into(),
-            Json::Number(self.failures.load(Ordering::Relaxed) as f64),
+            Json::Number(self.stats.failures.load(Ordering::Relaxed) as f64),
         );
-        m.insert("latency".into(), self.predict.latency_json());
+        m.insert("latency".into(), self.stats.predict.latency_json());
         m.insert("routes".into(), Json::Object(routes));
-        m.insert("uptime_secs".into(), Json::from_f64(uptime_secs));
-        m.insert("threads".into(), Json::Number(threads as f64));
+        m.insert("models".into(), Json::Object(models));
+        m.insert("swaps".into(), Json::Number(swaps as f64));
+        m.insert(
+            "fits_in_flight".into(),
+            Json::Number(self.fits_in_flight.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "uptime_secs".into(),
+            Json::from_f64(self.started.elapsed().as_secs_f64()),
+        );
+        m.insert("threads".into(), Json::Number(self.threads as f64));
         Json::Object(m)
     }
 }
 
-/// Models fitted online through `POST /fit`, addressable from
-/// `/predict` by id. Bounded: the oldest model is evicted first, so a
-/// long-running fit service cannot grow without limit. Ids are assigned
-/// from a monotone counter (`m1`, `m2`, …) — deterministic for a given
-/// request order, never wall clock.
-struct ModelRegistry {
-    models: BTreeMap<String, Arc<LoadedModel>>,
-    order: VecDeque<String>,
-    next_id: u64,
-    capacity: usize,
+/// Structured JSON error body shared by every non-2xx path.
+pub(crate) fn error_body(message: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::String(message.into()));
+    Json::Object(m).to_string_compact()
 }
 
-impl ModelRegistry {
-    fn new(capacity: usize) -> Self {
-        Self {
-            models: BTreeMap::new(),
-            order: VecDeque::new(),
-            next_id: 0,
-            capacity: capacity.max(1),
-        }
-    }
-
-    fn insert(&mut self, model: LoadedModel) -> String {
-        self.next_id += 1;
-        let id = format!("m{}", self.next_id);
-        self.models.insert(id.clone(), Arc::new(model));
-        self.order.push_back(id.clone());
-        while self.models.len() > self.capacity {
-            if let Some(old) = self.order.pop_front() {
-                self.models.remove(&old);
-            }
-        }
-        id
-    }
-
-    fn get(&self, id: &str) -> Option<Arc<LoadedModel>> {
-        self.models.get(id).cloned()
-    }
-
-    fn len(&self) -> usize {
-        self.models.len()
-    }
-}
-
-/// Shared state of a running server: the model plus observability and
-/// (when `--fit` is enabled) the online-fit machinery.
-pub struct ServerState {
-    model: LoadedModel,
-    stats: ServerStats,
-    started: Instant,
-    shutdown: AtomicBool,
-    threads: usize,
-    max_body: usize,
-    io_timeout: Duration,
-    fit_enabled: bool,
-    /// Fits currently executing; the admission gate for bounded queueing.
-    fits_in_flight: AtomicU64,
-    max_concurrent_fits: u64,
-    registry: Mutex<ModelRegistry>,
-    warm: Mutex<WarmStartStore>,
-    /// Typed load failure of the warm cache at bind time (the store
-    /// degraded to empty; fits stay cold until it repopulates).
-    warm_error: Option<String>,
-    warm_cache_path: Option<String>,
-}
-
-/// A bound (but not yet running) prediction server.
+/// A bound (but not yet running) server.
 pub struct Server {
     listener: TcpListener,
     state: Arc<ServerState>,
+    router: Arc<Router>,
 }
 
 /// Handle for stopping a running server from another thread: sets the
 /// shutdown flag, then pokes the listener once per worker so every
-/// blocked `accept` wakes up and observes it.
+/// blocked `accept` wakes up and observes it. Workers inside a
+/// keep-alive request loop exit at the next request boundary (or when
+/// their client hangs up / the idle timeout fires).
 pub struct ShutdownHandle {
     addr: SocketAddr,
     state: Arc<ServerState>,
@@ -331,33 +342,28 @@ impl ShutdownHandle {
 
 impl Server {
     /// Bind `addr` (e.g. `"127.0.0.1:8000"`; port 0 for an ephemeral
-    /// port) and prepare to serve `model`.
+    /// port) and serve `model` under the name `default`.
     pub fn bind(addr: &str, model: LoadedModel, cfg: &ServeConfig) -> std::io::Result<Server> {
+        Self::bind_registry(addr, vec![("default".to_string(), model)], cfg)
+    }
+
+    /// Bind with a named model registry; the first name is the default
+    /// for unqualified `/predict`. Config/name errors arrive as
+    /// `ErrorKind::InvalidInput` with the typed [`ServeError`]
+    /// downcastable from the error source.
+    pub fn bind_registry(
+        addr: &str,
+        models: Vec<(String, LoadedModel)>,
+        cfg: &ServeConfig,
+    ) -> std::io::Result<Server> {
+        let state = ServerState::new(models, cfg.clone())
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidInput, e))?;
         let listener = TcpListener::bind(addr)?;
-        let (warm, warm_error) = match &cfg.warm_cache_path {
-            Some(path) => {
-                let (store, err) = WarmStartStore::load_or_empty(path, cfg.warm_capacity);
-                (store, err.map(|e| e.to_string()))
-            }
-            None => (WarmStartStore::new(cfg.warm_capacity), None),
-        };
-        let state = Arc::new(ServerState {
-            model,
-            stats: ServerStats::new(),
-            started: Instant::now(),
-            shutdown: AtomicBool::new(false),
-            threads: resolved_threads(cfg.threads),
-            max_body: cfg.max_body_bytes,
-            io_timeout: cfg.io_timeout,
-            fit_enabled: cfg.enable_fit,
-            fits_in_flight: AtomicU64::new(0),
-            max_concurrent_fits: cfg.max_concurrent_fits.max(1) as u64,
-            registry: Mutex::new(ModelRegistry::new(cfg.registry_capacity)),
-            warm: Mutex::new(warm),
-            warm_error,
-            warm_cache_path: cfg.warm_cache_path.clone(),
-        });
-        Ok(Server { listener, state })
+        Ok(Server {
+            listener,
+            state: Arc::new(state),
+            router: Arc::new(routes::standard_router()),
+        })
     }
 
     /// Address the server is listening on (resolves port 0).
@@ -382,6 +388,7 @@ impl Server {
     pub fn run(self) {
         let listener = &self.listener;
         let state = &self.state;
+        let router = &self.router;
         std::thread::scope(|scope| {
             for _ in 0..state.threads {
                 scope.spawn(move || {
@@ -393,14 +400,14 @@ impl Server {
                             // Persistent accept failures (e.g. fd
                             // exhaustion) must not become a busy-spin
                             // that starves the connections already open.
-                            std::thread::sleep(Duration::from_millis(10));
+                            std::thread::sleep(std::time::Duration::from_millis(10));
                             continue;
                         };
                         // Serve whatever was accepted even if shutdown
                         // raced in — a real client that won the race gets
                         // its response; a ShutdownHandle poke reads as an
                         // instant EOF and is dropped without counters.
-                        handle_connection(stream, state);
+                        handle_connection(stream, state, router);
                         if state.shutdown.load(Ordering::SeqCst) {
                             return;
                         }
@@ -411,408 +418,78 @@ impl Server {
     }
 }
 
-fn handle_connection(mut stream: TcpStream, state: &ServerState) {
-    let _ = stream.set_read_timeout(Some(state.io_timeout));
-    let _ = stream.set_write_timeout(Some(state.io_timeout));
-    let request = match read_request(&mut stream, state.max_body) {
-        Ok(req) => req,
-        Err(e) => {
-            // Only connections we actually answer enter the counters; a
-            // bare connect-then-close (TCP health probe, shutdown poke)
-            // is an Io error and stays invisible, so /stats failure
-            // rates reflect served traffic, not probing.
-            if let Some((status, reason)) = e.status() {
-                state.stats.requests.fetch_add(1, Ordering::Relaxed);
-                state.stats.failures.fetch_add(1, Ordering::Relaxed);
-                let _ = write_json(&mut stream, status, reason, &error_body(&e.message()));
+/// One connection's request loop. With keep-alive on, a worker stays
+/// with the connection until the client closes, the idle timeout fires,
+/// a parse error forces a close, shutdown is raised, or the per-conn
+/// request cap is hit — whichever comes first.
+fn handle_connection(mut stream: TcpStream, state: &ServerState, router: &Router) {
+    let cfg = &state.cfg;
+    let _ = stream.set_write_timeout(Some(cfg.read_timeout()));
+    let mut served: usize = 0;
+    loop {
+        // First request gets the (longer) read timeout; between requests
+        // the idle timeout decides how long the worker waits for reuse.
+        let timeout = if served == 0 { cfg.read_timeout() } else { cfg.idle_timeout() };
+        let _ = stream.set_read_timeout(Some(timeout));
+        let request = match read_request(&mut stream, cfg.max_body_bytes()) {
+            Ok(req) => req,
+            Err(e) => {
+                // Only connections we actually answer enter the
+                // counters; a bare connect-then-close (TCP health probe,
+                // shutdown poke, keep-alive peer hanging up between
+                // requests, idle timeout) is an Io error and stays
+                // invisible, so /stats failure rates reflect served
+                // traffic, not probing.
+                if let Some((status, reason)) = e.status() {
+                    state.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    state.stats.failures.fetch_add(1, Ordering::Relaxed);
+                    if served == 0 {
+                        state.stats.connections.fetch_add(1, Ordering::Relaxed);
+                    }
+                    let _ = write_json(
+                        &mut stream,
+                        status,
+                        reason,
+                        &error_body(&e.message()),
+                        &WriteOptions::default(),
+                    );
+                }
+                return;
             }
+        };
+        state.stats.requests.fetch_add(1, Ordering::Relaxed);
+        if served == 0 {
+            state.stats.connections.fetch_add(1, Ordering::Relaxed);
+        }
+        let outcome = router.dispatch(&request, state);
+        if outcome.failed() {
+            state.stats.failures.fetch_add(1, Ordering::Relaxed);
+        }
+        served += 1;
+        let keep = cfg.keep_alive()
+            && request.keep_alive
+            && !state.shutdown.load(Ordering::SeqCst)
+            && (cfg.max_requests_per_conn() == 0 || served < cfg.max_requests_per_conn());
+        let mut extra: Vec<(&'static str, String)> = Vec::new();
+        if let Some(secs) = outcome.retry_after_secs {
+            extra.push(("Retry-After", secs.to_string()));
+        }
+        let opts = WriteOptions {
+            keep_alive: keep,
+            idle_timeout_secs: cfg.idle_timeout().as_secs(),
+            extra_headers: &extra,
+        };
+        if write_json(&mut stream, outcome.status, outcome.reason, &outcome.body, &opts)
+            .is_err()
+            || !keep
+        {
             return;
         }
-    };
-    state.stats.requests.fetch_add(1, Ordering::Relaxed);
-    let outcome = route(&request, state);
-    let failed = !(200..300).contains(&outcome.status);
-    if failed {
-        state.stats.failures.fetch_add(1, Ordering::Relaxed);
     }
-    let _ = write_json(&mut stream, outcome.status, outcome.reason, &outcome.body);
-}
-
-struct Outcome {
-    status: u16,
-    reason: &'static str,
-    body: String,
-}
-
-fn ok(body: Json) -> Outcome {
-    Outcome { status: 200, reason: "OK", body: body.to_string_compact() }
-}
-
-fn error(status: u16, reason: &'static str, message: &str) -> Outcome {
-    Outcome { status, reason, body: error_body(message) }
-}
-
-fn error_body(message: &str) -> String {
-    let mut m = BTreeMap::new();
-    m.insert("error".to_string(), Json::String(message.into()));
-    Json::Object(m).to_string_compact()
-}
-
-fn route(request: &Request, state: &ServerState) -> Outcome {
-    match (request.method.as_str(), request.path.as_str()) {
-        ("GET", "/healthz") => ok(health_json(state)),
-        ("GET", "/stats") => ok(state
-            .stats
-            .to_json(state.started.elapsed().as_secs_f64(), state.threads)),
-        ("POST", "/predict") => noted(&state.stats.predict, predict(request, state)),
-        ("POST", "/fit") if state.fit_enabled => noted(&state.stats.fit, fit(request, state)),
-        ("POST", "/fit") => error(
-            403,
-            "Forbidden",
-            "fit endpoint disabled; start the server with --fit",
-        ),
-        ("GET" | "HEAD", "/predict") => {
-            error(405, "Method Not Allowed", "use POST /predict with a JSON body")
-        }
-        ("GET" | "HEAD", "/fit") => {
-            error(405, "Method Not Allowed", "use POST /fit with a JSON body")
-        }
-        _ => error(
-            404,
-            "Not Found",
-            "routes: POST /predict, POST /fit, GET /healthz, GET /stats",
-        ),
-    }
-}
-
-/// Enter `outcome` into a route's attempt/failure counters (success
-/// latency/units were already recorded by the handler itself).
-fn noted(route_stats: &RouteStats, outcome: Outcome) -> Outcome {
-    route_stats.requests.fetch_add(1, Ordering::Relaxed);
-    if !(200..300).contains(&outcome.status) {
-        route_stats.failures.fetch_add(1, Ordering::Relaxed);
-    }
-    outcome
-}
-
-fn health_json(state: &ServerState) -> Json {
-    let mut m = BTreeMap::new();
-    m.insert("status".into(), Json::String("ok".into()));
-    m.insert("schema".into(), Json::String(MODEL_SCHEMA.into()));
-    m.insert("learner".into(), Json::String(state.model.kind().name().into()));
-    if let Some(p) = state.model.num_features() {
-        m.insert("num_features".into(), Json::Number(p as f64));
-    }
-    if let Some(n) = state.model.expected_rows() {
-        m.insert("expected_rows".into(), Json::Number(n as f64));
-    }
-    m.insert("fit_enabled".into(), Json::Bool(state.fit_enabled));
-    if state.fit_enabled {
-        m.insert(
-            "models_online".into(),
-            Json::Number(state.registry.lock().unwrap().len() as f64),
-        );
-        m.insert(
-            "warm_store_entries".into(),
-            Json::Number(state.warm.lock().unwrap().len() as f64),
-        );
-        if let Some(err) = &state.warm_error {
-            m.insert("warm_store_error".into(), Json::String(err.clone()));
-        }
-    }
-    m.insert(
-        "uptime_secs".into(),
-        Json::from_f64(state.started.elapsed().as_secs_f64()),
-    );
-    Json::Object(m)
-}
-
-/// `POST /predict`: parse the batched rows, run one batch inference,
-/// answer with predictions (plus scores for the classifiers). An
-/// optional `"model"` field addresses a model fitted online through
-/// `POST /fit`; without it, the model the server was started with.
-fn predict(request: &Request, state: &ServerState) -> Outcome {
-    let started = Instant::now();
-    let text = match std::str::from_utf8(&request.body) {
-        Ok(t) => t,
-        Err(_) => return error(400, "Bad Request", "body is not UTF-8"),
-    };
-    let doc = match Json::parse(text) {
-        Ok(d) => d,
-        Err(e) => return error(400, "Bad Request", &format!("body is not JSON: {e:#}")),
-    };
-    let rows = match parse_matrix(&doc, "rows") {
-        Ok(r) => r,
-        Err(message) => return error(400, "Bad Request", &message),
-    };
-    let online = match doc.get("model").and_then(Json::as_str) {
-        Some(id) => match state.registry.lock().unwrap().get(id) {
-            Some(m) => Some(m),
-            None => {
-                return error(
-                    404,
-                    "Not Found",
-                    &format!("unknown model id `{id}` (evicted or never fitted)"),
-                );
-            }
-        },
-        None => None,
-    };
-    let model: &LoadedModel = online.as_deref().unwrap_or(&state.model);
-    let x = Matrix::from_rows(&rows);
-    // One inference per request: scores are the expensive pass, the
-    // prediction view is derived from them (bit-identical to
-    // try_predict by the predictions_from_scores contract).
-    let scores = match model.predict_scores(&x) {
-        Ok(s) => s,
-        Err(e) => return error(400, "Bad Request", &e.to_string()),
-    };
-    let predictions = model.predictions_from_scores(&scores);
-    let latency_us = started.elapsed().as_micros() as u64;
-    state.stats.record_predict(rows.len(), latency_us);
-
-    let mut m = BTreeMap::new();
-    m.insert(
-        "predictions".into(),
-        Json::Array(predictions.iter().map(|&p| Json::from_f64(p)).collect()),
-    );
-    if model.kind().is_classifier() {
-        m.insert(
-            "scores".into(),
-            Json::Array(scores.iter().map(|&s| Json::from_f64(s)).collect()),
-        );
-    }
-    m.insert("rows".into(), Json::Number(rows.len() as f64));
-    m.insert("latency_us".into(), Json::Number(latency_us as f64));
-    ok(Json::Object(m))
-}
-
-/// `POST /fit`: fit a sparse-regression model online and register it
-/// for `/predict` by id. Body:
-///
-/// ```json
-/// {"x": [[...], ...], "y": [...], "k": 5,
-///  "alpha": 0.5, "beta": 0.5, "m": 5, "seed": 0, "warm": true}
-/// ```
-///
-/// Only `x`, `y`, `k` are required. With `"warm"` (default true) the
-/// warm-start store is consulted first: an exact feature match serves
-/// the cached solution immediately (no solve), a near neighbor
-/// warm-starts the backbone with a shrunk screening fraction, and every
-/// solved fit is written back to the store.
-fn fit(request: &Request, state: &ServerState) -> Outcome {
-    // Bounded queueing: admission is a single atomic increment; a full
-    // queue is answered 429 immediately instead of parking a worker
-    // thread behind someone else's solve.
-    let in_flight = state.fits_in_flight.fetch_add(1, Ordering::SeqCst);
-    let outcome = if in_flight >= state.max_concurrent_fits {
-        error(
-            429,
-            "Too Many Requests",
-            "fit queue is full; retry after the running fit completes",
-        )
-    } else {
-        fit_inner(request, state)
-    };
-    state.fits_in_flight.fetch_sub(1, Ordering::SeqCst);
-    outcome
-}
-
-fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
-    let started = Instant::now();
-    let text = match std::str::from_utf8(&request.body) {
-        Ok(t) => t,
-        Err(_) => return error(400, "Bad Request", "body is not UTF-8"),
-    };
-    let doc = match Json::parse(text) {
-        Ok(d) => d,
-        Err(e) => return error(400, "Bad Request", &format!("body is not JSON: {e:#}")),
-    };
-    let rows = match parse_matrix(&doc, "x") {
-        Ok(r) => r,
-        Err(message) => return error(400, "Bad Request", &message),
-    };
-    let y: Vec<f64> = match doc.get("y").and_then(Json::as_array) {
-        Some(arr) => {
-            let mut out = Vec::with_capacity(arr.len());
-            for (i, v) in arr.iter().enumerate() {
-                match v.as_f64_tagged().filter(|v| v.is_finite()) {
-                    Some(v) => out.push(v),
-                    None => {
-                        return error(
-                            400,
-                            "Bad Request",
-                            &format!("y[{i}] is not a finite number"),
-                        );
-                    }
-                }
-            }
-            out
-        }
-        None => return error(400, "Bad Request", "body must have a `y` array"),
-    };
-    if y.len() != rows.len() {
-        return error(
-            400,
-            "Bad Request",
-            &format!("x has {} rows but y has {} values", rows.len(), y.len()),
-        );
-    }
-    let Some(k) = doc.get("k").and_then(Json::as_usize).filter(|&k| k >= 1) else {
-        return error(400, "Bad Request", "body must have an integer `k` ≥ 1");
-    };
-    let x = Matrix::from_rows(&rows);
-    if k > x.cols() {
-        return error(400, "Bad Request", "`k` exceeds the number of columns in `x`");
-    }
-    let alpha = doc.get("alpha").and_then(Json::as_f64_tagged).unwrap_or(0.5);
-    let beta = doc.get("beta").and_then(Json::as_f64_tagged).unwrap_or(0.5);
-    let m_sub = doc.get("m").and_then(Json::as_usize).unwrap_or(5);
-    let seed = doc.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
-    let warm_wanted = doc.get("warm").and_then(Json::as_bool).unwrap_or(true);
-
-    let features = featurize(&x, &y, k);
-    let suggestion = if warm_wanted {
-        state.warm.lock().unwrap().suggest(&features)
-    } else {
-        None
-    };
-
-    let mut warm_info = BTreeMap::new();
-    warm_info.insert("enabled".into(), Json::Bool(warm_wanted));
-    if let Some(err) = &state.warm_error {
-        warm_info.insert("store_error".into(), Json::String(err.clone()));
-    }
-
-    // Exact feature match: the instance was fitted before, so the cached
-    // solution *is* the solution — serve it immediately (mlopt-style
-    // "online MIO in milliseconds") through the same registry path.
-    if let Some(w) = suggestion.as_ref().filter(|w| w.exact && w.beta.len() == x.cols()) {
-        let model = crate::backbone::sparse_regression::SparseRegressionModel {
-            beta: w.beta.clone(),
-            intercept: w.intercept,
-            support: w.support.clone(),
-            objective: w.objective,
-            gap: f64::NAN,
-            status: crate::solvers::SolveStatus::Optimal,
-        };
-        let model_id =
-            state.registry.lock().unwrap().insert(LoadedModel::SparseRegression(model));
-        warm_info.insert("hit".into(), Json::String("exact".into()));
-        warm_info.insert("distance".into(), Json::from_f64(0.0));
-        let latency_us = started.elapsed().as_micros() as u64;
-        state.stats.fit.record_ok(1, latency_us);
-        return ok(fit_response(
-            model_id,
-            &w.support,
-            w.objective,
-            w.support.len(),
-            latency_us,
-            warm_info,
-            state,
-        ));
-    }
-
-    // Cold or neighbor-warm solve. A neighbor supplies the warm iterate
-    // and a shrunk screening fraction; its support is seeded into the
-    // universe so the small alpha cannot screen it out.
-    let (fit_alpha, warm_beta) = match &suggestion {
-        Some(w) if w.beta.len() == x.cols() => {
-            warm_info.insert("hit".into(), Json::String("neighbor".into()));
-            warm_info.insert("distance".into(), Json::from_f64(w.distance));
-            (suggested_alpha(x.cols(), k), Some(w.beta.clone()))
-        }
-        _ => {
-            warm_info.insert("hit".into(), Json::String("none".into()));
-            (alpha, None)
-        }
-    };
-    let mut builder = Backbone::sparse_regression()
-        .alpha(fit_alpha)
-        .beta(beta)
-        .num_subproblems(m_sub)
-        .max_nonzeros(k)
-        .seed(seed);
-    if let Some(w) = warm_beta {
-        builder = builder.warm_start(w);
-    }
-    let mut bb = match builder.build() {
-        Ok(bb) => bb,
-        Err(e) => return error(400, "Bad Request", &e.to_string()),
-    };
-    let model = match bb.fit(&x, &y) {
-        Ok(m) => m.clone(),
-        Err(e) => return error(400, "Bad Request", &e.to_string()),
-    };
-
-    // Write-through: remember this fit for future instances, and persist
-    // the store when the server was given a cache path.
-    {
-        let mut store = state.warm.lock().unwrap();
-        let coefficients: Vec<f64> =
-            model.support.iter().map(|&j| model.beta[j]).collect();
-        store.record(
-            &features,
-            &model.support,
-            &coefficients,
-            model.intercept,
-            model.objective,
-            fit_alpha,
-        );
-        if let Some(path) = &state.warm_cache_path {
-            if let Err(e) = store.save(path) {
-                eprintln!("warning: {e}");
-            }
-        }
-    }
-
-    let support = model.support.clone();
-    let objective = model.objective;
-    let backbone_size =
-        bb.last_diagnostics.as_ref().map(|d| d.backbone_size).unwrap_or(support.len());
-    let model_id =
-        state.registry.lock().unwrap().insert(LoadedModel::SparseRegression(model));
-    let latency_us = started.elapsed().as_micros() as u64;
-    state.stats.fit.record_ok(1, latency_us);
-    ok(fit_response(
-        model_id,
-        &support,
-        objective,
-        backbone_size,
-        latency_us,
-        warm_info,
-        state,
-    ))
-}
-
-fn fit_response(
-    model_id: String,
-    support: &[usize],
-    objective: f64,
-    backbone_size: usize,
-    latency_us: u64,
-    mut warm_info: BTreeMap<String, Json>,
-    state: &ServerState,
-) -> Json {
-    warm_info.insert(
-        "store_entries".into(),
-        Json::Number(state.warm.lock().unwrap().len() as f64),
-    );
-    let mut m = BTreeMap::new();
-    m.insert("model_id".into(), Json::String(model_id));
-    m.insert(
-        "support".into(),
-        Json::Array(support.iter().map(|&j| Json::Number(j as f64)).collect()),
-    );
-    m.insert("objective".into(), Json::from_f64(objective));
-    m.insert("backbone_size".into(), Json::Number(backbone_size as f64));
-    m.insert("latency_us".into(), Json::Number(latency_us as f64));
-    m.insert("warm".into(), Json::Object(warm_info));
-    Json::Object(m)
 }
 
 /// Extract `{"<key>": [[...], ...]}` as a rectangular f64 batch.
-fn parse_matrix(doc: &Json, key: &str) -> Result<Vec<Vec<f64>>, String> {
+pub(crate) fn parse_matrix(doc: &Json, key: &str) -> Result<Vec<Vec<f64>>, String> {
     let rows = doc
         .get(key)
         .and_then(Json::as_array)
@@ -851,19 +528,27 @@ fn parse_matrix(doc: &Json, key: &str) -> Result<Vec<Vec<f64>>, String> {
 
 #[cfg(test)]
 mod tests {
+    use super::http::Request;
+    use super::router::Outcome;
     use super::*;
-    use crate::persist::LoadedModel;
+    use crate::persist::{LoadedModel, ModelArtifact, Provenance};
     use crate::solvers::SolveStatus;
 
+    fn toy_model_with_intercept(intercept: f64) -> LoadedModel {
+        LoadedModel::SparseRegression(
+            crate::backbone::sparse_regression::SparseRegressionModel {
+                beta: vec![2.0, 0.0, -1.0],
+                intercept,
+                support: vec![0, 2],
+                objective: 1.0,
+                gap: 0.0,
+                status: SolveStatus::Optimal,
+            },
+        )
+    }
+
     fn toy_model() -> LoadedModel {
-        LoadedModel::SparseRegression(crate::backbone::sparse_regression::SparseRegressionModel {
-            beta: vec![2.0, 0.0, -1.0],
-            intercept: 0.5,
-            support: vec![0, 2],
-            objective: 1.0,
-            gap: 0.0,
-            status: SolveStatus::Optimal,
-        })
+        toy_model_with_intercept(0.5)
     }
 
     fn toy_state() -> ServerState {
@@ -871,30 +556,36 @@ mod tests {
     }
 
     fn toy_state_with(fit_enabled: bool) -> ServerState {
-        ServerState {
-            model: toy_model(),
-            stats: ServerStats::new(),
-            started: Instant::now(),
-            shutdown: AtomicBool::new(false),
-            threads: 1,
-            max_body: 1024,
-            io_timeout: Duration::from_secs(1),
-            fit_enabled,
-            fits_in_flight: AtomicU64::new(0),
-            max_concurrent_fits: 1,
-            registry: Mutex::new(ModelRegistry::new(4)),
-            warm: Mutex::new(WarmStartStore::new(8)),
-            warm_error: None,
-            warm_cache_path: None,
+        let cfg = ServeConfig::builder()
+            .threads(1)
+            .max_body_bytes(64 * 1024)
+            .enable_fit(fit_enabled)
+            .registry_capacity(4)
+            .warm_capacity(8)
+            .build()
+            .unwrap();
+        ServerState::new(vec![("default".to_string(), toy_model())], cfg).unwrap()
+    }
+
+    fn route(request: &Request, state: &ServerState) -> Outcome {
+        routes::standard_router().dispatch(request, state)
+    }
+
+    fn req(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            body: body.into(),
+            keep_alive: true,
         }
     }
 
     fn post_predict(body: &str) -> Request {
-        Request { method: "POST".into(), path: "/predict".into(), body: body.into() }
+        req("POST", "/predict", body)
     }
 
     fn post_fit(body: &str) -> Request {
-        Request { method: "POST".into(), path: "/fit".into(), body: body.into() }
+        req("POST", "/fit", body)
     }
 
     #[test]
@@ -907,7 +598,24 @@ mod tests {
         assert_eq!(preds[0].as_f64(), Some(2.5)); // 2*1 + 0.5
         assert_eq!(preds[1].as_f64(), Some(-0.5)); // -1*1 + 0.5
         assert_eq!(doc.get("rows").and_then(Json::as_usize), Some(2));
+        assert_eq!(doc.get("model").and_then(Json::as_str), Some("default"));
+        assert_eq!(doc.get("model_version").and_then(Json::as_usize), Some(1));
         assert_eq!(state.stats.predict.units.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn path_routed_predict_addresses_models_by_name() {
+        let state = toy_state();
+        let out = route(&req("POST", "/models/default/predict", r#"{"rows": [[1, 0, 0]]}"#), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
+        let doc = Json::parse(&out.body).unwrap();
+        assert_eq!(doc.get("model").and_then(Json::as_str), Some("default"));
+        // Unknown ids are a clean 404.
+        let out = route(&req("POST", "/models/nope/predict", r#"{"rows": [[1, 0, 0]]}"#), &state);
+        assert_eq!(out.status, 404, "{}", out.body);
+        // Per-model stats recorded under the entry.
+        let entry = state.registry.lock().unwrap().get("default").unwrap();
+        assert_eq!(entry.stats.units.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -934,24 +642,31 @@ mod tests {
     #[test]
     fn unknown_routes_and_methods() {
         let state = toy_state();
-        let req = Request { method: "GET".into(), path: "/nope".into(), body: vec![] };
-        assert_eq!(route(&req, &state).status, 404);
-        let req = Request { method: "GET".into(), path: "/predict".into(), body: vec![] };
-        assert_eq!(route(&req, &state).status, 405);
+        let out = route(&req("GET", "/nope", ""), &state);
+        assert_eq!(out.status, 404);
+        assert!(out.body.contains("POST /predict"), "404 lists routes: {}", out.body);
+        let out = route(&req("GET", "/predict", ""), &state);
+        assert_eq!(out.status, 405);
+        assert!(out.body.contains("POST"), "405 names the allowed method: {}", out.body);
+        let out = route(&req("GET", "/models/default/predict", ""), &state);
+        assert_eq!(out.status, 405);
     }
 
     #[test]
-    fn stats_json_reflects_recorded_latencies() {
+    fn stats_json_is_versioned_with_legacy_mirrors() {
         let state = toy_state();
         for us in [100, 200, 300] {
-            state.stats.record_predict(1, us);
+            state.stats.predict.record_ok(1, us);
         }
-        let doc = state.stats.to_json(1.0, 4);
+        let doc = state.stats_json();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(STATS_SCHEMA));
+        // Legacy top-level mirrors (pre-PR-7 consumers).
         let lat = doc.get("latency").unwrap();
         assert_eq!(lat.get("count").and_then(Json::as_usize), Some(3));
         assert_eq!(lat.get("p50_us").and_then(Json::as_f64), Some(200.0));
         assert_eq!(doc.get("rows_predicted").and_then(Json::as_usize), Some(3));
-        assert_eq!(doc.get("threads").and_then(Json::as_usize), Some(4));
+        assert_eq!(doc.get("predict_requests").and_then(Json::as_usize), Some(3));
+        assert_eq!(doc.get("threads").and_then(Json::as_usize), Some(1));
         // Per-route split: predict and fit are independently observable.
         let routes = doc.get("routes").unwrap();
         let predict = routes.get("predict").unwrap();
@@ -963,10 +678,96 @@ mod tests {
         let fit = routes.get("fit").unwrap();
         assert_eq!(fit.get("models_fitted").and_then(Json::as_usize), Some(0));
         assert_eq!(fit.get("requests").and_then(Json::as_usize), Some(0));
+        // Per-model sections with version + source.
+        let models = doc.get("models").unwrap();
+        let default = models.get("default").unwrap();
+        assert_eq!(default.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(default.get("source").and_then(Json::as_str), Some("startup"));
+        assert_eq!(doc.get("swaps").and_then(Json::as_usize), Some(0));
+        assert_eq!(doc.get("connections").and_then(Json::as_usize), Some(0));
+    }
+
+    fn artifact_body(intercept: f64) -> String {
+        ModelArtifact {
+            model: toy_model_with_intercept(intercept),
+            provenance: Provenance {
+                crate_version: "test".into(),
+                seed: 0,
+                params: Json::Object(BTreeMap::new()),
+                config: Json::Object(BTreeMap::new()),
+                diagnostics: None,
+            },
+        }
+        .to_json()
+        .to_string_compact()
+    }
+
+    #[test]
+    fn hot_swap_bumps_version_and_switches_predictions() {
+        let state = toy_state();
+        let out = route(&req("PUT", "/models/default", &artifact_body(100.5)), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
+        let doc = Json::parse(&out.body).unwrap();
+        assert_eq!(doc.get("version").and_then(Json::as_usize), Some(2));
+        // Predictions now come from the swapped model at version 2.
+        let out = route(&post_predict(r#"{"rows": [[1, 0, 0]]}"#), &state);
+        let doc = Json::parse(&out.body).unwrap();
+        let pred = doc.get("predictions").unwrap().as_array().unwrap()[0].as_f64().unwrap();
+        assert_eq!(pred, 102.5); // 2*1 + 100.5
+        assert_eq!(doc.get("model_version").and_then(Json::as_usize), Some(2));
+        // Swapping a brand-new name creates it at version 1.
+        let out = route(&req("PUT", "/models/canary", &artifact_body(0.0)), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
         assert_eq!(
-            fit.get("latency").unwrap().get("count").and_then(Json::as_usize),
-            Some(0)
+            Json::parse(&out.body).unwrap().get("version").and_then(Json::as_usize),
+            Some(1)
         );
+        // Fitted m{n} ids are read-only swap targets.
+        let out = route(&req("PUT", "/models/m1", &artifact_body(0.0)), &state);
+        assert_eq!(out.status, 409, "{}", out.body);
+        // Garbage bodies are a 400, not a swap.
+        let out = route(&req("PUT", "/models/default", r#"{"schema": "nope"}"#), &state);
+        assert_eq!(out.status, 400, "{}", out.body);
+        assert_eq!(
+            state.registry.lock().unwrap().get("default").unwrap().version,
+            2,
+            "failed swap must not bump the version"
+        );
+    }
+
+    #[test]
+    fn models_listing_reports_the_namespace() {
+        let state = toy_state();
+        let out = route(&req("GET", "/models", ""), &state);
+        assert_eq!(out.status, 200);
+        let doc = Json::parse(&out.body).unwrap();
+        assert_eq!(doc.get("schema").and_then(Json::as_str), Some(routes::MODELS_SCHEMA));
+        assert_eq!(doc.get("default").and_then(Json::as_str), Some("default"));
+        assert_eq!(doc.get("count").and_then(Json::as_usize), Some(1));
+        let models = doc.get("models").unwrap().as_array().unwrap();
+        assert_eq!(models[0].get("id").and_then(Json::as_str), Some("default"));
+        assert_eq!(models[0].get("source").and_then(Json::as_str), Some("startup"));
+    }
+
+    #[test]
+    fn predict_gate_returns_429_with_retry_after() {
+        let cfg = ServeConfig::builder()
+            .max_inflight_predicts(1)
+            .retry_after_secs(3)
+            .build()
+            .unwrap();
+        let state =
+            ServerState::new(vec![("default".to_string(), toy_model())], cfg).unwrap();
+        // Simulate a predict already in flight; the gate must bounce us.
+        state.predicts_in_flight.store(1, Ordering::SeqCst);
+        let out = route(&post_predict(r#"{"rows": [[1, 0, 0]]}"#), &state);
+        assert_eq!(out.status, 429, "{}", out.body);
+        assert_eq!(out.retry_after_secs, Some(3));
+        let doc = Json::parse(&out.body).unwrap();
+        assert_eq!(doc.get("retry_after_secs").and_then(Json::as_usize), Some(3));
+        state.predicts_in_flight.store(0, Ordering::SeqCst);
+        let out = route(&post_predict(r#"{"rows": [[1, 0, 0]]}"#), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
     }
 
     /// Tiny deterministic fit body: y = 2·x₀ on 8 rows of 3 features.
@@ -999,15 +800,19 @@ mod tests {
         assert_eq!(warm.get("store_entries").and_then(Json::as_usize), Some(1));
         assert_eq!(state.stats.fit.units.load(Ordering::Relaxed), 1);
 
-        // The fitted model serves /predict by id...
-        let body = format!(r#"{{"rows": [[10, 0, 0]], "model": "{model_id}"}}"#);
-        let out = route(&post_predict(&body), &state);
+        // The fitted model serves by path route...
+        let body = r#"{"rows": [[10, 0, 0]]}"#;
+        let out = route(&req("POST", &format!("/models/{model_id}/predict"), body), &state);
         assert_eq!(out.status, 200, "{}", out.body);
         let doc = Json::parse(&out.body).unwrap();
         let pred = doc.get("predictions").unwrap().as_array().unwrap()[0].as_f64().unwrap();
         // Small ridge penalty (λ₂ default) shrinks the slope slightly.
         assert!((pred - 20.0).abs() < 0.1, "pred={pred}");
-        // ...and an unknown id is a clean 404, not the default model.
+        // ...and through the PR-6 body-field back-compat path.
+        let body = format!(r#"{{"rows": [[10, 0, 0]], "model": "{model_id}"}}"#);
+        let out = route(&post_predict(&body), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
+        // An unknown id is a clean 404, not the default model.
         let out = route(&post_predict(r#"{"rows": [[1, 0, 0]], "model": "m999"}"#), &state);
         assert_eq!(out.status, 404);
     }
@@ -1056,28 +861,37 @@ mod tests {
     }
 
     #[test]
-    fn fit_queue_overflow_returns_429() {
+    fn fit_queue_overflow_returns_429_with_retry_after() {
         let state = toy_state_with(true);
         // Simulate a fit already in flight; the gate must bounce us.
         state.fits_in_flight.store(1, Ordering::SeqCst);
         let out = route(&post_fit(fit_body()), &state);
         assert_eq!(out.status, 429, "{}", out.body);
+        // The PR-6 bug: no Retry-After, bare body. Pinned fixed here.
+        assert_eq!(out.retry_after_secs, Some(1));
+        let doc = Json::parse(&out.body).unwrap();
+        assert_eq!(doc.get("retry_after_secs").and_then(Json::as_usize), Some(1));
+        assert!(doc.get("error").and_then(Json::as_str).is_some());
         state.fits_in_flight.store(0, Ordering::SeqCst);
         let out = route(&post_fit(fit_body()), &state);
         assert_eq!(out.status, 200, "{}", out.body);
     }
 
     #[test]
-    fn model_registry_evicts_oldest_deterministically() {
-        let mut reg = ModelRegistry::new(2);
-        let a = reg.insert(toy_model());
-        let b = reg.insert(toy_model());
-        let c = reg.insert(toy_model());
-        assert_eq!((a.as_str(), b.as_str(), c.as_str()), ("m1", "m2", "m3"));
-        assert_eq!(reg.len(), 2);
-        assert!(reg.get("m1").is_none(), "oldest model must be evicted first");
-        assert!(reg.get("m2").is_some());
-        assert!(reg.get("m3").is_some());
+    fn server_state_rejects_empty_and_duplicate_registrations() {
+        let cfg = ServeConfig::default();
+        assert_eq!(
+            ServerState::new(vec![], cfg.clone()).unwrap_err(),
+            ServeError::NoModels
+        );
+        let models = vec![
+            ("a".to_string(), toy_model()),
+            ("a".to_string(), toy_model()),
+        ];
+        assert_eq!(
+            ServerState::new(models, cfg).unwrap_err(),
+            ServeError::DuplicateModelName { name: "a".into() }
+        );
     }
 
     #[test]

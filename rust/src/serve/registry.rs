@@ -1,0 +1,281 @@
+//! Versioned multi-model registry with atomic hot swap.
+//!
+//! PR 6's registry was a FIFO of anonymous online-fitted models; PR 7
+//! promotes it to the server's single model namespace:
+//!
+//! - **Named models** are registered at startup (`--model name=path`) or
+//!   created by `PUT /models/<id>`; they are *pinned* — never evicted —
+//!   and each carries a monotone `version` bumped on every swap.
+//! - **Fitted models** (`POST /fit`) keep the PR-6 contract: ids `m1`,
+//!   `m2`, … from a monotone counter, bounded FIFO eviction so a
+//!   long-running fit service cannot grow without limit.
+//! - **Hot swap** replaces the `Arc<LoadedModel>` behind a name while
+//!   in-flight requests finish on the old `Arc` — the swap is a pointer
+//!   exchange under the registry lock, never a wait for quiescence, so
+//!   zero requests drop.
+//!
+//! Per-model [`RouteStats`] live here too (behind `Arc`, shared with the
+//! `/stats` reporter) and survive swaps: a model's serving history is a
+//! property of its route, not of one loaded artifact.
+
+use super::config::{validate_model_name, ServeError};
+use super::RouteStats;
+use crate::persist::LoadedModel;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+
+/// How a model got into the registry (surfaced by `GET /models`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelSource {
+    /// Registered at startup via `--model`.
+    Startup,
+    /// Fitted online through `POST /fit`.
+    Fitted,
+    /// Created or replaced by `PUT /models/<id>`.
+    Swapped,
+}
+
+impl ModelSource {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Startup => "startup",
+            Self::Fitted => "fitted",
+            Self::Swapped => "swapped",
+        }
+    }
+}
+
+/// One registry slot. Cloning is cheap (two `Arc` bumps) — handlers
+/// clone the entry out of the lock and serve from their own reference,
+/// which is exactly what makes hot swap drop-free.
+#[derive(Clone)]
+pub struct ModelEntry {
+    pub model: Arc<LoadedModel>,
+    /// Monotone per-name version, starting at 1; bumped by every swap.
+    pub version: u64,
+    pub source: ModelSource,
+    /// Per-model serving counters; survive swaps.
+    pub stats: Arc<RouteStats>,
+}
+
+/// The model namespace: named (pinned) + fitted (bounded FIFO) entries.
+pub struct ModelRegistry {
+    entries: BTreeMap<String, ModelEntry>,
+    /// Insertion order of *fitted* models only — the eviction queue.
+    fitted_order: VecDeque<String>,
+    next_fit_id: u64,
+    fitted_capacity: usize,
+    /// First named registration; `/predict` without a model id goes here.
+    default_id: Option<String>,
+    /// Lifetime count of hot swaps (surfaced in `/stats`).
+    swaps: u64,
+}
+
+impl ModelRegistry {
+    pub fn new(fitted_capacity: usize) -> Self {
+        Self {
+            entries: BTreeMap::new(),
+            fitted_order: VecDeque::new(),
+            next_fit_id: 0,
+            fitted_capacity: fitted_capacity.max(1),
+            default_id: None,
+            swaps: 0,
+        }
+    }
+
+    /// Register a named (pinned) model at startup. The first name
+    /// registered becomes the default for unqualified `/predict`.
+    pub fn register_named(&mut self, name: &str, model: LoadedModel) -> Result<(), ServeError> {
+        validate_model_name(name)?;
+        if self.entries.contains_key(name) {
+            return Err(ServeError::DuplicateModelName { name: name.into() });
+        }
+        self.entries.insert(
+            name.to_string(),
+            ModelEntry {
+                model: Arc::new(model),
+                version: 1,
+                source: ModelSource::Startup,
+                stats: Arc::new(RouteStats::new()),
+            },
+        );
+        if self.default_id.is_none() {
+            self.default_id = Some(name.to_string());
+        }
+        Ok(())
+    }
+
+    /// Register an online-fitted model under the next `m{n}` id,
+    /// evicting the oldest fitted model beyond capacity. Named models
+    /// are never evicted.
+    pub fn insert_fitted(&mut self, model: LoadedModel) -> String {
+        self.next_fit_id += 1;
+        let id = format!("m{}", self.next_fit_id);
+        self.entries.insert(
+            id.clone(),
+            ModelEntry {
+                model: Arc::new(model),
+                version: 1,
+                source: ModelSource::Fitted,
+                stats: Arc::new(RouteStats::new()),
+            },
+        );
+        self.fitted_order.push_back(id.clone());
+        while self.fitted_order.len() > self.fitted_capacity {
+            if let Some(old) = self.fitted_order.pop_front() {
+                self.entries.remove(&old);
+            }
+        }
+        id
+    }
+
+    /// Atomically replace the model behind `name` (creating the entry if
+    /// it did not exist), bump its version, and keep its stats. Returns
+    /// the new version. In-flight requests keep serving whatever `Arc`
+    /// they cloned before the swap; nothing blocks, nothing drops.
+    pub fn swap(&mut self, name: &str, model: LoadedModel) -> Result<u64, ServeError> {
+        validate_model_name(name)?;
+        self.swaps += 1;
+        match self.entries.get_mut(name) {
+            Some(entry) => {
+                entry.model = Arc::new(model);
+                entry.version += 1;
+                entry.source = ModelSource::Swapped;
+                Ok(entry.version)
+            }
+            None => {
+                self.entries.insert(
+                    name.to_string(),
+                    ModelEntry {
+                        model: Arc::new(model),
+                        version: 1,
+                        source: ModelSource::Swapped,
+                        stats: Arc::new(RouteStats::new()),
+                    },
+                );
+                if self.default_id.is_none() {
+                    self.default_id = Some(name.to_string());
+                }
+                Ok(1)
+            }
+        }
+    }
+
+    /// Cheap entry clone (`Arc` bumps) so callers serve outside the lock.
+    pub fn get(&self, id: &str) -> Option<ModelEntry> {
+        self.entries.get(id).cloned()
+    }
+
+    /// The default entry (first named registration), with its id.
+    pub fn default_entry(&self) -> Option<(String, ModelEntry)> {
+        let id = self.default_id.as_ref()?;
+        Some((id.clone(), self.entries.get(id)?.clone()))
+    }
+
+    pub fn default_id(&self) -> Option<&str> {
+        self.default_id.as_deref()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Iterate entries in id order (BTreeMap order — deterministic).
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &ModelEntry)> {
+        self.entries.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::SolveStatus;
+
+    fn toy_model(intercept: f64) -> LoadedModel {
+        LoadedModel::SparseRegression(
+            crate::backbone::sparse_regression::SparseRegressionModel {
+                beta: vec![2.0, 0.0, -1.0],
+                intercept,
+                support: vec![0, 2],
+                objective: 1.0,
+                gap: 0.0,
+                status: SolveStatus::Optimal,
+            },
+        )
+    }
+
+    #[test]
+    fn fitted_models_evict_fifo_but_named_models_are_pinned() {
+        let mut reg = ModelRegistry::new(2);
+        reg.register_named("default", toy_model(0.0)).unwrap();
+        let a = reg.insert_fitted(toy_model(0.0));
+        let b = reg.insert_fitted(toy_model(0.0));
+        let c = reg.insert_fitted(toy_model(0.0));
+        assert_eq!((a.as_str(), b.as_str(), c.as_str()), ("m1", "m2", "m3"));
+        assert!(reg.get("m1").is_none(), "oldest fitted model evicts first");
+        assert!(reg.get("m2").is_some());
+        assert!(reg.get("m3").is_some());
+        assert!(reg.get("default").is_some(), "named models never evict");
+        assert_eq!(reg.len(), 3);
+    }
+
+    #[test]
+    fn first_named_registration_is_the_default() {
+        let mut reg = ModelRegistry::new(4);
+        reg.register_named("alpha", toy_model(0.0)).unwrap();
+        reg.register_named("beta", toy_model(1.0)).unwrap();
+        assert_eq!(reg.default_id(), Some("alpha"));
+        assert_eq!(
+            reg.register_named("alpha", toy_model(2.0)).unwrap_err(),
+            ServeError::DuplicateModelName { name: "alpha".into() }
+        );
+        assert!(matches!(
+            reg.register_named("m7", toy_model(0.0)).unwrap_err(),
+            ServeError::ReservedModelName { .. }
+        ));
+    }
+
+    #[test]
+    fn swap_bumps_version_and_keeps_stats_and_old_arcs_stay_alive() {
+        let mut reg = ModelRegistry::new(4);
+        reg.register_named("default", toy_model(0.0)).unwrap();
+        let before = reg.get("default").unwrap();
+        before.stats.requests.fetch_add(5, std::sync::atomic::Ordering::Relaxed);
+
+        assert_eq!(reg.swap("default", toy_model(9.0)).unwrap(), 2);
+        let after = reg.get("default").unwrap();
+        assert_eq!(after.version, 2);
+        assert_eq!(after.source, ModelSource::Swapped);
+        // Stats survive the swap (same Arc slot)...
+        assert_eq!(
+            after.stats.requests.load(std::sync::atomic::Ordering::Relaxed),
+            5
+        );
+        // ...and the pre-swap Arc still serves the old coefficients — the
+        // in-flight-requests-finish-on-the-old-version guarantee.
+        match (&*before.model, &*after.model) {
+            (LoadedModel::SparseRegression(m0), LoadedModel::SparseRegression(m1)) => {
+                assert_eq!(m0.intercept, 0.0);
+                assert_eq!(m1.intercept, 9.0);
+            }
+            _ => unreachable!(),
+        }
+        assert_eq!(reg.swaps(), 1);
+    }
+
+    #[test]
+    fn swap_creates_missing_entries_at_version_one() {
+        let mut reg = ModelRegistry::new(4);
+        assert_eq!(reg.swap("fresh", toy_model(0.0)).unwrap(), 1);
+        assert_eq!(reg.get("fresh").unwrap().source, ModelSource::Swapped);
+        assert_eq!(reg.default_id(), Some("fresh"), "first entry becomes default");
+    }
+}

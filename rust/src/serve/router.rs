@@ -1,0 +1,215 @@
+//! Route trait + registration table — the dispatch half of the PR-7
+//! serve redesign.
+//!
+//! `serve/mod.rs` used to route with a hand-rolled
+//! `match (method, path)` if-chain; every new endpoint grew the chain
+//! and re-implemented its own 405/404 handling. Here each endpoint is an
+//! independent [`Route`] implementation registered in a [`Router`]
+//! table; the table owns the cross-cutting concerns exactly once:
+//!
+//! - pattern matching with `:name` path parameters
+//!   (`/models/:id/predict`),
+//! - per-route attempt/failure accounting (a route opts in by exposing
+//!   its [`RouteStats`] slot),
+//! - `405 Method Not Allowed` listing the allowed methods when the path
+//!   matches but the verb doesn't,
+//! - `404 Not Found` listing every registered route.
+
+use super::http::Request;
+use super::{error_body, RouteStats, ServerState};
+use crate::json::Json;
+use std::collections::BTreeMap;
+
+/// Path parameters captured by `:name` pattern segments.
+#[derive(Debug, Default)]
+pub struct PathParams(Vec<(&'static str, String)>);
+
+impl PathParams {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.0.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// What a handler resolved to: status line, JSON body, and (for 429s)
+/// the advertised retry interval, which the connection loop turns into a
+/// `Retry-After` header.
+pub struct Outcome {
+    pub status: u16,
+    pub reason: &'static str,
+    pub body: String,
+    pub retry_after_secs: Option<u64>,
+}
+
+impl Outcome {
+    pub fn ok(body: Json) -> Outcome {
+        Outcome {
+            status: 200,
+            reason: "OK",
+            body: body.to_string_compact(),
+            retry_after_secs: None,
+        }
+    }
+
+    pub fn error(status: u16, reason: &'static str, message: &str) -> Outcome {
+        Outcome { status, reason, body: error_body(message), retry_after_secs: None }
+    }
+
+    /// Backpressure: `429` with a `Retry-After` header and a structured
+    /// body carrying the same interval, so both curl-level and JSON-level
+    /// clients see when to come back.
+    pub fn too_many(message: &str, retry_after_secs: u64) -> Outcome {
+        let mut m = BTreeMap::new();
+        m.insert("error".to_string(), Json::String(message.into()));
+        m.insert(
+            "retry_after_secs".to_string(),
+            Json::Number(retry_after_secs as f64),
+        );
+        Outcome {
+            status: 429,
+            reason: "Too Many Requests",
+            body: Json::Object(m).to_string_compact(),
+            retry_after_secs: Some(retry_after_secs),
+        }
+    }
+
+    pub fn failed(&self) -> bool {
+        !(200..300).contains(&self.status)
+    }
+}
+
+/// One endpoint: a verb, a path pattern, and a handler. Implementations
+/// live in `serve/routes.rs`; the trait is what keeps them independent —
+/// a route never sees another route's parsing or accounting.
+pub trait Route: Send + Sync {
+    /// HTTP method this route answers (`"GET"`, `"POST"`, `"PUT"`).
+    fn method(&self) -> &'static str;
+
+    /// Path pattern; `:name` segments capture into [`PathParams`]
+    /// (e.g. `/models/:id/predict`).
+    fn pattern(&self) -> &'static str;
+
+    /// Handle a matched request. Infallible by construction: errors are
+    /// `Outcome`s with 4xx/5xx statuses, never panics or `Result`s.
+    fn handle(&self, request: &Request, params: &PathParams, state: &ServerState) -> Outcome;
+
+    /// The per-route stats slot to account this request under, if any.
+    /// Returning `None` keeps the request out of route-level counters
+    /// (used by `/healthz`, `/stats`, and the fit route while fitting is
+    /// disabled, so probes and 403s don't pollute the serving profile).
+    fn stats<'a>(&self, _state: &'a ServerState) -> Option<&'a RouteStats> {
+        None
+    }
+}
+
+/// Match `path` against `pattern`, capturing `:name` segments.
+fn match_pattern(pattern: &'static str, path: &str) -> Option<PathParams> {
+    let mut params = PathParams::default();
+    let mut pat = pattern.split('/');
+    let mut got = path.split('/');
+    loop {
+        match (pat.next(), got.next()) {
+            (None, None) => return Some(params),
+            (Some(p), Some(g)) => {
+                if let Some(name) = p.strip_prefix(':') {
+                    if g.is_empty() {
+                        return None; // `/models//predict` is not a match
+                    }
+                    params.0.push((name, g.to_string()));
+                } else if p != g {
+                    return None;
+                }
+            }
+            _ => return None,
+        }
+    }
+}
+
+/// The registration table: routes are tried in registration order, so
+/// literal patterns should be registered before overlapping `:param`
+/// ones (the standard table has no overlaps).
+pub struct Router {
+    routes: Vec<Box<dyn Route>>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self { routes: Vec::new() }
+    }
+
+    pub fn register(&mut self, route: Box<dyn Route>) -> &mut Self {
+        self.routes.push(route);
+        self
+    }
+
+    /// `"METHOD pattern"` for every registered route — the 404 body.
+    fn route_list(&self) -> String {
+        let mut names: Vec<String> = self
+            .routes
+            .iter()
+            .map(|r| format!("{} {}", r.method(), r.pattern()))
+            .collect();
+        names.sort();
+        names.join(", ")
+    }
+
+    /// Resolve and run the handler for `request`, with the shared
+    /// accounting and 405/404 handling applied around it.
+    pub fn dispatch(&self, request: &Request, state: &ServerState) -> Outcome {
+        let mut allowed: Vec<&'static str> = Vec::new();
+        for route in &self.routes {
+            let Some(params) = match_pattern(route.pattern(), &request.path) else {
+                continue;
+            };
+            if route.method() != request.method {
+                if !allowed.contains(&route.method()) {
+                    allowed.push(route.method());
+                }
+                continue;
+            }
+            let stats = route.stats(state);
+            if let Some(s) = stats {
+                s.requests.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            let outcome = route.handle(request, &params, state);
+            if outcome.failed() {
+                if let Some(s) = stats {
+                    s.failures.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                }
+            }
+            return outcome;
+        }
+        if !allowed.is_empty() {
+            allowed.sort_unstable();
+            return Outcome::error(
+                405,
+                "Method Not Allowed",
+                &format!("use {} {}", allowed.join("|"), request.path),
+            );
+        }
+        Outcome::error(404, "Not Found", &format!("routes: {}", self.route_list()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn patterns_match_literals_and_params() {
+        assert!(match_pattern("/healthz", "/healthz").is_some());
+        assert!(match_pattern("/healthz", "/health").is_none());
+        assert!(match_pattern("/models/:id/predict", "/models/churn/predict")
+            .unwrap()
+            .get("id")
+            .is_some_and(|v| v == "churn"));
+        assert!(match_pattern("/models/:id/predict", "/models//predict").is_none());
+        assert!(match_pattern("/models/:id/predict", "/models/churn").is_none());
+        assert!(match_pattern("/models/:id", "/models/a/b").is_none());
+    }
+}

@@ -1,0 +1,641 @@
+//! The standard endpoint set, each an independent [`Route`]:
+//!
+//! | route                       | purpose                                     |
+//! |-----------------------------|---------------------------------------------|
+//! | `GET /healthz`              | liveness + default-model identity           |
+//! | `GET /stats`                | `backbone-serve-stats/v1` counters          |
+//! | `GET /models`               | `backbone-models/v1` registry listing       |
+//! | `POST /predict`             | batch inference on the default model        |
+//! | `POST /models/:id/predict`  | batch inference on a named/fitted model     |
+//! | `PUT /models/:id`           | atomic hot swap of a named model            |
+//! | `POST /fit`                 | online fit + registration (`--fit` gated)   |
+//!
+//! Handlers never touch sockets or counters directly: the [`Router`]
+//! owns attempt/failure accounting and the connection loop owns the
+//! wire, so each handler is a pure `Request → Outcome` function —
+//! which is what makes them unit-testable without a listener.
+
+use super::http::Request;
+use super::registry::ModelEntry;
+use super::router::{Outcome, PathParams, Route, Router};
+use super::{parse_matrix, RouteStats, ServerState};
+use crate::backbone::Backbone;
+use crate::json::Json;
+use crate::linalg::Matrix;
+use crate::persist::{LoadedModel, ModelArtifact, MODEL_SCHEMA};
+use crate::warmstart::{featurize, suggested_alpha};
+use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
+
+/// Schema tag of the `GET /models` listing.
+pub const MODELS_SCHEMA: &str = "backbone-models/v1";
+
+/// The full endpoint table. Registration order is documentation order;
+/// no patterns overlap.
+pub fn standard_router() -> Router {
+    let mut router = Router::new();
+    router
+        .register(Box::new(Healthz))
+        .register(Box::new(Stats))
+        .register(Box::new(ModelsList))
+        .register(Box::new(PredictDefault))
+        .register(Box::new(ModelPredict))
+        .register(Box::new(ModelSwap))
+        .register(Box::new(FitRoute));
+    router
+}
+
+fn parse_body_json(request: &Request) -> Result<Json, Outcome> {
+    let text = std::str::from_utf8(&request.body)
+        .map_err(|_| Outcome::error(400, "Bad Request", "body is not UTF-8"))?;
+    Json::parse(text).map_err(|e| {
+        Outcome::error(400, "Bad Request", &format!("body is not JSON: {e:#}"))
+    })
+}
+
+// ---------------------------------------------------------------- healthz
+
+struct Healthz;
+
+impl Route for Healthz {
+    fn method(&self) -> &'static str {
+        "GET"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "/healthz"
+    }
+
+    fn handle(&self, _req: &Request, _params: &PathParams, state: &ServerState) -> Outcome {
+        let mut m = BTreeMap::new();
+        m.insert("status".into(), Json::String("ok".into()));
+        m.insert("schema".into(), Json::String(MODEL_SCHEMA.into()));
+        let registry = state.registry.lock().unwrap();
+        if let Some((id, entry)) = registry.default_entry() {
+            m.insert("default_model".into(), Json::String(id));
+            m.insert("model_version".into(), Json::Number(entry.version as f64));
+            m.insert(
+                "learner".into(),
+                Json::String(entry.model.kind().name().into()),
+            );
+            if let Some(p) = entry.model.num_features() {
+                m.insert("num_features".into(), Json::Number(p as f64));
+            }
+            if let Some(n) = entry.model.expected_rows() {
+                m.insert("expected_rows".into(), Json::Number(n as f64));
+            }
+        }
+        m.insert("models".into(), Json::Number(registry.len() as f64));
+        drop(registry);
+        m.insert("fit_enabled".into(), Json::Bool(state.cfg.enable_fit()));
+        if state.cfg.enable_fit() {
+            m.insert(
+                "warm_store_entries".into(),
+                Json::Number(state.warm.lock().unwrap().len() as f64),
+            );
+            if let Some(err) = &state.warm_error {
+                m.insert("warm_store_error".into(), Json::String(err.clone()));
+            }
+        }
+        m.insert(
+            "uptime_secs".into(),
+            Json::from_f64(state.started.elapsed().as_secs_f64()),
+        );
+        Outcome::ok(Json::Object(m))
+    }
+}
+
+// ------------------------------------------------------------------ stats
+
+struct Stats;
+
+impl Route for Stats {
+    fn method(&self) -> &'static str {
+        "GET"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "/stats"
+    }
+
+    fn handle(&self, _req: &Request, _params: &PathParams, state: &ServerState) -> Outcome {
+        Outcome::ok(state.stats_json())
+    }
+}
+
+// ----------------------------------------------------------------- models
+
+struct ModelsList;
+
+impl Route for ModelsList {
+    fn method(&self) -> &'static str {
+        "GET"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "/models"
+    }
+
+    fn handle(&self, _req: &Request, _params: &PathParams, state: &ServerState) -> Outcome {
+        let registry = state.registry.lock().unwrap();
+        let mut models = Vec::with_capacity(registry.len());
+        for (id, entry) in registry.iter() {
+            let mut row = BTreeMap::new();
+            row.insert("id".into(), Json::String(id.clone()));
+            row.insert("version".into(), Json::Number(entry.version as f64));
+            row.insert("source".into(), Json::String(entry.source.name().into()));
+            row.insert(
+                "learner".into(),
+                Json::String(entry.model.kind().name().into()),
+            );
+            if let Some(p) = entry.model.num_features() {
+                row.insert("num_features".into(), Json::Number(p as f64));
+            }
+            row.insert(
+                "requests".into(),
+                Json::Number(entry.stats.requests.load(Ordering::Relaxed) as f64),
+            );
+            row.insert(
+                "rows_predicted".into(),
+                Json::Number(entry.stats.units.load(Ordering::Relaxed) as f64),
+            );
+            models.push(Json::Object(row));
+        }
+        let mut m = BTreeMap::new();
+        m.insert("schema".into(), Json::String(MODELS_SCHEMA.into()));
+        if let Some(id) = registry.default_id() {
+            m.insert("default".into(), Json::String(id.into()));
+        }
+        m.insert("count".into(), Json::Number(registry.len() as f64));
+        m.insert("models".into(), Json::Array(models));
+        Outcome::ok(Json::Object(m))
+    }
+}
+
+// ---------------------------------------------------------------- predict
+
+/// `POST /predict` — the default model, or (PR-6 back-compat) any
+/// registry id named by a `"model"` field in the body.
+struct PredictDefault;
+
+impl Route for PredictDefault {
+    fn method(&self) -> &'static str {
+        "POST"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "/predict"
+    }
+
+    fn handle(&self, request: &Request, _params: &PathParams, state: &ServerState) -> Outcome {
+        gated_predict(request, None, state)
+    }
+
+    fn stats<'a>(&self, state: &'a ServerState) -> Option<&'a RouteStats> {
+        Some(&state.stats.predict)
+    }
+}
+
+/// `POST /models/:id/predict` — path-routed inference; the id addresses
+/// named models and online-fitted `m{n}` models alike.
+struct ModelPredict;
+
+impl Route for ModelPredict {
+    fn method(&self) -> &'static str {
+        "POST"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "/models/:id/predict"
+    }
+
+    fn handle(&self, request: &Request, params: &PathParams, state: &ServerState) -> Outcome {
+        gated_predict(request, params.get("id"), state)
+    }
+
+    fn stats<'a>(&self, state: &'a ServerState) -> Option<&'a RouteStats> {
+        Some(&state.stats.predict)
+    }
+}
+
+/// Bounded admission for inference: with `max_inflight_predicts` set,
+/// excess concurrent predicts get an immediate 429 + `Retry-After`
+/// instead of queueing behind each other without bound.
+fn gated_predict(request: &Request, path_id: Option<&str>, state: &ServerState) -> Outcome {
+    let max = state.cfg.max_inflight_predicts() as u64;
+    if max == 0 {
+        return predict_inner(request, path_id, state);
+    }
+    let in_flight = state.predicts_in_flight.fetch_add(1, Ordering::SeqCst);
+    let outcome = if in_flight >= max {
+        Outcome::too_many(
+            "predict queue is full; retry shortly",
+            state.cfg.retry_after_secs(),
+        )
+    } else {
+        predict_inner(request, path_id, state)
+    };
+    state.predicts_in_flight.fetch_sub(1, Ordering::SeqCst);
+    outcome
+}
+
+fn resolve_model(
+    path_id: Option<&str>,
+    body: &Json,
+    state: &ServerState,
+) -> Result<(String, ModelEntry), Outcome> {
+    let registry = state.registry.lock().unwrap();
+    let wanted = path_id.or_else(|| body.get("model").and_then(Json::as_str));
+    match wanted {
+        Some(id) => registry.get(id).map(|e| (id.to_string(), e)).ok_or_else(|| {
+            Outcome::error(
+                404,
+                "Not Found",
+                &format!("unknown model id `{id}` (evicted or never registered)"),
+            )
+        }),
+        None => registry.default_entry().ok_or_else(|| {
+            Outcome::error(503, "Service Unavailable", "no default model registered")
+        }),
+    }
+}
+
+fn predict_inner(request: &Request, path_id: Option<&str>, state: &ServerState) -> Outcome {
+    let started = Instant::now();
+    let doc = match parse_body_json(request) {
+        Ok(d) => d,
+        Err(out) => return out,
+    };
+    let rows = match parse_matrix(&doc, "rows") {
+        Ok(r) => r,
+        Err(message) => return Outcome::error(400, "Bad Request", &message),
+    };
+    // Clone the entry out of the registry lock: the Arc we hold keeps
+    // serving the same model version even if a hot swap lands mid-batch.
+    let (id, entry) = match resolve_model(path_id, &doc, state) {
+        Ok(found) => found,
+        Err(out) => return out,
+    };
+    entry.stats.requests.fetch_add(1, Ordering::Relaxed);
+    let x = Matrix::from_rows(&rows);
+    // One inference per request: scores are the expensive pass, the
+    // prediction view is derived from them (bit-identical to
+    // try_predict by the predictions_from_scores contract).
+    let scores = match entry.model.predict_scores(&x) {
+        Ok(s) => s,
+        Err(e) => {
+            entry.stats.failures.fetch_add(1, Ordering::Relaxed);
+            return Outcome::error(400, "Bad Request", &e.to_string());
+        }
+    };
+    let predictions = entry.model.predictions_from_scores(&scores);
+    let latency_us = started.elapsed().as_micros() as u64;
+    state.stats.predict.record_ok(rows.len(), latency_us);
+    entry.stats.record_ok(rows.len(), latency_us);
+
+    let mut m = BTreeMap::new();
+    m.insert(
+        "predictions".into(),
+        Json::Array(predictions.iter().map(|&p| Json::from_f64(p)).collect()),
+    );
+    if entry.model.kind().is_classifier() {
+        m.insert(
+            "scores".into(),
+            Json::Array(scores.iter().map(|&s| Json::from_f64(s)).collect()),
+        );
+    }
+    m.insert("rows".into(), Json::Number(rows.len() as f64));
+    m.insert("latency_us".into(), Json::Number(latency_us as f64));
+    m.insert("model".into(), Json::String(id));
+    m.insert("model_version".into(), Json::Number(entry.version as f64));
+    Outcome::ok(Json::Object(m))
+}
+
+// ------------------------------------------------------------------- swap
+
+/// `PUT /models/:id` — atomic hot swap. Body is either a full
+/// `backbone-model/v1` artifact document, or `{"path": "model.json"}`
+/// to load one from the server's filesystem. The new model is published
+/// by replacing the `Arc` behind the id; requests already holding the
+/// old `Arc` finish on the old version, so nothing drops.
+struct ModelSwap;
+
+impl Route for ModelSwap {
+    fn method(&self) -> &'static str {
+        "PUT"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "/models/:id"
+    }
+
+    fn handle(&self, request: &Request, params: &PathParams, state: &ServerState) -> Outcome {
+        let id = params.get("id").unwrap_or_default().to_string();
+        if let Err(e) = super::config::validate_model_name(&id) {
+            // Overwriting a fitted m{n} slot would fight the FIFO
+            // eviction queue; fitted ids are read-only.
+            if matches!(e, super::config::ServeError::ReservedModelName { .. }) {
+                return Outcome::error(
+                    409,
+                    "Conflict",
+                    &format!("`{id}` is a fitted-model id; swap targets must be named models"),
+                );
+            }
+            return Outcome::error(400, "Bad Request", &e.to_string());
+        }
+        let doc = match parse_body_json(request) {
+            Ok(d) => d,
+            Err(out) => return out,
+        };
+        let artifact = if let Some(path) = doc.get("path").and_then(Json::as_str) {
+            match ModelArtifact::load(path) {
+                Ok(a) => a,
+                Err(e) => return Outcome::error(400, "Bad Request", &e.to_string()),
+            }
+        } else {
+            match ModelArtifact::from_json(&doc) {
+                Ok(a) => a,
+                Err(e) => {
+                    return Outcome::error(
+                        400,
+                        "Bad Request",
+                        &format!(
+                            "body must be a {MODEL_SCHEMA} artifact or {{\"path\": …}}: {e}"
+                        ),
+                    );
+                }
+            }
+        };
+        let learner = artifact.learner().name();
+        let version = {
+            let mut registry = state.registry.lock().unwrap();
+            match registry.swap(&id, artifact.model) {
+                Ok(v) => v,
+                Err(e) => return Outcome::error(400, "Bad Request", &e.to_string()),
+            }
+        };
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Json::String(id));
+        m.insert("version".into(), Json::Number(version as f64));
+        m.insert("learner".into(), Json::String(learner.into()));
+        m.insert("swapped".into(), Json::Bool(true));
+        Outcome::ok(Json::Object(m))
+    }
+}
+
+// -------------------------------------------------------------------- fit
+
+/// `POST /fit`: fit a sparse-regression model online and register it
+/// for prediction by id. Body:
+///
+/// ```json
+/// {"x": [[...], ...], "y": [...], "k": 5,
+///  "alpha": 0.5, "beta": 0.5, "m": 5, "seed": 0, "warm": true}
+/// ```
+///
+/// Only `x`, `y`, `k` are required. With `"warm"` (default true) the
+/// warm-start store is consulted first: an exact feature match serves
+/// the cached solution immediately (no solve), a near neighbor
+/// warm-starts the backbone with a shrunk screening fraction, and every
+/// solved fit is written back to the store.
+struct FitRoute;
+
+impl Route for FitRoute {
+    fn method(&self) -> &'static str {
+        "POST"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "/fit"
+    }
+
+    fn handle(&self, request: &Request, _params: &PathParams, state: &ServerState) -> Outcome {
+        if !state.cfg.enable_fit() {
+            return Outcome::error(
+                403,
+                "Forbidden",
+                "fit endpoint disabled; start the server with --fit",
+            );
+        }
+        // Bounded queueing: admission is a single atomic increment; a
+        // full queue is answered 429 + Retry-After immediately instead
+        // of parking a worker thread behind someone else's solve.
+        let in_flight = state.fits_in_flight.fetch_add(1, Ordering::SeqCst);
+        let outcome = if in_flight >= state.cfg.max_concurrent_fits() as u64 {
+            Outcome::too_many(
+                "fit queue is full; retry after the running fit completes",
+                state.cfg.retry_after_secs(),
+            )
+        } else {
+            fit_inner(request, state)
+        };
+        state.fits_in_flight.fetch_sub(1, Ordering::SeqCst);
+        outcome
+    }
+
+    /// Route-level accounting only while fitting is enabled: the 403s a
+    /// disabled server hands out are not fit traffic.
+    fn stats<'a>(&self, state: &'a ServerState) -> Option<&'a RouteStats> {
+        state.cfg.enable_fit().then_some(&state.stats.fit)
+    }
+}
+
+fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
+    let started = Instant::now();
+    let doc = match parse_body_json(request) {
+        Ok(d) => d,
+        Err(out) => return out,
+    };
+    let rows = match parse_matrix(&doc, "x") {
+        Ok(r) => r,
+        Err(message) => return Outcome::error(400, "Bad Request", &message),
+    };
+    let y: Vec<f64> = match doc.get("y").and_then(Json::as_array) {
+        Some(arr) => {
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                match v.as_f64_tagged().filter(|v| v.is_finite()) {
+                    Some(v) => out.push(v),
+                    None => {
+                        return Outcome::error(
+                            400,
+                            "Bad Request",
+                            &format!("y[{i}] is not a finite number"),
+                        );
+                    }
+                }
+            }
+            out
+        }
+        None => return Outcome::error(400, "Bad Request", "body must have a `y` array"),
+    };
+    if y.len() != rows.len() {
+        return Outcome::error(
+            400,
+            "Bad Request",
+            &format!("x has {} rows but y has {} values", rows.len(), y.len()),
+        );
+    }
+    let Some(k) = doc.get("k").and_then(Json::as_usize).filter(|&k| k >= 1) else {
+        return Outcome::error(400, "Bad Request", "body must have an integer `k` ≥ 1");
+    };
+    let x = Matrix::from_rows(&rows);
+    if k > x.cols() {
+        return Outcome::error(
+            400,
+            "Bad Request",
+            "`k` exceeds the number of columns in `x`",
+        );
+    }
+    let alpha = doc.get("alpha").and_then(Json::as_f64_tagged).unwrap_or(0.5);
+    let beta = doc.get("beta").and_then(Json::as_f64_tagged).unwrap_or(0.5);
+    let m_sub = doc.get("m").and_then(Json::as_usize).unwrap_or(5);
+    let seed = doc.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
+    let warm_wanted = doc.get("warm").and_then(Json::as_bool).unwrap_or(true);
+
+    let features = featurize(&x, &y, k);
+    let suggestion = if warm_wanted {
+        state.warm.lock().unwrap().suggest(&features)
+    } else {
+        None
+    };
+
+    let mut warm_info = BTreeMap::new();
+    warm_info.insert("enabled".into(), Json::Bool(warm_wanted));
+    if let Some(err) = &state.warm_error {
+        warm_info.insert("store_error".into(), Json::String(err.clone()));
+    }
+
+    // Exact feature match: the instance was fitted before, so the cached
+    // solution *is* the solution — serve it immediately (mlopt-style
+    // "online MIO in milliseconds") through the same registry path.
+    if let Some(w) = suggestion.as_ref().filter(|w| w.exact && w.beta.len() == x.cols()) {
+        let model = crate::backbone::sparse_regression::SparseRegressionModel {
+            beta: w.beta.clone(),
+            intercept: w.intercept,
+            support: w.support.clone(),
+            objective: w.objective,
+            gap: f64::NAN,
+            status: crate::solvers::SolveStatus::Optimal,
+        };
+        let model_id = state
+            .registry
+            .lock()
+            .unwrap()
+            .insert_fitted(LoadedModel::SparseRegression(model));
+        warm_info.insert("hit".into(), Json::String("exact".into()));
+        warm_info.insert("distance".into(), Json::from_f64(0.0));
+        let latency_us = started.elapsed().as_micros() as u64;
+        state.stats.fit.record_ok(1, latency_us);
+        return Outcome::ok(fit_response(
+            model_id,
+            &w.support,
+            w.objective,
+            w.support.len(),
+            latency_us,
+            warm_info,
+            state,
+        ));
+    }
+
+    // Cold or neighbor-warm solve. A neighbor supplies the warm iterate
+    // and a shrunk screening fraction; its support is seeded into the
+    // universe so the small alpha cannot screen it out.
+    let (fit_alpha, warm_beta) = match &suggestion {
+        Some(w) if w.beta.len() == x.cols() => {
+            warm_info.insert("hit".into(), Json::String("neighbor".into()));
+            warm_info.insert("distance".into(), Json::from_f64(w.distance));
+            (suggested_alpha(x.cols(), k), Some(w.beta.clone()))
+        }
+        _ => {
+            warm_info.insert("hit".into(), Json::String("none".into()));
+            (alpha, None)
+        }
+    };
+    let mut builder = Backbone::sparse_regression()
+        .alpha(fit_alpha)
+        .beta(beta)
+        .num_subproblems(m_sub)
+        .max_nonzeros(k)
+        .seed(seed);
+    if let Some(w) = warm_beta {
+        builder = builder.warm_start(w);
+    }
+    let mut bb = match builder.build() {
+        Ok(bb) => bb,
+        Err(e) => return Outcome::error(400, "Bad Request", &e.to_string()),
+    };
+    let model = match bb.fit(&x, &y) {
+        Ok(m) => m.clone(),
+        Err(e) => return Outcome::error(400, "Bad Request", &e.to_string()),
+    };
+
+    // Write-through: remember this fit for future instances, and persist
+    // the store when the server was given a cache path.
+    {
+        let mut store = state.warm.lock().unwrap();
+        let coefficients: Vec<f64> =
+            model.support.iter().map(|&j| model.beta[j]).collect();
+        store.record(
+            &features,
+            &model.support,
+            &coefficients,
+            model.intercept,
+            model.objective,
+            fit_alpha,
+        );
+        if let Some(path) = state.cfg.warm_cache_path() {
+            if let Err(e) = store.save(path) {
+                eprintln!("warning: {e}");
+            }
+        }
+    }
+
+    let support = model.support.clone();
+    let objective = model.objective;
+    let backbone_size =
+        bb.last_diagnostics.as_ref().map(|d| d.backbone_size).unwrap_or(support.len());
+    let model_id = state
+        .registry
+        .lock()
+        .unwrap()
+        .insert_fitted(LoadedModel::SparseRegression(model));
+    let latency_us = started.elapsed().as_micros() as u64;
+    state.stats.fit.record_ok(1, latency_us);
+    Outcome::ok(fit_response(
+        model_id,
+        &support,
+        objective,
+        backbone_size,
+        latency_us,
+        warm_info,
+        state,
+    ))
+}
+
+fn fit_response(
+    model_id: String,
+    support: &[usize],
+    objective: f64,
+    backbone_size: usize,
+    latency_us: u64,
+    mut warm_info: BTreeMap<String, Json>,
+    state: &ServerState,
+) -> Json {
+    warm_info.insert(
+        "store_entries".into(),
+        Json::Number(state.warm.lock().unwrap().len() as f64),
+    );
+    let mut m = BTreeMap::new();
+    m.insert("model_id".into(), Json::String(model_id));
+    m.insert(
+        "support".into(),
+        Json::Array(support.iter().map(|&j| Json::Number(j as f64)).collect()),
+    );
+    m.insert("objective".into(), Json::from_f64(objective));
+    m.insert("backbone_size".into(), Json::Number(backbone_size as f64));
+    m.insert("latency_us".into(), Json::Number(latency_us as f64));
+    m.insert("warm".into(), Json::Object(warm_info));
+    Json::Object(m)
+}

@@ -1,65 +1,113 @@
 //! Loopback load generator: `cli serve --self-test`.
 //!
-//! Boots a real [`Server`](super::Server) on an ephemeral localhost port,
-//! drives it with concurrent client threads over real TCP sockets, and
-//! reports throughput + latency percentiles in `backbone-bench/v1`-style
-//! JSON (`backbone-serve-selftest/v1`). Every response is verified
-//! against a locally computed prediction for the same batch, so "zero
-//! failed requests" means the *served* numbers are bit-identical to the
-//! in-process model — not merely that sockets stayed open. CI's
-//! `serve-smoke` job runs this end to end.
+//! Boots a real [`Server`](super::Server) on an ephemeral localhost port
+//! and drives it over real TCP sockets. PR 7 promotes the PR-5 smoke
+//! test into a load-test harness:
+//!
+//! - **Keep-alive phase** — `connections` persistent client
+//!   connections, each streaming its share of requests down one socket
+//!   (reconnecting only on error). Optional pacing to `--target-rps`
+//!   and a wall-clock `--duration` mode.
+//! - **Close-mode phase** — the same workload with one connection per
+//!   request (`Connection: close`), giving the measured
+//!   `keepalive_speedup` ratio (skipped when pacing, which would cap
+//!   both phases at the same rate).
+//! - **Hot-swap-under-load** — halfway through the keep-alive phase a
+//!   coordinator `PUT`s the same artifact back to `/models/default`,
+//!   bumping its version while clients hammer it. Every response carries
+//!   `model_version`; a version going backwards on any connection is a
+//!   boundary violation, and any failed request during the swap is a
+//!   drop. Both must be zero.
+//! - **SLO check** — `--slo-p99-ms` asserts the keep-alive p99.
+//!
+//! Every response is verified against a locally computed prediction for
+//! the same batch, so "zero failed requests" means the *served* numbers
+//! are bit-identical to the in-process model — not merely that sockets
+//! stayed open. (The swapped-in artifact is the same model, so the
+//! expectation holds across the version boundary.) CI's `serve-smoke`
+//! job runs this end to end and tracks the JSON as `BENCH_PR7.json`.
 
-use super::http::parse_response;
+use super::http::{parse_response, read_response};
 use super::{ServeConfig, Server};
 use crate::backbone::Predict;
 use crate::bench_support::percentile;
 use crate::json::Json;
 use crate::linalg::Matrix;
-use crate::persist::LoadedModel;
+use crate::persist::{LoadedModel, ModelArtifact, Provenance};
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::net::{SocketAddr, TcpStream};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 /// Load-generator knobs.
 #[derive(Debug, Clone)]
 pub struct SelfTestConfig {
-    /// Total requests to issue across all client threads.
+    /// Total requests across all connections (keep-alive phase);
+    /// ignored when `duration_secs` is set.
     pub requests: usize,
-    /// Concurrent client threads.
-    pub concurrency: usize,
+    /// Concurrent client connections (each is one OS thread).
+    pub connections: usize,
     /// Rows per batched `/predict` request (clustering overrides this
     /// with its transductive row-count contract).
     pub batch_rows: usize,
     /// Server worker threads (0 = all cores).
     pub threads: usize,
+    /// Reuse one connection per client (the keep-alive phase). Off = the
+    /// legacy one-connection-per-request behaviour only.
+    pub keep_alive: bool,
+    /// Also run the close-mode phase and report `keepalive_speedup`.
+    pub compare_close: bool,
+    /// Hot-swap `/models/default` halfway through the keep-alive phase.
+    pub swap_under_load: bool,
+    /// Pace the keep-alive phase to this many requests/sec overall.
+    pub target_rps: Option<f64>,
+    /// Run each phase for this long instead of a fixed request count.
+    pub duration_secs: Option<f64>,
+    /// Fail the report unless the keep-alive p99 is under this.
+    pub slo_p99_ms: Option<f64>,
 }
 
 impl SelfTestConfig {
     /// CI scale: finishes in seconds on one core.
     pub fn quick() -> Self {
-        Self { requests: 200, concurrency: 4, batch_rows: 16, threads: 2 }
+        Self {
+            requests: 200,
+            connections: 4,
+            batch_rows: 16,
+            threads: 2,
+            keep_alive: true,
+            compare_close: true,
+            swap_under_load: true,
+            target_rps: None,
+            duration_secs: None,
+            slo_p99_ms: None,
+        }
     }
 
     /// Full scale for local benchmarking.
     pub fn full() -> Self {
-        Self { requests: 2000, concurrency: 8, batch_rows: 32, threads: 0 }
+        Self {
+            requests: 2000,
+            connections: 8,
+            batch_rows: 32,
+            threads: 0,
+            ..Self::quick()
+        }
     }
 }
 
-/// Outcome of a self-test run.
+/// Throughput + latency summary of one phase.
 #[derive(Debug, Clone)]
-pub struct SelfTestReport {
-    pub learner: &'static str,
+pub struct PhaseStats {
     pub requests: usize,
-    /// Requests that failed: connect/write errors, non-200 statuses, or
-    /// served predictions that diverged from the local model.
+    /// Connect/write errors, non-200 statuses, or served predictions
+    /// that diverged from the local model.
     pub failed: usize,
-    pub concurrency: usize,
-    pub batch_rows: usize,
-    /// Resolved server worker count.
-    pub threads: usize,
+    /// TCP connections opened (keep-alive phase: `connections` plus any
+    /// error reconnects; close phase: one per request).
+    pub connections_opened: usize,
     pub elapsed_secs: f64,
     pub req_per_sec: f64,
     pub rows_per_sec: f64,
@@ -68,28 +116,165 @@ pub struct SelfTestReport {
     pub p99_ms: f64,
 }
 
-impl SelfTestReport {
-    /// `backbone-serve-selftest/v1` JSON payload (CI artifact).
-    pub fn to_json(&self) -> Json {
+impl PhaseStats {
+    fn from_latencies(
+        mut latencies_ms: Vec<f64>,
+        failed: usize,
+        connections_opened: usize,
+        elapsed: f64,
+        batch_rows: usize,
+    ) -> Self {
+        latencies_ms.sort_by(|a, b| a.total_cmp(b));
+        let requests = latencies_ms.len() + failed;
+        let mean_ms = if latencies_ms.is_empty() {
+            f64::NAN
+        } else {
+            latencies_ms.iter().sum::<f64>() / latencies_ms.len() as f64
+        };
+        Self {
+            requests,
+            failed,
+            connections_opened,
+            elapsed_secs: elapsed,
+            req_per_sec: if elapsed > 0.0 { requests as f64 / elapsed } else { f64::NAN },
+            rows_per_sec: if elapsed > 0.0 {
+                (requests * batch_rows) as f64 / elapsed
+            } else {
+                f64::NAN
+            },
+            mean_ms,
+            p50_ms: percentile(&latencies_ms, 0.50),
+            p99_ms: percentile(&latencies_ms, 0.99),
+        }
+    }
+
+    fn to_json(&self) -> Json {
         let mut lat = BTreeMap::new();
         lat.insert("mean_ms".to_string(), Json::from_f64(self.mean_ms));
         lat.insert("p50_ms".to_string(), Json::from_f64(self.p50_ms));
         lat.insert("p99_ms".to_string(), Json::from_f64(self.p99_ms));
+        let mut m = BTreeMap::new();
+        m.insert("requests".to_string(), Json::Number(self.requests as f64));
+        m.insert("failed".to_string(), Json::Number(self.failed as f64));
+        m.insert(
+            "connections_opened".to_string(),
+            Json::Number(self.connections_opened as f64),
+        );
+        m.insert("elapsed_secs".to_string(), Json::from_f64(self.elapsed_secs));
+        m.insert("req_per_sec".to_string(), Json::from_f64(self.req_per_sec));
+        m.insert("rows_per_sec".to_string(), Json::from_f64(self.rows_per_sec));
+        m.insert("latency".to_string(), Json::Object(lat));
+        Json::Object(m)
+    }
+}
+
+/// What happened around the mid-run hot swap.
+#[derive(Debug, Clone)]
+pub struct SwapStats {
+    /// HTTP status of the `PUT /models/default` (200 = swap landed).
+    pub status: u16,
+    /// Responses served from the pre-swap version.
+    pub served_old: u64,
+    /// Responses served from the post-swap version.
+    pub served_new: u64,
+    /// Responses whose `model_version` went *backwards* on a connection
+    /// — the atomicity contract being broken. Must be zero.
+    pub boundary_violations: u64,
+}
+
+/// Outcome of a self-test run.
+#[derive(Debug, Clone)]
+pub struct SelfTestReport {
+    pub learner: &'static str,
+    pub connections: usize,
+    pub batch_rows: usize,
+    /// Resolved server worker count.
+    pub threads: usize,
+    pub keep_alive: PhaseStats,
+    pub close_mode: Option<PhaseStats>,
+    /// Keep-alive req/s over close-mode req/s (the reuse payoff).
+    pub keepalive_speedup: Option<f64>,
+    pub swap: Option<SwapStats>,
+    pub target_rps: Option<f64>,
+    pub slo_p99_ms: Option<f64>,
+}
+
+impl SelfTestReport {
+    pub fn total_failed(&self) -> usize {
+        self.keep_alive.failed + self.close_mode.as_ref().map_or(0, |p| p.failed)
+    }
+
+    /// Whether the p99 SLO held (None when no SLO was requested).
+    pub fn slo_pass(&self) -> Option<bool> {
+        self.slo_p99_ms.map(|slo| self.keep_alive.p99_ms <= slo)
+    }
+
+    /// The CI gate: zero failures across phases, a landed swap with a
+    /// clean version boundary, and the SLO (when requested).
+    pub fn passed(&self) -> bool {
+        self.total_failed() == 0
+            && self.swap.as_ref().map_or(true, |s| {
+                s.status == 200 && s.boundary_violations == 0 && s.served_new > 0
+            })
+            && self.slo_pass() != Some(false)
+    }
+
+    /// `backbone-serve-selftest/v1` JSON payload (CI artifact). The
+    /// pre-PR-7 flat keys (`requests`, `failed`, `req_per_sec`,
+    /// `rows_per_sec`, `concurrency`, `latency`) mirror the keep-alive
+    /// phase so existing consumers keep working.
+    pub fn to_json(&self) -> Json {
+        let ka = &self.keep_alive;
+        let mut lat = BTreeMap::new();
+        lat.insert("mean_ms".to_string(), Json::from_f64(ka.mean_ms));
+        lat.insert("p50_ms".to_string(), Json::from_f64(ka.p50_ms));
+        lat.insert("p99_ms".to_string(), Json::from_f64(ka.p99_ms));
         let mut m = BTreeMap::new();
         m.insert(
             "schema".to_string(),
             Json::String("backbone-serve-selftest/v1".into()),
         );
         m.insert("learner".to_string(), Json::String(self.learner.into()));
-        m.insert("requests".to_string(), Json::Number(self.requests as f64));
-        m.insert("failed".to_string(), Json::Number(self.failed as f64));
-        m.insert("concurrency".to_string(), Json::Number(self.concurrency as f64));
+        // Legacy flat mirrors of the keep-alive phase.
+        m.insert("requests".to_string(), Json::Number(ka.requests as f64));
+        m.insert("failed".to_string(), Json::Number(self.total_failed() as f64));
+        m.insert("concurrency".to_string(), Json::Number(self.connections as f64));
         m.insert("batch_rows".to_string(), Json::Number(self.batch_rows as f64));
         m.insert("threads".to_string(), Json::Number(self.threads as f64));
-        m.insert("elapsed_secs".to_string(), Json::from_f64(self.elapsed_secs));
-        m.insert("req_per_sec".to_string(), Json::from_f64(self.req_per_sec));
-        m.insert("rows_per_sec".to_string(), Json::from_f64(self.rows_per_sec));
+        m.insert("elapsed_secs".to_string(), Json::from_f64(ka.elapsed_secs));
+        m.insert("req_per_sec".to_string(), Json::from_f64(ka.req_per_sec));
+        m.insert("rows_per_sec".to_string(), Json::from_f64(ka.rows_per_sec));
         m.insert("latency".to_string(), Json::Object(lat));
+        // PR-7 structured sections.
+        m.insert("connections".to_string(), Json::Number(self.connections as f64));
+        m.insert("keep_alive".to_string(), ka.to_json());
+        if let Some(close) = &self.close_mode {
+            m.insert("close_mode".to_string(), close.to_json());
+        }
+        if let Some(speedup) = self.keepalive_speedup {
+            m.insert("keepalive_speedup".to_string(), Json::from_f64(speedup));
+        }
+        if let Some(swap) = &self.swap {
+            let mut s = BTreeMap::new();
+            s.insert("status".to_string(), Json::Number(swap.status as f64));
+            s.insert("served_old".to_string(), Json::Number(swap.served_old as f64));
+            s.insert("served_new".to_string(), Json::Number(swap.served_new as f64));
+            s.insert(
+                "boundary_violations".to_string(),
+                Json::Number(swap.boundary_violations as f64),
+            );
+            m.insert("swap".to_string(), Json::Object(s));
+        }
+        if let Some(rps) = self.target_rps {
+            m.insert("target_rps".to_string(), Json::from_f64(rps));
+        }
+        if let Some(slo) = self.slo_p99_ms {
+            let mut s = BTreeMap::new();
+            s.insert("p99_ms".to_string(), Json::from_f64(slo));
+            s.insert("pass".to_string(), Json::Bool(self.slo_pass() == Some(true)));
+            m.insert("slo".to_string(), Json::Object(s));
+        }
+        m.insert("passed".to_string(), Json::Bool(self.passed()));
         Json::Object(m)
     }
 }
@@ -105,36 +290,177 @@ fn synth_batch(model: &LoadedModel, batch_rows: usize) -> Vec<Vec<f64>> {
         .collect()
 }
 
-/// One raw HTTP exchange; returns the response bytes.
+/// Render the predict request once; every client reuses the bytes.
+/// `close` controls the `Connection` header.
+fn render_request(body: &str, close: bool) -> Vec<u8> {
+    format!(
+        "POST /predict HTTP/1.1\r\nHost: selftest\r\nContent-Type: application/json\r\n\
+         Content-Length: {}{}\r\n\r\n{}",
+        body.len(),
+        if close { "\r\nConnection: close" } else { "" },
+        body
+    )
+    .into_bytes()
+}
+
+/// One connection-per-request exchange (close mode / the swap PUT).
 fn exchange(addr: SocketAddr, request: &[u8]) -> std::io::Result<Vec<u8>> {
     let mut stream = TcpStream::connect(addr)?;
-    stream.set_read_timeout(Some(std::time::Duration::from_secs(10)))?;
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
     stream.write_all(request)?;
     let mut response = Vec::new();
-    stream.read_to_end(&mut response)?;
+    std::io::Read::read_to_end(&mut stream, &mut response)?;
     Ok(response)
 }
 
-/// Check one response: 200, JSON body, predictions bit-identical to the
-/// locally computed ones.
-fn verify(response: &[u8], expected: &[f64]) -> bool {
-    let Ok((status, body)) = parse_response(response) else { return false };
-    if status != 200 {
-        return false;
-    }
-    let Ok(text) = std::str::from_utf8(&body) else { return false };
-    let Ok(doc) = Json::parse(text) else { return false };
-    let Some(preds) = doc.get("predictions").and_then(Json::as_array) else {
-        return false;
-    };
-    preds.len() == expected.len()
+/// Check one response body: predictions bit-identical to the locally
+/// computed ones. Returns the served `model_version` on success.
+fn verify_body(body: &[u8], expected: &[f64]) -> Option<u64> {
+    let text = std::str::from_utf8(body).ok()?;
+    let doc = Json::parse(text).ok()?;
+    let preds = doc.get("predictions").and_then(Json::as_array)?;
+    let ok = preds.len() == expected.len()
         && preds.iter().zip(expected).all(|(p, &e)| {
             p.as_f64_tagged().is_some_and(|v| v.to_bits() == e.to_bits())
-        })
+        });
+    if !ok {
+        return None;
+    }
+    Some(doc.get("model_version").and_then(Json::as_usize).unwrap_or(1) as u64)
 }
 
-/// Boot a server around `model`, hammer it from `cfg.concurrency` client
-/// threads, verify every response, and summarize.
+/// Close-mode check: 200 + verified body.
+fn verify_close(response: &[u8], expected: &[f64]) -> bool {
+    let Ok((status, body)) = parse_response(response) else { return false };
+    status == 200 && verify_body(&body, expected).is_some()
+}
+
+struct ClientOutcome {
+    latencies_ms: Vec<f64>,
+    failed: usize,
+    connections_opened: usize,
+    served_old: u64,
+    served_new: u64,
+    boundary_violations: u64,
+}
+
+/// One load client. With `reuse` it keeps a single persistent
+/// connection (reconnecting only on error); without it (the
+/// `--no-keep-alive` mode) it tears the socket down after every
+/// request. Either way it paces, verifies each body, and checks that
+/// `model_version` never goes backwards from its vantage point.
+///
+/// `sync` (request-count mode with swap-under-load) is the barrier that
+/// makes the swap deterministic: at its halfway request the client
+/// parks, the coordinator swaps once every client is parked, and the
+/// back half of the workload provably runs against the new version.
+#[allow(clippy::too_many_arguments)]
+fn load_client(
+    addr: SocketAddr,
+    request: &[u8],
+    expected: &[f64],
+    reuse: bool,
+    quota: usize,
+    deadline: Option<Instant>,
+    pace: Option<(Instant, f64, usize, usize)>, // (start, rps, client idx, stride)
+    sync: Option<(&AtomicU64, &AtomicBool)>,    // (parked count, swap landed)
+) -> ClientOutcome {
+    let mut out = ClientOutcome {
+        latencies_ms: Vec::with_capacity(quota),
+        failed: 0,
+        connections_opened: 0,
+        served_old: 0,
+        served_new: 0,
+        boundary_violations: 0,
+    };
+    let mut stream: Option<TcpStream> = None;
+    let mut max_version: u64 = 0;
+    let halfway = quota / 2;
+    let mut j = 0usize;
+    loop {
+        match deadline {
+            Some(d) => {
+                if Instant::now() >= d {
+                    break;
+                }
+            }
+            None => {
+                if j >= quota {
+                    break;
+                }
+            }
+        }
+        if let Some((parked, swap_done)) = sync {
+            if j == halfway {
+                parked.fetch_add(1, Ordering::Relaxed);
+                while !swap_done.load(Ordering::Relaxed) {
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            }
+        }
+        if let Some((start, rps, idx, stride)) = pace {
+            // Global request slots are interleaved across clients:
+            // client idx owns slots idx, idx+stride, idx+2·stride, …
+            let due = start + Duration::from_secs_f64((idx + j * stride) as f64 / rps);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        j += 1;
+        let sent = Instant::now();
+        // (Re)connect lazily; a connect failure consumes this slot.
+        if stream.is_none() {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+                    out.connections_opened += 1;
+                    stream = Some(s);
+                }
+                Err(_) => {
+                    out.failed += 1;
+                    continue;
+                }
+            }
+        }
+        let s = stream.as_mut().unwrap();
+        let result = s
+            .write_all(request)
+            .map_err(super::http::HttpError::Io)
+            .and_then(|()| read_response(s));
+        match result {
+            Ok((200, _headers, body)) => match verify_body(&body, expected) {
+                Some(version) => {
+                    out.latencies_ms.push(sent.elapsed().as_secs_f64() * 1e3);
+                    if version < max_version {
+                        out.boundary_violations += 1;
+                    }
+                    max_version = max_version.max(version);
+                    if version > 1 {
+                        out.served_new += 1;
+                    } else {
+                        out.served_old += 1;
+                    }
+                }
+                None => {
+                    out.failed += 1;
+                    // Response was parseable HTTP, connection stays usable.
+                }
+            },
+            Ok((_status, _headers, _body)) => out.failed += 1,
+            Err(_) => {
+                out.failed += 1;
+                stream = None; // force a reconnect for the next slot
+            }
+        }
+        if !reuse {
+            stream = None; // close-per-request mode
+        }
+    }
+    out
+}
+
+/// Boot a server around `model` and run the configured phases.
 pub fn run_self_test(model: LoadedModel, cfg: &SelfTestConfig) -> Result<SelfTestReport> {
     let learner = model.kind().name();
     let rows = synth_batch(&model, cfg.batch_rows);
@@ -142,99 +468,250 @@ pub fn run_self_test(model: LoadedModel, cfg: &SelfTestConfig) -> Result<SelfTes
         .try_predict(&Matrix::from_rows(&rows))
         .context("self-test batch rejected by the model")?;
 
-    // Pre-render the request bytes once; every client reuses them.
-    let rows_json = Json::Array(
-        rows.iter()
-            .map(|r| Json::Array(r.iter().map(|&v| Json::from_f64(v)).collect()))
-            .collect(),
-    );
     let body = {
+        let rows_json = Json::Array(
+            rows.iter()
+                .map(|r| Json::Array(r.iter().map(|&v| Json::from_f64(v)).collect()))
+                .collect(),
+        );
         let mut m = BTreeMap::new();
         m.insert("rows".to_string(), rows_json);
         Json::Object(m).to_string_compact()
     };
-    let request = format!(
-        "POST /predict HTTP/1.1\r\nHost: selftest\r\nContent-Type: application/json\r\n\
+    let ka_request = render_request(&body, false);
+    let close_request = render_request(&body, true);
+
+    // The swap payload is the same model re-wrapped as an artifact: the
+    // version bumps (so the boundary is observable) while the expected
+    // predictions stay valid on both sides of it.
+    let swap_artifact = ModelArtifact {
+        model: model.clone(),
+        provenance: Provenance {
+            crate_version: env!("CARGO_PKG_VERSION").to_string(),
+            seed: 0,
+            params: Json::Object(BTreeMap::new()),
+            config: Json::Object(BTreeMap::new()),
+            diagnostics: None,
+        },
+    }
+    .to_json()
+    .to_string_compact();
+    let swap_request = format!(
+        "PUT /models/default HTTP/1.1\r\nHost: selftest\r\nContent-Type: application/json\r\n\
          Content-Length: {}\r\nConnection: close\r\n\r\n{}",
-        body.len(),
-        body
+        swap_artifact.len(),
+        swap_artifact
     )
     .into_bytes();
 
-    let server = Server::bind(
-        "127.0.0.1:0",
-        model,
-        &ServeConfig { threads: cfg.threads, ..ServeConfig::default() },
-    )
-    .context("binding self-test server")?;
+    let serve_cfg = ServeConfig::builder().threads(cfg.threads).build()?;
+    let server =
+        Server::bind("127.0.0.1:0", model, &serve_cfg).context("binding self-test server")?;
     let addr = server.local_addr()?;
     let shutdown = server.shutdown_handle()?;
     let threads = crate::backbone::resolved_threads(cfg.threads);
 
     let total = cfg.requests.max(1);
-    let concurrency = cfg.concurrency.clamp(1, total);
+    let connections = cfg.connections.clamp(1, total);
+    let duration = cfg.duration_secs.map(Duration::from_secs_f64);
+    // The close-mode comparison only makes sense unpaced (pacing would
+    // cap both phases at the same rate) and against a keep-alive primary
+    // phase (otherwise both phases would measure the same thing).
+    let do_close = cfg.keep_alive && cfg.compare_close && cfg.target_rps.is_none();
 
-    let mut latencies_ms: Vec<f64> = Vec::with_capacity(total);
-    let mut failed = 0usize;
-    let started = Instant::now();
-    let elapsed = std::thread::scope(|scope| {
-        scope.spawn(move || server.run());
-        let clients: Vec<_> = (0..concurrency)
-            .map(|t| {
-                // Spread the remainder over the first threads.
-                let quota = total / concurrency + usize::from(t < total % concurrency);
-                let request = &request;
-                let expected = &expected;
-                scope.spawn(move || {
-                    let mut lat = Vec::with_capacity(quota);
-                    let mut bad = 0usize;
-                    for _ in 0..quota {
-                        let sent = Instant::now();
-                        match exchange(addr, request) {
-                            Ok(resp) if verify(&resp, expected) => {
-                                lat.push(sent.elapsed().as_secs_f64() * 1e3);
+    let mut report: Option<SelfTestReport> = None;
+    std::thread::scope(|scope| {
+        scope.spawn(|| server.run());
+
+        // -------------------------------------------------- keep-alive
+        let parked = AtomicU64::new(0);
+        let swap_done = AtomicBool::new(false);
+        let phase_over = AtomicBool::new(false);
+        let swap_status = AtomicU64::new(0);
+        let ka_started = Instant::now();
+        // Request-count mode gets the deterministic park/swap/resume
+        // barrier; duration mode triggers on wall clock at the midpoint
+        // (clients keep running for the whole back half, so the new
+        // version is always observed).
+        let barrier_mode = cfg.swap_under_load && duration.is_none();
+        let ka = {
+            let swap_at = match duration {
+                Some(d) => SwapTrigger::At(ka_started + d.mul_f64(0.5)),
+                None => SwapTrigger::AllParked(connections as u64),
+            };
+            std::thread::scope(|phase| {
+                if cfg.swap_under_load {
+                    let parked = &parked;
+                    let swap_done = &swap_done;
+                    let phase_over = &phase_over;
+                    let swap_status = &swap_status;
+                    let swap_request = &swap_request;
+                    phase.spawn(move || {
+                        loop {
+                            if phase_over.load(Ordering::Relaxed) {
+                                swap_done.store(true, Ordering::Relaxed);
+                                return; // phase ended before the trigger
                             }
-                            _ => bad += 1,
+                            let due = match swap_at {
+                                SwapTrigger::At(t) => Instant::now() >= t,
+                                SwapTrigger::AllParked(n) => {
+                                    parked.load(Ordering::Relaxed) >= n
+                                }
+                            };
+                            if due {
+                                break;
+                            }
+                            std::thread::sleep(Duration::from_millis(1));
                         }
-                    }
-                    (lat, bad)
-                })
+                        let status = exchange(addr, swap_request)
+                            .ok()
+                            .and_then(|resp| parse_response(&resp).ok())
+                            .map(|(status, _)| status as u64)
+                            .unwrap_or(0);
+                        swap_status.store(status, Ordering::Relaxed);
+                        // Release parked clients only after the swap
+                        // round-tripped: the back half of the workload is
+                        // guaranteed to see the new version.
+                        swap_done.store(true, Ordering::Relaxed);
+                    });
+                }
+                let reuse = cfg.keep_alive;
+                let clients: Vec<_> = (0..connections)
+                    .map(|t| {
+                        let quota =
+                            total / connections + usize::from(t < total % connections);
+                        let request = if reuse { &ka_request } else { &close_request };
+                        let expected = &expected;
+                        let deadline = duration.map(|d| ka_started + d);
+                        let pace = cfg
+                            .target_rps
+                            .map(|rps| (ka_started, rps, t, connections));
+                        let sync = barrier_mode.then_some((&parked, &swap_done));
+                        phase.spawn(move || {
+                            load_client(
+                                addr, request, expected, reuse, quota, deadline, pace, sync,
+                            )
+                        })
+                    })
+                    .collect();
+                let mut latencies = Vec::new();
+                let mut failed = 0usize;
+                let mut opened = 0usize;
+                let (mut old, mut new, mut violations) = (0u64, 0u64, 0u64);
+                for client in clients {
+                    let c = client.join().expect("self-test client panicked");
+                    latencies.extend(c.latencies_ms);
+                    failed += c.failed;
+                    opened += c.connections_opened;
+                    old += c.served_old;
+                    new += c.served_new;
+                    violations += c.boundary_violations;
+                }
+                phase_over.store(true, Ordering::Relaxed);
+                let elapsed = ka_started.elapsed().as_secs_f64();
+                (
+                    PhaseStats::from_latencies(latencies, failed, opened, elapsed, rows.len()),
+                    old,
+                    new,
+                    violations,
+                )
             })
-            .collect();
-        for client in clients {
-            let (lat, bad) = client.join().expect("self-test client panicked");
-            latencies_ms.extend(lat);
-            failed += bad;
-        }
-        let elapsed = started.elapsed().as_secs_f64();
-        shutdown.shutdown();
-        elapsed
-    });
+        };
+        let (ka_stats, served_old, served_new, violations) = ka;
 
-    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mean_ms = if latencies_ms.is_empty() {
-        f64::NAN
-    } else {
-        latencies_ms.iter().sum::<f64>() / latencies_ms.len() as f64
-    };
-    Ok(SelfTestReport {
-        learner,
-        requests: total,
-        failed,
-        concurrency,
-        batch_rows: rows.len(),
-        threads,
-        elapsed_secs: elapsed,
-        req_per_sec: if elapsed > 0.0 { total as f64 / elapsed } else { f64::NAN },
-        rows_per_sec: if elapsed > 0.0 {
-            (total * rows.len()) as f64 / elapsed
+        // -------------------------------------------------- close mode
+        let close_stats = if do_close {
+            let close_started = Instant::now();
+            let close_deadline = duration.map(|d| close_started + d);
+            let clients: Vec<_> = (0..connections)
+                .map(|t| {
+                    let quota = total / connections + usize::from(t < total % connections);
+                    let request = &close_request;
+                    let expected = &expected;
+                    scope.spawn(move || {
+                        let mut lat = Vec::with_capacity(quota);
+                        let mut bad = 0usize;
+                        let mut sent_count = 0usize;
+                        loop {
+                            match close_deadline {
+                                Some(d) => {
+                                    if Instant::now() >= d {
+                                        break;
+                                    }
+                                }
+                                None => {
+                                    if sent_count >= quota {
+                                        break;
+                                    }
+                                }
+                            }
+                            sent_count += 1;
+                            let sent = Instant::now();
+                            match exchange(addr, request) {
+                                Ok(resp) if verify_close(&resp, expected) => {
+                                    lat.push(sent.elapsed().as_secs_f64() * 1e3);
+                                }
+                                _ => bad += 1,
+                            }
+                        }
+                        (lat, bad, sent_count)
+                    })
+                })
+                .collect();
+            let mut latencies = Vec::new();
+            let mut failed = 0usize;
+            let mut opened = 0usize;
+            for client in clients {
+                let (lat, bad, sent) = client.join().expect("close-mode client panicked");
+                latencies.extend(lat);
+                failed += bad;
+                opened += sent;
+            }
+            let elapsed = close_started.elapsed().as_secs_f64();
+            Some(PhaseStats::from_latencies(latencies, failed, opened, elapsed, rows.len()))
         } else {
-            f64::NAN
-        },
-        mean_ms,
-        p50_ms: percentile(&latencies_ms, 0.50),
-        p99_ms: percentile(&latencies_ms, 0.99),
-    })
+            None
+        };
+
+        shutdown.shutdown();
+
+        let keepalive_speedup = close_stats.as_ref().and_then(|close| {
+            if close.req_per_sec > 0.0 && ka_stats.req_per_sec.is_finite() {
+                Some(ka_stats.req_per_sec / close.req_per_sec)
+            } else {
+                None
+            }
+        });
+        let swap = cfg.swap_under_load.then(|| SwapStats {
+            status: swap_status.load(Ordering::Relaxed) as u16,
+            served_old,
+            served_new,
+            boundary_violations: violations,
+        });
+        report = Some(SelfTestReport {
+            learner,
+            connections,
+            batch_rows: rows.len(),
+            threads,
+            keep_alive: ka_stats,
+            close_mode: close_stats,
+            keepalive_speedup,
+            swap,
+            target_rps: cfg.target_rps,
+            slo_p99_ms: cfg.slo_p99_ms,
+        });
+    });
+    Ok(report.expect("self-test scope completed without a report"))
+}
+
+/// When the mid-run hot swap fires.
+#[derive(Clone, Copy)]
+enum SwapTrigger {
+    /// Wall-clock trigger (duration mode): the phase midpoint.
+    At(Instant),
+    /// Barrier trigger (request-count mode): once this many clients
+    /// parked at their halfway request.
+    AllParked(u64),
 }
 
 #[cfg(test)]
@@ -256,22 +733,78 @@ mod tests {
     }
 
     #[test]
-    fn self_test_round_trips_with_zero_failures() {
+    fn self_test_round_trips_with_zero_failures_and_clean_swap() {
         let report = run_self_test(
             toy_model(),
-            &SelfTestConfig { requests: 24, concurrency: 3, batch_rows: 4, threads: 2 },
+            &SelfTestConfig {
+                requests: 24,
+                connections: 3,
+                batch_rows: 4,
+                threads: 2,
+                ..SelfTestConfig::quick()
+            },
         )
         .unwrap();
-        assert_eq!(report.requests, 24);
-        assert_eq!(report.failed, 0, "loopback self-test had failures");
-        assert!(report.req_per_sec > 0.0);
-        assert!(report.p50_ms >= 0.0 && report.p99_ms >= report.p50_ms);
+        assert_eq!(report.keep_alive.requests, 24);
+        assert_eq!(report.total_failed(), 0, "loopback self-test had failures");
+        assert!(report.keep_alive.req_per_sec > 0.0);
+        assert!(report.keep_alive.p99_ms >= report.keep_alive.p50_ms);
+        // Keep-alive means connections, not requests, opened sockets.
+        assert!(
+            report.keep_alive.connections_opened <= 3,
+            "keep-alive phase opened {} sockets for 24 requests",
+            report.keep_alive.connections_opened
+        );
+        let swap = report.swap.as_ref().expect("swap phase ran");
+        assert_eq!(swap.status, 200, "hot swap did not land");
+        assert_eq!(swap.boundary_violations, 0, "version went backwards");
+        assert!(swap.served_new > 0, "no request observed the swapped version");
+        assert!(report.passed(), "report must pass its own gate");
+
         let doc = report.to_json();
         assert_eq!(
             doc.get("schema").and_then(Json::as_str),
             Some("backbone-serve-selftest/v1")
         );
+        // Legacy flat mirrors stay.
         assert_eq!(doc.get("failed").and_then(Json::as_usize), Some(0));
+        assert_eq!(doc.get("requests").and_then(Json::as_usize), Some(24));
+        assert!(doc.get("req_per_sec").is_some());
+        // New sections present.
+        assert!(doc.get("keep_alive").is_some());
+        assert!(doc.get("close_mode").is_some());
+        assert!(doc.get("keepalive_speedup").is_some());
+        assert_eq!(
+            doc.get("swap").unwrap().get("boundary_violations").and_then(Json::as_usize),
+            Some(0)
+        );
+        assert_eq!(doc.get("passed").and_then(Json::as_bool), Some(true));
+    }
+
+    #[test]
+    fn slo_miss_fails_the_report_gate() {
+        let report = run_self_test(
+            toy_model(),
+            &SelfTestConfig {
+                requests: 8,
+                connections: 2,
+                batch_rows: 2,
+                threads: 1,
+                compare_close: false,
+                swap_under_load: false,
+                slo_p99_ms: Some(0.0), // impossible SLO
+                ..SelfTestConfig::quick()
+            },
+        )
+        .unwrap();
+        assert_eq!(report.total_failed(), 0);
+        assert_eq!(report.slo_pass(), Some(false));
+        assert!(!report.passed());
+        let doc = report.to_json();
+        assert_eq!(
+            doc.get("slo").unwrap().get("pass").and_then(Json::as_bool),
+            Some(false)
+        );
     }
 
     #[test]

@@ -1,27 +1,29 @@
-//! End-to-end tests of the prediction server over real TCP sockets:
-//! boot a `Server` on an ephemeral port, speak actual HTTP/1.1 to it,
-//! and check `/predict`, `/healthz`, `/stats`, error handling, and
-//! shutdown. Also drives the full artifact path: fit → save → load →
-//! serve → compare served predictions against the in-memory model.
+//! End-to-end tests of the model server over real TCP sockets: boot a
+//! `Server` on an ephemeral port, speak actual HTTP/1.1 to it, and check
+//! keep-alive reuse, path-routed multi-model predict, atomic hot swap
+//! under concurrent load, fit backpressure (429 + `Retry-After`), the
+//! versioned `/stats` document, and the full fit → save → load → serve
+//! artifact path.
 
 use backbone_learn::backbone::sparse_regression::SparseRegressionModel;
 use backbone_learn::backbone::{Backbone, Predict};
 use backbone_learn::data::sparse_regression;
 use backbone_learn::json::Json;
 use backbone_learn::linalg::Matrix;
-use backbone_learn::persist::{LoadedModel, ModelArtifact};
+use backbone_learn::persist::{LoadedModel, ModelArtifact, Provenance};
 use backbone_learn::rng::Rng;
-use backbone_learn::serve::http::parse_response;
+use backbone_learn::serve::http::{parse_response, read_response};
 use backbone_learn::serve::selftest::{run_self_test, SelfTestConfig};
 use backbone_learn::serve::{ServeConfig, Server};
 use backbone_learn::solvers::SolveStatus;
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpStream};
 
-fn toy_model() -> LoadedModel {
+fn toy_model_with_intercept(intercept: f64) -> LoadedModel {
     LoadedModel::SparseRegression(SparseRegressionModel {
         beta: vec![1.0, -1.0],
-        intercept: 0.5,
+        intercept,
         support: vec![0, 1],
         objective: 1.0,
         gap: 0.0,
@@ -29,7 +31,31 @@ fn toy_model() -> LoadedModel {
     })
 }
 
-/// One raw request/response exchange against `addr`.
+fn toy_model() -> LoadedModel {
+    toy_model_with_intercept(0.5)
+}
+
+/// Wrap a model as a `backbone-model/v1` artifact document (the
+/// `PUT /models/<id>` hot-swap payload).
+fn artifact_doc(model: LoadedModel) -> String {
+    ModelArtifact {
+        model,
+        provenance: Provenance {
+            crate_version: "test".into(),
+            seed: 0,
+            params: Json::Object(BTreeMap::new()),
+            config: Json::Object(BTreeMap::new()),
+            diagnostics: None,
+        },
+    }
+    .to_json()
+    .to_string_compact()
+}
+
+/// One connection-per-request exchange against `addr`. Sends
+/// `Connection: close` — against a keep-alive server, a `read_to_end`
+/// client that leaves the connection open would hang until the idle
+/// timeout.
 fn exchange(addr: SocketAddr, raw: &str) -> (u16, Json) {
     let mut stream = TcpStream::connect(addr).expect("connect");
     stream.write_all(raw.as_bytes()).expect("write");
@@ -41,27 +67,46 @@ fn exchange(addr: SocketAddr, raw: &str) -> (u16, Json) {
 }
 
 fn get(addr: SocketAddr, path: &str) -> (u16, Json) {
-    exchange(addr, &format!("GET {path} HTTP/1.1\r\nHost: t\r\n\r\n"))
+    exchange(
+        addr,
+        &format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n"),
+    )
+}
+
+fn request_raw(method: &str, path: &str, body: &str, close: bool) -> String {
+    format!(
+        "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}{}\r\n\r\n{body}",
+        body.len(),
+        if close { "\r\nConnection: close" } else { "" },
+    )
 }
 
 fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, Json) {
-    exchange(
-        addr,
-        &format!(
-            "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        ),
-    )
+    exchange(addr, &request_raw("POST", path, body, true))
+}
+
+fn put(addr: SocketAddr, path: &str, body: &str) -> (u16, Json) {
+    exchange(addr, &request_raw("PUT", path, body, true))
 }
 
 /// Boot a server, run `f` against it, shut it down.
 fn with_server(model: LoadedModel, f: impl FnOnce(SocketAddr)) {
-    with_server_cfg(model, ServeConfig { threads: 2, ..Default::default() }, f);
+    let cfg = ServeConfig::builder().threads(2).build().unwrap();
+    with_server_cfg(model, cfg, f);
 }
 
 /// Same, with an explicit config (fit service, warm cache, ...).
 fn with_server_cfg(model: LoadedModel, cfg: ServeConfig, f: impl FnOnce(SocketAddr)) {
-    let server = Server::bind("127.0.0.1:0", model, &cfg).expect("bind");
+    with_registry(vec![("default".to_string(), model)], cfg, f);
+}
+
+/// Same, with a named multi-model registry.
+fn with_registry(
+    models: Vec<(String, LoadedModel)>,
+    cfg: ServeConfig,
+    f: impl FnOnce(SocketAddr),
+) {
+    let server = Server::bind_registry("127.0.0.1:0", models, &cfg).expect("bind");
     let addr = server.local_addr().expect("addr");
     let shutdown = server.shutdown_handle().expect("handle");
     std::thread::scope(|scope| {
@@ -83,6 +128,8 @@ fn healthz_reports_model_identity() {
             Some("sparse_regression")
         );
         assert_eq!(body.get("num_features").and_then(Json::as_usize), Some(2));
+        assert_eq!(body.get("default_model").and_then(Json::as_str), Some("default"));
+        assert_eq!(body.get("model_version").and_then(Json::as_usize), Some(1));
     });
 }
 
@@ -101,14 +148,28 @@ fn predict_serves_batches_and_stats_count_them() {
             .collect();
         assert_eq!(preds, vec![1.5, -0.5, 0.5]);
         assert_eq!(body.get("rows").and_then(Json::as_usize), Some(3));
+        assert_eq!(body.get("model").and_then(Json::as_str), Some("default"));
+        assert_eq!(body.get("model_version").and_then(Json::as_usize), Some(1));
 
         let (status, stats) = get(addr, "/stats");
         assert_eq!(status, 200);
+        // Versioned document with the pre-PR-7 flat keys still in place.
+        assert_eq!(
+            stats.get("schema").and_then(Json::as_str),
+            Some("backbone-serve-stats/v1")
+        );
         assert_eq!(stats.get("predict_requests").and_then(Json::as_usize), Some(1));
         assert_eq!(stats.get("rows_predicted").and_then(Json::as_usize), Some(3));
         assert_eq!(stats.get("failures").and_then(Json::as_usize), Some(0));
         let lat = stats.get("latency").unwrap();
         assert_eq!(lat.get("count").and_then(Json::as_usize), Some(1));
+        // New PR-7 sections: per-model accounting + connection counter.
+        let default = stats.get("models").unwrap().get("default").unwrap();
+        assert_eq!(default.get("requests").and_then(Json::as_usize), Some(1));
+        assert_eq!(default.get("rows_predicted").and_then(Json::as_usize), Some(3));
+        assert_eq!(default.get("version").and_then(Json::as_usize), Some(1));
+        assert!(stats.get("connections").and_then(Json::as_usize).unwrap() >= 1);
+        assert_eq!(stats.get("swaps").and_then(Json::as_usize), Some(0));
     });
 }
 
@@ -133,6 +194,248 @@ fn bad_requests_get_4xx_json_errors() {
         // Failed requests never enter the latency profile.
         let lat = stats.get("latency").unwrap();
         assert_eq!(lat.get("count").and_then(Json::as_usize), Some(0));
+    });
+}
+
+#[test]
+fn keep_alive_serves_many_requests_on_one_connection() {
+    with_server(toy_model(), |addr| {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        let predict = request_raw("POST", "/predict", r#"{"rows": [[1, 0]]}"#, false);
+        for i in 0..5 {
+            stream.write_all(predict.as_bytes()).expect("write");
+            let (status, headers, body) = read_response(&mut stream).expect("response");
+            assert_eq!(status, 200, "request {i} on the shared connection");
+            assert!(
+                headers
+                    .iter()
+                    .any(|(k, v)| k == "connection" && v.eq_ignore_ascii_case("keep-alive")),
+                "server must advertise keep-alive: {headers:?}"
+            );
+            let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            assert_eq!(
+                doc.get("predictions").unwrap().as_array().unwrap()[0].as_f64(),
+                Some(1.5)
+            );
+        }
+        // /stats over the SAME socket: everything so far was one
+        // connection carrying six requests.
+        stream
+            .write_all(b"GET /stats HTTP/1.1\r\nHost: t\r\n\r\n")
+            .expect("write stats");
+        let (status, _, body) = read_response(&mut stream).expect("stats response");
+        assert_eq!(status, 200);
+        let stats = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+        assert_eq!(
+            stats.get("connections").and_then(Json::as_usize),
+            Some(1),
+            "5 predicts + 1 stats over one socket must count one connection"
+        );
+        assert_eq!(stats.get("requests_total").and_then(Json::as_usize), Some(6));
+    });
+}
+
+#[test]
+fn path_routed_predict_and_models_listing() {
+    let cfg = ServeConfig::builder().threads(2).build().unwrap();
+    let models = vec![
+        ("alpha".to_string(), toy_model_with_intercept(0.5)),
+        ("beta".to_string(), toy_model_with_intercept(2.5)),
+    ];
+    with_registry(models, cfg, |addr| {
+        // Unqualified /predict goes to the first registration.
+        let (status, body) = post(addr, "/predict", r#"{"rows": [[1, 0]]}"#);
+        assert_eq!(status, 200, "{body:?}");
+        assert_eq!(body.get("model").and_then(Json::as_str), Some("alpha"));
+        assert_eq!(
+            body.get("predictions").unwrap().as_array().unwrap()[0].as_f64(),
+            Some(1.5)
+        );
+
+        // Path routing addresses each model by id.
+        let (status, body) = post(addr, "/models/beta/predict", r#"{"rows": [[1, 0]]}"#);
+        assert_eq!(status, 200, "{body:?}");
+        assert_eq!(body.get("model").and_then(Json::as_str), Some("beta"));
+        assert_eq!(
+            body.get("predictions").unwrap().as_array().unwrap()[0].as_f64(),
+            Some(3.5)
+        );
+
+        let (status, body) = post(addr, "/models/gone/predict", r#"{"rows": [[1, 0]]}"#);
+        assert_eq!(status, 404, "{body:?}");
+
+        // The registry listing names both, with alpha as default.
+        let (status, listing) = get(addr, "/models");
+        assert_eq!(status, 200);
+        assert_eq!(
+            listing.get("schema").and_then(Json::as_str),
+            Some("backbone-models/v1")
+        );
+        assert_eq!(listing.get("default").and_then(Json::as_str), Some("alpha"));
+        assert_eq!(listing.get("count").and_then(Json::as_usize), Some(2));
+        let ids: Vec<&str> = listing
+            .get("models")
+            .unwrap()
+            .as_array()
+            .unwrap()
+            .iter()
+            .map(|m| m.get("id").and_then(Json::as_str).unwrap())
+            .collect();
+        assert_eq!(ids, vec!["alpha", "beta"]);
+    });
+}
+
+#[test]
+fn hot_swap_is_atomic_under_concurrent_load() {
+    // 4 workers: three persistent keep-alive clients each pin one, and
+    // the PUT that performs the swap still needs a free worker mid-load.
+    let cfg = ServeConfig::builder().threads(4).build().unwrap();
+    with_server_cfg(toy_model(), cfg, |addr| {
+        // Baseline: v1 serves intercept 0.5 → [1.5].
+        let (status, body) = post(addr, "/predict", r#"{"rows": [[1, 0]]}"#);
+        assert_eq!(status, 200, "{body:?}");
+        assert_eq!(body.get("model_version").and_then(Json::as_usize), Some(1));
+
+        // Hammer /predict from several keep-alive connections while the
+        // main thread swaps in an artifact with intercept +1. Every
+        // response must be 200, carry a prediction consistent with its
+        // reported version, and versions must never go backwards on a
+        // connection.
+        let swap_body = artifact_doc(toy_model_with_intercept(1.5));
+        std::thread::scope(|scope| {
+            let clients: Vec<_> = (0..3)
+                .map(|_| {
+                    scope.spawn(move || {
+                        let mut stream = TcpStream::connect(addr).expect("connect");
+                        let predict =
+                            request_raw("POST", "/predict", r#"{"rows": [[1, 0]]}"#, false);
+                        let mut max_version = 0usize;
+                        let mut served = [0usize; 2]; // [old, new]
+                        for _ in 0..40 {
+                            stream.write_all(predict.as_bytes()).expect("write");
+                            let (status, _, body) =
+                                read_response(&mut stream).expect("response");
+                            assert_eq!(status, 200, "a request dropped during hot swap");
+                            let doc =
+                                Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+                            let version =
+                                doc.get("model_version").and_then(Json::as_usize).unwrap();
+                            let pred = doc.get("predictions").unwrap().as_array().unwrap()
+                                [0]
+                            .as_f64()
+                            .unwrap();
+                            // Prediction must match the version the
+                            // response claims — the old Arc serves old
+                            // numbers, the new Arc new ones, never a mix.
+                            let expected = if version >= 2 { 2.5 } else { 1.5 };
+                            assert_eq!(pred, expected, "version {version} served {pred}");
+                            assert!(version >= max_version, "version went backwards");
+                            max_version = version;
+                            served[usize::from(version >= 2)] += 1;
+                        }
+                        served
+                    })
+                })
+                .collect();
+
+            // Let the clients get going, then swap mid-flight.
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            let (status, body) = put(addr, "/models/default", &swap_body);
+            assert_eq!(status, 200, "{body:?}");
+            assert_eq!(body.get("version").and_then(Json::as_usize), Some(2));
+            assert_eq!(body.get("swapped").and_then(Json::as_bool), Some(true));
+
+            for client in clients {
+                client.join().expect("client panicked");
+            }
+        });
+
+        // After the dust settles the new version serves everywhere.
+        let (status, body) = post(addr, "/predict", r#"{"rows": [[1, 0]]}"#);
+        assert_eq!(status, 200);
+        assert_eq!(body.get("model_version").and_then(Json::as_usize), Some(2));
+        assert_eq!(
+            body.get("predictions").unwrap().as_array().unwrap()[0].as_f64(),
+            Some(2.5)
+        );
+
+        // Stats: exactly one swap, model section at version 2.
+        let (_, stats) = get(addr, "/stats");
+        assert_eq!(stats.get("swaps").and_then(Json::as_usize), Some(1));
+        let default = stats.get("models").unwrap().get("default").unwrap();
+        assert_eq!(default.get("version").and_then(Json::as_usize), Some(2));
+        assert_eq!(default.get("source").and_then(Json::as_str), Some("swapped"));
+
+        // Reserved fitted ids reject swaps; garbage bodies are 400s.
+        let (status, _) = put(addr, "/models/m1", &artifact_doc(toy_model()));
+        assert_eq!(status, 409, "m<N> ids are reserved for fitted models");
+        let (status, _) = put(addr, "/models/default", "{}");
+        assert_eq!(status, 400);
+    });
+}
+
+#[test]
+fn fit_backpressure_replies_429_with_retry_after() {
+    // One fit slot; a deliberately heavy fit occupies it while a second
+    // submission must bounce with 429 + Retry-After (header and body).
+    let cfg = ServeConfig::builder()
+        .threads(3)
+        .enable_fit(true)
+        .max_concurrent_fits(1)
+        .retry_after_secs(7)
+        .build()
+        .unwrap();
+    with_server_cfg(toy_model(), cfg, |addr| {
+        // ~160×1200 dense instance: big enough that the solve is still
+        // running while we probe, small enough to finish in seconds.
+        let (n, p) = (160usize, 1200usize);
+        let mut rows = Vec::with_capacity(n);
+        let mut y = Vec::with_capacity(n);
+        for i in 0..n {
+            let row: Vec<Json> = (0..p)
+                .map(|j| Json::from_f64(((i * 31 + j * 7) % 11) as f64 * 0.25 - 1.25))
+                .collect();
+            y.push(Json::from_f64((i % 13) as f64 * 0.5 - 3.0));
+            rows.push(Json::Array(row));
+        }
+        let mut doc = BTreeMap::new();
+        doc.insert("x".to_string(), Json::Array(rows));
+        doc.insert("y".to_string(), Json::Array(y));
+        doc.insert("k".to_string(), Json::Number(3.0));
+        doc.insert("m".to_string(), Json::Number(4.0));
+        let slow_body = Json::Object(doc).to_string_compact();
+
+        std::thread::scope(|scope| {
+            let slow = scope.spawn(|| post(addr, "/fit", &slow_body));
+
+            // Wait until the slow fit holds the slot.
+            loop {
+                let (_, stats) = get(addr, "/stats");
+                if stats.get("fits_in_flight").and_then(Json::as_usize) >= Some(1) {
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+
+            // Second fit while the slot is held: full 429 contract.
+            let tiny = r#"{"x": [[1, 0], [2, 1], [3, 0], [4, 1]], "y": [2, 4, 6, 8], "k": 1}"#;
+            let mut stream = TcpStream::connect(addr).expect("connect");
+            stream
+                .write_all(request_raw("POST", "/fit", tiny, true).as_bytes())
+                .expect("write");
+            let (status, headers, body) = read_response(&mut stream).expect("response");
+            assert_eq!(status, 429, "{}", String::from_utf8_lossy(&body));
+            assert!(
+                headers.iter().any(|(k, v)| k == "retry-after" && v == "7"),
+                "Retry-After header missing: {headers:?}"
+            );
+            let doc = Json::parse(std::str::from_utf8(&body).unwrap()).unwrap();
+            assert!(doc.get("error").is_some());
+            assert_eq!(doc.get("retry_after_secs").and_then(Json::as_usize), Some(7));
+
+            let (status, first) = slow.join().expect("slow fit panicked");
+            assert_eq!(status, 200, "{first:?}");
+        });
     });
 }
 
@@ -208,12 +511,12 @@ fn fit_service_learns_and_serves_warm_starts_end_to_end() {
         r#" [5, 0, 0], [6, 1, 0], [7, 0, 1], [8, 1, 1]],"#,
         r#" "y": [2, 4, 6, 8, 10, 12, 14, 16], "k": 1, "m": 2}"#
     );
-    let cfg = ServeConfig {
-        threads: 2,
-        enable_fit: true,
-        warm_cache_path: Some(cache.clone()),
-        ..Default::default()
-    };
+    let cfg = ServeConfig::builder()
+        .threads(2)
+        .enable_fit(true)
+        .warm_cache_path(Some(cache.clone()))
+        .build()
+        .unwrap();
     with_server_cfg(toy_model(), cfg.clone(), |addr| {
         let (status, first) = post(addr, "/fit", body);
         assert_eq!(status, 200, "{first:?}");
@@ -221,8 +524,7 @@ fn fit_service_learns_and_serves_warm_starts_end_to_end() {
         assert_eq!(warm.get("hit").and_then(Json::as_str), Some("none"));
         let id = first.get("model_id").and_then(Json::as_str).unwrap().to_string();
 
-        // Served immediately by the registry path. y = 2·x₀; the small
-        // default ridge penalty shrinks the slope slightly.
+        // Served by the body-field route (pre-PR-7 contract)...
         let (status, pred) = post(
             addr,
             "/predict",
@@ -234,6 +536,12 @@ fn fit_service_learns_and_serves_warm_starts_end_to_end() {
             .unwrap();
         assert!((p - 20.0).abs() < 0.1, "prediction {p}");
 
+        // ...and by the PR-7 path route.
+        let (status, pred) =
+            post(addr, &format!("/models/{id}/predict"), r#"{"rows": [[10, 0, 0]]}"#);
+        assert_eq!(status, 200, "{pred:?}");
+        assert_eq!(pred.get("model").and_then(Json::as_str), Some(id.as_str()));
+
         let (status, second) = post(addr, "/fit", body);
         assert_eq!(status, 200, "{second:?}");
         assert_eq!(
@@ -244,7 +552,7 @@ fn fit_service_learns_and_serves_warm_starts_end_to_end() {
         let o2 = second.get("objective").and_then(Json::as_f64_tagged).unwrap();
         assert_eq!(o1.to_bits(), o2.to_bits(), "exact hit must reproduce the objective");
 
-        // Per-route accounting: two fits, one predict.
+        // Per-route accounting: two fits, two predicts.
         let (_, stats) = get(addr, "/stats");
         let routes = stats.get("routes").unwrap();
         let fit_route = routes.get("fit").unwrap();
@@ -253,7 +561,7 @@ fn fit_service_learns_and_serves_warm_starts_end_to_end() {
         assert_eq!(fit_route.get("failures").and_then(Json::as_usize), Some(0));
         assert_eq!(
             routes.get("predict").unwrap().get("requests").and_then(Json::as_usize),
-            Some(1)
+            Some(2)
         );
     });
 
@@ -274,11 +582,18 @@ fn fit_service_learns_and_serves_warm_starts_end_to_end() {
 fn self_test_harness_reports_zero_failures() {
     let report = run_self_test(
         toy_model(),
-        &SelfTestConfig { requests: 16, concurrency: 2, batch_rows: 8, threads: 2 },
+        &SelfTestConfig {
+            requests: 16,
+            connections: 2,
+            batch_rows: 8,
+            threads: 2,
+            ..SelfTestConfig::quick()
+        },
     )
     .unwrap();
-    assert_eq!(report.failed, 0);
-    assert_eq!(report.requests, 16);
-    assert!(report.req_per_sec > 0.0);
-    assert!(report.p99_ms >= report.p50_ms);
+    assert_eq!(report.total_failed(), 0);
+    assert_eq!(report.keep_alive.requests, 16);
+    assert!(report.keep_alive.req_per_sec > 0.0);
+    assert!(report.keep_alive.p99_ms >= report.keep_alive.p50_ms);
+    assert!(report.passed());
 }

@@ -5,7 +5,7 @@
 //! backbone-learn fit    --problem sr|dt|cl [--n N --p P --k K --alpha A --beta B --m M --seed S --threads N] [--warm-cache FILE] [--out FILE]
 //! backbone-learn save    --learner sr|lr|dt|cl --out model.json [fit args] [--data-out rows.csv]
 //! backbone-learn predict --model model.json --data rows.csv [--labels y.csv] [--out preds.json]
-//! backbone-learn serve   --model [name=]model.json [--model name=other.json ...] [--port P] [--threads N] [--fit] [--warm-cache FILE] [--self-test [--quick]]
+//! backbone-learn serve   --model [name=]model.json [--model name=other.json ...] [--port P] [--threads N] [--max-connections N] [--fit] [--warm-cache FILE] [--self-test [--quick]]
 //! backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl] [--threads N]
 //! backbone-learn bench  [--quick] [--warm] [--reps N] [--budget SECS] [--out FILE]
 //! backbone-learn dump-config --problem sr|dt|cl [--full]
@@ -55,12 +55,16 @@ USAGE:
   backbone-learn serve   --model [name=]model.json [--model name=other.json ...]
                          [--host H] [--port P] [--threads N] [--fit]
                          [--warm-cache store.json] [--max-fits N] [--max-inflight N]
-                         [--read-timeout SECS] [--idle-timeout SECS] [--no-keep-alive]
-                         (keep-alive HTTP model server: POST /predict,
+                         [--max-connections N] [--read-timeout SECS]
+                         [--idle-timeout SECS] [--no-keep-alive]
+                         (keep-alive HTTP model server, one handler thread per
+                          connection bounded by --max-connections (default 64,
+                          saturation → 503 + Retry-After): POST /predict,
                           POST /models/<id>/predict, PUT /models/<id> hot swap,
                           GET /models, GET /healthz, GET /stats; --fit adds
-                          POST /fit — online fits with a learned warm-start
-                          cache; overload → 429 + Retry-After)
+                          POST /fit — online fits on --threads solver threads
+                          with a learned warm-start cache; overload → 429 +
+                          Retry-After)
   backbone-learn serve   --model model.json --self-test [--quick] [--requests N]
                          [--connections C] [--batch B] [--target-rps R]
                          [--duration SECS] [--slo-p99-ms MS] [--no-keep-alive]

@@ -431,6 +431,7 @@ pub fn serve(args: &Args) -> Result<i32> {
         .keep_alive(!args.flag("no-keep-alive"))
         .read_timeout(duration_arg("read-timeout", defaults.read_timeout())?)
         .idle_timeout(duration_arg("idle-timeout", defaults.idle_timeout())?)
+        .max_connections(args.get_usize("max-connections", defaults.max_connections())?)
         .max_concurrent_fits(args.get_usize("max-fits", defaults.max_concurrent_fits())?)
         .max_inflight_predicts(
             args.get_usize("max-inflight", defaults.max_inflight_predicts())?,
@@ -444,10 +445,12 @@ pub fn serve(args: &Args) -> Result<i32> {
         .with_context(|| format!("binding `{addr}`"))?;
     let bound = server.local_addr()?;
     println!(
-        "serving {} model(s) on http://{bound} ({} threads, keep-alive {})",
+        "serving {} model(s) on http://{bound} (keep-alive {}, up to {} connections, \
+         {} fit thread(s))",
         models.len(),
+        if cfg.keep_alive() { "on" } else { "off" },
+        cfg.max_connections(),
         crate::backbone::resolved_threads(threads),
-        if cfg.keep_alive() { "on" } else { "off" }
     );
     for (name, _, learner, path) in &models {
         println!("  model {name}: {learner} from {path}");

@@ -108,6 +108,7 @@ pub fn parse_model_spec(spec: &str, index: usize) -> Result<(String, String), Se
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     threads: usize,
+    max_connections: usize,
     max_body_bytes: usize,
     read_timeout: Duration,
     idle_timeout: Duration,
@@ -128,9 +129,21 @@ impl ServeConfig {
         ServeConfigBuilder::default()
     }
 
-    /// Worker threads accepting and handling connections (0 = all cores).
+    /// Solver threads used by online fits (`POST /fit`; 0 = all cores).
+    /// Serving concurrency is *not* thread-pool-sized: one acceptor
+    /// hands each connection to a dedicated handler thread, bounded by
+    /// [`max_connections`](Self::max_connections).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Cap on concurrently open connections (each owns one handler
+    /// thread). Connections beyond the cap are answered `503` +
+    /// `Retry-After` and closed — explicit backpressure instead of
+    /// sitting unaccepted in the listen backlog behind long-lived
+    /// keep-alive clients.
+    pub fn max_connections(&self) -> usize {
+        self.max_connections
     }
 
     /// Cap on a request body (the batched rows payload).
@@ -157,9 +170,9 @@ impl ServeConfig {
     }
 
     /// Requests served on one connection before the server closes it
-    /// (0 = unlimited). A rebalancing valve: with one worker per live
-    /// connection, this bounds how long a single chatty client can pin
-    /// a worker.
+    /// (0 = unlimited). A hygiene valve: bounds how long a single socket
+    /// (and its handler thread) can live before the client must
+    /// reconnect through admission.
     pub fn max_requests_per_conn(&self) -> usize {
         self.max_requests_per_conn
     }
@@ -219,6 +232,7 @@ impl Default for ServeConfig {
 #[derive(Debug, Clone)]
 pub struct ServeConfigBuilder {
     threads: usize,
+    max_connections: usize,
     max_body_bytes: usize,
     read_timeout: Duration,
     idle_timeout: Duration,
@@ -237,6 +251,7 @@ impl Default for ServeConfigBuilder {
     fn default() -> Self {
         Self {
             threads: 2,
+            max_connections: 64,
             max_body_bytes: 8 * 1024 * 1024,
             read_timeout: Duration::from_secs(10),
             idle_timeout: Duration::from_secs(5),
@@ -256,6 +271,11 @@ impl Default for ServeConfigBuilder {
 impl ServeConfigBuilder {
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    pub fn max_connections(mut self, n: usize) -> Self {
+        self.max_connections = n;
         self
     }
 
@@ -333,6 +353,9 @@ impl ServeConfigBuilder {
         if self.retry_after_secs == 0 {
             return Err(ServeError::ZeroDuration { what: "retry_after_secs" });
         }
+        if self.max_connections == 0 {
+            return Err(ServeError::ZeroCapacity { what: "max_connections" });
+        }
         if self.max_concurrent_fits == 0 {
             return Err(ServeError::ZeroCapacity { what: "max_concurrent_fits" });
         }
@@ -344,6 +367,7 @@ impl ServeConfigBuilder {
         }
         Ok(ServeConfig {
             threads: self.threads,
+            max_connections: self.max_connections,
             max_body_bytes: self.max_body_bytes,
             read_timeout: self.read_timeout,
             idle_timeout: self.idle_timeout,
@@ -431,6 +455,7 @@ mod tests {
         let cfg = ServeConfig::default();
         assert_eq!(cfg.threads(), 2);
         assert!(cfg.keep_alive());
+        assert_eq!(cfg.max_connections(), 64);
         assert_eq!(cfg.max_concurrent_fits(), 1);
         assert_eq!(cfg.retry_after_secs(), 1);
         assert_eq!(cfg.max_inflight_predicts(), 0, "unlimited by default");
@@ -460,6 +485,10 @@ mod tests {
         assert_eq!(
             ServeConfig::builder().registry_capacity(0).build().unwrap_err(),
             ServeError::ZeroCapacity { what: "registry_capacity" }
+        );
+        assert_eq!(
+            ServeConfig::builder().max_connections(0).build().unwrap_err(),
+            ServeError::ZeroCapacity { what: "max_connections" }
         );
     }
 

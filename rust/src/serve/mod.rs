@@ -8,7 +8,11 @@
 //! - **Keep-alive** — each accepted connection runs a request loop
 //!   (HTTP/1.1 semantics; `Connection: close` opts out) with separate
 //!   read and idle timeouts, so a client paying one TCP handshake can
-//!   stream thousands of predict calls.
+//!   stream thousands of predict calls. One acceptor hands each
+//!   connection to a dedicated handler thread (bounded by
+//!   `max_connections`; excess connections get an immediate `503` +
+//!   `Retry-After`), so long-lived clients can never starve new
+//!   connections, health probes, or the hot-swap `PUT` out of `accept`.
 //! - **Multi-model, path-routed** — a versioned [`registry`] holds
 //!   named models (`--model name=path`, pinned) next to online-fitted
 //!   ones (`m1`, `m2`, … bounded FIFO); `POST /models/<id>/predict`
@@ -56,6 +60,10 @@ use std::time::Instant;
 
 /// Schema tag of the `GET /stats` payload.
 pub const STATS_SCHEMA: &str = "backbone-serve-stats/v1";
+
+/// How long the acceptor waits to drain a rejected connection's request
+/// bytes before answering 503. Bounds acceptor stall at saturation.
+const REJECT_DRAIN_MS: u64 = 50;
 
 /// Sliding window of recent request latencies (microseconds). Bounded so
 /// `/stats` stays O(window) regardless of uptime; the lifetime request
@@ -176,6 +184,10 @@ pub struct ServerStats {
     /// Connections that delivered at least one parseable request — the
     /// keep-alive reuse denominator (requests_total / connections).
     pub(crate) connections: AtomicU64,
+    /// Connections turned away with `503` because `max_connections`
+    /// handlers were already live (admission happens before any request
+    /// is read, so these never enter the request counters).
+    pub(crate) rejected_connections: AtomicU64,
     pub(crate) predict: RouteStats,
     pub(crate) fit: RouteStats,
 }
@@ -186,6 +198,7 @@ impl ServerStats {
             requests: AtomicU64::new(0),
             failures: AtomicU64::new(0),
             connections: AtomicU64::new(0),
+            rejected_connections: AtomicU64::new(0),
             predict: RouteStats::new(),
             fit: RouteStats::new(),
         }
@@ -199,7 +212,11 @@ pub struct ServerState {
     pub(crate) stats: ServerStats,
     pub(crate) started: Instant,
     pub(crate) shutdown: AtomicBool,
+    /// Resolved solver thread count used by online fits (`POST /fit`);
+    /// serving concurrency is per-connection, not thread-pool-sized.
     pub(crate) threads: usize,
+    /// Live connection handlers; the `max_connections` admission gate.
+    pub(crate) open_connections: AtomicU64,
     /// Fits currently executing; the admission gate for bounded queueing.
     pub(crate) fits_in_flight: AtomicU64,
     /// Predicts currently executing; gate when `max_inflight_predicts`>0.
@@ -240,6 +257,7 @@ impl ServerState {
             started: Instant::now(),
             shutdown: AtomicBool::new(false),
             threads,
+            open_connections: AtomicU64::new(0),
             fits_in_flight: AtomicU64::new(0),
             predicts_in_flight: AtomicU64::new(0),
             registry: Mutex::new(registry),
@@ -279,9 +297,22 @@ impl ServerState {
             "connections".into(),
             Json::Number(self.stats.connections.load(Ordering::Relaxed) as f64),
         );
+        m.insert(
+            "open_connections".into(),
+            Json::Number(self.open_connections.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "connections_rejected".into(),
+            Json::Number(self.stats.rejected_connections.load(Ordering::Relaxed) as f64),
+        );
         // Legacy top-level mirrors of `routes.predict` (deprecated).
-        let (predict_ok, _) = self.stats.predict.latency.lock().unwrap().snapshot();
-        m.insert("predict_requests".into(), Json::Number(predict_ok as f64));
+        // `predict_requests` mirrors `routes.predict.requests` exactly —
+        // attempts including 4xx — so pre-PR-7 consumers keep the
+        // semantics the key always had.
+        m.insert(
+            "predict_requests".into(),
+            Json::Number(self.stats.predict.requests.load(Ordering::Relaxed) as f64),
+        );
         m.insert(
             "rows_predicted".into(),
             Json::Number(self.stats.predict.units.load(Ordering::Relaxed) as f64),
@@ -322,10 +353,11 @@ pub struct Server {
 }
 
 /// Handle for stopping a running server from another thread: sets the
-/// shutdown flag, then pokes the listener once per worker so every
-/// blocked `accept` wakes up and observes it. Workers inside a
-/// keep-alive request loop exit at the next request boundary (or when
-/// their client hangs up / the idle timeout fires).
+/// shutdown flag, then pokes the listener so the blocked `accept` wakes
+/// up and observes it. Handlers inside a keep-alive request loop exit at
+/// the next request boundary (or when their client hangs up / the idle
+/// timeout fires); `run` returns once the acceptor and every live
+/// handler have finished.
 pub struct ShutdownHandle {
     addr: SocketAddr,
     state: Arc<ServerState>,
@@ -334,9 +366,7 @@ pub struct ShutdownHandle {
 impl ShutdownHandle {
     pub fn shutdown(&self) {
         self.state.shutdown.store(true, Ordering::SeqCst);
-        for _ in 0..self.state.threads {
-            let _ = TcpStream::connect(self.addr);
-        }
+        let _ = TcpStream::connect(self.addr);
     }
 }
 
@@ -383,36 +413,71 @@ impl Server {
         Ok(ShutdownHandle { addr: self.local_addr()?, state: Arc::clone(&self.state) })
     }
 
-    /// Accept and serve connections on the configured worker threads
-    /// until the shutdown flag is raised. Blocks the calling thread.
+    /// Accept connections and serve each on its own handler thread until
+    /// the shutdown flag is raised. Blocks the calling thread.
+    ///
+    /// A single acceptor never does request work, so a full set of
+    /// long-lived keep-alive clients cannot stop new connections (health
+    /// probes, the hot-swap `PUT`) from being accepted. Concurrency is
+    /// bounded by `max_connections`: once that many handlers are live,
+    /// further connections are answered `503` + `Retry-After` and closed
+    /// instead of queueing invisibly in the accept backlog. Returns once
+    /// every live handler has finished after shutdown.
     pub fn run(self) {
         let listener = &self.listener;
         let state = &self.state;
         let router = &self.router;
         std::thread::scope(|scope| {
-            for _ in 0..state.threads {
+            loop {
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                let Ok((mut stream, _peer)) = listener.accept() else {
+                    // Persistent accept failures (e.g. fd exhaustion)
+                    // must not become a busy-spin that starves the
+                    // connections already open.
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    continue;
+                };
+                // Admission check before any request is read: only the
+                // acceptor touches the gate going up, so load-then-spawn
+                // cannot over-admit (handler exits only decrement).
+                let cap = state.cfg.max_connections() as u64;
+                if state.open_connections.load(Ordering::SeqCst) >= cap {
+                    state.stats.rejected_connections.fetch_add(1, Ordering::Relaxed);
+                    let extra =
+                        [("Retry-After", state.cfg.retry_after_secs().to_string())];
+                    let _ = stream.set_write_timeout(Some(state.cfg.read_timeout()));
+                    // Best-effort drain of the request the client already
+                    // sent: closing a socket with unread bytes RSTs the
+                    // connection and can destroy the 503 before the
+                    // client reads it.
+                    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(
+                        REJECT_DRAIN_MS,
+                    )));
+                    let mut scratch = [0u8; 1024];
+                    let _ = std::io::Read::read(&mut stream, &mut scratch);
+                    let _ = write_json(
+                        &mut stream,
+                        503,
+                        "Service Unavailable",
+                        &error_body("server at connection capacity; retry shortly"),
+                        &WriteOptions { extra_headers: &extra, ..WriteOptions::default() },
+                    );
+                    continue;
+                }
+                state.open_connections.fetch_add(1, Ordering::SeqCst);
+                // Serve whatever was accepted even if shutdown raced in —
+                // a real client that won the race gets its response; a
+                // ShutdownHandle poke reads as an instant EOF and is
+                // dropped without counters.
                 scope.spawn(move || {
-                    loop {
-                        if state.shutdown.load(Ordering::SeqCst) {
-                            return;
-                        }
-                        let Ok((stream, _peer)) = listener.accept() else {
-                            // Persistent accept failures (e.g. fd
-                            // exhaustion) must not become a busy-spin
-                            // that starves the connections already open.
-                            std::thread::sleep(std::time::Duration::from_millis(10));
-                            continue;
-                        };
-                        // Serve whatever was accepted even if shutdown
-                        // raced in — a real client that won the race gets
-                        // its response; a ShutdownHandle poke reads as an
-                        // instant EOF and is dropped without counters.
-                        handle_connection(stream, state, router);
-                        if state.shutdown.load(Ordering::SeqCst) {
-                            return;
-                        }
-                    }
+                    handle_connection(stream, state, router);
+                    state.open_connections.fetch_sub(1, Ordering::SeqCst);
                 });
+                if state.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
             }
         });
     }
@@ -656,8 +721,15 @@ mod tests {
     fn stats_json_is_versioned_with_legacy_mirrors() {
         let state = toy_state();
         for us in [100, 200, 300] {
+            // Mimic the router: every attempt bumps `requests`, only
+            // successes enter the latency window.
+            state.stats.predict.requests.fetch_add(1, Ordering::Relaxed);
             state.stats.predict.record_ok(1, us);
         }
+        // One failed attempt: counted in `requests` (and so in the
+        // legacy `predict_requests` mirror), absent from the profile.
+        state.stats.predict.requests.fetch_add(1, Ordering::Relaxed);
+        state.stats.predict.failures.fetch_add(1, Ordering::Relaxed);
         let doc = state.stats_json();
         assert_eq!(doc.get("schema").and_then(Json::as_str), Some(STATS_SCHEMA));
         // Legacy top-level mirrors (pre-PR-7 consumers).
@@ -665,11 +737,16 @@ mod tests {
         assert_eq!(lat.get("count").and_then(Json::as_usize), Some(3));
         assert_eq!(lat.get("p50_us").and_then(Json::as_f64), Some(200.0));
         assert_eq!(doc.get("rows_predicted").and_then(Json::as_usize), Some(3));
-        assert_eq!(doc.get("predict_requests").and_then(Json::as_usize), Some(3));
+        // The legacy mirror carries routes.predict.requests verbatim:
+        // attempts (4 here, one of them a failure), not successes.
+        assert_eq!(doc.get("predict_requests").and_then(Json::as_usize), Some(4));
         assert_eq!(doc.get("threads").and_then(Json::as_usize), Some(1));
+        assert_eq!(doc.get("open_connections").and_then(Json::as_usize), Some(0));
+        assert_eq!(doc.get("connections_rejected").and_then(Json::as_usize), Some(0));
         // Per-route split: predict and fit are independently observable.
         let routes = doc.get("routes").unwrap();
         let predict = routes.get("predict").unwrap();
+        assert_eq!(predict.get("requests").and_then(Json::as_usize), Some(4));
         assert_eq!(predict.get("rows_predicted").and_then(Json::as_usize), Some(3));
         assert_eq!(
             predict.get("latency").unwrap().get("count").and_then(Json::as_usize),

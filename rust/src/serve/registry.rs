@@ -135,9 +135,11 @@ impl ModelRegistry {
     /// they cloned before the swap; nothing blocks, nothing drops.
     pub fn swap(&mut self, name: &str, model: LoadedModel) -> Result<u64, ServeError> {
         validate_model_name(name)?;
-        self.swaps += 1;
         match self.entries.get_mut(name) {
             Some(entry) => {
+                // Only an actual replacement counts as a hot swap; a PUT
+                // that creates a brand-new entry is a registration.
+                self.swaps += 1;
                 entry.model = Arc::new(model);
                 entry.version += 1;
                 entry.source = ModelSource::Swapped;
@@ -277,5 +279,8 @@ mod tests {
         assert_eq!(reg.swap("fresh", toy_model(0.0)).unwrap(), 1);
         assert_eq!(reg.get("fresh").unwrap().source, ModelSource::Swapped);
         assert_eq!(reg.default_id(), Some("fresh"), "first entry becomes default");
+        assert_eq!(reg.swaps(), 0, "creating an entry is not a hot swap");
+        assert_eq!(reg.swap("fresh", toy_model(1.0)).unwrap(), 2);
+        assert_eq!(reg.swaps(), 1, "replacing it is");
     }
 }

@@ -553,11 +553,15 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
             (alpha, None)
         }
     };
+    // `--threads` sizes the subproblem scheduler for online fits (the
+    // PR-2 contract makes results bit-identical across thread counts);
+    // serving concurrency is per-connection and unaffected by it.
     let mut builder = Backbone::sparse_regression()
         .alpha(fit_alpha)
         .beta(beta)
         .num_subproblems(m_sub)
         .max_nonzeros(k)
+        .threads(state.threads)
         .seed(seed);
     if let Some(w) = warm_beta {
         builder = builder.warm_start(w);

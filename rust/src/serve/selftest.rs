@@ -17,7 +17,10 @@
 //!   bumping its version while clients hammer it. Every response carries
 //!   `model_version`; a version going backwards on any connection is a
 //!   boundary violation, and any failed request during the swap is a
-//!   drop. Both must be zero.
+//!   drop. Both must be zero. (The server hands every connection its
+//!   own handler thread, so parked clients holding keep-alive sockets
+//!   can never starve the swap `PUT` out of `accept` — the harness
+//!   works at any `connections` count.)
 //! - **SLO check** — `--slo-p99-ms` asserts the keep-alive p99.
 //!
 //! Every response is verified against a locally computed prediction for
@@ -52,7 +55,9 @@ pub struct SelfTestConfig {
     /// Rows per batched `/predict` request (clustering overrides this
     /// with its transductive row-count contract).
     pub batch_rows: usize,
-    /// Server worker threads (0 = all cores).
+    /// Server `threads` knob (0 = all cores): sizes online-fit solves
+    /// and the report's `threads` field. Serving itself is one handler
+    /// thread per connection, so this never limits client concurrency.
     pub threads: usize,
     /// Reuse one connection per client (the keep-alive phase). Off = the
     /// legacy one-connection-per-request behaviour only.
@@ -504,15 +509,23 @@ pub fn run_self_test(model: LoadedModel, cfg: &SelfTestConfig) -> Result<SelfTes
     )
     .into_bytes();
 
-    let serve_cfg = ServeConfig::builder().threads(cfg.threads).build()?;
+    let total = cfg.requests.max(1);
+    let connections = cfg.connections.clamp(1, total);
+    // Headroom above the client count so every load connection plus the
+    // swap PUT and any reconnects clear admission, and a generous idle
+    // timeout so clients parked at the swap barrier are never reaped by
+    // a slow CI machine mid-phase.
+    let serve_cfg = ServeConfig::builder()
+        .threads(cfg.threads)
+        .max_connections(connections + 8)
+        .idle_timeout(Duration::from_secs(30))
+        .build()?;
     let server =
         Server::bind("127.0.0.1:0", model, &serve_cfg).context("binding self-test server")?;
     let addr = server.local_addr()?;
     let shutdown = server.shutdown_handle()?;
     let threads = crate::backbone::resolved_threads(cfg.threads);
 
-    let total = cfg.requests.max(1);
-    let connections = cfg.connections.clamp(1, total);
     let duration = cfg.duration_secs.map(Duration::from_secs_f64);
     // The close-mode comparison only makes sense unpaced (pacing would
     // cap both phases at the same rate) and against a keep-alive primary

@@ -9,7 +9,7 @@ mod common;
 use backbone_learn::backbone::screen::correlation_utilities;
 use backbone_learn::backbone::{Backbone, ExecutionPolicy};
 use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
-use backbone_learn::linalg::Matrix;
+use backbone_learn::linalg::{set_backend, simd_available, BackendChoice, Matrix};
 use backbone_learn::rng::Rng;
 use backbone_learn::runtime::Engine;
 use backbone_learn::solvers::cd::{elastic_net_path, l0_fit, ElasticNetConfig, L0Config};
@@ -197,6 +197,105 @@ fn main() {
             std::hint::black_box(sub.gram_naive());
         });
         println!("  → naive/blocked: {:.2}×\n", t_nav / t_blk);
+    }
+
+    // --- Scalar vs SIMD per backend kernel (n=500, p=2000 perf-gate shape). --
+    // Every backend-dispatched kernel, timed once per compute backend by
+    // flipping the process-global dispatch. Backends are bit-identical, so
+    // the ratio is pure instruction-selection speedup. Skipped (scalar row
+    // only) when the CPU lacks AVX2.
+    {
+        let gate = generate(
+            &SparseRegressionConfig { n: 500, p: 2000, k: 10, rho: 0.1, snr: 5.0 },
+            &mut Rng::seed_from_u64(8),
+        );
+        let x = &gate.x; // 500×2000
+        let (n, p) = (x.rows(), x.cols());
+        let v: Vec<f64> = (0..p).map(|i| ((i % 13) as f64 - 6.0) * 0.1).collect();
+        let w: Vec<f64> = (0..n).map(|i| ((i % 7) as f64 - 3.0) * 0.1).collect();
+        let len = n * p;
+        let a: Vec<f64> = (0..len).map(|i| ((i % 17) as f64 - 8.0) * 0.05).collect();
+        let b: Vec<f64> = (0..len).map(|i| ((i % 11) as f64 - 5.0) * 0.07).collect();
+        let idx: Vec<usize> = (0..len).map(|i| (i * 7919) % len).collect();
+        let means = x.col_means();
+        let backends: &[BackendChoice] = if simd_available() {
+            &[BackendChoice::Scalar, BackendChoice::Simd]
+        } else {
+            println!("(no AVX2 — SIMD kernel rows skipped, scalar only)\n");
+            &[BackendChoice::Scalar]
+        };
+        let mut pairs: Vec<(&str, Vec<f64>)> = Vec::new();
+        for &choice in backends {
+            set_backend(choice);
+            let name = choice.name();
+            let mut record = |kernel: &'static str, secs: f64| {
+                match pairs.iter_mut().find(|(k, _)| *k == kernel) {
+                    Some((_, v)) => v.push(secs),
+                    None => pairs.push((kernel, vec![secs])),
+                }
+            };
+            record("dot", bench_n(&format!("dot      {name:<7} (1M)"), 50, || {
+                std::hint::black_box(backbone_learn::linalg::dot(&a, &b));
+            }));
+            let mut yacc = b.clone();
+            record("axpy", bench_n(&format!("axpy     {name:<7} (1M)"), 50, || {
+                backbone_learn::linalg::axpy(0.5, &a, &mut yacc);
+                std::hint::black_box(&yacc);
+            }));
+            record("sqdist", bench_n(&format!("sqdist   {name:<7} (1M)"), 50, || {
+                std::hint::black_box(backbone_learn::linalg::sqdist(&a, &b));
+            }));
+            record("gather_sum", bench_n(&format!("gather   {name:<7} (1M)"), 20, || {
+                std::hint::black_box(backbone_learn::linalg::gather_sum(&a, &idx));
+            }));
+            let (mut num, mut den) = (vec![0.0; p], vec![0.0; p]);
+            record(
+                "centered_accumulate",
+                bench_n(&format!("centered {name:<7} (500×2000)"), 10, || {
+                    for i in 0..n {
+                        backbone_learn::linalg::centered_accumulate(
+                            x.row(i),
+                            &means,
+                            w[i],
+                            &mut num,
+                            &mut den,
+                        );
+                    }
+                    std::hint::black_box(&num);
+                }),
+            );
+            let mut buf = Vec::new();
+            record("matvec", bench_n(&format!("matvec   {name:<7} (500×2000)"), 50, || {
+                x.matvec_into(&v, &mut buf);
+                std::hint::black_box(&buf);
+            }));
+            let mut buft = Vec::new();
+            record("matvec_t", bench_n(&format!("matvec_t {name:<7} (500×2000)"), 50, || {
+                x.matvec_t_into(&w, &mut buft);
+                std::hint::black_box(&buft);
+            }));
+            record("gram", bench_n(&format!("gram     {name:<7} (500×2000)"), 2, || {
+                std::hint::black_box(x.gram());
+            }));
+            let beta: Vec<f64> = (0..p).map(|i| ((i % 5) as f64 - 2.0) * 0.02).collect();
+            let mut resid = Vec::new();
+            record(
+                "residual_into",
+                bench_n(&format!("residual {name:<7} (500×2000)"), 50, || {
+                    x.residual_into(&beta, &gate.y, 0.1, &mut resid);
+                    std::hint::black_box(&resid);
+                }),
+            );
+        }
+        set_backend(BackendChoice::Auto);
+        if backends.len() == 2 {
+            for (kernel, secs) in &pairs {
+                if let [scalar, simd] = secs[..] {
+                    println!("  → {kernel}: scalar/simd = {:.2}×", scalar / simd);
+                }
+            }
+            println!();
+        }
     }
 
     // --- End-to-end backbone fit at the perf-gate shape (single thread). ----

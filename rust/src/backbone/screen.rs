@@ -12,7 +12,7 @@
 //! runs and reports a typed `BackboneError` instead, so user input never
 //! reaches these asserts.
 
-use crate::linalg::{dot, variance, Matrix};
+use crate::linalg::{centered_accumulate, dot, variance, Matrix};
 
 /// Reusable screener scratch: one values buffer and one argsort index
 /// buffer shared across every feature of a [`gini_gain_utilities_with`]
@@ -56,13 +56,9 @@ pub fn correlation_utilities_with(x: &Matrix, y: &[f64], ws: &mut ScreenScratch)
     ws.den.clear();
     ws.den.resize(x.cols(), 0.0); // Σ (x_ij - mean_j)²
     for i in 0..n {
-        let row = x.row(i);
-        let w = ws.yc[i];
-        for (j, (&v, &m)) in row.iter().zip(&means).enumerate() {
-            let c = v - m;
-            ws.num[j] += c * w;
-            ws.den[j] += c * c;
-        }
+        // Backend-dispatched fused accumulate: num_j += (x_ij − mean_j)·yc_i,
+        // den_j += (x_ij − mean_j)² in one pass over the row.
+        centered_accumulate(x.row(i), &means, ws.yc[i], &mut ws.num, &mut ws.den);
     }
     ws.num
         .iter()

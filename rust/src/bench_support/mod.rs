@@ -18,6 +18,7 @@
 use crate::backbone::Backbone;
 use crate::config::{BackboneCell, ExperimentConfig, Problem};
 use crate::data::{binarize, blobs, classification, sparse_regression, train_test_split};
+use crate::json::Json;
 use crate::linalg::Matrix;
 use crate::metrics::{auc, r2_score, silhouette_score};
 use crate::rng::Rng;
@@ -29,7 +30,8 @@ use crate::solvers::kmeans::{kmeans_fit, KMeansConfig};
 use crate::solvers::l0bnb::{l0bnb_solve, L0BnbConfig};
 use crate::runtime::Backend;
 use crate::util::{format_secs, Budget, Stopwatch};
-use anyhow::Result;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
 
 thread_local! {
     static BACKEND: std::cell::RefCell<Option<Backend>> = const { std::cell::RefCell::new(None) };
@@ -665,6 +667,173 @@ pub fn run_bench_suite(
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Hardware fingerprint + per-backend kernel rows + trajectory emission
+// ---------------------------------------------------------------------------
+
+/// Hardware fingerprint for the `BENCH_*.json` trajectory: CPU model,
+/// runtime-detected vector features, and core count. A perf number is
+/// only comparable to another taken on the same fingerprint — the CI
+/// trajectory comparator treats rows from different fingerprints as
+/// not like-for-like.
+pub fn hardware_fingerprint() -> Json {
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    m.insert("cpu_model".into(), Json::String(crate::linalg::cpu_model()));
+    m.insert(
+        "features".into(),
+        Json::Array(
+            crate::linalg::detected_features()
+                .iter()
+                .map(|f| Json::String((*f).into()))
+                .collect(),
+        ),
+    );
+    m.insert(
+        "cores".into(),
+        Json::Number(std::thread::available_parallelism().map_or(1, |v| v.get()) as f64),
+    );
+    m.insert(
+        "simd_available".into(),
+        Json::Bool(crate::linalg::simd_available()),
+    );
+    Json::Object(m)
+}
+
+/// Time every backend-dispatched kernel under each *distinct* resolved
+/// backend (scalar always; simd when the CPU has AVX2) and return one
+/// JSON row per (kernel, backend). Shapes: n=500, p=2000 at full scale
+/// (the perf-gate class), n=100, p=300 under `quick`. Timings are
+/// min-of-`reps` per-call seconds (min is the standard noise floor for
+/// microbenchmarks). The entry backend is restored before returning.
+pub fn kernel_bench_rows(quick: bool, reps: usize) -> Vec<Json> {
+    use crate::linalg::{backend, set_backend, BackendChoice, ComputeBackend};
+    use std::hint::black_box;
+    let reps = reps.max(1);
+    let (n, p) = if quick { (100, 300) } else { (500, 2000) };
+    let mut rng = Rng::seed_from_u64(42);
+    let x = Matrix::from_vec(n, p, (0..n * p).map(|_| rng.normal()).collect());
+    let v: Vec<f64> = (0..p).map(|_| rng.normal()).collect();
+    let w: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let beta: Vec<f64> = (0..p).map(|_| rng.normal() * 0.1).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let len = n * p;
+    let a: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+    let b: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+    let idx: Vec<usize> = (0..len).map(|i| (i * 7919) % len).collect();
+    let means = x.col_means();
+
+    let entry = backend();
+    let mut rows: Vec<Json> = Vec::new();
+    let mut seen: Vec<ComputeBackend> = Vec::new();
+    for choice in [BackendChoice::Scalar, BackendChoice::Simd] {
+        let be = set_backend(choice);
+        if seen.contains(&be) {
+            // No AVX2: the simd request resolved to scalar again — a
+            // second identical row would be noise, not signal.
+            continue;
+        }
+        seen.push(be);
+        let time = |iters: usize, f: &mut dyn FnMut()| -> f64 {
+            let mut best = f64::INFINITY;
+            for _ in 0..reps {
+                let watch = Stopwatch::start();
+                for _ in 0..iters {
+                    f();
+                }
+                best = best.min(watch.elapsed_secs() / iters as f64);
+            }
+            best
+        };
+        let mut push = |kernel: &str, secs: f64| {
+            let mut r: BTreeMap<String, Json> = BTreeMap::new();
+            r.insert("kind".into(), Json::String("kernel".into()));
+            r.insert("kernel".into(), Json::String(kernel.into()));
+            r.insert("backend".into(), Json::String(be.name().into()));
+            r.insert("n".into(), Json::Number(n as f64));
+            r.insert("p".into(), Json::Number(p as f64));
+            r.insert("reps".into(), Json::Number(reps as f64));
+            r.insert("mean_secs".into(), Json::Number(secs));
+            r.insert("min_secs".into(), Json::Number(secs));
+            rows.push(Json::Object(r));
+        };
+
+        // Vector kernels stream n·p elements; matrix kernels run the
+        // real entry points on the n×p design.
+        push("dot", time(50, &mut || {
+            black_box(crate::linalg::dot(&a, &b));
+        }));
+        let mut yacc = b.clone();
+        push("axpy", time(50, &mut || {
+            crate::linalg::axpy(0.5, &a, &mut yacc);
+            black_box(&yacc);
+        }));
+        push("sqdist", time(50, &mut || {
+            black_box(crate::linalg::sqdist(&a, &b));
+        }));
+        push("gather_sum", time(20, &mut || {
+            black_box(crate::linalg::gather_sum(&a, &idx));
+        }));
+        let (mut num, mut den) = (vec![0.0; p], vec![0.0; p]);
+        push("centered_accumulate", time(5, &mut || {
+            for i in 0..n {
+                crate::linalg::centered_accumulate(
+                    x.row(i),
+                    &means,
+                    w[i],
+                    &mut num,
+                    &mut den,
+                );
+            }
+            black_box(&num);
+        }));
+        let mut buf = Vec::new();
+        push("matvec", time(20, &mut || {
+            x.matvec_into(&v, &mut buf);
+            black_box(&buf);
+        }));
+        let mut buft = Vec::new();
+        push("matvec_t", time(20, &mut || {
+            x.matvec_t_into(&w, &mut buft);
+            black_box(&buft);
+        }));
+        push("gram", time(1, &mut || {
+            black_box(x.gram());
+        }));
+        let mut resid = Vec::new();
+        push("residual_into", time(20, &mut || {
+            x.residual_into(&beta, &y, 0.1, &mut resid);
+            black_box(&resid);
+        }));
+    }
+    // Restore whatever backend the process entered with.
+    set_backend(match entry {
+        ComputeBackend::Scalar => BackendChoice::Scalar,
+        ComputeBackend::Simd => BackendChoice::Simd,
+    });
+    rows
+}
+
+/// Write a `backbone-bench/v1` document, refusing to emit a trajectory
+/// file whose `results` array is empty (an empty trajectory pins nothing
+/// and silently poisons cross-PR comparisons) unless the caller
+/// explicitly asked for a schema-only document.
+pub fn emit_bench_json(path: &str, doc: &Json, schema_only: bool) -> Result<()> {
+    let empty = match doc.get("results") {
+        Some(r) => r.as_array().map_or(true, |a| a.is_empty()),
+        None => true,
+    };
+    if empty && !schema_only {
+        anyhow::bail!(
+            "refusing to write `{path}` with an empty `results` array — a trajectory \
+             file with no measurements pins no baseline (pass --schema-only to write \
+             a schema-only document on purpose)"
+        );
+    }
+    std::fs::write(path, doc.to_string_pretty())
+        .with_context(|| format!("writing `{path}`"))?;
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -747,6 +916,40 @@ mod tests {
             assert!(r.min_secs <= r.mean_secs + 1e-12);
             assert!(r.metric.is_finite(), "{}: metric {}", r.learner, r.metric);
         }
+    }
+
+    #[test]
+    fn fingerprint_has_the_comparator_fields() {
+        let fp = hardware_fingerprint();
+        assert!(fp.get("cpu_model").and_then(|v| v.as_str().map(String::from)).is_some());
+        assert!(fp.get("features").and_then(|v| v.as_array().map(|_| ())).is_some());
+        assert!(fp.get("cores").is_some());
+        assert!(fp.get("simd_available").is_some());
+    }
+
+    #[test]
+    fn kernel_rows_cover_every_kernel_per_distinct_backend() {
+        let rows = kernel_bench_rows(true, 1);
+        let backends = if crate::linalg::simd_available() { 2 } else { 1 };
+        assert_eq!(rows.len(), 9 * backends, "{rows:?}");
+        for r in &rows {
+            assert_eq!(r.get("kind").and_then(|v| v.as_str()), Some("kernel"));
+            let secs = r.get("min_secs").and_then(|v| v.as_f64()).unwrap();
+            assert!(secs.is_finite() && secs >= 0.0);
+        }
+    }
+
+    #[test]
+    fn emit_refuses_empty_results_unless_schema_only() {
+        let mut doc: BTreeMap<String, Json> = BTreeMap::new();
+        doc.insert("schema".into(), Json::String("backbone-bench/v1".into()));
+        doc.insert("results".into(), Json::Array(vec![]));
+        let doc = Json::Object(doc);
+        let path = std::env::temp_dir().join("backbone_emit_test.json");
+        let path = path.to_str().unwrap();
+        assert!(emit_bench_json(path, &doc, false).is_err(), "empty must be refused");
+        emit_bench_json(path, &doc, true).unwrap();
+        let _ = std::fs::remove_file(path);
     }
 
     #[test]

@@ -25,6 +25,7 @@ const FLAG_KEYS: &[&str] = &[
     "no-keep-alive",
     "no-swap",
     "quick",
+    "schema-only",
     "self-test",
     "warm",
 ];

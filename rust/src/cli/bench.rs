@@ -8,9 +8,18 @@
 //!
 //! ```text
 //! backbone-learn bench [--quick] [--reps N] [--budget SECS] [--out FILE]
+//!                      [--schema-only]
 //! backbone-learn bench --warm [--quick] [--instances N] [--budget SECS]
 //!                      [--seed S] [--out FILE]
 //! ```
+//!
+//! Besides the end-to-end rows, the default mode times every
+//! backend-dispatched linalg kernel under each distinct resolved compute
+//! backend (blocked scalar, and AVX2 where the CPU has it — see
+//! `linalg::backend`) and records a hardware fingerprint (CPU model,
+//! detected features, core count), so the checked-in trajectory pins
+//! like-for-like perf baselines. `--out` refuses to write a document
+//! whose `results` array is empty unless `--schema-only` is passed.
 //!
 //! `--warm` switches to the warm-start benchmark: a repeat family of
 //! sparse-regression instances (same shape, different data seeds) is
@@ -36,10 +45,16 @@
 //!   "reps": 1,
 //!   "budget_secs": 20.0,
 //!   "threads_available": 8,
+//!   "backend": "simd",
+//!   "hardware": { "cpu_model": "...", "features": ["avx2", "fma"],
+//!                 "cores": 8, "simd_available": true },
 //!   "results": [
 //!     { "learner": "sparse_regression", "n": 120, "p": 600, "k": 5,
 //!       "m": 5, "threads": 1, "reps": 1, "mean_secs": 0.42,
-//!       "min_secs": 0.42, "metric": { "name": "r2", "value": 0.93 } }
+//!       "min_secs": 0.42, "metric": { "name": "r2", "value": 0.93 } },
+//!     { "kind": "kernel", "kernel": "gram", "backend": "simd",
+//!       "n": 500, "p": 2000, "reps": 3,
+//!       "mean_secs": 0.61, "min_secs": 0.61 }
 //!   ]
 //! }
 //! ```
@@ -48,7 +63,9 @@ use super::Args;
 use crate::backbone::pipeline::resolved_threads;
 use crate::backbone::sparse_regression::SparseRegressionModel;
 use crate::backbone::Backbone;
-use crate::bench_support::run_bench_suite;
+use crate::bench_support::{
+    emit_bench_json, hardware_fingerprint, kernel_bench_rows, run_bench_suite,
+};
 use crate::data::sparse_regression;
 use crate::json::Json;
 use crate::linalg::Matrix;
@@ -66,12 +83,44 @@ pub fn run(args: &Args) -> Result<i32> {
     let quick = args.flag("quick");
     let reps = args.get_usize("reps", if quick { 1 } else { 3 })?;
     let budget_secs = args.get_f64("budget", if quick { 20.0 } else { 120.0 })?;
-    let out = args.get("out").unwrap_or_else(|| "BENCH_PR4.json".into());
+    let out = args.get("out").unwrap_or_else(|| "BENCH_PR8.json".into());
 
     eprintln!(
-        "[bench] {} scale: reps={reps} budget={budget_secs}s → {out}",
-        if quick { "quick" } else { "full" }
+        "[bench] {} scale: reps={reps} budget={budget_secs}s backend={} → {out}",
+        if quick { "quick" } else { "full" },
+        crate::linalg::backend_name(),
     );
+    // Per-backend kernel rows first (they flip the global backend and
+    // restore it), then the end-to-end suite under the session backend.
+    let kernel_rows = kernel_bench_rows(quick, reps);
+    {
+        let mut by_kernel: BTreeMap<String, BTreeMap<String, f64>> = BTreeMap::new();
+        for r in &kernel_rows {
+            let (Some(kernel), Some(be), Some(secs)) = (
+                r.get("kernel").and_then(|v| v.as_str()),
+                r.get("backend").and_then(|v| v.as_str()),
+                r.get("min_secs").and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            by_kernel.entry(kernel.into()).or_default().insert(be.into(), secs);
+        }
+        println!("{:<20} {:>14} {:>14} {:>9}", "Kernel", "scalar (s)", "simd (s)", "speedup");
+        for (kernel, by_be) in &by_kernel {
+            let scalar = by_be.get("scalar").copied();
+            let simd = by_be.get("simd").copied();
+            println!(
+                "{:<20} {:>14} {:>14} {:>9}",
+                kernel,
+                scalar.map_or_else(|| "—".into(), |s| format!("{s:.3e}")),
+                simd.map_or_else(|| "—".into(), |s| format!("{s:.3e}")),
+                match (scalar, simd) {
+                    (Some(s), Some(v)) if v > 0.0 => format!("{:.2}×", s / v),
+                    _ => "—".into(),
+                }
+            );
+        }
+    }
     let results = run_bench_suite(quick, reps, budget_secs, &[1, 0])?;
 
     println!(
@@ -116,7 +165,12 @@ pub fn run(args: &Args) -> Result<i32> {
         "threads_available".into(),
         Json::Number(resolved_threads(0) as f64),
     );
-    let rows: Vec<Json> = results
+    doc.insert("hardware".into(), hardware_fingerprint());
+    doc.insert(
+        "backend".into(),
+        Json::String(crate::linalg::backend_name().into()),
+    );
+    let mut rows: Vec<Json> = results
         .iter()
         .map(|r| {
             let mut row: BTreeMap<String, Json> = BTreeMap::new();
@@ -136,9 +190,9 @@ pub fn run(args: &Args) -> Result<i32> {
             Json::Object(row)
         })
         .collect();
+    rows.extend(kernel_rows);
     doc.insert("results".into(), Json::Array(rows));
-    let text = Json::Object(doc).to_string_pretty();
-    std::fs::write(&out, &text).with_context(|| format!("writing `{out}`"))?;
+    emit_bench_json(&out, &Json::Object(doc), args.flag("schema-only"))?;
     eprintln!("wrote {out}");
     Ok(0)
 }

@@ -30,7 +30,7 @@ mod table1;
 
 pub use args::Args;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 const USAGE: &str = "\
 backbone-learn — BackboneLearn reproduction (Rust + JAX/Pallas AOT)
@@ -75,7 +75,10 @@ USAGE:
   backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
                         [--threads N]
   backbone-learn bench  [--quick] [--reps N] [--budget SECS] [--out FILE]
-                        (end-to-end perf harness; timings as JSON)
+                        [--schema-only]  (end-to-end + per-backend kernel perf
+                         harness with a hardware fingerprint; timings as JSON.
+                         --out refuses an empty results array unless
+                         --schema-only is passed)
   backbone-learn bench  --warm [--quick] [--instances N] [--budget SECS]
                         [--out FILE]  (cold vs warm-start fits on a repeat
                          family → BENCH_PR6.json)
@@ -85,6 +88,10 @@ USAGE:
 Run with quick (CI-scale) sizes by default; pass --full for Table-1 scale.
 --threads N solves each subproblem batch on N OS threads (0 = all cores,
 1 = inline sequential) with bit-identical results.
+--backend scalar|simd|auto (any subcommand; also BACKBONE_BACKEND env var
+or the config-file `backend` key) picks the linalg compute backend:
+blocked scalar kernels or runtime-detected AVX2. Backends are
+bit-identical — the choice only changes wall-clock time.
 ";
 
 /// CLI entry point (called from `main.rs`).
@@ -106,6 +113,14 @@ pub fn run(argv: &[String]) -> Result<i32> {
         return Ok(2);
     };
     let args = Args::parse(&argv[1..])?;
+    // Global --backend: pin the linalg compute backend before any kernel
+    // runs. Subcommands without the flag inherit BACKBONE_BACKEND/auto
+    // (table1 additionally applies the config file's `backend` key).
+    if let Some(b) = args.get("backend") {
+        let choice = crate::linalg::BackendChoice::parse(&b)
+            .with_context(|| format!("--backend must be scalar|simd|auto, got `{b}`"))?;
+        crate::linalg::set_backend(choice);
+    }
     match cmd.as_str() {
         "table1" => table1::run(&args),
         "fit" => fit::run(&args),

@@ -32,6 +32,11 @@ pub fn run(args: &Args) -> Result<i32> {
         cfg.seed = args.get_u64("seed", cfg.seed)?;
         // 0 = all available cores; 1 (default) = sequential schedule.
         cfg.threads = args.get_usize("threads", cfg.threads)?;
+        // Config-file backend applies unless the global --backend flag
+        // already pinned one in `cli::run` (CLI wins over config).
+        if args.get("backend").is_none() {
+            crate::linalg::set_backend(cfg.backend);
+        }
         // Fail fast on bad grids (typed BackboneError) instead of
         // aborting mid-sweep after hours of compute.
         for (i, cell) in cfg.grid.iter().enumerate() {

@@ -6,6 +6,7 @@
 
 use crate::backbone::{BackboneError, BackboneParams};
 use crate::json::Json;
+use crate::linalg::BackendChoice;
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
@@ -85,6 +86,11 @@ pub struct ExperimentConfig {
     /// are bit-identical across values (the batch contract); this only
     /// changes wall-clock time.
     pub threads: usize,
+    /// Compute backend of the linalg hot kernels: `scalar`, `simd`, or
+    /// `auto` (default — SIMD where the CPU supports it). Backends are
+    /// bit-identical by construction, so like `threads` this only changes
+    /// wall-clock time. A `--backend` CLI flag takes precedence.
+    pub backend: BackendChoice,
 }
 
 impl ExperimentConfig {
@@ -106,6 +112,7 @@ impl ExperimentConfig {
                 ],
                 seed: 0,
                 threads: 1,
+                backend: BackendChoice::Auto,
             },
             Problem::DecisionTrees => Self {
                 problem,
@@ -122,6 +129,7 @@ impl ExperimentConfig {
                 ],
                 seed: 0,
                 threads: 1,
+                backend: BackendChoice::Auto,
             },
             Problem::Clustering => Self {
                 problem,
@@ -136,6 +144,7 @@ impl ExperimentConfig {
                 ],
                 seed: 0,
                 threads: 1,
+                backend: BackendChoice::Auto,
             },
         }
     }
@@ -190,6 +199,11 @@ impl ExperimentConfig {
         cfg.repetitions = geti("repetitions", cfg.repetitions)?;
         cfg.seed = geti("seed", cfg.seed as usize)? as u64;
         cfg.threads = geti("threads", cfg.threads)?;
+        if let Some(v) = doc.get("backend") {
+            let s = v.as_str().context("`backend` must be a string")?;
+            cfg.backend = BackendChoice::parse(s)
+                .with_context(|| format!("`backend` must be scalar|simd|auto, got `{s}`"))?;
+        }
         if let Some(v) = doc.get("budget_secs") {
             cfg.budget_secs = v.as_f64().context("`budget_secs` must be a number")?;
         }
@@ -223,6 +237,7 @@ impl ExperimentConfig {
         m.insert("budget_secs".into(), Json::Number(self.budget_secs));
         m.insert("seed".into(), Json::Number(self.seed as f64));
         m.insert("threads".into(), Json::Number(self.threads as f64));
+        m.insert("backend".into(), Json::String(self.backend.name().into()));
         let grid: Vec<Json> = self
             .grid
             .iter()
@@ -283,6 +298,18 @@ mod tests {
         assert_eq!(cfg.threads, 4);
         let back = ExperimentConfig::from_json(&cfg.to_json().to_string_pretty()).unwrap();
         assert_eq!(back.threads, 4);
+    }
+
+    #[test]
+    fn backend_roundtrip_defaults_to_auto_and_rejects_invalid() {
+        let cfg = ExperimentConfig::paper_defaults(Problem::SparseRegression);
+        assert_eq!(cfg.backend, BackendChoice::Auto, "default must be auto");
+        let text = r#"{"problem": "sr", "backend": "simd"}"#;
+        let cfg = ExperimentConfig::from_json(text).unwrap();
+        assert_eq!(cfg.backend, BackendChoice::Simd);
+        let back = ExperimentConfig::from_json(&cfg.to_json().to_string_pretty()).unwrap();
+        assert_eq!(back.backend, BackendChoice::Simd);
+        assert!(ExperimentConfig::from_json(r#"{"problem": "sr", "backend": "gpu"}"#).is_err());
     }
 
     #[test]

@@ -64,6 +64,12 @@
 //! [`backbone::BackboneLearner::Workspace`], so learners are shared
 //! across workers and mutable scratch is not.
 //!
+//! One layer down, every dense kernel dispatches through
+//! [`linalg::ComputeBackend`]: a blocked scalar default plus a
+//! runtime-detected AVX2 backend (`--backend scalar|simd|auto`,
+//! `BACKBONE_BACKEND`), bit-identical by construction so the backend —
+//! like the thread count — is a pure wall-clock knob.
+//!
 //! ## Architecture
 //!
 //! The crate is the **Layer-3 coordinator** of a three-layer stack:

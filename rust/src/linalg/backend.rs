@@ -1,0 +1,346 @@
+//! Pluggable compute-backend dispatch for the linalg hot kernels.
+//!
+//! Every hot kernel entry point in [`super::ops`] (`dot`, `axpy`,
+//! `sqdist`, the fused rank-4 update behind `matvec_t`/`matmul`/`gram`,
+//! the screener's centered accumulate, the CART gather sum — and through
+//! them `matvec`, `residual_into`, and the distance evaluations) routes
+//! through a process-wide [`ComputeBackend`]:
+//!
+//! - [`ComputeBackend::Scalar`] — the PR-4 blocked 4-accumulator kernels
+//!   (portable default, pure safe Rust).
+//! - [`ComputeBackend::Simd`] — `core::arch` AVX2 kernels
+//!   ([`super::simd`], the crate's only `unsafe` module), **bit-identical
+//!   to the scalar backend by construction** (same accumulator structure,
+//!   same association, multiply+add only — no FMA contraction).
+//!
+//! The retained `*_naive` loops are the third tier: pure sequential
+//! correctness oracles that never dispatch (see `linalg::ops` docs).
+//!
+//! ## Selection
+//!
+//! Resolution order (first match wins), memoized in a process-global:
+//!
+//! 1. An explicit [`set_backend`] call — the CLI's `--backend` flag and
+//!    `ExperimentConfig::backend` land here, and tests use it to pin or
+//!    flip backends in-process.
+//! 2. The `BACKBONE_BACKEND` environment variable: `scalar`, `simd`, or
+//!    `auto` (anything else warns once and falls back to `auto`).
+//! 3. `auto` (the default): `simd` when runtime detection
+//!    (`is_x86_feature_detected!("avx2")`) succeeds, else `scalar`.
+//!
+//! Requesting `simd` on hardware without AVX2 (or on non-x86 targets, or
+//! under Miri) resolves to `scalar` — the request is a ceiling, not a
+//! promise, and every backend produces bit-identical results, so the
+//! fallback is observable only in timings.
+//!
+//! The state is an `AtomicU8` rather than a `OnceLock` precisely so
+//! [`set_backend`] can re-resolve mid-process (backend-identity tests fit
+//! under one backend, switch, and refit). Because backends are
+//! bit-identical, a switch while another thread computes is benign: it
+//! changes which instructions run, never what they produce.
+//!
+//! The same seam is where an accelerator backend would slot in: the
+//! `pjrt`-gated [`crate::runtime::Engine`] already shadows whole-routine
+//! entry points (screen/IHT/Lloyd) the same way — detect at startup,
+//! dispatch per call, fall back bit-compatibly (see `runtime::engine`).
+
+use super::{ops, simd_shim as simd};
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// A backend *request*: what the user asked for, before hardware
+/// detection. Carried by `ExperimentConfig` and the `--backend` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendChoice {
+    /// Always the blocked scalar kernels.
+    Scalar,
+    /// The AVX2 kernels when available, else scalar.
+    Simd,
+    /// Detect: AVX2 kernels iff the CPU has them (the default).
+    #[default]
+    Auto,
+}
+
+impl BackendChoice {
+    /// Parse `scalar`/`simd`/`auto` (the `BACKBONE_BACKEND` and
+    /// `--backend` vocabulary). `None` for anything else.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(Self::Scalar),
+            "simd" => Some(Self::Simd),
+            "auto" => Some(Self::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Simd => "simd",
+            Self::Auto => "auto",
+        }
+    }
+}
+
+/// A *resolved* backend: which kernel implementations actually run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeBackend {
+    Scalar,
+    Simd,
+}
+
+impl ComputeBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Simd => "simd",
+        }
+    }
+
+    /// Dot product.
+    #[inline]
+    pub fn dot(self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            Self::Scalar => ops::dot_blocked(a, b),
+            Self::Simd => simd::dot(a, b),
+        }
+    }
+
+    /// `y += alpha * x`.
+    #[inline]
+    pub fn axpy(self, alpha: f64, x: &[f64], y: &mut [f64]) {
+        match self {
+            Self::Scalar => ops::axpy_blocked(alpha, x, y),
+            Self::Simd => simd::axpy(alpha, x, y),
+        }
+    }
+
+    /// Squared Euclidean distance.
+    #[inline]
+    pub fn sqdist(self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            Self::Scalar => ops::sqdist_blocked(a, b),
+            Self::Simd => simd::sqdist(a, b),
+        }
+    }
+
+    /// Fused rank-4 row update `out[j] += Σ c[l]·r_l[j]`.
+    #[inline]
+    pub fn fused4(
+        self,
+        c: [f64; 4],
+        r0: &[f64],
+        r1: &[f64],
+        r2: &[f64],
+        r3: &[f64],
+        out: &mut [f64],
+    ) {
+        match self {
+            Self::Scalar => ops::fused4_blocked(c, r0, r1, r2, r3, out),
+            Self::Simd => simd::fused4(c, r0, r1, r2, r3, out),
+        }
+    }
+
+    /// Screener centered accumulate: `num += (row−means)·w`,
+    /// `den += (row−means)²`.
+    #[inline]
+    pub fn centered_accumulate(
+        self,
+        row: &[f64],
+        means: &[f64],
+        w: f64,
+        num: &mut [f64],
+        den: &mut [f64],
+    ) {
+        match self {
+            Self::Scalar => ops::centered_accumulate_blocked(row, means, w, num, den),
+            Self::Simd => simd::centered_accumulate(row, means, w, num, den),
+        }
+    }
+
+    /// Indexed gather sum `Σ vals[idx[i]]`.
+    #[inline]
+    pub fn gather_sum(self, vals: &[f64], idx: &[usize]) -> f64 {
+        match self {
+            Self::Scalar => ops::gather_sum_blocked(vals, idx),
+            Self::Simd => simd::gather_sum(vals, idx),
+        }
+    }
+}
+
+/// Process-global resolved backend: 0 = unresolved, 1 = scalar, 2 = simd.
+static STATE: AtomicU8 = AtomicU8::new(0);
+
+/// True when the AVX2 kernel module is compiled in *and* the CPU reports
+/// AVX2 at runtime. Always false on non-x86-64 targets and under Miri
+/// (vendor intrinsics are outside Miri's model, so `linalg::simd` is
+/// `cfg`-excluded there and everything runs on the scalar backend).
+pub fn simd_available() -> bool {
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(all(target_arch = "x86_64", not(miri))))]
+    {
+        false
+    }
+}
+
+fn resolve(choice: BackendChoice) -> ComputeBackend {
+    match choice {
+        BackendChoice::Scalar => ComputeBackend::Scalar,
+        BackendChoice::Simd | BackendChoice::Auto => {
+            if simd_available() {
+                ComputeBackend::Simd
+            } else {
+                ComputeBackend::Scalar
+            }
+        }
+    }
+}
+
+/// Resolve and pin the process-wide backend. Returns what was resolved
+/// (e.g. `Scalar` for a `Simd` request on hardware without AVX2).
+pub fn set_backend(choice: BackendChoice) -> ComputeBackend {
+    let resolved = resolve(choice);
+    let code = match resolved {
+        ComputeBackend::Scalar => 1,
+        ComputeBackend::Simd => 2,
+    };
+    STATE.store(code, Ordering::Relaxed);
+    resolved
+}
+
+/// The currently resolved backend; resolves from `BACKBONE_BACKEND` (or
+/// `auto`) on first use.
+#[inline]
+pub fn backend() -> ComputeBackend {
+    match STATE.load(Ordering::Relaxed) {
+        1 => ComputeBackend::Scalar,
+        2 => ComputeBackend::Simd,
+        _ => resolve_from_env(),
+    }
+}
+
+#[cold]
+fn resolve_from_env() -> ComputeBackend {
+    let choice = match std::env::var("BACKBONE_BACKEND") {
+        Ok(v) => BackendChoice::parse(&v).unwrap_or_else(|| {
+            eprintln!(
+                "warning: BACKBONE_BACKEND=`{v}` is not scalar|simd|auto; using auto"
+            );
+            BackendChoice::Auto
+        }),
+        Err(_) => BackendChoice::Auto,
+    };
+    set_backend(choice)
+}
+
+/// Name of the currently resolved backend (`"scalar"` / `"simd"`).
+pub fn backend_name() -> &'static str {
+    backend().name()
+}
+
+/// CPU model string for the bench hardware fingerprint (from
+/// `/proc/cpuinfo` on Linux; `"unknown"` elsewhere).
+pub fn cpu_model() -> String {
+    if let Ok(text) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("model name") {
+                if let Some((_, v)) = rest.split_once(':') {
+                    return v.trim().to_string();
+                }
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+/// Runtime-detected vector features relevant to the SIMD backend, for
+/// the bench hardware fingerprint. FMA is reported when present but the
+/// SIMD backend deliberately does not use it (see `linalg::simd` docs).
+pub fn detected_features() -> Vec<&'static str> {
+    let mut out = Vec::new();
+    #[cfg(all(target_arch = "x86_64", not(miri)))]
+    {
+        if std::arch::is_x86_feature_detected!("sse4.2") {
+            out.push("sse4.2");
+        }
+        if std::arch::is_x86_feature_detected!("avx") {
+            out.push("avx");
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            out.push("avx2");
+        }
+        if std::arch::is_x86_feature_detected!("fma") {
+            out.push("fma");
+        }
+        if std::arch::is_x86_feature_detected!("avx512f") {
+            out.push("avx512f");
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn choice_parse_roundtrip() {
+        for c in [BackendChoice::Scalar, BackendChoice::Simd, BackendChoice::Auto] {
+            assert_eq!(BackendChoice::parse(c.name()), Some(c));
+        }
+        assert_eq!(BackendChoice::parse("SIMD"), Some(BackendChoice::Simd));
+        assert_eq!(BackendChoice::parse(" auto "), Some(BackendChoice::Auto));
+        assert_eq!(BackendChoice::parse("gpu"), None);
+        assert_eq!(BackendChoice::default(), BackendChoice::Auto);
+    }
+
+    #[test]
+    fn set_backend_pins_and_reports_resolution() {
+        // Remember whatever the process had, restore at the end — other
+        // tests in this binary share the global.
+        let before = backend();
+        assert_eq!(set_backend(BackendChoice::Scalar), ComputeBackend::Scalar);
+        assert_eq!(backend(), ComputeBackend::Scalar);
+        let simd = set_backend(BackendChoice::Simd);
+        if simd_available() {
+            assert_eq!(simd, ComputeBackend::Simd);
+        } else {
+            assert_eq!(simd, ComputeBackend::Scalar, "no AVX2 → scalar fallback");
+        }
+        assert_eq!(backend(), simd);
+        // Auto resolves to simd iff available.
+        let auto = set_backend(BackendChoice::Auto);
+        assert_eq!(auto == ComputeBackend::Simd, simd_available());
+        let code = match before {
+            ComputeBackend::Scalar => BackendChoice::Scalar,
+            ComputeBackend::Simd => BackendChoice::Simd,
+        };
+        set_backend(code);
+    }
+
+    #[test]
+    fn every_dispatched_kernel_is_backend_bit_identical() {
+        let a: Vec<f64> = (0..37).map(|i| (i as f64 * 0.31).sin() * 2.0).collect();
+        let b: Vec<f64> = (0..37).map(|i| (i as f64 * 0.77).cos() * 1.5).collect();
+        let (s, v) = (ComputeBackend::Scalar, ComputeBackend::Simd);
+        assert_eq!(s.dot(&a, &b).to_bits(), v.dot(&a, &b).to_bits());
+        assert_eq!(s.sqdist(&a, &b).to_bits(), v.sqdist(&a, &b).to_bits());
+        let (mut y1, mut y2) = (b.clone(), b.clone());
+        s.axpy(0.9, &a, &mut y1);
+        v.axpy(0.9, &a, &mut y2);
+        assert_eq!(y1, y2);
+        let idx: Vec<usize> = (0..37).map(|i| (i * 5) % 37).collect();
+        assert_eq!(s.gather_sum(&a, &idx).to_bits(), v.gather_sum(&a, &idx).to_bits());
+    }
+
+    #[test]
+    fn fingerprint_helpers_do_not_panic() {
+        let _ = cpu_model();
+        let feats = detected_features();
+        if simd_available() {
+            assert!(feats.contains(&"avx2"));
+        }
+    }
+}

@@ -5,14 +5,41 @@
 //! `f64` matrix with cache-blocked 4-accumulator kernels, Cholesky
 //! (including the O(k²) bordered update [`cholesky_bordered`]), and
 //! least-squares is the right substrate — no sparse structures or external
-//! BLAS. The original scalar loops are retained as `*_naive` property-test
-//! oracles; squared row/column norms are memoized per matrix (see
+//! BLAS. Squared row/column norms are memoized per matrix (see
 //! [`Matrix::row_sq_norms`]) with invalidation on every mutation.
+//!
+//! The hot kernels dispatch through a process-wide [`ComputeBackend`]
+//! ([`backend()`] / [`set_backend`] / `BACKBONE_BACKEND`): blocked scalar
+//! kernels as the portable default, AVX2 kernels (`simd`, the crate's only
+//! `unsafe` module) where detected — **bit-identical by construction**, so
+//! backend choice only moves timings. The original sequential loops are
+//! retained as `*_naive` property-test oracles and never dispatch (see the
+//! `ops` module docs for the three-tier contract).
 
+mod backend;
 mod cholesky;
 mod matrix;
 mod ops;
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+mod simd;
 
+// Dispatch shim: `ComputeBackend::Simd` arms compile against this name on
+// every target. Where the intrinsics module is cfg-excluded (non-x86-64,
+// Miri) the shim is the blocked scalar kernels — the Simd variant is
+// unreachable there (`simd_available()` is false), but the match arms
+// still have to compile.
+#[cfg(all(target_arch = "x86_64", not(miri)))]
+use simd as simd_shim;
+#[cfg(not(all(target_arch = "x86_64", not(miri))))]
+mod simd_shim {
+    pub use super::ops::{
+        axpy_blocked as axpy, centered_accumulate_blocked as centered_accumulate,
+        dot_blocked as dot, fused4_blocked as fused4, gather_sum_blocked as gather_sum,
+        sqdist_blocked as sqdist,
+    };
+}
+
+pub use backend::*;
 pub use cholesky::*;
 pub use matrix::*;
 pub use ops::*;

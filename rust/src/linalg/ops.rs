@@ -1,38 +1,57 @@
 //! Matrix/vector products and vector helpers.
 //!
-//! The hot kernels come in two tiers:
+//! The hot kernels come in three tiers:
 //!
-//! - **Blocked 4-accumulator kernels** — the defaults ([`Matrix::matvec`],
-//!   [`Matrix::matvec_t`], [`Matrix::matmul`], [`Matrix::gram`],
-//!   [`Matrix::residual_into`]). Inner loops are unrolled four-wide with
-//!   independent accumulators (breaking the sequential-add dependency
-//!   chain so LLVM emits packed FMAs) and stream four rows per pass over
-//!   the output, quartering the memory traffic of the row-at-a-time
-//!   formulation. `matmul` additionally blocks the output row into
-//!   L1-sized column panels.
-//! - **Scalar reference kernels** — the original straight loops, retained
-//!   as [`Matrix::matvec_naive`] / [`Matrix::matvec_t_naive`] /
-//!   [`Matrix::matmul_naive`] / [`Matrix::gram_naive`]. They are the
-//!   oracles the property suite (`tests/prop_linalg.rs`) checks the
-//!   blocked kernels against (agreement ≤ 1e-9) and are not meant for
-//!   production call sites.
+//! - **Dispatched entry points** — the public kernels every consumer
+//!   calls ([`dot`], [`axpy`], [`sqdist`], [`fused4`],
+//!   [`centered_accumulate`], [`gather_sum`], and through them
+//!   [`Matrix::matvec`], [`Matrix::matvec_t`], [`Matrix::matmul`],
+//!   [`Matrix::gram`], [`Matrix::residual_into`]). Each routes through
+//!   the process-wide [`super::ComputeBackend`] (see `linalg::backend`):
+//!   blocked scalar kernels by default, AVX2 kernels where detected.
+//! - **Blocked scalar kernels** — the `*_blocked` functions: inner loops
+//!   unrolled four-wide with independent accumulators (breaking the
+//!   sequential-add dependency chain), four rows streamed per pass over
+//!   the output. `matmul` additionally blocks the output row into
+//!   L1-sized column panels. These are the `ComputeBackend::Scalar`
+//!   implementation and the portable fallback of `ComputeBackend::Simd`.
+//! - **Sequential naive oracles** — the original straight loops,
+//!   retained as the `*_naive` functions ([`dot_naive`],
+//!   [`sqdist_naive`], [`gather_sum_naive`], [`Matrix::matvec_naive`],
+//!   [`Matrix::matvec_t_naive`], [`Matrix::matmul_naive`],
+//!   [`Matrix::gram_naive`]). **The naive tier is exclusively a test
+//!   oracle**: it never dispatches through the backend (its loops are
+//!   written out inline, so no backend bug can hide its own oracle), is
+//!   checked against the dispatched kernels to ≤ 1e-9 by
+//!   `tests/prop_linalg.rs`, and has no production call sites.
 //!
-//! Accuracy contract: blocked kernels reassociate floating-point sums, so
-//! results may differ from the scalar oracles in the last few ulps — never
-//! more than the property-test tolerance on well-scaled data. Within one
-//! build, every kernel is deterministic: the same inputs always produce
-//! bit-identical outputs (no runtime dispatch, no threading).
+//! Accuracy contract: blocked kernels reassociate floating-point sums,
+//! so results may differ from the naive oracles in the last few ulps —
+//! never more than the property-test tolerance on well-scaled data.
+//! Across *backends* the contract is stronger: the AVX2 kernels mirror
+//! the blocked scalar accumulator structure exactly (multiply+add only,
+//! no FMA — see `linalg::simd`), so scalar and SIMD outputs are
+//! **bit-identical** and backend selection is a pure wall-clock knob.
+//! Within one build and one backend, every kernel is deterministic: the
+//! same inputs always produce bit-identical outputs.
 //!
 //! Aliasing contract: all `*_into` entry points take `&mut Vec<f64>`
 //! output buffers that are cleared and resized before writing, so stale
 //! contents never leak into results; Rust's borrow rules already prevent
 //! the output from aliasing any input.
 
+use super::backend::backend;
 use super::Matrix;
 
-/// Dot product, 4-accumulator unrolled.
+/// Dot product (backend-dispatched).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    backend().dot(a, b)
+}
+
+/// Dot product, 4-accumulator unrolled (the scalar backend).
+#[inline]
+pub fn dot_blocked(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let split = a.len() - a.len() % 4;
     let (a4, at) = a.split_at(split);
@@ -51,7 +70,7 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
-/// Scalar reference dot product (property-test oracle for [`dot`]).
+/// Sequential reference dot product (test oracle for [`dot`]).
 #[inline]
 pub fn dot_naive(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
@@ -64,20 +83,149 @@ pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()
 }
 
-/// Squared Euclidean distance between two vectors.
+/// Squared Euclidean distance between two vectors (backend-dispatched).
 #[inline]
 pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    backend().sqdist(a, b)
+}
+
+/// Squared Euclidean distance, 4-accumulator unrolled (the scalar
+/// backend; mirrors [`dot_blocked`]'s accumulation structure).
+#[inline]
+pub fn sqdist_blocked(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % 4;
+    let (a4, at) = a.split_at(split);
+    let (b4, bt) = b.split_at(split);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for (ca, cb) in a4.chunks_exact(4).zip(b4.chunks_exact(4)) {
+        let d0 = ca[0] - cb[0];
+        let d1 = ca[1] - cb[1];
+        let d2 = ca[2] - cb[2];
+        let d3 = ca[3] - cb[3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = (s0 + s2) + (s1 + s3);
+    for (x, y) in at.iter().zip(bt) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Sequential reference squared distance (test oracle for [`sqdist`]).
+#[inline]
+pub fn sqdist_naive(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` (backend-dispatched).
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    backend().axpy(alpha, x, y)
+}
+
+/// `y += alpha * x`, scalar backend. Elementwise, so every backend is
+/// trivially bit-identical here; kept as the non-dispatching form the
+/// naive oracles and the SIMD fallback share.
+#[inline]
+pub fn axpy_blocked(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
     for (yi, xi) in y.iter_mut().zip(x) {
         *yi += alpha * xi;
     }
+}
+
+/// Fused rank-4 row update `out[j] += c[0]·r0[j] + c[1]·r1[j] +
+/// c[2]·r2[j] + c[3]·r3[j]` (backend-dispatched) — the shared inner step
+/// of [`Matrix::matvec_t`], [`Matrix::matmul`] panels, and
+/// [`Matrix::gram`] rank-4 updates.
+#[inline]
+pub fn fused4(c: [f64; 4], r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], out: &mut [f64]) {
+    backend().fused4(c, r0, r1, r2, r3, out)
+}
+
+/// Fused rank-4 row update, scalar backend (left-associated sum per
+/// element — the association the SIMD backend reproduces exactly).
+#[inline]
+pub fn fused4_blocked(
+    c: [f64; 4],
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    out: &mut [f64],
+) {
+    let m = out.len();
+    let (r0, r1, r2, r3) = (&r0[..m], &r1[..m], &r2[..m], &r3[..m]);
+    for (j, o) in out.iter_mut().enumerate() {
+        *o += c[0] * r0[j] + c[1] * r1[j] + c[2] * r2[j] + c[3] * r3[j];
+    }
+}
+
+/// Screener centered accumulate (backend-dispatched): for each column
+/// `j`, `num[j] += (row[j] − means[j])·w` and
+/// `den[j] += (row[j] − means[j])²` — the per-row step of the
+/// correlation screener's single pass over `X`.
+#[inline]
+pub fn centered_accumulate(row: &[f64], means: &[f64], w: f64, num: &mut [f64], den: &mut [f64]) {
+    backend().centered_accumulate(row, means, w, num, den)
+}
+
+/// Screener centered accumulate, scalar backend (elementwise — every
+/// backend is bit-identical here by construction).
+#[inline]
+pub fn centered_accumulate_blocked(
+    row: &[f64],
+    means: &[f64],
+    w: f64,
+    num: &mut [f64],
+    den: &mut [f64],
+) {
+    debug_assert_eq!(row.len(), means.len());
+    debug_assert_eq!(row.len(), num.len());
+    debug_assert_eq!(row.len(), den.len());
+    for (j, (&v, &m)) in row.iter().zip(means).enumerate() {
+        let c = v - m;
+        num[j] += c * w;
+        den[j] += c * c;
+    }
+}
+
+/// Indexed gather sum `Σ vals[idx[i]]` (backend-dispatched) — the CART
+/// split scan's and tree builder's label-mass reduction over a row set.
+#[inline]
+pub fn gather_sum(vals: &[f64], idx: &[usize]) -> f64 {
+    backend().gather_sum(vals, idx)
+}
+
+/// Indexed gather sum, 4-accumulator unrolled (the scalar backend).
+#[inline]
+pub fn gather_sum_blocked(vals: &[f64], idx: &[usize]) -> f64 {
+    let split = idx.len() - idx.len() % 4;
+    let (i4, it) = idx.split_at(split);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for c in i4.chunks_exact(4) {
+        s0 += vals[c[0]];
+        s1 += vals[c[1]];
+        s2 += vals[c[2]];
+        s3 += vals[c[3]];
+    }
+    let mut s = (s0 + s2) + (s1 + s3);
+    for &i in it {
+        s += vals[i];
+    }
+    s
+}
+
+/// Sequential reference gather sum (test oracle for [`gather_sum`]).
+#[inline]
+pub fn gather_sum_naive(vals: &[f64], idx: &[usize]) -> f64 {
+    idx.iter().map(|&i| vals[i]).sum()
 }
 
 /// Elementwise `a - b`.
@@ -109,7 +257,7 @@ pub fn variance(a: &[f64]) -> f64 {
 const MATMUL_COL_BLOCK: usize = 1024;
 
 impl Matrix {
-    /// `self * v` for a column vector `v` (blocked kernel).
+    /// `self * v` for a column vector `v` (backend-dispatched kernel).
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         let mut out = Vec::new();
         self.matvec_into(v, &mut out);
@@ -118,22 +266,23 @@ impl Matrix {
 
     /// `self * v` written into a caller-owned buffer (resized to fit) —
     /// the allocation-free variant the solver workspaces use in their hot
-    /// loops. Each row is reduced with the 4-accumulator [`dot`].
+    /// loops. Each row is reduced with the backend-dispatched [`dot`].
     pub fn matvec_into(&self, v: &[f64], out: &mut Vec<f64>) {
         assert_eq!(v.len(), self.cols(), "matvec: dimension mismatch");
+        let be = backend();
         out.clear();
-        out.extend((0..self.rows()).map(|i| dot(self.row(i), v)));
+        out.extend((0..self.rows()).map(|i| be.dot(self.row(i), v)));
     }
 
-    /// Scalar reference `self * v` (property-test oracle for
-    /// [`Matrix::matvec`]; sequential left-to-right summation per row).
+    /// Sequential reference `self * v` (test oracle for
+    /// [`Matrix::matvec`]; left-to-right summation per row, no dispatch).
     pub fn matvec_naive(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.cols(), "matvec: dimension mismatch");
         (0..self.rows()).map(|i| dot_naive(self.row(i), v)).collect()
     }
 
     /// `selfᵀ * v` — computed without materializing the transpose
-    /// (blocked kernel).
+    /// (backend-dispatched kernel).
     pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
         let mut out = Vec::new();
         self.matvec_t_into(v, &mut out);
@@ -142,10 +291,11 @@ impl Matrix {
 
     /// `selfᵀ * v` written into a caller-owned buffer (resized to fit).
     /// Rows are consumed four at a time, fusing four scaled-row updates
-    /// into one pass over the output — 4× fewer output-buffer sweeps than
-    /// the row-at-a-time formulation.
+    /// into one backend-dispatched [`fused4`] pass over the output — 4×
+    /// fewer output-buffer sweeps than the row-at-a-time formulation.
     pub fn matvec_t_into(&self, v: &[f64], out: &mut Vec<f64>) {
         assert_eq!(v.len(), self.rows(), "matvec_t: dimension mismatch");
+        let be = backend();
         let p = self.cols();
         out.clear();
         out.resize(p, 0.0);
@@ -153,43 +303,49 @@ impl Matrix {
         while i + 4 <= self.rows() {
             let (v0, v1, v2, v3) = (v[i], v[i + 1], v[i + 2], v[i + 3]);
             if v0 != 0.0 || v1 != 0.0 || v2 != 0.0 || v3 != 0.0 {
-                let r0 = self.row(i);
-                let r1 = self.row(i + 1);
-                let r2 = self.row(i + 2);
-                let r3 = self.row(i + 3);
-                for j in 0..p {
-                    out[j] += v0 * r0[j] + v1 * r1[j] + v2 * r2[j] + v3 * r3[j];
-                }
+                be.fused4(
+                    [v0, v1, v2, v3],
+                    self.row(i),
+                    self.row(i + 1),
+                    self.row(i + 2),
+                    self.row(i + 3),
+                    out,
+                );
             }
             i += 4;
         }
         while i < self.rows() {
             if v[i] != 0.0 {
-                axpy(v[i], self.row(i), out);
+                be.axpy(v[i], self.row(i), out);
             }
             i += 1;
         }
     }
 
-    /// Scalar reference `selfᵀ * v` (property-test oracle for
-    /// [`Matrix::matvec_t`]; one scaled-row accumulation per row).
+    /// Sequential reference `selfᵀ * v` (test oracle for
+    /// [`Matrix::matvec_t`]; one scaled-row accumulation per row, written
+    /// out inline so the oracle never dispatches).
     pub fn matvec_t_naive(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.rows(), "matvec_t: dimension mismatch");
         let mut out = vec![0.0; self.cols()];
         for (i, &vi) in v.iter().enumerate() {
             if vi != 0.0 {
-                axpy(vi, self.row(i), &mut out);
+                for (o, x) in out.iter_mut().zip(self.row(i)) {
+                    *o += vi * x;
+                }
             }
         }
         out
     }
 
-    /// Matrix product `self * other` (blocked kernel): ikj loop order with
-    /// the k dimension unrolled four-wide (one fused pass over the output
-    /// row per four A-coefficients) and the output row processed in
-    /// L1-sized column panels ([`MATMUL_COL_BLOCK`]).
+    /// Matrix product `self * other` (backend-dispatched kernel): ikj
+    /// loop order with the k dimension unrolled four-wide (one fused
+    /// [`fused4`] pass over the output row per four A-coefficients) and
+    /// the output row processed in L1-sized column panels
+    /// ([`MATMUL_COL_BLOCK`]).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols(), other.rows(), "matmul: dimension mismatch");
+        let be = backend();
         let (m, kdim, n) = (self.rows(), self.cols(), other.cols());
         let mut out = Matrix::zeros(m, n);
         let od = out.data_mut();
@@ -205,20 +361,21 @@ impl Matrix {
                     let (a0, a1, a2, a3) =
                         (a_row[kk], a_row[kk + 1], a_row[kk + 2], a_row[kk + 3]);
                     if a0 != 0.0 || a1 != 0.0 || a2 != 0.0 || a3 != 0.0 {
-                        let b0 = &other.row(kk)[jb..je];
-                        let b1 = &other.row(kk + 1)[jb..je];
-                        let b2 = &other.row(kk + 2)[jb..je];
-                        let b3 = &other.row(kk + 3)[jb..je];
-                        for (j, o) in opanel.iter_mut().enumerate() {
-                            *o += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-                        }
+                        be.fused4(
+                            [a0, a1, a2, a3],
+                            &other.row(kk)[jb..je],
+                            &other.row(kk + 1)[jb..je],
+                            &other.row(kk + 2)[jb..je],
+                            &other.row(kk + 3)[jb..je],
+                            opanel,
+                        );
                     }
                     kk += 4;
                 }
                 while kk < kdim {
                     let a = a_row[kk];
                     if a != 0.0 {
-                        axpy(a, &other.row(kk)[jb..je], opanel);
+                        be.axpy(a, &other.row(kk)[jb..je], opanel);
                     }
                     kk += 1;
                 }
@@ -228,8 +385,9 @@ impl Matrix {
         out
     }
 
-    /// Scalar reference `self * other` (property-test oracle for
-    /// [`Matrix::matmul`]; ikj order, one scaled-row update per k).
+    /// Sequential reference `self * other` (test oracle for
+    /// [`Matrix::matmul`]; ikj order, one scaled-row update per k,
+    /// written out inline so the oracle never dispatches).
     pub fn matmul_naive(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols(), other.rows(), "matmul: dimension mismatch");
         let (m, k) = (self.rows(), self.cols());
@@ -239,17 +397,21 @@ impl Matrix {
             let out_row = out.row_mut(i);
             for (kk, &a) in a_row.iter().enumerate().take(k) {
                 if a != 0.0 {
-                    axpy(a, other.row(kk), out_row);
+                    for (o, x) in out_row.iter_mut().zip(other.row(kk)) {
+                        *o += a * x;
+                    }
                 }
             }
         }
         out
     }
 
-    /// Gram matrix `selfᵀ * self` (blocked kernel): rows are consumed four
-    /// at a time as fused rank-4 updates of the upper triangle (4× fewer
-    /// triangle sweeps than the rank-1 formulation), then mirrored.
+    /// Gram matrix `selfᵀ * self` (backend-dispatched kernel): rows are
+    /// consumed four at a time as fused rank-4 [`fused4`] updates of the
+    /// upper triangle (4× fewer triangle sweeps than the rank-1
+    /// formulation), then mirrored.
     pub fn gram(&self) -> Matrix {
+        let be = backend();
         let p = self.cols();
         let n = self.rows();
         let mut g = Matrix::zeros(p, p);
@@ -265,11 +427,14 @@ impl Matrix {
                 if x0 == 0.0 && x1 == 0.0 && x2 == 0.0 && x3 == 0.0 {
                     continue;
                 }
-                let ga = &mut gd[a * p + a..(a + 1) * p];
-                let (s0, s1, s2, s3) = (&r0[a..], &r1[a..], &r2[a..], &r3[a..]);
-                for (b, gb) in ga.iter_mut().enumerate() {
-                    *gb += x0 * s0[b] + x1 * s1[b] + x2 * s2[b] + x3 * s3[b];
-                }
+                be.fused4(
+                    [x0, x1, x2, x3],
+                    &r0[a..],
+                    &r1[a..],
+                    &r2[a..],
+                    &r3[a..],
+                    &mut gd[a * p + a..(a + 1) * p],
+                );
             }
             i += 4;
         }
@@ -280,11 +445,7 @@ impl Matrix {
                 if ra == 0.0 {
                     continue;
                 }
-                let ga = &mut gd[a * p + a..(a + 1) * p];
-                let sa = &row[a..];
-                for (b, gb) in ga.iter_mut().enumerate() {
-                    *gb += ra * sa[b];
-                }
+                be.axpy(ra, &row[a..], &mut gd[a * p + a..(a + 1) * p]);
             }
             i += 1;
         }
@@ -298,8 +459,9 @@ impl Matrix {
         g
     }
 
-    /// Scalar reference Gram matrix (property-test oracle for
-    /// [`Matrix::gram`]; rank-1 row updates of the upper triangle).
+    /// Sequential reference Gram matrix (test oracle for
+    /// [`Matrix::gram`]; rank-1 row updates of the upper triangle, no
+    /// dispatch).
     pub fn gram_naive(&self) -> Matrix {
         let p = self.cols();
         let mut g = Matrix::zeros(p, p);
@@ -327,17 +489,18 @@ impl Matrix {
 
     /// Fused residual `out[i] = y[i] − offset − rowᵢ·beta`, i.e. the
     /// regression residual `y − Xβ − intercept` in a single pass over the
-    /// matrix — no intermediate prediction buffer. `out` is cleared and
-    /// resized to `rows()`; it must be a distinct buffer from `y` (the
-    /// borrow checker enforces this).
+    /// matrix — no intermediate prediction buffer, one backend-dispatched
+    /// [`dot`] per row. `out` is cleared and resized to `rows()`; it must
+    /// be a distinct buffer from `y` (the borrow checker enforces this).
     pub fn residual_into(&self, beta: &[f64], y: &[f64], offset: f64, out: &mut Vec<f64>) {
         assert_eq!(beta.len(), self.cols(), "residual_into: beta dimension mismatch");
         assert_eq!(y.len(), self.rows(), "residual_into: y dimension mismatch");
+        let be = backend();
         out.clear();
         out.extend(
             y.iter()
                 .enumerate()
-                .map(|(i, &yi)| yi - offset - dot(self.row(i), beta)),
+                .map(|(i, &yi)| yi - offset - be.dot(self.row(i), beta)),
         );
     }
 }
@@ -365,6 +528,63 @@ mod tests {
             let a: Vec<f64> = (0..len).map(|i| (i as f64 * 0.7).sin()).collect();
             let b: Vec<f64> = (0..len).map(|i| (i as f64 * 1.3).cos()).collect();
             assert!(approx(dot(&a, &b), dot_naive(&a, &b)), "len={len}");
+            assert!(approx(dot_blocked(&a, &b), dot_naive(&a, &b)), "len={len}");
+        }
+    }
+
+    #[test]
+    fn sqdist_blocked_matches_naive_across_lengths() {
+        for len in 0..19 {
+            let a: Vec<f64> = (0..len).map(|i| (i as f64 * 0.9).sin() * 2.0).collect();
+            let b: Vec<f64> = (0..len).map(|i| (i as f64 * 0.4).cos() * 3.0).collect();
+            assert!(approx(sqdist(&a, &b), sqdist_naive(&a, &b)), "len={len}");
+            assert!(approx(sqdist_blocked(&a, &b), sqdist_naive(&a, &b)), "len={len}");
+        }
+    }
+
+    #[test]
+    fn gather_sum_matches_naive_across_lengths() {
+        let vals: Vec<f64> = (0..40).map(|i| (i as f64 * 0.3).sin()).collect();
+        for len in 0..23 {
+            let idx: Vec<usize> = (0..len).map(|i| (i * 17) % vals.len()).collect();
+            assert!(
+                approx(gather_sum(&vals, &idx), gather_sum_naive(&vals, &idx)),
+                "len={len}"
+            );
+            assert!(
+                approx(gather_sum_blocked(&vals, &idx), gather_sum_naive(&vals, &idx)),
+                "len={len}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused4_matches_explicit_expansion() {
+        for len in [0usize, 1, 3, 4, 7, 12] {
+            let r0: Vec<f64> = (0..len).map(|i| i as f64 * 0.5).collect();
+            let r1: Vec<f64> = (0..len).map(|i| 1.0 - i as f64 * 0.25).collect();
+            let r2: Vec<f64> = (0..len).map(|i| (i as f64).cos()).collect();
+            let r3: Vec<f64> = (0..len).map(|i| (i as f64).sin()).collect();
+            let c = [2.0, -1.0, 0.5, 0.25];
+            let mut out = vec![1.0; len];
+            fused4(c, &r0, &r1, &r2, &r3, &mut out);
+            for j in 0..len {
+                let want = 1.0 + c[0] * r0[j] + c[1] * r1[j] + c[2] * r2[j] + c[3] * r3[j];
+                assert!(approx(out[j], want), "len={len} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn centered_accumulate_matches_explicit_loop() {
+        let row: Vec<f64> = (0..11).map(|i| i as f64 * 0.7).collect();
+        let means: Vec<f64> = (0..11).map(|i| i as f64 * 0.1).collect();
+        let (mut num, mut den) = (vec![0.5; 11], vec![0.25; 11]);
+        centered_accumulate(&row, &means, 1.5, &mut num, &mut den);
+        for j in 0..11 {
+            let c = row[j] - means[j];
+            assert!(approx(num[j], 0.5 + c * 1.5), "num[{j}]");
+            assert!(approx(den[j], 0.25 + c * c), "den[{j}]");
         }
     }
 

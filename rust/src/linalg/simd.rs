@@ -1,0 +1,347 @@
+//! AVX2 vectorized kernels — the `ComputeBackend::Simd` implementation.
+//!
+//! This is the **only module in the crate containing `unsafe` code**. It
+//! is compiled on `x86_64` targets only (and excluded under Miri, which
+//! cannot interpret vendor intrinsics — see `linalg::backend`); every
+//! other target resolves the SIMD backend to the blocked scalar kernels.
+//!
+//! ## Bit-identity contract
+//!
+//! Each kernel here is constructed to be **bit-identical** to its blocked
+//! scalar counterpart in [`super::ops`], not merely close:
+//!
+//! - The four SIMD lanes hold exactly the four independent accumulators
+//!   `s0..s3` of the blocked scalar kernels, so lane *l* performs the
+//!   same sequence of IEEE-754 operations on the same values as scalar
+//!   accumulator *l*.
+//! - Horizontal reduction combines lanes as `(s0 + s2) + (s1 + s3)` —
+//!   the same association the scalar kernels use.
+//! - Remainder tails are the same sequential scalar loops.
+//! - Only `vmulpd`/`vaddpd`/`vsubpd` are used — **no FMA**. A fused
+//!   multiply-add skips the intermediate rounding of the separate
+//!   multiply and would produce different (slightly more accurate)
+//!   results than the scalar backend, breaking the cross-backend
+//!   bit-identity that lets `BACKBONE_BACKEND` be a pure wall-clock
+//!   knob. FMA presence is still detected and reported in the bench
+//!   hardware fingerprint; using it is future work that would require
+//!   relaxing the backend-identity tests to a tolerance.
+//!
+//! Since every IEEE-754 scalar operation is exactly rounded and the two
+//! implementations perform the same operations in the same order, the
+//! outputs are bit-for-bit equal — enforced by `tests/prop_linalg.rs`
+//! (kernel-level) and `tests/parallel_determinism.rs` (whole-fit level).
+//!
+//! ## Safety
+//!
+//! The `unsafe` surface is exactly the `#[target_feature(enable =
+//! "avx2")]` kernel bodies. The public wrappers check
+//! `is_x86_feature_detected!("avx2")` and fall back to the blocked
+//! scalar kernels when AVX2 is absent, so **every public function in
+//! this module is safe to call on any x86-64 CPU**. All loads/stores go
+//! through `chunks_exact` slices (`loadu`/`storeu` on 4-element chunks),
+//! so no out-of-bounds access is possible.
+
+use super::ops;
+
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+/// True when the AVX2 kernels below are usable on this CPU.
+#[inline]
+fn avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+/// Horizontal sum with the blocked-kernel association: lanes
+/// `[s0, s1, s2, s3]` → `(s0 + s2) + (s1 + s3)`.
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn hsum_blocked(acc: __m256d) -> f64 {
+    let lo = _mm256_castpd256_pd128(acc); // [s0, s1]
+    let hi = _mm256_extractf128_pd(acc, 1); // [s2, s3]
+    let pair = _mm_add_pd(lo, hi); // [s0+s2, s1+s3]
+    _mm_cvtsd_f64(pair) + _mm_cvtsd_f64(_mm_unpackhi_pd(pair, pair))
+}
+
+/// Dot product (AVX2). Bit-identical to [`ops::dot_blocked`].
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if !avx2() {
+        return ops::dot_blocked(a, b);
+    }
+    // SAFETY: AVX2 presence checked above.
+    unsafe { dot_avx2(a, b) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_avx2(a: &[f64], b: &[f64]) -> f64 {
+    let split = a.len() - a.len() % 4;
+    let (a4, at) = a.split_at(split);
+    let (b4, bt) = b.split_at(split);
+    let mut acc = _mm256_setzero_pd();
+    for (ca, cb) in a4.chunks_exact(4).zip(b4.chunks_exact(4)) {
+        let va = _mm256_loadu_pd(ca.as_ptr());
+        let vb = _mm256_loadu_pd(cb.as_ptr());
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(va, vb));
+    }
+    let mut s = hsum_blocked(acc);
+    for (x, y) in at.iter().zip(bt) {
+        s += x * y;
+    }
+    s
+}
+
+/// `y += alpha * x` (AVX2). Elementwise, so bit-identical to
+/// [`ops::axpy_blocked`] by construction.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    if !avx2() {
+        return ops::axpy_blocked(alpha, x, y);
+    }
+    // SAFETY: AVX2 presence checked above.
+    unsafe { axpy_avx2(alpha, x, y) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(alpha: f64, x: &[f64], y: &mut [f64]) {
+    let split = x.len() - x.len() % 4;
+    let (x4, xt) = x.split_at(split);
+    let (y4, yt) = y.split_at_mut(split);
+    let va = _mm256_set1_pd(alpha);
+    for (cy, cx) in y4.chunks_exact_mut(4).zip(x4.chunks_exact(4)) {
+        let vx = _mm256_loadu_pd(cx.as_ptr());
+        let vy = _mm256_loadu_pd(cy.as_ptr());
+        _mm256_storeu_pd(cy.as_mut_ptr(), _mm256_add_pd(vy, _mm256_mul_pd(va, vx)));
+    }
+    for (yi, xi) in yt.iter_mut().zip(xt) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared Euclidean distance (AVX2). Bit-identical to
+/// [`ops::sqdist_blocked`].
+#[inline]
+pub fn sqdist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    if !avx2() {
+        return ops::sqdist_blocked(a, b);
+    }
+    // SAFETY: AVX2 presence checked above.
+    unsafe { sqdist_avx2(a, b) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sqdist_avx2(a: &[f64], b: &[f64]) -> f64 {
+    let split = a.len() - a.len() % 4;
+    let (a4, at) = a.split_at(split);
+    let (b4, bt) = b.split_at(split);
+    let mut acc = _mm256_setzero_pd();
+    for (ca, cb) in a4.chunks_exact(4).zip(b4.chunks_exact(4)) {
+        let d = _mm256_sub_pd(_mm256_loadu_pd(ca.as_ptr()), _mm256_loadu_pd(cb.as_ptr()));
+        acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+    }
+    let mut s = hsum_blocked(acc);
+    for (x, y) in at.iter().zip(bt) {
+        let d = x - y;
+        s += d * d;
+    }
+    s
+}
+
+/// Fused rank-4 row update `out[j] += c0·r0[j] + c1·r1[j] + c2·r2[j] +
+/// c3·r3[j]` (AVX2) — the inner step of `matvec_t`, `matmul` panels, and
+/// `gram`. Elementwise in `j` with the same left-associated sum, so
+/// bit-identical to [`ops::fused4_blocked`].
+#[inline]
+pub fn fused4(c: [f64; 4], r0: &[f64], r1: &[f64], r2: &[f64], r3: &[f64], out: &mut [f64]) {
+    debug_assert!(
+        r0.len() >= out.len()
+            && r1.len() >= out.len()
+            && r2.len() >= out.len()
+            && r3.len() >= out.len()
+    );
+    if !avx2() {
+        return ops::fused4_blocked(c, r0, r1, r2, r3, out);
+    }
+    // SAFETY: AVX2 presence checked above.
+    unsafe { fused4_avx2(c, r0, r1, r2, r3, out) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn fused4_avx2(
+    c: [f64; 4],
+    r0: &[f64],
+    r1: &[f64],
+    r2: &[f64],
+    r3: &[f64],
+    out: &mut [f64],
+) {
+    let m = out.len();
+    // Hard bounds guarantee for the unchecked vector loads below (panics
+    // on violation even in release builds, unlike a debug_assert).
+    let (r0, r1, r2, r3) = (&r0[..m], &r1[..m], &r2[..m], &r3[..m]);
+    let split = m - m % 4;
+    let (vc0, vc1, vc2, vc3) = (
+        _mm256_set1_pd(c[0]),
+        _mm256_set1_pd(c[1]),
+        _mm256_set1_pd(c[2]),
+        _mm256_set1_pd(c[3]),
+    );
+    let (o4, ot) = out.split_at_mut(split);
+    for (j4, co) in o4.chunks_exact_mut(4).enumerate() {
+        let j = j4 * 4;
+        // Left-associated, matching `c0*r0[j] + c1*r1[j] + c2*r2[j] + c3*r3[j]`.
+        let mut t = _mm256_mul_pd(vc0, _mm256_loadu_pd(r0.as_ptr().add(j)));
+        t = _mm256_add_pd(t, _mm256_mul_pd(vc1, _mm256_loadu_pd(r1.as_ptr().add(j))));
+        t = _mm256_add_pd(t, _mm256_mul_pd(vc2, _mm256_loadu_pd(r2.as_ptr().add(j))));
+        t = _mm256_add_pd(t, _mm256_mul_pd(vc3, _mm256_loadu_pd(r3.as_ptr().add(j))));
+        let vo = _mm256_loadu_pd(co.as_ptr());
+        _mm256_storeu_pd(co.as_mut_ptr(), _mm256_add_pd(vo, t));
+    }
+    for (j, o) in ot.iter_mut().enumerate() {
+        let j = split + j;
+        *o += c[0] * r0[j] + c[1] * r1[j] + c[2] * r2[j] + c[3] * r3[j];
+    }
+}
+
+/// Centered correlation accumulate: `num[j] += (row[j] − means[j])·w`,
+/// `den[j] += (row[j] − means[j])²` (AVX2) — the sparse-regression
+/// screener's per-row step. Elementwise, bit-identical to
+/// [`ops::centered_accumulate_blocked`].
+#[inline]
+pub fn centered_accumulate(row: &[f64], means: &[f64], w: f64, num: &mut [f64], den: &mut [f64]) {
+    debug_assert_eq!(row.len(), means.len());
+    debug_assert_eq!(row.len(), num.len());
+    debug_assert_eq!(row.len(), den.len());
+    if !avx2() {
+        return ops::centered_accumulate_blocked(row, means, w, num, den);
+    }
+    // SAFETY: AVX2 presence checked above.
+    unsafe { centered_accumulate_avx2(row, means, w, num, den) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn centered_accumulate_avx2(
+    row: &[f64],
+    means: &[f64],
+    w: f64,
+    num: &mut [f64],
+    den: &mut [f64],
+) {
+    let p = num.len();
+    // Hard bounds guarantee for the unchecked vector loads below.
+    let (row, means) = (&row[..p], &means[..p]);
+    let split = p - p % 4;
+    let vw = _mm256_set1_pd(w);
+    let (n4, nt) = num.split_at_mut(split);
+    let (d4, dt) = den.split_at_mut(split);
+    for (j4, (cn, cd)) in n4.chunks_exact_mut(4).zip(d4.chunks_exact_mut(4)).enumerate() {
+        let j = j4 * 4;
+        let c = _mm256_sub_pd(
+            _mm256_loadu_pd(row.as_ptr().add(j)),
+            _mm256_loadu_pd(means.as_ptr().add(j)),
+        );
+        let vn = _mm256_loadu_pd(cn.as_ptr());
+        _mm256_storeu_pd(cn.as_mut_ptr(), _mm256_add_pd(vn, _mm256_mul_pd(c, vw)));
+        let vd = _mm256_loadu_pd(cd.as_ptr());
+        _mm256_storeu_pd(cd.as_mut_ptr(), _mm256_add_pd(vd, _mm256_mul_pd(c, c)));
+    }
+    for (j, (n, d)) in nt.iter_mut().zip(dt).enumerate() {
+        let j = split + j;
+        let c = row[j] - means[j];
+        *n += c * w;
+        *d += c * c;
+    }
+}
+
+/// Indexed gather sum `Σ vals[idx[i]]` (AVX2) — the CART split scan's
+/// label-mass reduction. Four gathered lanes mirror the four scalar
+/// accumulators; bit-identical to [`ops::gather_sum_blocked`].
+#[inline]
+pub fn gather_sum(vals: &[f64], idx: &[usize]) -> f64 {
+    if !avx2() {
+        return ops::gather_sum_blocked(vals, idx);
+    }
+    // SAFETY: AVX2 presence checked above.
+    unsafe { gather_sum_avx2(vals, idx) }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn gather_sum_avx2(vals: &[f64], idx: &[usize]) -> f64 {
+    let split = idx.len() - idx.len() % 4;
+    let (i4, it) = idx.split_at(split);
+    let mut acc = _mm256_setzero_pd();
+    for c in i4.chunks_exact(4) {
+        // Indexed loads stay bounds-checked; only the vector add is wide.
+        let v = _mm256_set_pd(vals[c[3]], vals[c[2]], vals[c[1]], vals[c[0]]);
+        acc = _mm256_add_pd(acc, v);
+    }
+    let mut s = hsum_blocked(acc);
+    for &i in it {
+        s += vals[i];
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(len: usize) -> (Vec<f64>, Vec<f64>) {
+        let a: Vec<f64> = (0..len).map(|i| (i as f64 * 0.7).sin() * 3.0).collect();
+        let b: Vec<f64> = (0..len).map(|i| (i as f64 * 1.3).cos() * 2.0).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn simd_kernels_bit_identical_to_blocked_scalar() {
+        // On non-AVX2 hardware the wrappers fall back to the blocked
+        // kernels, so these hold trivially; on AVX2 hardware they verify
+        // the lane-accumulator construction.
+        for len in [0, 1, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 63, 100] {
+            let (a, b) = vecs(len);
+            assert_eq!(dot(&a, &b).to_bits(), ops::dot_blocked(&a, &b).to_bits(), "dot len={len}");
+            assert_eq!(
+                sqdist(&a, &b).to_bits(),
+                ops::sqdist_blocked(&a, &b).to_bits(),
+                "sqdist len={len}"
+            );
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            axpy(0.37, &a, &mut y1);
+            ops::axpy_blocked(0.37, &a, &mut y2);
+            assert_eq!(y1, y2, "axpy len={len}");
+        }
+    }
+
+    #[test]
+    fn simd_fused4_and_accumulators_bit_identical() {
+        for len in [0, 1, 3, 4, 6, 8, 11, 32, 50] {
+            let (r0, r1) = vecs(len);
+            let r2: Vec<f64> = r0.iter().map(|v| v * 0.5 - 1.0).collect();
+            let r3: Vec<f64> = r1.iter().map(|v| v * -0.25 + 2.0).collect();
+            let c = [1.5, -0.5, 0.25, 2.0];
+            let mut o1 = vec![0.125; len];
+            let mut o2 = vec![0.125; len];
+            fused4(c, &r0, &r1, &r2, &r3, &mut o1);
+            ops::fused4_blocked(c, &r0, &r1, &r2, &r3, &mut o2);
+            assert_eq!(o1, o2, "fused4 len={len}");
+
+            let (mut n1, mut d1) = (vec![0.5; len], vec![0.25; len]);
+            let (mut n2, mut d2) = (vec![0.5; len], vec![0.25; len]);
+            centered_accumulate(&r0, &r1, 0.8, &mut n1, &mut d1);
+            ops::centered_accumulate_blocked(&r0, &r1, 0.8, &mut n2, &mut d2);
+            assert_eq!(n1, n2, "centered num len={len}");
+            assert_eq!(d1, d2, "centered den len={len}");
+
+            let idx: Vec<usize> = (0..len).map(|i| (i * 7) % len.max(1)).collect();
+            assert_eq!(
+                gather_sum(&r0, &idx).to_bits(),
+                ops::gather_sum_blocked(&r0, &idx).to_bits(),
+                "gather len={len}"
+            );
+        }
+    }
+}

@@ -6,6 +6,13 @@
 //! bit-compatible pure-Rust implementations. The hot-path entry points
 //! exist only so `Backend` compiles unchanged; they are unreachable
 //! because no `Engine` value can be constructed.
+//!
+//! This try-artifact-else-fall-back seam is the accelerator-level twin of
+//! the CPU kernel seam in [`crate::linalg`] (`ComputeBackend`): both pick
+//! the fastest available implementation at runtime behind one stable call
+//! site, and both keep the portable implementation as the always-correct
+//! fallback. A future device backend plugs in here; a future ISA backend
+//! (AVX-512, NEON) plugs into `linalg::backend`.
 
 use crate::linalg::Matrix;
 use crate::rng::Rng;

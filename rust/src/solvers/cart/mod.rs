@@ -139,7 +139,7 @@ fn best_split_on_feature(
     order.clear();
     order.extend(0..n);
     order.sort_by(|&a, &b| vals[a].partial_cmp(&vals[b]).unwrap());
-    let total_pos: f64 = rows.iter().map(|&i| y[i]).sum();
+    let total_pos = crate::linalg::gather_sum(y, rows);
 
     let mut best: Option<(f64, f64, usize)> = None;
     let mut left_pos = 0.0;
@@ -178,13 +178,13 @@ struct Builder<'a> {
 
 impl<'a> Builder<'a> {
     fn leaf(&self, rows: &[usize]) -> TreeNode {
-        let pos: f64 = rows.iter().map(|&i| self.y[i]).sum();
+        let pos = crate::linalg::gather_sum(self.y, rows);
         TreeNode::Leaf { prob: pos / rows.len().max(1) as f64, n: rows.len() }
     }
 
     fn build(&mut self, rows: Vec<usize>, depth: usize) -> TreeNode {
         self.max_depth_seen = self.max_depth_seen.max(depth);
-        let pos: f64 = rows.iter().map(|&i| self.y[i]).sum();
+        let pos = crate::linalg::gather_sum(self.y, &rows);
         let node_impurity = gini(pos, rows.len() as f64);
         if depth >= self.cfg.max_depth
             || rows.len() < self.cfg.min_samples_split

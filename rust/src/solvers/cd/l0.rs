@@ -194,11 +194,9 @@ impl PolishCache {
                 let sa = self.srow[a];
                 self.means[a] += sa;
                 self.xty[a] += sa * yi;
-                let ga = &mut gd[a * k + a..(a + 1) * k];
-                let sr = &self.srow[a..];
-                for (b, gb) in ga.iter_mut().enumerate() {
-                    *gb += sa * sr[b];
-                }
+                // Rank-1 upper-triangle row update, backend-dispatched
+                // (elementwise axpy — bit-identical across backends).
+                crate::linalg::axpy(sa, &self.srow[a..], &mut gd[a * k + a..(a + 1) * k]);
             }
         }
         let nf = (n.max(1)) as f64;

@@ -15,9 +15,11 @@
 //! matrix-level memo ([`Matrix::row_sq_norms`], computed once per fit and
 //! shared by every restart), centroid norms from the same memo on the
 //! centroid matrix (recomputed lazily only after an update step mutates
-//! it). Each point↔centroid candidate then costs a single dot product,
-//! which the 4-accumulator [`dot`] kernel vectorizes — the
-//! subtract-square-sum loop of `sqdist` does not.
+//! it). Each point↔centroid candidate then costs a single dot product.
+//! Both [`dot`] and the [`sqdist`] used for exact distances (empty-cluster
+//! reseeding, tolerance checks) are backend-dispatched 4-accumulator
+//! kernels (blocked scalar or AVX2 — bit-identical; see
+//! `linalg::backend`).
 
 use crate::linalg::{dot, sqdist, Matrix};
 use crate::rng::Rng;

@@ -124,14 +124,13 @@ pub fn logistic_fit_with(
             let e = mu - y[i];
             let w = (mu * (1.0 - mu)).max(1e-9);
             let row = ws.xsub.row(i);
+            // Gradient accumulate and each rank-1 triangle row are
+            // elementwise axpy updates — backend-dispatched, bit-identical
+            // across backends.
+            crate::linalg::axpy(e, row, &mut ws.gradbuf[..p]);
             for a in 0..p {
-                ws.gradbuf[a] += e * row[a];
                 let wra = w * row[a];
-                let ha = &mut hd[a * pp + a..a * pp + p];
-                let ra = &row[a..];
-                for (b, hb) in ha.iter_mut().enumerate() {
-                    *hb += wra * ra[b];
-                }
+                crate::linalg::axpy(wra, &row[a..], &mut hd[a * pp + a..a * pp + p]);
                 hd[a * pp + p] += wra; // intercept cross-term
             }
             ws.gradbuf[p] += e;

@@ -7,10 +7,19 @@
 
 use backbone_learn::backbone::{Backbone, ExecutionPolicy};
 use backbone_learn::data::{blobs, classification, sparse_regression};
+use backbone_learn::linalg::{set_backend, BackendChoice};
 use backbone_learn::rng::Rng;
 use backbone_learn::util::Budget;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 4];
+
+/// The compute-backend axis of the determinism contract (PR-8): every
+/// variant must produce fits bit-identical to `scalar` at every thread
+/// count of this suite. On hardware without AVX2 `Simd`/`Auto` resolve to
+/// scalar and the comparisons are trivially exact, so the suite still
+/// passes on non-AVX2 targets.
+const BACKENDS: [BackendChoice; 3] =
+    [BackendChoice::Scalar, BackendChoice::Simd, BackendChoice::Auto];
 
 #[test]
 fn sparse_regression_parallel_fits_are_bit_identical() {
@@ -163,6 +172,125 @@ fn clustering_parallel_fits_are_bit_identical() {
         assert_eq!(seq.labels, par.labels, "threads={threads}");
         assert_eq!(seq.objective, par.objective, "threads={threads}");
     }
+}
+
+/// Backend × thread-count bit-identity for all four learners: the
+/// reference fit runs on the scalar backend with the sequential schedule;
+/// every (backend, threads) combination must reproduce it bit for bit.
+/// Uses the process-global `set_backend` (what `--backend` and
+/// `BACKBONE_BACKEND` drive); safe even if another test computes
+/// concurrently, because backends are bit-identical by construction.
+#[test]
+fn all_learners_bit_identical_across_backends_and_thread_counts() {
+    let sr = sparse_regression::generate(
+        &sparse_regression::SparseRegressionConfig { n: 80, p: 150, k: 4, rho: 0.2, snr: 5.0 },
+        &mut Rng::seed_from_u64(21),
+    );
+    let lr = classification::generate(
+        &classification::ClassificationConfig {
+            n: 150,
+            p: 30,
+            k: 3,
+            n_redundant: 0,
+            n_clusters: 2,
+            class_sep: 2.0,
+            flip_y: 0.02,
+        },
+        &mut Rng::seed_from_u64(22),
+    );
+    let dt = classification::generate(
+        &classification::ClassificationConfig {
+            n: 180,
+            p: 20,
+            k: 3,
+            n_redundant: 1,
+            n_clusters: 4,
+            class_sep: 1.8,
+            flip_y: 0.03,
+        },
+        &mut Rng::seed_from_u64(23),
+    );
+    let cl = blobs::generate(
+        &blobs::BlobsConfig {
+            n: 14,
+            p: 2,
+            true_clusters: 3,
+            cluster_std: 0.4,
+            center_box: 8.0,
+            min_center_dist: 5.0,
+        },
+        &mut Rng::seed_from_u64(24),
+    );
+
+    // One fit of all four learners under (backend, threads); returns every
+    // bit-comparable artifact.
+    let fit_all = |choice: BackendChoice, threads: usize| {
+        set_backend(choice);
+        let mut sr_bb = Backbone::sparse_regression()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(4)
+            .max_nonzeros(4)
+            .threads(threads)
+            .seed(7)
+            .build()
+            .unwrap();
+        let sr_model = sr_bb.fit(&sr.x, &sr.y).unwrap().clone();
+        let mut lr_bb = Backbone::sparse_logistic()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(4)
+            .max_nonzeros(3)
+            .threads(threads)
+            .seed(5)
+            .build()
+            .unwrap();
+        let lr_model = lr_bb.fit(&lr.x, &lr.y).unwrap().clone();
+        let mut dt_bb = Backbone::decision_tree()
+            .alpha(0.6)
+            .beta(0.5)
+            .num_subproblems(4)
+            .depth(2)
+            .threads(threads)
+            .seed(3)
+            .build()
+            .unwrap();
+        let dt_model = dt_bb.fit(&dt.x, &dt.y).unwrap().clone();
+        let mut cl_bb = Backbone::clustering()
+            .beta(0.9)
+            .num_subproblems(4)
+            .n_clusters(3)
+            .threads(threads)
+            .seed(9)
+            .build()
+            .unwrap();
+        let cl_model = cl_bb.fit_with_budget(&cl.x, &Budget::seconds(120.0)).unwrap().clone();
+        (sr_model, lr_model, dt_model, cl_model)
+    };
+
+    let reference = fit_all(BackendChoice::Scalar, 1);
+    for choice in BACKENDS {
+        for threads in THREAD_COUNTS {
+            let got = fit_all(choice, threads);
+            let tag = format!("backend={} threads={threads}", choice.name());
+            assert_eq!(reference.0.beta, got.0.beta, "sr beta {tag}");
+            assert_eq!(reference.0.support, got.0.support, "sr support {tag}");
+            assert_eq!(reference.0.intercept, got.0.intercept, "sr intercept {tag}");
+            assert_eq!(reference.0.objective, got.0.objective, "sr objective {tag}");
+            assert_eq!(reference.1.beta, got.1.beta, "lr beta {tag}");
+            assert_eq!(reference.1.support, got.1.support, "lr support {tag}");
+            assert_eq!(reference.1.nll, got.1.nll, "lr nll {tag}");
+            assert_eq!(reference.2.root, got.2.root, "dt root {tag}");
+            assert_eq!(reference.2.errors, got.2.errors, "dt errors {tag}");
+            assert_eq!(
+                reference.2.backbone_features, got.2.backbone_features,
+                "dt backbone {tag}"
+            );
+            assert_eq!(reference.3.labels, got.3.labels, "cl labels {tag}");
+            assert_eq!(reference.3.objective, got.3.objective, "cl objective {tag}");
+        }
+    }
+    set_backend(BackendChoice::Auto);
 }
 
 #[test]

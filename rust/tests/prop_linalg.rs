@@ -8,7 +8,10 @@
 
 use backbone_learn::backbone::Backbone;
 use backbone_learn::data::sparse_regression::{generate, SparseRegressionConfig};
-use backbone_learn::linalg::{cholesky, cholesky_bordered, Matrix};
+use backbone_learn::linalg::{
+    cholesky, cholesky_bordered, dot_naive, gather_sum_naive, set_backend, simd_available,
+    sqdist_naive, BackendChoice, ComputeBackend, Matrix,
+};
 use backbone_learn::prop::{property, Gen};
 use backbone_learn::rng::Rng;
 use backbone_learn::solvers::cd::{
@@ -83,6 +86,110 @@ fn prop_blocked_kernels_match_scalar_oracles() {
         }
         assert_close_slice(a.col_sq_norms(), &cn, "col_sq_norms");
     });
+}
+
+/// Scalar-vs-SIMD-vs-naive agreement for every backend-dispatched kernel
+/// across odd sizes (not multiples of the 4-wide lanes, including the
+/// n = 0 and n = 1 edges). Both backends must agree with the sequential
+/// naive oracle to ≤ 1e-9 — and with *each other* bit-exactly (the
+/// backend bit-identity contract; kernels are called directly on
+/// `ComputeBackend` values, so the process-global backend is untouched).
+#[test]
+fn prop_backend_kernels_match_naive_and_each_other() {
+    property("scalar = simd = naive across odd sizes", 40, |g| {
+        const LENS: [usize; 12] = [0, 1, 2, 3, 5, 7, 9, 13, 17, 31, 63, 101];
+        let len = LENS[g.usize_in(0..LENS.len())];
+        let a = g.vec_normal(len);
+        let b = g.vec_normal(len);
+        let (s, v) = (ComputeBackend::Scalar, ComputeBackend::Simd);
+
+        let (ds, dv, dn) = (s.dot(&a, &b), v.dot(&a, &b), dot_naive(&a, &b));
+        assert_eq!(ds.to_bits(), dv.to_bits(), "dot bit-identity len={len}");
+        assert!((ds - dn).abs() <= TOL * (1.0 + dn.abs()), "dot vs naive len={len}");
+
+        let (qs, qv, qn) = (s.sqdist(&a, &b), v.sqdist(&a, &b), sqdist_naive(&a, &b));
+        assert_eq!(qs.to_bits(), qv.to_bits(), "sqdist bit-identity len={len}");
+        assert!((qs - qn).abs() <= TOL * (1.0 + qn.abs()), "sqdist vs naive len={len}");
+
+        let alpha = g.normal();
+        let (mut ys, mut yv) = (b.clone(), b.clone());
+        s.axpy(alpha, &a, &mut ys);
+        v.axpy(alpha, &a, &mut yv);
+        assert_eq!(ys, yv, "axpy bit-identity len={len}");
+        let yn: Vec<f64> = b.iter().zip(&a).map(|(yi, xi)| yi + alpha * xi).collect();
+        assert_close_slice(&ys, &yn, "axpy vs naive");
+
+        if len > 0 {
+            let idx: Vec<usize> = (0..g.usize_in(0..2 * len + 1))
+                .map(|_| g.usize_in(0..len))
+                .collect();
+            let (gs, gv, gn) =
+                (s.gather_sum(&a, &idx), v.gather_sum(&a, &idx), gather_sum_naive(&a, &idx));
+            assert_eq!(gs.to_bits(), gv.to_bits(), "gather_sum bit-identity len={len}");
+            assert!((gs - gn).abs() <= TOL * (1.0 + gn.abs()), "gather_sum vs naive");
+        }
+
+        let c = [g.normal(), g.normal(), g.normal(), g.normal()];
+        let (r0, r1, r2, r3) =
+            (g.vec_normal(len), g.vec_normal(len), g.vec_normal(len), g.vec_normal(len));
+        let base = g.vec_normal(len);
+        let (mut os, mut ov) = (base.clone(), base.clone());
+        s.fused4(c, &r0, &r1, &r2, &r3, &mut os);
+        v.fused4(c, &r0, &r1, &r2, &r3, &mut ov);
+        assert_eq!(os, ov, "fused4 bit-identity len={len}");
+        let on: Vec<f64> = (0..len)
+            .map(|j| base[j] + c[0] * r0[j] + c[1] * r1[j] + c[2] * r2[j] + c[3] * r3[j])
+            .collect();
+        assert_close_slice(&os, &on, "fused4 vs naive");
+
+        let w = g.normal();
+        let means = g.vec_normal(len);
+        let (mut num_s, mut den_s) = (base.clone(), r0.clone());
+        let (mut num_v, mut den_v) = (base.clone(), r0.clone());
+        s.centered_accumulate(&a, &means, w, &mut num_s, &mut den_s);
+        v.centered_accumulate(&a, &means, w, &mut num_v, &mut den_v);
+        assert_eq!(num_s, num_v, "centered_accumulate num bit-identity len={len}");
+        assert_eq!(den_s, den_v, "centered_accumulate den bit-identity len={len}");
+    });
+}
+
+/// The fitted support (and every coefficient) of a fixed-seed fit is
+/// pinned across `scalar`/`simd`/`auto`: backend choice may only change
+/// timings, never results. Uses the process-global [`set_backend`] the
+/// CLI flag drives; safe under concurrent tests precisely because the
+/// backends are bit-identical.
+#[test]
+fn backbone_supports_are_pinned_across_backends() {
+    let data = generate(
+        &SparseRegressionConfig { n: 120, p: 200, k: 4, rho: 0.1, snr: 5.0 },
+        &mut Rng::seed_from_u64(99),
+    );
+    let fit = |choice: BackendChoice| {
+        set_backend(choice);
+        let mut bb = Backbone::sparse_regression()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(4)
+            .max_nonzeros(4)
+            .seed(31)
+            .build()
+            .unwrap();
+        bb.fit(&data.x, &data.y).unwrap().clone()
+    };
+    let scalar = fit(BackendChoice::Scalar);
+    let simd = fit(BackendChoice::Simd);
+    let auto = fit(BackendChoice::Auto);
+    set_backend(BackendChoice::Auto);
+    assert!(!scalar.support.is_empty());
+    for (name, other) in [("simd", &simd), ("auto", &auto)] {
+        assert_eq!(scalar.support, other.support, "support drift under {name}");
+        assert_eq!(scalar.beta, other.beta, "beta drift under {name}");
+        assert_eq!(scalar.intercept, other.intercept, "intercept drift under {name}");
+        assert_eq!(scalar.objective, other.objective, "objective drift under {name}");
+    }
+    // The test is vacuous as a SIMD check on hardware without AVX2, but
+    // still pins scalar determinism there.
+    let _ = simd_available();
 }
 
 #[test]

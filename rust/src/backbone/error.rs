@@ -36,6 +36,10 @@ pub enum BackboneError {
     NotFitted,
     /// A downstream solver failed (wrapped message).
     Solver { message: String },
+    /// A subproblem worker panicked; the panic was caught at the batch
+    /// boundary (the process survives) and reported against the lowest
+    /// failing batch slot, same as [`BackboneError::Solver`].
+    SubproblemPanicked { slot: usize, message: String },
 }
 
 impl fmt::Display for BackboneError {
@@ -77,6 +81,9 @@ impl fmt::Display for BackboneError {
             Self::Solver { message } => {
                 write!(f, "solver failure: {message}")
             }
+            Self::SubproblemPanicked { slot, message } => {
+                write!(f, "subproblem {slot} panicked (caught): {message}")
+            }
         }
     }
 }
@@ -98,6 +105,9 @@ mod tests {
             message: "must be at least 1".into(),
         };
         assert!(e.to_string().contains("max_nonzeros"));
+        let e = BackboneError::SubproblemPanicked { slot: 2, message: "boom".into() };
+        assert!(e.to_string().contains("subproblem 2"));
+        assert!(e.to_string().contains("boom"));
     }
 
     #[test]

@@ -289,6 +289,12 @@ pub struct BackboneDiagnostics {
     /// Worker threads the subproblem scheduler actually used (1 for the
     /// sequential policy; the resolved count for `Parallel`).
     pub threads_used: usize,
+    /// Subproblem panics caught and converted to typed errors during this
+    /// run. A caught panic currently always aborts the fit, so successful
+    /// runs report 0; the field exists so the accounting survives any
+    /// future partial-batch policy (serving layers count panics per
+    /// request via [`BackboneError::SubproblemPanicked`]).
+    pub panics_caught: usize,
 }
 
 impl BackboneDiagnostics {
@@ -315,6 +321,7 @@ impl BackboneDiagnostics {
             Json::Number(self.subproblems_skipped as f64),
         );
         m.insert("threads_used".into(), Json::Number(self.threads_used as f64));
+        m.insert("panics_caught".into(), Json::Number(self.panics_caught as f64));
         Json::Object(m)
     }
 }

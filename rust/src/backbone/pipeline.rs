@@ -29,11 +29,26 @@ use super::subproblems::{construct_subproblems, Subproblem};
 use super::{
     BackboneDiagnostics, BackboneFit, BackboneLearner, BackboneParams, IterationStats,
 };
+use crate::fault::{self, FaultPoint};
 use crate::rng::Rng;
 use crate::util::{Budget, Stopwatch};
 use std::collections::BTreeMap;
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+/// Render a caught panic payload as a human-readable message. `panic!`
+/// with a literal yields `&str`, with a format string yields `String`;
+/// anything else (custom payloads) falls back to a fixed marker.
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 /// How the subproblem batch of one iteration is executed.
 ///
@@ -85,6 +100,13 @@ pub struct BatchOutcome<I> {
     pub exhausted: bool,
     /// Worker threads used (1 for the sequential schedule).
     pub threads_used: usize,
+    /// Panics caught at the subproblem boundary during this batch. A
+    /// caught panic aborts the batch with
+    /// [`BackboneError::SubproblemPanicked`], so a *returned* outcome
+    /// always reports 0 — the field keeps the accounting contract
+    /// explicit for diagnostics plumbing and future partial-batch
+    /// policies.
+    pub panics_caught: usize,
 }
 
 impl<I> BatchOutcome<I> {
@@ -102,6 +124,13 @@ impl<I> BatchOutcome<I> {
 /// `exhausted = true`. Solver errors abort the batch; when several
 /// workers fail concurrently, the error of the lowest batch slot is
 /// returned (matching what the sequential schedule would have hit first).
+///
+/// Panics inside `fit_subproblem` are caught at this boundary
+/// (`catch_unwind` around every solve, on every schedule) and converted
+/// to [`BackboneError::SubproblemPanicked`] under the same lowest-slot
+/// contract — a buggy or fault-injected subproblem fails the fit with a
+/// typed error instead of killing the process or poisoning the
+/// scoped-thread scheduler.
 pub fn solve_subproblem_batch<L: BackboneLearner>(
     learner: &L,
     data: &L::Data,
@@ -143,9 +172,27 @@ where
                     break;
                 }
                 let watch = Stopwatch::start();
-                let relevant = learner
-                    .fit_subproblem(data, subproblem, &mut stream.clone(), &mut ws)
-                    .map_err(|e| BackboneError::Solver { message: format!("{e:#}") })?;
+                // AssertUnwindSafe: on panic the workspace may be left
+                // mid-update, but it is never touched again — the batch
+                // aborts immediately below.
+                let solved = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                    if fault::fire(FaultPoint::WorkerPanic) {
+                        panic!("injected subproblem panic (fault-inject)");
+                    }
+                    learner.fit_subproblem(data, subproblem, &mut stream.clone(), &mut ws)
+                }));
+                let relevant = match solved {
+                    Ok(Ok(relevant)) => relevant,
+                    Ok(Err(e)) => {
+                        return Err(BackboneError::Solver { message: format!("{e:#}") });
+                    }
+                    Err(payload) => {
+                        return Err(BackboneError::SubproblemPanicked {
+                            slot: i,
+                            message: panic_message(payload),
+                        });
+                    }
+                };
                 wall_secs[i] = watch.elapsed_secs();
                 results[i] = Some(relevant);
             }
@@ -166,7 +213,7 @@ where
             let min_error_slot = AtomicUsize::new(usize::MAX);
             let first_error: Mutex<Option<(usize, BackboneError)>> = Mutex::new(None);
 
-            let mut worker_results = std::thread::scope(|scope| {
+            let (mut worker_results, infra_panic) = std::thread::scope(|scope| {
                 let handles: Vec<_> = (0..n_workers)
                     .map(|_| {
                         scope.spawn(|| {
@@ -189,39 +236,65 @@ where
                                 // state the sequential path would use.
                                 let mut stream = streams[i].clone();
                                 let watch = Stopwatch::start();
-                                match learner.fit_subproblem(
-                                    data,
-                                    &batch[i],
-                                    &mut stream,
-                                    &mut ws,
-                                ) {
-                                    Ok(relevant) => {
+                                // AssertUnwindSafe: see the sequential arm —
+                                // a panicking worker stops claiming slots, so
+                                // its possibly-torn workspace is never reused.
+                                let solved = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                                    if fault::fire(FaultPoint::WorkerPanic) {
+                                        panic!("injected subproblem panic (fault-inject)");
+                                    }
+                                    learner.fit_subproblem(data, &batch[i], &mut stream, &mut ws)
+                                }));
+                                let err = match solved {
+                                    Ok(Ok(relevant)) => {
                                         done.push((i, relevant, watch.elapsed_secs()));
+                                        continue;
                                     }
-                                    Err(e) => {
-                                        let err = BackboneError::Solver {
-                                            message: format!("{e:#}"),
-                                        };
-                                        min_error_slot.fetch_min(i, Ordering::Relaxed);
-                                        let mut slot = first_error.lock().unwrap();
-                                        if slot.as_ref().map_or(true, |(fi, _)| i < *fi) {
-                                            *slot = Some((i, err));
-                                        }
-                                        break;
+                                    Ok(Err(e)) => {
+                                        BackboneError::Solver { message: format!("{e:#}") }
                                     }
+                                    Err(payload) => BackboneError::SubproblemPanicked {
+                                        slot: i,
+                                        message: panic_message(payload),
+                                    },
+                                };
+                                min_error_slot.fetch_min(i, Ordering::Relaxed);
+                                let mut slot =
+                                    first_error.lock().unwrap_or_else(|e| e.into_inner());
+                                if slot.as_ref().map_or(true, |(fi, _)| i < *fi) {
+                                    *slot = Some((i, err));
                                 }
+                                break;
                             }
                             (done, hit_budget)
                         })
                     })
                     .collect();
-                handles
+                // Learner panics are caught inside the worker loop above, so
+                // a failed join can only mean our own bookkeeping panicked.
+                // Degrade to a typed error anyway: the process must survive.
+                let mut infra_panic: Option<String> = None;
+                let joined: Vec<_> = handles
                     .into_iter()
-                    .map(|h| h.join().expect("subproblem worker panicked"))
-                    .collect::<Vec<_>>()
+                    .filter_map(|h| match h.join() {
+                        Ok(r) => Some(r),
+                        Err(payload) => {
+                            infra_panic.get_or_insert_with(|| panic_message(payload));
+                            None
+                        }
+                    })
+                    .collect();
+                (joined, infra_panic)
             });
-            if let Some((_, err)) = first_error.into_inner().unwrap() {
+            if let Some((_, err)) =
+                first_error.into_inner().unwrap_or_else(|e| e.into_inner())
+            {
                 return Err(err);
+            }
+            if let Some(message) = infra_panic {
+                return Err(BackboneError::Solver {
+                    message: format!("subproblem worker thread panicked outside the solve: {message}"),
+                });
             }
             for (done, hit_budget) in worker_results.drain(..) {
                 exhausted |= hit_budget;
@@ -235,7 +308,7 @@ where
     };
     // Invariant: exhausted ⇔ some slot was skipped (defensive re-derive).
     exhausted = exhausted || results.iter().any(Option::is_none);
-    Ok(BatchOutcome { results, wall_secs, exhausted, threads_used })
+    Ok(BatchOutcome { results, wall_secs, exhausted, threads_used, panics_caught: 0 })
 }
 
 /// A validated, reusable runner for Algorithm 1.
@@ -361,6 +434,7 @@ impl FitPipeline {
             )?;
             let exhausted = outcome.exhausted;
             diagnostics.subproblems_skipped += outcome.skipped();
+            diagnostics.panics_caught += outcome.panics_caught;
             diagnostics.threads_used = diagnostics.threads_used.max(outcome.threads_used);
             let subproblem_secs = outcome.wall_secs;
 
@@ -739,6 +813,66 @@ mod tests {
                         message.contains("subproblem 1"),
                         "{policy:?}: wrong error slot: {message}"
                     );
+                }
+                other => panic!("unexpected error {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn panicking_subproblem_is_caught_as_typed_error_on_both_schedules() {
+        /// Panics on subproblems whose first entity is ≥ 2, so batch
+        /// slot 2 is the first failure on the sequential schedule.
+        struct Bomb;
+        impl BackboneLearner for Bomb {
+            type Data = ();
+            type Indicator = usize;
+            type Model = ();
+            type Workspace = ();
+            fn num_entities(&self, _d: &()) -> usize {
+                8
+            }
+            fn utilities(&mut self, _d: &()) -> Vec<f64> {
+                vec![1.0; 8]
+            }
+            fn fit_subproblem(
+                &self,
+                _d: &(),
+                entities: &[usize],
+                _r: &mut Rng,
+                _ws: &mut (),
+            ) -> anyhow::Result<Vec<usize>> {
+                if entities[0] >= 2 {
+                    panic!("boom in subproblem {}", entities[0]);
+                }
+                Ok(entities.to_vec())
+            }
+            fn indicator_entities(&self, i: &usize) -> Vec<usize> {
+                vec![*i]
+            }
+            fn fit_reduced(&mut self, _d: &(), _b: &[usize], _bu: &Budget) -> anyhow::Result<()> {
+                Ok(())
+            }
+        }
+
+        let batch: Vec<Subproblem> = (0..8).map(|i| vec![i]).collect();
+        for policy in [ExecutionPolicy::Sequential, ExecutionPolicy::Parallel] {
+            let err = solve_subproblem_batch(
+                &Bomb,
+                &(),
+                &batch,
+                &mut Rng::seed_from_u64(5),
+                &Budget::unlimited(),
+                policy,
+                4,
+            )
+            .unwrap_err();
+            match err {
+                BackboneError::SubproblemPanicked { slot, message } => {
+                    // The lowest-slot contract holds for panics too:
+                    // workers racing ahead into slots 3..8 must not win.
+                    assert_eq!(slot, 2, "{policy:?}: wrong panic slot");
+                    assert!(message.contains("boom"), "{policy:?}: {message}");
                 }
                 other => panic!("unexpected error {other:?}"),
             }

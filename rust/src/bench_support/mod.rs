@@ -829,7 +829,7 @@ pub fn emit_bench_json(path: &str, doc: &Json, schema_only: bool) -> Result<()> 
              a schema-only document on purpose)"
         );
     }
-    std::fs::write(path, doc.to_string_pretty())
+    crate::util::atomic_write(path, &doc.to_string_pretty())
         .with_context(|| format!("writing `{path}`"))?;
     Ok(())
 }

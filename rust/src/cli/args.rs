@@ -16,6 +16,7 @@ pub struct Args {
 
 /// Option keys that are boolean flags (never consume a value).
 const FLAG_KEYS: &[&str] = &[
+    "chaos",
     "fit",
     "full",
     "help",

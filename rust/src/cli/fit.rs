@@ -273,7 +273,7 @@ pub fn run(args: &Args) -> Result<i32> {
             doc.insert("warm_start".into(), w);
         }
         let text = Json::Object(doc).to_string_pretty();
-        std::fs::write(&path, text).with_context(|| format!("writing `{path}`"))?;
+        crate::util::atomic_write(&path, &text).with_context(|| format!("writing `{path}`"))?;
         eprintln!("wrote {path}");
     }
     Ok(0)

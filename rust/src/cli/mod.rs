@@ -56,7 +56,8 @@ USAGE:
                          [--host H] [--port P] [--threads N] [--fit]
                          [--warm-cache store.json] [--max-fits N] [--max-inflight N]
                          [--max-connections N] [--read-timeout SECS]
-                         [--idle-timeout SECS] [--no-keep-alive]
+                         [--idle-timeout SECS] [--fit-timeout SECS]
+                         [--no-keep-alive]
                          (keep-alive HTTP model server, one handler thread per
                           connection bounded by --max-connections (default 64,
                           saturation → 503 + Retry-After): POST /predict,
@@ -64,14 +65,21 @@ USAGE:
                           GET /models, GET /healthz, GET /stats; --fit adds
                           POST /fit — online fits on --threads solver threads
                           with a learned warm-start cache; overload → 429 +
-                          Retry-After)
+                          Retry-After; --fit-timeout / per-request deadline_ms
+                          cancel overrunning solves → 503 + Retry-After)
   backbone-learn serve   --model model.json --self-test [--quick] [--requests N]
                          [--connections C] [--batch B] [--target-rps R]
                          [--duration SECS] [--slo-p99-ms MS] [--no-keep-alive]
                          [--no-swap] [--no-compare] [--out report.json]
+                         [--chaos [--chaos-seed N]]
                          (loopback load test: keep-alive reuse vs close-mode,
                           hot-swap-under-load, optional p99 SLO; non-zero exit
-                          unless the report passes)
+                          unless the report passes. --chaos — requires a
+                          `--features fault-inject` build — swaps in the fault
+                          drill: seeded worker panics / write failures /
+                          connection drops / slow reads, then audits survival,
+                          structured errors, checksum-clean artifacts, and
+                          exact /stats counter reconciliation)
   backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
                         [--threads N]
   backbone-learn bench  [--quick] [--reps N] [--budget SECS] [--out FILE]

@@ -12,12 +12,14 @@
 //!                        [--port P] [--host H] [--threads N]
 //!                        [--fit] [--warm-cache store.json] [--max-fits N]
 //!                        [--max-inflight N] [--read-timeout SECS]
-//!                        [--idle-timeout SECS] [--no-keep-alive]
+//!                        [--idle-timeout SECS] [--fit-timeout SECS]
+//!                        [--no-keep-alive]
 //! backbone-learn serve   --model model.json --self-test [--quick]
 //!                        [--requests N] [--connections C] [--batch B]
 //!                        [--threads N] [--target-rps R] [--duration SECS]
 //!                        [--slo-p99-ms MS] [--no-keep-alive] [--no-swap]
-//!                        [--no-compare] [--out report.json]
+//!                        [--no-compare] [--chaos] [--chaos-seed N]
+//!                        [--out report.json]
 //! ```
 //!
 //! `save` fits a learner on generated data (same generators as `fit`)
@@ -202,12 +204,12 @@ pub fn save(args: &Args) -> Result<i32> {
         digest.map_or(0, |d| d.iterations),
     );
     if let Some(path) = args.get("data-out") {
-        std::fs::write(&path, csv::format_matrix(&companion.0))
+        crate::util::atomic_write(&path, &csv::format_matrix(&companion.0))
             .with_context(|| format!("writing `{path}`"))?;
         eprintln!("wrote {path}");
     }
     if let Some(path) = args.get("labels-out") {
-        std::fs::write(&path, csv::format_vector(&companion.1))
+        crate::util::atomic_write(&path, &csv::format_vector(&companion.1))
             .with_context(|| format!("writing `{path}`"))?;
         eprintln!("wrote {path}");
     }
@@ -296,7 +298,7 @@ pub fn predict(args: &Args) -> Result<i32> {
         if !metrics.is_empty() {
             doc.insert("metrics".into(), Json::Object(metrics));
         }
-        std::fs::write(&out, Json::Object(doc).to_string_pretty())
+        crate::util::atomic_write(&out, &Json::Object(doc).to_string_pretty())
             .with_context(|| format!("writing `{out}`"))?;
         eprintln!("wrote {out}");
     } else {
@@ -347,6 +349,8 @@ pub fn serve(args: &Args) -> Result<i32> {
             target_rps: args.get_opt_f64("target-rps")?,
             duration_secs: args.get_opt_f64("duration")?,
             slo_p99_ms: args.get_opt_f64("slo-p99-ms")?,
+            chaos: args.flag("chaos"),
+            chaos_seed: args.get_u64("chaos-seed", 42)?,
         };
         for (key, value) in [
             ("target-rps", cfg.target_rps),
@@ -403,8 +407,28 @@ pub fn serve(args: &Args) -> Result<i32> {
                 if report.slo_pass() == Some(true) { "pass" } else { "FAIL" }
             );
         }
+        if let Some(chaos) = &report.chaos {
+            println!(
+                "  chaos (seed {}): injected {} panic(s) / {} write failure(s) / \
+                 {} drop(s) / {} stall(s) · {} retries · fits {} ok / {} panicked / \
+                 {} timed out → {}",
+                chaos.seed,
+                chaos.injected_worker_panics,
+                chaos.injected_write_failures,
+                chaos.injected_conn_drops,
+                chaos.injected_slow_reads,
+                chaos.retries,
+                chaos.fit_ok,
+                chaos.fit_panics,
+                chaos.fit_timeouts,
+                if chaos.ok() { "survived" } else { "FAIL" }
+            );
+            for miss in &chaos.mismatches {
+                eprintln!("  chaos mismatch: {miss}");
+            }
+        }
         if let Some(out) = args.get("out") {
-            std::fs::write(&out, report.to_json().to_string_pretty())
+            crate::util::atomic_write(&out, &report.to_json().to_string_pretty())
                 .with_context(|| format!("writing `{out}`"))?;
             eprintln!("wrote {out}");
         }
@@ -425,6 +449,17 @@ pub fn serve(args: &Args) -> Result<i32> {
         }
         Ok(std::time::Duration::from_secs_f64(secs))
     };
+    // Optional server-side fit deadline: every `POST /fit` solve runs
+    // under min(--fit-timeout, the request's own `deadline_ms`).
+    let fit_timeout = match args.get_opt_f64("fit-timeout")? {
+        Some(secs) => {
+            if !secs.is_finite() || secs <= 0.0 {
+                bail!("--fit-timeout must be a positive number of seconds, got {secs}");
+            }
+            Some(std::time::Duration::from_secs_f64(secs))
+        }
+        None => None,
+    };
     let cfg = ServeConfig::builder()
         .threads(threads)
         .enable_fit(enable_fit)
@@ -438,6 +473,7 @@ pub fn serve(args: &Args) -> Result<i32> {
         )
         .registry_capacity(args.get_usize("registry-cap", defaults.registry_capacity())?)
         .warm_cache_path(args.get("warm-cache"))
+        .fit_timeout(fit_timeout)
         .build()?;
     let named: Vec<(String, LoadedModel)> =
         models.iter().map(|(name, model, _, _)| (name.clone(), model.clone())).collect();

@@ -1,0 +1,210 @@
+//! Deterministic fault injection behind the `fault-inject` feature.
+//!
+//! Production code consults [`fire`] at a handful of well-defined fault
+//! points (subproblem workers, artifact writes, connection accept/read).
+//! Without the feature, [`fire`] is a compile-time constant `false` —
+//! zero cost, zero behavior change, which is what keeps no-fault runs
+//! bit-identical to builds that never heard of this module.
+//!
+//! With the feature, a seeded [`FaultPlan`] installs a global schedule:
+//! each fault point keeps a call counter, and `fire` returns `true`
+//! exactly at the planned call indices. The chaos self-test
+//! (`serve --self-test --chaos`) installs a plan, drives load and fits,
+//! then reconciles server-side failure counters against the *fired*
+//! counts recorded here — fired counts, not planned ones, are ground
+//! truth, because a schedule can outlive the traffic that would consume
+//! it.
+
+/// A place in the codebase where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultPoint {
+    /// Panic inside a subproblem worker (`backbone::pipeline`).
+    WorkerPanic,
+    /// I/O failure inside [`crate::util::atomic_write`].
+    WriteFail,
+    /// Drop a just-accepted connection before reading anything
+    /// (`serve::Server::run`).
+    ConnDrop,
+    /// Stall a connection handler briefly before its next read
+    /// (`serve` per-connection loop).
+    SlowRead,
+}
+
+impl FaultPoint {
+    pub const ALL: [FaultPoint; 4] = [
+        FaultPoint::WorkerPanic,
+        FaultPoint::WriteFail,
+        FaultPoint::ConnDrop,
+        FaultPoint::SlowRead,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::WorkerPanic => "worker_panic",
+            Self::WriteFail => "write_fail",
+            Self::ConnDrop => "conn_drop",
+            Self::SlowRead => "slow_read",
+        }
+    }
+
+    #[cfg(feature = "fault-inject")]
+    fn index(&self) -> usize {
+        match self {
+            Self::WorkerPanic => 0,
+            Self::WriteFail => 1,
+            Self::ConnDrop => 2,
+            Self::SlowRead => 3,
+        }
+    }
+}
+
+/// Should the fault at `point` fire on this call? Also advances the
+/// point's call counter when a plan is installed. Always `false` (and
+/// free) without the `fault-inject` feature.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn fire(_point: FaultPoint) -> bool {
+    false
+}
+
+/// Number of times the fault at `point` actually fired under the current
+/// plan. Always 0 without the `fault-inject` feature.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn fired_count(_point: FaultPoint) -> u64 {
+    0
+}
+
+#[cfg(feature = "fault-inject")]
+pub use imp::{clear, fire, fired_count, install, serial_guard, FaultPlan};
+
+#[cfg(feature = "fault-inject")]
+mod imp {
+    use super::FaultPoint;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
+
+    /// A seeded, finite schedule of fault firings: for each point, the
+    /// sorted call indices at which [`super::fire`] returns `true`.
+    #[derive(Debug, Clone, Default)]
+    pub struct FaultPlan {
+        fires: [Vec<u64>; 4],
+    }
+
+    impl FaultPlan {
+        pub fn new() -> Self {
+            Self::default()
+        }
+
+        /// Schedule `point` to fire at exactly these call indices
+        /// (0-based; duplicates and ordering are normalized).
+        pub fn with_fires(mut self, point: FaultPoint, indices: &[u64]) -> Self {
+            let v = &mut self.fires[point.index()];
+            v.extend_from_slice(indices);
+            v.sort_unstable();
+            v.dedup();
+            self
+        }
+
+        /// The default chaos schedule: `count` firings per point, spaced
+        /// `gap` calls apart with a seeded jitter so different seeds
+        /// exercise different interleavings. The gap floor matters for
+        /// `WorkerPanic`: keeping it wider than one fit's subproblem-call
+        /// count guarantees at most one panic per fit, which is what lets
+        /// the harness reconcile fired panics against failed fits 1:1.
+        pub fn seeded(seed: u64, count: u64, gap: u64) -> Self {
+            let mut plan = Self::new();
+            let mut state = seed ^ 0x9e37_79b9_7f4a_7c15;
+            let mut next = move || {
+                // xorshift64* — deterministic, dependency-free.
+                state ^= state >> 12;
+                state ^= state << 25;
+                state ^= state >> 27;
+                state = state.wrapping_mul(0x2545_f491_4f6c_dd1d);
+                state
+            };
+            for point in FaultPoint::ALL {
+                let mut at = next() % gap.max(1);
+                let mut indices = Vec::with_capacity(count as usize);
+                for _ in 0..count {
+                    indices.push(at);
+                    at += gap.max(1) + next() % gap.max(1);
+                }
+                plan = plan.with_fires(point, &indices);
+            }
+            plan
+        }
+
+        /// Planned firing count for `point` (an upper bound on what will
+        /// actually fire — traffic may end before the schedule does).
+        pub fn planned(&self, point: FaultPoint) -> u64 {
+            self.fires[point.index()].len() as u64
+        }
+
+        fn should_fire(&self, point: FaultPoint, call: u64) -> bool {
+            self.fires[point.index()].binary_search(&call).is_ok()
+        }
+    }
+
+    #[derive(Default)]
+    struct Active {
+        plan: Option<FaultPlan>,
+        calls: [u64; 4],
+        fired: [u64; 4],
+    }
+
+    fn state() -> &'static Mutex<Active> {
+        static STATE: OnceLock<Mutex<Active>> = OnceLock::new();
+        STATE.get_or_init(|| Mutex::new(Active::default()))
+    }
+
+    fn lock() -> MutexGuard<'static, Active> {
+        state().lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Install a plan, resetting all call/fired counters.
+    pub fn install(plan: FaultPlan) {
+        let mut s = lock();
+        *s = Active { plan: Some(plan), ..Default::default() };
+    }
+
+    /// Remove the active plan. Counters from the finished run stay
+    /// readable via [`fired_count`] until the next [`install`].
+    pub fn clear() {
+        lock().plan = None;
+    }
+
+    /// See the crate-level docs; this is the feature-on implementation.
+    pub fn fire(point: FaultPoint) -> bool {
+        let mut s = lock();
+        let Some(plan) = &s.plan else { return false };
+        let i = point.index();
+        let call = s.calls[i];
+        let hit = plan.should_fire(point, call);
+        s.calls[i] = call + 1;
+        if hit {
+            s.fired[i] += 1;
+        }
+        hit
+    }
+
+    /// Times `point` actually fired since the last [`install`].
+    pub fn fired_count(point: FaultPoint) -> u64 {
+        lock().fired[point.index()]
+    }
+
+    /// Serializes tests (across modules) that install global fault plans,
+    /// so `cargo test --features fault-inject` cannot interleave two
+    /// plans. Production code never calls this.
+    pub fn serial_guard() -> MutexGuard<'static, ()> {
+        static GUARD: Mutex<()> = Mutex::new(());
+        GUARD.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+// The fault layer's behavioural tests live in `tests/corruption.rs`
+// (one dedicated test binary): an installed plan is process-global, so
+// a plan-installing test running concurrently with any other test that
+// touches a fire site (a fit, an `atomic_write`, a serve accept) would
+// leak injected faults into it. Keeping every plan-installing test in
+// one binary, serialized by [`serial_guard`], removes that hazard; the
+// library test binary never installs a plan.

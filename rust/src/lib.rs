@@ -94,6 +94,7 @@ pub mod bench_support;
 pub mod cli;
 pub mod config;
 pub mod data;
+pub mod fault;
 pub mod json;
 pub mod linalg;
 pub mod metrics;

@@ -69,6 +69,10 @@ pub enum PersistError {
     Schema { message: String },
     /// A required field is missing or has the wrong type/value.
     Field { field: String, message: String },
+    /// The artifact carries an embedded content checksum that does not
+    /// match its body — the file was truncated, bit-flipped, or hand
+    /// edited after `save()` wrote it.
+    Checksum { stored: String, computed: String },
     /// Tried to capture an artifact from an estimator that has no fitted
     /// model yet.
     NotFitted,
@@ -82,6 +86,12 @@ impl fmt::Display for PersistError {
             Self::Schema { message } => write!(f, "not a {MODEL_SCHEMA} artifact: {message}"),
             Self::Field { field, message } => {
                 write!(f, "artifact field `{field}`: {message}")
+            }
+            Self::Checksum { stored, computed } => {
+                write!(
+                    f,
+                    "artifact is corrupt: stored checksum {stored} != computed {computed}"
+                )
             }
             Self::NotFitted => {
                 write!(f, "estimator has no fitted model to persist; call fit() first")
@@ -558,16 +568,29 @@ impl ModelArtifact {
         Ok(Self { model, provenance })
     }
 
-    /// Parse an artifact from JSON text.
+    /// Parse an artifact from JSON text. If the document carries an
+    /// embedded `checksum` (every artifact written by [`Self::save`]
+    /// does), it is verified first; legacy checksum-less documents load
+    /// unchecked for backward compatibility.
     pub fn parse(text: &str) -> Result<Self, PersistError> {
         let v = Json::parse(text)
             .map_err(|e| PersistError::Parse { message: format!("{e:#}") })?;
+        if let crate::util::ChecksumState::Mismatch { stored, computed } =
+            crate::util::verify_checksum(&v)
+        {
+            return Err(PersistError::Checksum { stored, computed });
+        }
         Self::from_json(&v)
     }
 
-    /// Write the artifact to `path` (pretty-printed, trailing newline).
+    /// Write the artifact to `path` crash-safely: the document (with an
+    /// embedded content checksum) goes to a temp file in the target
+    /// directory, is fsynced, then renamed over `path` — a crash mid-save
+    /// leaves the previous artifact intact, never a torn file.
     pub fn save(&self, path: &str) -> Result<(), PersistError> {
-        std::fs::write(path, self.to_json().to_string_pretty()).map_err(|e| {
+        let mut doc = self.to_json();
+        crate::util::embed_checksum(&mut doc);
+        crate::util::atomic_write(path, &doc.to_string_pretty()).map_err(|e| {
             PersistError::Io { path: path.into(), message: e.to_string() }
         })
     }

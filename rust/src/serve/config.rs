@@ -121,6 +121,7 @@ pub struct ServeConfig {
     registry_capacity: usize,
     warm_capacity: usize,
     warm_cache_path: Option<String>,
+    fit_timeout: Option<Duration>,
 }
 
 impl ServeConfig {
@@ -219,6 +220,16 @@ impl ServeConfig {
     pub fn warm_cache_path(&self) -> Option<&str> {
         self.warm_cache_path.as_deref()
     }
+
+    /// Server-side ceiling on one `POST /fit` solve (`--fit-timeout`;
+    /// `None` = unlimited). Clients may tighten it per request with
+    /// `deadline_ms`; the effective budget is the minimum of the two.
+    /// An overrunning solve is cooperatively cancelled at the next
+    /// subproblem boundary and answered with a structured `503` timeout
+    /// + `Retry-After`.
+    pub fn fit_timeout(&self) -> Option<Duration> {
+        self.fit_timeout
+    }
 }
 
 impl Default for ServeConfig {
@@ -245,6 +256,7 @@ pub struct ServeConfigBuilder {
     registry_capacity: usize,
     warm_capacity: usize,
     warm_cache_path: Option<String>,
+    fit_timeout: Option<Duration>,
 }
 
 impl Default for ServeConfigBuilder {
@@ -264,6 +276,7 @@ impl Default for ServeConfigBuilder {
             registry_capacity: 16,
             warm_capacity: crate::warmstart::DEFAULT_STORE_CAPACITY,
             warm_cache_path: None,
+            fit_timeout: None,
         }
     }
 }
@@ -339,6 +352,11 @@ impl ServeConfigBuilder {
         self
     }
 
+    pub fn fit_timeout(mut self, timeout: Option<Duration>) -> Self {
+        self.fit_timeout = timeout;
+        self
+    }
+
     /// Validate every knob; typed error, no panics.
     pub fn build(self) -> Result<ServeConfig, ServeError> {
         if self.max_body_bytes == 0 {
@@ -365,6 +383,9 @@ impl ServeConfigBuilder {
         if self.warm_capacity == 0 {
             return Err(ServeError::ZeroCapacity { what: "warm_capacity" });
         }
+        if self.fit_timeout.is_some_and(|t| t.is_zero()) {
+            return Err(ServeError::ZeroDuration { what: "fit_timeout" });
+        }
         Ok(ServeConfig {
             threads: self.threads,
             max_connections: self.max_connections,
@@ -380,6 +401,7 @@ impl ServeConfigBuilder {
             registry_capacity: self.registry_capacity,
             warm_capacity: self.warm_capacity,
             warm_cache_path: self.warm_cache_path,
+            fit_timeout: self.fit_timeout,
         })
     }
 }
@@ -490,6 +512,23 @@ mod tests {
             ServeConfig::builder().max_connections(0).build().unwrap_err(),
             ServeError::ZeroCapacity { what: "max_connections" }
         );
+        assert_eq!(
+            ServeConfig::builder()
+                .fit_timeout(Some(Duration::ZERO))
+                .build()
+                .unwrap_err(),
+            ServeError::ZeroDuration { what: "fit_timeout" }
+        );
+    }
+
+    #[test]
+    fn fit_timeout_defaults_to_unlimited_and_passes_through() {
+        assert_eq!(ServeConfig::default().fit_timeout(), None);
+        let cfg = ServeConfig::builder()
+            .fit_timeout(Some(Duration::from_secs(30)))
+            .build()
+            .unwrap();
+        assert_eq!(cfg.fit_timeout(), Some(Duration::from_secs(30)));
     }
 
     #[test]

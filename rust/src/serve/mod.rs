@@ -188,6 +188,16 @@ pub struct ServerStats {
     /// handlers were already live (admission happens before any request
     /// is read, so these never enter the request counters).
     pub(crate) rejected_connections: AtomicU64,
+    /// Panics caught and converted to structured errors instead of
+    /// killing the process: handler panics answered `500`, and solver
+    /// panics surfaced as `BackboneError::SubproblemPanicked` by
+    /// `POST /fit`. The chaos harness reconciles this against the
+    /// injected `worker_panic` fault count.
+    pub(crate) panics_caught: AtomicU64,
+    /// Warm-start store write-through failures during `POST /fit`. The
+    /// fit itself still succeeds (log-and-continue); this counter is how
+    /// operators notice the cache is not persisting.
+    pub(crate) store_save_failures: AtomicU64,
     pub(crate) predict: RouteStats,
     pub(crate) fit: RouteStats,
 }
@@ -199,6 +209,8 @@ impl ServerStats {
             failures: AtomicU64::new(0),
             connections: AtomicU64::new(0),
             rejected_connections: AtomicU64::new(0),
+            panics_caught: AtomicU64::new(0),
+            store_save_failures: AtomicU64::new(0),
             predict: RouteStats::new(),
             fit: RouteStats::new(),
         }
@@ -304,6 +316,14 @@ impl ServerState {
         m.insert(
             "connections_rejected".into(),
             Json::Number(self.stats.rejected_connections.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "panics_caught".into(),
+            Json::Number(self.stats.panics_caught.load(Ordering::Relaxed) as f64),
+        );
+        m.insert(
+            "store_save_failures".into(),
+            Json::Number(self.stats.store_save_failures.load(Ordering::Relaxed) as f64),
         );
         // Legacy top-level mirrors of `routes.predict` (deprecated).
         // `predict_requests` mirrors `routes.predict.requests` exactly —
@@ -439,6 +459,13 @@ impl Server {
                     std::thread::sleep(std::time::Duration::from_millis(10));
                     continue;
                 };
+                // Chaos hook: drop a just-accepted connection on the
+                // floor (client sees a reset and must retry). Compiles
+                // to a constant `false` without `fault-inject`.
+                if crate::fault::fire(crate::fault::FaultPoint::ConnDrop) {
+                    drop(stream);
+                    continue;
+                }
                 // Admission check before any request is read: only the
                 // acceptor touches the gate going up, so load-then-spawn
                 // cannot over-admit (handler exits only decrement).
@@ -472,8 +499,20 @@ impl Server {
                 // ShutdownHandle poke reads as an instant EOF and is
                 // dropped without counters.
                 scope.spawn(move || {
-                    handle_connection(stream, state, router);
+                    // Isolate the handler: a panic that escapes the
+                    // per-request catch in `handle_connection` (read or
+                    // write layer) must not unwind into the scope — that
+                    // would tear down the acceptor and every sibling
+                    // connection. Either way the admission gate is
+                    // released, so a panicking handler can never leak a
+                    // connection slot.
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || handle_connection(stream, state, router),
+                    ));
                     state.open_connections.fetch_sub(1, Ordering::SeqCst);
+                    if result.is_err() {
+                        state.stats.panics_caught.fetch_add(1, Ordering::Relaxed);
+                    }
                 });
                 if state.shutdown.load(Ordering::SeqCst) {
                     return;
@@ -496,6 +535,12 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState, router: &Router
         // the idle timeout decides how long the worker waits for reuse.
         let timeout = if served == 0 { cfg.read_timeout() } else { cfg.idle_timeout() };
         let _ = stream.set_read_timeout(Some(timeout));
+        // Chaos hook: stall this handler briefly before its next read,
+        // simulating a slow client/disk. Constant `false` without
+        // `fault-inject`.
+        if crate::fault::fire(crate::fault::FaultPoint::SlowRead) {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
         let request = match read_request(&mut stream, cfg.max_body_bytes()) {
             Ok(req) => req,
             Err(e) => {
@@ -526,12 +571,15 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState, router: &Router
         if served == 0 {
             state.stats.connections.fetch_add(1, Ordering::Relaxed);
         }
-        let outcome = router.dispatch(&request, state);
+        let (outcome, panicked) = dispatch_or_500(router, &request, state);
         if outcome.failed() {
             state.stats.failures.fetch_add(1, Ordering::Relaxed);
         }
         served += 1;
-        let keep = cfg.keep_alive()
+        // A panicked handler may have left no coherent request framing;
+        // answer the structured 500, then force-close the connection.
+        let keep = !panicked
+            && cfg.keep_alive()
             && request.keep_alive
             && !state.shutdown.load(Ordering::SeqCst)
             && (cfg.max_requests_per_conn() == 0 || served < cfg.max_requests_per_conn());
@@ -549,6 +597,34 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState, router: &Router
             || !keep
         {
             return;
+        }
+    }
+}
+
+/// Dispatch through the router with panic isolation: a handler panic is
+/// caught here, counted in `panics_caught`, and answered as a structured
+/// `500` — the connection thread (and the process) survive. Returns
+/// `(outcome, panicked)` so the caller can force-close the connection
+/// after a caught panic.
+fn dispatch_or_500(
+    router: &Router,
+    request: &http::Request,
+    state: &ServerState,
+) -> (router::Outcome, bool) {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        router.dispatch(request, state)
+    })) {
+        Ok(outcome) => (outcome, false),
+        Err(_) => {
+            state.stats.panics_caught.fetch_add(1, Ordering::Relaxed);
+            (
+                router::Outcome::error(
+                    500,
+                    "Internal Server Error",
+                    "internal error: request handler panicked (caught; connection will close)",
+                ),
+                true,
+            )
         }
     }
 }
@@ -955,6 +1031,94 @@ mod tests {
     }
 
     #[test]
+    fn fit_deadline_zero_returns_structured_timeout() {
+        let state = toy_state_with(true);
+        // deadline_ms: 0 is an already-expired budget — deterministic on
+        // any machine: the solve is cancelled before the first
+        // subproblem and answered as a structured timeout.
+        let body = r#"{"x": [[1, 0, 0], [2, 1, 0], [3, 0, 1], [4, 1, 1]],
+            "y": [2, 4, 6, 8], "k": 1, "m": 2, "warm": false, "deadline_ms": 0}"#;
+        let out = route(&post_fit(body), &state);
+        assert_eq!(out.status, 503, "{}", out.body);
+        assert_eq!(out.retry_after_secs, Some(1));
+        let doc = Json::parse(&out.body).unwrap();
+        assert_eq!(doc.get("timeout").and_then(Json::as_bool), Some(true));
+        assert_eq!(doc.get("deadline_ms").and_then(Json::as_usize), Some(0));
+        assert_eq!(doc.get("retry_after_secs").and_then(Json::as_usize), Some(1));
+        assert!(doc.get("error").and_then(Json::as_str).unwrap().contains("deadline"));
+        // A timed-out fit is a failed attempt; nothing entered the store
+        // or the registry.
+        assert_eq!(state.stats.fit.failures.load(Ordering::Relaxed), 1);
+        assert_eq!(state.stats.fit.units.load(Ordering::Relaxed), 0);
+        assert_eq!(state.warm.lock().unwrap().len(), 0);
+        // The same instance without a deadline solves fine.
+        let body = r#"{"x": [[1, 0, 0], [2, 1, 0], [3, 0, 1], [4, 1, 1]],
+            "y": [2, 4, 6, 8], "k": 1, "m": 2, "warm": false}"#;
+        let out = route(&post_fit(body), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
+        // Garbage deadlines are a 400, not a crash or a silent default.
+        let body = r#"{"x": [[1, 0, 0]], "y": [2], "k": 1, "deadline_ms": "soon"}"#;
+        let out = route(&post_fit(body), &state);
+        assert_eq!(out.status, 400, "{}", out.body);
+        assert!(out.body.contains("deadline_ms"), "{}", out.body);
+    }
+
+    #[test]
+    fn healthz_reports_degraded_when_the_warm_store_is_corrupt() {
+        let state = toy_state_with(true);
+        let out = route(&req("GET", "/healthz", ""), &state);
+        assert_eq!(out.status, 200);
+        let doc = Json::parse(&out.body).unwrap();
+        assert_eq!(doc.get("degraded").and_then(Json::as_bool), Some(false));
+
+        // A corrupt warm cache on disk: the server still starts (cold
+        // fits), but /healthz flags the degradation for operators.
+        let path = std::env::temp_dir()
+            .join(format!("backbone_serve_degraded_{}.json", std::process::id()));
+        std::fs::write(&path, "{ not json").unwrap();
+        let cfg = ServeConfig::builder()
+            .threads(1)
+            .enable_fit(true)
+            .warm_cache_path(Some(path.display().to_string()))
+            .build()
+            .unwrap();
+        let degraded =
+            ServerState::new(vec![("default".to_string(), toy_model())], cfg).unwrap();
+        assert!(degraded.warm_error.is_some());
+        let out = route(&req("GET", "/healthz", ""), &degraded);
+        assert_eq!(out.status, 200, "degraded is not dead: {}", out.body);
+        let doc = Json::parse(&out.body).unwrap();
+        assert_eq!(doc.get("degraded").and_then(Json::as_bool), Some(true));
+        assert!(doc.get("warm_store_error").and_then(Json::as_str).is_some());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn failed_store_write_through_never_fails_the_fit() {
+        // Point the warm cache into a directory that does not exist: the
+        // crash-safe writer cannot even create its temp file, so every
+        // write-through fails — and every fit must still succeed.
+        let cfg = ServeConfig::builder()
+            .threads(1)
+            .enable_fit(true)
+            .warm_cache_path(Some(
+                "/nonexistent-backbone-dir/warm_store.json".to_string(),
+            ))
+            .build()
+            .unwrap();
+        let state =
+            ServerState::new(vec![("default".to_string(), toy_model())], cfg).unwrap();
+        let out = route(&post_fit(fit_body()), &state);
+        assert_eq!(out.status, 200, "{}", out.body);
+        assert_eq!(state.stats.store_save_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(state.stats.fit.units.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            state.stats_json().get("store_save_failures").and_then(Json::as_usize),
+            Some(1)
+        );
+    }
+
+    #[test]
     fn server_state_rejects_empty_and_duplicate_registrations() {
         let cfg = ServeConfig::default();
         assert_eq!(
@@ -969,6 +1133,54 @@ mod tests {
             ServerState::new(models, cfg).unwrap_err(),
             ServeError::DuplicateModelName { name: "a".into() }
         );
+    }
+
+    #[test]
+    fn handler_panic_is_caught_as_structured_500() {
+        struct Kaboom;
+        impl router::Route for Kaboom {
+            fn method(&self) -> &'static str {
+                "GET"
+            }
+            fn pattern(&self) -> &'static str {
+                "/kaboom"
+            }
+            fn handle(
+                &self,
+                _r: &Request,
+                _p: &router::PathParams,
+                _s: &ServerState,
+            ) -> Outcome {
+                panic!("route exploded");
+            }
+        }
+        let mut panicking_router = Router::new();
+        panicking_router.register(Box::new(Kaboom));
+        let state = toy_state();
+        let (out, panicked) =
+            dispatch_or_500(&panicking_router, &req("GET", "/kaboom", ""), &state);
+        assert!(panicked);
+        assert_eq!(out.status, 500);
+        let doc = Json::parse(&out.body).unwrap();
+        assert!(
+            doc.get("error").and_then(Json::as_str).unwrap().contains("panicked"),
+            "{}",
+            out.body
+        );
+        assert_eq!(state.stats.panics_caught.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            state.stats_json().get("panics_caught").and_then(Json::as_usize),
+            Some(1)
+        );
+        // A healthy dispatch reports no panic and leaves the counter alone.
+        let (out, panicked) = dispatch_or_500(
+            &routes::standard_router(),
+            &req("GET", "/healthz", ""),
+            &state,
+        );
+        assert!(!panicked);
+        assert_eq!(out.status, 200);
+        assert_eq!(state.stats.panics_caught.load(Ordering::Relaxed), 1);
     }
 
     #[test]

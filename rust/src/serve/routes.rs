@@ -19,14 +19,15 @@ use super::http::Request;
 use super::registry::ModelEntry;
 use super::router::{Outcome, PathParams, Route, Router};
 use super::{parse_matrix, RouteStats, ServerState};
-use crate::backbone::Backbone;
+use crate::backbone::{Backbone, BackboneError};
 use crate::json::Json;
 use crate::linalg::Matrix;
 use crate::persist::{LoadedModel, ModelArtifact, MODEL_SCHEMA};
+use crate::util::Budget;
 use crate::warmstart::{featurize, suggested_alpha};
 use std::collections::BTreeMap;
 use std::sync::atomic::Ordering;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Schema tag of the `GET /models` listing.
 pub const MODELS_SCHEMA: &str = "backbone-models/v1";
@@ -70,6 +71,10 @@ impl Route for Healthz {
     fn handle(&self, _req: &Request, _params: &PathParams, state: &ServerState) -> Outcome {
         let mut m = BTreeMap::new();
         m.insert("status".into(), Json::String("ok".into()));
+        // Alive but impaired: the warm cache failed to load at bind time,
+        // so fits run cold until the store repopulates. Operators page on
+        // `degraded`, not on `status` (which tracks liveness only).
+        m.insert("degraded".into(), Json::Bool(state.warm_error.is_some()));
         m.insert("schema".into(), Json::String(MODEL_SCHEMA.into()));
         let registry = state.registry.lock().unwrap();
         if let Some((id, entry)) = registry.default_entry() {
@@ -391,7 +396,8 @@ impl Route for ModelSwap {
 ///
 /// ```json
 /// {"x": [[...], ...], "y": [...], "k": 5,
-///  "alpha": 0.5, "beta": 0.5, "m": 5, "seed": 0, "warm": true}
+///  "alpha": 0.5, "beta": 0.5, "m": 5, "seed": 0, "warm": true,
+///  "deadline_ms": 2000}
 /// ```
 ///
 /// Only `x`, `y`, `k` are required. With `"warm"` (default true) the
@@ -399,6 +405,14 @@ impl Route for ModelSwap {
 /// the cached solution immediately (no solve), a near neighbor
 /// warm-starts the backbone with a shrunk screening fraction, and every
 /// solved fit is written back to the store.
+///
+/// `deadline_ms` (optional, ≥ 0) caps the solve wall-clock; the server's
+/// `--fit-timeout` is a second ceiling and the effective budget is the
+/// minimum of the two. An overrunning solve is cooperatively cancelled
+/// at the next subproblem boundary and answered with a structured `503`
+/// (`"timeout": true`) + `Retry-After`. Note that an *exact* warm-cache
+/// hit involves no solve at all, so it succeeds even under
+/// `deadline_ms: 0`.
 struct FitRoute;
 
 impl Route for FitRoute {
@@ -493,6 +507,26 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
     let m_sub = doc.get("m").and_then(Json::as_usize).unwrap_or(5);
     let seed = doc.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
     let warm_wanted = doc.get("warm").and_then(Json::as_bool).unwrap_or(true);
+    // Client deadline (0 is legal: an already-expired budget, useful for
+    // "cache hit or nothing" probes). The effective solve budget is the
+    // tighter of the client deadline and the server's --fit-timeout.
+    let deadline = match doc.get("deadline_ms") {
+        None => None,
+        Some(v) => match v.as_usize() {
+            Some(ms) => Some(Duration::from_millis(ms as u64)),
+            None => {
+                return Outcome::error(
+                    400,
+                    "Bad Request",
+                    "`deadline_ms` must be a non-negative integer",
+                );
+            }
+        },
+    };
+    let limit = match (deadline, state.cfg.fit_timeout()) {
+        (Some(a), Some(b)) => Some(a.min(b)),
+        (a, b) => a.or(b),
+    };
 
     let features = featurize(&x, &y, k);
     let suggestion = if warm_wanted {
@@ -570,13 +604,53 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
         Ok(bb) => bb,
         Err(e) => return Outcome::error(400, "Bad Request", &e.to_string()),
     };
-    let model = match bb.fit(&x, &y) {
+    let budget = match limit {
+        Some(d) => Budget::seconds(d.as_secs_f64()),
+        None => Budget::unlimited(),
+    };
+    let model = match bb.fit_with_budget(&x, &y, &budget) {
         Ok(m) => m.clone(),
+        Err(e @ BackboneError::SubproblemPanicked { .. }) => {
+            // The solver boundary caught a worker panic and degraded it
+            // to a typed error; the request fails 500, the server lives.
+            state.stats.panics_caught.fetch_add(1, Ordering::Relaxed);
+            return Outcome::error(500, "Internal Server Error", &e.to_string());
+        }
         Err(e) => return Outcome::error(400, "Bad Request", &e.to_string()),
     };
+    // Deadline overruns surface as `budget_exhausted` (the estimator
+    // returns the partial fit, cancelled cooperatively at a subproblem
+    // boundary). A deadline'd client asked for the solve-by time, not a
+    // partial answer: report a structured timeout, skip the store
+    // write-through, and advertise when to retry.
+    if limit.is_some()
+        && bb.last_diagnostics.as_ref().is_some_and(|d| d.budget_exhausted)
+    {
+        let retry = state.cfg.retry_after_secs();
+        let mut m = BTreeMap::new();
+        m.insert(
+            "error".to_string(),
+            Json::String(
+                "fit deadline exceeded; solve cancelled at a subproblem boundary".into(),
+            ),
+        );
+        m.insert("timeout".to_string(), Json::Bool(true));
+        if let Some(d) = deadline {
+            m.insert("deadline_ms".to_string(), Json::Number(d.as_millis() as f64));
+        }
+        m.insert("retry_after_secs".to_string(), Json::Number(retry as f64));
+        return Outcome {
+            status: 503,
+            reason: "Service Unavailable",
+            body: Json::Object(m).to_string_compact(),
+            retry_after_secs: Some(retry),
+        };
+    }
 
     // Write-through: remember this fit for future instances, and persist
-    // the store when the server was given a cache path.
+    // the store when the server was given a cache path. A failed save
+    // must never fail the fit the client already paid for —
+    // log-and-continue, bump the counter, serve the result.
     {
         let mut store = state.warm.lock().unwrap();
         let coefficients: Vec<f64> =
@@ -591,7 +665,8 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
         );
         if let Some(path) = state.cfg.warm_cache_path() {
             if let Err(e) = store.save(path) {
-                eprintln!("warning: {e}");
+                state.stats.store_save_failures.fetch_add(1, Ordering::Relaxed);
+                eprintln!("warning: warm-start store save failed (fit still served): {e}");
             }
         }
     }

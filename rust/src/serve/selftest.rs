@@ -22,6 +22,13 @@
 //!   can never starve the swap `PUT` out of `accept` — the harness
 //!   works at any `connections` count.)
 //! - **SLO check** — `--slo-p99-ms` asserts the keep-alive p99.
+//! - **Chaos drill** (`--chaos`, PR 9, requires `--features
+//!   fault-inject`) — installs a seeded fault schedule (worker panics,
+//!   write failures, connection drops, slow reads) and swaps the
+//!   benchmark contract for a survival contract: the server stays up,
+//!   every failure is a structured JSON error, on-disk artifacts stay
+//!   checksum-clean, and `/stats` counters reconcile exactly against
+//!   the fired fault counts. See [`run_chaos`] and [`ChaosStats`].
 //!
 //! Every response is verified against a locally computed prediction for
 //! the same batch, so "zero failed requests" means the *served* numbers
@@ -72,6 +79,15 @@ pub struct SelfTestConfig {
     pub duration_secs: Option<f64>,
     /// Fail the report unless the keep-alive p99 is under this.
     pub slo_p99_ms: Option<f64>,
+    /// Chaos mode: install a seeded [`crate::fault::FaultPlan`] and run
+    /// a fault-tolerance drill instead of the load benchmark (requires
+    /// a build with `--features fault-inject`). Swap-under-load and the
+    /// close-mode comparison are skipped — chaos measures survival, not
+    /// throughput.
+    pub chaos: bool,
+    /// Seed for the chaos fault schedule; same seed → same injected
+    /// fault sequence.
+    pub chaos_seed: u64,
 }
 
 impl SelfTestConfig {
@@ -88,6 +104,8 @@ impl SelfTestConfig {
             target_rps: None,
             duration_secs: None,
             slo_p99_ms: None,
+            chaos: false,
+            chaos_seed: 42,
         }
     }
 
@@ -187,6 +205,94 @@ pub struct SwapStats {
     pub boundary_violations: u64,
 }
 
+/// What the chaos drill injected and what the server did about it.
+/// "Injected" counts are the *fired* numbers recorded by the fault
+/// layer — ground truth for reconciliation, since a seeded schedule can
+/// outlive the traffic that would consume it.
+#[derive(Debug, Clone, Default)]
+pub struct ChaosStats {
+    /// Seed of the installed fault schedule.
+    pub seed: u64,
+    /// Worker panics fired inside subproblem solves.
+    pub injected_worker_panics: u64,
+    /// I/O failures fired inside `atomic_write` (warm-store saves).
+    pub injected_write_failures: u64,
+    /// Connections dropped at accept time.
+    pub injected_conn_drops: u64,
+    /// Handler reads stalled.
+    pub injected_slow_reads: u64,
+    /// `POST /fit` requests sent (including the deadline probes).
+    pub fit_requests: u64,
+    /// Fits that returned 200.
+    pub fit_ok: u64,
+    /// Fits that returned 500 from a caught subproblem panic.
+    pub fit_panics: u64,
+    /// Fits that returned 503 from the deadline (the deadline probes).
+    pub fit_timeouts: u64,
+    /// Fits lost to socket errors even after retries. Must be zero.
+    pub fit_io_failures: u64,
+    /// Client-side retries across both phases (drops + backpressure).
+    pub retries: u64,
+    /// Non-2xx responses whose body was *not* a JSON object with an
+    /// `error` key. Must be zero: every failure is structured.
+    pub unstructured_errors: u64,
+    /// `/healthz` answered 200 and not degraded after the drill.
+    pub server_alive: bool,
+    /// The warm-start store on disk reloaded checksum-clean (or was
+    /// never written).
+    pub store_intact: bool,
+    /// Server counters matched the fired-fault ground truth exactly.
+    pub counters_reconciled: bool,
+    /// Human-readable reconciliation mismatches (empty on success).
+    pub mismatches: Vec<String>,
+}
+
+impl ChaosStats {
+    /// The chaos gate: survived, structured, reconciled.
+    pub fn ok(&self) -> bool {
+        self.server_alive
+            && self.store_intact
+            && self.counters_reconciled
+            && self.unstructured_errors == 0
+            && self.fit_io_failures == 0
+    }
+
+    fn to_json(&self) -> Json {
+        let mut inj = BTreeMap::new();
+        inj.insert("worker_panics".to_string(), Json::Number(self.injected_worker_panics as f64));
+        inj.insert("write_failures".to_string(), Json::Number(self.injected_write_failures as f64));
+        inj.insert("conn_drops".to_string(), Json::Number(self.injected_conn_drops as f64));
+        inj.insert("slow_reads".to_string(), Json::Number(self.injected_slow_reads as f64));
+        let mut fit = BTreeMap::new();
+        fit.insert("requests".to_string(), Json::Number(self.fit_requests as f64));
+        fit.insert("ok".to_string(), Json::Number(self.fit_ok as f64));
+        fit.insert("panics".to_string(), Json::Number(self.fit_panics as f64));
+        fit.insert("timeouts".to_string(), Json::Number(self.fit_timeouts as f64));
+        fit.insert("io_failures".to_string(), Json::Number(self.fit_io_failures as f64));
+        let mut m = BTreeMap::new();
+        m.insert("seed".to_string(), Json::Number(self.seed as f64));
+        m.insert("injected".to_string(), Json::Object(inj));
+        m.insert("fit".to_string(), Json::Object(fit));
+        m.insert("retries".to_string(), Json::Number(self.retries as f64));
+        m.insert(
+            "unstructured_errors".to_string(),
+            Json::Number(self.unstructured_errors as f64),
+        );
+        m.insert("server_alive".to_string(), Json::Bool(self.server_alive));
+        m.insert("store_intact".to_string(), Json::Bool(self.store_intact));
+        m.insert(
+            "counters_reconciled".to_string(),
+            Json::Bool(self.counters_reconciled),
+        );
+        m.insert(
+            "mismatches".to_string(),
+            Json::Array(self.mismatches.iter().map(|s| Json::String(s.clone())).collect()),
+        );
+        m.insert("ok".to_string(), Json::Bool(self.ok()));
+        Json::Object(m)
+    }
+}
+
 /// Outcome of a self-test run.
 #[derive(Debug, Clone)]
 pub struct SelfTestReport {
@@ -202,6 +308,8 @@ pub struct SelfTestReport {
     pub swap: Option<SwapStats>,
     pub target_rps: Option<f64>,
     pub slo_p99_ms: Option<f64>,
+    /// Present when the run was a chaos drill.
+    pub chaos: Option<ChaosStats>,
 }
 
 impl SelfTestReport {
@@ -215,13 +323,15 @@ impl SelfTestReport {
     }
 
     /// The CI gate: zero failures across phases, a landed swap with a
-    /// clean version boundary, and the SLO (when requested).
+    /// clean version boundary, the SLO (when requested), and — in chaos
+    /// mode — a server that survived the drill with reconciled counters.
     pub fn passed(&self) -> bool {
         self.total_failed() == 0
             && self.swap.as_ref().map_or(true, |s| {
                 s.status == 200 && s.boundary_violations == 0 && s.served_new > 0
             })
             && self.slo_pass() != Some(false)
+            && self.chaos.as_ref().map_or(true, ChaosStats::ok)
     }
 
     /// `backbone-serve-selftest/v1` JSON payload (CI artifact). The
@@ -278,6 +388,9 @@ impl SelfTestReport {
             s.insert("p99_ms".to_string(), Json::from_f64(slo));
             s.insert("pass".to_string(), Json::Bool(self.slo_pass() == Some(true)));
             m.insert("slo".to_string(), Json::Object(s));
+        }
+        if let Some(chaos) = &self.chaos {
+            m.insert("chaos".to_string(), chaos.to_json());
         }
         m.insert("passed".to_string(), Json::Bool(self.passed()));
         Json::Object(m)
@@ -347,6 +460,36 @@ struct ClientOutcome {
     served_old: u64,
     served_new: u64,
     boundary_violations: u64,
+    /// Request slots that needed at least one retry (chaos mode only —
+    /// the benchmark phases run with retries disabled so `failed` keeps
+    /// meaning "the server misbehaved", not "the network hiccuped").
+    retries: u64,
+}
+
+/// `Retry-After` seconds from a parsed response, if the server sent one.
+fn retry_after_secs(headers: &[(String, String)]) -> Option<u64> {
+    headers
+        .iter()
+        .find(|(n, _)| n == "retry-after")
+        .and_then(|(_, v)| v.trim().parse().ok())
+}
+
+/// Capped, jittered retry backoff. Honours the server's `Retry-After`
+/// hint but caps the sleep so a loopback chaos drill stays fast; the
+/// jitter is derived deterministically from `(seed, slot, attempt)` so
+/// retrying clients neither stampede in lockstep nor make the run
+/// irreproducible.
+fn backoff_sleep(seed: u64, slot: usize, attempt: usize, hint_secs: Option<u64>) {
+    const CAP_MS: u64 = 250;
+    let base_ms = (5u64 << attempt.min(4)).min(CAP_MS);
+    let hinted_ms = hint_secs.map_or(0, |s| (s * 1000).min(CAP_MS));
+    let mut h = seed
+        ^ (slot as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ ((attempt as u64) << 32);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    std::thread::sleep(Duration::from_millis(base_ms.max(hinted_ms) + h % 8));
 }
 
 /// One load client. With `reuse` it keeps a single persistent
@@ -359,6 +502,11 @@ struct ClientOutcome {
 /// makes the swap deterministic: at its halfway request the client
 /// parks, the coordinator swaps once every client is parked, and the
 /// back half of the workload provably runs against the new version.
+///
+/// `retry` (`(max_attempts, jitter_seed)`, chaos mode) lets a slot
+/// survive injected connection drops and backpressure: socket-level
+/// errors and 429/503 responses are retried with capped jittered
+/// backoff honouring `Retry-After` before the slot counts as failed.
 #[allow(clippy::too_many_arguments)]
 fn load_client(
     addr: SocketAddr,
@@ -369,6 +517,7 @@ fn load_client(
     deadline: Option<Instant>,
     pace: Option<(Instant, f64, usize, usize)>, // (start, rps, client idx, stride)
     sync: Option<(&AtomicU64, &AtomicBool)>,    // (parked count, swap landed)
+    retry: Option<(usize, u64)>,                // (max extra attempts, jitter seed)
 ) -> ClientOutcome {
     let mut out = ClientOutcome {
         latencies_ms: Vec::with_capacity(quota),
@@ -377,6 +526,7 @@ fn load_client(
         served_old: 0,
         served_new: 0,
         boundary_violations: 0,
+        retries: 0,
     };
     let mut stream: Option<TcpStream> = None;
     let mut max_version: u64 = 0;
@@ -414,27 +564,70 @@ fn load_client(
         }
         j += 1;
         let sent = Instant::now();
-        // (Re)connect lazily; a connect failure consumes this slot.
-        if stream.is_none() {
-            match TcpStream::connect(addr) {
-                Ok(s) => {
-                    let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
-                    out.connections_opened += 1;
-                    stream = Some(s);
-                }
-                Err(_) => {
-                    out.failed += 1;
-                    continue;
+        // One request slot. Without `retry` a connect failure, socket
+        // error, or backpressure status consumes the slot as a failure
+        // (the benchmark contract); with it the slot is re-attempted
+        // after a backoff before giving up.
+        let mut attempt = 0usize;
+        let slot_body: Option<Vec<u8>> = loop {
+            // (Re)connect lazily.
+            if stream.is_none() {
+                match TcpStream::connect(addr) {
+                    Ok(s) => {
+                        let _ = s.set_read_timeout(Some(Duration::from_secs(10)));
+                        out.connections_opened += 1;
+                        stream = Some(s);
+                    }
+                    Err(_) => {
+                        if let Some((max, seed)) = retry {
+                            if attempt < max {
+                                attempt += 1;
+                                out.retries += 1;
+                                backoff_sleep(seed, j, attempt, None);
+                                continue;
+                            }
+                        }
+                        break None;
+                    }
                 }
             }
-        }
-        let s = stream.as_mut().unwrap();
-        let result = s
-            .write_all(request)
-            .map_err(super::http::HttpError::Io)
-            .and_then(|()| read_response(s));
-        match result {
-            Ok((200, _headers, body)) => match verify_body(&body, expected) {
+            let s = stream.as_mut().unwrap();
+            let result = s
+                .write_all(request)
+                .map_err(super::http::HttpError::Io)
+                .and_then(|()| read_response(s));
+            match result {
+                Ok((200, _headers, body)) => break Some(body),
+                Ok((429 | 503, headers, _body)) => {
+                    // Backpressure / deadline shed: connection stays
+                    // usable; come back when the server asked us to.
+                    if let Some((max, seed)) = retry {
+                        if attempt < max {
+                            attempt += 1;
+                            out.retries += 1;
+                            backoff_sleep(seed, j, attempt, retry_after_secs(&headers));
+                            continue;
+                        }
+                    }
+                    break None;
+                }
+                Ok((_status, _headers, _body)) => break None,
+                Err(_) => {
+                    stream = None; // force a reconnect
+                    if let Some((max, seed)) = retry {
+                        if attempt < max {
+                            attempt += 1;
+                            out.retries += 1;
+                            backoff_sleep(seed, j, attempt, None);
+                            continue;
+                        }
+                    }
+                    break None;
+                }
+            }
+        };
+        match slot_body {
+            Some(body) => match verify_body(&body, expected) {
                 Some(version) => {
                     out.latencies_ms.push(sent.elapsed().as_secs_f64() * 1e3);
                     if version < max_version {
@@ -452,11 +645,7 @@ fn load_client(
                     // Response was parseable HTTP, connection stays usable.
                 }
             },
-            Ok((_status, _headers, _body)) => out.failed += 1,
-            Err(_) => {
-                out.failed += 1;
-                stream = None; // force a reconnect for the next slot
-            }
+            None => out.failed += 1,
         }
         if !reuse {
             stream = None; // close-per-request mode
@@ -467,6 +656,9 @@ fn load_client(
 
 /// Boot a server around `model` and run the configured phases.
 pub fn run_self_test(model: LoadedModel, cfg: &SelfTestConfig) -> Result<SelfTestReport> {
+    if cfg.chaos {
+        return run_chaos(model, cfg);
+    }
     let learner = model.kind().name();
     let rows = synth_batch(&model, cfg.batch_rows);
     let expected = model
@@ -603,6 +795,7 @@ pub fn run_self_test(model: LoadedModel, cfg: &SelfTestConfig) -> Result<SelfTes
                         phase.spawn(move || {
                             load_client(
                                 addr, request, expected, reuse, quota, deadline, pace, sync,
+                                None,
                             )
                         })
                     })
@@ -712,9 +905,331 @@ pub fn run_self_test(model: LoadedModel, cfg: &SelfTestConfig) -> Result<SelfTes
             swap,
             target_rps: cfg.target_rps,
             slo_p99_ms: cfg.slo_p99_ms,
+            chaos: None,
         });
     });
     Ok(report.expect("self-test scope completed without a report"))
+}
+
+/// Chaos drills need the fault layer compiled in; refuse loudly rather
+/// than silently running a fault-free "chaos" pass.
+#[cfg(not(feature = "fault-inject"))]
+fn run_chaos(_model: LoadedModel, _cfg: &SelfTestConfig) -> Result<SelfTestReport> {
+    anyhow::bail!("--chaos requires a build with `--features fault-inject`")
+}
+
+/// The chaos drill: boot a fit-enabled server with a scratch warm-start
+/// store, install a seeded fault schedule, hammer `/predict` over
+/// keep-alive connections (with retry/backoff, since connections get
+/// dropped under it) while injected worker panics, write failures,
+/// connection drops, and slow reads fire — then stop injecting and
+/// audit the wreckage:
+///
+/// - the server still answers `/healthz` 200 and is not degraded;
+/// - the warm-start store on disk reloads checksum-clean (failed saves
+///   left the previous version intact — the atomic-write contract);
+/// - every failed request carried a structured JSON `error` body;
+/// - `/stats` failure counters equal the *fired* fault counts exactly
+///   (`panics_caught` == fired worker panics == 500-from-panic fits,
+///   `store_save_failures` == fired write failures, and the fit route's
+///   failure count == panics + deadline timeouts).
+///
+/// Two of the `POST /fit` requests are deadline probes (`deadline_ms:
+/// 0`) and must come back as structured 503s with `Retry-After`. Fit
+/// bodies are all distinct problems so an exact warm-cache hit can
+/// never skip the solve a panic was scheduled into.
+#[cfg(feature = "fault-inject")]
+fn run_chaos(model: LoadedModel, cfg: &SelfTestConfig) -> Result<SelfTestReport> {
+    use crate::fault::{self, FaultPlan, FaultPoint};
+
+    let learner = model.kind().name();
+    let rows = synth_batch(&model, cfg.batch_rows);
+    let expected = model
+        .try_predict(&Matrix::from_rows(&rows))
+        .context("chaos batch rejected by the model")?;
+    let body = {
+        let rows_json = Json::Array(
+            rows.iter()
+                .map(|r| Json::Array(r.iter().map(|&v| Json::from_f64(v)).collect()))
+                .collect(),
+        );
+        let mut m = BTreeMap::new();
+        m.insert("rows".to_string(), rows_json);
+        Json::Object(m).to_string_compact()
+    };
+    let ka_request = render_request(&body, false);
+
+    let total = cfg.requests.max(1);
+    let connections = cfg.connections.clamp(1, total);
+    let store_path = std::env::temp_dir().join(format!(
+        "backbone_chaos_store_{}_{}.json",
+        std::process::id(),
+        cfg.chaos_seed
+    ));
+    let _ = std::fs::remove_file(&store_path);
+    let store_path_str = store_path.display().to_string();
+
+    let serve_cfg = ServeConfig::builder()
+        .threads(cfg.threads)
+        .max_connections(connections + 8)
+        .idle_timeout(Duration::from_secs(30))
+        .enable_fit(true)
+        .warm_cache_path(Some(store_path_str.clone()))
+        .fit_timeout(Some(Duration::from_secs(30)))
+        .build()?;
+    let server =
+        Server::bind("127.0.0.1:0", model, &serve_cfg).context("binding chaos server")?;
+    let addr = server.local_addr()?;
+    let shutdown = server.shutdown_handle()?;
+    let threads = crate::backbone::resolved_threads(cfg.threads);
+
+    // Serialize against any other fault-plan user (the fault/corruption
+    // test suites), then install the schedule. The server booted above,
+    // so the plan only ever sees chaos traffic — never the bind-time
+    // warm-store load. Callers must NOT hold the guard themselves.
+    let _serial = fault::serial_guard();
+    fault::install(FaultPlan::seeded(cfg.chaos_seed, 4, 16));
+
+    let mut chaos = ChaosStats { seed: cfg.chaos_seed, ..ChaosStats::default() };
+    let mut ka_stats: Option<PhaseStats> = None;
+    std::thread::scope(|scope| {
+        scope.spawn(|| server.run());
+
+        // ------------------------------------- predict phase (chaotic)
+        let ka_started = Instant::now();
+        let ka = std::thread::scope(|phase| {
+            let clients: Vec<_> = (0..connections)
+                .map(|t| {
+                    let quota = total / connections + usize::from(t < total % connections);
+                    let request = &ka_request;
+                    let expected = &expected;
+                    let seed = cfg.chaos_seed.wrapping_add(t as u64);
+                    phase.spawn(move || {
+                        load_client(
+                            addr,
+                            request,
+                            expected,
+                            true,
+                            quota,
+                            None,
+                            None,
+                            None,
+                            Some((3, seed)),
+                        )
+                    })
+                })
+                .collect();
+            let mut latencies = Vec::new();
+            let mut failed = 0usize;
+            let mut opened = 0usize;
+            for client in clients {
+                let c = client.join().expect("chaos client panicked");
+                latencies.extend(c.latencies_ms);
+                failed += c.failed;
+                opened += c.connections_opened;
+                chaos.retries += c.retries;
+            }
+            let elapsed = ka_started.elapsed().as_secs_f64();
+            PhaseStats::from_latencies(latencies, failed, opened, elapsed, rows.len())
+        });
+
+        // ----------------------------------------- fit phase (chaotic)
+        // Sequential, one fresh connection per fit: panics scheduled in
+        // the solver land in exactly one fit, which is what makes the
+        // fired-panic == failed-fit reconciliation exact.
+        let normal_fits = 12u64;
+        let deadline_fits = 2u64;
+        for i in 0..normal_fits + deadline_fits {
+            let probe = i >= normal_fits;
+            let fit_body = chaos_fit_body(i, probe);
+            let request = format!(
+                "POST /fit HTTP/1.1\r\nHost: chaos\r\nContent-Type: application/json\r\n\
+                 Content-Length: {}\r\nConnection: close\r\n\r\n{}",
+                fit_body.len(),
+                fit_body
+            )
+            .into_bytes();
+            chaos.fit_requests += 1;
+            // Injected accept-time drops look like socket errors here;
+            // retry those (they are the fault being drilled), never a
+            // served status.
+            let mut response = None;
+            for attempt in 0..4 {
+                match exchange(addr, &request) {
+                    Ok(resp) => {
+                        response = Some(resp);
+                        break;
+                    }
+                    Err(_) if attempt < 3 => {
+                        chaos.retries += 1;
+                        backoff_sleep(cfg.chaos_seed, i as usize, attempt + 1, None);
+                    }
+                    Err(_) => {}
+                }
+            }
+            let Some(resp) = response else {
+                chaos.fit_io_failures += 1;
+                continue;
+            };
+            let Ok((status, headers, resp_body)) = read_response(&mut &resp[..]) else {
+                chaos.unstructured_errors += 1;
+                continue;
+            };
+            let structured = || {
+                std::str::from_utf8(&resp_body)
+                    .ok()
+                    .and_then(|t| Json::parse(t).ok())
+                    .is_some_and(|doc| doc.get("error").is_some())
+            };
+            match status {
+                200 => chaos.fit_ok += 1,
+                500 => {
+                    chaos.fit_panics += 1;
+                    if !structured() {
+                        chaos.unstructured_errors += 1;
+                    }
+                }
+                503 => {
+                    chaos.fit_timeouts += 1;
+                    if !structured() || retry_after_secs(&headers).is_none() {
+                        chaos.unstructured_errors += 1;
+                    }
+                }
+                _ => chaos.unstructured_errors += 1,
+            }
+        }
+
+        // ------------------------------------------- audit (fault-free)
+        fault::clear();
+        chaos.injected_worker_panics = fault::fired_count(FaultPoint::WorkerPanic);
+        chaos.injected_write_failures = fault::fired_count(FaultPoint::WriteFail);
+        chaos.injected_conn_drops = fault::fired_count(FaultPoint::ConnDrop);
+        chaos.injected_slow_reads = fault::fired_count(FaultPoint::SlowRead);
+
+        let get = |path: &str| -> Option<Json> {
+            let request = format!(
+                "GET {path} HTTP/1.1\r\nHost: chaos\r\nConnection: close\r\n\r\n"
+            );
+            let resp = exchange(addr, request.as_bytes()).ok()?;
+            let (status, body) = parse_response(&resp).ok()?;
+            if status != 200 {
+                return None;
+            }
+            Json::parse(std::str::from_utf8(&body).ok()?).ok()
+        };
+        chaos.server_alive = get("/healthz")
+            .is_some_and(|doc| doc.get("degraded").and_then(Json::as_bool) == Some(false));
+
+        fn check(mismatches: &mut Vec<String>, name: &str, got: Option<u64>, want: u64) {
+            if got != Some(want) {
+                mismatches.push(format!("{name}: got {got:?}, want {want}"));
+            }
+        }
+        if let Some(stats) = get("/stats") {
+            let counter = |doc: &Json, key: &str| {
+                doc.get(key).and_then(Json::as_usize).map(|v| v as u64)
+            };
+            check(
+                &mut chaos.mismatches,
+                "stats.panics_caught vs fired worker panics",
+                counter(&stats, "panics_caught"),
+                chaos.injected_worker_panics,
+            );
+            check(
+                &mut chaos.mismatches,
+                "stats.store_save_failures vs fired write failures",
+                counter(&stats, "store_save_failures"),
+                chaos.injected_write_failures,
+            );
+            check(
+                &mut chaos.mismatches,
+                "client-observed 500s vs fired worker panics",
+                Some(chaos.fit_panics),
+                chaos.injected_worker_panics,
+            );
+            check(
+                &mut chaos.mismatches,
+                "deadline probes vs 503s",
+                Some(chaos.fit_timeouts),
+                deadline_fits,
+            );
+            let fit_failures = stats
+                .get("routes")
+                .and_then(|r| r.get("fit"))
+                .and_then(|f| counter(f, "failures"));
+            check(
+                &mut chaos.mismatches,
+                "routes.fit.failures vs panics+timeouts",
+                fit_failures,
+                chaos.fit_panics + chaos.fit_timeouts,
+            );
+            check(
+                &mut chaos.mismatches,
+                "fit accounting (ok+panics+timeouts vs sent)",
+                Some(chaos.fit_ok + chaos.fit_panics + chaos.fit_timeouts),
+                chaos.fit_requests - chaos.fit_io_failures,
+            );
+        } else {
+            chaos.mismatches.push("/stats unreachable after the drill".into());
+        }
+        chaos.counters_reconciled = chaos.mismatches.is_empty();
+
+        // Atomic-write contract: whatever is on disk (if anything got
+        // written at all) must reload checksum-clean.
+        chaos.store_intact = if store_path.exists() {
+            let (_, err) = crate::warmstart::WarmStartStore::load_or_empty(&store_path_str, 64);
+            err.is_none()
+        } else {
+            true
+        };
+
+        shutdown.shutdown();
+        ka_stats = Some(ka);
+    });
+    let _ = std::fs::remove_file(&store_path);
+
+    Ok(SelfTestReport {
+        learner,
+        connections,
+        batch_rows: rows.len(),
+        threads,
+        keep_alive: ka_stats.expect("chaos scope completed without phase stats"),
+        close_mode: None,
+        keepalive_speedup: None,
+        swap: None,
+        target_rps: None,
+        slo_p99_ms: None,
+        chaos: Some(chaos),
+    })
+}
+
+/// A distinct well-posed regression problem per fit request: 8 rows of
+/// 3 features, `y = 2·x₀ + i/8` so no two requests share a warm-cache
+/// key. `probe` adds `deadline_ms: 0` — an already-expired deadline the
+/// server must answer with a structured 503.
+#[cfg(feature = "fault-inject")]
+fn chaos_fit_body(i: u64, probe: bool) -> String {
+    let offset = i as f64 * 0.125;
+    let x: Vec<Vec<f64>> = (0..8)
+        .map(|r| vec![(r + 1) as f64, (r % 2) as f64, ((r / 2) % 2) as f64])
+        .collect();
+    let y: Vec<f64> = x.iter().map(|row| 2.0 * row[0] + offset).collect();
+    let mut m = BTreeMap::new();
+    m.insert(
+        "x".to_string(),
+        Json::Array(
+            x.iter()
+                .map(|row| Json::Array(row.iter().map(|&v| Json::from_f64(v)).collect()))
+                .collect(),
+        ),
+    );
+    m.insert("y".to_string(), Json::Array(y.iter().map(|&v| Json::from_f64(v)).collect()));
+    m.insert("k".to_string(), Json::Number(1.0));
+    m.insert("m".to_string(), Json::Number(2.0));
+    if probe {
+        m.insert("deadline_ms".to_string(), Json::Number(0.0));
+    }
+    Json::Object(m).to_string_compact()
 }
 
 /// When the mid-run hot swap fires.
@@ -819,6 +1334,10 @@ mod tests {
             Some(false)
         );
     }
+
+    // The chaos drill's end-to-end tests live in `tests/corruption.rs`:
+    // an installed fault plan is process-global, so they must not run
+    // concurrently with other library tests that touch fire sites.
 
     #[test]
     fn synth_batch_respects_model_contracts() {

@@ -1,6 +1,10 @@
-//! Small shared utilities: wall-clock budgets, timing, and index sets.
+//! Small shared utilities: wall-clock budgets, timing, index sets, and
+//! crash-safe artifact I/O (atomic writes + content checksums).
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use crate::json::Json;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -179,6 +183,118 @@ impl FromIterator<usize> for IndexSet {
     }
 }
 
+/// FNV-1a 64-bit hash — the content checksum of persisted artifacts.
+/// Dependency-free and stable across platforms/versions, which is what a
+/// wire-format checksum needs (cryptographic strength is not the goal:
+/// this detects truncation and bit rot, not adversaries).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Write `contents` to `path` atomically: temp file in the target's
+/// directory → flush → `sync_all` → rename over the target. A crash at
+/// any point leaves either the old file or the new file, never a
+/// truncated hybrid. The temp file is removed on any failure.
+///
+/// Under the `fault-inject` feature an installed [`crate::fault`] plan
+/// can force this call to fail (before anything touches the filesystem),
+/// which is how the chaos harness proves callers survive write failures.
+pub fn atomic_write(path: &str, contents: &str) -> std::io::Result<()> {
+    if crate::fault::fire(crate::fault::FaultPoint::WriteFail) {
+        return Err(std::io::Error::other("injected write failure (fault-inject)"));
+    }
+    let target = Path::new(path);
+    let dir: PathBuf = match target.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => PathBuf::from("."),
+    };
+    let name = target
+        .file_name()
+        .ok_or_else(|| std::io::Error::other(format!("`{path}` has no file name")))?
+        .to_string_lossy()
+        .into_owned();
+    // Unique within the process (pid guards against a concurrent sibling
+    // process writing the same target).
+    static TEMP_COUNTER: AtomicU64 = AtomicU64::new(0);
+    let tmp = dir.join(format!(
+        ".{name}.tmp.{}.{}",
+        std::process::id(),
+        TEMP_COUNTER.fetch_add(1, Ordering::Relaxed)
+    ));
+    let write_result = (|| {
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(contents.as_bytes())?;
+        f.sync_all()
+    })();
+    if let Err(e) = write_result {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Err(e) = std::fs::rename(&tmp, target) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    Ok(())
+}
+
+/// Top-level key carrying the embedded artifact checksum.
+pub const CHECKSUM_KEY: &str = "checksum";
+
+/// Checksum of a JSON document in the embedded wire format
+/// (`fnv1a64:<16 hex digits>`), computed over the canonical pretty
+/// serialization with the `checksum` key itself removed — so embedding
+/// the checksum does not change the bytes it covers.
+pub fn json_checksum(doc: &Json) -> String {
+    let text = match doc {
+        Json::Object(m) if m.contains_key(CHECKSUM_KEY) => {
+            let mut stripped = m.clone();
+            stripped.remove(CHECKSUM_KEY);
+            Json::Object(stripped).to_string_pretty()
+        }
+        _ => doc.to_string_pretty(),
+    };
+    format!("fnv1a64:{:016x}", fnv1a64(text.as_bytes()))
+}
+
+/// Insert (or refresh) the embedded checksum of a JSON object document.
+/// Non-object documents are left untouched.
+pub fn embed_checksum(doc: &mut Json) {
+    let sum = json_checksum(doc);
+    if let Json::Object(m) = doc {
+        m.insert(CHECKSUM_KEY.into(), Json::String(sum));
+    }
+}
+
+/// Result of checking a document against its embedded checksum.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChecksumState {
+    /// No `checksum` key — a pre-checksum artifact; loads as before.
+    Absent,
+    /// Embedded checksum matches the content.
+    Valid,
+    /// Embedded checksum does not match: the file is corrupt (or was
+    /// edited without refreshing the checksum).
+    Mismatch { stored: String, computed: String },
+}
+
+/// Verify a document against its embedded checksum (if any).
+pub fn verify_checksum(doc: &Json) -> ChecksumState {
+    let Some(stored) = doc.get(CHECKSUM_KEY).and_then(Json::as_str) else {
+        return ChecksumState::Absent;
+    };
+    let computed = json_checksum(doc);
+    if stored == computed {
+        ChecksumState::Valid
+    } else {
+        ChecksumState::Mismatch { stored: stored.to_string(), computed }
+    }
+}
+
 /// Format seconds the way Table 1 does (integer seconds, `3600` for a
 /// timeout at the one-hour cap).
 pub fn format_secs(secs: f64) -> String {
@@ -264,5 +380,61 @@ mod tests {
         assert_eq!(format_secs(3600.0), "3600");
         assert_eq!(format_secs(34.26), "34.3");
         assert_eq!(format_secs(0.1234), "0.123");
+    }
+
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_cleans_up() {
+        let path = std::env::temp_dir()
+            .join(format!("backbone_util_atomic_{}.txt", std::process::id()));
+        let path = path.to_string_lossy().into_owned();
+        atomic_write(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        atomic_write(&path, "second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+        // No temp droppings next to the target.
+        let dir = std::path::Path::new(&path).parent().unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains("backbone_util_atomic") && n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn atomic_write_failure_preserves_the_old_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("backbone_util_nodir_{}", std::process::id()));
+        let path = dir.join("x.json").to_string_lossy().into_owned();
+        // Parent directory does not exist → the temp-file create fails and
+        // nothing is left behind (and an existing target would survive).
+        assert!(atomic_write(&path, "data").is_err());
+        assert!(!std::path::Path::new(&path).exists());
+    }
+
+    #[test]
+    fn checksum_embed_verify_roundtrip_and_mismatch() {
+        let mut doc = Json::parse(r#"{"a": 1, "b": [1.5, 2.5]}"#).unwrap();
+        assert_eq!(verify_checksum(&doc), ChecksumState::Absent);
+        embed_checksum(&mut doc);
+        assert_eq!(verify_checksum(&doc), ChecksumState::Valid);
+        // Embedding twice is idempotent (checksum covers content only).
+        let once = doc.to_string_pretty();
+        embed_checksum(&mut doc);
+        assert_eq!(doc.to_string_pretty(), once);
+        // Tamper with the content → mismatch.
+        let tampered = once.replace("1.5", "1.6");
+        let bad = Json::parse(&tampered).unwrap();
+        assert!(matches!(verify_checksum(&bad), ChecksumState::Mismatch { .. }));
     }
 }

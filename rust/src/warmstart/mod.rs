@@ -64,6 +64,9 @@ pub enum WarmStartError {
     Schema { message: String },
     /// A required field is missing or has the wrong type/value.
     Field { field: String, message: String },
+    /// The document's embedded content checksum does not match its body —
+    /// the store file was truncated, bit-flipped, or hand edited.
+    Checksum { stored: String, computed: String },
 }
 
 impl fmt::Display for WarmStartError {
@@ -74,6 +77,12 @@ impl fmt::Display for WarmStartError {
             Self::Schema { message } => write!(f, "not a {WARMSTART_SCHEMA} document: {message}"),
             Self::Field { field, message } => {
                 write!(f, "warm-start store field `{field}`: {message}")
+            }
+            Self::Checksum { stored, computed } => {
+                write!(
+                    f,
+                    "warm-start store is corrupt: stored checksum {stored} != computed {computed}"
+                )
             }
         }
     }
@@ -444,19 +453,32 @@ impl WarmStartStore {
         Ok(store)
     }
 
-    /// Parse a document from its JSON text.
+    /// Parse a document from its JSON text. An embedded `checksum`
+    /// (written by every [`Self::save`]) is verified first; legacy
+    /// checksum-less documents load unchecked.
     pub fn parse(text: &str) -> Result<Self, WarmStartError> {
         let doc = Json::parse(text)
             .map_err(|e| WarmStartError::Parse { message: format!("{e:#}") })?;
+        if let crate::util::ChecksumState::Mismatch { stored, computed } =
+            crate::util::verify_checksum(&doc)
+        {
+            return Err(WarmStartError::Checksum { stored, computed });
+        }
         Self::from_json(&doc)
     }
 
-    /// Write the store to `path` (pretty-printed, trailing newline).
+    /// Write the store to `path` crash-safely: checksum-embedded document
+    /// → temp file in the target directory → fsync → rename. A crash
+    /// mid-save leaves the previous store intact, never a torn file.
     pub fn save(&self, path: impl AsRef<Path>) -> Result<(), WarmStartError> {
         let path = path.as_ref();
-        std::fs::write(path, self.to_json().to_string_pretty()).map_err(|e| {
-            WarmStartError::Io { path: path.display().to_string(), message: e.to_string() }
-        })
+        let mut doc = self.to_json();
+        crate::util::embed_checksum(&mut doc);
+        crate::util::atomic_write(&path.display().to_string(), &doc.to_string_pretty())
+            .map_err(|e| WarmStartError::Io {
+                path: path.display().to_string(),
+                message: e.to_string(),
+            })
     }
 
     /// Read a store from `path`.

@@ -1,0 +1,459 @@
+//! Crash-safety and fault-injection acceptance suite (PR 9).
+//!
+//! Two families of tests share this binary on purpose:
+//!
+//! - **Corruption tolerance** — truncated, bit-flipped, and
+//!   value-tampered `backbone-model/v1` / `backbone-warmstart-store/v1`
+//!   artifacts must surface as *typed* errors at load (never a panic),
+//!   checksum-less legacy artifacts must keep loading, and a failed
+//!   overwrite must leave the previous artifact byte-identical on disk
+//!   (the `atomic_write` contract).
+//! - **Fault-plan behaviour + the chaos drill** (`--features
+//!   fault-inject`) — the seeded schedule fires deterministically, and
+//!   `serve --self-test --chaos` survives it with reconciled counters.
+//!
+//! They live in ONE binary because an installed fault plan is
+//! process-global: a plan-installing test running concurrently with any
+//! other test that touches a fire site (an `atomic_write`, a fit, a
+//! serve accept) would leak injected faults into it. Inside this binary
+//! every plan-installing or artifact-writing test holds
+//! `fault::serial_guard()`; the chaos tests rely on `run_chaos` taking
+//! the same guard internally (holding it around the call would
+//! deadlock). The library test binary never installs a plan.
+
+use backbone_learn::backbone::clustering::ClusteringModel;
+use backbone_learn::backbone::decision_tree::BackboneTreeModel;
+use backbone_learn::backbone::sparse_regression::SparseRegressionModel;
+use backbone_learn::json::Json;
+use backbone_learn::linalg::Matrix;
+use backbone_learn::persist::{LoadedModel, ModelArtifact, PersistError, Provenance};
+use backbone_learn::solvers::exact_tree::BinNode;
+use backbone_learn::solvers::logistic::LogisticModel;
+use backbone_learn::solvers::SolveStatus;
+use backbone_learn::warmstart::{featurize, WarmStartError, WarmStartStore};
+
+/// Unique scratch path for one save/load cycle.
+fn scratch(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("backbone_corrupt_{}_{}.json", name, std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// With `fault-inject` compiled in, any test that writes artifacts must
+/// serialize against tests that install fault plans (see module docs).
+/// Without the feature this is a no-op — no plan can exist.
+#[cfg(feature = "fault-inject")]
+fn write_guard() -> std::sync::MutexGuard<'static, ()> {
+    backbone_learn::fault::serial_guard()
+}
+#[cfg(not(feature = "fault-inject"))]
+fn write_guard() {}
+
+fn provenance(seed: u64) -> Provenance {
+    Provenance {
+        crate_version: "0.4.0".into(),
+        seed,
+        params: Json::parse("{}").unwrap(),
+        config: Json::parse("{}").unwrap(),
+        diagnostics: None,
+    }
+}
+
+/// One small hand-built artifact per learner — corruption handling is a
+/// wire-format property, so no fitting is needed.
+fn artifacts() -> Vec<(&'static str, ModelArtifact)> {
+    vec![
+        (
+            "sr",
+            ModelArtifact {
+                model: LoadedModel::SparseRegression(SparseRegressionModel {
+                    beta: vec![0.0, 1.5, 0.0, -2.25, 0.0],
+                    intercept: 0.5,
+                    support: vec![1, 3],
+                    objective: 3.5,
+                    gap: 0.0,
+                    status: SolveStatus::Optimal,
+                }),
+                provenance: provenance(7),
+            },
+        ),
+        (
+            "lg",
+            ModelArtifact {
+                model: LoadedModel::SparseLogistic(LogisticModel {
+                    beta: vec![0.75, 0.0, -1.5],
+                    intercept: -0.25,
+                    support: vec![0, 2],
+                    nll: 12.5,
+                    status: SolveStatus::Optimal,
+                }),
+                provenance: provenance(3),
+            },
+        ),
+        (
+            "dt",
+            ModelArtifact {
+                model: LoadedModel::DecisionTree(BackboneTreeModel {
+                    root: BinNode::Split {
+                        feature: 0,
+                        left: Box::new(BinNode::Leaf { prob: 0.25, n: 8 }),
+                        right: Box::new(BinNode::Leaf { prob: 0.75, n: 4 }),
+                    },
+                    bin_map: vec![(2, 0.5), (5, -1.25)],
+                    errors: 3,
+                    status: SolveStatus::Optimal,
+                    backbone_features: vec![2, 5],
+                }),
+                provenance: provenance(1),
+            },
+        ),
+        (
+            "cl",
+            ModelArtifact {
+                model: LoadedModel::Clustering(ClusteringModel {
+                    labels: vec![0, 1, 1, 0, 2],
+                    objective: 4.5,
+                    gap: 0.0,
+                    status: SolveStatus::Optimal,
+                }),
+                provenance: provenance(11),
+            },
+        ),
+    ]
+}
+
+/// A small warm-start store with two real entries.
+fn sample_store() -> WarmStartStore {
+    let x = Matrix::from_rows(&[
+        vec![1.0, 0.0, 2.0],
+        vec![0.0, 1.0, -1.0],
+        vec![2.0, -1.0, 0.5],
+        vec![-1.0, 2.0, 1.5],
+    ]);
+    let y = vec![2.0, -1.0, 4.0, -2.0];
+    let mut store = WarmStartStore::new(8);
+    store.record(&featurize(&x, &y, 2), &[0, 2], &[1.9, 0.1], 0.05, 1.25, 0.5);
+    let y2 = vec![1.0, 0.0, 3.0, -1.0];
+    store.record(&featurize(&x, &y2, 2), &[0], &[1.5], 0.0, 2.5, 0.5);
+    store
+}
+
+// ---------------------------------------------------------------------------
+// Corruption tolerance: models
+// ---------------------------------------------------------------------------
+
+/// Truncating a saved artifact anywhere must yield a typed error at
+/// load for every learner — never a panic, never a half-parsed model.
+#[test]
+fn truncated_artifacts_load_as_typed_errors_for_every_learner() {
+    let _g = write_guard();
+    for (name, artifact) in artifacts() {
+        let path = scratch(&format!("trunc_{name}"));
+        artifact.save(&path).unwrap();
+        let full = std::fs::read_to_string(&path).unwrap();
+        for cut in [full.len() / 4, full.len() / 2, 3 * full.len() / 4, full.len() - 2] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let outcome = std::panic::catch_unwind(|| ModelArtifact::load(&path));
+            let loaded = outcome.unwrap_or_else(|_| {
+                panic!("{name}: load PANICKED on artifact truncated at {cut} bytes")
+            });
+            assert!(
+                loaded.is_err(),
+                "{name}: truncation at {cut} bytes loaded successfully"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Flipping a single bit mid-file must also come back as a typed error
+/// (whether it lands as a parse failure or a checksum mismatch).
+#[test]
+fn bit_flipped_artifacts_load_as_typed_errors() {
+    let _g = write_guard();
+    for (name, artifact) in artifacts() {
+        let path = scratch(&format!("flip_{name}"));
+        artifact.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let outcome = std::panic::catch_unwind(|| ModelArtifact::load(&path));
+        let loaded = outcome
+            .unwrap_or_else(|_| panic!("{name}: load PANICKED on a bit-flipped artifact"));
+        assert!(loaded.is_err(), "{name}: bit flip at byte {mid} loaded successfully");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+/// Valid JSON whose content no longer matches the embedded checksum is
+/// the targeted corruption case: it must be the *checksum* error, with
+/// both digests reported, before any semantic validation runs.
+#[test]
+fn value_tampering_is_a_typed_checksum_mismatch() {
+    let _g = write_guard();
+    let (_, artifact) = artifacts().swap_remove(0);
+    let path = scratch("tamper");
+    artifact.save(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let Json::Object(mut map) = Json::parse(&text).unwrap() else {
+        panic!("artifact is not a JSON object")
+    };
+    assert!(map.contains_key("checksum"), "save() must embed a checksum");
+    // Any content change invalidates the checksum computed over the
+    // rest of the document.
+    map.insert("tampered".to_string(), Json::Bool(true));
+    std::fs::write(&path, Json::Object(map).to_string_pretty()).unwrap();
+    let err = ModelArtifact::load(&path).unwrap_err();
+    match err {
+        PersistError::Checksum { stored, computed } => {
+            assert!(stored.starts_with("fnv1a64:"), "stored digest format: {stored}");
+            assert!(computed.starts_with("fnv1a64:"), "computed digest format: {computed}");
+            assert_ne!(stored, computed);
+        }
+        other => panic!("expected PersistError::Checksum, got: {other}"),
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+/// Pre-PR-9 artifacts carry no checksum; they must keep loading.
+#[test]
+fn checksum_less_legacy_artifact_still_loads() {
+    let _g = write_guard();
+    let (_, artifact) = artifacts().swap_remove(0);
+    let path = scratch("legacy");
+    // `to_json()` is the legacy wire format — no checksum key.
+    let doc = artifact.to_json();
+    assert!(doc.get("checksum").is_none(), "to_json() must stay checksum-free");
+    std::fs::write(&path, doc.to_string_pretty()).unwrap();
+    let loaded = ModelArtifact::load(&path).unwrap();
+    assert_eq!(loaded.learner(), artifact.learner());
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Corruption tolerance: warm-start store
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_warm_store_is_a_typed_error_and_degrades_to_empty() {
+    let _g = write_guard();
+    let store = sample_store();
+    let path = scratch("warm");
+    store.save(&path).unwrap();
+    let full = std::fs::read_to_string(&path).unwrap();
+
+    // Truncation → typed error, and load_or_empty degrades to an empty
+    // store while still reporting what went wrong.
+    std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+    let outcome = std::panic::catch_unwind(|| WarmStartStore::load(&path));
+    assert!(
+        outcome.expect("load PANICKED on a truncated store").is_err(),
+        "truncated store loaded successfully"
+    );
+    let (degraded, err) = WarmStartStore::load_or_empty(&path, 8);
+    assert!(degraded.is_empty(), "degraded store must start cold");
+    assert!(err.is_some(), "degradation must report the typed error");
+
+    // Value tampering → specifically the checksum error.
+    let Json::Object(mut map) = Json::parse(&full).unwrap() else {
+        panic!("store is not a JSON object")
+    };
+    assert!(map.contains_key("checksum"), "save() must embed a checksum");
+    map.insert("tampered".to_string(), Json::Bool(true));
+    std::fs::write(&path, Json::Object(map).to_string_pretty()).unwrap();
+    match WarmStartStore::load(&path).unwrap_err() {
+        WarmStartError::Checksum { stored, computed } => assert_ne!(stored, computed),
+        other => panic!("expected WarmStartError::Checksum, got: {other}"),
+    }
+
+    // Legacy checksum-less document still loads with its entries.
+    std::fs::write(&path, store.to_json().to_string_pretty()).unwrap();
+    let legacy = WarmStartStore::load(&path).unwrap();
+    assert_eq!(legacy.len(), store.len());
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Fault plan behaviour (feature-gated)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "fault-inject")]
+mod fault_plan {
+    use backbone_learn::fault::{
+        clear, fire, fired_count, install, serial_guard, FaultPlan, FaultPoint,
+    };
+
+    #[test]
+    fn plan_fires_exactly_at_scheduled_indices() {
+        let _serial = serial_guard();
+        install(FaultPlan::new().with_fires(FaultPoint::WriteFail, &[0, 2]));
+        let observed: Vec<bool> = (0..4).map(|_| fire(FaultPoint::WriteFail)).collect();
+        assert_eq!(observed, vec![true, false, true, false]);
+        assert_eq!(fired_count(FaultPoint::WriteFail), 2);
+        // Other points are untouched.
+        assert!(!fire(FaultPoint::WorkerPanic));
+        assert_eq!(fired_count(FaultPoint::WorkerPanic), 0);
+        clear();
+        assert!(!fire(FaultPoint::WriteFail));
+    }
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_gap_spaced() {
+        let _serial = serial_guard();
+        let a = FaultPlan::seeded(7, 3, 16);
+        let b = FaultPlan::seeded(7, 3, 16);
+        for point in FaultPoint::ALL {
+            assert_eq!(a.planned(point), 3);
+            assert_eq!(b.planned(point), 3);
+        }
+        // Same seed → same schedule, observable through fire().
+        install(a);
+        let run_a: Vec<bool> = (0..80).map(|_| fire(FaultPoint::WorkerPanic)).collect();
+        install(b);
+        let run_b: Vec<bool> = (0..80).map(|_| fire(FaultPoint::WorkerPanic)).collect();
+        assert_eq!(run_a, run_b);
+        // Gap spacing: no two consecutive fires closer than the gap.
+        let hits: Vec<usize> =
+            run_a.iter().enumerate().filter(|(_, &h)| h).map(|(i, _)| i).collect();
+        for w in hits.windows(2) {
+            assert!(w[1] - w[0] >= 16, "fires too close: {hits:?}");
+        }
+        clear();
+    }
+
+    #[test]
+    fn no_plan_means_no_fires() {
+        let _serial = serial_guard();
+        clear();
+        for point in FaultPoint::ALL {
+            assert!(!fire(point));
+        }
+    }
+}
+
+/// A failed overwrite must leave the previous artifact byte-identical:
+/// the injected I/O failure hits the temp file, never the target.
+#[cfg(feature = "fault-inject")]
+#[test]
+fn crash_during_save_leaves_prior_artifact_intact() {
+    use backbone_learn::fault::{clear, install, FaultPlan, FaultPoint};
+    let _g = write_guard();
+    let mut all = artifacts();
+    let (_, replacement) = all.swap_remove(1);
+    let (_, original) = all.swap_remove(0);
+    let path = scratch("crash_save");
+    original.save(&path).unwrap();
+    let before = std::fs::read(&path).unwrap();
+
+    install(FaultPlan::new().with_fires(FaultPoint::WriteFail, &[0]));
+    let err = replacement.save(&path).unwrap_err();
+    clear();
+    assert!(
+        matches!(err, PersistError::Io { .. }),
+        "injected write failure must surface as a typed I/O error, got: {err}"
+    );
+
+    let after = std::fs::read(&path).unwrap();
+    assert_eq!(before, after, "failed overwrite mutated the previous artifact");
+    let survivor = ModelArtifact::load(&path).unwrap();
+    assert_eq!(survivor.learner(), original.learner());
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// The chaos drill end to end (feature-gated)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "fault-inject")]
+mod chaos {
+    use backbone_learn::backbone::sparse_regression::SparseRegressionModel;
+    use backbone_learn::json::Json;
+    use backbone_learn::persist::LoadedModel;
+    use backbone_learn::serve::selftest::{run_self_test, SelfTestConfig};
+    use backbone_learn::solvers::SolveStatus;
+
+    fn toy_model() -> LoadedModel {
+        LoadedModel::SparseRegression(SparseRegressionModel {
+            beta: vec![1.0, -2.0, 0.5],
+            intercept: 0.25,
+            support: vec![0, 1, 2],
+            objective: 1.0,
+            gap: 0.0,
+            status: SolveStatus::Optimal,
+        })
+    }
+
+    /// The whole drill on a loopback server. Deliberately does NOT hold
+    /// `fault::serial_guard()` — `run_chaos` takes it internally, which
+    /// is what serializes it against every other test in this binary.
+    #[test]
+    fn chaos_drill_survives_and_reconciles() {
+        let report = run_self_test(
+            toy_model(),
+            &SelfTestConfig {
+                requests: 48,
+                connections: 3,
+                batch_rows: 4,
+                threads: 2,
+                chaos: true,
+                chaos_seed: 7,
+                ..SelfTestConfig::quick()
+            },
+        )
+        .unwrap();
+        let chaos = report.chaos.as_ref().expect("chaos section present");
+        assert!(chaos.server_alive, "server died during the drill");
+        assert!(chaos.store_intact, "warm store corrupt after injected write failures");
+        assert_eq!(
+            chaos.unstructured_errors, 0,
+            "an error response was not structured JSON"
+        );
+        assert_eq!(chaos.fit_io_failures, 0, "a fit was lost even after retries");
+        assert!(
+            chaos.counters_reconciled,
+            "counters did not reconcile: {:?}",
+            chaos.mismatches
+        );
+        assert_eq!(chaos.fit_timeouts, 2, "both deadline probes must 503");
+        assert_eq!(
+            chaos.fit_panics, chaos.injected_worker_panics,
+            "every fired worker panic must surface as exactly one 500"
+        );
+        assert_eq!(
+            report.keep_alive.failed, 0,
+            "predict slots must all succeed after retries"
+        );
+        assert!(report.passed(), "chaos report must pass its own gate");
+
+        let doc = report.to_json();
+        let cj = doc.get("chaos").expect("chaos JSON section");
+        assert_eq!(cj.get("ok").and_then(Json::as_bool), Some(true));
+        assert!(cj.get("injected").and_then(|i| i.get("worker_panics")).is_some());
+        assert_eq!(doc.get("passed").and_then(Json::as_bool), Some(true));
+    }
+
+    /// Same seed → same injected solver/write fault sequence → same
+    /// chaos outcome counts. (Connection-level faults depend on socket
+    /// interleaving and are deliberately not compared.)
+    #[test]
+    fn chaos_drill_is_deterministic_for_a_seed() {
+        let cfg = SelfTestConfig {
+            requests: 24,
+            connections: 2,
+            batch_rows: 4,
+            threads: 1,
+            chaos: true,
+            chaos_seed: 11,
+            ..SelfTestConfig::quick()
+        };
+        let a = run_self_test(toy_model(), &cfg).unwrap();
+        let b = run_self_test(toy_model(), &cfg).unwrap();
+        let (ca, cb) = (a.chaos.unwrap(), b.chaos.unwrap());
+        assert_eq!(ca.injected_worker_panics, cb.injected_worker_panics);
+        assert_eq!(ca.fit_panics, cb.fit_panics);
+        assert_eq!(ca.fit_ok, cb.fit_ok);
+        assert_eq!(ca.fit_timeouts, cb.fit_timeouts);
+    }
+}

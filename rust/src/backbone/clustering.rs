@@ -123,6 +123,10 @@ impl BackboneLearner for Inner {
     /// point-subset buffer), one set per scheduler worker.
     type Workspace = KMeansWorkspace;
 
+    fn name(&self) -> &'static str {
+        "clustering"
+    }
+
     fn num_entities(&self, data: &Matrix) -> usize {
         data.rows()
     }

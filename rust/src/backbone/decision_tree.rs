@@ -197,6 +197,10 @@ impl BackboneLearner for Inner {
     /// per scheduler worker.
     type Workspace = CartWorkspace;
 
+    fn name(&self) -> &'static str {
+        "decision_tree"
+    }
+
     fn num_entities(&self, data: &SupervisedData) -> usize {
         data.x.cols()
     }

@@ -175,6 +175,15 @@ impl<C> Builder<C> {
         self
     }
 
+    /// Record a per-stage trace tree into the fit diagnostics
+    /// ([`crate::backbone::BackboneDiagnostics::trace`]). Tracing reads
+    /// the clock around stages and never inside solver math, so traced
+    /// fits stay bit-identical to untraced ones.
+    pub fn trace(mut self, on: bool) -> Self {
+        self.params.trace = on;
+        self
+    }
+
     /// Validate the shared params, applying `default_b_max` when the user
     /// did not set one, and hand back `(params, cfg)` for the concrete
     /// builder's `build()`.

@@ -108,6 +108,11 @@ pub struct BackboneParams {
     pub threads: usize,
     /// RNG seed (subproblem sampling, heuristic restarts).
     pub seed: u64,
+    /// Record a per-stage trace tree into
+    /// [`BackboneDiagnostics::trace`]. Off by default: the disabled path
+    /// is a no-op tracer (one branch per stage), so fits without tracing
+    /// stay bit-identical *and* cost-identical.
+    pub trace: bool,
 }
 
 /// Test amplifier: `BACKBONE_THREADS=N` flips the *default* execution
@@ -144,6 +149,7 @@ impl Default for BackboneParams {
             execution,
             threads,
             seed: 0,
+            trace: false,
         }
     }
 }
@@ -200,6 +206,14 @@ pub trait BackboneLearner {
     /// Per-task scratch state of `fit_subproblem` (see the workspace
     /// contract above). `Default`-constructed once per worker thread.
     type Workspace: Default + Send;
+
+    /// Stable learner id used as the `learner` label of the
+    /// `backbone_fit_total` metric and the root attribute of trace
+    /// trees. The default keeps ad-hoc/test learners label-free-ish
+    /// without forcing an override.
+    fn name(&self) -> &'static str {
+        "custom"
+    }
 
     /// Number of sampling entities (features / points).
     fn num_entities(&self, data: &Self::Data) -> usize;
@@ -295,6 +309,9 @@ pub struct BackboneDiagnostics {
     /// future partial-batch policy (serving layers count panics per
     /// request via [`BackboneError::SubproblemPanicked`]).
     pub panics_caught: usize,
+    /// Per-stage trace tree (screen → iterations → subproblem slots →
+    /// reduced solve), recorded when [`BackboneParams::trace`] is set.
+    pub trace: Option<crate::obs::TraceNode>,
 }
 
 impl BackboneDiagnostics {
@@ -322,6 +339,9 @@ impl BackboneDiagnostics {
         );
         m.insert("threads_used".into(), Json::Number(self.threads_used as f64));
         m.insert("panics_caught".into(), Json::Number(self.panics_caught as f64));
+        if let Some(trace) = &self.trace {
+            m.insert("trace".into(), trace.to_json());
+        }
         Json::Object(m)
     }
 }

@@ -30,6 +30,7 @@ use super::{
     BackboneDiagnostics, BackboneFit, BackboneLearner, BackboneParams, IterationStats,
 };
 use crate::fault::{self, FaultPoint};
+use crate::obs::{self, Tracer};
 use crate::rng::Rng;
 use crate::util::{Budget, Stopwatch};
 use std::collections::BTreeMap;
@@ -362,7 +363,19 @@ impl FitPipeline {
         let mut rng = Rng::seed_from_u64(params.seed);
         let phase1_watch = Stopwatch::start();
 
+        // Per-fit tracing: the disabled tracer is a `None` behind one
+        // branch per call, so untraced fits pay nothing measurable. All
+        // stages run on this thread (the batch blocks until its workers
+        // finish), so one tracer with an RAII span stack suffices;
+        // per-slot solve times are attached retroactively from the
+        // batch's `wall_secs`.
+        let tracer = Tracer::new("fit", params.trace);
+        tracer.attr("learner", learner.name());
+        tracer.attr("seed", params.seed);
+
         // --- Screen stage --------------------------------------------------
+        let screen_watch = Stopwatch::start();
+        let screen_span = tracer.span("screen");
         let n_entities = learner.num_entities(data);
         if n_entities == 0 {
             return Err(BackboneError::EmptyData {
@@ -399,6 +412,10 @@ impl FitPipeline {
             universe.sort_unstable();
             universe.dedup();
         }
+        tracer.attr("entities", n_entities);
+        tracer.attr("kept", universe.len());
+        drop(screen_span);
+        obs::add_stage_secs("screen", screen_watch.elapsed_secs());
 
         // --- Iterate -------------------------------------------------------
         let mut diagnostics =
@@ -415,15 +432,27 @@ impl FitPipeline {
             let sub_size =
                 ((params.beta * universe.len() as f64).ceil() as usize).clamp(1, universe.len());
 
-            let batch = construct_subproblems(
-                &universe,
-                &utilities,
-                m_t,
-                sub_size,
-                params.strategy,
-                &mut rng,
-            );
-            let outcome = solve_subproblem_batch(
+            let iteration_span = tracer.span("iteration");
+            tracer.attr("t", t);
+            tracer.attr("universe", universe.len());
+
+            let construct_watch = Stopwatch::start();
+            let batch = {
+                let _construct = tracer.span("construct");
+                construct_subproblems(
+                    &universe,
+                    &utilities,
+                    m_t,
+                    sub_size,
+                    params.strategy,
+                    &mut rng,
+                )
+            };
+            obs::add_stage_secs("construct", construct_watch.elapsed_secs());
+
+            let batch_watch = Stopwatch::start();
+            let batch_span = tracer.span("subproblems");
+            let outcome = match solve_subproblem_batch(
                 &*learner,
                 data,
                 &batch,
@@ -431,13 +460,38 @@ impl FitPipeline {
                 budget,
                 params.execution,
                 params.threads,
-            )?;
+            ) {
+                Ok(outcome) => outcome,
+                Err(err) => {
+                    if matches!(err, BackboneError::SubproblemPanicked { .. }) {
+                        obs::record_subproblem_panic();
+                    }
+                    return Err(err);
+                }
+            };
+            // Attach each solved slot's wall time (measured inside the
+            // batch, worker- or caller-side) as a child of this span.
+            for (i, secs) in outcome.wall_secs.iter().enumerate() {
+                if outcome.results[i].is_some() {
+                    tracer.child("subproblem", *secs, &[("slot", i.to_string())]);
+                }
+            }
+            drop(batch_span);
+            obs::add_stage_secs("subproblems", batch_watch.elapsed_secs());
+
             let exhausted = outcome.exhausted;
             diagnostics.subproblems_skipped += outcome.skipped();
             diagnostics.panics_caught += outcome.panics_caught;
             diagnostics.threads_used = diagnostics.threads_used.max(outcome.threads_used);
+            obs::record_iteration();
+            obs::record_subproblems(
+                (m_t - outcome.skipped()) as u64,
+                outcome.skipped() as u64,
+            );
             let subproblem_secs = outcome.wall_secs;
 
+            let aggregate_watch = Stopwatch::start();
+            let aggregate_span = tracer.span("aggregate");
             votes.clear();
             for relevant in outcome.results.into_iter().flatten() {
                 for ind in relevant {
@@ -451,6 +505,10 @@ impl FitPipeline {
                 .collect();
             next_universe.sort_unstable();
             next_universe.dedup();
+            tracer.attr("backbone", votes.len());
+            drop(aggregate_span);
+            obs::add_stage_secs("aggregate", aggregate_watch.elapsed_secs());
+            drop(iteration_span);
 
             diagnostics.iterations.push(IterationStats {
                 iteration: t,
@@ -506,11 +564,17 @@ impl FitPipeline {
 
         // --- Reduced fit ---------------------------------------------------
         let phase2_watch = Stopwatch::start();
+        let reduced_span = tracer.span("reduced");
+        tracer.attr("backbone", backbone.len());
         let model = learner
             .fit_reduced(data, &backbone, budget)
             .map_err(|e| BackboneError::Solver { message: format!("{e:#}") })?;
+        drop(reduced_span);
         diagnostics.phase2_secs = phase2_watch.elapsed_secs();
+        obs::add_stage_secs("reduced", diagnostics.phase2_secs);
 
+        obs::record_fit(learner.name());
+        diagnostics.trace = tracer.finish();
         Ok(BackboneFit { model, backbone, diagnostics })
     }
 }

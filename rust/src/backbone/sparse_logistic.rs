@@ -122,6 +122,10 @@ impl BackboneLearner for Inner {
     /// design-matrix buffers), one set per scheduler worker.
     type Workspace = LogisticWorkspace;
 
+    fn name(&self) -> &'static str {
+        "sparse_logistic"
+    }
+
     fn num_entities(&self, data: &SupervisedData) -> usize {
         data.x.cols()
     }

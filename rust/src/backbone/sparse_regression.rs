@@ -194,6 +194,10 @@ impl BackboneLearner for Inner {
     /// `&self` and each scheduler worker reuses one allocation set.
     type Workspace = L0Workspace;
 
+    fn name(&self) -> &'static str {
+        "sparse_regression"
+    }
+
     fn num_entities(&self, data: &SupervisedData) -> usize {
         data.x.cols()
     }

@@ -436,25 +436,11 @@ pub fn clustering_accuracy(x: &Matrix, labels: &[usize]) -> f64 {
     silhouette_score(x, labels)
 }
 
-/// Linear-interpolation percentile of an **ascending-sorted** sample
-/// (`q` in `[0, 1]`; the R-7 / NumPy default). Returns `NaN` on an empty
-/// sample. Shared by the serving stats endpoint and the `serve
-/// --self-test` latency report.
-pub fn percentile(sorted: &[f64], q: f64) -> f64 {
-    if sorted.is_empty() {
-        return f64::NAN;
-    }
-    let q = q.clamp(0.0, 1.0);
-    let pos = q * (sorted.len() - 1) as f64;
-    let lo = pos.floor() as usize;
-    let hi = pos.ceil() as usize;
-    if lo == hi {
-        sorted[lo]
-    } else {
-        let frac = pos - lo as f64;
-        sorted[lo] + (sorted[hi] - sorted[lo]) * frac
-    }
-}
+/// The canonical percentile now lives in [`crate::obs`]; this re-export
+/// keeps existing `bench_support::percentile` callers working while
+/// guaranteeing every consumer (bench rows, `/stats` latency window,
+/// self-test report) computes p50/p99 the same way.
+pub use crate::obs::percentile;
 
 // ---------------------------------------------------------------------------
 // Perf suite (`cli bench`): end-to-end fit timings as machine-readable rows

@@ -28,6 +28,7 @@ const FLAG_KEYS: &[&str] = &[
     "quick",
     "schema-only",
     "self-test",
+    "trace",
     "warm",
 ];
 

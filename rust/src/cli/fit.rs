@@ -43,6 +43,9 @@ pub fn run(args: &Args) -> Result<i32> {
         None => None,
     };
     let budget = Budget::seconds(args.get_f64("budget", 60.0)?);
+    // `--trace` records spans through the fit; the nested trace tree
+    // lands in the `--out` document under `diagnostics.trace`.
+    let trace = args.flag("trace");
     let out = args.get("out");
     let mut rng = Rng::seed_from_u64(seed);
 
@@ -123,7 +126,8 @@ pub fn run(args: &Args) -> Result<i32> {
                     .beta(beta)
                     .num_subproblems(m)
                     .max_nonzeros(k)
-                    .seed(seed);
+                    .seed(seed)
+                    .trace(trace);
                 let builder = match threads {
                     None => builder,
                     Some(n) => builder.threads(n),
@@ -198,7 +202,8 @@ pub fn run(args: &Args) -> Result<i32> {
                 .beta(beta)
                 .num_subproblems(m)
                 .depth(depth)
-                .seed(seed);
+                .seed(seed)
+                .trace(trace);
             let builder = match threads {
                 None => builder,
                 Some(n) => builder.threads(n),
@@ -236,7 +241,8 @@ pub fn run(args: &Args) -> Result<i32> {
                 .beta(beta)
                 .num_subproblems(m)
                 .n_clusters(k)
-                .seed(seed);
+                .seed(seed)
+                .trace(trace);
             let builder = match threads {
                 None => builder,
                 Some(n) => builder.threads(n),

@@ -41,6 +41,8 @@ USAGE:
   backbone-learn fit    --problem sr|dt|cl [--n N] [--p P] [--k K]
                         [--alpha A] [--beta B] [--m M] [--seed S] [--budget SECS]
                         [--threads N] [--out FILE]   (diagnostics + metrics as JSON)
+                        [--trace]                    (record spans through the fit;
+                         nested trace tree → diagnostics.trace in --out)
                         [--warm-cache store.json]    (sr only: learn + reuse warm
                          starts across fits; exact repeats skip the solve)
   backbone-learn save    --learner sr|lr|dt|cl --out model.json
@@ -62,8 +64,10 @@ USAGE:
                           connection bounded by --max-connections (default 64,
                           saturation → 503 + Retry-After): POST /predict,
                           POST /models/<id>/predict, PUT /models/<id> hot swap,
-                          GET /models, GET /healthz, GET /stats; --fit adds
+                          GET /models, GET /healthz, GET /stats, GET /metrics
+                          (Prometheus text exposition); --fit adds
                           POST /fit — online fits on --threads solver threads
+                          (body `trace: true` returns the fit's trace tree)
                           with a learned warm-start cache; overload → 429 +
                           Retry-After; --fit-timeout / per-request deadline_ms
                           cancel overrunning solves → 503 + Retry-After)
@@ -79,7 +83,7 @@ USAGE:
                           drill: seeded worker panics / write failures /
                           connection drops / slow reads, then audits survival,
                           structured errors, checksum-clean artifacts, and
-                          exact /stats counter reconciliation)
+                          exact /stats + /metrics counter reconciliation)
   backbone-learn ablate --sweep alpha-beta|num-subproblems|screen [--block sr|dt|cl]
                         [--threads N]
   backbone-learn bench  [--quick] [--reps N] [--budget SECS] [--out FILE]
@@ -100,6 +104,8 @@ Run with quick (CI-scale) sizes by default; pass --full for Table-1 scale.
 or the config-file `backend` key) picks the linalg compute backend:
 blocked scalar kernels or runtime-detected AVX2. Backends are
 bit-identical — the choice only changes wall-clock time.
+BACKBONE_LOG=error|warn|info|debug|off filters the structured JSON log
+lines on stderr (default warn; serve logs each request at info).
 ";
 
 /// CLI entry point (called from `main.rs`).

@@ -98,6 +98,7 @@ pub mod fault;
 pub mod json;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod persist;
 pub mod prop;
 pub mod rng;

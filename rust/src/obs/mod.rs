@@ -1,0 +1,1070 @@
+//! Observability: one place where the crate's telemetry lives.
+//!
+//! Four pieces, all std-only:
+//!
+//! - a process-global [`MetricsRegistry`] of atomic counters, gauges, and
+//!   fixed-bucket histograms, rendered in the Prometheus text exposition
+//!   format (version 0.0.4) by [`render`] — `GET /metrics` serves exactly
+//!   that string plus the server-derived series (`serve` renders those
+//!   from the *same* atomics `/stats` reads, so the two surfaces cannot
+//!   disagree);
+//! - lightweight tracing: a per-fit [`Tracer`] building a [`TraceNode`]
+//!   tree from RAII span guards ([`Tracer::span`]) plus retroactive
+//!   children ([`Tracer::child`]) for work timed elsewhere (per-slot
+//!   subproblem wall times). A disabled tracer is a `None` — every
+//!   operation on it is a tag check and a return;
+//! - structured JSON logs to stderr behind a `BACKBONE_LOG` filter
+//!   (`error|warn|info|debug`, default `warn`), parsed once per process
+//!   into an atomic so [`log_enabled`] is one relaxed load;
+//! - the canonical [`percentile`] (R-7 / NumPy linear interpolation),
+//!   re-homed here from `bench_support` so the bench rows, the `/stats`
+//!   latency window, and the self-test report all summarize latencies
+//!   through one definition.
+//!
+//! ## Cost discipline
+//!
+//! Nothing here is called from inside a numeric kernel. Counters are
+//! bumped once per *solve* / *request* / *write* (hot loops accumulate
+//! into a local and add once), registry lookups take a short mutex on a
+//! small `BTreeMap` at the same granularity, and the disabled tracing /
+//! logging paths are a single branch or relaxed atomic load — which is
+//! what keeps the kernel benchmarks flat with this module compiled in.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Instant;
+
+// ---------------------------------------------------------------------------
+// Percentiles (canonical implementation — see satellite note above)
+// ---------------------------------------------------------------------------
+
+/// Linear-interpolation percentile of an **ascending-sorted** sample
+/// (`q` in `[0, 1]`; the R-7 / NumPy default). Returns `NaN` on an empty
+/// sample. This is the single percentile definition in the crate: the
+/// bench harness, the `/stats` latency window, and the serve self-test
+/// report all call it (via `bench_support::percentile`, a re-export).
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metric primitives
+// ---------------------------------------------------------------------------
+
+/// Atomic add of `v` into an f64 stored as bits in an `AtomicU64`.
+fn f64_fetch_add(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = f64::from_bits(cur) + v;
+        match cell.compare_exchange_weak(
+            cur,
+            next.to_bits(),
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        ) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Monotonic integer counter. Handles are `Arc`-backed and cheap to
+/// clone; increments are relaxed atomic adds.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Monotonic float counter (seconds totals). Rendered as a Prometheus
+/// `counter`.
+#[derive(Clone)]
+pub struct FloatCounter(Arc<AtomicU64>);
+
+impl FloatCounter {
+    pub fn add(&self, v: f64) {
+        if v.is_finite() && v >= 0.0 {
+            f64_fetch_add(&self.0, v);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Last-write-wins gauge (stored as f64 bits).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed-bucket histogram: cumulative `le` buckets plus `_sum`/`_count`,
+/// the Prometheus histogram wire shape. Bounds are fixed at registration;
+/// observations are two relaxed adds and one linear bucket scan.
+pub struct HistogramInner {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+#[derive(Clone)]
+pub struct Histogram(Arc<HistogramInner>);
+
+/// Default latency buckets (seconds): 100µs … 10s, roughly ×3 apart.
+pub const LATENCY_BUCKETS: &[f64] =
+    &[0.0001, 0.0003, 0.001, 0.003, 0.01, 0.03, 0.1, 0.3, 1.0, 3.0, 10.0];
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let h = &self.0;
+        for (bound, bucket) in h.bounds.iter().zip(&h.buckets) {
+            if v <= *bound {
+                bucket.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        f64_fetch_add(&h.sum, v.max(0.0));
+        h.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum.load(Ordering::Relaxed))
+    }
+
+    /// Bucket-interpolated quantile estimate (`q` in `[0, 1]`): the
+    /// exposition-side answer to "roughly where is p99", with the usual
+    /// histogram caveat that precision is bucket-width bounded. `NaN`
+    /// when empty. Exact sample percentiles stay with [`percentile`].
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut prev_bound = 0.0;
+        let mut prev_cum = 0u64;
+        for (bound, bucket) in self.0.bounds.iter().zip(&self.0.buckets) {
+            let cum = bucket.load(Ordering::Relaxed);
+            if cum >= rank {
+                let in_bucket = (cum - prev_cum).max(1);
+                let frac = (rank - prev_cum) as f64 / in_bucket as f64;
+                return prev_bound + (bound - prev_bound) * frac;
+            }
+            prev_bound = *bound;
+            prev_cum = cum;
+        }
+        // Beyond the last bound: report the last bound (Prometheus
+        // convention for +Inf-bucket quantiles).
+        self.0.bounds.last().copied().unwrap_or(f64::NAN)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Kind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl Kind {
+    fn type_name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Histogram => "histogram",
+        }
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Float(FloatCounter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+/// Sorted `label=value` pairs identifying one series within a family.
+type LabelSet = Vec<(String, String)>;
+
+struct Family {
+    help: &'static str,
+    kind: Kind,
+    series: BTreeMap<LabelSet, Metric>,
+}
+
+/// Process-global metrics registry: families keyed by metric name, each
+/// holding its labeled series. Registration takes the mutex; increments
+/// on returned handles never do.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    families: Mutex<BTreeMap<String, Family>>,
+}
+
+fn label_set(labels: &[(&str, &str)]) -> LabelSet {
+    let mut v: LabelSet =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    v.sort();
+    v
+}
+
+impl MetricsRegistry {
+    fn lock(&self) -> MutexGuard<'_, BTreeMap<String, Family>> {
+        self.families.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register (or fetch) a counter series. The first call for a name
+    /// fixes its help text and kind; label sets create new series within
+    /// the family.
+    pub fn counter(&self, name: &str, help: &'static str, labels: &[(&str, &str)]) -> Counter {
+        let mut fams = self.lock();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help,
+            kind: Kind::Counter,
+            series: BTreeMap::new(),
+        });
+        match fam.series.entry(label_set(labels)).or_insert_with(|| {
+            Metric::Counter(Counter(Arc::new(AtomicU64::new(0))))
+        }) {
+            Metric::Counter(c) => c.clone(),
+            _ => panic!("metric `{name}` already registered with a different type"),
+        }
+    }
+
+    /// Register (or fetch) a float counter (seconds totals).
+    pub fn float_counter(
+        &self,
+        name: &str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+    ) -> FloatCounter {
+        let mut fams = self.lock();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help,
+            kind: Kind::Counter,
+            series: BTreeMap::new(),
+        });
+        match fam.series.entry(label_set(labels)).or_insert_with(|| {
+            Metric::Float(FloatCounter(Arc::new(AtomicU64::new(0f64.to_bits()))))
+        }) {
+            Metric::Float(c) => c.clone(),
+            _ => panic!("metric `{name}` already registered with a different type"),
+        }
+    }
+
+    /// Register (or fetch) a gauge series.
+    pub fn gauge(&self, name: &str, help: &'static str, labels: &[(&str, &str)]) -> Gauge {
+        let mut fams = self.lock();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help,
+            kind: Kind::Gauge,
+            series: BTreeMap::new(),
+        });
+        match fam.series.entry(label_set(labels)).or_insert_with(|| {
+            Metric::Gauge(Gauge(Arc::new(AtomicU64::new(0f64.to_bits()))))
+        }) {
+            Metric::Gauge(g) => g.clone(),
+            _ => panic!("metric `{name}` already registered with a different type"),
+        }
+    }
+
+    /// Register (or fetch) a histogram series with the given bucket
+    /// upper bounds (ascending; `+Inf` is implicit).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &'static str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+    ) -> Histogram {
+        let mut fams = self.lock();
+        let fam = fams.entry(name.to_string()).or_insert_with(|| Family {
+            help,
+            kind: Kind::Histogram,
+            series: BTreeMap::new(),
+        });
+        match fam.series.entry(label_set(labels)).or_insert_with(|| {
+            Metric::Histogram(Histogram(Arc::new(HistogramInner {
+                bounds: bounds.to_vec(),
+                buckets: bounds.iter().map(|_| AtomicU64::new(0)).collect(),
+                sum: AtomicU64::new(0f64.to_bits()),
+                count: AtomicU64::new(0),
+            })))
+        }) {
+            Metric::Histogram(h) => h.clone(),
+            _ => panic!("metric `{name}` already registered with a different type"),
+        }
+    }
+
+    /// Render every registered family in Prometheus text exposition
+    /// format 0.0.4: `# HELP` / `# TYPE` per family, then one line per
+    /// series, names and label sets in sorted (deterministic) order.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let fams = self.lock();
+        for (name, fam) in fams.iter() {
+            write_help_type(&mut out, name, fam.help, fam.kind.type_name());
+            for (labels, metric) in &fam.series {
+                match metric {
+                    Metric::Counter(c) => {
+                        write_series(&mut out, name, labels, c.get() as f64)
+                    }
+                    Metric::Float(c) => write_series(&mut out, name, labels, c.get()),
+                    Metric::Gauge(g) => write_series(&mut out, name, labels, g.get()),
+                    Metric::Histogram(h) => {
+                        let inner = &h.0;
+                        for (bound, bucket) in inner.bounds.iter().zip(&inner.buckets) {
+                            let mut with_le = labels.clone();
+                            with_le.push(("le".into(), format_value(*bound)));
+                            write_series(
+                                &mut out,
+                                &format!("{name}_bucket"),
+                                &with_le,
+                                bucket.load(Ordering::Relaxed) as f64,
+                            );
+                        }
+                        let mut with_le = labels.clone();
+                        with_le.push(("le".into(), "+Inf".into()));
+                        write_series(
+                            &mut out,
+                            &format!("{name}_bucket"),
+                            &with_le,
+                            h.count() as f64,
+                        );
+                        write_series(&mut out, &format!("{name}_sum"), labels, h.sum());
+                        write_series(
+                            &mut out,
+                            &format!("{name}_count"),
+                            labels,
+                            h.count() as f64,
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Distinct sample lines currently rendered (series, with histogram
+    /// buckets expanded) — what the ≥N-series acceptance test counts.
+    pub fn series_count(&self) -> usize {
+        self.render().lines().filter(|l| !l.starts_with('#') && !l.is_empty()).count()
+    }
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and newline.
+pub fn escape_label_value(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Format a sample value: integers without a decimal point, floats via
+/// the shortest round-trip `{}`.
+fn format_value(v: f64) -> String {
+    if v.is_nan() {
+        "NaN".into()
+    } else if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Write one `# HELP` + `# TYPE` pair.
+pub fn write_help_type(out: &mut String, name: &str, help: &str, type_name: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(type_name);
+    out.push('\n');
+}
+
+/// Write one sample line (`name{labels} value`). Shared by the registry
+/// renderer and the serve layer's server-derived section so both format
+/// identically.
+pub fn write_series(out: &mut String, name: &str, labels: &[(String, String)], value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() {
+        out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(k);
+            out.push_str("=\"");
+            out.push_str(&escape_label_value(v));
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(&format_value(value));
+    out.push('\n');
+}
+
+/// Parse the value of one series out of exposition text: first sample
+/// line whose name matches `name` and whose label section contains every
+/// `label="value"` fragment in `labels`. The reconciliation helper the
+/// self-test and the chaos audit use to compare `/metrics` against
+/// `/stats` and fired-fault counts.
+pub fn metric_value(text: &str, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        let Some((series, value)) = line.rsplit_once(' ') else { continue };
+        let (lname, lset) = match series.split_once('{') {
+            Some((n, rest)) => (n, rest.trim_end_matches('}')),
+            None => (series, ""),
+        };
+        if lname != name {
+            continue;
+        }
+        let all = labels.iter().all(|(k, v)| {
+            lset.split(',').any(|frag| frag == format!("{k}=\"{}\"", escape_label_value(v)))
+        });
+        if all {
+            return value.parse().ok();
+        }
+    }
+    None
+}
+
+/// The process-global registry. First access seeds every fixed-cardinality
+/// series the crate increments, so `GET /metrics` is complete (all series
+/// present at zero) from the first request — which is also what makes the
+/// exposition golden test deterministic.
+pub fn registry() -> &'static MetricsRegistry {
+    static REGISTRY: OnceLock<MetricsRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        let r = MetricsRegistry::default();
+        for learner in ["sparse_regression", "sparse_logistic", "decision_tree", "clustering"]
+        {
+            r.counter(FIT_TOTAL, FIT_TOTAL_HELP, &[("learner", learner)]);
+        }
+        for stage in ["screen", "construct", "subproblems", "aggregate", "reduced"] {
+            r.float_counter(STAGE_SECONDS, STAGE_SECONDS_HELP, &[("stage", stage)]);
+        }
+        r.counter(ITERATIONS_TOTAL, ITERATIONS_TOTAL_HELP, &[]);
+        r.counter(SUBPROBLEMS_TOTAL, SUBPROBLEMS_TOTAL_HELP, &[("result", "solved")]);
+        r.counter(SUBPROBLEMS_TOTAL, SUBPROBLEMS_TOTAL_HELP, &[("result", "skipped")]);
+        r.counter(SUBPROBLEM_PANICS, SUBPROBLEM_PANICS_HELP, &[]);
+        for solver in ["l0_iht", "l0_swap", "irls", "lloyd", "l0bnb_nodes"] {
+            r.counter(SOLVER_ITERATIONS, SOLVER_ITERATIONS_HELP, &[("solver", solver)]);
+        }
+        for outcome in ["exact", "neighbor", "miss"] {
+            r.counter(WARMSTART_LOOKUPS, WARMSTART_LOOKUPS_HELP, &[("outcome", outcome)]);
+        }
+        for result in ["ok", "error"] {
+            r.counter(PERSIST_WRITES, PERSIST_WRITES_HELP, &[("result", result)]);
+        }
+        r.histogram(PERSIST_WRITE_SECONDS, PERSIST_WRITE_SECONDS_HELP, &[], LATENCY_BUCKETS);
+        r.counter(CHECKSUM_FAILURES, CHECKSUM_FAILURES_HELP, &[]);
+        r
+    })
+}
+
+// Metric names + help, kept as constants so call sites and tests agree.
+pub const FIT_TOTAL: &str = "backbone_fit_total";
+const FIT_TOTAL_HELP: &str = "Completed backbone fits by learner.";
+pub const STAGE_SECONDS: &str = "backbone_pipeline_stage_seconds_total";
+const STAGE_SECONDS_HELP: &str = "Cumulative wall-clock seconds per pipeline stage.";
+pub const ITERATIONS_TOTAL: &str = "backbone_pipeline_iterations_total";
+const ITERATIONS_TOTAL_HELP: &str = "Backbone iterations executed.";
+pub const SUBPROBLEMS_TOTAL: &str = "backbone_subproblems_total";
+const SUBPROBLEMS_TOTAL_HELP: &str = "Subproblem slots by result (solved / skipped).";
+pub const SUBPROBLEM_PANICS: &str = "backbone_subproblem_panics_total";
+const SUBPROBLEM_PANICS_HELP: &str = "Subproblem worker panics caught by the batch stage.";
+pub const SOLVER_ITERATIONS: &str = "backbone_solver_iterations_total";
+const SOLVER_ITERATIONS_HELP: &str =
+    "Inner solver iterations (IHT / swap rounds / IRLS steps / Lloyd rounds / BnB nodes).";
+pub const WARMSTART_LOOKUPS: &str = "backbone_warmstart_lookups_total";
+const WARMSTART_LOOKUPS_HELP: &str = "Warm-start cache lookups by outcome.";
+pub const PERSIST_WRITES: &str = "backbone_persist_writes_total";
+const PERSIST_WRITES_HELP: &str = "Atomic artifact writes by result.";
+pub const PERSIST_WRITE_SECONDS: &str = "backbone_persist_write_seconds";
+const PERSIST_WRITE_SECONDS_HELP: &str = "Atomic artifact write latency (seconds).";
+pub const CHECKSUM_FAILURES: &str = "backbone_persist_checksum_failures_total";
+const CHECKSUM_FAILURES_HELP: &str = "Embedded-checksum verification failures.";
+
+// ---------------------------------------------------------------------------
+// Instrumentation shorthands (one registry lookup per event; events are
+// per-solve / per-write, never per-inner-iteration)
+// ---------------------------------------------------------------------------
+
+/// Count one completed backbone fit for `learner`.
+pub fn record_fit(learner: &'static str) {
+    registry().counter(FIT_TOTAL, FIT_TOTAL_HELP, &[("learner", learner)]).inc();
+}
+
+/// Accumulate wall-clock seconds into a pipeline stage counter.
+pub fn add_stage_secs(stage: &'static str, secs: f64) {
+    registry().float_counter(STAGE_SECONDS, STAGE_SECONDS_HELP, &[("stage", stage)]).add(secs);
+}
+
+/// Count one backbone iteration.
+pub fn record_iteration() {
+    registry().counter(ITERATIONS_TOTAL, ITERATIONS_TOTAL_HELP, &[]).inc();
+}
+
+/// Count subproblem slots solved / skipped this batch.
+pub fn record_subproblems(solved: u64, skipped: u64) {
+    let r = registry();
+    if solved > 0 {
+        r.counter(SUBPROBLEMS_TOTAL, SUBPROBLEMS_TOTAL_HELP, &[("result", "solved")])
+            .add(solved);
+    }
+    if skipped > 0 {
+        r.counter(SUBPROBLEMS_TOTAL, SUBPROBLEMS_TOTAL_HELP, &[("result", "skipped")])
+            .add(skipped);
+    }
+}
+
+/// Count one caught subproblem worker panic.
+pub fn record_subproblem_panic() {
+    registry().counter(SUBPROBLEM_PANICS, SUBPROBLEM_PANICS_HELP, &[]).inc();
+}
+
+/// Add `n` inner iterations for `solver` (one call per solve — hot loops
+/// accumulate locally and report here once).
+pub fn add_solver_iterations(solver: &'static str, n: u64) {
+    if n > 0 {
+        registry()
+            .counter(SOLVER_ITERATIONS, SOLVER_ITERATIONS_HELP, &[("solver", solver)])
+            .add(n);
+    }
+}
+
+/// Count one warm-start lookup by outcome (`exact` / `neighbor` / `miss`).
+pub fn record_warmstart_lookup(outcome: &'static str) {
+    registry().counter(WARMSTART_LOOKUPS, WARMSTART_LOOKUPS_HELP, &[("outcome", outcome)]).inc();
+}
+
+/// Record one atomic artifact write: latency histogram + result counter.
+pub fn record_persist_write(secs: f64, ok: bool) {
+    let r = registry();
+    r.counter(PERSIST_WRITES, PERSIST_WRITES_HELP, &[("result", if ok { "ok" } else { "error" })])
+        .inc();
+    if ok {
+        r.histogram(PERSIST_WRITE_SECONDS, PERSIST_WRITE_SECONDS_HELP, &[], LATENCY_BUCKETS)
+            .observe(secs);
+    }
+}
+
+/// Count one embedded-checksum verification failure.
+pub fn record_checksum_failure() {
+    registry().counter(CHECKSUM_FAILURES, CHECKSUM_FAILURES_HELP, &[]).inc();
+}
+
+// ---------------------------------------------------------------------------
+// Tracing
+// ---------------------------------------------------------------------------
+
+/// One node of a fit's trace tree: a named span with its wall time,
+/// optional attributes, and nested children.
+#[derive(Debug, Clone, Default)]
+pub struct TraceNode {
+    pub name: String,
+    pub secs: f64,
+    pub attrs: Vec<(String, String)>,
+    pub children: Vec<TraceNode>,
+}
+
+impl TraceNode {
+    /// Direct children's wall time (what the ≤5%-unattributed acceptance
+    /// check sums against the root).
+    pub fn child_secs(&self) -> f64 {
+        self.children.iter().map(|c| c.secs).sum()
+    }
+
+    /// JSON view: `{name, secs, attrs?, children?}` — the `trace` field
+    /// of fit diagnostics and the `POST /fit` response.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::String(self.name.clone()));
+        m.insert("secs".into(), Json::Number(self.secs));
+        if !self.attrs.is_empty() {
+            let mut a = BTreeMap::new();
+            for (k, v) in &self.attrs {
+                a.insert(k.clone(), Json::String(v.clone()));
+            }
+            m.insert("attrs".into(), Json::Object(a));
+        }
+        if !self.children.is_empty() {
+            m.insert(
+                "children".into(),
+                Json::Array(self.children.iter().map(TraceNode::to_json).collect()),
+            );
+        }
+        Json::Object(m)
+    }
+}
+
+struct TracerInner {
+    /// Open spans, innermost last; `stack[0]` is the root. Each entry
+    /// pairs the accumulating node with its start instant.
+    stack: Vec<(TraceNode, Instant)>,
+}
+
+/// Per-fit trace builder. Enabled tracers own a span stack behind a
+/// mutex (the pipeline drives stages from one thread; the mutex makes
+/// misuse safe rather than fast). A disabled tracer is `inner: None`, so
+/// every call is a tag check and a return — tracing off means off.
+pub struct Tracer {
+    inner: Option<Mutex<TracerInner>>,
+}
+
+impl Tracer {
+    /// An enabled tracer whose root span (`root_name`) starts now.
+    pub fn enabled(root_name: &str) -> Tracer {
+        Tracer {
+            inner: Some(Mutex::new(TracerInner {
+                stack: vec![(
+                    TraceNode { name: root_name.to_string(), ..Default::default() },
+                    Instant::now(),
+                )],
+            })),
+        }
+    }
+
+    /// The no-op tracer.
+    pub fn disabled() -> Tracer {
+        Tracer { inner: None }
+    }
+
+    /// Build from a flag: `Tracer::new("fit", params.trace)`.
+    pub fn new(root_name: &str, on: bool) -> Tracer {
+        if on {
+            Self::enabled(root_name)
+        } else {
+            Self::disabled()
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    fn lock(&self) -> Option<MutexGuard<'_, TracerInner>> {
+        self.inner.as_ref().map(|m| m.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Open a nested span; the returned guard closes it (recording wall
+    /// time into the parent) on drop. See also [`span!`].
+    pub fn span(&self, name: &str) -> SpanGuard<'_> {
+        if let Some(mut inner) = self.lock() {
+            inner.stack.push((
+                TraceNode { name: name.to_string(), ..Default::default() },
+                Instant::now(),
+            ));
+            SpanGuard { tracer: Some(self) }
+        } else {
+            SpanGuard { tracer: None }
+        }
+    }
+
+    /// Attach an attribute to the innermost open span.
+    pub fn attr(&self, key: &str, value: impl ToString) {
+        if let Some(mut inner) = self.lock() {
+            if let Some((node, _)) = inner.stack.last_mut() {
+                node.attrs.push((key.to_string(), value.to_string()));
+            }
+        }
+    }
+
+    /// Add an already-timed child to the innermost open span — how the
+    /// batch stage attaches per-slot subproblem wall times measured by
+    /// the workers themselves.
+    pub fn child(&self, name: &str, secs: f64, attrs: &[(&str, String)]) {
+        if let Some(mut inner) = self.lock() {
+            if let Some((node, _)) = inner.stack.last_mut() {
+                node.children.push(TraceNode {
+                    name: name.to_string(),
+                    secs,
+                    attrs: attrs.iter().map(|(k, v)| (k.to_string(), v.clone())).collect(),
+                    children: Vec::new(),
+                });
+            }
+        }
+    }
+
+    fn close_top(inner: &mut TracerInner) {
+        if inner.stack.len() > 1 {
+            let (mut node, start) = inner.stack.pop().expect("stack len checked");
+            node.secs = start.elapsed().as_secs_f64();
+            if let Some((parent, _)) = inner.stack.last_mut() {
+                parent.children.push(node);
+            }
+        }
+    }
+
+    /// Close the root span and return the finished tree (`None` when
+    /// disabled). Any spans left open by an early error exit are closed
+    /// with the time observed so far, so a partial fit still traces.
+    pub fn finish(self) -> Option<TraceNode> {
+        let inner = self.inner?;
+        let mut inner = inner.into_inner().unwrap_or_else(|e| e.into_inner());
+        while inner.stack.len() > 1 {
+            Self::close_top(&mut inner);
+        }
+        let (mut root, start) = inner.stack.pop()?;
+        root.secs = start.elapsed().as_secs_f64();
+        Some(root)
+    }
+}
+
+/// RAII guard of one open span; closes it on drop.
+pub struct SpanGuard<'a> {
+    tracer: Option<&'a Tracer>,
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(tracer) = self.tracer {
+            if let Some(mut inner) = tracer.lock() {
+                Tracer::close_top(&mut inner);
+            }
+        }
+    }
+}
+
+/// `span!(tracer, "screen")` — open a span that closes at end of the
+/// enclosing scope.
+#[macro_export]
+macro_rules! span {
+    ($tracer:expr, $name:expr) => {
+        let _span_guard = $tracer.span($name);
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Structured logging
+// ---------------------------------------------------------------------------
+
+/// Log severity, least to most verbose.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Level> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "off" | "none" => None,
+            _ => Some(Level::Warn),
+        }
+    }
+}
+
+/// The active `BACKBONE_LOG` threshold, parsed once per process
+/// (default `warn`; `off` disables logging entirely → 0).
+fn log_threshold() -> u8 {
+    static THRESHOLD: OnceLock<u8> = OnceLock::new();
+    *THRESHOLD.get_or_init(|| match std::env::var("BACKBONE_LOG") {
+        Ok(v) => Level::parse(&v).map(|l| l as u8).unwrap_or(0),
+        Err(_) => Level::Warn as u8,
+    })
+}
+
+/// Is `level` emitted under the active filter? After the first call this
+/// is one relaxed atomic load (the `OnceLock` fast path) plus a compare.
+pub fn log_enabled(level: Level) -> bool {
+    (level as u8) <= log_threshold()
+}
+
+/// Monotonic request id for the serve layer's log lines.
+pub fn next_request_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Emit one structured JSON log line to stderr:
+/// `{"ts":…,"level":…,"event":…,<fields>}` — compact, one line, ordered
+/// fields. No-op when `level` is filtered out.
+pub fn log(level: Level, event: &str, fields: &[(&str, Json)]) {
+    if !log_enabled(level) {
+        return;
+    }
+    let ts = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0);
+    let mut line = String::with_capacity(128);
+    line.push_str("{\"ts\":");
+    line.push_str(&format!("{ts:.3}"));
+    line.push_str(",\"level\":\"");
+    line.push_str(level.name());
+    line.push_str("\",\"event\":\"");
+    line.push_str(&escape_json(event));
+    line.push('"');
+    for (k, v) in fields {
+        line.push_str(",\"");
+        line.push_str(&escape_json(k));
+        line.push_str("\":");
+        line.push_str(&v.to_string_compact());
+    }
+    line.push('}');
+    eprintln!("{line}");
+}
+
+fn escape_json(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates_and_handles_edges() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 4.0);
+        assert_eq!(percentile(&xs, 0.5), 2.5);
+        assert!((percentile(&xs, 0.25) - 1.75).abs() < 1e-12);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn counter_gauge_float_roundtrip() {
+        let r = MetricsRegistry::default();
+        let c = r.counter("t_total", "help", &[("k", "v")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same name + labels → same underlying series.
+        assert_eq!(r.counter("t_total", "help", &[("k", "v")]).get(), 5);
+        let g = r.gauge("t_gauge", "help", &[]);
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        let f = r.float_counter("t_secs_total", "help", &[]);
+        f.add(0.25);
+        f.add(0.5);
+        assert!((f.get() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_quantile_interpolates() {
+        let r = MetricsRegistry::default();
+        let h = r.histogram("t_lat", "help", &[], &[0.1, 1.0, 10.0]);
+        for v in [0.05, 0.5, 0.5, 5.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 6.05).abs() < 1e-12);
+        let text = r.render();
+        assert!(text.contains("t_lat_bucket{le=\"0.1\"} 1"), "{text}");
+        assert!(text.contains("t_lat_bucket{le=\"1\"} 3"), "{text}");
+        assert!(text.contains("t_lat_bucket{le=\"10\"} 4"), "{text}");
+        assert!(text.contains("t_lat_bucket{le=\"+Inf\"} 4"), "{text}");
+        assert!(text.contains("t_lat_count 4"), "{text}");
+        let p50 = h.quantile(0.5);
+        assert!(p50 > 0.1 && p50 <= 1.0, "p50 inside the (0.1, 1] bucket, got {p50}");
+        assert!(h.quantile(1.0) <= 10.0);
+        let empty = r.histogram("t_empty", "help", &[], &[1.0]);
+        assert!(empty.quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn exposition_golden_format_with_help_type_and_escaping() {
+        let r = MetricsRegistry::default();
+        r.counter("demo_total", "A demo counter.", &[("path", "a\\b\"c\nd")]).add(3);
+        r.gauge("demo_gauge", "A demo gauge.", &[]).set(1.5);
+        let text = r.render();
+        let expected_counter = "# HELP demo_total A demo counter.\n\
+                                # TYPE demo_total counter\n\
+                                demo_total{path=\"a\\\\b\\\"c\\nd\"} 3\n";
+        assert!(text.contains(expected_counter), "golden mismatch:\n{text}");
+        assert!(text.contains("# TYPE demo_gauge gauge\ndemo_gauge 1.5\n"), "{text}");
+        // Sorted family order: gauge (g…) before counter (t…)? BTreeMap
+        // orders by name — demo_gauge < demo_total.
+        let gi = text.find("demo_gauge").unwrap();
+        let ci = text.find("demo_total").unwrap();
+        assert!(gi < ci, "families must render in sorted name order");
+    }
+
+    #[test]
+    fn metric_value_parses_rendered_series() {
+        let r = MetricsRegistry::default();
+        r.counter("x_total", "h", &[("route", "fit"), ("code", "200")]).add(7);
+        r.counter("y_total", "h", &[]).add(2);
+        let text = r.render();
+        assert_eq!(metric_value(&text, "x_total", &[("route", "fit")]), Some(7.0));
+        assert_eq!(
+            metric_value(&text, "x_total", &[("code", "200"), ("route", "fit")]),
+            Some(7.0)
+        );
+        assert_eq!(metric_value(&text, "y_total", &[]), Some(2.0));
+        assert_eq!(metric_value(&text, "x_total", &[("route", "predict")]), None);
+        assert_eq!(metric_value(&text, "missing_total", &[]), None);
+    }
+
+    #[test]
+    fn global_registry_preregisters_the_fixed_series() {
+        let text = registry().render();
+        for needle in [
+            "backbone_fit_total{learner=\"sparse_regression\"}",
+            "backbone_pipeline_stage_seconds_total{stage=\"screen\"}",
+            "backbone_pipeline_stage_seconds_total{stage=\"reduced\"}",
+            "backbone_subproblems_total{result=\"solved\"}",
+            "backbone_solver_iterations_total{solver=\"l0_iht\"}",
+            "backbone_warmstart_lookups_total{outcome=\"exact\"}",
+            "backbone_persist_writes_total{result=\"ok\"}",
+            "backbone_persist_write_seconds_bucket",
+            "backbone_persist_checksum_failures_total",
+        ] {
+            assert!(text.contains(needle), "missing preregistered series {needle}");
+        }
+    }
+
+    #[test]
+    fn tracer_builds_nested_tree_and_disabled_is_noop() {
+        let t = Tracer::enabled("fit");
+        {
+            let _outer = t.span("screen");
+            t.attr("entities", 100);
+        }
+        {
+            let _outer = t.span("iteration");
+            t.child("subproblem", 0.25, &[("slot", "0".to_string())]);
+            let _inner = t.span("aggregate");
+        }
+        let root = t.finish().expect("enabled tracer yields a tree");
+        assert_eq!(root.name, "fit");
+        assert_eq!(root.children.len(), 2);
+        assert_eq!(root.children[0].name, "screen");
+        assert_eq!(root.children[0].attrs, vec![("entities".to_string(), "100".to_string())]);
+        let iter = &root.children[1];
+        assert_eq!(iter.children[0].name, "subproblem");
+        assert_eq!(iter.children[0].secs, 0.25);
+        assert_eq!(iter.children[1].name, "aggregate");
+        assert!(root.secs >= root.children[0].secs);
+        let json = root.to_json();
+        assert_eq!(json.get("name").and_then(Json::as_str), Some("fit"));
+        assert!(json.get("children").is_some());
+
+        let off = Tracer::disabled();
+        {
+            span!(off, "ignored");
+            off.attr("k", "v");
+            off.child("c", 1.0, &[]);
+        }
+        assert!(off.finish().is_none());
+        assert!(!Tracer::new("fit", false).is_enabled());
+        assert!(Tracer::new("fit", true).is_enabled());
+    }
+
+    #[test]
+    fn tracer_finish_closes_leaked_spans() {
+        let t = Tracer::enabled("fit");
+        let guard = t.span("left_open");
+        std::mem::forget(guard);
+        let root = t.finish().unwrap();
+        assert_eq!(root.children.len(), 1);
+        assert_eq!(root.children[0].name, "left_open");
+    }
+
+    #[test]
+    fn log_level_parses_and_filters() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("off"), None);
+        assert_eq!(Level::parse("garbage"), Some(Level::Warn));
+        let a = next_request_id();
+        let b = next_request_id();
+        assert!(b > a, "request ids are monotonic");
+    }
+
+    #[test]
+    fn escape_json_handles_control_and_quote() {
+        assert_eq!(escape_json("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape_json("\u{1}"), "\\u0001");
+    }
+}

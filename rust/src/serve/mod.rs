@@ -45,7 +45,7 @@ pub use config::{parse_model_spec, validate_model_name, ServeConfig, ServeError}
 pub use config::ServeConfigFields;
 
 use crate::backbone::resolved_threads;
-use crate::bench_support::percentile;
+use crate::obs::percentile;
 use crate::json::Json;
 use crate::persist::LoadedModel;
 use crate::warmstart::WarmStartStore;
@@ -356,6 +356,211 @@ impl ServerState {
         m.insert("threads".into(), Json::Number(self.threads as f64));
         Json::Object(m)
     }
+
+    /// The server-derived half of `GET /metrics`: Prometheus text
+    /// rendered straight from the same `ServerStats`/`RouteStats`
+    /// atomics `/stats` reads, so the two endpoints reconcile exactly
+    /// (the chaos audit and the serve tests assert this). The
+    /// process-global `obs::registry()` half is concatenated by the
+    /// route handler.
+    pub fn metrics_text(&self) -> String {
+        use crate::obs::{write_help_type, write_series};
+        let mut out = String::with_capacity(4096);
+        let no_labels: &[(String, String)] = &[];
+
+        let server_counters: &[(&str, &str, u64)] = &[
+            (
+                "backbone_http_requests_total",
+                "Requests dispatched to any route.",
+                self.stats.requests.load(Ordering::Relaxed),
+            ),
+            (
+                "backbone_http_failures_total",
+                "Requests answered with a non-2xx status.",
+                self.stats.failures.load(Ordering::Relaxed),
+            ),
+            (
+                "backbone_http_connections_total",
+                "Connections that delivered at least one parseable request.",
+                self.stats.connections.load(Ordering::Relaxed),
+            ),
+            (
+                "backbone_http_connections_rejected_total",
+                "Connections turned away at the max_connections admission gate.",
+                self.stats.rejected_connections.load(Ordering::Relaxed),
+            ),
+            (
+                "backbone_serve_panics_caught_total",
+                "Handler/solver panics caught and converted to structured errors.",
+                self.stats.panics_caught.load(Ordering::Relaxed),
+            ),
+            (
+                "backbone_warmstart_store_save_failures_total",
+                "Warm-start store write-through failures during POST /fit.",
+                self.stats.store_save_failures.load(Ordering::Relaxed),
+            ),
+        ];
+        for (name, help, value) in server_counters {
+            write_help_type(&mut out, name, help, "counter");
+            write_series(&mut out, name, no_labels, *value as f64);
+        }
+
+        write_help_type(
+            &mut out,
+            "backbone_route_requests_total",
+            "Requests routed to each accounted route (attempts, including 4xx).",
+            "counter",
+        );
+        let route_label = |route: &str| vec![("route".to_string(), route.to_string())];
+        let routes: &[(&str, &RouteStats)] =
+            &[("fit", &self.stats.fit), ("predict", &self.stats.predict)];
+        for (route, stats) in routes {
+            write_series(
+                &mut out,
+                "backbone_route_requests_total",
+                &route_label(route),
+                stats.requests.load(Ordering::Relaxed) as f64,
+            );
+        }
+        write_help_type(
+            &mut out,
+            "backbone_route_failures_total",
+            "Requests per route answered with a non-2xx status.",
+            "counter",
+        );
+        for (route, stats) in routes {
+            write_series(
+                &mut out,
+                "backbone_route_failures_total",
+                &route_label(route),
+                stats.failures.load(Ordering::Relaxed) as f64,
+            );
+        }
+        write_help_type(
+            &mut out,
+            "backbone_route_units_total",
+            "Work units completed per route: rows predicted / models fitted.",
+            "counter",
+        );
+        for (route, stats) in routes {
+            write_series(
+                &mut out,
+                "backbone_route_units_total",
+                &route_label(route),
+                stats.units.load(Ordering::Relaxed) as f64,
+            );
+        }
+
+        // Per-model series render under the registry lock (BTreeMap
+        // order, so the exposition is deterministic).
+        let registry = self.registry.lock().unwrap();
+        let models_loaded = registry.len();
+        let swaps = registry.swaps();
+        let mut model_rows: Vec<(Vec<(String, String)>, u64, u64, u64, u64)> = Vec::new();
+        for (id, entry) in registry.iter() {
+            model_rows.push((
+                vec![("model".to_string(), id.clone())],
+                entry.stats.requests.load(Ordering::Relaxed),
+                entry.stats.failures.load(Ordering::Relaxed),
+                entry.stats.units.load(Ordering::Relaxed),
+                entry.version,
+            ));
+        }
+        drop(registry);
+        write_help_type(
+            &mut out,
+            "backbone_model_requests_total",
+            "Predict requests per model (attempts, including 4xx).",
+            "counter",
+        );
+        for (labels, requests, ..) in &model_rows {
+            write_series(&mut out, "backbone_model_requests_total", labels, *requests as f64);
+        }
+        write_help_type(
+            &mut out,
+            "backbone_model_failures_total",
+            "Predict requests per model answered with a non-2xx status.",
+            "counter",
+        );
+        for (labels, _, failures, ..) in &model_rows {
+            write_series(&mut out, "backbone_model_failures_total", labels, *failures as f64);
+        }
+        write_help_type(
+            &mut out,
+            "backbone_model_rows_predicted_total",
+            "Rows predicted per model.",
+            "counter",
+        );
+        for (labels, _, _, units, _) in &model_rows {
+            write_series(&mut out, "backbone_model_rows_predicted_total", labels, *units as f64);
+        }
+        write_help_type(
+            &mut out,
+            "backbone_model_version",
+            "Current version of each registered model (bumped on hot swap).",
+            "gauge",
+        );
+        for (labels, .., version) in &model_rows {
+            write_series(&mut out, "backbone_model_version", labels, *version as f64);
+        }
+
+        let gauges: &[(&str, &str, f64)] = &[
+            (
+                "backbone_models_loaded",
+                "Models currently in the registry.",
+                models_loaded as f64,
+            ),
+            (
+                "backbone_http_open_connections",
+                "Connection handlers currently live.",
+                self.open_connections.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "backbone_fits_in_flight",
+                "Online fits currently executing.",
+                self.fits_in_flight.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "backbone_predicts_in_flight",
+                "Predict requests currently executing.",
+                self.predicts_in_flight.load(Ordering::Relaxed) as f64,
+            ),
+            (
+                "backbone_serve_threads",
+                "Resolved solver thread count used by online fits.",
+                self.threads as f64,
+            ),
+            (
+                "backbone_serve_uptime_seconds",
+                "Seconds since the server started.",
+                self.started.elapsed().as_secs_f64(),
+            ),
+        ];
+        for (name, help, value) in gauges {
+            write_help_type(&mut out, name, help, "gauge");
+            write_series(&mut out, name, no_labels, *value);
+        }
+        write_help_type(
+            &mut out,
+            "backbone_model_swaps_total",
+            "Lifetime hot swaps across the registry.",
+            "counter",
+        );
+        write_series(&mut out, "backbone_model_swaps_total", no_labels, swaps as f64);
+        write_help_type(
+            &mut out,
+            "backbone_build_info",
+            "Constant 1, labeled with the active linear-algebra backend.",
+            "gauge",
+        );
+        write_series(
+            &mut out,
+            "backbone_build_info",
+            &[("backend".to_string(), crate::linalg::backend_name().to_string())],
+            1.0,
+        );
+        out
+    }
 }
 
 /// Structured JSON error body shared by every non-2xx path.
@@ -571,9 +776,34 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState, router: &Router
         if served == 0 {
             state.stats.connections.fetch_add(1, Ordering::Relaxed);
         }
+        let request_id = crate::obs::next_request_id();
+        let request_watch = crate::util::Stopwatch::start();
         let (outcome, panicked) = dispatch_or_500(router, &request, state);
         if outcome.failed() {
             state.stats.failures.fetch_add(1, Ordering::Relaxed);
+        }
+        // Structured request log: one JSON line per served request on
+        // stderr, filtered by BACKBONE_LOG (successes at info, failures
+        // at warn). The disabled path is one relaxed load.
+        {
+            use crate::obs::{log, log_enabled, Level};
+            let level = if outcome.failed() { Level::Warn } else { Level::Info };
+            if log_enabled(level) {
+                log(
+                    level,
+                    "request",
+                    &[
+                        ("request_id", Json::Number(request_id as f64)),
+                        ("method", Json::String(request.method.clone())),
+                        ("route", Json::String(request.path.clone())),
+                        ("status", Json::Number(outcome.status as f64)),
+                        (
+                            "duration_ms",
+                            Json::Number(request_watch.elapsed_secs() * 1e3),
+                        ),
+                    ],
+                );
+            }
         }
         served += 1;
         // A panicked handler may have left no coherent request framing;
@@ -592,8 +822,15 @@ fn handle_connection(mut stream: TcpStream, state: &ServerState, router: &Router
             idle_timeout_secs: cfg.idle_timeout().as_secs(),
             extra_headers: &extra,
         };
-        if write_json(&mut stream, outcome.status, outcome.reason, &outcome.body, &opts)
-            .is_err()
+        if http::write_response(
+            &mut stream,
+            outcome.status,
+            outcome.reason,
+            outcome.content_type,
+            outcome.body.as_bytes(),
+            &opts,
+        )
+        .is_err()
             || !keep
         {
             return;

@@ -38,6 +38,9 @@ pub struct Outcome {
     pub reason: &'static str,
     pub body: String,
     pub retry_after_secs: Option<u64>,
+    /// Response `Content-Type`. Everything is JSON except `GET /metrics`,
+    /// which serves the Prometheus text exposition format.
+    pub content_type: &'static str,
 }
 
 impl Outcome {
@@ -47,11 +50,29 @@ impl Outcome {
             reason: "OK",
             body: body.to_string_compact(),
             retry_after_secs: None,
+            content_type: "application/json",
+        }
+    }
+
+    /// A `200` with a non-JSON body (the `/metrics` exposition text).
+    pub fn text(content_type: &'static str, body: String) -> Outcome {
+        Outcome {
+            status: 200,
+            reason: "OK",
+            body,
+            retry_after_secs: None,
+            content_type,
         }
     }
 
     pub fn error(status: u16, reason: &'static str, message: &str) -> Outcome {
-        Outcome { status, reason, body: error_body(message), retry_after_secs: None }
+        Outcome {
+            status,
+            reason,
+            body: error_body(message),
+            retry_after_secs: None,
+            content_type: "application/json",
+        }
     }
 
     /// Backpressure: `429` with a `Retry-After` header and a structured
@@ -69,6 +90,7 @@ impl Outcome {
             reason: "Too Many Requests",
             body: Json::Object(m).to_string_compact(),
             retry_after_secs: Some(retry_after_secs),
+            content_type: "application/json",
         }
     }
 

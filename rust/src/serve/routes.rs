@@ -4,6 +4,7 @@
 //! |-----------------------------|---------------------------------------------|
 //! | `GET /healthz`              | liveness + default-model identity           |
 //! | `GET /stats`                | `backbone-serve-stats/v1` counters          |
+//! | `GET /metrics`              | Prometheus text exposition                  |
 //! | `GET /models`               | `backbone-models/v1` registry listing       |
 //! | `POST /predict`             | batch inference on the default model        |
 //! | `POST /models/:id/predict`  | batch inference on a named/fitted model     |
@@ -39,6 +40,7 @@ pub fn standard_router() -> Router {
     router
         .register(Box::new(Healthz))
         .register(Box::new(Stats))
+        .register(Box::new(Metrics))
         .register(Box::new(ModelsList))
         .register(Box::new(PredictDefault))
         .register(Box::new(ModelPredict))
@@ -126,6 +128,30 @@ impl Route for Stats {
 
     fn handle(&self, _req: &Request, _params: &PathParams, state: &ServerState) -> Outcome {
         Outcome::ok(state.stats_json())
+    }
+}
+
+// ---------------------------------------------------------------- metrics
+
+/// Prometheus text exposition (format 0.0.4): the process-global
+/// `obs::registry()` (pipeline/solver/warm-start/persist series)
+/// concatenated with the server-derived section rendered from the same
+/// atomics `/stats` reads. Like `/healthz` and `/stats`, scrapes stay
+/// out of route-level counters.
+struct Metrics;
+
+impl Route for Metrics {
+    fn method(&self) -> &'static str {
+        "GET"
+    }
+
+    fn pattern(&self) -> &'static str {
+        "/metrics"
+    }
+
+    fn handle(&self, _req: &Request, _params: &PathParams, state: &ServerState) -> Outcome {
+        let body = format!("{}{}", crate::obs::registry().render(), state.metrics_text());
+        Outcome::text("text/plain; version=0.0.4; charset=utf-8", body)
     }
 }
 
@@ -507,6 +533,10 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
     let m_sub = doc.get("m").and_then(Json::as_usize).unwrap_or(5);
     let seed = doc.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64;
     let warm_wanted = doc.get("warm").and_then(Json::as_bool).unwrap_or(true);
+    // `trace: true` opts this fit into span recording; the nested trace
+    // tree comes back in the response. Off by default — tracing is
+    // per-fit, never ambient.
+    let trace_wanted = doc.get("trace").and_then(Json::as_bool).unwrap_or(false);
     // Client deadline (0 is legal: an already-expired budget, useful for
     // "cache hit or nothing" probes). The effective solve budget is the
     // tighter of the client deadline and the server's --fit-timeout.
@@ -569,6 +599,7 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
             w.support.len(),
             latency_us,
             warm_info,
+            None, // cache hit: nothing ran, nothing to trace
             state,
         ));
     }
@@ -596,7 +627,8 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
         .num_subproblems(m_sub)
         .max_nonzeros(k)
         .threads(state.threads)
-        .seed(seed);
+        .seed(seed)
+        .trace(trace_wanted);
     if let Some(w) = warm_beta {
         builder = builder.warm_start(w);
     }
@@ -644,6 +676,7 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
             reason: "Service Unavailable",
             body: Json::Object(m).to_string_compact(),
             retry_after_secs: Some(retry),
+            content_type: "application/json",
         };
     }
 
@@ -675,6 +708,11 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
     let objective = model.objective;
     let backbone_size =
         bb.last_diagnostics.as_ref().map(|d| d.backbone_size).unwrap_or(support.len());
+    let trace_json = bb
+        .last_diagnostics
+        .as_ref()
+        .and_then(|d| d.trace.as_ref())
+        .map(crate::obs::TraceNode::to_json);
     let model_id = state
         .registry
         .lock()
@@ -689,10 +727,12 @@ fn fit_inner(request: &Request, state: &ServerState) -> Outcome {
         backbone_size,
         latency_us,
         warm_info,
+        trace_json,
         state,
     ))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn fit_response(
     model_id: String,
     support: &[usize],
@@ -700,6 +740,7 @@ fn fit_response(
     backbone_size: usize,
     latency_us: u64,
     mut warm_info: BTreeMap<String, Json>,
+    trace: Option<Json>,
     state: &ServerState,
 ) -> Json {
     warm_info.insert(
@@ -716,5 +757,8 @@ fn fit_response(
     m.insert("backbone_size".into(), Json::Number(backbone_size as f64));
     m.insert("latency_us".into(), Json::Number(latency_us as f64));
     m.insert("warm".into(), Json::Object(warm_info));
+    if let Some(t) = trace {
+        m.insert("trace".into(), t);
+    }
     Json::Object(m)
 }

@@ -40,7 +40,7 @@
 use super::http::{parse_response, read_response};
 use super::{ServeConfig, Server};
 use crate::backbone::Predict;
-use crate::bench_support::percentile;
+use crate::obs::percentile;
 use crate::json::Json;
 use crate::linalg::Matrix;
 use crate::persist::{LoadedModel, ModelArtifact, Provenance};
@@ -243,6 +243,10 @@ pub struct ChaosStats {
     pub store_intact: bool,
     /// Server counters matched the fired-fault ground truth exactly.
     pub counters_reconciled: bool,
+    /// The `/metrics` exposition told the same story: its counters also
+    /// matched the fired-fault ground truth (it renders from the same
+    /// atomics as `/stats`, so any divergence is a bug in the renderer).
+    pub metrics_reconciled: bool,
     /// Human-readable reconciliation mismatches (empty on success).
     pub mismatches: Vec<String>,
 }
@@ -253,6 +257,7 @@ impl ChaosStats {
         self.server_alive
             && self.store_intact
             && self.counters_reconciled
+            && self.metrics_reconciled
             && self.unstructured_errors == 0
             && self.fit_io_failures == 0
     }
@@ -283,6 +288,10 @@ impl ChaosStats {
         m.insert(
             "counters_reconciled".to_string(),
             Json::Bool(self.counters_reconciled),
+        );
+        m.insert(
+            "metrics_reconciled".to_string(),
+            Json::Bool(self.metrics_reconciled),
         );
         m.insert(
             "mismatches".to_string(),
@@ -1173,6 +1182,50 @@ fn run_chaos(model: LoadedModel, cfg: &SelfTestConfig) -> Result<SelfTestReport>
             chaos.mismatches.push("/stats unreachable after the drill".into());
         }
         chaos.counters_reconciled = chaos.mismatches.is_empty();
+
+        // The Prometheus exposition must tell the same story as /stats:
+        // it renders from the same atomics, so the fired-fault ground
+        // truth reconciles there too. Only server-derived series are
+        // audited — the process-global registry is shared across
+        // in-process tests and would make exact equality flaky.
+        let get_text = |path: &str| -> Option<String> {
+            let request = format!(
+                "GET {path} HTTP/1.1\r\nHost: chaos\r\nConnection: close\r\n\r\n"
+            );
+            let resp = exchange(addr, request.as_bytes()).ok()?;
+            let (status, body) = parse_response(&resp).ok()?;
+            if status != 200 {
+                return None;
+            }
+            std::str::from_utf8(&body).ok().map(str::to_string)
+        };
+        let stats_mismatches = chaos.mismatches.len();
+        if let Some(text) = get_text("/metrics") {
+            let metric = |name: &str, labels: &[(&str, &str)]| {
+                crate::obs::metric_value(&text, name, labels).map(|v| v as u64)
+            };
+            check(
+                &mut chaos.mismatches,
+                "metrics backbone_serve_panics_caught_total vs fired worker panics",
+                metric("backbone_serve_panics_caught_total", &[]),
+                chaos.injected_worker_panics,
+            );
+            check(
+                &mut chaos.mismatches,
+                "metrics backbone_warmstart_store_save_failures_total vs fired write failures",
+                metric("backbone_warmstart_store_save_failures_total", &[]),
+                chaos.injected_write_failures,
+            );
+            check(
+                &mut chaos.mismatches,
+                "metrics backbone_route_failures_total{route=fit} vs panics+timeouts",
+                metric("backbone_route_failures_total", &[("route", "fit")]),
+                chaos.fit_panics + chaos.fit_timeouts,
+            );
+        } else {
+            chaos.mismatches.push("/metrics unreachable after the drill".into());
+        }
+        chaos.metrics_reconciled = chaos.mismatches.len() == stats_mismatches;
 
         // Atomic-write contract: whatever is on disk (if anything got
         // written at all) must reload checksum-clean.

@@ -590,7 +590,11 @@ pub fn l0_fit_with(x: &Matrix, y: &[f64], cfg: &L0Config, ws: &mut L0Workspace) 
     }
     let mut support: Vec<usize> = Vec::new();
     let mut stable = 0;
+    // Iteration counts accumulate locally and post to the metrics
+    // registry once per solve — the loop body never touches an atomic.
+    let mut iht_iters = 0u64;
     for _ in 0..cfg.max_iter {
+        iht_iters += 1;
         // gradient of ½‖y−Xβ‖² + ½λ₂‖β‖² : −Xᵀ(y−Xβ) + λ₂β
         x.residual_into(&ws.beta, y, 0.0, &mut ws.resid); // r = y − Xβ, fused
         x.matvec_t_into(&ws.resid, &mut ws.grad); // = Xᵀ r
@@ -634,10 +638,12 @@ pub fn l0_fit_with(x: &Matrix, y: &[f64], cfg: &L0Config, ws: &mut L0Workspace) 
     // features; try swapping the weakest support member for the strongest
     // excluded candidate; keep if the polished objective improves. Each
     // trial is evaluated incrementally against the cached Gram system.
+    let mut swap_rounds = 0u64;
     for _ in 0..cfg.swap_rounds {
         if support.is_empty() || support.len() >= p {
             break;
         }
+        swap_rounds += 1;
         x.residual_into(&beta, y, intercept, &mut ws.resid);
         x.matvec_t_into(&ws.resid, &mut ws.grad);
         let corr = &ws.grad;
@@ -694,6 +700,9 @@ pub fn l0_fit_with(x: &Matrix, y: &[f64], cfg: &L0Config, ws: &mut L0Workspace) 
             break; // local optimum
         }
     }
+
+    crate::obs::add_solver_iterations("l0_iht", iht_iters);
+    crate::obs::add_solver_iterations("l0_swap", swap_rounds);
 
     // Definition-based objective of the returned model (one fused pass).
     x.residual_into(&beta, y, intercept, &mut ws.resid);

@@ -199,6 +199,7 @@ fn lloyd(
             break;
         }
     }
+    crate::obs::add_solver_iterations("lloyd", iterations as u64);
     // Final assignment + inertia.
     let cn = centroids.row_sq_norms();
     let mut inertia = 0.0;

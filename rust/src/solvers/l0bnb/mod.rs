@@ -224,6 +224,7 @@ pub fn l0bnb_solve(x: &Matrix, y: &[f64], cfg: &L0BnbConfig, budget: &Budget) ->
                   lower_bound: f64,
                   status: SolveStatus,
                   nodes: usize| {
+        crate::obs::add_solver_iterations("l0bnb_nodes", nodes as u64);
         let (beta_s, _) = cache.ridge_objective(&support, cfg.lambda2);
         let mut beta = vec![0.0; p];
         let mut intercept = y_mean;

@@ -107,7 +107,11 @@ pub fn logistic_fit_with(
     }
     let mut nll = nll_from_scores(y, &ws.z) + 0.5 * ridge * dot(&beta, &beta);
 
+    // Newton-step count accumulates locally; posted to the metrics
+    // registry once per solve on every exit path below.
+    let mut irls_steps = 0u64;
     for _ in 0..max_newton {
+        irls_steps += 1;
         // Gradient and Hessian of the (p+1)-dim problem (intercept last),
         // accumulated into reusable workspace buffers; the intercept
         // cross-terms are fused into the per-row triangle update.
@@ -170,6 +174,7 @@ pub fn logistic_fit_with(
                 nll = cand_nll;
                 improved = true;
                 if delta < 1e-10 * (1.0 + nll.abs()) {
+                    crate::obs::add_solver_iterations("irls", irls_steps);
                     return (beta, b0, nll);
                 }
                 break;
@@ -180,6 +185,7 @@ pub fn logistic_fit_with(
             break; // converged (or stuck) — Newton step no longer helps
         }
     }
+    crate::obs::add_solver_iterations("irls", irls_steps);
     (beta, b0, nll)
 }
 

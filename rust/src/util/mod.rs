@@ -205,6 +205,13 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
 /// can force this call to fail (before anything touches the filesystem),
 /// which is how the chaos harness proves callers survive write failures.
 pub fn atomic_write(path: &str, contents: &str) -> std::io::Result<()> {
+    let watch = Stopwatch::start();
+    let result = atomic_write_inner(path, contents);
+    crate::obs::record_persist_write(watch.elapsed_secs(), result.is_ok());
+    result
+}
+
+fn atomic_write_inner(path: &str, contents: &str) -> std::io::Result<()> {
     if crate::fault::fire(crate::fault::FaultPoint::WriteFail) {
         return Err(std::io::Error::other("injected write failure (fault-inject)"));
     }
@@ -291,6 +298,7 @@ pub fn verify_checksum(doc: &Json) -> ChecksumState {
     if stored == computed {
         ChecksumState::Valid
     } else {
+        crate::obs::record_checksum_failure();
         ChecksumState::Mismatch { stored: stored.to_string(), computed }
     }
 }

@@ -343,7 +343,10 @@ impl WarmStartStore {
                 best = Some(candidate);
             }
         }
-        let (d2, _, idx) = best?;
+        let Some((d2, _, idx)) = best else {
+            crate::obs::record_warmstart_lookup("miss");
+            return None;
+        };
         let tick = self.tick;
         self.tick += 1;
         let entry = &mut self.entries[idx];
@@ -355,6 +358,7 @@ impl WarmStartStore {
             }
         }
         let distance = d2.sqrt();
+        crate::obs::record_warmstart_lookup(if distance == 0.0 { "exact" } else { "neighbor" });
         Some(WarmStart {
             beta,
             support: entry.support.clone(),

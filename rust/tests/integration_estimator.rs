@@ -282,3 +282,92 @@ fn diagnostics_to_json_is_machine_readable() {
         assert_eq!(js.get("backbone_size").and_then(Json::as_usize), Some(it.backbone_size));
     }
 }
+
+// ---------------------------------------------------------------------------
+// Tracing: opt-in span trees that account for the fit's wall time
+// ---------------------------------------------------------------------------
+
+#[test]
+fn traced_fit_builds_a_trace_tree_that_accounts_for_wall_time() {
+    let data = sr_data(21);
+    let mut bb = Backbone::sparse_regression()
+        .alpha(0.5)
+        .beta(0.5)
+        .num_subproblems(3)
+        .max_nonzeros(3)
+        .seed(4)
+        .trace(true)
+        .build()
+        .unwrap();
+    let watch = std::time::Instant::now();
+    bb.fit(&data.x, &data.y).unwrap();
+    let wall = watch.elapsed().as_secs_f64();
+
+    let d = bb.last_diagnostics.as_ref().unwrap();
+    let trace = d.trace.as_ref().expect("trace requested but not recorded");
+    assert_eq!(trace.name, "fit");
+    assert!(trace.secs > 0.0 && trace.secs <= wall + 1e-6);
+
+    let stages: Vec<&str> = trace.children.iter().map(|c| c.name.as_str()).collect();
+    assert!(stages.contains(&"screen"), "stages: {stages:?}");
+    assert!(stages.contains(&"iteration"), "stages: {stages:?}");
+    assert!(stages.contains(&"reduced"), "stages: {stages:?}");
+    let iteration =
+        trace.children.iter().find(|c| c.name == "iteration").expect("iteration span");
+    let inner: Vec<&str> = iteration.children.iter().map(|c| c.name.as_str()).collect();
+    assert!(inner.contains(&"construct"), "iteration children: {inner:?}");
+    assert!(inner.contains(&"subproblems"), "iteration children: {inner:?}");
+    assert!(inner.contains(&"aggregate"), "iteration children: {inner:?}");
+
+    // The stage spans cover the pipeline end to end: the root's direct
+    // children sum to its wall time within 5% (plus a small absolute
+    // slack so clock granularity on very fast fits can't flake this).
+    let unattributed = trace.secs - trace.child_secs();
+    assert!(unattributed >= -1e-9, "children exceed root: {unattributed}");
+    assert!(
+        unattributed <= (0.05 * trace.secs).max(0.005),
+        "unattributed {unattributed:.6}s of root {:.6}s",
+        trace.secs
+    );
+
+    // The tree rides along in the diagnostics JSON (cli fit --out).
+    let doc = d.to_json();
+    let parsed = Json::parse(&doc.to_string_compact()).unwrap();
+    assert_eq!(
+        parsed.get("trace").and_then(|t| t.get("name")).and_then(Json::as_str),
+        Some("fit")
+    );
+}
+
+#[test]
+fn tracing_is_inert_when_disabled_and_never_perturbs_results() {
+    let data = sr_data(22);
+    let fit = |trace: bool| {
+        let mut bb = Backbone::sparse_regression()
+            .alpha(0.5)
+            .beta(0.5)
+            .num_subproblems(3)
+            .max_nonzeros(3)
+            .seed(4)
+            .trace(trace)
+            .build()
+            .unwrap();
+        let model = bb.fit(&data.x, &data.y).unwrap().clone();
+        let has_trace = bb.last_diagnostics.as_ref().unwrap().trace.is_some();
+        let json = bb.last_diagnostics.as_ref().unwrap().to_json();
+        (model, has_trace, json)
+    };
+    let (cold, traced_flag, _) = fit(true);
+    let (plain, untraced_flag, untraced_json) = fit(false);
+    assert!(traced_flag);
+    assert!(!untraced_flag);
+    // Untraced diagnostics carry no trace key at all.
+    assert!(untraced_json.get("trace").is_none());
+    // Tracing only reads clocks around stages — the fit itself is
+    // bit-identical with and without it.
+    assert_eq!(cold.support, plain.support);
+    for (a, b) in cold.beta.iter().zip(&plain.beta) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    assert_eq!(cold.objective.to_bits(), plain.objective.to_bits());
+}

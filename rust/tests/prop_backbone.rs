@@ -85,6 +85,7 @@ fn random_params(g: &mut Gen) -> BackboneParams {
         },
         threads: g.usize_in(0..6),
         seed: g.usize_in(0..1_000_000) as u64,
+        trace: false,
     }
 }
 

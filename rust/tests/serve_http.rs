@@ -73,6 +73,21 @@ fn get(addr: SocketAddr, path: &str) -> (u16, Json) {
     )
 }
 
+/// GET returning the raw body and headers — for `/metrics`, whose body
+/// is Prometheus text, not JSON.
+fn get_text(addr: SocketAddr, path: &str) -> (u16, Vec<(String, String)>, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .write_all(
+            format!("GET {path} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").as_bytes(),
+        )
+        .expect("write");
+    let mut response = Vec::new();
+    stream.read_to_end(&mut response).expect("read");
+    let (status, headers, body) = read_response(&mut &response[..]).expect("read response");
+    (status, headers, String::from_utf8(body).expect("utf8 body"))
+}
+
 fn request_raw(method: &str, path: &str, body: &str, close: bool) -> String {
     format!(
         "{method} {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}{}\r\n\r\n{body}",
@@ -715,4 +730,173 @@ fn self_test_harness_reports_zero_failures() {
     assert!(report.keep_alive.req_per_sec > 0.0);
     assert!(report.keep_alive.p99_ms >= report.keep_alive.p50_ms);
     assert!(report.passed());
+}
+
+#[test]
+fn metrics_serves_prometheus_exposition_and_reconciles_with_stats() {
+    use backbone_learn::obs::metric_value;
+    with_server(toy_model(), |addr| {
+        // Move the counters: one good predict, one bad request.
+        let (status, _) = post(addr, "/predict", r#"{"rows": [[1, 2], [3, 4]]}"#);
+        assert_eq!(status, 200);
+        let (status, _) = post(addr, "/predict", "not json");
+        assert_eq!(status, 400);
+
+        let (status, headers, text) = get_text(addr, "/metrics");
+        assert_eq!(status, 200);
+        let content_type = headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case("content-type"))
+            .map(|(_, v)| v.as_str())
+            .unwrap_or("");
+        assert!(
+            content_type.starts_with("text/plain"),
+            "content type {content_type:?}"
+        );
+
+        // Exposition-format golden: HELP/TYPE pairs precede the series,
+        // counters end in _total, gauges don't.
+        for family in [
+            ("backbone_http_requests_total", "counter"),
+            ("backbone_route_requests_total", "counter"),
+            ("backbone_route_failures_total", "counter"),
+            ("backbone_model_rows_predicted_total", "counter"),
+            ("backbone_models_loaded", "gauge"),
+            ("backbone_serve_uptime_seconds", "gauge"),
+            ("backbone_build_info", "gauge"),
+            // Process-global registry families, preregistered at zero.
+            ("backbone_fit_total", "counter"),
+            ("backbone_pipeline_stage_seconds_total", "counter"),
+            ("backbone_warmstart_lookups_total", "counter"),
+            ("backbone_persist_write_seconds", "histogram"),
+        ] {
+            assert!(
+                text.contains(&format!("# HELP {} ", family.0)),
+                "missing HELP for {}", family.0
+            );
+            assert!(
+                text.contains(&format!("# TYPE {} {}", family.0, family.1)),
+                "missing TYPE for {}", family.0
+            );
+        }
+
+        // Every non-comment line is `name[{labels}] value` with a
+        // parseable value — the format a Prometheus scraper accepts.
+        let mut series = 0usize;
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.is_empty()) {
+            let (_, value) = line.rsplit_once(' ').expect("series line has a value");
+            assert!(
+                value.parse::<f64>().is_ok() || value == "NaN" || value == "+Inf",
+                "unparseable sample value in {line:?}"
+            );
+            series += 1;
+        }
+        assert!(series >= 25, "only {series} series exposed");
+
+        // The server-derived section reads the same atomics as /stats,
+        // so the two endpoints must agree exactly.
+        let (_, stats) = get(addr, "/stats");
+        let routes = stats.get("routes").unwrap();
+        let predict = routes.get("predict").unwrap();
+        for (metric, labels, key) in [
+            ("backbone_route_requests_total", ("route", "predict"), "requests"),
+            ("backbone_route_failures_total", ("route", "predict"), "failures"),
+            ("backbone_route_units_total", ("route", "predict"), "rows_predicted"),
+        ] {
+            assert_eq!(
+                metric_value(&text, metric, &[labels]),
+                predict.get(key).and_then(Json::as_f64_tagged),
+                "{metric} disagrees with /stats routes.predict.{key}"
+            );
+        }
+        assert_eq!(
+            metric_value(&text, "backbone_model_rows_predicted_total", &[("model", "default")]),
+            stats
+                .get("models")
+                .and_then(|m| m.get("default"))
+                .and_then(|d| d.get("rows_predicted"))
+                .and_then(Json::as_f64_tagged),
+        );
+        assert_eq!(metric_value(&text, "backbone_models_loaded", &[]), Some(1.0));
+        assert_eq!(metric_value(&text, "backbone_build_info", &[("backend", backbone_learn::linalg::backend_name())]), Some(1.0));
+    });
+}
+
+#[test]
+fn metrics_counters_are_monotonic_across_requests() {
+    use backbone_learn::obs::metric_value;
+    with_server(toy_model(), |addr| {
+        let scrape = |addr| {
+            let (status, _, text) = get_text(addr, "/metrics");
+            assert_eq!(status, 200);
+            text
+        };
+        let before = scrape(addr);
+        for _ in 0..3 {
+            let (status, _) = post(addr, "/predict", r#"{"rows": [[1, 2]]}"#);
+            assert_eq!(status, 200);
+        }
+        let after = scrape(addr);
+        let requests = |text: &str| {
+            metric_value(text, "backbone_route_requests_total", &[("route", "predict")]).unwrap()
+        };
+        assert_eq!(requests(&after), requests(&before) + 3.0);
+        // Scrapes themselves never count as route traffic, and every
+        // exposed counter is nondecreasing between the two scrapes.
+        let total = |text: &str| {
+            metric_value(text, "backbone_http_requests_total", &[]).unwrap()
+        };
+        assert!(total(&after) >= total(&before) + 3.0);
+        for name in [
+            "backbone_http_failures_total",
+            "backbone_route_failures_total",
+            "backbone_model_swaps_total",
+        ] {
+            let labels: &[(&str, &str)] =
+                if name.starts_with("backbone_route") { &[("route", "predict")] } else { &[] };
+            let (a, b) = (metric_value(&before, name, labels), metric_value(&after, name, labels));
+            assert!(b >= a, "{name} went backwards: {a:?} -> {b:?}");
+        }
+    });
+}
+
+#[test]
+fn traced_fit_returns_nested_trace_tree() {
+    let body = concat!(
+        r#"{"x": [[1, 0, 0], [2, 1, 0], [3, 0, 1], [4, 1, 1],"#,
+        r#" [5, 0, 0], [6, 1, 0], [7, 0, 1], [8, 1, 1]],"#,
+        r#" "y": [2, 4, 6, 8, 10, 12, 14, 16], "k": 1, "m": 2,"#,
+        r#" "warm": false, "trace": true}"#
+    );
+    let cfg = ServeConfig::builder().threads(2).enable_fit(true).build().unwrap();
+    with_server_cfg(toy_model(), cfg, |addr| {
+        let (status, resp) = post(addr, "/fit", body);
+        assert_eq!(status, 200, "{resp:?}");
+        let trace = resp.get("trace").expect("trace requested but absent");
+        assert_eq!(trace.get("name").and_then(Json::as_str), Some("fit"));
+        let root_secs = trace.get("secs").and_then(Json::as_f64_tagged).unwrap();
+        assert!(root_secs >= 0.0);
+        let children = trace.get("children").and_then(Json::as_array).expect("children");
+        let names: Vec<&str> =
+            children.iter().filter_map(|c| c.get("name").and_then(Json::as_str)).collect();
+        assert!(names.contains(&"screen"), "stages traced: {names:?}");
+        assert!(names.contains(&"reduced"), "stages traced: {names:?}");
+        // Iterations nest their own stage children.
+        let iteration = children
+            .iter()
+            .find(|c| c.get("name").and_then(Json::as_str) == Some("iteration"))
+            .expect("iteration span");
+        let inner: Vec<&str> = iteration
+            .get("children")
+            .and_then(Json::as_array)
+            .map(|cs| cs.iter().filter_map(|c| c.get("name").and_then(Json::as_str)).collect())
+            .unwrap_or_default();
+        assert!(inner.contains(&"subproblems"), "iteration children: {inner:?}");
+
+        // An untraced fit carries no trace payload.
+        let untraced = body.replace(r#""trace": true"#, r#""trace": false"#);
+        let (status, resp) = post(addr, "/fit", &untraced);
+        assert_eq!(status, 200, "{resp:?}");
+        assert!(resp.get("trace").is_none());
+    });
 }
